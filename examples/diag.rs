@@ -1,0 +1,28 @@
+//! Scratch diagnostic (full-scale shape check). Not part of the public API.
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::workload::synthetic::SyntheticWorkload;
+
+fn main() {
+    let jobs: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8192);
+    let cluster = ClusterSpec::pfn();
+    let wl = SyntheticWorkload::paper_section_4_2(7)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(jobs)
+        .generate();
+    eprintln!("workload: {} jobs, span {} min", wl.len(), wl.submit_span());
+    for p in [PolicyKind::Fifo, PolicyKind::Lrtp, PolicyKind::Rand,
+              PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }] {
+        let t0 = std::time::Instant::now();
+        let mut cfg = SimConfig::new(cluster.clone(), p);
+        cfg.seed = 1;
+        let r = Simulator::new(cfg).run(&wl);
+        let sd = r.slowdown_report();
+        let iv = r.intervals_report();
+        println!("{:20} te(p50 {:6.2} p95 {:7.2}) be(p50 {:6.2} p95 {:7.2}) preempted {:.3}% signals {} replans {} interval(p50 {:.1} p95 {:.1}) makespan {} [{:.1}s]",
+            p.name(), sd.te.p50, sd.te.p95, sd.be.p50, sd.be.p95,
+            r.preempted_fraction()*100.0, r.sched_stats.preemption_signals,
+            r.sched_stats.replans, iv.p50, iv.p95, r.makespan, t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,61 @@
+//! Quickstart: simulate the paper's §4.2 experiment at laptop scale and
+//! print the Table-1 layout.
+//!
+//! ```bash
+//! cargo run --release --example quickstart -- --jobs 4096
+//! ```
+
+use fitgpp::metrics::slowdown_table;
+use fitgpp::prelude::*;
+use fitgpp::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("quickstart", "four-policy comparison on a synthetic workload")
+        .opt("jobs", Some("4096"), "number of jobs")
+        .opt("nodes", Some("84"), "cluster nodes")
+        .opt("seed", Some("7"), "workload seed");
+    let args = cli.parse();
+    let jobs = args.get_usize("jobs", 4096);
+    let nodes = args.get_usize("nodes", 84);
+    let seed = args.get_u64("seed", 7);
+
+    // 1. A cluster like the paper's: nodes of 32 CPUs / 256 GB / 8 GPUs.
+    let cluster = ClusterSpec::homogeneous(nodes, fitgpp::resources::ResourceVec::pfn_node());
+
+    // 2. The §4.2 synthetic workload: per-class truncated normals,
+    //    submissions calibrated to keep the FIFO cluster load at 2.0.
+    let wl = SyntheticWorkload::paper_section_4_2(seed)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(jobs)
+        .generate();
+    println!(
+        "workload: {} jobs ({:.1}% TE) submitted over {} simulated minutes\n",
+        wl.len(),
+        wl.te_fraction() * 100.0,
+        wl.submit_span()
+    );
+
+    // 3. Run all four §4.1 policies on the identical workload.
+    let policies = [
+        PolicyKind::Fifo,
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+    ];
+    let mut rows = Vec::new();
+    for p in policies {
+        let mut cfg = SimConfig::new(cluster.clone(), p);
+        cfg.seed = 1;
+        let res = Simulator::new(cfg).run(&wl);
+        println!(
+            "{:16} makespan {:5} min, {:4} preemption signals, {:5.2}% jobs preempted",
+            p.name(),
+            res.makespan,
+            res.sched_stats.preemption_signals,
+            res.preempted_fraction() * 100.0
+        );
+        rows.push((p.name(), res.slowdown_report()));
+    }
+    let named: Vec<(&str, _)> = rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
+    println!("\n{}", slowdown_table("Percentiles of slowdown rates", &named).to_text());
+}

@@ -1,0 +1,107 @@
+//! Sensitivity sweeps (Figs. 4–7 in one driver): vary FitGpp's `s`, the
+//! preemption cap `P`, the TE-job proportion, and the grace-period scale,
+//! writing one CSV per sweep for plotting.
+//!
+//! ```bash
+//! cargo run --release --example synthetic_sweep -- --jobs 4096 --out-dir sweeps
+//! ```
+
+use fitgpp::job::JobClass;
+use fitgpp::prelude::*;
+use fitgpp::stats::summary::percentile;
+use fitgpp::util::cli::Cli;
+use fitgpp::util::table::Table;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("synthetic_sweep", "Figs. 4-7 sensitivity sweeps")
+        .opt("jobs", Some("4096"), "jobs per configuration")
+        .opt("out-dir", Some("sweeps"), "directory for CSV outputs")
+        .opt("seed", Some("7"), "workload seed");
+    let args = cli.parse();
+    let jobs = args.get_usize("jobs", 4096);
+    let seed = args.get_u64("seed", 7);
+    let out_dir = args.get_string("out-dir", "sweeps");
+    std::fs::create_dir_all(&out_dir)?;
+    let cluster = ClusterSpec::pfn();
+
+    let base_wl = || {
+        SyntheticWorkload::paper_section_4_2(seed)
+            .with_cluster(cluster.clone())
+            .with_num_jobs(jobs)
+    };
+    let run = |wl: &Workload, p: PolicyKind| {
+        let mut cfg = SimConfig::new(cluster.clone(), p);
+        cfg.seed = 1;
+        Simulator::new(cfg).run(wl)
+    };
+
+    // -- Fig. 4: s sweep ---------------------------------------------------
+    let wl = base_wl().generate();
+    let mut t = Table::new("fig4: s sweep", &["s", "te_p50", "te_p95", "te_p99", "be_p50", "be_p95", "be_p99"]);
+    for s in [0.0, 0.5, 1.0, 2.0, 4.0, 8.0] {
+        let r = run(&wl, PolicyKind::FitGpp { s, p_max: Some(1) }).slowdown_report();
+        t.row(vec![
+            s.to_string(),
+            format!("{:.3}", r.te.p50), format!("{:.3}", r.te.p95), format!("{:.3}", r.te.p99),
+            format!("{:.3}", r.be.p50), format!("{:.3}", r.be.p95), format!("{:.3}", r.be.p99),
+        ]);
+    }
+    println!("{}", t.to_text());
+    std::fs::write(Path::new(&out_dir).join("fig4_s.csv"), t.to_csv())?;
+
+    // -- Fig. 5: P sweep -----------------------------------------------------
+    let mut t = Table::new("fig5: P sweep", &["P", "te_p95", "be_p95"]);
+    for p in [Some(1), Some(2), Some(4), None] {
+        let r = run(&wl, PolicyKind::FitGpp { s: 4.0, p_max: p }).slowdown_report();
+        t.row(vec![
+            p.map(|x| x.to_string()).unwrap_or("inf".into()),
+            format!("{:.3}", r.te.p95),
+            format!("{:.3}", r.be.p95),
+        ]);
+    }
+    println!("{}", t.to_text());
+    std::fs::write(Path::new(&out_dir).join("fig5_p.csv"), t.to_csv())?;
+
+    // -- Fig. 6: TE-ratio sweep ----------------------------------------------
+    let mut t = Table::new("fig6: TE-ratio sweep", &["te_frac", "policy", "te_p95", "be_p95"]);
+    for frac in [0.1, 0.3, 0.5, 0.7] {
+        let wl = base_wl().with_te_fraction(frac).generate();
+        for p in [PolicyKind::Fifo, PolicyKind::Lrtp, PolicyKind::Rand, PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }] {
+            let res = run(&wl, p);
+            t.row(vec![
+                frac.to_string(),
+                p.name(),
+                format!("{:.2}", percentile(&res.slowdowns(JobClass::Te), 95.0)),
+                format!("{:.2}", percentile(&res.slowdowns(JobClass::Be), 95.0)),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+    std::fs::write(Path::new(&out_dir).join("fig6_te_ratio.csv"), t.to_csv())?;
+
+    // -- Fig. 7: GP-scale sweep -----------------------------------------------
+    let mut t = Table::new("fig7: GP-scale sweep", &["gp_scale", "policy", "te_p95", "be_p95"]);
+    for scale in [1.0, 2.0, 4.0, 8.0] {
+        let wl = base_wl().with_gp_scale(scale).generate();
+        for (label, p) in [
+            ("LRTP", PolicyKind::Lrtp),
+            ("RAND", PolicyKind::Rand),
+            ("FitGpp s=4", PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
+            ("FitGpp s=8", PolicyKind::FitGpp { s: 8.0, p_max: Some(1) }),
+        ] {
+            let res = run(&wl, p);
+            t.row(vec![
+                scale.to_string(),
+                label.to_string(),
+                format!("{:.2}", percentile(&res.slowdowns(JobClass::Te), 95.0)),
+                format!("{:.2}", percentile(&res.slowdowns(JobClass::Be), 95.0)),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+    std::fs::write(Path::new(&out_dir).join("fig7_gp_scale.csv"), t.to_csv())?;
+
+    println!("CSV series written to {out_dir}/");
+    Ok(())
+}

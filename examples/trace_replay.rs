@@ -1,0 +1,71 @@
+//! §4.4: replay a cluster trace (the synthesized institution trace or any
+//! CSV in the documented format) under all four policies.
+//!
+//! ```bash
+//! cargo run --release --example trace_replay -- --jobs 8192
+//! cargo run --release --example trace_replay -- --trace mycluster.csv
+//! ```
+
+use fitgpp::job::JobClass;
+use fitgpp::metrics::{slowdown_table, Percentiles, SlowdownReport};
+use fitgpp::prelude::*;
+use fitgpp::util::cli::Cli;
+use fitgpp::workload::trace::Trace;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("trace_replay", "replay a cluster trace under the four policies")
+        .opt("trace", None, "CSV trace path (default: synthesize the institution trace)")
+        .opt("jobs", Some("8192"), "jobs to synthesize when no --trace given")
+        .opt("seed", Some("7"), "synthesis seed")
+        .opt("save", None, "also write the used trace to this CSV path");
+    let args = cli.parse();
+
+    let wl = match args.get("trace") {
+        Some(path) => {
+            println!("replaying {path}");
+            Trace::read_csv(Path::new(path))?
+        }
+        None => {
+            let jobs = args.get_usize("jobs", 8192);
+            println!("synthesizing the institution trace ({jobs} jobs) — see DESIGN.md §3");
+            Trace::synthesize_institution(args.get_u64("seed", 7), jobs)
+        }
+    };
+    if let Some(save) = args.get("save") {
+        Trace::write_csv(&wl, Path::new(save))?;
+        println!("trace written to {save}");
+    }
+    println!(
+        "trace: {} jobs, {:.1}% TE, spanning {:.1} days\n",
+        wl.len(),
+        wl.te_fraction() * 100.0,
+        wl.submit_span() as f64 / 1440.0
+    );
+
+    let cluster = ClusterSpec::pfn();
+    let mut rows = Vec::new();
+    for p in [
+        PolicyKind::Fifo,
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+    ] {
+        let mut cfg = SimConfig::new(cluster.clone(), p);
+        cfg.seed = 3;
+        let res = Simulator::new(cfg).run(&wl);
+        rows.push((
+            p.name(),
+            SlowdownReport {
+                te: Percentiles::of(&res.slowdowns(JobClass::Te)),
+                be: Percentiles::of(&res.slowdowns(JobClass::Be)),
+            },
+        ));
+    }
+    let named: Vec<(&str, _)> = rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
+    println!(
+        "{}",
+        slowdown_table("Percentiles of slowdown rates (trace replay, cf. Table 5)", &named).to_text()
+    );
+    Ok(())
+}

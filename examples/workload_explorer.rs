@@ -1,0 +1,114 @@
+//! Workload explorer: inspect the §4.2 synthetic generator and the
+//! institution-trace synthesizer — distribution summaries, load curves,
+//! and CSV export. Useful for calibrating custom workloads before a
+//! simulation campaign.
+//!
+//! ```bash
+//! cargo run --release --example workload_explorer -- --jobs 8192 --institution
+//! ```
+
+use fitgpp::job::JobClass;
+use fitgpp::prelude::*;
+use fitgpp::stats::summary::Summary;
+use fitgpp::util::cli::Cli;
+use fitgpp::util::table::Table;
+use fitgpp::workload::trace::Trace;
+
+fn summarize(wl: &Workload) {
+    let mut t = Table::new(
+        "per-class distribution summary",
+        &["class", "metric", "mean", "p50", "p95", "max"],
+    );
+    for class in [JobClass::Te, JobClass::Be] {
+        let sel: Vec<&fitgpp::job::JobSpec> = wl.of_class(class).collect();
+        if sel.is_empty() {
+            continue;
+        }
+        let metrics: [(&str, Vec<f64>); 5] = [
+            ("exec [min]", sel.iter().map(|j| j.exec_time as f64).collect()),
+            ("grace [min]", sel.iter().map(|j| j.grace_period as f64).collect()),
+            ("cpu", sel.iter().map(|j| j.demand.cpu).collect()),
+            ("ram [GB]", sel.iter().map(|j| j.demand.ram_gb).collect()),
+            ("gpu", sel.iter().map(|j| j.demand.gpu).collect()),
+        ];
+        for (name, xs) in metrics {
+            let s = Summary::of(&xs);
+            t.row(vec![
+                class.as_str().into(),
+                name.into(),
+                format!("{:.1}", s.mean),
+                format!("{:.1}", s.p50),
+                format!("{:.1}", s.p95),
+                format!("{:.1}", s.max),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+}
+
+fn arrival_histogram(wl: &Workload, buckets: usize) {
+    let span = wl.submit_span().max(1);
+    let mut counts = vec![0usize; buckets];
+    for j in &wl.jobs {
+        let b = ((j.submit as f64 / span as f64) * (buckets - 1) as f64) as usize;
+        counts[b] += 1;
+    }
+    let max = *counts.iter().max().unwrap_or(&1);
+    println!("arrival-rate profile ({} buckets over {} min):", buckets, span);
+    for (i, c) in counts.iter().enumerate() {
+        let bar = "#".repeat((c * 50 / max.max(1)).max(usize::from(*c > 0)));
+        println!("  {:3} | {bar} {c}", i);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("workload_explorer", "inspect generated workloads")
+        .opt("jobs", Some("8192"), "number of jobs")
+        .opt("seed", Some("7"), "seed")
+        .opt("gp-scale", Some("1.0"), "grace-period scale")
+        .opt("te-fraction", Some("0.3"), "TE fraction (synthetic mode)")
+        .opt("export", None, "write the workload as CSV to this path")
+        .flag("institution", "explore the §4.4 institution trace instead of §4.2");
+    let args = cli.parse();
+    let jobs = args.get_usize("jobs", 8192);
+    let seed = args.get_u64("seed", 7);
+
+    let wl = if args.has("institution") {
+        println!("institution trace (synthesized; heavy-tailed, diurnal, bursty)\n");
+        Trace::synthesize_institution(seed, jobs)
+    } else {
+        println!("§4.2 synthetic workload (FIFO load calibrated to 2.0)\n");
+        SyntheticWorkload::paper_section_4_2(seed)
+            .with_num_jobs(jobs)
+            .with_te_fraction(args.get_f64("te-fraction", 0.3))
+            .with_gp_scale(args.get_f64("gp-scale", 1.0))
+            .generate()
+    };
+
+    println!(
+        "{} jobs | {:.1}% TE | submission span {} min ({:.1} days)\n",
+        wl.len(),
+        wl.te_fraction() * 100.0,
+        wl.submit_span(),
+        wl.submit_span() as f64 / 1440.0
+    );
+    summarize(&wl);
+    arrival_histogram(&wl, 24);
+
+    let total = wl.total_work();
+    let cap = ClusterSpec::pfn().total_capacity();
+    println!(
+        "\ntotal work: {:.0} CPU-min, {:.0} GB-min, {:.0} GPU-min",
+        total.cpu, total.ram_gb, total.gpu
+    );
+    println!(
+        "ideal (work-conserving) makespan on the 84-node cluster: {:.0} min",
+        total.dominant_share(&cap)
+    );
+
+    if let Some(path) = args.get("export") {
+        Trace::write_csv(&wl, std::path::Path::new(path))?;
+        println!("exported to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+"""AOT lowering: JAX → HLO **text** artifacts + manifest for the rust
+runtime. Runs once at build time (``make artifacts``); python is never on
+the request path.
+
+HLO text (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts written to ``--out-dir`` (default ``artifacts/``):
+  probe.hlo.txt              f(x,y) = (x·y + 2,)  — runtime smoke test
+  train_step_<v>.hlo.txt     fused fwd+bwd+SGD per model variant
+  manifest.json              calling convention for rust (see
+                             rust/src/runtime/manifest.rs)
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_probe() -> str:
+    """The runtime smoke-test function (same as the reference example)."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def lower_train_step(cfg: M.ModelConfig) -> str:
+    """Lower the fused train step with example shapes from the config."""
+    params = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in M.param_specs(cfg)
+    ]
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    import functools
+
+    fn = functools.partial(M.train_step_flat, cfg)
+    return to_hlo_text(jax.jit(fn).lower(*params, tokens))
+
+
+def variant_manifest(cfg: M.ModelConfig, filename: str) -> dict:
+    return {
+        "name": cfg.name,
+        "train_step": filename,
+        "tokens": {
+            "name": "tokens",
+            "shape": [cfg.batch, cfg.seq],
+            "dtype": "s32",
+        },
+        "params": [
+            {"name": name, "shape": list(shape), "dtype": "f32"}
+            for name, shape in M.param_specs(cfg)
+        ],
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_head": cfg.n_head,
+            "d_ff": cfg.d_ff,
+            "n_layer": cfg.n_layer,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+            "param_count": M.param_count(cfg),
+        },
+    }
+
+
+VARIANTS = {"tiny": M.TINY, "small": M.SMALL}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="tiny,small",
+        help="comma-separated subset of: " + ",".join(VARIANTS),
+    )
+    # Back-compat with the original Makefile single-file interface.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"models": []}
+
+    probe = lower_probe()
+    with open(os.path.join(out_dir, "probe.hlo.txt"), "w") as f:
+        f.write(probe)
+    manifest["probe"] = "probe.hlo.txt"
+    print(f"probe.hlo.txt: {len(probe)} chars", file=sys.stderr)
+
+    for name in args.variants.split(","):
+        cfg = VARIANTS[name.strip()]
+        filename = f"train_step_{cfg.name}.hlo.txt"
+        text = lower_train_step(cfg)
+        with open(os.path.join(out_dir, filename), "w") as f:
+            f.write(text)
+        manifest["models"].append(variant_manifest(cfg, filename))
+        print(
+            f"{filename}: {len(text)} chars "
+            f"({M.param_count(cfg):,} params)",
+            file=sys.stderr,
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest.json → {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Layer 1: fused causal attention as a Pallas kernel — forward *and*
+backward (pallas_call has no built-in transpose rule, and a hand-written
+backward kernel is the production idiom anyway, cf. FlashAttention).
+
+The paper's live jobs are transformer training steps; attention is their
+compute hot-spot, so it is written as a Pallas kernel pair and called from
+the L2 model (it therefore lowers into the same HLO artifact the rust
+runtime executes, inside the fused fwd+bwd train step).
+
+TPU-idiomatic structure (DESIGN.md §Hardware-Adaptation):
+
+* Grid over attention heads: ``grid = (H,)``. Each program instance owns
+  one head's full ``[S, D]`` Q/K/V tiles — for the model sizes shipped
+  here (S ≤ 256, D ≤ 64) a head's working set is ≤ ~1 MiB, far under the
+  ~16 MiB VMEM budget, so no inner K/V streaming loop is needed; the
+  BlockSpec index map *is* the HBM→VMEM schedule.
+* Matmuls accumulate in f32 via ``preferred_element_type`` — the MXU
+  pattern (bf16 in, f32 accumulate).
+* The causal mask is built with ``broadcasted_iota`` (2-D iota — TPU
+  requires ≥2-D) rather than materialized from HBM.
+* The backward kernel **recomputes** the probability matrix from Q/K
+  instead of saving it (FlashAttention-style rematerialization): residuals
+  are just Q, K, V — O(S·D) instead of O(S²) HBM traffic.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT client cannot execute. The kernel
+*structure* (grid/BlockSpec/accumulation dtypes) is what carries to real
+hardware; see DESIGN.md §Perf for the VMEM/MXU accounting.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = float(jnp.finfo(jnp.float32).min)
+
+
+def _probs(q, k, scale):
+    """Masked softmax(QKᵀ·scale) in f32 — shared by fwd and bwd kernels."""
+    s = q.shape[0]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    logits = jnp.where(row >= col, logits, _NEG)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One head forward: softmax(mask(QKᵀ·scale))·V, f32 accumulation."""
+    q, k, v = q_ref[...], k_ref[...], v_ref[...]
+    p = _probs(q, k, scale)
+    out = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *, scale):
+    """One head backward, recomputing P from Q/K (no S×S residual):
+
+    dV = Pᵀ·dO;  dP = dO·Vᵀ;  dS = P ∘ (dP − rowsum(dP ∘ P));
+    dQ = dS·K·scale;  dK = dSᵀ·Q·scale.
+    Masked entries have P = 0 ⇒ dS = 0 there automatically.
+    """
+    q, k, v, do = q_ref[...], k_ref[...], v_ref[...], do_ref[...]
+    p = _probs(q, k, scale)  # [S, S] f32
+    dof = do.astype(jnp.float32)
+    dv = jax.lax.dot_general(
+        p, dof, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # Pᵀ·dO : [S, D]
+    dp = jax.lax.dot_general(
+        dof, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # dO·Vᵀ : [S, S]
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jax.lax.dot_general(
+        ds, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    dk = jax.lax.dot_general(
+        ds, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _head_block(s, d):
+    return pl.BlockSpec((None, s, d), lambda i: (i, 0, 0))
+
+
+def _fwd_call(q, k, v, scale, interpret):
+    h, s, d = q.shape
+    blk = _head_block(s, d)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[blk, blk, blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _bwd_call(q, k, v, do, scale, interpret):
+    h, s, d = q.shape
+    blk = _head_block(s, d)
+    shape = jax.ShapeDtypeStruct((h, s, d), q.dtype)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[blk, blk, blk, blk],
+        out_specs=[blk, blk, blk],
+        out_shape=[shape, shape, shape],
+        interpret=interpret,
+    )(q, k, v, do)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _attention(q, k, v, scale, interpret):
+    return _fwd_call(q, k, v, scale, interpret)
+
+
+def _attention_fwd(q, k, v, scale, interpret):
+    return _fwd_call(q, k, v, scale, interpret), (q, k, v)
+
+
+def _attention_bwd(scale, interpret, res, do):
+    q, k, v = res
+    return _bwd_call(q, k, v, do, scale, interpret)
+
+
+_attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def causal_attention(q, k, v, scale=None, interpret=True):
+    """Fused causal attention over ``[H, S, D]`` tensors; differentiable
+    via the backward Pallas kernel. Matches ``ref.causal_attention``
+    numerically (pytest enforces both directions)."""
+    _, _, d = q.shape
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    return _attention(q, k, v, scale, interpret)
+
+
+def vmem_bytes(s, d, dtype_bytes=4, backward=False):
+    """Estimated VMEM working set per program instance (DESIGN.md §Perf):
+    Q/K/V/O (+dO, dQ, dK, dV for backward) tiles plus the f32 S×S
+    scratch (P, and dP/dS for backward)."""
+    tiles = (8 if backward else 4) * s * d * dtype_bytes
+    scratch = (3 if backward else 2) * s * s * 4
+    return tiles + scratch

@@ -1,0 +1,117 @@
+"""Layer 1: fused LayerNorm as a Pallas kernel pair (forward + input
+backward).
+
+Grid over row-blocks: each program instance normalizes a ``[BLOCK, D]``
+tile in VMEM (mean/variance/scale/shift fused in one pass). Statistics
+are computed in f32 regardless of input dtype.
+
+Backward: the input gradient is row-local, so it is another Pallas kernel
+over the same row-block grid (recomputing μ/σ, FlashAttention-style);
+the γ/β gradients are cross-row reductions and are left to XLA (a single
+fused reduce — no benefit from a hand kernel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # [BLOCK, D]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _bwd_kernel(x_ref, g_ref, dy_ref, dx_ref, *, eps):
+    """dx for y = x̂·γ + β with x̂ = (x−μ)/σ:
+    dx = (dŷ − mean(dŷ) − x̂·mean(dŷ∘x̂)) / σ, where dŷ = dy·γ."""
+    x = x_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x - mu) * rstd
+    dyh = dy * g
+    dx = (
+        dyh
+        - jnp.mean(dyh, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dyh * xhat, axis=-1, keepdims=True)
+    ) * rstd
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+
+
+def _pick_block(rows, block_rows):
+    return block_rows if rows % block_rows == 0 else rows
+
+
+def _fwd_call(x, g, b, eps, block_rows, interpret):
+    rows, dim = x.shape
+    blk = _pick_block(rows, block_rows)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(rows // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, dim), x.dtype),
+        interpret=interpret,
+    )(x, g, b)
+
+
+def _bwd_call(x, g, dy, eps, block_rows, interpret):
+    rows, dim = x.shape
+    blk = _pick_block(rows, block_rows)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, eps=eps),
+        grid=(rows // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+            pl.BlockSpec((blk, dim), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, dim), x.dtype),
+        interpret=interpret,
+    )(x, g, dy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _layernorm(x, g, b, eps, block_rows, interpret):
+    return _fwd_call(x, g, b, eps, block_rows, interpret)
+
+
+def _layernorm_fwd(x, g, b, eps, block_rows, interpret):
+    return _fwd_call(x, g, b, eps, block_rows, interpret), (x, g)
+
+
+def _layernorm_bwd(eps, block_rows, interpret, res, dy):
+    x, g = res
+    dx = _bwd_call(x, g, dy, eps, block_rows, interpret)
+    # γ/β grads: cross-row reductions, left to XLA (fused reduce).
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xhat = (xf - mu) * jax.lax.rsqrt(var + eps)
+    dyf = dy.astype(jnp.float32)
+    dg = jnp.sum(dyf * xhat, axis=0).astype(g.dtype)
+    db = jnp.sum(dyf, axis=0).astype(g.dtype)
+    return dx, dg, db
+
+
+_layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)
+
+
+def layernorm(x, gamma, beta, eps=1e-5, block_rows=128, interpret=True):
+    """Fused layernorm over the last axis of ``[rows, dim]``;
+    differentiable via the backward Pallas kernel. Row counts that do not
+    divide ``block_rows`` fall back to one full-array tile."""
+    return _layernorm(x, gamma, beta, eps, block_rows, interpret)

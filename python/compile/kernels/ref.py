@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels (interpret=True) match these to
+tight tolerances. They are also used directly by the L2 model under
+``use_pallas=False`` for A/B testing the lowering.
+"""
+
+import jax.numpy as jnp
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def causal_attention(q, k, v, scale=None):
+    """Reference causal scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``[heads, seq, head_dim]`` arrays.
+      scale: softmax temperature; defaults to ``1/sqrt(head_dim)``.
+
+    Returns:
+      ``[heads, seq, head_dim]``.
+    """
+    _, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = jnp.einsum(
+        "hqd,hkd->hqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, dtype=logits.dtype)
+    logits = jnp.where(mask[None, :, :], logits, neg)
+    probs = _softmax(logits)
+    out = jnp.einsum(
+        "hqk,hkd->hqd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """Reference layer normalization over the last axis.
+
+    Args:
+      x: ``[rows, dim]``.
+      gamma, beta: ``[dim]`` scale/shift.
+    """
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + eps) * gamma.astype(jnp.float32) + beta.astype(
+        jnp.float32
+    )
+    return y.astype(x.dtype)

@@ -1,0 +1,189 @@
+"""Layer 2: decoder-only transformer LM — forward, loss, and SGD train
+step — written in JAX, calling the L1 Pallas kernels.
+
+This is the "DL job" the FitGpp scheduler schedules: ``aot.py`` lowers
+``train_step`` once to HLO text; the rust runtime executes it on the
+request path with python long gone.
+
+Parameters travel as a **flat list of arrays** (the PJRT calling
+convention has no pytrees); ``param_specs`` documents the order, and
+``manifest.json`` carries it to rust.
+
+Architecture (pre-LN GPT):
+  tok_emb + pos_emb → [block × n_layer] → ln_f → logits (tied embedding)
+  block: x + attn(ln1(x));  x + mlp(ln2(x));  mlp = gelu(x·W1)·W2
+"""
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import layernorm as ln_k
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of one model variant."""
+
+    name: str = "tiny"
+    vocab: int = 256
+    d_model: int = 64
+    n_head: int = 2
+    d_ff: int = 256
+    n_layer: int = 2
+    seq: int = 64
+    batch: int = 8
+    lr: float = 0.05
+    use_pallas: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+
+TINY = ModelConfig()
+SMALL = ModelConfig(
+    name="small", vocab=512, d_model=128, n_head=4, d_ff=512, n_layer=4,
+    seq=128, batch=8, lr=0.03,
+)
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat parameter order: (name, shape) pairs. Rust mirrors this via the
+    manifest — do not reorder without bumping the manifest."""
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layer):
+        p = f"l{layer}."
+        specs += [
+            (p + "ln1.g", (cfg.d_model,)),
+            (p + "ln1.b", (cfg.d_model,)),
+            (p + "wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2.g", (cfg.d_model,)),
+            (p + "ln2.b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs += [("ln_f.g", (cfg.d_model,)), ("ln_f.b", (cfg.d_model,))]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key) -> List[jax.Array]:
+    """GPT-style init: N(0, 0.02) for weights, ones/zeros for LN."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layernorm(cfg, x2d, g, b):
+    if cfg.use_pallas:
+        return ln_k.layernorm(x2d, g, b)
+    return ref.layernorm(x2d, g, b)
+
+
+def _attention(cfg, q, k, v):
+    if cfg.use_pallas:
+        return attn_k.causal_attention(q, k, v)
+    return ref.causal_attention(q, k, v)
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array) -> jax.Array:
+    """Logits ``[batch, seq, vocab]`` for ``tokens [batch, seq]`` (s32)."""
+    b, s = tokens.shape
+    d, h = cfg.d_model, cfg.n_head
+    it = iter(params)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    x = tok_emb[tokens] + pos_emb[None, :s, :]  # [B, S, D]
+    for _ in range(cfg.n_layer):
+        ln1g, ln1b = next(it), next(it)
+        wqkv = next(it)
+        wo = next(it)
+        ln2g, ln2b = next(it), next(it)
+        w1 = next(it)
+        w2 = next(it)
+
+        # -- attention sublayer ----------------------------------------
+        xn = _layernorm(cfg, x.reshape(b * s, d), ln1g, ln1b).reshape(b, s, d)
+        qkv = xn @ wqkv  # [B, S, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        # [B, S, D] → [B·H, S, hd]: the kernel's grid axis is heads.
+        def heads(t):
+            return t.reshape(b, s, h, cfg.head_dim).transpose(0, 2, 1, 3).reshape(
+                b * h, s, cfg.head_dim
+            )
+        o = _attention(cfg, heads(q), heads(k), heads(v))
+        o = o.reshape(b, h, s, cfg.head_dim).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ wo
+
+        # -- MLP sublayer ------------------------------------------------
+        xn = _layernorm(cfg, x.reshape(b * s, d), ln2g, ln2b).reshape(b, s, d)
+        hdn = jax.nn.gelu(xn @ w1)
+        x = x + hdn @ w2
+
+    lnfg, lnfb = next(it), next(it)
+    x = _layernorm(cfg, x.reshape(b * s, d), lnfg, lnfb).reshape(b, s, d)
+    return x @ tok_emb.T  # tied embedding
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy (predict token t+1 from prefix ≤ t)."""
+    logits = forward(cfg, params, tokens)[:, :-1, :]  # [B, S-1, V]
+    targets = tokens[:, 1:]  # [B, S-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array):
+    """One SGD step: returns ``(new_params, loss)``."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+    new_params = [p - cfg.lr * g for p, g in zip(params, grads)]
+    return new_params, loss
+
+
+def train_step_flat(cfg: ModelConfig, *args):
+    """AOT entry point: ``(param_0, …, param_{n-1}, tokens) →
+    (param_0', …, param_{n-1}', loss)`` — the calling convention the rust
+    ``Trainer`` implements."""
+    params = list(args[:-1])
+    tokens = args[-1]
+    new_params, loss = train_step(cfg, params, tokens)
+    return (*new_params, loss)
+
+
+def make_jitted_step(cfg: ModelConfig):
+    """Jitted train step for python-side tests/benches."""
+    return jax.jit(functools.partial(train_step_flat, cfg))
+
+
+def synthetic_batch(cfg: ModelConfig, key) -> jax.Array:
+    """The learnable synthetic task shared with the rust Trainer: rows of
+    the affine recurrence ``x_{t+1} = (5·x_t + 3) mod vocab``."""
+    start = jax.random.randint(key, (cfg.batch, 1), 0, cfg.vocab)
+    def step(x, _):
+        nxt = (5 * x + 3) % cfg.vocab
+        return nxt, nxt
+    _, rest = jax.lax.scan(step, start, None, length=cfg.seq - 1)
+    rest = jnp.swapaxes(rest[..., 0], 0, 1)  # [B, S-1]
+    return jnp.concatenate([start, rest], axis=1).astype(jnp.int32)

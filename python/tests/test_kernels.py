@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs the pure-jnp oracle.
+
+This is the core numeric signal for the whole stack — the same kernels
+lower into the HLO artifact the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import layernorm as ln_k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5), jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,s,d", [(1, 8, 4), (2, 16, 8), (4, 64, 16), (2, 33, 8)])
+def test_attention_matches_ref(dtype, h, s, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(h * 100 + s + d), 3)
+    q, k, v = rand(k1, (h, s, d), dtype), rand(k2, (h, s, d), dtype), rand(k3, (h, s, d), dtype)
+    got = attn_k.causal_attention(q, k, v)
+    want = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    s=st.integers(2, 48),
+    d=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref_hypothesis(h, s, d, seed):
+    """Hypothesis sweep over shapes (the shipped models use S ≤ 128)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(k1, (h, s, d), jnp.float32)
+    k = rand(k2, (h, s, d), jnp.float32)
+    v = rand(k3, (h, s, d), jnp.float32)
+    got = attn_k.causal_attention(q, k, v)
+    want = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_is_causal():
+    """Output at position t must not depend on tokens > t."""
+    h, s, d = 2, 16, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (rand(kk, (h, s, d), jnp.float32) for kk in (k1, k2, k3))
+    base = attn_k.causal_attention(q, k, v)
+    # Perturb the future half of K and V.
+    k2p = k.at[:, s // 2 :, :].set(99.0)
+    v2p = v.at[:, s // 2 :, :].set(-99.0)
+    pert = attn_k.causal_attention(q, k2p, v2p)
+    np.testing.assert_allclose(
+        np.asarray(base[:, : s // 2, :]), np.asarray(pert[:, : s // 2, :]),
+        rtol=1e-6, atol=1e-6,
+    )
+    assert not np.allclose(np.asarray(base[:, -1, :]), np.asarray(pert[:, -1, :]))
+
+
+def test_attention_first_position_is_v0():
+    """Causal row 0 attends only to itself: out[0] == v[0]."""
+    h, s, d = 1, 8, 4
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (rand(kk, (h, s, d), jnp.float32) for kk in (k1, k2, k3))
+    out = attn_k.causal_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(v[:, 0]), rtol=1e-6)
+
+
+def test_attention_custom_scale():
+    h, s, d = 2, 12, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (rand(kk, (h, s, d), jnp.float32) for kk in (k1, k2, k3))
+    got = attn_k.causal_attention(q, k, v, scale=0.25)
+    want = ref.causal_attention(q, k, v, scale=0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_grad_flows():
+    """The kernel must be differentiable (it sits inside fwd+bwd AOT)."""
+    h, s, d = 2, 8, 4
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (rand(kk, (h, s, d), jnp.float32) for kk in (k1, k2, k3))
+
+    def f(q, k, v):
+        return jnp.sum(attn_k.causal_attention(q, k, v) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.causal_attention(q, k, v) ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimate_within_budget():
+    """The shipped variants' per-instance working set must sit far below
+    the ~16 MiB TPU VMEM budget (DESIGN.md §Perf)."""
+    assert attn_k.vmem_bytes(s=64, d=32) < 1 << 20
+    assert attn_k.vmem_bytes(s=128, d=32) < 2 << 20
+    assert attn_k.vmem_bytes(s=256, d=64) < 4 << 20
+
+
+# ---------------------------------------------------------------- layernorm
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows,dim", [(8, 16), (128, 64), (256, 32), (96, 48)])
+def test_layernorm_matches_ref(dtype, rows, dim):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(rows + dim), 3)
+    x = rand(k1, (rows, dim), dtype)
+    g = rand(k2, (dim,), jnp.float32) + 1.0
+    b = rand(k3, (dim,), jnp.float32)
+    got = ln_k.layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([4, 16, 64, 100, 128]),
+    dim=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_hypothesis(rows, dim, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(k1, (rows, dim), jnp.float32)
+    g = rand(k2, (dim,), jnp.float32)
+    b = rand(k3, (dim,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ln_k.layernorm(x, g, b)),
+        np.asarray(ref.layernorm(x, g, b)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_layernorm_output_is_normalized():
+    x = jax.random.normal(jax.random.PRNGKey(5), (32, 64)) * 7 + 3
+    y = np.asarray(ln_k.layernorm(x, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-2)
+
+
+def test_layernorm_nonmultiple_rows_falls_back():
+    """Row counts that do not divide the block still work (single tile)."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (37, 16))
+    got = ln_k.layernorm(x, jnp.ones(16), jnp.zeros(16), block_rows=128)
+    want = ref.layernorm(x, jnp.ones(16), jnp.zeros(16))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,81 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Scale: every bench defaults to a laptop-scale workload and honours
+//! `FITGPP_JOBS` (job count) and `FITGPP_SEEDS` (workload repetitions, cf.
+//! the paper's "eight sets of generated workloads") for full-paper runs:
+//!
+//! ```bash
+//! FITGPP_JOBS=65536 FITGPP_SEEDS=8 cargo bench --bench table1_synthetic
+//! ```
+
+use fitgpp::benchkit::env_usize;
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, SimResult, Simulator};
+use fitgpp::workload::synthetic::SyntheticWorkload;
+use fitgpp::workload::Workload;
+use std::io::Write as _;
+
+pub fn jobs_default() -> usize {
+    env_usize("FITGPP_JOBS", 8192)
+}
+
+pub fn seeds_default() -> usize {
+    env_usize("FITGPP_SEEDS", 2)
+}
+
+pub fn cluster() -> ClusterSpec {
+    ClusterSpec::pfn()
+}
+
+/// The §4.2 workload at bench scale.
+pub fn paper_workload(seed: u64, jobs: usize) -> Workload {
+    SyntheticWorkload::paper_section_4_2(seed)
+        .with_cluster(cluster())
+        .with_num_jobs(jobs)
+        .generate()
+}
+
+/// The four §4.1 policies (FitGpp at the paper's headline setting).
+pub fn paper_policies() -> Vec<(String, PolicyKind)> {
+    vec![
+        ("FIFO".into(), PolicyKind::Fifo),
+        ("LRTP".into(), PolicyKind::Lrtp),
+        ("RAND".into(), PolicyKind::Rand),
+        ("FitGpp (s=4.0)".into(), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
+    ]
+}
+
+pub fn run_policy(wl: &Workload, policy: PolicyKind, seed: u64) -> SimResult {
+    let mut cfg = SimConfig::new(cluster(), policy);
+    cfg.seed = seed;
+    Simulator::new(cfg).run(wl)
+}
+
+/// Pool per-job slowdowns across several seeds (the paper reports
+/// statistics over eight workloads).
+pub fn pooled_slowdowns(
+    policy: PolicyKind,
+    seeds: usize,
+    jobs: usize,
+    class: fitgpp::job::JobClass,
+) -> Vec<f64> {
+    let mut xs = Vec::new();
+    for s in 0..seeds {
+        let wl = paper_workload(100 + s as u64, jobs);
+        let res = run_policy(&wl, policy, s as u64);
+        xs.extend(res.slowdowns(class));
+    }
+    xs
+}
+
+/// Write a machine-readable copy of a bench's output next to the target
+/// dir so EXPERIMENTS.md numbers are reproducible artifacts.
+pub fn save_results(name: &str, content: &str) {
+    let dir = std::path::Path::new("target/bench-results");
+    let _ = std::fs::create_dir_all(dir);
+    if let Ok(mut f) = std::fs::File::create(dir.join(format!("{name}.txt"))) {
+        let _ = f.write_all(content.as_bytes());
+    }
+    println!("{content}");
+}

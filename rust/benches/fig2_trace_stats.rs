@@ -1,0 +1,49 @@
+//! Fig. 2: statistics of the jobs on the institution cluster — execution
+//! time / CPU / RAM / GPU distributions per class. Regenerated from the
+//! synthesized trace (DESIGN.md §3 documents the substitution).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::job::JobClass;
+use fitgpp::stats::summary::Summary;
+use fitgpp::util::table::Table;
+use fitgpp::workload::trace::Trace;
+
+fn main() {
+    let jobs = common::jobs_default();
+    let wl = Trace::synthesize_institution(7, jobs);
+    let mut t = Table::new(
+        "Fig. 2: job statistics on the (synthesized) institution cluster",
+        &["class", "metric", "mean", "p50", "p95", "p99", "max"],
+    );
+    for class in [JobClass::Te, JobClass::Be] {
+        let sel: Vec<&fitgpp::job::JobSpec> = wl.of_class(class).collect();
+        let metrics: [(&str, Vec<f64>); 4] = [
+            ("exec [min]", sel.iter().map(|j| j.exec_time as f64).collect()),
+            ("cpu", sel.iter().map(|j| j.demand.cpu).collect()),
+            ("ram [GB]", sel.iter().map(|j| j.demand.ram_gb).collect()),
+            ("gpu", sel.iter().map(|j| j.demand.gpu).collect()),
+        ];
+        for (name, xs) in metrics {
+            let s = Summary::of(&xs);
+            t.row(vec![
+                class.as_str().into(),
+                name.into(),
+                format!("{:.1}", s.mean),
+                format!("{:.1}", s.p50),
+                format!("{:.1}", s.p95),
+                format!("{:.1}", s.p99),
+                format!("{:.1}", s.max),
+            ]);
+        }
+    }
+    let mut out = t.to_text();
+    out.push_str(&format!(
+        "\njobs: {} ({:.1}% TE), arrival span {:.1} days\n",
+        wl.len(),
+        wl.te_fraction() * 100.0,
+        wl.submit_span() as f64 / 1440.0
+    ));
+    common::save_results("fig2_trace_stats", &out);
+}

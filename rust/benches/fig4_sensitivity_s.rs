@@ -1,0 +1,38 @@
+//! Fig. 4: FitGpp slowdown percentiles as a function of `s` (the weight
+//! of grace-period length vs demand size in Eq. 3). Paper shape: TE
+//! slowdown falls with s and saturates between s = 4 and s = 8; BE
+//! slowdown is essentially independent of s.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::job::JobClass;
+use fitgpp::metrics::Percentiles;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::util::table::Table;
+
+fn main() {
+    let jobs = common::jobs_default();
+    let seeds = common::seeds_default();
+    println!("fig4_sensitivity_s: {jobs} jobs x {seeds} seeds (P = 1)");
+
+    let mut t = Table::new(
+        "Fig. 4: FitGpp slowdown vs s",
+        &["s", "TE p50", "TE p95", "TE p99", "BE p50", "BE p95", "BE p99"],
+    );
+    for s_param in [0.0, 0.5, 1.0, 2.0, 4.0, 8.0] {
+        let policy = PolicyKind::FitGpp { s: s_param, p_max: Some(1) };
+        let te = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Te));
+        let be = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Be));
+        t.row(vec![
+            format!("{s_param}"),
+            format!("{:.3}", te.p50),
+            format!("{:.3}", te.p95),
+            format!("{:.3}", te.p99),
+            format!("{:.2}", be.p50),
+            format!("{:.2}", be.p95),
+            format!("{:.2}", be.p99),
+        ]);
+    }
+    common::save_results("fig4_sensitivity_s", &t.to_text());
+}

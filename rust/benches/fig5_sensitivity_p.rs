@@ -1,0 +1,37 @@
+//! Fig. 5: FitGpp slowdown percentiles vs the per-job preemption cap P.
+//! Paper shape: both TE and BE slowdowns are essentially independent of P
+//! (FitGpp rarely needs to preempt the same job twice).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::job::JobClass;
+use fitgpp::metrics::Percentiles;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::util::table::Table;
+
+fn main() {
+    let jobs = common::jobs_default();
+    let seeds = common::seeds_default();
+    println!("fig5_sensitivity_p: {jobs} jobs x {seeds} seeds (s = 4)");
+
+    let mut t = Table::new(
+        "Fig. 5: FitGpp slowdown vs P",
+        &["P", "TE p50", "TE p95", "TE p99", "BE p50", "BE p95", "BE p99"],
+    );
+    for p in [Some(1u32), Some(2), Some(4), Some(8), None] {
+        let policy = PolicyKind::FitGpp { s: 4.0, p_max: p };
+        let te = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Te));
+        let be = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Be));
+        t.row(vec![
+            p.map(|x| x.to_string()).unwrap_or("inf".into()),
+            format!("{:.3}", te.p50),
+            format!("{:.3}", te.p95),
+            format!("{:.3}", te.p99),
+            format!("{:.2}", be.p50),
+            format!("{:.2}", be.p95),
+            format!("{:.2}", be.p99),
+        ]);
+    }
+    common::save_results("fig5_sensitivity_p", &t.to_text());
+}

@@ -1,0 +1,41 @@
+//! Fig. 6: 95th-percentile slowdown vs the proportion of TE jobs in the
+//! workload. Paper shape: TE slowdown grows with the TE share (their
+//! combined demand eventually exceeds capacity); FitGpp dominates the
+//! baselines at every ratio while keeping BE slowdown low.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::job::JobClass;
+use fitgpp::stats::summary::percentile;
+use fitgpp::util::table::Table;
+use fitgpp::workload::synthetic::SyntheticWorkload;
+
+fn main() {
+    let jobs = common::jobs_default();
+    println!("fig6_te_ratio: {jobs} jobs per point");
+
+    let mut t = Table::new(
+        "Fig. 6: p95 slowdown vs TE-job proportion",
+        &["TE %", "policy", "TE p95", "BE p95"],
+    );
+    for frac in [0.1, 0.2, 0.3, 0.5, 0.7] {
+        let wl = SyntheticWorkload::paper_section_4_2(7)
+            .with_cluster(common::cluster())
+            .with_num_jobs(jobs)
+            .with_te_fraction(frac)
+            .generate();
+        for (name, policy) in common::paper_policies() {
+            let res = common::run_policy(&wl, policy, 1);
+            let te = res.slowdowns(JobClass::Te);
+            let be = res.slowdowns(JobClass::Be);
+            t.row(vec![
+                format!("{:.0}", frac * 100.0),
+                name,
+                format!("{:.2}", percentile(&te, 95.0)),
+                format!("{:.2}", percentile(&be, 95.0)),
+            ]);
+        }
+    }
+    common::save_results("fig6_te_ratio", &t.to_text());
+}

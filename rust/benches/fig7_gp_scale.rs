@@ -1,0 +1,49 @@
+//! Fig. 7: 95th-percentile slowdown vs the grace-period length scale.
+//! The "1.0" column samples GPs from the §4.2 distribution; "k" scales
+//! mean, σ, and truncation by k. Paper shape: TE slowdown grows with GP
+//! length for every policy; a larger s counters it (FitGpp s=8 beats s=4
+//! at scale 8); FitGpp keeps BE slowdown flat where LRTP/RAND degrade.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::job::JobClass;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::stats::summary::percentile;
+use fitgpp::util::table::Table;
+use fitgpp::workload::synthetic::SyntheticWorkload;
+
+fn main() {
+    let jobs = common::jobs_default();
+    println!("fig7_gp_scale: {jobs} jobs per point");
+
+    let policies = [
+        ("LRTP".to_string(), PolicyKind::Lrtp),
+        ("RAND".to_string(), PolicyKind::Rand),
+        ("FitGpp (s=4.0)".to_string(), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
+        ("FitGpp (s=8.0)".to_string(), PolicyKind::FitGpp { s: 8.0, p_max: Some(1) }),
+    ];
+    let mut t = Table::new(
+        "Fig. 7: p95 slowdown vs GP-length scale",
+        &["GP scale", "policy", "TE p95", "BE p95"],
+    );
+    for scale in [1.0, 2.0, 4.0, 8.0] {
+        let wl = SyntheticWorkload::paper_section_4_2(7)
+            .with_cluster(common::cluster())
+            .with_num_jobs(jobs)
+            .with_gp_scale(scale)
+            .generate();
+        for (name, policy) in &policies {
+            let res = common::run_policy(&wl, *policy, 1);
+            let te = res.slowdowns(JobClass::Te);
+            let be = res.slowdowns(JobClass::Be);
+            t.row(vec![
+                format!("{scale}"),
+                name.clone(),
+                format!("{:.2}", percentile(&te, 95.0)),
+                format!("{:.2}", percentile(&be, 95.0)),
+            ]);
+        }
+    }
+    common::save_results("fig7_gp_scale", &t.to_text());
+}

@@ -1,0 +1,132 @@
+//! Scheduler hot-path micro-benchmarks (the §Perf L3 targets) plus design
+//! ablations called out in DESIGN.md:
+//!
+//! * end-to-end simulation throughput (jobs/s) per policy
+//! * FitGpp victim-scan latency at various running-job counts
+//! * placement-search latency (first/best/worst fit ablation)
+//! * percentile computation
+//! * synthetic-workload generation
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::benchkit::{black_box, BenchReport};
+use fitgpp::cluster::{Cluster, ClusterSpec, Placement};
+use fitgpp::job::{Job, JobClass, JobId, JobSpec};
+use fitgpp::resources::ResourceVec;
+use fitgpp::sched::policy::{fitgpp as fitgpp_policy, PolicyCtx, PolicyKind};
+use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::stats::rng::Pcg64;
+use fitgpp::stats::summary::percentiles;
+use fitgpp::workload::synthetic::SyntheticWorkload;
+
+/// Build a cluster with `n_jobs` running BE jobs spread across 84 nodes.
+fn packed_cluster(n_jobs: usize) -> (Cluster, Vec<Job>) {
+    let spec = ClusterSpec::pfn();
+    let mut cluster = Cluster::new(&spec);
+    let mut jobs = Vec::new();
+    let mut rng = Pcg64::new(42);
+    let mut placed = 0;
+    while placed < n_jobs {
+        let demand = ResourceVec::new(
+            1.0 + rng.below(8) as f64,
+            8.0 + rng.below(64) as f64,
+            rng.below(3) as f64,
+        );
+        let Some(node) = cluster.find_node(&demand, Placement::FirstFit) else {
+            break;
+        };
+        let s = JobSpec::new(placed as u32, JobClass::Be, demand, 0, 60, rng.below(20));
+        let mut j = Job::new(s);
+        j.start(node, 0);
+        cluster.bind(JobId(placed as u32), demand, node);
+        jobs.push(j);
+        placed += 1;
+    }
+    (cluster, jobs)
+}
+
+fn main() {
+    let mut r = BenchReport::new();
+
+    // --- end-to-end simulation throughput -----------------------------
+    let jobs = 4096;
+    let wl = common::paper_workload(1, jobs);
+    for (name, policy) in common::paper_policies() {
+        r.bench(&format!("sim 4096 jobs [{name}]"), 1, 5, || {
+            let mut cfg = SimConfig::new(common::cluster(), policy);
+            cfg.seed = 1;
+            black_box(Simulator::new(cfg).run(&wl).makespan)
+        });
+    }
+
+    // --- FitGpp victim scan -------------------------------------------
+    for n in [256usize, 512, 1024] {
+        let (cluster, jobs) = packed_cluster(n);
+        let free: Vec<ResourceVec> = cluster.nodes.iter().map(|nd| nd.free).collect();
+        let te = JobSpec::new(999_999, JobClass::Te, ResourceVec::new(16.0, 128.0, 4.0), 0, 5, 0);
+        let oracle = |id: JobId| jobs[id.0 as usize].remaining;
+        let mut rng = Pcg64::new(7);
+        r.bench(&format!("fitgpp scan @{n} running"), 10, 50, || {
+            let ctx = PolicyCtx {
+                cluster: &cluster,
+                jobs: &jobs,
+                effective_free: &free,
+                oracle_remaining: &oracle,
+            };
+            black_box(fitgpp_policy::plan(&te, &ctx, 4.0, Some(1), &mut rng))
+        });
+    }
+
+    // --- placement search ablation --------------------------------------
+    let (cluster, _jobs) = packed_cluster(512);
+    let demand = ResourceVec::new(4.0, 32.0, 1.0);
+    for (name, p) in [
+        ("first-fit", Placement::FirstFit),
+        ("best-fit", Placement::BestFit),
+        ("worst-fit", Placement::WorstFit),
+    ] {
+        r.bench(&format!("placement {name} @512 jobs"), 10, 100, || {
+            black_box(cluster.find_node(&demand, p))
+        });
+    }
+
+    // --- placement *quality* ablation (slowdown impact, not latency) ----
+    println!("\nplacement-policy ablation (TE p95 slowdown, 2048 jobs):");
+    let wl_small = common::paper_workload(3, 2048);
+    for (name, p) in [
+        ("first-fit", Placement::FirstFit),
+        ("best-fit", Placement::BestFit),
+        ("worst-fit", Placement::WorstFit),
+    ] {
+        let mut cfg = SimConfig::new(common::cluster(), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+        cfg.placement = p;
+        let res = Simulator::new(cfg).run(&wl_small);
+        println!(
+            "  {name}: TE p95 {:.2}, BE p95 {:.2}, signals {}",
+            res.slowdown_report().te.p95,
+            res.slowdown_report().be.p95,
+            res.sched_stats.preemption_signals
+        );
+    }
+
+    // --- metrics -----------------------------------------------------------
+    let mut rng = Pcg64::new(9);
+    let xs: Vec<f64> = (0..65536).map(|_| rng.next_f64() * 100.0).collect();
+    r.bench("percentiles 65536 samples", 3, 20, || {
+        black_box(percentiles(&xs, &[50.0, 95.0, 99.0]))
+    });
+
+    // --- workload generation ------------------------------------------------
+    r.bench("generate 4096-job workload", 1, 5, || {
+        black_box(
+            SyntheticWorkload::paper_section_4_2(5)
+                .with_cluster(common::cluster())
+                .with_num_jobs(4096)
+                .generate()
+                .len(),
+        )
+    });
+
+    common::save_results("hotpath", &r.table("hotpath micro-benchmarks").to_text());
+}

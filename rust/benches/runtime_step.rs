@@ -1,0 +1,63 @@
+//! PJRT runtime benchmarks (the §Perf L1/L2 hot path as executed from
+//! rust): artifact compile time, train-step latency, checkpoint
+//! serialization throughput. Skips gracefully when artifacts are absent.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::benchkit::{black_box, BenchReport};
+use fitgpp::runtime::{self, Engine, Manifest, Trainer};
+
+fn main() {
+    if !runtime::artifacts_available() {
+        println!("runtime_step: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let manifest = Manifest::load(&runtime::artifacts_dir()).expect("manifest");
+    let mut r = BenchReport::new();
+
+    for variant in ["tiny", "small"] {
+        let v = manifest.variant(variant).unwrap();
+        println!(
+            "{variant}: {} params, batch {}x{}",
+            v.param_count(),
+            v.tokens.shape[0],
+            v.tokens.shape[1]
+        );
+        // Compile latency (one-off per worker in live mode).
+        r.bench(&format!("compile {variant}"), 0, 3, || {
+            black_box(
+                engine
+                    .load_hlo_text(&manifest.artifact_path(&v.train_step))
+                    .is_ok(),
+            )
+        });
+        // Step latency.
+        let mut trainer = Trainer::new(&engine, &manifest, variant, 1).unwrap();
+        r.bench(&format!("train step {variant}"), 3, 10, || {
+            black_box(trainer.step_synthetic().unwrap())
+        });
+        // Tokens/s derived figure.
+        if let Some(m) = r.get(&format!("train step {variant}")) {
+            let toks = (v.tokens.shape[0] * v.tokens.shape[1]) as f64;
+            println!(
+                "  {variant}: {:.0} tokens/s, {:.1} steps/s",
+                toks / m.median.as_secs_f64(),
+                1.0 / m.median.as_secs_f64()
+            );
+        }
+        // Checkpoint (the grace-period work).
+        let ckpt = trainer.checkpoint().unwrap();
+        let bytes = ckpt.to_bytes();
+        println!("  checkpoint: {} bytes", bytes.len());
+        r.bench(&format!("checkpoint serialize {variant}"), 3, 10, || {
+            black_box(trainer.checkpoint().unwrap().to_bytes().len())
+        });
+        r.bench(&format!("checkpoint parse {variant}"), 3, 10, || {
+            black_box(fitgpp::runtime::Checkpoint::from_bytes(&bytes).unwrap().step)
+        });
+    }
+
+    common::save_results("runtime_step", &r.table("PJRT runtime benchmarks").to_text());
+}

@@ -1,0 +1,55 @@
+//! Table 1 + Fig. 3: percentiles of slowdown rates for FIFO / LRTP / RAND
+//! / FitGpp(s=4, P=1) on the §4.2 synthetic workload.
+//!
+//! Paper values (for shape comparison):
+//! ```text
+//!              TE 50th  95th  99th   BE 50th  95th  99th
+//! FIFO            9.38  33.4  48.5      2.78  4.89  8.21
+//! LRTP            1.00  1.17  1.58      3.78  7.25  12.5
+//! RAND            1.00  1.17  1.58      3.87  7.49  12.9
+//! FitGpp (s=4)    1.00  1.15  1.54      3.28  6.06  10.3
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::job::JobClass;
+use fitgpp::metrics::{slowdown_table, Percentiles, SlowdownReport};
+use std::time::Instant;
+
+fn main() {
+    let jobs = common::jobs_default();
+    let seeds = common::seeds_default();
+    println!("table1_synthetic: {jobs} jobs x {seeds} seeds (FITGPP_JOBS / FITGPP_SEEDS to scale)");
+
+    let mut rows = Vec::new();
+    let mut fifo_te_p95 = f64::NAN;
+    let mut fifo_be = Percentiles { p50: f64::NAN, p95: f64::NAN, p99: f64::NAN };
+    let mut fitgpp_te_p95 = f64::NAN;
+    let mut fitgpp_be = fifo_be;
+    for (name, policy) in common::paper_policies() {
+        let t0 = Instant::now();
+        let te = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Te));
+        let be = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Be));
+        eprintln!("  {name}: {:.1}s", t0.elapsed().as_secs_f64());
+        if name == "FIFO" {
+            fifo_te_p95 = te.p95;
+            fifo_be = be;
+        }
+        if name.starts_with("FitGpp") {
+            fitgpp_te_p95 = te.p95;
+            fitgpp_be = be;
+        }
+        rows.push((name, SlowdownReport { te, be }));
+    }
+    let named: Vec<(&str, SlowdownReport)> = rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
+    let mut out = slowdown_table("Table 1: Percentiles of slowdown rates", &named).to_text();
+    out.push_str(&format!(
+        "\nheadline: FitGpp reduces FIFO's TE p95 by {:.1}% (paper: 96.6%)\n\
+         BE p50 changes by {:+.1}% (paper: +18.0%), BE p95 by {:+.1}% (paper: +23.9%)\n",
+        (1.0 - fitgpp_te_p95 / fifo_te_p95) * 100.0,
+        (fitgpp_be.p50 / fifo_be.p50 - 1.0) * 100.0,
+        (fitgpp_be.p95 / fifo_be.p95 - 1.0) * 100.0,
+    ));
+    common::save_results("table1_synthetic", &out);
+}

@@ -1,0 +1,43 @@
+//! Table 2: re-scheduling intervals (minutes between a victim vacating
+//! and restarting). Paper: FitGpp's median is half of LRTP/RAND's.
+//!
+//! ```text
+//!           50th 75th 95th 99th
+//! LRTP       4.0  4.0  5.0  7.0
+//! RAND       4.0  4.0  6.0  7.0
+//! FitGpp     2.0  2.0  4.0  6.0
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::metrics::{intervals_table, IntervalsReport};
+use fitgpp::stats::summary::percentiles;
+
+fn main() {
+    let jobs = common::jobs_default();
+    let seeds = common::seeds_default();
+    println!("table2_intervals: {jobs} jobs x {seeds} seeds");
+
+    let mut rows = Vec::new();
+    for (name, policy) in common::paper_policies() {
+        if !policy.preempts() {
+            continue; // FIFO has no intervals
+        }
+        let mut iv: Vec<f64> = Vec::new();
+        for s in 0..seeds {
+            let wl = common::paper_workload(100 + s as u64, jobs);
+            iv.extend(common::run_policy(&wl, policy, s as u64).resched_intervals());
+        }
+        let rep = if iv.is_empty() {
+            IntervalsReport { p50: f64::NAN, p75: f64::NAN, p95: f64::NAN, p99: f64::NAN, count: 0 }
+        } else {
+            let v = percentiles(&iv, &[50.0, 75.0, 95.0, 99.0]);
+            IntervalsReport { p50: v[0], p75: v[1], p95: v[2], p99: v[3], count: iv.len() }
+        };
+        rows.push((name, rep));
+    }
+    let named: Vec<(&str, IntervalsReport)> = rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
+    let out = intervals_table("Table 2: Re-scheduling intervals [min]", &named).to_text();
+    common::save_results("table2_intervals", &out);
+}

@@ -1,0 +1,39 @@
+//! Table 4: proportion of jobs preempted exactly 1 / 2 / ≥3 times when P
+//! is infinite. Paper: FitGpp's whole histogram sits an order of magnitude
+//! below LRTP/RAND's.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::metrics::{preempt_hist_table, PreemptionReport};
+use fitgpp::sched::policy::PolicyKind;
+
+fn main() {
+    let jobs = common::jobs_default();
+    let seeds = common::seeds_default();
+    println!("table4_preempt_hist: {jobs} jobs x {seeds} seeds (P = inf)");
+
+    let policies = [
+        ("LRTP", PolicyKind::Lrtp),
+        ("RAND", PolicyKind::Rand),
+        ("FitGpp (s=4.0)", PolicyKind::FitGpp { s: 4.0, p_max: None }),
+    ];
+    let mut rows = Vec::new();
+    for (name, policy) in policies {
+        let mut hist = [0.0f64; 3];
+        for s in 0..seeds {
+            let wl = common::paper_workload(100 + s as u64, jobs);
+            let h = common::run_policy(&wl, policy, s as u64).preemption_histogram();
+            for i in 0..3 {
+                hist[i] += h[i] / seeds as f64;
+            }
+        }
+        rows.push((name, PreemptionReport { fraction_preempted: 0.0, hist }));
+    }
+    let out = preempt_hist_table(
+        "Table 4: Proportion of jobs preempted N times (P = inf)",
+        &rows,
+    )
+    .to_text();
+    common::save_results("table4_preempt_hist", &out);
+}

@@ -1,0 +1,42 @@
+//! Table 5 + Fig. 8: slowdown percentiles on the institution trace
+//! (§4.4; synthesized stand-in, DESIGN.md §3). Paper shape: preemptive
+//! policies crush FIFO's enormous TE tail (235 → ~2 at p50) and FitGpp
+//! *also beats FIFO on BE* (the re-arrangement effect: 16.2 → 11.4 p50).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::job::JobClass;
+use fitgpp::metrics::{slowdown_table, Percentiles, SlowdownReport};
+use fitgpp::workload::trace::Trace;
+
+fn main() {
+    let jobs = common::jobs_default();
+    println!("table5_trace: {jobs}-job institution trace");
+    let wl = Trace::synthesize_institution(7, jobs);
+    eprintln!(
+        "trace: {} jobs, {:.1}% TE, span {:.1} days",
+        wl.len(),
+        wl.te_fraction() * 100.0,
+        wl.submit_span() as f64 / 1440.0
+    );
+
+    let mut rows = Vec::new();
+    for (name, policy) in common::paper_policies() {
+        let res = common::run_policy(&wl, policy, 3);
+        rows.push((
+            name,
+            SlowdownReport {
+                te: Percentiles::of(&res.slowdowns(JobClass::Te)),
+                be: Percentiles::of(&res.slowdowns(JobClass::Be)),
+            },
+        ));
+    }
+    let named: Vec<(&str, SlowdownReport)> = rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
+    let out = slowdown_table(
+        "Table 5: Percentiles of slowdown rates (institution trace)",
+        &named,
+    )
+    .to_text();
+    common::save_results("table5_trace", &out);
+}

@@ -1,0 +1,140 @@
+//! Tiny benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup + repeated timing with median/min/max reporting, and a
+//! `BenchReport` that accumulates named measurements and renders them as a
+//! table. Every `rust/benches/*.rs` target (`harness = false`) uses this.
+
+use crate::util::table::Table;
+use std::time::{Duration, Instant};
+
+/// One timed measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `iters` measured
+/// runs. Returns median/min/max. `f` should return something observable to
+/// keep the optimizer honest; its return value is black-boxed.
+pub fn time_fn<T, F: FnMut() -> T>(warmup: usize, iters: usize, mut f: F) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    Measurement {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: samples[samples.len() - 1],
+        iters,
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Named measurement collection + table rendering.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    rows: Vec<(String, Measurement)>,
+}
+
+impl BenchReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, m: Measurement) {
+        println!(
+            "  {name}: median {:.2} ms (min {:.2}, max {:.2}, n={})",
+            m.median_ms(),
+            m.min.as_secs_f64() * 1e3,
+            m.max.as_secs_f64() * 1e3,
+            m.iters
+        );
+        self.rows.push((name.to_string(), m));
+    }
+
+    /// Run-and-record convenience.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
+        let m = time_fn(warmup, iters, f);
+        self.record(name, m);
+    }
+
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["benchmark", "median (ms)", "min (ms)", "max (ms)", "iters"]);
+        for (name, m) in &self.rows {
+            t.row(vec![
+                name.clone(),
+                format!("{:.3}", m.median_ms()),
+                format!("{:.3}", m.min.as_secs_f64() * 1e3),
+                format!("{:.3}", m.max.as_secs_f64() * 1e3),
+                m.iters.to_string(),
+            ]);
+        }
+        t
+    }
+
+    pub fn get(&self, name: &str) -> Option<Measurement> {
+        self.rows.iter().find(|(n, _)| n == name).map(|(_, m)| *m)
+    }
+}
+
+/// Standard env-var scaling for bench workload sizes: benches default to a
+/// fast size but honour `FITGPP_JOBS` (etc.) for full-paper-scale runs.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_something() {
+        let m = time_fn(1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.min <= m.median && m.median <= m.max);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn report_accumulates_and_renders() {
+        let mut r = BenchReport::new();
+        r.bench("noop", 0, 3, || 1 + 1);
+        assert!(r.get("noop").is_some());
+        let t = r.table("bench");
+        assert!(t.to_text().contains("noop"));
+    }
+
+    #[test]
+    fn env_usize_default() {
+        assert_eq!(env_usize("FITGPP_NONEXISTENT_VAR_XYZ", 7), 7);
+    }
+}

@@ -1,0 +1,343 @@
+//! Cluster and node state: capacities, allocations, and placement search.
+//!
+//! The paper's evaluation cluster is 84 homogeneous nodes of 32 CPUs /
+//! 256 GB RAM / 8 GPUs. We support heterogeneous nodes too (capacities are
+//! per-node), since nothing in FitGpp requires homogeneity — Eq. 1
+//! normalizes by the *hosting node's* capacity.
+
+use crate::job::JobId;
+use crate::resources::ResourceVec;
+use std::collections::HashMap;
+use std::fmt;
+
+/// Dense node identifier (index into `Cluster::nodes`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node-{}", self.0)
+    }
+}
+
+/// Static description of a cluster (used by configs and generators).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// Capacity of each node. Homogeneous clusters repeat one entry.
+    pub nodes: Vec<ResourceVec>,
+}
+
+impl ClusterSpec {
+    /// Homogeneous cluster of `n` nodes with capacity `cap` each.
+    pub fn homogeneous(n: usize, cap: ResourceVec) -> Self {
+        ClusterSpec { nodes: vec![cap; n] }
+    }
+
+    /// The paper's evaluation cluster: 84 × (32 CPU, 256 GB, 8 GPU) — the
+    /// private DL-development cluster at the authors' institution (§4.1).
+    pub fn pfn() -> Self {
+        Self::homogeneous(84, ResourceVec::pfn_node())
+    }
+
+    /// A small cluster for tests/examples.
+    pub fn tiny(n: usize) -> Self {
+        Self::homogeneous(n, ResourceVec::pfn_node())
+    }
+
+    /// Total capacity across all nodes.
+    pub fn total_capacity(&self) -> ResourceVec {
+        self.nodes.iter().fold(ResourceVec::ZERO, |acc, c| acc + *c)
+    }
+}
+
+/// One node's live state.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub capacity: ResourceVec,
+    /// Unallocated resources (the paper's `N` in Eq. 2).
+    pub free: ResourceVec,
+    /// Jobs currently occupying resources here (Running or Draining), with
+    /// their demands. Insertion order is preserved for determinism.
+    allocations: Vec<(JobId, ResourceVec)>,
+}
+
+impl Node {
+    fn new(id: NodeId, capacity: ResourceVec) -> Self {
+        Node { id, capacity, free: capacity, allocations: Vec::new() }
+    }
+
+    /// Jobs hosted on this node, in allocation order.
+    pub fn jobs(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.allocations.iter().map(|(id, _)| *id)
+    }
+
+    pub fn num_jobs(&self) -> usize {
+        self.allocations.len()
+    }
+
+    /// Allocated (capacity - free) resources.
+    pub fn used(&self) -> ResourceVec {
+        self.capacity - self.free
+    }
+
+    fn allocate(&mut self, job: JobId, demand: ResourceVec) {
+        debug_assert!(demand.fits_in(&self.free), "oversubscription on {}", self.id);
+        self.free -= demand;
+        self.allocations.push((job, demand));
+    }
+
+    fn release(&mut self, job: JobId) -> ResourceVec {
+        let idx = self
+            .allocations
+            .iter()
+            .position(|(id, _)| *id == job)
+            .unwrap_or_else(|| panic!("{} not on {}", job, self.id));
+        let (_, demand) = self.allocations.remove(idx);
+        self.free += demand;
+        // Snap tiny FP residue so long simulations never drift.
+        if (self.free.cpu - self.capacity.cpu).abs() < 1e-6
+            && (self.free.ram_gb - self.capacity.ram_gb).abs() < 1e-6
+            && (self.free.gpu - self.capacity.gpu).abs() < 1e-6
+        {
+            self.free = self.capacity;
+        }
+        demand
+    }
+}
+
+/// Placement strategy for the admission step. The paper does not pin one
+/// down; best-fit (minimize residual free Size) is the default because it
+/// concentrates fragmentation, which is also what makes Eq. 2's
+/// single-victim test meaningful. An ablation bench compares them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// First node (lowest id) with room.
+    FirstFit,
+    /// Node minimizing `Size(free - demand)` after placement.
+    BestFit,
+    /// Node maximizing residual free Size (spreads load).
+    WorstFit,
+}
+
+/// Live cluster state: nodes plus a job → node index for O(1) lookup.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    location: HashMap<JobId, NodeId>,
+}
+
+impl Cluster {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        Cluster {
+            nodes: spec
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, cap)| Node::new(NodeId(i as u32), *cap))
+                .collect(),
+            location: HashMap::new(),
+        }
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    /// Where is `job` hosted?
+    pub fn locate(&self, job: JobId) -> Option<NodeId> {
+        self.location.get(&job).copied()
+    }
+
+    /// Total free resources across nodes (not directly usable for fit tests
+    /// — a job must fit on a *single* node — but useful for load metrics).
+    pub fn total_free(&self) -> ResourceVec {
+        self.nodes.iter().fold(ResourceVec::ZERO, |acc, n| acc + n.free)
+    }
+
+    pub fn total_capacity(&self) -> ResourceVec {
+        self.nodes.iter().fold(ResourceVec::ZERO, |acc, n| acc + n.capacity)
+    }
+
+    /// Find a node for `demand` under `placement`, or `None` if it fits
+    /// nowhere. Deterministic: ties break toward the lower node id.
+    pub fn find_node(&self, demand: &ResourceVec, placement: Placement) -> Option<NodeId> {
+        match placement {
+            Placement::FirstFit => self
+                .nodes
+                .iter()
+                .find(|n| demand.fits_in(&n.free))
+                .map(|n| n.id),
+            Placement::BestFit => self
+                .nodes
+                .iter()
+                .filter(|n| demand.fits_in(&n.free))
+                .min_by(|a, b| {
+                    let ra = (a.free - *demand).size(&a.capacity);
+                    let rb = (b.free - *demand).size(&b.capacity);
+                    ra.partial_cmp(&rb).unwrap().then(a.id.cmp(&b.id))
+                })
+                .map(|n| n.id),
+            Placement::WorstFit => self
+                .nodes
+                .iter()
+                .filter(|n| demand.fits_in(&n.free))
+                .max_by(|a, b| {
+                    let ra = (a.free - *demand).size(&a.capacity);
+                    let rb = (b.free - *demand).size(&b.capacity);
+                    ra.partial_cmp(&rb).unwrap().then(b.id.cmp(&a.id))
+                })
+                .map(|n| n.id),
+        }
+    }
+
+    /// Bind `job` with `demand` on `node`. Panics on oversubscription (the
+    /// scheduler must only place after a successful fit test).
+    pub fn bind(&mut self, job: JobId, demand: ResourceVec, node: NodeId) {
+        assert!(
+            self.location.insert(job, node).is_none(),
+            "{job} double-bound"
+        );
+        self.node_mut(node).allocate(job, demand);
+    }
+
+    /// Release `job`'s resources. Returns the node it was on.
+    pub fn unbind(&mut self, job: JobId) -> NodeId {
+        let node = self.location.remove(&job).unwrap_or_else(|| panic!("{job} not bound"));
+        self.node_mut(node).release(job);
+        node
+    }
+
+    /// Invariant check used by tests and the simulator's debug mode:
+    /// free ≥ 0, free ≤ capacity, and free + Σ allocations == capacity.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for n in &self.nodes {
+            if n.free.any_negative() {
+                return Err(format!("{}: negative free {}", n.id, n.free));
+            }
+            if !n.free.fits_in(&n.capacity) {
+                return Err(format!("{}: free {} exceeds capacity {}", n.id, n.free, n.capacity));
+            }
+            let allocated = n
+                .allocations
+                .iter()
+                .fold(ResourceVec::ZERO, |acc, (_, d)| acc + *d);
+            let sum = allocated + n.free;
+            let diff = sum - n.capacity;
+            if diff.cpu.abs() > 1e-6 || diff.ram_gb.abs() > 1e-6 || diff.gpu.abs() > 1e-6 {
+                return Err(format!(
+                    "{}: conservation violated: alloc {} + free {} != cap {}",
+                    n.id, allocated, n.free, n.capacity
+                ));
+            }
+        }
+        for (job, node) in &self.location {
+            if !self.node(*node).allocations.iter().any(|(id, _)| id == job) {
+                return Err(format!("{job} in index but not on {node}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demand(c: f64, r: f64, g: f64) -> ResourceVec {
+        ResourceVec::new(c, r, g)
+    }
+
+    #[test]
+    fn spec_pfn_matches_paper() {
+        let s = ClusterSpec::pfn();
+        assert_eq!(s.nodes.len(), 84);
+        assert_eq!(s.total_capacity(), ResourceVec::new(84.0 * 32.0, 84.0 * 256.0, 84.0 * 8.0));
+    }
+
+    #[test]
+    fn bind_unbind_roundtrip() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(2));
+        c.bind(JobId(1), demand(4.0, 32.0, 1.0), NodeId(0));
+        assert_eq!(c.locate(JobId(1)), Some(NodeId(0)));
+        assert_eq!(c.node(NodeId(0)).free, demand(28.0, 224.0, 7.0));
+        c.check_invariants().unwrap();
+        let n = c.unbind(JobId(1));
+        assert_eq!(n, NodeId(0));
+        assert_eq!(c.node(NodeId(0)).free, ResourceVec::pfn_node());
+        assert!(c.locate(JobId(1)).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_bind_panics() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(2));
+        c.bind(JobId(1), demand(1.0, 1.0, 0.0), NodeId(0));
+        c.bind(JobId(1), demand(1.0, 1.0, 0.0), NodeId(1));
+    }
+
+    #[test]
+    fn first_fit_picks_lowest_id() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(3));
+        c.bind(JobId(1), demand(32.0, 256.0, 8.0), NodeId(0)); // fill node 0
+        let n = c.find_node(&demand(1.0, 1.0, 0.0), Placement::FirstFit);
+        assert_eq!(n, Some(NodeId(1)));
+    }
+
+    #[test]
+    fn best_fit_minimizes_residual() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(2));
+        // Node 0 is half full; best-fit should prefer it over empty node 1.
+        c.bind(JobId(1), demand(16.0, 128.0, 4.0), NodeId(0));
+        let n = c.find_node(&demand(8.0, 64.0, 2.0), Placement::BestFit);
+        assert_eq!(n, Some(NodeId(0)));
+        // Worst-fit spreads instead.
+        let n = c.find_node(&demand(8.0, 64.0, 2.0), Placement::WorstFit);
+        assert_eq!(n, Some(NodeId(1)));
+    }
+
+    #[test]
+    fn no_fit_returns_none() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(2));
+        for (i, node) in [(0u32, NodeId(0)), (1, NodeId(1))] {
+            c.bind(JobId(i), demand(30.0, 250.0, 8.0), node);
+        }
+        assert_eq!(c.find_node(&demand(4.0, 4.0, 1.0), Placement::FirstFit), None);
+    }
+
+    #[test]
+    fn gpu_axis_blocks_fit_alone() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(1));
+        c.bind(JobId(1), demand(1.0, 1.0, 8.0), NodeId(0)); // all GPUs taken
+        assert_eq!(c.find_node(&demand(1.0, 1.0, 1.0), Placement::FirstFit), None);
+        assert!(c.find_node(&demand(1.0, 1.0, 0.0), Placement::FirstFit).is_some());
+    }
+
+    #[test]
+    fn invariants_catch_conservation() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(1));
+        c.bind(JobId(1), demand(4.0, 4.0, 1.0), NodeId(0));
+        c.check_invariants().unwrap();
+        // Forcibly corrupt.
+        c.nodes[0].free.cpu += 5.0;
+        assert!(c.check_invariants().is_err());
+    }
+
+    #[test]
+    fn heterogeneous_capacities() {
+        let spec = ClusterSpec {
+            nodes: vec![ResourceVec::new(8.0, 64.0, 0.0), ResourceVec::new(32.0, 256.0, 8.0)],
+        };
+        let c = Cluster::new(&spec);
+        // A GPU job can only land on node 1.
+        assert_eq!(
+            c.find_node(&demand(1.0, 1.0, 1.0), Placement::FirstFit),
+            Some(NodeId(1))
+        );
+    }
+}

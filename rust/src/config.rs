@@ -1,0 +1,278 @@
+//! Experiment configuration: JSON-backed config files for the `fitgpp`
+//! binary and examples, so runs are declarative and reproducible.
+//!
+//! ```json
+//! {
+//!   "cluster": {"nodes": 84, "cpu": 32, "ram_gb": 256, "gpu": 8},
+//!   "policy": "fitgpp:s=4,p=1",
+//!   "placement": "best-fit",
+//!   "workload": {
+//!     "kind": "synthetic", "jobs": 65536, "te_fraction": 0.3,
+//!     "target_load": 2.0, "gp_scale": 1.0, "seed": 7
+//!   }
+//! }
+//! ```
+
+use crate::cluster::{ClusterSpec, Placement};
+use crate::resources::ResourceVec;
+use crate::sched::policy::PolicyKind;
+use crate::sim::SimConfig;
+use crate::util::json::Json;
+use crate::workload::{synthetic::SyntheticWorkload, trace::Trace, Workload};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Workload source in a config file.
+#[derive(Debug, Clone)]
+pub enum WorkloadConfig {
+    Synthetic {
+        jobs: usize,
+        te_fraction: f64,
+        target_load: f64,
+        gp_scale: f64,
+        seed: u64,
+    },
+    /// The synthesized institution trace (§4.4 stand-in).
+    Institution { jobs: usize, seed: u64 },
+    /// Replay a CSV trace file.
+    TraceFile { path: String },
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterSpec,
+    pub policy: PolicyKind,
+    pub placement: Placement,
+    pub progress_during_grace: bool,
+    pub seed: u64,
+    pub workload: WorkloadConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            cluster: ClusterSpec::pfn(),
+            policy: PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+            placement: Placement::BestFit,
+            progress_during_grace: false,
+            seed: 7,
+            workload: WorkloadConfig::Synthetic {
+                jobs: 1 << 16,
+                te_fraction: 0.3,
+                target_load: 2.0,
+                gp_scale: 1.0,
+                seed: 7,
+            },
+        }
+    }
+}
+
+fn parse_placement(s: &str) -> Result<Placement> {
+    Ok(match s {
+        "first-fit" => Placement::FirstFit,
+        "best-fit" => Placement::BestFit,
+        "worst-fit" => Placement::WorstFit,
+        other => bail!("unknown placement {other:?}"),
+    })
+}
+
+fn placement_name(p: Placement) -> &'static str {
+    match p {
+        Placement::FirstFit => "first-fit",
+        Placement::BestFit => "best-fit",
+        Placement::WorstFit => "worst-fit",
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from JSON text. Missing fields take defaults.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing experiment config")?;
+        let mut cfg = ExperimentConfig::default();
+
+        let c = v.get("cluster");
+        if !matches!(c, Json::Null) {
+            let nodes = c.get("nodes").as_u64().unwrap_or(84) as usize;
+            let cap = ResourceVec::new(
+                c.get("cpu").as_f64().unwrap_or(32.0),
+                c.get("ram_gb").as_f64().unwrap_or(256.0),
+                c.get("gpu").as_f64().unwrap_or(8.0),
+            );
+            cfg.cluster = ClusterSpec::homogeneous(nodes, cap);
+        }
+        if let Some(p) = v.get("policy").as_str() {
+            cfg.policy = PolicyKind::parse(p).with_context(|| format!("bad policy {p:?}"))?;
+        }
+        if let Some(p) = v.get("placement").as_str() {
+            cfg.placement = parse_placement(p)?;
+        }
+        if let Some(b) = v.get("progress_during_grace").as_bool() {
+            cfg.progress_during_grace = b;
+        }
+        if let Some(s) = v.get("seed").as_u64() {
+            cfg.seed = s;
+        }
+
+        let w = v.get("workload");
+        if !matches!(w, Json::Null) {
+            let kind = w.get("kind").as_str().unwrap_or("synthetic");
+            cfg.workload = match kind {
+                "synthetic" => WorkloadConfig::Synthetic {
+                    jobs: w.get("jobs").as_u64().unwrap_or(1 << 16) as usize,
+                    te_fraction: w.get("te_fraction").as_f64().unwrap_or(0.3),
+                    target_load: w.get("target_load").as_f64().unwrap_or(2.0),
+                    gp_scale: w.get("gp_scale").as_f64().unwrap_or(1.0),
+                    seed: w.get("seed").as_u64().unwrap_or(7),
+                },
+                "institution" => WorkloadConfig::Institution {
+                    jobs: w.get("jobs").as_u64().unwrap_or(50_000) as usize,
+                    seed: w.get("seed").as_u64().unwrap_or(7),
+                },
+                "trace" => WorkloadConfig::TraceFile {
+                    path: w
+                        .get("path")
+                        .as_str()
+                        .context("trace workload needs \"path\"")?
+                        .to_string(),
+                },
+                other => bail!("unknown workload kind {other:?}"),
+            };
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    /// Serialize (for `fitgpp config --dump`).
+    pub fn to_json(&self) -> Json {
+        let cap = self.cluster.nodes.first().copied().unwrap_or(ResourceVec::pfn_node());
+        let workload = match &self.workload {
+            WorkloadConfig::Synthetic { jobs, te_fraction, target_load, gp_scale, seed } => Json::obj(vec![
+                ("kind", Json::str("synthetic")),
+                ("jobs", Json::num(*jobs as f64)),
+                ("te_fraction", Json::num(*te_fraction)),
+                ("target_load", Json::num(*target_load)),
+                ("gp_scale", Json::num(*gp_scale)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
+            WorkloadConfig::Institution { jobs, seed } => Json::obj(vec![
+                ("kind", Json::str("institution")),
+                ("jobs", Json::num(*jobs as f64)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
+            WorkloadConfig::TraceFile { path } => Json::obj(vec![
+                ("kind", Json::str("trace")),
+                ("path", Json::str(path)),
+            ]),
+        };
+        Json::obj(vec![
+            (
+                "cluster",
+                Json::obj(vec![
+                    ("nodes", Json::num(self.cluster.nodes.len() as f64)),
+                    ("cpu", Json::num(cap.cpu)),
+                    ("ram_gb", Json::num(cap.ram_gb)),
+                    ("gpu", Json::num(cap.gpu)),
+                ]),
+            ),
+            ("policy", Json::str(&self.policy.name().to_lowercase().replace("(s=", ":s=").replace(",p=", ",p=").replace(')', ""))),
+            ("placement", Json::str(placement_name(self.placement))),
+            ("progress_during_grace", Json::Bool(self.progress_during_grace)),
+            ("seed", Json::num(self.seed as f64)),
+            ("workload", workload),
+        ])
+    }
+
+    /// Materialize the workload described by this config.
+    pub fn build_workload(&self) -> Result<Workload> {
+        Ok(match &self.workload {
+            WorkloadConfig::Synthetic { jobs, te_fraction, target_load, gp_scale, seed } => {
+                SyntheticWorkload::paper_section_4_2(*seed)
+                    .with_cluster(self.cluster.clone())
+                    .with_num_jobs(*jobs)
+                    .with_te_fraction(*te_fraction)
+                    .with_target_load(*target_load)
+                    .with_gp_scale(*gp_scale)
+                    .generate()
+            }
+            WorkloadConfig::Institution { jobs, seed } => Trace::synthesize_institution(*seed, *jobs),
+            WorkloadConfig::TraceFile { path } => Trace::read_csv(Path::new(path))?,
+        })
+    }
+
+    /// Materialize the simulator config.
+    pub fn sim_config(&self) -> SimConfig {
+        let mut c = SimConfig::new(self.cluster.clone(), self.policy);
+        c.placement = self.placement;
+        c.progress_during_grace = self.progress_during_grace;
+        c.seed = self.seed;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{
+                "cluster": {"nodes": 4, "cpu": 16, "ram_gb": 64, "gpu": 4},
+                "policy": "lrtp",
+                "placement": "first-fit",
+                "seed": 11,
+                "workload": {"kind": "synthetic", "jobs": 128, "te_fraction": 0.5}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.nodes.len(), 4);
+        assert_eq!(cfg.policy, PolicyKind::Lrtp);
+        assert_eq!(cfg.placement, Placement::FirstFit);
+        match cfg.workload {
+            WorkloadConfig::Synthetic { jobs, te_fraction, .. } => {
+                assert_eq!(jobs, 128);
+                assert_eq!(te_fraction, 0.5);
+            }
+            _ => panic!("wrong workload kind"),
+        }
+    }
+
+    #[test]
+    fn defaults_fill_gaps() {
+        let cfg = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.cluster.nodes.len(), 84);
+        assert!(matches!(cfg.policy, PolicyKind::FitGpp { .. }));
+    }
+
+    #[test]
+    fn rejects_bad_policy_and_kind() {
+        assert!(ExperimentConfig::from_json(r#"{"policy": "wat"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"workload": {"kind": "wat"}}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"placement": "wat"}"#).is_err());
+    }
+
+    #[test]
+    fn builds_small_synthetic_workload() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"cluster": {"nodes": 2}, "workload": {"kind": "synthetic", "jobs": 64}}"#,
+        )
+        .unwrap();
+        let wl = cfg.build_workload().unwrap();
+        assert_eq!(wl.len(), 64);
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let cfg = ExperimentConfig::default();
+        let j = cfg.to_json().to_pretty();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.cluster.nodes.len(), cfg.cluster.nodes.len());
+        assert_eq!(back.policy, cfg.policy);
+    }
+}

@@ -1,0 +1,305 @@
+//! Job model: TE/BE classes, demands, grace periods, and the lifecycle
+//! state machine (§2 of the paper).
+//!
+//! Users declare, per job: the class (`TE` or `BE`), the demand vector, and
+//! — because suspension processing (checkpointing) takes time — a *grace
+//! period* (GP). The scheduler may suspend BE jobs; a suspended job is
+//! re-queued at the *top* of the FIFO queue and later resumed with its
+//! completed work intact. TE jobs are never preempted.
+
+use crate::resources::ResourceVec;
+use crate::Minutes;
+use std::fmt;
+
+/// Opaque job identifier (dense, assigned by the workload generator in
+/// submission order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u32);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// The paper's two job classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobClass {
+    /// Trial-and-error: small, interactive, latency-sensitive. The scheduler
+    /// may preempt BE jobs to start a TE job immediately.
+    Te,
+    /// Best-effort: throughput-oriented; preemptible up to `P` times.
+    Be,
+}
+
+impl JobClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobClass::Te => "TE",
+            JobClass::Be => "BE",
+        }
+    }
+}
+
+impl fmt::Display for JobClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Immutable submission-time description of a job — everything the
+/// scheduler is allowed to know (FitGpp deliberately does *not* get the
+/// execution time; the LRTP baseline receives it as an oracle).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub class: JobClass,
+    /// Demand vector `[C, R, G]`.
+    pub demand: ResourceVec,
+    /// Submission time (minutes since simulation start).
+    pub submit: Minutes,
+    /// Total execution time needed (minutes of actual progress).
+    pub exec_time: Minutes,
+    /// User-declared grace period: how long the job needs to checkpoint
+    /// before vacating. Zero means "rewind is fine" (§2).
+    pub grace_period: Minutes,
+}
+
+impl JobSpec {
+    /// Builder-style constructor for tests and examples.
+    pub fn new(id: u32, class: JobClass, demand: ResourceVec, submit: Minutes, exec_time: Minutes, grace_period: Minutes) -> Self {
+        JobSpec { id: JobId(id), class, demand, submit, exec_time: exec_time.max(1), grace_period }
+    }
+}
+
+/// Lifecycle states. Transitions (enforced by `Job` methods):
+///
+/// ```text
+/// Pending ──start──▶ Running ──preempt──▶ Draining ──vacate──▶ Pending(top)
+///    ▲                  │                     │
+///    └──────────────────┴──────complete───────┘   (Draining jobs complete
+///  Running ──complete──▶ Done                      too if their remaining
+///                                                  work hits 0 first)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// In the queue (either never started, or suspended and re-queued).
+    Pending,
+    /// Occupying resources on a node and making progress.
+    Running,
+    /// Signalled for preemption; still occupying resources for the grace
+    /// period while it checkpoints. Makes **no** progress on its own work
+    /// (suspension processing is pure overhead — conservative reading of §2).
+    Draining,
+    /// Finished.
+    Done,
+}
+
+/// A job's full runtime record. The simulator owns one `Job` per `JobSpec`;
+/// scheduling policies see `&Job` views.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Remaining execution time (minutes). `spec.exec_time` at submission;
+    /// preserved across suspend/resume (no rewind).
+    pub remaining: Minutes,
+    /// Remaining grace period while `Draining`.
+    pub grace_left: Minutes,
+    /// Node currently hosting the job (`Running` or `Draining`).
+    pub node: Option<crate::cluster::NodeId>,
+    /// How many times this job has been preempted (the paper's
+    /// `PreemptionCount_j`, capped by the policy parameter `P`).
+    pub preemptions: u32,
+    /// Cumulative minutes spent waiting in the queue (drives Eq. 5).
+    pub waiting: Minutes,
+    /// Tick at which the job most recently vacated a node due to preemption
+    /// (start of a re-scheduling interval, Table 2).
+    pub last_vacated: Option<Minutes>,
+    /// Completed re-scheduling intervals (vacate → restart), Table 2.
+    pub resched_intervals: Vec<Minutes>,
+    /// First time the job started running (for time-to-first-schedule).
+    pub first_start: Option<Minutes>,
+    /// Completion time.
+    pub finished_at: Option<Minutes>,
+}
+
+impl Job {
+    pub fn new(spec: JobSpec) -> Self {
+        let remaining = spec.exec_time;
+        Job {
+            spec,
+            state: JobState::Pending,
+            remaining,
+            grace_left: 0,
+            node: None,
+            preemptions: 0,
+            waiting: 0,
+            last_vacated: None,
+            resched_intervals: Vec::new(),
+            first_start: None,
+            finished_at: None,
+        }
+    }
+
+    pub fn id(&self) -> JobId {
+        self.spec.id
+    }
+
+    pub fn is_te(&self) -> bool {
+        self.spec.class == JobClass::Te
+    }
+
+    pub fn is_be(&self) -> bool {
+        self.spec.class == JobClass::Be
+    }
+
+    /// Transition Pending → Running on `node` at time `now`.
+    pub fn start(&mut self, node: crate::cluster::NodeId, now: Minutes) {
+        debug_assert_eq!(self.state, JobState::Pending, "{} start from {:?}", self.id(), self.state);
+        self.state = JobState::Running;
+        self.node = Some(node);
+        if self.first_start.is_none() {
+            self.first_start = Some(now);
+        }
+        if let Some(v) = self.last_vacated.take() {
+            self.resched_intervals.push(now.saturating_sub(v));
+        }
+    }
+
+    /// Transition Running → Draining: the preemption signal. The job keeps
+    /// its resources for `grace_period` minutes (possibly 0 ⇒ it vacates on
+    /// the same tick's GP-expiry pass).
+    pub fn signal_preemption(&mut self) {
+        debug_assert_eq!(self.state, JobState::Running, "{} preempt from {:?}", self.id(), self.state);
+        debug_assert!(self.is_be(), "TE jobs are never preempted");
+        self.state = JobState::Draining;
+        self.grace_left = self.spec.grace_period;
+    }
+
+    /// Transition Draining → Pending: the grace period elapsed and the job
+    /// vacated its node. Returns to the *top* of the queue (caller's job).
+    pub fn vacate(&mut self, now: Minutes) {
+        debug_assert_eq!(self.state, JobState::Draining);
+        self.state = JobState::Pending;
+        self.node = None;
+        self.grace_left = 0;
+        self.preemptions += 1;
+        self.last_vacated = Some(now);
+    }
+
+    /// Transition Running/Draining → Done.
+    pub fn complete(&mut self, now: Minutes) {
+        debug_assert!(matches!(self.state, JobState::Running | JobState::Draining));
+        self.state = JobState::Done;
+        self.node = None;
+        self.finished_at = Some(now);
+    }
+
+    /// Eq. 5: `slowdown = 1 + WaitingTime / ExecutionTime`.
+    ///
+    /// We take `WaitingTime = FlowTime - ExecutionTime` (every non-progress
+    /// minute: queueing *and* grace-period limbo), which makes Eq. 5 the
+    /// classic `slowdown = FlowTime / ExecutionTime`. For a never-preempted
+    /// job this is exactly `1 + queue-wait / exec`. For a job still
+    /// unfinished when the simulation is cut off, the accrued queue wait is
+    /// used as a lower bound (the default simulations drain the backlog, so
+    /// this only applies to custom horizons).
+    pub fn slowdown(&self) -> f64 {
+        match self.finished_at {
+            Some(fin) => (fin - self.spec.submit) as f64 / self.spec.exec_time as f64,
+            None => 1.0 + self.waiting as f64 / self.spec.exec_time as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+
+    fn spec(class: JobClass) -> JobSpec {
+        JobSpec::new(1, class, ResourceVec::new(4.0, 32.0, 1.0), 0, 30, 3)
+    }
+
+    #[test]
+    fn fresh_job_is_pending_with_full_remaining() {
+        let j = Job::new(spec(JobClass::Be));
+        assert_eq!(j.state, JobState::Pending);
+        assert_eq!(j.remaining, 30);
+        assert_eq!(j.preemptions, 0);
+        assert_eq!(j.slowdown(), 1.0);
+    }
+
+    #[test]
+    fn exec_time_clamped_to_one_minute() {
+        let s = JobSpec::new(1, JobClass::Te, ResourceVec::ZERO, 0, 0, 0);
+        assert_eq!(s.exec_time, 1);
+    }
+
+    #[test]
+    fn start_records_first_start_once() {
+        let mut j = Job::new(spec(JobClass::Be));
+        j.start(NodeId(0), 5);
+        assert_eq!(j.first_start, Some(5));
+        assert_eq!(j.state, JobState::Running);
+        j.signal_preemption();
+        j.vacate(10);
+        j.start(NodeId(1), 12);
+        assert_eq!(j.first_start, Some(5), "first_start must not move");
+    }
+
+    #[test]
+    fn preemption_cycle_updates_count_and_interval() {
+        let mut j = Job::new(spec(JobClass::Be));
+        j.start(NodeId(0), 0);
+        j.signal_preemption();
+        assert_eq!(j.state, JobState::Draining);
+        assert_eq!(j.grace_left, 3);
+        j.vacate(4);
+        assert_eq!(j.state, JobState::Pending);
+        assert_eq!(j.preemptions, 1);
+        assert!(j.node.is_none());
+        j.start(NodeId(2), 9);
+        assert_eq!(j.resched_intervals, vec![5]);
+    }
+
+    #[test]
+    fn slowdown_eq5_unfinished_uses_accrued_wait() {
+        let mut j = Job::new(spec(JobClass::Te));
+        j.waiting = 15; // waited half its 30-minute runtime so far
+        assert!((j.slowdown() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowdown_eq5_finished_is_flow_over_exec() {
+        let mut j = Job::new(spec(JobClass::Te)); // submit=0, exec=30
+        j.start(NodeId(0), 15);
+        j.complete(45); // flow = 45, exec = 30 ⇒ slowdown = 1.5 = 1 + 15/30
+        assert!((j.slowdown() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complete_from_running_and_draining() {
+        let mut a = Job::new(spec(JobClass::Be));
+        a.start(NodeId(0), 0);
+        a.complete(30);
+        assert_eq!(a.state, JobState::Done);
+        assert_eq!(a.finished_at, Some(30));
+
+        let mut b = Job::new(spec(JobClass::Be));
+        b.start(NodeId(0), 0);
+        b.signal_preemption();
+        b.complete(3); // finished while draining
+        assert_eq!(b.state, JobState::Done);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn te_jobs_cannot_be_preempted() {
+        let mut j = Job::new(spec(JobClass::Te));
+        j.start(NodeId(0), 0);
+        j.signal_preemption();
+    }
+}

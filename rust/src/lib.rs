@@ -1,0 +1,65 @@
+//! # fitgpp — low-latency job scheduling with preemption for DL clusters
+//!
+//! A reproduction of *"Low-latency job scheduling with preemption for the
+//! development of deep learning"* (Yabuuchi, Taniwaki, Omura; 2019) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a FIFO cluster
+//!   scheduler with the *FitGpp* preemption policy, plus the full evaluation
+//!   substrate (discrete-time simulator, synthetic/trace workloads, metrics)
+//!   and a *live* mode in which scheduled jobs execute real transformer
+//!   training steps through PJRT.
+//! * **Layer 2** — `python/compile/model.py`: a JAX transformer-LM train
+//!   step, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (fused causal
+//!   attention, fused layernorm) called from the L2 graph.
+//!
+//! Python never runs on the request path; the rust binary is self-contained
+//! once `make artifacts` has produced the HLO artifacts.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use fitgpp::prelude::*;
+//!
+//! let spec = ClusterSpec::pfn();                    // 84 nodes, 32C/256G/8GPU
+//! let wl = SyntheticWorkload::paper_section_4_2(7). // §4.2 distributions
+//!     with_num_jobs(4096).generate();
+//! let cfg = SimConfig::new(spec, PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+//! let result = Simulator::new(cfg).run(&wl);
+//! println!("{}", result.summary_table());
+//! ```
+
+pub mod benchkit;
+pub mod cluster;
+pub mod config;
+pub mod job;
+pub mod live;
+pub mod metrics;
+pub mod queue;
+pub mod resources;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports covering the common public API surface.
+pub mod prelude {
+    pub use crate::cluster::{Cluster, ClusterSpec, NodeId};
+    pub use crate::job::{Job, JobClass, JobId, JobSpec, JobState};
+    pub use crate::metrics::{Percentiles, SlowdownReport};
+    pub use crate::resources::ResourceVec;
+    pub use crate::sched::policy::PolicyKind;
+    pub use crate::sim::{SimConfig, SimResult, Simulator};
+    pub use crate::stats::rng::Pcg64;
+    pub use crate::workload::{
+        synthetic::SyntheticWorkload, trace::Trace, Workload,
+    };
+}
+
+/// Crate-wide time type: simulated minutes since epoch (the paper's
+/// scheduler "decides resource allocation at every simulated minute").
+pub type Minutes = u64;

@@ -1,0 +1,261 @@
+//! `fitgpp` — the leader binary: run simulations, generate workloads,
+//! replay traces, and drive the live cluster.
+//!
+//! ```text
+//! fitgpp simulate --policy fitgpp:s=4,p=1 --jobs 8192
+//! fitgpp compare  --jobs 8192                      # all policies, Table-1 style
+//! fitgpp generate --jobs 4096 --out trace.csv
+//! fitgpp replay   --trace trace.csv --policy lrtp
+//! fitgpp live     --policy fitgpp:s=4,p=1 --jobs 12
+//! fitgpp config   --dump                           # print default config JSON
+//! ```
+
+use anyhow::{bail, Context, Result};
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::config::ExperimentConfig;
+use fitgpp::live::{LiveCluster, LiveConfig};
+use fitgpp::metrics::slowdown_table;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::util::cli::Cli;
+use fitgpp::workload::{synthetic::SyntheticWorkload, trace::Trace, Workload};
+use std::path::Path;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().collect();
+    let sub = if argv.len() > 1 && !argv[1].starts_with('-') {
+        argv.remove(1)
+    } else {
+        "help".to_string()
+    };
+    match sub.as_str() {
+        "simulate" => simulate(argv),
+        "compare" => compare(argv),
+        "generate" => generate(argv),
+        "replay" => replay(argv),
+        "live" => live(argv),
+        "config" => config_cmd(argv),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "fitgpp — low-latency job scheduling with preemption (FitGpp)\n\n\
+         SUBCOMMANDS:\n\
+         \x20 simulate   run one policy on a synthetic workload\n\
+         \x20 compare    run FIFO/LRTP/RAND/FitGpp and print the Table-1 layout\n\
+         \x20 generate   write a synthetic workload as a CSV trace\n\
+         \x20 replay     replay a CSV trace under a policy\n\
+         \x20 live       drive real PJRT training jobs under the scheduler\n\
+         \x20 config     print the default experiment config JSON\n\n\
+         Run `fitgpp <subcommand> --help` for options."
+    );
+}
+
+fn common_cli(name: &'static str, about: &'static str) -> Cli {
+    Cli::new(name, about)
+        .opt("policy", Some("fitgpp:s=4,p=1"), "fifo | fastlane | lrtp | rand | fitgpp:s=<f>,p=<n|inf>")
+        .opt("jobs", Some("8192"), "number of jobs to generate")
+        .opt("nodes", Some("84"), "number of cluster nodes")
+        .opt("te-fraction", Some("0.3"), "fraction of TE jobs")
+        .opt("load", Some("2.0"), "target FIFO cluster load (arrival calibration)")
+        .opt("gp-scale", Some("1.0"), "grace-period distribution scale (Fig. 7)")
+        .opt("seed", Some("7"), "workload seed")
+        .opt("config", None, "JSON experiment config file (overrides other flags)")
+        .opt("json-out", None, "write machine-readable results to this path")
+}
+
+fn parse_policy(s: &str) -> Result<PolicyKind> {
+    PolicyKind::parse(s).with_context(|| format!("bad --policy {s:?}"))
+}
+
+fn build(args: &fitgpp::util::cli::Args) -> Result<(ExperimentConfig, Workload)> {
+    if let Some(path) = args.get("config") {
+        let cfg = ExperimentConfig::from_file(Path::new(path))?;
+        let wl = cfg.build_workload()?;
+        return Ok((cfg, wl));
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster = ClusterSpec::homogeneous(
+        args.get_usize("nodes", 84),
+        fitgpp::resources::ResourceVec::pfn_node(),
+    );
+    cfg.policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
+    let wl = SyntheticWorkload::paper_section_4_2(args.get_u64("seed", 7))
+        .with_cluster(cfg.cluster.clone())
+        .with_num_jobs(args.get_usize("jobs", 8192))
+        .with_te_fraction(args.get_f64("te-fraction", 0.3))
+        .with_target_load(args.get_f64("load", 2.0))
+        .with_gp_scale(args.get_f64("gp-scale", 1.0))
+        .generate();
+    Ok((cfg, wl))
+}
+
+fn simulate(argv: Vec<String>) -> Result<()> {
+    let cli = common_cli("fitgpp simulate", "run one policy on a synthetic workload");
+    let args = parse_or_exit(&cli, argv);
+    let (cfg, wl) = build(&args)?;
+    eprintln!(
+        "workload: {} jobs ({:.1}% TE), span {} min; policy {}",
+        wl.len(),
+        wl.te_fraction() * 100.0,
+        wl.submit_span(),
+        cfg.policy.name()
+    );
+    let res = Simulator::new(cfg.sim_config()).run(&wl);
+    println!("{}", res.summary_table());
+    println!(
+        "preempted jobs: {:.3}% | preemption signals: {} | makespan {} min",
+        res.preempted_fraction() * 100.0,
+        res.sched_stats.preemption_signals,
+        res.makespan
+    );
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, res.to_json().to_pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn compare(argv: Vec<String>) -> Result<()> {
+    let cli = common_cli("fitgpp compare", "run all four §4 policies and print Table 1");
+    let args = parse_or_exit(&cli, argv);
+    let (cfg, wl) = build(&args)?;
+    let policies = [
+        PolicyKind::Fifo,
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?,
+    ];
+    let mut rows = Vec::new();
+    for p in policies {
+        let mut sim_cfg = cfg.sim_config();
+        sim_cfg.policy = p;
+        let res = Simulator::new(sim_cfg).run(&wl);
+        eprintln!("{} done: makespan {} min", p.name(), res.makespan);
+        rows.push((p.name(), res.slowdown_report()));
+    }
+    let named: Vec<(&str, _)> = rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
+    println!(
+        "{}",
+        slowdown_table("Percentiles of slowdown rates (cf. paper Table 1)", &named).to_text()
+    );
+    Ok(())
+}
+
+fn generate(argv: Vec<String>) -> Result<()> {
+    let cli = common_cli("fitgpp generate", "write a synthetic workload as CSV")
+        .opt("out", Some("workload.csv"), "output CSV path")
+        .flag("institution", "synthesize the §4.4 institution trace instead");
+    let args = parse_or_exit(&cli, argv);
+    let wl = if args.has("institution") {
+        Trace::synthesize_institution(args.get_u64("seed", 7), args.get_usize("jobs", 8192))
+    } else {
+        build(&args)?.1
+    };
+    let out = args.get_string("out", "workload.csv");
+    Trace::write_csv(&wl, Path::new(&out))?;
+    println!("wrote {} jobs to {out}", wl.len());
+    Ok(())
+}
+
+fn replay(argv: Vec<String>) -> Result<()> {
+    let cli = common_cli("fitgpp replay", "replay a CSV trace under a policy")
+        .opt("trace", None, "input CSV trace path (required)");
+    let args = parse_or_exit(&cli, argv);
+    let path = args.get("trace").context("--trace is required")?;
+    let wl = Trace::read_csv(Path::new(path))?;
+    let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
+    let nodes = args.get_usize("nodes", 84);
+    let cfg = SimConfig::new(
+        ClusterSpec::homogeneous(nodes, fitgpp::resources::ResourceVec::pfn_node()),
+        policy,
+    );
+    let res = Simulator::new(cfg).run(&wl);
+    println!("{}", res.summary_table());
+    if let Some(p) = args.get("json-out") {
+        std::fs::write(p, res.to_json().to_pretty())?;
+    }
+    Ok(())
+}
+
+fn live(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("fitgpp live", "drive real PJRT training jobs under the scheduler")
+        .opt("policy", Some("fitgpp:s=4,p=1"), "scheduling policy")
+        .opt("jobs", Some("10"), "number of live jobs")
+        .opt("tick-ms", Some("150"), "wall milliseconds per simulated minute")
+        .opt("seed", Some("7"), "seed")
+        .opt("json-out", None, "write the live report JSON here");
+    let args = parse_or_exit(&cli, argv);
+    let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
+    let mut cfg = LiveConfig::demo(policy);
+    cfg.tick_ms = args.get_u64("tick-ms", 150);
+    cfg.seed = args.get_u64("seed", 7);
+    let wl = fitgpp::live::demo_workload(args.get_usize("jobs", 10), cfg.seed);
+    let cluster = LiveCluster::new(cfg)?;
+    let report = cluster.run(&wl)?;
+    println!(
+        "live run: {} ticks in {:.1}s, {} total train steps",
+        report.ticks,
+        report.wall.as_secs_f64(),
+        report.total_steps
+    );
+    for r in &report.records {
+        let drop = report.loss_drop(r.id);
+        println!(
+            "  {} [{}] slowdown {:.2} preemptions {} loss {}",
+            r.id,
+            r.class.as_str(),
+            r.slowdown,
+            r.preemptions,
+            match drop {
+                Some((a, b)) => format!("{a:.3} → {b:.3}"),
+                None => "n/a".to_string(),
+            }
+        );
+    }
+    if let Some(p) = args.get("json-out") {
+        std::fs::write(p, report.to_json().to_pretty())?;
+    }
+    Ok(())
+}
+
+fn config_cmd(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("fitgpp config", "print the default experiment config")
+        .flag("dump", "print default config JSON");
+    let _ = parse_or_exit(&cli, argv);
+    println!("{}", ExperimentConfig::default().to_json().to_pretty());
+    Ok(())
+}
+
+/// Parse args; print help and exit on `-h`; print error + help and exit 2
+/// on bad flags.
+fn parse_or_exit(cli: &Cli, argv: Vec<String>) -> fitgpp::util::cli::Args {
+    match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(fitgpp::util::cli::CliError::Help) => {
+            print!("{}", cli.help_text());
+            std::process::exit(0);
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{}", cli.help_text());
+            std::process::exit(2);
+        }
+    }
+}

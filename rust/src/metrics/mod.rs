@@ -1,0 +1,191 @@
+//! Evaluation metrics: slowdown-rate percentiles (Tables 1 & 5),
+//! re-scheduling intervals (Table 2), and preemption statistics
+//! (Tables 3 & 4).
+
+use crate::job::JobClass;
+use crate::sim::SimResult;
+use crate::stats::summary::percentiles;
+use crate::util::json::Json;
+use crate::util::table::{sig3, Table};
+
+/// 50th/95th/99th percentiles — the triple every slowdown table reports.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    pub fn of(xs: &[f64]) -> Percentiles {
+        if xs.is_empty() {
+            return Percentiles { p50: f64::NAN, p95: f64::NAN, p99: f64::NAN };
+        }
+        let v = percentiles(xs, &[50.0, 95.0, 99.0]);
+        Percentiles { p50: v[0], p95: v[1], p99: v[2] }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("p50", Json::num(self.p50)),
+            ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
+        ])
+    }
+}
+
+/// Slowdown-rate percentiles for TE and BE jobs (Table 1 / Table 5 row).
+#[derive(Debug, Clone, Copy)]
+pub struct SlowdownReport {
+    pub te: Percentiles,
+    pub be: Percentiles,
+}
+
+impl SlowdownReport {
+    pub fn from_result(res: &SimResult) -> Self {
+        SlowdownReport {
+            te: Percentiles::of(&res.slowdowns(JobClass::Te)),
+            be: Percentiles::of(&res.slowdowns(JobClass::Be)),
+        }
+    }
+}
+
+/// Re-scheduling interval percentiles in minutes (Table 2 row).
+#[derive(Debug, Clone, Copy)]
+pub struct IntervalsReport {
+    pub p50: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub count: usize,
+}
+
+impl IntervalsReport {
+    pub fn from_result(res: &SimResult) -> Self {
+        let iv = res.resched_intervals();
+        if iv.is_empty() {
+            return IntervalsReport { p50: f64::NAN, p75: f64::NAN, p95: f64::NAN, p99: f64::NAN, count: 0 };
+        }
+        let v = percentiles(&iv, &[50.0, 75.0, 95.0, 99.0]);
+        IntervalsReport { p50: v[0], p75: v[1], p95: v[2], p99: v[3], count: iv.len() }
+    }
+}
+
+/// Preemption statistics (Tables 3 & 4 rows).
+#[derive(Debug, Clone, Copy)]
+pub struct PreemptionReport {
+    /// Fraction of all jobs preempted ≥ 1 time (Table 3).
+    pub fraction_preempted: f64,
+    /// Fractions preempted exactly 1 / exactly 2 / ≥ 3 times (Table 4).
+    pub hist: [f64; 3],
+}
+
+impl PreemptionReport {
+    pub fn from_result(res: &SimResult) -> Self {
+        PreemptionReport {
+            fraction_preempted: res.preempted_fraction(),
+            hist: res.preemption_histogram(),
+        }
+    }
+}
+
+/// Render the paper's Table-1 layout for a set of runs (one row per
+/// policy).
+pub fn slowdown_table(title: &str, rows: &[(&str, SlowdownReport)]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["policy", "TE 50th", "TE 95th", "TE 99th", "BE 50th", "BE 95th", "BE 99th"],
+    );
+    for (name, r) in rows {
+        t.row(vec![
+            name.to_string(),
+            sig3(r.te.p50),
+            sig3(r.te.p95),
+            sig3(r.te.p99),
+            sig3(r.be.p50),
+            sig3(r.be.p95),
+            sig3(r.be.p99),
+        ]);
+    }
+    t
+}
+
+/// Render the paper's Table-2 layout.
+pub fn intervals_table(title: &str, rows: &[(&str, IntervalsReport)]) -> Table {
+    let mut t = Table::new(title, &["policy", "50th", "75th", "95th", "99th", "n"]);
+    for (name, r) in rows {
+        t.row(vec![
+            name.to_string(),
+            sig3(r.p50),
+            sig3(r.p75),
+            sig3(r.p95),
+            sig3(r.p99),
+            r.count.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render the paper's Table-3 layout (percentage form, e.g. `6.3e-1%`).
+pub fn preempted_table(title: &str, rows: &[(&str, PreemptionReport)]) -> Table {
+    let mut t = Table::new(title, &["policy", "preempted jobs"]);
+    for (name, r) in rows {
+        t.row(vec![name.to_string(), format!("{}%", sig3(r.fraction_preempted * 100.0))]);
+    }
+    t
+}
+
+/// Render the paper's Table-4 layout.
+pub fn preempt_hist_table(title: &str, rows: &[(&str, PreemptionReport)]) -> Table {
+    let mut t = Table::new(title, &["policy", "1", "2", ">=3"]);
+    for (name, r) in rows {
+        t.row(vec![
+            name.to_string(),
+            format!("{}%", sig3(r.hist[0] * 100.0)),
+            format!("{}%", sig3(r.hist[1] * 100.0)),
+            format!("{}%", sig3(r.hist[2] * 100.0)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_data() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::of(&xs);
+        assert!((p.p50 - 50.5).abs() < 1e-9);
+        assert!((p.p95 - 95.05).abs() < 1e-9);
+        assert!((p.p99 - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_percentiles_are_nan() {
+        let p = Percentiles::of(&[]);
+        assert!(p.p50.is_nan());
+    }
+
+    #[test]
+    fn tables_render_rows() {
+        let r = SlowdownReport {
+            te: Percentiles { p50: 1.0, p95: 1.15, p99: 1.54 },
+            be: Percentiles { p50: 3.28, p95: 6.06, p99: 10.3 },
+        };
+        let t = slowdown_table("Table 1", &[("FitGpp (s=4.0)", r)]);
+        let text = t.to_text();
+        assert!(text.contains("FitGpp"));
+        assert!(text.contains("10.3"));
+    }
+
+    #[test]
+    fn preempted_table_uses_percent() {
+        let r = PreemptionReport { fraction_preempted: 0.0063, hist: [0.0052, 0.00038, 0.000098] };
+        let t = preempted_table("Table 3", &[("FitGpp", r)]);
+        assert!(t.to_text().contains("0.63%"));
+        let h = preempt_hist_table("Table 4", &[("FitGpp", r)]);
+        assert!(h.to_text().contains("0.52%"));
+    }
+}

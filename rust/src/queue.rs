@@ -1,0 +1,149 @@
+//! The FIFO job queue with the paper's re-insertion rule: *"Suspended BE
+//! jobs are placed back on the top of the job queue"* (§2).
+//!
+//! New arrivals append at the tail; preempted jobs push at the head. The
+//! scheduler only ever examines the head (FIFO admission — a blocked head
+//! blocks everything behind it; that head-of-line blocking is precisely the
+//! phenomenon FitGpp mitigates by preempting *small* BE jobs).
+
+use crate::job::JobId;
+use std::collections::VecDeque;
+
+/// FIFO queue over job ids. Thin wrapper so the re-insertion semantics are
+/// documented and testable in one place.
+#[derive(Debug, Clone, Default)]
+pub struct JobQueue {
+    q: VecDeque<JobId>,
+}
+
+impl JobQueue {
+    pub fn new() -> Self {
+        JobQueue { q: VecDeque::new() }
+    }
+
+    /// New submission: tail of the queue.
+    pub fn submit(&mut self, id: JobId) {
+        self.q.push_back(id);
+    }
+
+    /// Preempted job returning: *top* of the queue, ahead of everything —
+    /// including previously re-queued jobs (most recent preemption first;
+    /// within one tick the simulator vacates in deterministic job order, so
+    /// results are reproducible).
+    pub fn reinsert_front(&mut self, id: JobId) {
+        self.q.push_front(id);
+    }
+
+    /// Peek the head without removing it (FIFO admission examines only the
+    /// head).
+    pub fn head(&self) -> Option<JobId> {
+        self.q.front().copied()
+    }
+
+    /// Pop the head (after a successful placement).
+    pub fn pop_head(&mut self) -> Option<JobId> {
+        self.q.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Iterate in queue order (head first). Used by metrics/diagnostics, not
+    /// by admission.
+    pub fn iter(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.q.iter().copied()
+    }
+
+    /// Position of a job in the queue (0 = head), if queued.
+    pub fn position(&self, id: JobId) -> Option<usize> {
+        self.q.iter().position(|j| *j == id)
+    }
+
+    /// Remove a specific job (TE-lane admission is per-arrival: a TE job
+    /// whose reservation lands may start while an earlier TE job is still
+    /// waiting out a longer drain). Returns true if it was queued.
+    pub fn remove(&mut self, id: JobId) -> bool {
+        match self.position(id) {
+            Some(i) => {
+                self.q.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_for_submissions() {
+        let mut q = JobQueue::new();
+        for i in 0..5 {
+            q.submit(JobId(i));
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_head(), Some(JobId(i)));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn preempted_jobs_jump_the_queue() {
+        let mut q = JobQueue::new();
+        q.submit(JobId(1));
+        q.submit(JobId(2));
+        q.reinsert_front(JobId(99)); // preempted job
+        assert_eq!(q.head(), Some(JobId(99)));
+        assert_eq!(q.position(JobId(1)), Some(1));
+        assert_eq!(q.position(JobId(2)), Some(2));
+    }
+
+    #[test]
+    fn multiple_reinserts_are_lifo_among_themselves() {
+        let mut q = JobQueue::new();
+        q.submit(JobId(1));
+        q.reinsert_front(JobId(10));
+        q.reinsert_front(JobId(11));
+        assert_eq!(q.pop_head(), Some(JobId(11)));
+        assert_eq!(q.pop_head(), Some(JobId(10)));
+        assert_eq!(q.pop_head(), Some(JobId(1)));
+    }
+
+    #[test]
+    fn head_does_not_consume() {
+        let mut q = JobQueue::new();
+        q.submit(JobId(7));
+        assert_eq!(q.head(), Some(JobId(7)));
+        assert_eq!(q.head(), Some(JobId(7)));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn remove_by_id() {
+        let mut q = JobQueue::new();
+        q.submit(JobId(1));
+        q.submit(JobId(2));
+        q.submit(JobId(3));
+        assert!(q.remove(JobId(2)));
+        assert!(!q.remove(JobId(2)));
+        let order: Vec<u32> = q.iter().map(|j| j.0).collect();
+        assert_eq!(order, vec![1, 3]);
+    }
+
+    #[test]
+    fn iter_is_head_first() {
+        let mut q = JobQueue::new();
+        q.submit(JobId(1));
+        q.submit(JobId(2));
+        q.reinsert_front(JobId(0));
+        let order: Vec<u32> = q.iter().map(|j| j.0).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+}

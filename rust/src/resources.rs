@@ -1,0 +1,267 @@
+//! Resource vectors and the paper's scale-invariant `Size` measure (Eq. 1).
+//!
+//! The paper models three resource types — CPU cores, RAM, and GPUs — and
+//! notes that "the extension of our theory to other types of resource should
+//! be straightforward". We keep the three-axis vector as a fixed-size struct
+//! (hot path: the FitGpp victim scan calls `size()` and `fits()` for every
+//! running BE job on every preemption decision).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// A demand or capacity vector `[C, R, G]`: CPU cores, RAM in GiB, GPUs.
+///
+/// Stored as `f64` so fractional requests (e.g. millicores, half-GiB) work;
+/// the paper's workloads use integral values.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec {
+    /// CPU cores requested / available.
+    pub cpu: f64,
+    /// RAM in GiB.
+    pub ram_gb: f64,
+    /// Number of GPUs.
+    pub gpu: f64,
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec = ResourceVec { cpu: 0.0, ram_gb: 0.0, gpu: 0.0 };
+
+    pub fn new(cpu: f64, ram_gb: f64, gpu: f64) -> Self {
+        ResourceVec { cpu, ram_gb, gpu }
+    }
+
+    /// The per-node capacity used throughout the paper's evaluation:
+    /// 32 CPUs, 256 GB RAM, 8 GPUs.
+    pub fn pfn_node() -> Self {
+        ResourceVec::new(32.0, 256.0, 8.0)
+    }
+
+    /// Eq. 1: `Size([C,R,G]) = sqrt((C/C_cap)^2 + (R/R_cap)^2 + (G/G_cap)^2)`.
+    ///
+    /// Scale-invariant: measuring RAM in MB vs GB does not change the value
+    /// as long as `capacity` uses the same unit. Axes with zero capacity are
+    /// skipped (a cluster without GPUs simply drops the GPU term).
+    pub fn size(&self, capacity: &ResourceVec) -> f64 {
+        let mut acc = 0.0;
+        if capacity.cpu > 0.0 {
+            let t = self.cpu / capacity.cpu;
+            acc += t * t;
+        }
+        if capacity.ram_gb > 0.0 {
+            let t = self.ram_gb / capacity.ram_gb;
+            acc += t * t;
+        }
+        if capacity.gpu > 0.0 {
+            let t = self.gpu / capacity.gpu;
+            acc += t * t;
+        }
+        acc.sqrt()
+    }
+
+    /// Element-wise `self <= other` — the fit test (and Eq. 2's comparison).
+    pub fn fits_in(&self, other: &ResourceVec) -> bool {
+        self.cpu <= other.cpu + EPS
+            && self.ram_gb <= other.ram_gb + EPS
+            && self.gpu <= other.gpu + EPS
+    }
+
+    /// True if any component is negative (used by invariant checks).
+    pub fn any_negative(&self) -> bool {
+        self.cpu < -EPS || self.ram_gb < -EPS || self.gpu < -EPS
+    }
+
+    /// True if all components are zero (within tolerance).
+    pub fn is_zero(&self) -> bool {
+        self.cpu.abs() <= EPS && self.ram_gb.abs() <= EPS && self.gpu.abs() <= EPS
+    }
+
+    /// Element-wise max.
+    pub fn max(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec::new(
+            self.cpu.max(other.cpu),
+            self.ram_gb.max(other.ram_gb),
+            self.gpu.max(other.gpu),
+        )
+    }
+
+    /// Element-wise min.
+    pub fn min(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec::new(
+            self.cpu.min(other.cpu),
+            self.ram_gb.min(other.ram_gb),
+            self.gpu.min(other.gpu),
+        )
+    }
+
+    /// Saturating subtraction: clamps each component at zero. Used when
+    /// projecting hypothetical allocations.
+    pub fn saturating_sub(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec::new(
+            (self.cpu - other.cpu).max(0.0),
+            (self.ram_gb - other.ram_gb).max(0.0),
+            (self.gpu - other.gpu).max(0.0),
+        )
+    }
+
+    /// Scale every component by `k`.
+    pub fn scale(&self, k: f64) -> ResourceVec {
+        ResourceVec::new(self.cpu * k, self.ram_gb * k, self.gpu * k)
+    }
+
+    /// The ratio `self / capacity` on the most-loaded axis — used for the
+    /// cluster-load calibration in the workload generator (§4.2 keeps the
+    /// FIFO load at 2.0).
+    pub fn dominant_share(&self, capacity: &ResourceVec) -> f64 {
+        let mut m: f64 = 0.0;
+        if capacity.cpu > 0.0 {
+            m = m.max(self.cpu / capacity.cpu);
+        }
+        if capacity.ram_gb > 0.0 {
+            m = m.max(self.ram_gb / capacity.ram_gb);
+        }
+        if capacity.gpu > 0.0 {
+            m = m.max(self.gpu / capacity.gpu);
+        }
+        m
+    }
+}
+
+/// Comparison tolerance for f64 resource arithmetic (accumulated
+/// allocate/release round-off must never flip a fit decision).
+pub const EPS: f64 = 1e-9;
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, rhs: ResourceVec) -> ResourceVec {
+        ResourceVec::new(self.cpu + rhs.cpu, self.ram_gb + rhs.ram_gb, self.gpu + rhs.gpu)
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, rhs: ResourceVec) {
+        self.cpu += rhs.cpu;
+        self.ram_gb += rhs.ram_gb;
+        self.gpu += rhs.gpu;
+    }
+}
+
+impl Sub for ResourceVec {
+    type Output = ResourceVec;
+    fn sub(self, rhs: ResourceVec) -> ResourceVec {
+        ResourceVec::new(self.cpu - rhs.cpu, self.ram_gb - rhs.ram_gb, self.gpu - rhs.gpu)
+    }
+}
+
+impl SubAssign for ResourceVec {
+    fn sub_assign(&mut self, rhs: ResourceVec) {
+        self.cpu -= rhs.cpu;
+        self.ram_gb -= rhs.ram_gb;
+        self.gpu -= rhs.gpu;
+    }
+}
+
+impl fmt::Display for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}C, {}G, {}GPU]", self.cpu, self.ram_gb, self.gpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_of_full_node_is_sqrt3() {
+        let cap = ResourceVec::pfn_node();
+        let d = cap;
+        assert!((d.size(&cap) - 3f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn size_is_scale_invariant() {
+        // Same demand expressed in GB vs MB must yield the same Size as long
+        // as the capacity uses matching units (the paper's Eq. 1 remark).
+        let cap_gb = ResourceVec::new(32.0, 256.0, 8.0);
+        let d_gb = ResourceVec::new(4.0, 64.0, 2.0);
+        let cap_mb = ResourceVec::new(32.0, 256.0 * 1024.0, 8.0);
+        let d_mb = ResourceVec::new(4.0, 64.0 * 1024.0, 2.0);
+        assert!((d_gb.size(&cap_gb) - d_mb.size(&cap_mb)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn size_zero_capacity_axis_is_skipped() {
+        let cap = ResourceVec::new(32.0, 256.0, 0.0);
+        let d = ResourceVec::new(32.0, 0.0, 0.0);
+        assert!((d.size(&cap) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn size_monotone_in_each_axis() {
+        let cap = ResourceVec::pfn_node();
+        let base = ResourceVec::new(4.0, 32.0, 1.0);
+        for bigger in [
+            ResourceVec::new(5.0, 32.0, 1.0),
+            ResourceVec::new(4.0, 33.0, 1.0),
+            ResourceVec::new(4.0, 32.0, 2.0),
+        ] {
+            assert!(bigger.size(&cap) > base.size(&cap));
+        }
+    }
+
+    #[test]
+    fn fits_in_elementwise() {
+        let a = ResourceVec::new(4.0, 64.0, 2.0);
+        let b = ResourceVec::new(8.0, 64.0, 2.0);
+        assert!(a.fits_in(&b));
+        assert!(!b.fits_in(&a));
+        // One axis over ⇒ no fit even if others are under.
+        let c = ResourceVec::new(2.0, 128.0, 1.0);
+        assert!(!c.fits_in(&a));
+    }
+
+    #[test]
+    fn fits_in_tolerates_roundoff() {
+        let mut free = ResourceVec::new(32.0, 256.0, 8.0);
+        let d = ResourceVec::new(0.1, 0.3, 0.7);
+        for _ in 0..1000 {
+            free -= d;
+            free += d;
+        }
+        assert!(ResourceVec::new(32.0, 256.0, 8.0).fits_in(&free));
+    }
+
+    #[test]
+    fn arithmetic_roundtrip() {
+        let a = ResourceVec::new(4.0, 64.0, 2.0);
+        let b = ResourceVec::new(1.0, 16.0, 1.0);
+        assert_eq!(a + b - b, a);
+        let mut c = a;
+        c += b;
+        c -= b;
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn saturating_sub_clamps() {
+        let a = ResourceVec::new(1.0, 1.0, 1.0);
+        let b = ResourceVec::new(2.0, 0.5, 3.0);
+        let r = a.saturating_sub(&b);
+        assert_eq!(r, ResourceVec::new(0.0, 0.5, 0.0));
+        assert!(!r.any_negative());
+    }
+
+    #[test]
+    fn dominant_share() {
+        let cap = ResourceVec::pfn_node();
+        let d = ResourceVec::new(8.0, 32.0, 4.0); // 0.25, 0.125, 0.5
+        assert!((d.dominant_share(&cap) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_renders() {
+        assert_eq!(
+            ResourceVec::new(4.0, 64.0, 2.0).to_string(),
+            "[4C, 64G, 2GPU]"
+        );
+    }
+}

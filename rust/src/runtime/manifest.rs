@@ -1,0 +1,173 @@
+//! The artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`, tells the rust runtime what was lowered —
+//! model variants, parameter tensor order/shapes/dtypes, and input specs —
+//! so the two sides agree without sharing code.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor in the AOT calling convention.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `"f32"` or `"s32"` (all the artifacts use).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let name = v.get("name").as_str().context("tensor name")?.to_string();
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .context("tensor shape")?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize).context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v.get("dtype").as_str().unwrap_or("f32").to_string();
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One lowered model variant (e.g. `tiny`, `small`).
+#[derive(Debug, Clone)]
+pub struct ModelVariant {
+    pub name: String,
+    /// HLO-text file for the fused train step (params…, tokens) →
+    /// (params…, loss).
+    pub train_step: String,
+    /// Parameter tensors, in calling-convention order.
+    pub params: Vec<TensorSpec>,
+    /// Token input spec `[batch, seq]`, dtype s32.
+    pub tokens: TensorSpec,
+    /// Model hyper-parameters (vocab, d_model, n_layer, …).
+    pub config: BTreeMap<String, f64>,
+}
+
+impl ModelVariant {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, ModelVariant>,
+    /// Stand-alone probe artifact for runtime smoke tests:
+    /// `f(x, y) = (x·y + 2,)` over f32[2,2].
+    pub probe: Option<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let mut variants = BTreeMap::new();
+        let Some(models) = v.get("models").as_arr() else {
+            bail!("manifest missing \"models\"");
+        };
+        for m in models {
+            let name = m.get("name").as_str().context("model name")?.to_string();
+            let train_step = m
+                .get("train_step")
+                .as_str()
+                .context("train_step path")?
+                .to_string();
+            let params = m
+                .get("params")
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let tokens = TensorSpec::from_json(m.get("tokens")).context("tokens spec")?;
+            let mut config = BTreeMap::new();
+            if let Some(obj) = m.get("config").as_obj() {
+                for (k, val) in obj {
+                    if let Some(x) = val.as_f64() {
+                        config.insert(k.clone(), x);
+                    }
+                }
+            }
+            variants.insert(
+                name.clone(),
+                ModelVariant { name, train_step, params, tokens, config },
+            );
+        }
+        let probe = v.get("probe").as_str().map(|s| s.to_string());
+        Ok(Manifest { dir: dir.to_path_buf(), variants, probe })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&ModelVariant> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("no model variant {name:?} in manifest"))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "probe": "probe.hlo.txt",
+      "models": [{
+        "name": "tiny",
+        "train_step": "train_step_tiny.hlo.txt",
+        "tokens": {"name": "tokens", "shape": [8, 64], "dtype": "s32"},
+        "params": [
+          {"name": "wte", "shape": [256, 32], "dtype": "f32"},
+          {"name": "w1", "shape": [32, 128], "dtype": "f32"}
+        ],
+        "config": {"vocab": 256, "d_model": 32, "lr": 0.001}
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.probe.as_deref(), Some("probe.hlo.txt"));
+        let v = m.variant("tiny").unwrap();
+        assert_eq!(v.params.len(), 2);
+        assert_eq!(v.params[0].elements(), 256 * 32);
+        assert_eq!(v.param_count(), 256 * 32 + 32 * 128);
+        assert_eq!(v.tokens.shape, vec![8, 64]);
+        assert_eq!(v.config["vocab"], 256.0);
+        assert_eq!(
+            m.artifact_path(&v.train_step),
+            PathBuf::from("/tmp/artifacts/train_step_tiny.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_variant_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.variant("huge").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_models() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("not json", Path::new("/tmp")).is_err());
+    }
+}

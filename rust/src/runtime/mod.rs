@@ -1,0 +1,109 @@
+//! The PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `python/compile/aot.py`) and executes them on the request path
+//! — python is never involved at runtime.
+//!
+//! Interchange is HLO **text**: the image's xla_extension 0.5.1 rejects
+//! serialized `HloModuleProto`s from jax ≥ 0.5 (64-bit instruction ids);
+//! the text parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md).
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use manifest::{Manifest, TensorSpec};
+pub use trainer::Trainer;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client wrapper. One per thread in live mode (the underlying
+/// handles are not `Sync`).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened output tuple
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("executing artifact")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("untupling result")
+    }
+}
+
+/// Default artifacts directory: `$FITGPP_ARTIFACTS` or `artifacts/`
+/// relative to the crate root (works from `cargo test`/`cargo bench`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("FITGPP_ARTIFACTS") {
+        return p.into();
+    }
+    let here = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    here.join("artifacts")
+}
+
+/// True if the AOT artifacts have been built (`make artifacts`). Tests and
+/// benches that need them skip gracefully otherwise.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_cpu_comes_up() {
+        let e = Engine::cpu().unwrap();
+        assert_eq!(e.platform(), "cpu");
+        assert!(e.device_count() >= 1);
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.load_hlo_text(Path::new("/nonexistent/foo.hlo.txt")).is_err());
+    }
+}

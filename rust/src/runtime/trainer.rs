@@ -1,0 +1,204 @@
+//! Training-job executor: owns the model parameters and drives the AOT
+//! train-step artifact. This is what a "DL job" actually runs in live mode
+//! — the compute the scheduler is scheduling.
+//!
+//! Calling convention (fixed by `python/compile/aot.py`):
+//! inputs `(param_0, …, param_{n-1}, tokens)` →
+//! outputs `(param_0', …, param_{n-1}', loss)`.
+
+use super::manifest::{Manifest, ModelVariant};
+use super::{Checkpoint, Engine, Executable};
+use crate::stats::dist::{Normal, Sample};
+use crate::stats::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+
+/// A live training job: compiled step + resident parameters.
+pub struct Trainer {
+    pub variant: ModelVariant,
+    exec: Executable,
+    /// Current parameters, calling-convention order.
+    params: Vec<xla::Literal>,
+    /// Steps completed.
+    pub step: u64,
+    batch_rng: Pcg64,
+}
+
+impl Trainer {
+    /// Fresh trainer with rust-side parameter init (normal, σ = 0.02 — the
+    /// standard GPT-style init; python tests validate model numerics
+    /// against the jnp reference separately).
+    pub fn new(engine: &Engine, manifest: &Manifest, variant: &str, seed: u64) -> Result<Trainer> {
+        let variant = manifest.variant(variant)?.clone();
+        let exec = engine.load_hlo_text(&manifest.artifact_path(&variant.train_step))?;
+        let mut rng = Pcg64::new(seed);
+        let dist = Normal::new(0.0, 0.02);
+        let params = variant
+            .params
+            .iter()
+            .map(|spec| {
+                if spec.dtype != "f32" {
+                    bail!("only f32 params supported, got {}", spec.dtype);
+                }
+                // Mirror python's init_params: layernorm gains are ones,
+                // shifts are zeros, weights are N(0, 0.02).
+                let data: Vec<f32> = if spec.name.ends_with(".g") {
+                    vec![1.0; spec.elements()]
+                } else if spec.name.ends_with(".b") {
+                    vec![0.0; spec.elements()]
+                } else {
+                    (0..spec.elements())
+                        .map(|_| dist.sample(&mut rng) as f32)
+                        .collect()
+                };
+                make_f32(&data, &spec.shape)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trainer {
+            batch_rng: rng.split(17),
+            variant,
+            exec,
+            params,
+            step: 0,
+        })
+    }
+
+    /// Resume from a checkpoint (live-mode preemption recovery).
+    pub fn from_checkpoint(
+        engine: &Engine,
+        manifest: &Manifest,
+        variant: &str,
+        ckpt: &Checkpoint,
+        seed: u64,
+    ) -> Result<Trainer> {
+        let variant = manifest.variant(variant)?.clone();
+        if ckpt.tensors.len() != variant.params.len() {
+            bail!(
+                "checkpoint has {} tensors, model {} expects {}",
+                ckpt.tensors.len(),
+                variant.name,
+                variant.params.len()
+            );
+        }
+        let exec = engine.load_hlo_text(&manifest.artifact_path(&variant.train_step))?;
+        let params = ckpt
+            .tensors
+            .iter()
+            .zip(&variant.params)
+            .map(|((dims, data), spec)| {
+                if dims != &spec.shape {
+                    bail!("checkpoint tensor {dims:?} != manifest {:?}", spec.shape);
+                }
+                make_f32(data, dims)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut rng = Pcg64::new(seed ^ ckpt.step);
+        Ok(Trainer {
+            batch_rng: rng.split(17),
+            variant,
+            exec,
+            params,
+            step: ckpt.step,
+        })
+    }
+
+    /// Batch shape `[batch, seq]`.
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.variant.tokens.shape[0], self.variant.tokens.shape[1])
+    }
+
+    /// One training step on explicit tokens (row-major `[batch*seq]`).
+    pub fn step_with(&mut self, tokens: &[i32]) -> Result<f32> {
+        let (b, s) = self.batch_shape();
+        if tokens.len() != b * s {
+            bail!("expected {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        let tok = xla::Literal::vec1(tokens)
+            .reshape(&[b as i64, s as i64])
+            .context("reshaping tokens")?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&tok);
+        let outputs = {
+            let result = self
+                .exec
+                .run_refs(&inputs)
+                .context("train step execution")?;
+            result
+        };
+        let n = self.params.len();
+        if outputs.len() != n + 1 {
+            bail!("train step returned {} outputs, expected {}", outputs.len(), n + 1);
+        }
+        let mut outputs = outputs;
+        let loss_lit = outputs.pop().unwrap();
+        let loss: f32 = loss_lit.get_first_element().context("reading loss")?;
+        self.params = outputs;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// One training step on a synthetic-but-learnable batch: sequences from
+    /// a fixed affine recurrence `x_{t+1} = (5 x_t + 3) mod V` with random
+    /// starting symbol — a next-token structure a small LM learns quickly,
+    /// so live-mode loss curves visibly decrease.
+    pub fn step_synthetic(&mut self) -> Result<f32> {
+        let (b, s) = self.batch_shape();
+        let vocab = *self.variant.config.get("vocab").unwrap_or(&256.0) as i64;
+        let mut toks = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            let mut x = (self.batch_rng.below(vocab as u64)) as i64;
+            for _ in 0..s {
+                toks.push(x as i32);
+                x = (5 * x + 3) % vocab;
+            }
+        }
+        self.step_with(&toks)
+    }
+
+    /// Snapshot current parameters (the grace-period "suspension
+    /// processing" of §2 — this is real serialization work).
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        let tensors = self
+            .params
+            .iter()
+            .zip(&self.variant.params)
+            .map(|(lit, spec)| {
+                let data = lit.to_vec::<f32>().context("param to host")?;
+                Ok((spec.shape.clone(), data))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Checkpoint::new(self.step, tensors))
+    }
+
+    /// L2 norm of all parameters (diagnostics / tests).
+    pub fn param_norm(&self) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for lit in &self.params {
+            for x in lit.to_vec::<f32>()? {
+                acc += (x as f64) * (x as f64);
+            }
+        }
+        Ok(acc.sqrt())
+    }
+}
+
+fn make_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .context("reshaping parameter literal")
+}
+
+impl Executable {
+    /// Like [`Executable::run`] but borrowing inputs (hot path: avoids
+    /// cloning resident parameters every step).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .context("executing artifact")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("untupling result")
+    }
+}

@@ -1,0 +1,677 @@
+//! The scheduler core: per-minute FIFO admission with grace-period
+//! preemption (§2–3 of the paper).
+//!
+//! ## Tick semantics (one call = one simulated minute)
+//!
+//! 1. **Completions** — running jobs whose remaining time reached zero
+//!    release their resources.
+//! 2. **Grace expirations** — draining jobs whose grace period elapsed
+//!    vacate and are re-queued at the *top* of the BE queue
+//!    (`PreemptionCount += 1`).
+//! 3. **Arrivals** — submitted jobs enter a queue: under preemptive
+//!    policies TE jobs enter the TE fast lane (the paper allocates surplus
+//!    directly to TE jobs, §2); under vanilla FIFO everything shares one
+//!    queue.
+//! 4. **Admission** — TE lane first (head-only, FIFO): place if some node
+//!    fits; otherwise consult the preemption policy, signal the victims,
+//!    and *reserve* the target node's space so the drained resources are
+//!    "allocated to the TE job" rather than grabbed by other admissions.
+//!    Then the BE queue (head-only, FIFO; no preemption on behalf of BE).
+//! 5. **Burn** — running jobs progress one minute; draining jobs burn
+//!    grace time (no progress: suspension processing is overhead); queued
+//!    jobs accrue waiting time.
+//!
+//! Zero-GP victims vacate synchronously inside the admission step, so a TE
+//! job whose victim permits rewinding starts in the same minute.
+
+use crate::cluster::{Cluster, ClusterSpec, NodeId, Placement};
+use crate::job::{Job, JobId, JobState};
+use crate::queue::JobQueue;
+use crate::resources::ResourceVec;
+use crate::sched::policy::{plan_preemption, PolicyCtx, PolicyKind};
+use crate::stats::rng::Pcg64;
+use crate::Minutes;
+
+/// Scheduler configuration (everything §4 varies is here).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub policy: PolicyKind,
+    /// Node-selection rule for placements (paper does not pin one; best-fit
+    /// is the default — see the `placement_ablation` bench).
+    pub placement: Placement,
+    /// Whether a draining job keeps making progress during its grace
+    /// period. Default `false` (suspension processing is overhead).
+    pub progress_during_grace: bool,
+    /// Seed for the policy RNG (RAND victims, FitGpp fallback).
+    pub seed: u64,
+}
+
+impl SchedConfig {
+    pub fn new(policy: PolicyKind) -> Self {
+        SchedConfig {
+            policy,
+            placement: Placement::BestFit,
+            progress_during_grace: false,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// A reservation pins an incoming TE job to the node whose victims are
+/// draining: the drained space is *held* (invisible to other placements)
+/// until the TE job starts or finds a seat elsewhere.
+#[derive(Debug, Clone)]
+pub struct Reservation {
+    pub te: JobId,
+    pub node: NodeId,
+    /// Amount held = the TE job's demand.
+    pub hold: ResourceVec,
+    /// Victims signalled for this reservation (bookkeeping/event log).
+    pub victims: Vec<JobId>,
+}
+
+/// Aggregate counters across the run.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    /// Preemption signals issued (one per victim).
+    pub preemption_signals: u64,
+    /// Plans that used FitGpp's random escape hatch.
+    pub fallback_plans: u64,
+    /// Preemption plans issued (one per TE trigger).
+    pub plans: u64,
+    /// Jobs placed.
+    pub placements: u64,
+    /// Completed jobs.
+    pub completions: u64,
+    /// TE jobs that found room with no preemption at all.
+    pub te_no_preemption: u64,
+    /// Ticks executed.
+    pub ticks: u64,
+    /// Reservations dropped and re-planned because the drained space did
+    /// not materialize on a single node (aggregate baseline plans).
+    pub replans: u64,
+}
+
+/// Per-tick outcome (used by tests and the live executor).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TickStats {
+    pub completed: Vec<JobId>,
+    pub vacated: Vec<JobId>,
+    pub started: Vec<JobId>,
+    pub preempted: Vec<JobId>,
+}
+
+/// The scheduler. Owns cluster + queues; the job table lives outside (the
+/// simulator or live executor owns it) and is passed to `tick`.
+pub struct Scheduler {
+    pub cfg: SchedConfig,
+    pub cluster: Cluster,
+    /// BE queue (all jobs under vanilla FIFO).
+    pub be_queue: JobQueue,
+    /// TE fast lane (unused under vanilla FIFO).
+    pub te_queue: JobQueue,
+    pub reservations: Vec<Reservation>,
+    /// Per-node sum of reservation holds.
+    holds: Vec<ResourceVec>,
+    /// Jobs currently occupying resources (Running or Draining).
+    active: Vec<JobId>,
+    rng: Pcg64,
+    pub stats: SchedStats,
+    /// Run `Cluster::check_invariants` every tick (tests; ~2× slower).
+    pub paranoid: bool,
+}
+
+impl Scheduler {
+    pub fn new(spec: &ClusterSpec, cfg: SchedConfig) -> Self {
+        let n = spec.nodes.len();
+        Scheduler {
+            rng: Pcg64::new(cfg.seed),
+            cfg,
+            cluster: Cluster::new(spec),
+            be_queue: JobQueue::new(),
+            te_queue: JobQueue::new(),
+            reservations: Vec::new(),
+            holds: vec![ResourceVec::ZERO; n],
+            active: Vec::new(),
+            stats: SchedStats::default(),
+            paranoid: false,
+        }
+    }
+
+    /// Effective free space on `node`: free minus holds (clamped at zero),
+    /// optionally crediting back the hold of `own` (a job trying to use its
+    /// own reservation).
+    fn effective_free(&self, node: NodeId, own: Option<JobId>) -> ResourceVec {
+        let mut held = self.holds[node.0 as usize];
+        if let Some(te) = own {
+            if let Some(r) = self.reservations.iter().find(|r| r.te == te) {
+                if r.node == node {
+                    held = held.saturating_sub(&r.hold);
+                }
+            }
+        }
+        self.cluster.node(node).free.saturating_sub(&held)
+    }
+
+    fn effective_free_all(&self) -> Vec<ResourceVec> {
+        (0..self.cluster.nodes.len())
+            .map(|i| self.effective_free(NodeId(i as u32), None))
+            .collect()
+    }
+
+    /// Find a node where `demand` fits in *effective* free space, honouring
+    /// `own`'s reservation, under the configured placement rule.
+    ///
+    /// Hot path (28% of a full-scale simulation before optimization): the
+    /// `own`-reservation lookup is hoisted out of the per-node loop and
+    /// free/holds are combined inline instead of calling
+    /// [`Self::effective_free`] per node (§Perf, EXPERIMENTS.md).
+    fn find_node_effective(&self, demand: &ResourceVec, own: Option<JobId>) -> Option<NodeId> {
+        let own_res: Option<(NodeId, ResourceVec)> = own.and_then(|te| {
+            self.reservations
+                .iter()
+                .find(|r| r.te == te)
+                .map(|r| (r.node, r.hold))
+        });
+        let mut best: Option<(f64, NodeId)> = None;
+        for node in &self.cluster.nodes {
+            let mut held = self.holds[node.id.0 as usize];
+            if let Some((rnode, hold)) = own_res {
+                if rnode == node.id {
+                    held = held.saturating_sub(&hold);
+                }
+            }
+            let free = node.free.saturating_sub(&held);
+            if !demand.fits_in(&free) {
+                continue;
+            }
+            let residual = (free - *demand).size(&node.capacity);
+            let key = match self.cfg.placement {
+                Placement::FirstFit => return Some(node.id),
+                Placement::BestFit => residual,
+                Placement::WorstFit => -residual,
+            };
+            match best {
+                Some((k, _)) if k <= key => {}
+                _ => best = Some((key, node.id)),
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Does `job` hold an active reservation?
+    fn has_reservation(&self, job: JobId) -> bool {
+        self.reservations.iter().any(|r| r.te == job)
+    }
+
+    fn release_reservation(&mut self, job: JobId) {
+        if let Some(i) = self.reservations.iter().position(|r| r.te == job) {
+            let r = self.reservations.remove(i);
+            self.holds[r.node.0 as usize] = self.holds[r.node.0 as usize].saturating_sub(&r.hold);
+        }
+    }
+
+    /// Submit a job into the right queue.
+    pub fn submit(&mut self, job: &Job) {
+        debug_assert_eq!(job.state, JobState::Pending);
+        if self.cfg.policy.te_bypass() && job.is_te() {
+            self.te_queue.submit(job.id());
+        } else {
+            self.be_queue.submit(job.id());
+        }
+    }
+
+    /// Number of queued + active jobs (for load metrics / drain detection).
+    pub fn in_flight(&self) -> usize {
+        self.be_queue.len() + self.te_queue.len() + self.active.len()
+    }
+
+    /// Total demand of queued + active jobs (the "cluster load" numerator
+    /// used by the §4.2 arrival calibration).
+    pub fn outstanding_demand(&self, jobs: &[Job]) -> ResourceVec {
+        let mut d = ResourceVec::ZERO;
+        for id in self.be_queue.iter().chain(self.te_queue.iter()) {
+            d += jobs[id.0 as usize].spec.demand;
+        }
+        for id in &self.active {
+            d += jobs[id.0 as usize].spec.demand;
+        }
+        d
+    }
+
+    /// One simulated minute. `arrivals` must be sorted by submission order.
+    pub fn tick(&mut self, now: Minutes, jobs: &mut [Job], arrivals: &[JobId]) -> TickStats {
+        let mut out = TickStats::default();
+        self.stats.ticks += 1;
+
+        // -- 1+2: completions and grace expirations ----------------------
+        let mut i = 0;
+        while i < self.active.len() {
+            let id = self.active[i];
+            let job = &mut jobs[id.0 as usize];
+            match job.state {
+                JobState::Running if job.remaining == 0 => {
+                    job.complete(now);
+                    self.cluster.unbind(id);
+                    self.active.swap_remove(i);
+                    self.stats.completions += 1;
+                    out.completed.push(id);
+                }
+                JobState::Draining if job.remaining == 0 && self.cfg.progress_during_grace => {
+                    job.complete(now);
+                    self.cluster.unbind(id);
+                    self.active.swap_remove(i);
+                    self.stats.completions += 1;
+                    out.completed.push(id);
+                }
+                JobState::Draining if job.grace_left == 0 => {
+                    job.vacate(now);
+                    self.cluster.unbind(id);
+                    self.active.swap_remove(i);
+                    self.be_queue.reinsert_front(id);
+                    out.vacated.push(id);
+                }
+                _ => i += 1,
+            }
+        }
+
+        // -- 3: arrivals --------------------------------------------------
+        for id in arrivals {
+            debug_assert_eq!(jobs[id.0 as usize].spec.submit, now, "arrival at wrong tick");
+            self.submit(&jobs[id.0 as usize]);
+        }
+
+        // -- 4: admission --------------------------------------------------
+        if self.cfg.policy.te_bypass() {
+            self.admit_te_lane(now, jobs, &mut out);
+        }
+        self.admit_be_queue(now, jobs, &mut out);
+
+        if self.paranoid {
+            self.cluster.check_invariants().expect("cluster invariants");
+            self.check_hold_invariants();
+        }
+
+        // -- 5: burn -------------------------------------------------------
+        for id in &self.active {
+            let job = &mut jobs[id.0 as usize];
+            match job.state {
+                JobState::Running => job.remaining -= 1,
+                JobState::Draining => {
+                    job.grace_left -= 1;
+                    if self.cfg.progress_during_grace && job.remaining > 0 {
+                        job.remaining -= 1;
+                    }
+                }
+                _ => unreachable!("active job in state {:?}", job.state),
+            }
+        }
+        for id in self.be_queue.iter().chain(self.te_queue.iter()) {
+            jobs[id.0 as usize].waiting += 1;
+        }
+
+        out
+    }
+
+    /// TE fast lane admission. Per-arrival, not head-gated: the paper
+    /// triggers preemption "when a TE job arrives at a job queue", and a
+    /// TE job whose victims drained may start while an earlier TE job is
+    /// still waiting out a longer grace period. Order is still FIFO among
+    /// TE jobs for placement attempts.
+    fn admit_te_lane(&mut self, now: Minutes, jobs: &mut [Job], out: &mut TickStats) {
+        let waiting: Vec<JobId> = self.te_queue.iter().collect();
+        for head in waiting {
+            let demand = jobs[head.0 as usize].spec.demand;
+            // (a) Fits somewhere (own reservation credited)?
+            if let Some(node) = self.find_node_effective(&demand, Some(head)) {
+                if !self.has_reservation(head) {
+                    self.stats.te_no_preemption += 1;
+                }
+                self.place(head, node, now, jobs, out);
+                continue;
+            }
+            // (b) Waiting on an existing reservation? Hold while any of its
+            // victims is still draining. If the drains landed and the job
+            // *still* does not fit (the baselines' aggregate plans can
+            // under-deliver on a single node), drop the reservation and
+            // re-plan — the paper's "continue the preemption process until
+            // they can prepare enough resource".
+            if self.has_reservation(head) {
+                let still_draining = self
+                    .reservations
+                    .iter()
+                    .find(|r| r.te == head)
+                    .map(|r| {
+                        r.victims
+                            .iter()
+                            .any(|v| jobs[v.0 as usize].state == JobState::Draining)
+                    })
+                    .unwrap_or(false);
+                if still_draining {
+                    continue;
+                }
+                self.release_reservation(head);
+                self.stats.replans += 1;
+            }
+            // (c) Ask the policy for victims.
+            let plan = {
+                let eff = self.effective_free_all();
+                let ctx = PolicyCtx {
+                    cluster: &self.cluster,
+                    jobs,
+                    effective_free: &eff,
+                    oracle_remaining: &|id: JobId| jobs[id.0 as usize].remaining,
+                };
+                plan_preemption(&self.cfg.policy, &jobs[head.0 as usize].spec, &ctx, &mut self.rng)
+            };
+            let Some(plan) = plan else {
+                continue; // nothing to preempt (or non-preemptive policy)
+            };
+            self.stats.plans += 1;
+            if plan.fallback {
+                self.stats.fallback_plans += 1;
+            }
+            // Signal victims; zero-GP victims vacate synchronously.
+            let mut victims = Vec::new();
+            for v in &plan.victims {
+                let job = &mut jobs[v.0 as usize];
+                job.signal_preemption();
+                self.stats.preemption_signals += 1;
+                out.preempted.push(*v);
+                if job.grace_left == 0 {
+                    job.vacate(now);
+                    self.cluster.unbind(*v);
+                    if let Some(i) = self.active.iter().position(|a| a == v) {
+                        self.active.swap_remove(i);
+                    }
+                    self.be_queue.reinsert_front(*v);
+                    out.vacated.push(*v);
+                } else {
+                    victims.push(*v);
+                }
+            }
+            self.reservations.push(Reservation {
+                te: head,
+                node: plan.node,
+                hold: demand,
+                victims,
+            });
+            self.holds[plan.node.0 as usize] += demand;
+            // Retry immediately: zero-GP victims may have freed the seat.
+            if let Some(node) = self.find_node_effective(&demand, Some(head)) {
+                self.place(head, node, now, jobs, out);
+            }
+        }
+    }
+
+    /// BE queue admission: strict FIFO, no preemption on behalf of the head.
+    fn admit_be_queue(&mut self, now: Minutes, jobs: &mut [Job], out: &mut TickStats) {
+        while let Some(head) = self.be_queue.head() {
+            // A job that vacated in this very scheduling round is not
+            // re-admittable until the next one (the scheduler "decides
+            // resource allocation at every simulated minute" — a suspend
+            // and a restart cannot share one decision).
+            if jobs[head.0 as usize].last_vacated == Some(now) {
+                break;
+            }
+            let demand = jobs[head.0 as usize].spec.demand;
+            match self.find_node_effective(&demand, Some(head)) {
+                Some(node) => self.place(head, node, now, jobs, out),
+                None => break, // head-of-line blocking (the FIFO principle)
+            }
+        }
+    }
+
+    fn place(&mut self, id: JobId, node: NodeId, now: Minutes, jobs: &mut [Job], out: &mut TickStats) {
+        // Remove from whichever queue holds it (TE lane admission is
+        // per-arrival, so the job may not be at the head).
+        if !self.te_queue.remove(id) && !self.be_queue.remove(id) {
+            panic!("{id} placed but not queued");
+        }
+        self.release_reservation(id);
+        let job = &mut jobs[id.0 as usize];
+        job.start(node, now);
+        self.cluster.bind(id, job.spec.demand, node);
+        self.active.push(id);
+        self.stats.placements += 1;
+        out.started.push(id);
+    }
+
+    /// Debug check: holds match live reservations.
+    fn check_hold_invariants(&self) {
+        let mut expect = vec![ResourceVec::ZERO; self.cluster.nodes.len()];
+        for r in &self.reservations {
+            expect[r.node.0 as usize] += r.hold;
+        }
+        for (i, (a, b)) in expect.iter().zip(&self.holds).enumerate() {
+            let d = *a - *b;
+            assert!(
+                d.cpu.abs() < 1e-6 && d.ram_gb.abs() < 1e-6 && d.gpu.abs() < 1e-6,
+                "hold mismatch on node {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    /// All jobs done and nothing queued?
+    pub fn idle(&self) -> bool {
+        self.active.is_empty() && self.be_queue.is_empty() && self.te_queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobClass, JobSpec};
+
+    fn rv(c: f64, r: f64, g: f64) -> ResourceVec {
+        ResourceVec::new(c, r, g)
+    }
+
+    /// Tiny driver: run the scheduler over `jobs` until idle (or 10k ticks).
+    fn run(policy: PolicyKind, spec: &ClusterSpec, jobs: &mut Vec<Job>) -> (Scheduler, Minutes) {
+        let mut sched = Scheduler::new(spec, SchedConfig::new(policy));
+        sched.paranoid = true;
+        let mut now = 0;
+        loop {
+            let arrivals: Vec<JobId> = jobs
+                .iter()
+                .filter(|j| j.spec.submit == now)
+                .map(|j| j.id())
+                .collect();
+            sched.tick(now, jobs, &arrivals);
+            now += 1;
+            let all_submitted = jobs.iter().all(|j| j.spec.submit < now);
+            if all_submitted && sched.idle() {
+                return (sched, now);
+            }
+            assert!(now < 10_000, "runaway test simulation");
+        }
+    }
+
+    fn mkjobs(specs: Vec<JobSpec>) -> Vec<Job> {
+        specs.into_iter().map(Job::new).collect()
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![JobSpec::new(0, JobClass::Be, rv(4.0, 32.0, 1.0), 0, 5, 0)]);
+        let (_, end) = run(PolicyKind::Fifo, &spec, &mut jobs);
+        assert_eq!(jobs[0].finished_at, Some(5));
+        assert!((jobs[0].slowdown() - 1.0).abs() < 1e-12);
+        assert_eq!(end, 6);
+    }
+
+    #[test]
+    fn fifo_head_of_line_blocks_small_jobs() {
+        // Node is full with job 0 (10 min). Job 1 (huge) blocks job 2
+        // (tiny) even though job 2 would fit — the FIFO principle.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(30.0, 200.0, 8.0), 0, 10, 0),
+            JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 1, 5, 0),
+            JobSpec::new(2, JobClass::Be, rv(1.0, 1.0, 0.0), 1, 5, 0),
+        ]);
+        let (_, _) = run(PolicyKind::Fifo, &spec, &mut jobs);
+        // Job 1 starts at 10 (after job 0), job 2 only after job 1 at 15.
+        assert_eq!(jobs[1].first_start, Some(10));
+        assert_eq!(jobs[2].first_start, Some(15));
+    }
+
+    #[test]
+    fn te_bypass_lets_te_jump_blocked_queue() {
+        // Same setup but a TE job instead of job 2: with FastLane (bypass,
+        // no preemption) the TE job takes the fragmented free space at once.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(30.0, 200.0, 7.0), 0, 10, 0),
+            JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 1, 5, 0),
+            JobSpec::new(2, JobClass::Te, rv(1.0, 1.0, 1.0), 1, 5, 0),
+        ]);
+        let (sched, _) = run(PolicyKind::FastLane, &spec, &mut jobs);
+        assert_eq!(jobs[2].first_start, Some(1), "TE starts immediately");
+        assert_eq!(sched.stats.preemption_signals, 0);
+    }
+
+    #[test]
+    fn fitgpp_preempts_to_admit_te() {
+        // Node full with two BE jobs; TE arrives; FitGpp must preempt the
+        // small one (GP=2) and start the TE job after the drain.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(24.0, 192.0, 6.0), 0, 100, 2),
+            JobSpec::new(1, JobClass::Be, rv(8.0, 64.0, 2.0), 0, 100, 2),
+            JobSpec::new(2, JobClass::Te, rv(4.0, 32.0, 1.0), 1, 5, 0),
+        ]);
+        let (sched, _) = run(
+            PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+            &spec,
+            &mut jobs,
+        );
+        assert_eq!(sched.stats.preemption_signals, 1);
+        assert_eq!(jobs[1].preemptions, 1, "small job is the victim");
+        assert_eq!(jobs[0].preemptions, 0);
+        // Signal at t=1, GP 2 burns at t=1,2 ⇒ vacate at t=3, TE starts t=3.
+        assert_eq!(jobs[2].first_start, Some(3));
+        // Victim re-queued at top and resumed once the TE job finished (it
+        // needs 8 CPUs; TE holds 4 of the 0 free... it refits when space allows).
+        assert!(jobs[1].resched_intervals.len() == 1);
+    }
+
+    #[test]
+    fn zero_gp_victim_vacates_same_tick() {
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 100, 0),
+            JobSpec::new(1, JobClass::Te, rv(4.0, 32.0, 1.0), 1, 5, 0),
+        ]);
+        let (_, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
+        assert_eq!(jobs[1].first_start, Some(1), "rewind-OK victim frees seat instantly");
+        assert_eq!(jobs[1].slowdown(), 1.0);
+    }
+
+    #[test]
+    fn preempted_job_goes_to_queue_top() {
+        // Victim must restart before a BE job that was submitted earlier
+        // but still queued.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 20, 0), // runs, victim
+            JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 20, 0), // queued behind
+            JobSpec::new(2, JobClass::Te, rv(16.0, 128.0, 4.0), 1, 5, 0),
+        ]);
+        let (_, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
+        // Job 0 vacates at t=1 (GP 0), requeued at head, refits at t=6 once
+        // the TE job is done (its 16 CPUs + 32-16 free = fits at TE end).
+        assert!(jobs[0].first_start.unwrap() < jobs[1].first_start.unwrap(),
+            "victim resumes before the younger queued job");
+        assert_eq!(jobs[0].preemptions, 1);
+    }
+
+    #[test]
+    fn reservation_prevents_squatting() {
+        // TE preempts a victim with GP 3 on a full node; while it drains, a
+        // small BE job arrives — it must NOT grab the drained space.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 100, 3),
+            JobSpec::new(1, JobClass::Te, rv(30.0, 250.0, 8.0), 1, 5, 0),
+            JobSpec::new(2, JobClass::Be, rv(2.0, 2.0, 0.0), 2, 50, 0),
+        ]);
+        let (_, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: None }, &spec, &mut jobs);
+        // Victim vacates at t=4 (signal t=1, GP 3). TE must start t=4.
+        assert_eq!(jobs[1].first_start, Some(4));
+        // The small BE job fits beside the TE job (2 CPUs free) at t=4, not
+        // before (node was full/draining with hold).
+        assert!(jobs[2].first_start.unwrap() >= 4);
+    }
+
+    #[test]
+    fn te_never_preempted_and_te_does_not_preempt_te() {
+        // Cluster saturated by TE jobs; another TE arrives — no preemption
+        // possible, it waits for completion.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Te, rv(32.0, 256.0, 8.0), 0, 10, 0),
+            JobSpec::new(1, JobClass::Te, rv(32.0, 256.0, 8.0), 1, 5, 0),
+        ]);
+        let (sched, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
+        assert_eq!(sched.stats.preemption_signals, 0);
+        assert_eq!(jobs[1].first_start, Some(10));
+        assert_eq!(jobs[0].preemptions, 0);
+    }
+
+    #[test]
+    fn p_cap_respected_end_to_end() {
+        // One BE job; two TE waves try to preempt it. With P=1 the second
+        // wave must not preempt it again.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 30, 0),
+            JobSpec::new(1, JobClass::Te, rv(32.0, 256.0, 8.0), 1, 3, 0),
+            JobSpec::new(2, JobClass::Te, rv(32.0, 256.0, 8.0), 10, 3, 0),
+        ]);
+        let (_, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
+        assert_eq!(jobs[0].preemptions, 1, "P=1 ⇒ at most one preemption");
+        // Second TE waits for the BE job to finish instead.
+        assert!(jobs[2].first_start.unwrap() > 10);
+    }
+
+    #[test]
+    fn draining_job_finishing_early_completes() {
+        // progress_during_grace = true: a victim whose remaining < GP
+        // finishes during the drain instead of being suspended.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 3, 10),
+            JobSpec::new(1, JobClass::Te, rv(32.0, 256.0, 8.0), 1, 5, 0),
+        ]);
+        let mut cfg = SchedConfig::new(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+        cfg.progress_during_grace = true;
+        let mut sched = Scheduler::new(&spec, cfg);
+        sched.paranoid = true;
+        let mut now = 0;
+        while now < 100 {
+            let arrivals: Vec<JobId> = jobs.iter().filter(|j| j.spec.submit == now).map(|j| j.id()).collect();
+            sched.tick(now, &mut jobs, &arrivals);
+            now += 1;
+            if jobs.iter().all(|j| j.state == JobState::Done) {
+                break;
+            }
+        }
+        assert_eq!(jobs[0].preemptions, 0, "finished during drain, never vacated");
+        assert_eq!(jobs[0].finished_at, Some(3));
+    }
+
+    #[test]
+    fn stats_track_te_without_preemption() {
+        let spec = ClusterSpec::tiny(2);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Te, rv(4.0, 32.0, 1.0), 0, 5, 0),
+            JobSpec::new(1, JobClass::Te, rv(4.0, 32.0, 1.0), 0, 5, 0),
+        ]);
+        let (sched, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
+        assert_eq!(sched.stats.te_no_preemption, 2);
+        assert_eq!(sched.stats.plans, 0);
+    }
+}

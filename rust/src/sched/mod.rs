@@ -1,0 +1,8 @@
+//! The scheduler: FIFO admission core plus pluggable preemption policies
+//! (§3 of the paper).
+
+pub mod core;
+pub mod policy;
+
+pub use core::{SchedConfig, SchedStats, Scheduler, TickStats};
+pub use policy::{PolicyKind, PreemptionPlan};

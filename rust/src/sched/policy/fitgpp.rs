@@ -1,0 +1,261 @@
+//! FitGpp — *Fitting Grace Period Preemption* (§3.2, Eq. 1–4), the paper's
+//! contribution.
+//!
+//! Four strategies in one rule:
+//! 1. **Minimize re-scheduling intervals**: prefer victims with small
+//!    normalized demand `Size` (Eq. 1) — small jobs re-fit quickly, so the
+//!    head-of-line blocking their re-queue could cause is short.
+//! 2. **Minimize the number of preemptions**: only consider victims that
+//!    can host the TE job *on their own* together with the node's free
+//!    space (Eq. 2), so one preemption suffices.
+//! 3. **Minimize preemption-incurred time loss**: prefer short grace
+//!    periods (weight `s` in Eq. 3) — the TE job waits out the victim's GP.
+//! 4. **Avoid starvation**: never pick a job already preempted `P` times.
+//!
+//! If no candidate satisfies Eq. 2 ∧ count < P, the paper falls back to "a
+//! random BE job" — we reuse the RAND policy's node-sticky plan for that
+//! (and count how often it fires; in the paper's experiments it never did).
+
+use super::{rand_policy, PolicyCtx, PreemptionPlan};
+use crate::job::JobSpec;
+use crate::stats::rng::Pcg64;
+
+/// Eq. 3: `Score(j) = Size(D_j)/max_J Size + s * GP_j/max_J GP`.
+///
+/// Normalizers are taken over 𝒥 = all currently running BE jobs, exactly as
+/// the paper writes it. A zero max (no running BE job demands anything /
+/// all GPs are zero) drops that term.
+pub fn score(
+    size_j: f64,
+    gp_j: f64,
+    max_size: f64,
+    max_gp: f64,
+    s: f64,
+) -> f64 {
+    let size_term = if max_size > 0.0 { size_j / max_size } else { 0.0 };
+    let gp_term = if max_gp > 0.0 { gp_j / max_gp } else { 0.0 };
+    size_term + s * gp_term
+}
+
+/// Eq. 4: pick `argmin Score(j)` subject to `D_TE <= D_j + N_{node(j)}`
+/// (element-wise) and `PreemptionCount_j < P`; fall back to a random plan
+/// when the candidate set is empty.
+pub fn plan(
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    s: f64,
+    p_max: Option<u32>,
+    rng: &mut Pcg64,
+) -> Option<PreemptionPlan> {
+    let running = ctx.running_be();
+    if running.is_empty() {
+        return None;
+    }
+
+    // Normalizers over 𝒥 (all running BE jobs). Size is measured against
+    // the *hosting node's* capacity, which keeps Eq. 1 meaningful on
+    // heterogeneous clusters (identical to the paper on its homogeneous
+    // testbed).
+    let mut max_size = 0.0f64;
+    let mut max_gp = 0.0f64;
+    let sizes: Vec<f64> = running
+        .iter()
+        .map(|id| {
+            let j = &ctx.jobs[id.0 as usize];
+            let node = ctx.cluster.node(j.node.expect("running job has a node"));
+            let sz = j.spec.demand.size(&node.capacity);
+            max_size = max_size.max(sz);
+            max_gp = max_gp.max(j.spec.grace_period as f64);
+            sz
+        })
+        .collect();
+
+    let mut best: Option<(f64, usize)> = None; // (score, index into `running`)
+    for (i, id) in running.iter().enumerate() {
+        let j = &ctx.jobs[id.0 as usize];
+        if let Some(p) = p_max {
+            if j.preemptions >= p {
+                continue; // starvation guard (strategy 4)
+            }
+        }
+        let node = j.node.expect("running job has a node");
+        // Eq. 2: the victim plus the node's unallocated resources can host
+        // the TE job on their own.
+        let avail = j.spec.demand + ctx.effective_free[node.0 as usize];
+        if !te.demand.fits_in(&avail) {
+            continue;
+        }
+        let sc = score(sizes[i], j.spec.grace_period as f64, max_size, max_gp, s);
+        // Deterministic tie-break on job id.
+        let better = match best {
+            None => true,
+            Some((b, bi)) => sc < b || (sc == b && id < &running[bi]),
+        };
+        if better {
+            best = Some((sc, i));
+        }
+    }
+
+    if let Some((_, i)) = best {
+        let id = running[i];
+        let node = ctx.jobs[id.0 as usize].node.unwrap();
+        return Some(PreemptionPlan { node, victims: vec![id], fallback: false });
+    }
+
+    // Paper: "If there is no running BE job that meets the condition,
+    // FitGpp preempts a random BE job." Multi-victim random continuation so
+    // the plan still frees enough room; the P cap is still honoured so the
+    // no-starvation guarantee (strategy 4) holds unconditionally.
+    rand_policy::plan(te, ctx, rng, p_max).map(|mut p| {
+        p.fallback = true;
+        p
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterSpec, NodeId};
+    use crate::job::{Job, JobClass, JobId, JobSpec};
+    use crate::resources::ResourceVec;
+
+    /// Build a cluster + job table: `placements[i] = (node, demand, gp)`
+    /// creates a running BE job i on that node.
+    fn setup(
+        nodes: usize,
+        placements: &[(u32, ResourceVec, u64)],
+    ) -> (Cluster, Vec<Job>) {
+        let spec = ClusterSpec::tiny(nodes);
+        let mut cluster = Cluster::new(&spec);
+        let mut jobs = Vec::new();
+        for (i, (node, demand, gp)) in placements.iter().enumerate() {
+            let spec = JobSpec::new(i as u32, JobClass::Be, *demand, 0, 60, *gp);
+            let mut job = Job::new(spec);
+            job.start(NodeId(*node), 0);
+            cluster.bind(JobId(i as u32), *demand, NodeId(*node));
+            jobs.push(job);
+        }
+        (cluster, jobs)
+    }
+
+    fn ctx<'a>(
+        cluster: &'a Cluster,
+        jobs: &'a [Job],
+        free: &'a [ResourceVec],
+        oracle: &'a dyn Fn(JobId) -> u64,
+    ) -> PolicyCtx<'a> {
+        PolicyCtx { cluster, jobs, effective_free: free, oracle_remaining: oracle }
+    }
+
+    fn frees(cluster: &Cluster) -> Vec<ResourceVec> {
+        cluster.nodes.iter().map(|n| n.free).collect()
+    }
+
+    fn te(demand: ResourceVec) -> JobSpec {
+        JobSpec::new(999, JobClass::Te, demand, 0, 5, 0)
+    }
+
+    const ORACLE: fn(JobId) -> u64 = |_| 0;
+
+    #[test]
+    fn prefers_smallest_qualifying_victim() {
+        // Node 0: big job; node 1: small job. Both satisfy Eq. 2 for a tiny
+        // TE job; FitGpp must pick the small one (lower Size, equal GP).
+        let (cluster, jobs) = setup(
+            2,
+            &[
+                (0, ResourceVec::new(24.0, 192.0, 6.0), 5),
+                (1, ResourceVec::new(4.0, 32.0, 1.0), 5),
+            ],
+        );
+        let free = frees(&cluster);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE);
+        let plan = plan(&te(ResourceVec::new(2.0, 16.0, 1.0)), &c, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        assert_eq!(plan.victims, vec![JobId(1)]);
+        assert_eq!(plan.node, NodeId(1));
+    }
+
+    #[test]
+    fn gp_weight_flips_choice() {
+        // Two same-size victims; one has GP 20, the other GP 0. With s > 0
+        // the short-GP job must win even though sizes tie.
+        let d = ResourceVec::new(8.0, 64.0, 2.0);
+        let (cluster, jobs) = setup(2, &[(0, d, 20), (1, d, 0)]);
+        let free = frees(&cluster);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE);
+        let plan = plan(&te(d), &c, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        assert_eq!(plan.victims, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn s_zero_ignores_gp() {
+        // With s = 0 only Size matters: the smaller job wins even with a
+        // huge GP.
+        let (cluster, jobs) = setup(
+            2,
+            &[
+                (0, ResourceVec::new(8.0, 64.0, 2.0), 0),  // bigger, GP 0
+                (1, ResourceVec::new(4.0, 32.0, 1.0), 20), // smaller, GP 20
+            ],
+        );
+        let free = frees(&cluster);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE);
+        let plan = plan(&te(ResourceVec::new(2.0, 16.0, 1.0)), &c, 0.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        assert_eq!(plan.victims, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn eq2_excludes_insufficient_victims() {
+        // Node 0 holds two small jobs; TE needs more than either job +
+        // node-free provides, so Eq. 2 disqualifies both and the random
+        // fallback must produce a multi-victim plan on node 0.
+        let d = ResourceVec::new(14.0, 120.0, 4.0);
+        let (cluster, jobs) = setup(1, &[(0, d, 0), (0, d, 0)]);
+        let free = frees(&cluster); // free = [4, 16, 0]
+        let c = ctx(&cluster, &jobs, &free, &ORACLE);
+        let plan = plan(&te(ResourceVec::new(20.0, 128.0, 6.0)), &c, 4.0, Some(1), &mut Pcg64::new(7)).unwrap();
+        assert_eq!(plan.victims.len(), 2, "fallback must evict both");
+    }
+
+    #[test]
+    fn respects_preemption_cap() {
+        let d = ResourceVec::new(4.0, 32.0, 1.0);
+        let (cluster, mut jobs) = setup(2, &[(0, d, 0), (1, d, 5)]);
+        jobs[0].preemptions = 1; // job 0 already preempted once
+        let free = frees(&cluster);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE);
+        // P = 1: job 0 is off-limits despite its better (lower-GP) score.
+        let capped = plan(&te(d), &c, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        assert_eq!(capped.victims, vec![JobId(1)]);
+        // P = ∞ re-admits job 0.
+        let uncapped = plan(&te(d), &c, 4.0, None, &mut Pcg64::new(1)).unwrap();
+        assert_eq!(uncapped.victims, vec![JobId(0)]);
+    }
+
+    #[test]
+    fn no_running_be_jobs_yields_none() {
+        let (cluster, jobs) = setup(1, &[]);
+        let free = frees(&cluster);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE);
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 0.0)), &c, 4.0, Some(1), &mut Pcg64::new(1)).is_none());
+    }
+
+    #[test]
+    fn score_formula_matches_eq3() {
+        // Size ratio 0.5, GP ratio 0.25, s = 4 ⇒ 0.5 + 4·0.25 = 1.5.
+        assert!((score(1.0, 5.0, 2.0, 20.0, 4.0) - 1.5).abs() < 1e-12);
+        // Degenerate normalizers drop their term.
+        assert_eq!(score(1.0, 5.0, 0.0, 0.0, 4.0), 0.0);
+    }
+
+    #[test]
+    fn free_space_counts_toward_eq2() {
+        // The victim alone is too small, but victim + node free satisfies
+        // Eq. 2 — it must qualify (single victim, no fallback).
+        let (cluster, jobs) = setup(1, &[(0, ResourceVec::new(4.0, 32.0, 1.0), 0)]);
+        let free = frees(&cluster); // 28 CPUs etc. free
+        let c = ctx(&cluster, &jobs, &free, &ORACLE);
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &c, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        assert_eq!(plan.victims, vec![JobId(0)]);
+    }
+}

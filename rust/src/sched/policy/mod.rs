@@ -1,0 +1,232 @@
+//! Preemption policies: which running BE jobs to evict for an incoming TE
+//! job.
+//!
+//! All policies answer the same question: *given a TE job that fits on no
+//! node right now, produce a `PreemptionPlan` — a target node plus victim
+//! set on that node whose eviction makes the TE job fit.* The scheduler
+//! core then signals the victims (starting their grace periods), reserves
+//! the target node's space, and starts the TE job once the space drains.
+//!
+//! Implemented policies:
+//! * [`fitgpp`] — the paper's contribution (Eq. 1–4).
+//! * [`lrtp`] — Big-C's Longest-Remaining-Time Preemption, with the
+//!   paper's perfect-oracle assumption.
+//! * [`rand`] — uniformly random victims.
+//! * `Fifo` / `FastLane` — no preemption (baseline / bypass-only ablation).
+
+pub mod fitgpp;
+pub mod lrtp;
+pub mod rand_policy;
+
+use crate::cluster::{Cluster, NodeId};
+use crate::job::{Job, JobId, JobSpec, JobState};
+use crate::resources::ResourceVec;
+use crate::stats::rng::Pcg64;
+
+/// Which scheduling strategy to run. `PolicyKind` is plain data (configs,
+/// CLI) and is turned into behaviour by [`plan_preemption`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyKind {
+    /// Vanilla non-preemptive FIFO: one queue for everything, head blocks.
+    Fifo,
+    /// FIFO + TE fast-lane, but **no** preemption — an ablation separating
+    /// the benefit of queue bypass from the benefit of preemption.
+    FastLane,
+    /// The paper's algorithm. `s` weights grace-period length vs demand
+    /// size in Eq. 3; `p_max` is the per-job preemption cap `P`
+    /// (`None` = unlimited, the paper's "P = ∞" configuration).
+    FitGpp { s: f64, p_max: Option<u32> },
+    /// Longest-Remaining-Time Preemption with a perfect execution-time
+    /// oracle (the Big-C strategy as simulated in §4.1).
+    Lrtp,
+    /// Random victim selection.
+    Rand,
+}
+
+impl PolicyKind {
+    /// Does this policy ever preempt?
+    pub fn preempts(&self) -> bool {
+        !matches!(self, PolicyKind::Fifo | PolicyKind::FastLane)
+    }
+
+    /// Do TE jobs bypass the BE queue? The paper's preemptive system
+    /// allocates surplus directly to TE jobs (§2); vanilla FIFO does not.
+    pub fn te_bypass(&self) -> bool {
+        !matches!(self, PolicyKind::Fifo)
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PolicyKind::Fifo => "FIFO".into(),
+            PolicyKind::FastLane => "FastLane".into(),
+            PolicyKind::FitGpp { s, p_max } => match p_max {
+                Some(p) => format!("FitGpp(s={s},P={p})"),
+                None => format!("FitGpp(s={s},P=inf)"),
+            },
+            PolicyKind::Lrtp => "LRTP".into(),
+            PolicyKind::Rand => "RAND".into(),
+        }
+    }
+
+    /// Parse from a CLI string: `fifo`, `fastlane`, `fitgpp`, `fitgpp:s=4`,
+    /// `fitgpp:s=4,p=1`, `fitgpp:s=8,p=inf`, `lrtp`, `rand`.
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        let lower = s.to_ascii_lowercase();
+        let (head, rest) = match lower.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (lower.as_str(), None),
+        };
+        match head {
+            "fifo" => Some(PolicyKind::Fifo),
+            "fastlane" => Some(PolicyKind::FastLane),
+            "lrtp" => Some(PolicyKind::Lrtp),
+            "rand" => Some(PolicyKind::Rand),
+            "fitgpp" => {
+                let mut s_param = 4.0;
+                let mut p_max = Some(1);
+                if let Some(rest) = rest {
+                    for kv in rest.split(',') {
+                        let (k, v) = kv.split_once('=')?;
+                        match k {
+                            "s" => s_param = v.parse().ok()?,
+                            "p" => {
+                                p_max = if v == "inf" {
+                                    None
+                                } else {
+                                    Some(v.parse().ok()?)
+                                }
+                            }
+                            _ => return None,
+                        }
+                    }
+                }
+                Some(PolicyKind::FitGpp { s: s_param, p_max })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// The outcome of a preemption decision: evict `victims` (all hosted on
+/// `node`) so the TE job can start on `node` once they drain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreemptionPlan {
+    pub node: NodeId,
+    pub victims: Vec<JobId>,
+    /// True when FitGpp's Eq. 4 candidate set was empty and the random
+    /// escape hatch produced this plan (never fired in the paper's runs;
+    /// counted by the scheduler so EXPERIMENTS.md can report it).
+    pub fallback: bool,
+}
+
+/// Read-only view handed to policies.
+pub struct PolicyCtx<'a> {
+    pub cluster: &'a Cluster,
+    pub jobs: &'a [Job],
+    /// Per-node free resources minus reservation holds — what is really
+    /// available to new placements.
+    pub effective_free: &'a [ResourceVec],
+    /// The remaining-execution-time oracle (only LRTP may consult it; the
+    /// paper grants Big-C perfect predictions, §4.1).
+    pub oracle_remaining: &'a dyn Fn(JobId) -> u64,
+}
+
+impl<'a> PolicyCtx<'a> {
+    /// Running (not draining) BE jobs on `node` — the preemptible set.
+    pub fn running_be_on(&self, node: NodeId) -> Vec<JobId> {
+        self.cluster
+            .node(node)
+            .jobs()
+            .filter(|id| {
+                let j = &self.jobs[id.0 as usize];
+                j.is_be() && j.state == JobState::Running
+            })
+            .collect()
+    }
+
+    /// All running BE jobs cluster-wide (the paper's 𝒥 in Eq. 3).
+    pub fn running_be(&self) -> Vec<JobId> {
+        self.cluster
+            .nodes
+            .iter()
+            .flat_map(|n| self.running_be_on(n.id))
+            .collect()
+    }
+
+    /// Nodes on which evicting *every* running BE job would fit `demand` —
+    /// the feasible set for multi-victim policies.
+    pub fn feasible_nodes(&self, demand: &ResourceVec) -> Vec<NodeId> {
+        self.cluster
+            .nodes
+            .iter()
+            .filter(|n| {
+                let mut avail = self.effective_free[n.id.0 as usize];
+                for id in self.running_be_on(n.id) {
+                    avail += self.jobs[id.0 as usize].spec.demand;
+                }
+                demand.fits_in(&avail)
+            })
+            .map(|n| n.id)
+            .collect()
+    }
+}
+
+/// Dispatch: produce a preemption plan for `te` under `kind`, or `None`
+/// if the policy does not preempt / nothing feasible exists.
+pub fn plan_preemption(
+    kind: &PolicyKind,
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    rng: &mut Pcg64,
+) -> Option<PreemptionPlan> {
+    match kind {
+        PolicyKind::Fifo | PolicyKind::FastLane => None,
+        PolicyKind::FitGpp { s, p_max } => fitgpp::plan(te, ctx, *s, *p_max, rng),
+        PolicyKind::Lrtp => lrtp::plan(te, ctx),
+        PolicyKind::Rand => rand_policy::plan(te, ctx, rng, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(PolicyKind::parse("fifo"), Some(PolicyKind::Fifo));
+        assert_eq!(PolicyKind::parse("FIFO"), Some(PolicyKind::Fifo));
+        assert_eq!(PolicyKind::parse("lrtp"), Some(PolicyKind::Lrtp));
+        assert_eq!(PolicyKind::parse("rand"), Some(PolicyKind::Rand));
+        assert_eq!(PolicyKind::parse("fastlane"), Some(PolicyKind::FastLane));
+        assert_eq!(
+            PolicyKind::parse("fitgpp"),
+            Some(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) })
+        );
+        assert_eq!(
+            PolicyKind::parse("fitgpp:s=8,p=inf"),
+            Some(PolicyKind::FitGpp { s: 8.0, p_max: None })
+        );
+        assert_eq!(
+            PolicyKind::parse("fitgpp:s=2,p=3"),
+            Some(PolicyKind::FitGpp { s: 2.0, p_max: Some(3) })
+        );
+        assert_eq!(PolicyKind::parse("bogus"), None);
+        assert_eq!(PolicyKind::parse("fitgpp:q=1"), None);
+    }
+
+    #[test]
+    fn bypass_and_preempt_flags() {
+        assert!(!PolicyKind::Fifo.preempts());
+        assert!(!PolicyKind::Fifo.te_bypass());
+        assert!(!PolicyKind::FastLane.preempts());
+        assert!(PolicyKind::FastLane.te_bypass());
+        assert!(PolicyKind::Lrtp.preempts());
+        assert!(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }.preempts());
+    }
+
+    #[test]
+    fn names_render() {
+        assert_eq!(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }.name(), "FitGpp(s=4,P=1)");
+        assert_eq!(PolicyKind::FitGpp { s: 4.0, p_max: None }.name(), "FitGpp(s=4,P=inf)");
+    }
+}

@@ -1,0 +1,210 @@
+//! RAND — random victim selection (§4.1 baseline).
+//!
+//! "RAND is a strategy that preempts a randomly selected running BE job …
+//! [and] continue[s] the preemption process until they can prepare enough
+//! resource for the incoming TE job."
+//!
+//! Like LRTP, selection is *global and node-blind*: a uniformly random
+//! running BE job anywhere, repeated until some node's projected free
+//! space fits the TE job. Victims on nodes that never host the TE job are
+//! collateral damage — which is why RAND preempts an order of magnitude
+//! more jobs than FitGpp in the paper's Tables 3–4.
+//!
+//! This module also serves as FitGpp's escape hatch ("preempts a random BE
+//! job" when no Eq. 4 candidate exists). In that role it receives FitGpp's
+//! `p_max` and never picks a job already preempted `P` times — otherwise
+//! the paper's no-starvation guarantee (§3.2, strategy 4) would be void.
+//! Stand-alone RAND passes `None` (the paper's RAND has no cap).
+
+use super::{PolicyCtx, PreemptionPlan};
+use crate::job::JobSpec;
+use crate::resources::ResourceVec;
+use crate::stats::rng::Pcg64;
+
+pub fn plan(
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    rng: &mut Pcg64,
+    p_max: Option<u32>,
+) -> Option<PreemptionPlan> {
+    // A demand no node could ever satisfy is not plannable (the paper's
+    // clusters never see one — demands are capped at node capacity).
+    let max_node_cap = ctx
+        .cluster
+        .nodes
+        .iter()
+        .fold(ResourceVec::ZERO, |acc, n| acc.max(&n.capacity));
+    if !te.demand.fits_in(&max_node_cap) {
+        return None;
+    }
+    let mut pool = ctx.running_be();
+    if let Some(p) = p_max {
+        pool.retain(|id| ctx.jobs[id.0 as usize].preemptions < p);
+    }
+
+    let mut projected: Vec<ResourceVec> = ctx.effective_free.to_vec();
+    let fit_node = |proj: &[ResourceVec]| {
+        proj.iter()
+            .enumerate()
+            .find(|(_, f)| te.demand.fits_in(f))
+            .map(|(i, _)| crate::cluster::NodeId(i as u32))
+    };
+
+    let total_cap = ctx.cluster.total_capacity();
+    let mut victims = Vec::new();
+    loop {
+        if let Some(node) = fit_node(&projected) {
+            return Some(PreemptionPlan { node, victims, fallback: false });
+        }
+
+    // The paper's baselines measure "enough resource" against the
+    // *aggregate* freed space, not a single node (FitGpp's Eq. 2 is the
+    // per-node fix). If the victims' scattered space sums to the demand
+    // but no single node fits yet, stop here — the scheduler will re-plan
+    // once the drains land and the TE job still cannot be placed. At
+    // least one victim must be chosen per plan so re-planning always
+    // makes progress (the Draining victims leave the candidate pool).
+    // Reserve on the node with the most projected headroom.
+        if !victims.is_empty() {
+            let aggregate = projected
+                .iter()
+                .fold(ResourceVec::ZERO, |acc, f| acc + *f);
+            if te.demand.fits_in(&aggregate) {
+                let node = projected
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| {
+                        a.size(&total_cap).partial_cmp(&b.size(&total_cap)).unwrap()
+                    })
+                    .map(|(i, _)| crate::cluster::NodeId(i as u32))
+                    .unwrap();
+                return Some(PreemptionPlan { node, victims, fallback: false });
+            }
+        }
+        let Some(i) = rng.pick_index(pool.len()) else {
+            return None; // pool exhausted — no fit possible
+        };
+        let id = pool.swap_remove(i);
+        let j = &ctx.jobs[id.0 as usize];
+        let node = j.node.expect("running");
+        projected[node.0 as usize] += j.spec.demand;
+        victims.push(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterSpec, NodeId};
+    use crate::job::{Job, JobClass, JobId, JobSpec};
+    use crate::resources::ResourceVec;
+    use crate::sched::policy::PolicyCtx;
+
+    fn setup(nodes: usize, placements: &[(u32, ResourceVec)]) -> (Cluster, Vec<Job>) {
+        let spec = ClusterSpec::tiny(nodes);
+        let mut cluster = Cluster::new(&spec);
+        let mut jobs = Vec::new();
+        for (i, (node, demand)) in placements.iter().enumerate() {
+            let spec = JobSpec::new(i as u32, JobClass::Be, *demand, 0, 60, 0);
+            let mut job = Job::new(spec);
+            job.start(NodeId(*node), 0);
+            cluster.bind(JobId(i as u32), *demand, NodeId(*node));
+            jobs.push(job);
+        }
+        (cluster, jobs)
+    }
+
+    fn te(demand: ResourceVec) -> JobSpec {
+        JobSpec::new(999, JobClass::Te, demand, 0, 5, 0)
+    }
+
+    const ORACLE: fn(JobId) -> u64 = |_| 0;
+
+    #[test]
+    fn produces_fitting_plan() {
+        let d = ResourceVec::new(8.0, 64.0, 2.0);
+        let (cluster, jobs) = setup(2, &[(0, d), (0, d), (1, d)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        for seed in 0..32 {
+            let mut rng = Pcg64::new(seed);
+            let want = ResourceVec::new(4.0, 32.0, 8.0);
+            let p = plan(&te(want), &ctx, &mut rng, None).unwrap();
+            // Either the plan's node fits after its victims drain, or the
+            // plan stopped at aggregate fit (node-blind baseline).
+            let mut node_proj = free[p.node.0 as usize];
+            let mut agg = free.iter().fold(ResourceVec::ZERO, |a, f| a + *f);
+            for v in &p.victims {
+                let j = &jobs[v.0 as usize];
+                agg += j.spec.demand;
+                if j.node == Some(p.node) {
+                    node_proj += j.spec.demand;
+                }
+            }
+            assert!(
+                want.fits_in(&node_proj) || want.fits_in(&agg),
+                "seed {seed}: plan does not fit"
+            );
+        }
+    }
+
+    #[test]
+    fn victims_are_distinct() {
+        let d = ResourceVec::new(4.0, 32.0, 1.0);
+        let (cluster, jobs) = setup(1, &[(0, d), (0, d), (0, d), (0, d)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        for seed in 0..16 {
+            let mut rng = Pcg64::new(seed);
+            let p = plan(&te(ResourceVec::new(24.0, 200.0, 4.0)), &ctx, &mut rng, None).unwrap();
+            let mut ids: Vec<u32> = p.victims.iter().map(|v| v.0).collect();
+            let before = ids.len();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), before, "no victim picked twice");
+        }
+    }
+
+    #[test]
+    fn different_seeds_reach_different_victims() {
+        let d = ResourceVec::new(4.0, 32.0, 1.0);
+        let (cluster, jobs) = setup(4, &[(0, d), (1, d), (2, d), (3, d)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let want = ResourceVec::new(30.0, 230.0, 8.0);
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..64 {
+            let mut rng = Pcg64::new(seed);
+            if let Some(p) = plan(&te(want), &ctx, &mut rng, None) {
+                if let Some(v) = p.victims.first() {
+                    seen.insert(v.0);
+                }
+            }
+        }
+        assert!(seen.len() > 1, "randomness must spread victims: {seen:?}");
+    }
+
+    #[test]
+    fn p_cap_filters_pool() {
+        // Both jobs at the cap ⇒ no victims available ⇒ None.
+        let d = ResourceVec::new(16.0, 128.0, 4.0);
+        let (cluster, mut jobs) = setup(1, &[(0, d), (0, d)]);
+        jobs[0].preemptions = 1;
+        jobs[1].preemptions = 1;
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let mut rng = Pcg64::new(1);
+        assert!(plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut rng, Some(1)).is_none());
+        // Without the cap a plan exists.
+        assert!(plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut rng, None).is_some());
+    }
+
+    #[test]
+    fn none_when_no_be_running() {
+        let (cluster, jobs) = setup(1, &[]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let mut rng = Pcg64::new(1);
+        assert!(plan(&te(ResourceVec::new(64.0, 512.0, 16.0)), &ctx, &mut rng, None).is_none());
+    }
+}

@@ -1,0 +1,374 @@
+//! Discrete-time simulator: replays a [`Workload`] through a [`Scheduler`]
+//! one simulated minute at a time (§4.1: "the job scheduler decides
+//! resource allocation at every simulated minute").
+//!
+//! The simulator is deterministic: (workload, config, seed) → identical
+//! results, which is what makes every number in EXPERIMENTS.md
+//! reproducible.
+
+use crate::cluster::{ClusterSpec, Placement};
+use crate::job::{Job, JobClass, JobId, JobState};
+use crate::metrics::{IntervalsReport, PreemptionReport, SlowdownReport};
+use crate::resources::ResourceVec;
+use crate::sched::policy::PolicyKind;
+use crate::sched::{SchedConfig, SchedStats, Scheduler};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workload::Workload;
+use crate::Minutes;
+
+/// Full configuration of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub cluster: ClusterSpec,
+    pub policy: PolicyKind,
+    pub placement: Placement,
+    pub progress_during_grace: bool,
+    pub seed: u64,
+    /// Keep ticking after the last arrival until every job completes
+    /// (default). With `false`, stop at the last arrival + `tail_ticks`.
+    pub drain: bool,
+    /// Extra ticks after last arrival when `drain == false`.
+    pub tail_ticks: Minutes,
+    /// Hard safety cap on total ticks.
+    pub max_ticks: Minutes,
+    /// Run invariant checks every tick (tests).
+    pub paranoid: bool,
+}
+
+impl SimConfig {
+    pub fn new(cluster: ClusterSpec, policy: PolicyKind) -> Self {
+        SimConfig {
+            cluster,
+            policy,
+            placement: Placement::BestFit,
+            progress_during_grace: false,
+            seed: 0x5EED,
+            drain: true,
+            tail_ticks: 0,
+            max_ticks: 10_000_000,
+            paranoid: false,
+        }
+    }
+}
+
+/// Immutable per-job outcome captured at the end of a run.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub class: JobClass,
+    pub demand: ResourceVec,
+    pub submit: Minutes,
+    pub exec_time: Minutes,
+    pub grace_period: Minutes,
+    pub first_start: Option<Minutes>,
+    pub finished_at: Option<Minutes>,
+    pub preemptions: u32,
+    pub resched_intervals: Vec<Minutes>,
+    pub slowdown: f64,
+}
+
+impl JobRecord {
+    /// Capture a job's outcome (also used by the live executor).
+    pub fn from_job_public(j: &Job) -> Self {
+        Self::from_job(j)
+    }
+
+    fn from_job(j: &Job) -> Self {
+        JobRecord {
+            id: j.id(),
+            class: j.spec.class,
+            demand: j.spec.demand,
+            submit: j.spec.submit,
+            exec_time: j.spec.exec_time,
+            grace_period: j.spec.grace_period,
+            first_start: j.first_start,
+            finished_at: j.finished_at,
+            preemptions: j.preemptions,
+            resched_intervals: j.resched_intervals.clone(),
+            slowdown: j.slowdown(),
+        }
+    }
+}
+
+/// Everything a run produced.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub policy: PolicyKind,
+    pub records: Vec<JobRecord>,
+    pub sched_stats: SchedStats,
+    /// Tick at which the simulation stopped.
+    pub makespan: Minutes,
+    /// Number of jobs still unfinished at the end (0 when draining).
+    pub unfinished: usize,
+}
+
+impl SimResult {
+    /// Slowdown rates of completed jobs of `class` (Eq. 5).
+    pub fn slowdowns(&self, class: JobClass) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| r.class == class && r.finished_at.is_some())
+            .map(|r| r.slowdown)
+            .collect()
+    }
+
+    /// Re-scheduling intervals (vacate → restart) in minutes, all jobs
+    /// pooled (Table 2).
+    pub fn resched_intervals(&self) -> Vec<f64> {
+        self.records
+            .iter()
+            .flat_map(|r| r.resched_intervals.iter().map(|m| *m as f64))
+            .collect()
+    }
+
+    /// Fraction of all jobs preempted at least once (Table 3).
+    pub fn preempted_fraction(&self) -> f64 {
+        let n = self.records.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let p = self.records.iter().filter(|r| r.preemptions > 0).count();
+        p as f64 / n as f64
+    }
+
+    /// Fractions of jobs preempted exactly 1, exactly 2, and ≥3 times
+    /// (Table 4).
+    pub fn preemption_histogram(&self) -> [f64; 3] {
+        let n = self.records.len().max(1) as f64;
+        let mut h = [0usize; 3];
+        for r in &self.records {
+            match r.preemptions {
+                0 => {}
+                1 => h[0] += 1,
+                2 => h[1] += 1,
+                _ => h[2] += 1,
+            }
+        }
+        [h[0] as f64 / n, h[1] as f64 / n, h[2] as f64 / n]
+    }
+
+    pub fn slowdown_report(&self) -> SlowdownReport {
+        SlowdownReport::from_result(self)
+    }
+
+    pub fn intervals_report(&self) -> IntervalsReport {
+        IntervalsReport::from_result(self)
+    }
+
+    pub fn preemption_report(&self) -> PreemptionReport {
+        PreemptionReport::from_result(self)
+    }
+
+    /// One-run table matching the layout of the paper's Table 1 row.
+    pub fn summary_table(&self) -> String {
+        let r = self.slowdown_report();
+        let mut t = Table::new(
+            &format!("{} — slowdown percentiles", self.policy.name()),
+            &["class", "50th", "95th", "99th"],
+        );
+        t.row(vec![
+            "TE".into(),
+            format!("{:.2}", r.te.p50),
+            format!("{:.2}", r.te.p95),
+            format!("{:.2}", r.te.p99),
+        ]);
+        t.row(vec![
+            "BE".into(),
+            format!("{:.2}", r.be.p50),
+            format!("{:.2}", r.be.p95),
+            format!("{:.2}", r.be.p99),
+        ]);
+        t.to_text()
+    }
+
+    /// Machine-readable dump for plotting scripts.
+    pub fn to_json(&self) -> Json {
+        let r = self.slowdown_report();
+        let iv = self.intervals_report();
+        let pr = self.preemption_report();
+        Json::obj(vec![
+            ("policy", Json::str(&self.policy.name())),
+            ("makespan", Json::num(self.makespan as f64)),
+            ("unfinished", Json::num(self.unfinished as f64)),
+            (
+                "slowdown",
+                Json::obj(vec![
+                    ("te", r.te.to_json()),
+                    ("be", r.be.to_json()),
+                ]),
+            ),
+            (
+                "intervals",
+                Json::obj(vec![
+                    ("p50", Json::num(iv.p50)),
+                    ("p75", Json::num(iv.p75)),
+                    ("p95", Json::num(iv.p95)),
+                    ("p99", Json::num(iv.p99)),
+                    ("count", Json::num(iv.count as f64)),
+                ]),
+            ),
+            (
+                "preemption",
+                Json::obj(vec![
+                    ("fraction_preempted", Json::num(pr.fraction_preempted)),
+                    ("hist1", Json::num(pr.hist[0])),
+                    ("hist2", Json::num(pr.hist[1])),
+                    ("hist3plus", Json::num(pr.hist[2])),
+                    ("signals", Json::num(self.sched_stats.preemption_signals as f64)),
+                    ("fallback_plans", Json::num(self.sched_stats.fallback_plans as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// The simulator driver.
+pub struct Simulator {
+    cfg: SimConfig,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Self {
+        Simulator { cfg }
+    }
+
+    /// Run `workload` to completion and collect results.
+    pub fn run(&self, workload: &Workload) -> SimResult {
+        let mut jobs: Vec<Job> = workload.jobs.iter().cloned().map(Job::new).collect();
+        // Arrival index: jobs are sorted by submit time with dense ids.
+        debug_assert!(workload.jobs.windows(2).all(|w| w[0].submit <= w[1].submit));
+
+        let mut sched_cfg = SchedConfig::new(self.cfg.policy);
+        sched_cfg.placement = self.cfg.placement;
+        sched_cfg.progress_during_grace = self.cfg.progress_during_grace;
+        sched_cfg.seed = self.cfg.seed;
+        let mut sched = Scheduler::new(&self.cfg.cluster, sched_cfg);
+        sched.paranoid = self.cfg.paranoid;
+
+        let last_submit = workload.jobs.last().map(|j| j.submit).unwrap_or(0);
+        let mut next_arrival = 0usize; // index into jobs
+        let mut now: Minutes = 0;
+        let mut arrivals: Vec<JobId> = Vec::new();
+
+        loop {
+            arrivals.clear();
+            while next_arrival < jobs.len() && jobs[next_arrival].spec.submit == now {
+                arrivals.push(jobs[next_arrival].id());
+                next_arrival += 1;
+            }
+            sched.tick(now, &mut jobs, &arrivals);
+            now += 1;
+
+            let past_arrivals = next_arrival >= jobs.len() && now > last_submit;
+            if past_arrivals {
+                if self.cfg.drain {
+                    if sched.idle() {
+                        break;
+                    }
+                } else if now > last_submit + self.cfg.tail_ticks {
+                    break;
+                }
+            }
+            if now >= self.cfg.max_ticks {
+                break;
+            }
+        }
+
+        let unfinished = jobs.iter().filter(|j| j.state != JobState::Done).count();
+        SimResult {
+            policy: self.cfg.policy,
+            records: jobs.iter().map(JobRecord::from_job).collect(),
+            sched_stats: sched.stats.clone(),
+            makespan: now,
+            unfinished,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobSpec;
+    use crate::workload::Workload;
+
+    fn rv(c: f64, r: f64, g: f64) -> ResourceVec {
+        ResourceVec::new(c, r, g)
+    }
+
+    fn wl(specs: Vec<JobSpec>) -> Workload {
+        Workload::new(specs)
+    }
+
+    #[test]
+    fn empty_workload_terminates() {
+        let cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo);
+        let res = Simulator::new(cfg).run(&wl(vec![]));
+        assert_eq!(res.records.len(), 0);
+        assert_eq!(res.unfinished, 0);
+    }
+
+    #[test]
+    fn drain_completes_everything() {
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Fifo);
+        cfg.paranoid = true;
+        let specs = (0..20)
+            .map(|i| {
+                JobSpec::new(i, if i % 3 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(8.0, 64.0, 2.0), (i as u64) / 2, 7, 1)
+            })
+            .collect();
+        let res = Simulator::new(cfg).run(&wl(specs));
+        assert_eq!(res.unfinished, 0);
+        assert!(res.records.iter().all(|r| r.finished_at.is_some()));
+        assert!(res.records.iter().all(|r| r.slowdown >= 1.0), "slowdown >= 1 always");
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let specs: Vec<JobSpec> = (0..40)
+            .map(|i| {
+                JobSpec::new(i, if i % 4 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(4.0 + (i % 3) as f64 * 8.0, 32.0, (i % 2) as f64 + 1.0),
+                    (i as u64) / 3, 5 + (i as u64 % 13), (i as u64) % 4)
+            })
+            .collect();
+        let mk = || {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Rand);
+            cfg.seed = 99;
+            Simulator::new(cfg).run(&wl(specs.clone()))
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.makespan, b.makespan);
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.finished_at, rb.finished_at);
+            assert_eq!(ra.preemptions, rb.preemptions);
+        }
+    }
+
+    #[test]
+    fn no_drain_stops_at_tail() {
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo);
+        cfg.drain = false;
+        cfg.tail_ticks = 2;
+        // A job that would run for 1000 minutes.
+        let res = Simulator::new(cfg).run(&wl(vec![JobSpec::new(
+            0, JobClass::Be, rv(1.0, 1.0, 0.0), 0, 1000, 0,
+        )]));
+        assert_eq!(res.unfinished, 1);
+        assert!(res.makespan <= 4);
+    }
+
+    #[test]
+    fn json_dump_parses_back() {
+        let cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo);
+        let res = Simulator::new(cfg).run(&wl(vec![JobSpec::new(
+            0, JobClass::Te, rv(1.0, 1.0, 0.0), 0, 5, 0,
+        )]));
+        let j = res.to_json();
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("policy").as_str(), Some("FIFO"));
+        assert_eq!(parsed.get("unfinished").as_u64(), Some(0));
+    }
+}

@@ -1,0 +1,223 @@
+//! Distribution sampling: normal (Box-Muller), truncated normal (the
+//! paper's §4.2 workload model), lognormal (institution-trace synthesis),
+//! and exponential (Poisson inter-arrivals).
+
+use super::rng::Pcg64;
+
+/// A sampleable 1-D distribution.
+pub trait Sample {
+    fn sample(&self, rng: &mut Pcg64) -> f64;
+}
+
+/// Normal(mean, std) via Box-Muller (no cached spare: keeps sampling
+/// stateless so substreams stay aligned regardless of call counts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "std must be non-negative");
+        Normal { mean, std }
+    }
+}
+
+impl Sample for Normal {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        if self.std == 0.0 {
+            return self.mean;
+        }
+        // Box-Muller; u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - rng.next_f64();
+        let u2 = rng.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        self.mean + self.std * z
+    }
+}
+
+/// The paper's workload primitive (§4.2): a normal distribution *truncated*
+/// to `[lo, hi]`, sampled by rejection with a resample cap (falls back to
+/// clamping after `MAX_REJECT` misses, which only triggers for degenerate
+/// parameterizations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TruncatedNormal {
+    pub inner: Normal,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+const MAX_REJECT: usize = 1024;
+
+impl TruncatedNormal {
+    pub fn new(mean: f64, std: f64, lo: f64, hi: f64) -> Self {
+        assert!(lo < hi, "truncation interval must be non-empty ({lo}..{hi})");
+        TruncatedNormal { inner: Normal::new(mean, std), lo, hi }
+    }
+
+    /// Scale the whole distribution (mean, std, and both truncation points)
+    /// by `k` — exactly how Fig. 7 builds its "2.0" / "4.0" / "8.0" GP
+    /// distributions from the "1.0" baseline.
+    pub fn scaled(&self, k: f64) -> Self {
+        TruncatedNormal {
+            inner: Normal::new(self.inner.mean * k, self.inner.std * k),
+            lo: self.lo * k,
+            hi: self.hi * k,
+        }
+    }
+}
+
+impl Sample for TruncatedNormal {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        for _ in 0..MAX_REJECT {
+            let x = self.inner.sample(rng);
+            if x >= self.lo && x <= self.hi {
+                return x;
+            }
+        }
+        self.inner.mean.clamp(self.lo, self.hi)
+    }
+}
+
+/// LogNormal: `exp(Normal(mu, sigma))`. Used to synthesize the heavy-tailed
+/// execution times of the institution trace (§4.4 substitution — see
+/// DESIGN.md §3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        LogNormal { mu, sigma }
+    }
+
+    /// Construct from the desired median and p95 of the resulting
+    /// distribution (more intuitive for trace calibration).
+    pub fn from_median_p95(median: f64, p95: f64) -> Self {
+        assert!(p95 > median && median > 0.0);
+        let mu = median.ln();
+        // p95 = exp(mu + 1.6449 sigma)
+        let sigma = (p95.ln() - mu) / 1.6448536269514722;
+        LogNormal { mu, sigma }
+    }
+}
+
+impl Sample for LogNormal {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        Normal::new(self.mu, self.sigma).sample(rng).exp()
+    }
+}
+
+/// Exponential(rate) via inverse CDF — Poisson-process inter-arrival gaps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0);
+        Exponential { rate }
+    }
+}
+
+impl Sample for Exponential {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let u = 1.0 - rng.next_f64(); // (0, 1]
+        -u.ln() / self.rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        (mean, var.sqrt())
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(1);
+        let d = Normal::new(5.0, 2.0);
+        let xs: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng)).collect();
+        let (mean, std) = moments(&xs);
+        assert!((mean - 5.0).abs() < 0.03, "mean={mean}");
+        assert!((std - 2.0).abs() < 0.03, "std={std}");
+    }
+
+    #[test]
+    fn normal_zero_std_is_constant() {
+        let mut rng = Pcg64::new(2);
+        let d = Normal::new(3.0, 0.0);
+        for _ in 0..10 {
+            assert_eq!(d.sample(&mut rng), 3.0);
+        }
+    }
+
+    #[test]
+    fn truncated_normal_respects_bounds() {
+        let mut rng = Pcg64::new(3);
+        // The paper's TE execution-time model: mean 5 min, trunc at 30 min.
+        let d = TruncatedNormal::new(5.0, 5.0, 1.0, 30.0);
+        for _ in 0..50_000 {
+            let x = d.sample(&mut rng);
+            assert!((1.0..=30.0).contains(&x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn truncated_normal_mean_shifts_up_when_left_truncated() {
+        let mut rng = Pcg64::new(4);
+        let d = TruncatedNormal::new(0.0, 1.0, 0.0, 10.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        let (mean, _) = moments(&xs);
+        // Half-normal mean = sqrt(2/pi) ≈ 0.7979.
+        assert!((mean - 0.7979).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn truncated_scaled_matches_fig7_construction() {
+        let base = TruncatedNormal::new(3.0, 4.0, 0.0, 20.0);
+        let twice = base.scaled(2.0);
+        assert_eq!(twice.inner.mean, 6.0);
+        assert_eq!(twice.inner.std, 8.0);
+        assert_eq!(twice.hi, 40.0);
+    }
+
+    #[test]
+    fn degenerate_truncation_falls_back_to_clamp() {
+        let mut rng = Pcg64::new(5);
+        // Mean far outside a tiny window: rejection will exhaust.
+        let d = TruncatedNormal::new(1000.0, 0.001, 0.0, 1.0);
+        let x = d.sample(&mut rng);
+        assert_eq!(x, 1.0);
+    }
+
+    #[test]
+    fn lognormal_median_p95_calibration() {
+        let mut rng = Pcg64::new(6);
+        let d = LogNormal::from_median_p95(10.0, 100.0);
+        let mut xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[xs.len() / 2];
+        let p95 = xs[(xs.len() as f64 * 0.95) as usize];
+        assert!((med - 10.0).abs() < 0.3, "median={med}");
+        assert!((p95 - 100.0).abs() < 5.0, "p95={p95}");
+    }
+
+    #[test]
+    fn exponential_mean_is_inverse_rate() {
+        let mut rng = Pcg64::new(7);
+        let d = Exponential::new(0.25);
+        let xs: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng)).collect();
+        let (mean, _) = moments(&xs);
+        assert!((mean - 4.0).abs() < 0.05, "mean={mean}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Statistics substrate: deterministic RNG, distribution sampling, and
+//! summary statistics (percentiles).
+//!
+//! The offline image ships no `rand`/`statrs`, so this module implements
+//! the small, well-specified pieces the evaluation needs: a PCG generator,
+//! Box-Muller normals with truncation (the paper's §4.2 workload model),
+//! lognormals (for the synthesized institution trace), exponential
+//! inter-arrivals, and exact percentile computation.
+
+pub mod dist;
+pub mod rng;
+pub mod summary;
+
+pub use dist::{Exponential, LogNormal, Normal, TruncatedNormal};
+pub use rng::Pcg64;
+pub use summary::{percentile, percentiles, Summary};

@@ -1,0 +1,191 @@
+//! PCG-XSH-RR 64/32: a small, fast, statistically solid PRNG
+//! (O'Neill 2014). Two 32-bit outputs are combined for `u64`/`f64` draws.
+//!
+//! Determinism matters here: every simulation result in EXPERIMENTS.md is
+//! reproducible from a seed, and the property-test kit (`testkit`) replays
+//! failures from a reported seed.
+
+/// PCG-XSH-RR 64/32 generator. `Pcg64` refers to the 64-bit *state* (the
+/// conventional "pcg32" engine) with convenience 64-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Create from a seed; the stream constant is fixed (one stream is
+    /// enough — independent substreams are made via `split`).
+    pub fn new(seed: u64) -> Self {
+        let mut r = Pcg64 { state: 0, inc: (54u64 << 1) | 1 };
+        r.state = r.state.wrapping_mul(PCG_MULT).wrapping_add(r.inc);
+        r.state = r.state.wrapping_add(seed);
+        r.state = r.state.wrapping_mul(PCG_MULT).wrapping_add(r.inc);
+        r
+    }
+
+    /// Derive an independent generator (different stream) — used to give
+    /// each workload dimension (exec time, CPU, RAM, GPU, GP, arrivals) its
+    /// own substream so changing one does not perturb the others.
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut r = Pcg64 { state: 0, inc: ((tag.wrapping_mul(2) | 1) << 1) | 1 };
+        r.state = r.state.wrapping_mul(PCG_MULT).wrapping_add(r.inc);
+        r.state = r.state.wrapping_add(seed);
+        r.state = r.state.wrapping_mul(PCG_MULT).wrapping_add(r.inc);
+        r
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's method (unbiased).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_hilo(x, n);
+            if lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+            // retry (rare)
+            let _ = x;
+        }
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick a uniformly random element index from a slice length; `None` for
+    /// empty slices.
+    pub fn pick_index(&mut self, len: usize) -> Option<usize> {
+        if len == 0 {
+            None
+        } else {
+            Some(self.below(len as u64) as usize)
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[inline]
+fn mul_hilo(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_parent_consumption() {
+        let mut a = Pcg64::new(7);
+        let mut sub_a = a.split(1);
+        let mut b = Pcg64::new(7);
+        let mut sub_b = b.split(1);
+        for _ in 0..32 {
+            assert_eq!(sub_a.next_u64(), sub_b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Pcg64::new(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Pcg64::new(11);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Pcg64::new(13);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+
+    #[test]
+    fn pick_index_empty_is_none() {
+        let mut r = Pcg64::new(17);
+        assert_eq!(r.pick_index(0), None);
+        assert!(r.pick_index(3).unwrap() < 3);
+    }
+}

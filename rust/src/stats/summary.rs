@@ -1,0 +1,133 @@
+//! Summary statistics: exact percentiles (the paper reports 50th/95th/99th
+//! percentile slowdown rates) and basic moments.
+
+/// Exact percentile by sorting a copy — linear-interpolation definition
+/// (same as `numpy.percentile(..., method="linear")`), so the python tests
+/// can cross-check values bit-for-bit.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p), "p out of range: {p}");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice (ascending). Callers computing
+/// several percentiles should sort once and use this.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Compute several percentiles with one sort.
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ps.iter().map(|&p| percentile_sorted(&v, p)).collect()
+}
+
+/// Five-number-ish summary used by reports.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty slice");
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: percentile_sorted(&v, 50.0),
+            p95: percentile_sorted(&v, 95.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: v[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_of_odd() {
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), 2.0);
+    }
+
+    #[test]
+    fn median_of_even_interpolates() {
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 2.5);
+    }
+
+    #[test]
+    fn extremes() {
+        let xs = [5.0, 1.0, 9.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+    }
+
+    #[test]
+    fn single_element() {
+        assert_eq!(percentile(&[42.0], 95.0), 42.0);
+    }
+
+    #[test]
+    fn matches_numpy_linear_example() {
+        // numpy.percentile([1,2,3,4,5,6,7,8,9,10], 95) == 9.55
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 95.0) - 9.55).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_batch_equals_individual() {
+        let xs: Vec<f64> = (0..101).map(|i| (i * 37 % 101) as f64).collect();
+        let ps = [50.0, 95.0, 99.0];
+        let batch = percentiles(&xs, &ps);
+        for (b, &p) in batch.iter().zip(&ps) {
+            assert_eq!(*b, percentile(&xs, p));
+        }
+    }
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.p50, 2.5);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_percentile_panics() {
+        percentile(&[], 50.0);
+    }
+}

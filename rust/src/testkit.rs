@@ -1,0 +1,151 @@
+//! Mini property-testing kit (proptest is not available offline).
+//!
+//! Seeded generators + a runner that reports the failing seed so any
+//! counterexample replays deterministically:
+//!
+//! ```text
+//! property failed (case 17, seed 0xDEADBEEF): <message>
+//! ```
+//!
+//! Used by `rust/tests/properties.rs` for the coordinator invariants
+//! (resource conservation, FIFO ordering, preemption caps, …).
+
+use crate::stats::rng::Pcg64;
+
+/// Configuration of a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Base seed is stable so CI failures reproduce; override per-call
+        // or via FITGPP_PROP_SEED for fuzzing sessions.
+        let seed = std::env::var("FITGPP_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xF17_6990);
+        let cases = std::env::var("FITGPP_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop` for `cfg.cases` cases. Each case gets an independent RNG
+/// derived from the base seed; `prop` returns `Err(msg)` to fail. Panics
+/// with the case index + derived seed on failure.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg64::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed (case {case}, seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Generators for common values.
+pub mod gen {
+    use crate::job::{JobClass, JobSpec};
+    use crate::resources::ResourceVec;
+    use crate::stats::rng::Pcg64;
+
+    /// Uniform integer in `[lo, hi]`.
+    pub fn int(rng: &mut Pcg64, lo: u64, hi: u64) -> u64 {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// A random demand that fits a PFN node; occasionally extreme
+    /// (full-node) to probe edge behaviour.
+    pub fn demand(rng: &mut Pcg64) -> ResourceVec {
+        if rng.chance(0.05) {
+            return ResourceVec::pfn_node(); // whole-node job
+        }
+        ResourceVec::new(
+            int(rng, 1, 32) as f64,
+            int(rng, 1, 256) as f64,
+            int(rng, 0, 8) as f64,
+        )
+    }
+
+    /// A random job spec with dense id `id`, submit in `[0, span]`.
+    pub fn job_spec(rng: &mut Pcg64, id: u32, span: u64) -> JobSpec {
+        let class = if rng.chance(0.3) { JobClass::Te } else { JobClass::Be };
+        let exec = match class {
+            JobClass::Te => int(rng, 1, 30),
+            JobClass::Be => int(rng, 1, 240),
+        };
+        JobSpec {
+            id: crate::job::JobId(id),
+            class,
+            demand: demand(rng),
+            submit: int(rng, 0, span),
+            exec_time: exec,
+            grace_period: int(rng, 0, 20),
+        }
+    }
+
+    /// A whole random workload (sorted, dense ids).
+    pub fn workload(rng: &mut Pcg64, n: usize, span: u64) -> crate::workload::Workload {
+        let specs = (0..n).map(|i| job_spec(rng, i as u32, span)).collect();
+        crate::workload::Workload::new(specs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", PropConfig { cases: 10, seed: 1 }, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("fails", PropConfig { cases: 5, seed: 1 }, |rng| {
+            let x = rng.below(100);
+            if x < 1000 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_produce_valid_values() {
+        let mut rng = Pcg64::new(2);
+        for i in 0..200 {
+            let s = gen::job_spec(&mut rng, i, 100);
+            assert!(s.exec_time >= 1);
+            assert!(s.grace_period <= 20);
+            assert!(s.demand.fits_in(&crate::resources::ResourceVec::pfn_node()));
+        }
+        let wl = gen::workload(&mut rng, 50, 100);
+        assert_eq!(wl.len(), 50);
+    }
+}

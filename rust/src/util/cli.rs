@@ -1,0 +1,272 @@
+//! Minimal CLI flag parser (clap is not available offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, `-h/--help` text generation, and typed accessors with
+//! defaults. Used by the `fitgpp` binary and every example.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative option spec for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    program: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1:?} ({2})")]
+    BadValue(String, String, String),
+    #[error("help requested")]
+    Help,
+}
+
+/// A command-line interface: a name, a description, and its options.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, opts: Vec::new() }
+    }
+
+    /// Option taking a value, with an optional default shown in help.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    /// Boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "USAGE: {} [OPTIONS] [ARGS...]\n\nOPTIONS:", self.name);
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "{left:<32}{}{default}", o.help);
+        }
+        let _ = writeln!(s, "  {:<30}print this help", "-h, --help");
+        s
+    }
+
+    /// Parse an explicit argv (first element = program name optional).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, CliError> {
+        let mut it = argv.into_iter().peekable();
+        let program = it.peek().cloned().unwrap_or_default();
+        let mut args = Args { program, ..Default::default() };
+        let mut first = true;
+        while let Some(tok) = it.next() {
+            if first {
+                first = false;
+                if !tok.starts_with('-') {
+                    continue; // program name
+                }
+            }
+            if tok == "-h" || tok == "--help" {
+                return Err(CliError::Help);
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.is_flag {
+                    args.flags.push(name);
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    args.opts.insert(name, val);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`; on `-h` prints help and exits 0; on error
+    /// prints the error + help and exits 2.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args()) {
+            Ok(a) => a,
+            Err(CliError::Help) => {
+                print!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n");
+                eprint!("{}", self.help_text());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    fn typed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(raw) => raw.parse::<T>().map_err(|e| {
+                CliError::BadValue(name.to_string(), raw.to_string(), e.to_string())
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.typed(name, default).unwrap_or_else(|e| fail(e))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.typed(name, default).unwrap_or_else(|e| fail(e))
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.typed(name, default).unwrap_or_else(|e| fail(e))
+    }
+
+    pub fn get_string(&self, name: &str, default: &str) -> String {
+        self.get_or(name, default).to_string()
+    }
+}
+
+fn fail(e: CliError) -> ! {
+    eprintln!("error: {e}");
+    std::process::exit(2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("jobs", Some("1024"), "number of jobs")
+            .opt("policy", None, "policy name")
+            .flag("verbose", "chatty")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.iter().map(|x| x.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let a = cli().parse_from(argv(&["--jobs", "64", "--policy=fitgpp"])).unwrap();
+        assert_eq!(a.get("jobs"), Some("64"));
+        assert_eq!(a.get("policy"), Some("fitgpp"));
+        assert_eq!(a.get_u64("jobs", 0), 64);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cli().parse_from(argv(&["--verbose", "input.csv", "out.csv"])).unwrap();
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.positional, vec!["input.csv", "out.csv"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse_from(argv(&[])).unwrap();
+        assert_eq!(a.get_u64("jobs", 1024), 1024);
+        assert_eq!(a.get_f64("missing", 4.0), 4.0);
+        assert_eq!(a.get_string("policy", "fifo"), "fifo");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cli().parse_from(argv(&["--nope", "1"])),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cli().parse_from(argv(&["--jobs"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn help_flag_detected() {
+        assert!(matches!(cli().parse_from(argv(&["-h"])), Err(CliError::Help)));
+        assert!(matches!(cli().parse_from(argv(&["--help"])), Err(CliError::Help)));
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = cli().parse_from(argv(&["--jobs", "abc"])).unwrap();
+        assert!(a.typed::<u64>("jobs", 0).is_err());
+    }
+
+    #[test]
+    fn help_text_lists_options() {
+        let h = cli().help_text();
+        assert!(h.contains("--jobs"));
+        assert!(h.contains("default: 1024"));
+        assert!(h.contains("--verbose"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Small utilities the offline image forces us to own: JSON, CLI flag
+//! parsing, and fixed-width table rendering.
+
+pub mod cli;
+pub mod json;
+pub mod table;

@@ -1,0 +1,98 @@
+//! Workloads: job sequences fed to the simulator.
+//!
+//! * [`synthetic`] — the §4.2 generator: per-class truncated-normal
+//!   execution times / demands / grace periods, with submission times
+//!   calibrated so the FIFO cluster load stays at the target (2.0).
+//! * [`trace`] — CSV trace I/O plus a synthesized "institution trace"
+//!   (heavy-tailed, bursty) standing in for the private cluster trace of
+//!   §4.4 (see DESIGN.md §3 for the substitution argument).
+
+pub mod synthetic;
+pub mod trace;
+
+use crate::job::{JobClass, JobSpec};
+use crate::resources::ResourceVec;
+
+/// An ordered job sequence. Invariants (enforced by `new`): jobs sorted by
+/// submission time, ids dense `0..n` in submission order (the simulator
+/// indexes its job table by id).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub jobs: Vec<JobSpec>,
+}
+
+impl Workload {
+    /// Normalize: stable-sort by submit time and reassign dense ids.
+    pub fn new(mut jobs: Vec<JobSpec>) -> Self {
+        jobs.sort_by_key(|j| j.submit);
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.id = crate::job::JobId(i as u32);
+        }
+        Workload { jobs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Fraction of TE jobs.
+    pub fn te_fraction(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        let te = self.jobs.iter().filter(|j| j.class == JobClass::Te).count();
+        te as f64 / self.jobs.len() as f64
+    }
+
+    /// Total work = Σ demand · exec-time, as a resource-minutes vector.
+    pub fn total_work(&self) -> ResourceVec {
+        self.jobs.iter().fold(ResourceVec::ZERO, |acc, j| {
+            acc + j.demand.scale(j.exec_time as f64)
+        })
+    }
+
+    /// Span of submission times in minutes.
+    pub fn submit_span(&self) -> u64 {
+        match (self.jobs.first(), self.jobs.last()) {
+            (Some(a), Some(b)) => b.submit - a.submit,
+            _ => 0,
+        }
+    }
+
+    /// Filter to a class (diagnostics).
+    pub fn of_class(&self, class: JobClass) -> impl Iterator<Item = &JobSpec> {
+        self.jobs.iter().filter(move |j| j.class == class)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobId;
+
+    #[test]
+    fn new_sorts_and_renumbers() {
+        let wl = Workload::new(vec![
+            JobSpec::new(7, JobClass::Be, ResourceVec::new(1.0, 1.0, 0.0), 10, 5, 0),
+            JobSpec::new(3, JobClass::Te, ResourceVec::new(1.0, 1.0, 0.0), 2, 5, 0),
+        ]);
+        assert_eq!(wl.jobs[0].submit, 2);
+        assert_eq!(wl.jobs[0].id, JobId(0));
+        assert_eq!(wl.jobs[1].id, JobId(1));
+        assert_eq!(wl.te_fraction(), 0.5);
+        assert_eq!(wl.submit_span(), 8);
+    }
+
+    #[test]
+    fn total_work_accumulates() {
+        let wl = Workload::new(vec![
+            JobSpec::new(0, JobClass::Be, ResourceVec::new(2.0, 4.0, 1.0), 0, 10, 0),
+            JobSpec::new(1, JobClass::Be, ResourceVec::new(1.0, 2.0, 0.0), 0, 20, 0),
+        ]);
+        assert_eq!(wl.total_work(), ResourceVec::new(40.0, 80.0, 10.0));
+    }
+}

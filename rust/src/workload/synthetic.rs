@@ -1,0 +1,284 @@
+//! The §4.2 synthetic workload generator.
+//!
+//! The paper fits separate (truncated) normal distributions per job class
+//! to the institution trace for (1) execution time, (2) CPU, (3) RAM, and
+//! (4) GPU, then submits jobs "at such a rate that the cluster load (the
+//! ratio of the total resource demand relative to the capacity) would be
+//! kept at 2.0 if they were scheduled by FIFO".
+//!
+//! Published parameters: TE exec ~ N(5 min, ·) trunc 30 min; BE exec ~
+//! N(30 min, ·) trunc 24 h; GP ~ N(3 min, ·) trunc 20 min. The standard
+//! deviations and the Fig. 2 demand distributions are not printed in the
+//! paper, so we choose values that reproduce its qualitative regime
+//! (several jobs per node, GPU as the binding axis, a standing FIFO
+//! backlog ≈ one cluster-capacity of demand) and document them here; all
+//! are overridable via the builder.
+//!
+//! **Arrival calibration.** "Kept at 2.0 under FIFO" is implemented
+//! literally: the generator runs an *internal FIFO simulation* and, at
+//! every simulated minute, injects new jobs while the outstanding demand
+//! (queued + running, dominant-axis share of total capacity) is below the
+//! target. The resulting submission times are frozen into the workload,
+//! and every policy replays the identical sequence.
+
+use super::Workload;
+use crate::cluster::ClusterSpec;
+use crate::job::{Job, JobClass, JobId, JobSpec};
+use crate::resources::ResourceVec;
+use crate::sched::policy::PolicyKind;
+use crate::sched::{SchedConfig, Scheduler};
+use crate::stats::dist::{Sample, TruncatedNormal};
+use crate::stats::rng::Pcg64;
+
+/// Per-class demand/exec distribution bundle.
+#[derive(Debug, Clone)]
+pub struct ClassDists {
+    pub exec_min: TruncatedNormal,
+    pub cpu: TruncatedNormal,
+    pub ram_gb: TruncatedNormal,
+    pub gpu: TruncatedNormal,
+}
+
+/// Builder for §4.2 workloads.
+#[derive(Debug, Clone)]
+pub struct SyntheticWorkload {
+    pub seed: u64,
+    pub num_jobs: usize,
+    pub te_fraction: f64,
+    pub target_load: f64,
+    pub cluster: ClusterSpec,
+    pub te: ClassDists,
+    pub be: ClassDists,
+    pub gp: TruncatedNormal,
+    /// Fraction of jobs that request zero GPUs (CPU-only preprocessing
+    /// etc.; gives the GPU axis the bimodal shape of a real DL cluster).
+    pub cpu_only_fraction: f64,
+}
+
+impl SyntheticWorkload {
+    /// The paper's §4.2 configuration (with documented choices where the
+    /// paper is silent — see module docs).
+    pub fn paper_section_4_2(seed: u64) -> Self {
+        SyntheticWorkload {
+            seed,
+            num_jobs: 1 << 16,
+            te_fraction: 0.30,
+            target_load: 2.0,
+            cluster: ClusterSpec::pfn(),
+            te: ClassDists {
+                // Paper: mean 5 min, truncated at 30 min. Demands: TE jobs
+                // are short-*duration* debugging runs of the same models
+                // the BE jobs train (Fig. 2 shows similar per-class demand
+                // marginals — debugging a 4-GPU model still needs 4 GPUs),
+                // so the demand distributions match the BE ones. This is
+                // also what makes preemption necessary at all: a TE job
+                // rarely fits in the slack the blocked BE head left behind.
+                exec_min: TruncatedNormal::new(5.0, 6.0, 1.0, 30.0),
+                cpu: TruncatedNormal::new(8.0, 8.0, 1.0, 32.0),
+                ram_gb: TruncatedNormal::new(64.0, 64.0, 1.0, 256.0),
+                gpu: TruncatedNormal::new(3.0, 2.5, 0.0, 8.0),
+            },
+            be: ClassDists {
+                // Paper: mean 30 min, truncated at 24 h.
+                exec_min: TruncatedNormal::new(30.0, 60.0, 1.0, 1440.0),
+                cpu: TruncatedNormal::new(8.0, 8.0, 1.0, 32.0),
+                ram_gb: TruncatedNormal::new(64.0, 64.0, 1.0, 256.0),
+                gpu: TruncatedNormal::new(3.0, 2.5, 0.0, 8.0),
+            },
+            // Paper: mean 3 min, truncated at 20 min (σ chosen so a
+            // meaningful mass sits near zero — rewind-tolerant jobs).
+            gp: TruncatedNormal::new(3.0, 4.0, 0.0, 20.0),
+            cpu_only_fraction: 0.1,
+        }
+    }
+
+    pub fn with_num_jobs(mut self, n: usize) -> Self {
+        self.num_jobs = n;
+        self
+    }
+
+    pub fn with_te_fraction(mut self, f: f64) -> Self {
+        assert!((0.0..=1.0).contains(&f));
+        self.te_fraction = f;
+        self
+    }
+
+    pub fn with_target_load(mut self, l: f64) -> Self {
+        assert!(l > 0.0);
+        self.target_load = l;
+        self
+    }
+
+    pub fn with_cluster(mut self, c: ClusterSpec) -> Self {
+        self.cluster = c;
+        self
+    }
+
+    /// Fig. 7: scale the whole GP distribution (mean, σ, truncation) by `k`.
+    pub fn with_gp_scale(mut self, k: f64) -> Self {
+        self.gp = self.gp.scaled(k);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Draw one job spec (id/submit filled by the calibration loop).
+    fn draw_job(&self, rng: &mut Pcg64, gp_rng: &mut Pcg64, class_rng: &mut Pcg64) -> (JobClass, ResourceVec, u64, u64) {
+        let class = if class_rng.chance(self.te_fraction) {
+            JobClass::Te
+        } else {
+            JobClass::Be
+        };
+        let d = match class {
+            JobClass::Te => &self.te,
+            JobClass::Be => &self.be,
+        };
+        let cpu = d.cpu.sample(rng).round().max(1.0);
+        let ram = d.ram_gb.sample(rng).round().max(1.0);
+        let gpu = if rng.chance(self.cpu_only_fraction) {
+            0.0
+        } else {
+            d.gpu.sample(rng).round().max(0.0)
+        };
+        let mut demand = ResourceVec::new(cpu, ram, gpu);
+        // Cap at the largest node so every job is schedulable.
+        let max_cap = self
+            .cluster
+            .nodes
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, c| acc.max(c));
+        demand = demand.min(&max_cap);
+        let exec = d.exec_min.sample(rng).round().max(1.0) as u64;
+        let gp = self.gp.sample(gp_rng).round().max(0.0) as u64;
+        (class, demand, exec, gp)
+    }
+
+    /// Generate the workload: run the internal FIFO calibration sim and
+    /// freeze submission times.
+    pub fn generate(&self) -> Workload {
+        let mut root = Pcg64::new(self.seed);
+        let mut demand_rng = root.split(1);
+        let mut gp_rng = root.split(2);
+        let mut class_rng = root.split(3);
+
+        let total_cap = self.cluster.total_capacity();
+        let mut sched = Scheduler::new(&self.cluster, SchedConfig::new(PolicyKind::Fifo));
+        let mut jobs: Vec<Job> = Vec::with_capacity(self.num_jobs);
+        let mut arrivals: Vec<JobId> = Vec::new();
+        let mut now: u64 = 0;
+        let mut drawn = 0usize;
+
+        while drawn < self.num_jobs {
+            // Inject while the FIFO outstanding load is below target.
+            arrivals.clear();
+            loop {
+                let load = sched
+                    .outstanding_demand(&jobs)
+                    .dominant_share(&total_cap);
+                if load >= self.target_load || drawn >= self.num_jobs {
+                    break;
+                }
+                let (class, demand, exec, gp) = self.draw_job(&mut demand_rng, &mut gp_rng, &mut class_rng);
+                let id = JobId(drawn as u32);
+                let spec = JobSpec { id, class, demand, submit: now, exec_time: exec, grace_period: gp };
+                jobs.push(Job::new(spec));
+                arrivals.push(id);
+                // The arrival immediately counts toward outstanding demand
+                // once submitted below.
+                sched.submit(&jobs[drawn]);
+                drawn += 1;
+            }
+            // Tick FIFO (arrivals were already submitted above; pass none).
+            sched.tick(now, &mut jobs, &[]);
+            now += 1;
+        }
+
+        Workload::new(jobs.into_iter().map(|j| j.spec).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SyntheticWorkload {
+        SyntheticWorkload::paper_section_4_2(42)
+            .with_cluster(ClusterSpec::tiny(4))
+            .with_num_jobs(512)
+    }
+
+    #[test]
+    fn respects_published_truncations() {
+        let wl = small().generate();
+        for j in &wl.jobs {
+            match j.class {
+                JobClass::Te => assert!(j.exec_time <= 30, "TE exec trunc 30: {}", j.exec_time),
+                JobClass::Be => assert!(j.exec_time <= 1440, "BE exec trunc 24h"),
+            }
+            assert!(j.grace_period <= 20, "GP trunc 20 min");
+            assert!(j.exec_time >= 1);
+        }
+    }
+
+    #[test]
+    fn te_fraction_close_to_requested() {
+        let wl = SyntheticWorkload::paper_section_4_2(7)
+            .with_cluster(ClusterSpec::tiny(4))
+            .with_num_jobs(4096)
+            .generate();
+        assert!((wl.te_fraction() - 0.30).abs() < 0.03, "{}", wl.te_fraction());
+    }
+
+    #[test]
+    fn demands_fit_some_node() {
+        let wl = small().generate();
+        let cap = ResourceVec::pfn_node();
+        for j in &wl.jobs {
+            assert!(j.demand.fits_in(&cap), "{} exceeds node", j.demand);
+            assert!(j.demand.cpu >= 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = small().generate();
+        let b = small().generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x, y);
+        }
+        let c = small().with_seed(43).generate();
+        assert!(a.jobs.iter().zip(&c.jobs).any(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn load_calibration_builds_backlog() {
+        // Under the FIFO calibration the submission span must be long
+        // enough that arrivals are rate-limited (not all at t=0), and the
+        // workload's outstanding load target implies a standing backlog.
+        let wl = small().generate();
+        assert!(wl.submit_span() > 10, "span={}", wl.submit_span());
+        // Sorted ids == submit order.
+        for w in wl.jobs.windows(2) {
+            assert!(w[0].submit <= w[1].submit);
+        }
+    }
+
+    #[test]
+    fn gp_scale_scales_truncation() {
+        let wl = small().with_gp_scale(8.0).generate();
+        let max_gp = wl.jobs.iter().map(|j| j.grace_period).max().unwrap();
+        assert!(max_gp > 20, "scaled GPs must exceed the 1.0-scale cap");
+        assert!(max_gp <= 160);
+    }
+
+    #[test]
+    fn zero_gpu_jobs_exist() {
+        let wl = small().generate();
+        assert!(wl.jobs.iter().any(|j| j.demand.gpu == 0.0));
+        assert!(wl.jobs.iter().any(|j| j.demand.gpu > 0.0));
+    }
+}

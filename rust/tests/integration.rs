@@ -1,0 +1,190 @@
+//! Cross-module integration tests: config → workload → simulator →
+//! metrics → serialization, plus trace round-trips through the CLI-facing
+//! API surface.
+
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::config::ExperimentConfig;
+use fitgpp::job::JobClass;
+use fitgpp::metrics::slowdown_table;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::util::json::Json;
+use fitgpp::workload::{synthetic::SyntheticWorkload, trace::Trace};
+
+#[test]
+fn config_to_results_pipeline() {
+    let cfg = ExperimentConfig::from_json(
+        r#"{
+            "cluster": {"nodes": 4},
+            "policy": "fitgpp:s=4,p=1",
+            "seed": 3,
+            "workload": {"kind": "synthetic", "jobs": 400, "seed": 3}
+        }"#,
+    )
+    .unwrap();
+    let wl = cfg.build_workload().unwrap();
+    assert_eq!(wl.len(), 400);
+    let res = Simulator::new(cfg.sim_config()).run(&wl);
+    assert_eq!(res.unfinished, 0);
+    // JSON dump round-trips and has the right fields.
+    let dump = res.to_json().to_pretty();
+    let back = Json::parse(&dump).unwrap();
+    assert!(back.get("slowdown").get("te").get("p95").as_f64().is_some());
+    assert!(back.get("preemption").get("fraction_preempted").as_f64().is_some());
+}
+
+#[test]
+fn trace_file_workload_roundtrip() {
+    let dir = std::env::temp_dir().join("fitgpp-itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.csv");
+    let wl = Trace::synthesize_institution(5, 300);
+    Trace::write_csv(&wl, &path).unwrap();
+
+    let cfg = ExperimentConfig::from_json(&format!(
+        r#"{{
+            "cluster": {{"nodes": 4}},
+            "policy": "lrtp",
+            "workload": {{"kind": "trace", "path": "{}"}}
+        }}"#,
+        path.display()
+    ))
+    .unwrap();
+    let wl2 = cfg.build_workload().unwrap();
+    assert_eq!(wl2.len(), wl.len());
+    let res = Simulator::new(cfg.sim_config()).run(&wl2);
+    assert_eq!(res.unfinished, 0);
+}
+
+#[test]
+fn four_policy_comparison_has_paper_shape() {
+    // A scaled-down Table 1: the orderings the paper reports must hold.
+    let cluster = ClusterSpec::tiny(6);
+    let wl = SyntheticWorkload::paper_section_4_2(23)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(1500)
+        .generate();
+    let run = |p: PolicyKind| {
+        let mut cfg = SimConfig::new(cluster.clone(), p);
+        cfg.seed = 1;
+        Simulator::new(cfg).run(&wl)
+    };
+    let fifo = run(PolicyKind::Fifo);
+    let lrtp = run(PolicyKind::Lrtp);
+    let rand = run(PolicyKind::Rand);
+    let fg = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+
+    let te = |r: &fitgpp::sim::SimResult| r.slowdown_report().te;
+    let be = |r: &fitgpp::sim::SimResult| r.slowdown_report().be;
+
+    // All preemptive policies crush FIFO's TE tail.
+    for (name, r) in [("lrtp", &lrtp), ("rand", &rand), ("fitgpp", &fg)] {
+        assert!(
+            te(r).p95 < te(&fifo).p95 * 0.6,
+            "{name} TE p95 {} vs FIFO {}",
+            te(r).p95,
+            te(&fifo).p95
+        );
+    }
+    // FitGpp's BE slowdown beats (or matches) LRTP's and RAND's.
+    assert!(
+        be(&fg).p95 <= be(&lrtp).p95 * 1.05,
+        "fitgpp BE p95 {} vs lrtp {}",
+        be(&fg).p95,
+        be(&lrtp).p95
+    );
+    assert!(
+        be(&fg).p95 <= be(&rand).p95 * 1.05,
+        "fitgpp BE p95 {} vs rand {}",
+        be(&fg).p95,
+        be(&rand).p95
+    );
+    // FitGpp preempts fewer jobs than the node-blind baselines. (The
+    // paper's order-of-magnitude gap needs the full 84-node scale — the
+    // table3_preempted bench reproduces it; at this test's 6-node scale
+    // the direction still holds.)
+    assert!(fg.sched_stats.preemption_signals < rand.sched_stats.preemption_signals);
+
+    // The table renderer produces all four rows.
+    let rows = [
+        ("FIFO", fifo.slowdown_report()),
+        ("LRTP", lrtp.slowdown_report()),
+        ("RAND", rand.slowdown_report()),
+        ("FitGpp", fg.slowdown_report()),
+    ];
+    let t = slowdown_table("Table 1 (scaled)", &rows);
+    let text = t.to_text();
+    for name in ["FIFO", "LRTP", "RAND", "FitGpp"] {
+        assert!(text.contains(name));
+    }
+}
+
+#[test]
+fn gp_scale_raises_te_wait_under_lrtp() {
+    // Fig. 7's mechanism: longer grace periods make LRTP's TE latency
+    // worse (its victims' GPs gate the TE start).
+    let cluster = ClusterSpec::tiny(4);
+    let mk = |scale: f64| {
+        SyntheticWorkload::paper_section_4_2(31)
+            .with_cluster(cluster.clone())
+            .with_num_jobs(800)
+            .with_gp_scale(scale)
+            .generate()
+    };
+    let run = |wl: &fitgpp::workload::Workload| {
+        let mut cfg = SimConfig::new(cluster.clone(), PolicyKind::Lrtp);
+        cfg.seed = 2;
+        Simulator::new(cfg).run(wl).slowdown_report().te.p95
+    };
+    let base = run(&mk(1.0));
+    let scaled = run(&mk(8.0));
+    assert!(
+        scaled > base,
+        "8× GPs must raise LRTP TE p95: {base} → {scaled}"
+    );
+}
+
+#[test]
+fn te_fraction_sweep_is_monotone_under_fifo() {
+    // Fig. 6's x-axis: more TE jobs ⇒ the TE percentile under FIFO can
+    // only stay or worsen mildly... we assert the sweep *runs* and yields
+    // finite numbers for every fraction (shape assertions live in the
+    // bench, which prints the full series).
+    let cluster = ClusterSpec::tiny(4);
+    for frac in [0.1, 0.3, 0.5, 0.7] {
+        let wl = SyntheticWorkload::paper_section_4_2(41)
+            .with_cluster(cluster.clone())
+            .with_num_jobs(400)
+            .with_te_fraction(frac)
+            .generate();
+        let res = Simulator::new(SimConfig::new(cluster.clone(), PolicyKind::Fifo)).run(&wl);
+        let te = res.slowdowns(JobClass::Te);
+        assert!(!te.is_empty());
+        assert!(te.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn progress_during_grace_lets_short_victims_finish() {
+    // Ablation (DESIGN.md): with progress-during-grace, a victim whose
+    // remaining work is shorter than its grace period completes during the
+    // drain instead of being suspended and re-queued.
+    use fitgpp::job::JobSpec;
+    use fitgpp::resources::ResourceVec;
+    let specs = vec![
+        // Victim: 4 minutes of work left when preempted, GP 10.
+        JobSpec::new(0, JobClass::Be, ResourceVec::new(32.0, 256.0, 8.0), 0, 5, 10),
+        JobSpec::new(1, JobClass::Te, ResourceVec::new(8.0, 64.0, 2.0), 1, 5, 0),
+    ];
+    let run = |progress: bool| {
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+        cfg.progress_during_grace = progress;
+        Simulator::new(cfg).run(&fitgpp::workload::Workload::new(specs.clone()))
+    };
+    let with = run(true);
+    assert_eq!(with.records[0].preemptions, 0, "finished during drain");
+    assert_eq!(with.records[0].finished_at, Some(5));
+    let without = run(false);
+    assert_eq!(without.records[0].preemptions, 1, "suspended and resumed");
+    assert!(without.records[0].finished_at.unwrap() > 5);
+}

@@ -1,0 +1,180 @@
+//! Scenario tests: the qualitative behaviours §3 claims for FitGpp,
+//! demonstrated on crafted workloads.
+
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::job::{JobClass, JobSpec};
+use fitgpp::resources::ResourceVec;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, SimResult, Simulator};
+use fitgpp::workload::Workload;
+
+fn rv(c: f64, r: f64, g: f64) -> ResourceVec {
+    ResourceVec::new(c, r, g)
+}
+
+fn run(policy: PolicyKind, nodes: usize, specs: Vec<JobSpec>) -> SimResult {
+    let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes), policy);
+    cfg.paranoid = true;
+    Simulator::new(cfg).run(&Workload::new(specs))
+}
+
+/// A full node of BE jobs: one big (long GP), several small (short GP).
+fn mixed_node_workload() -> Vec<JobSpec> {
+    let mut specs = vec![
+        // Big BE job: 24 CPUs, GP 15.
+        JobSpec::new(0, JobClass::Be, rv(24.0, 192.0, 6.0), 0, 200, 15),
+    ];
+    // Two small BE jobs: 4 CPUs each, GP 1.
+    for i in 1..=2 {
+        specs.push(JobSpec::new(i, JobClass::Be, rv(4.0, 32.0, 1.0), 0, 200, 1));
+    }
+    // TE job arrives once the node is saturated.
+    specs.push(JobSpec::new(3, JobClass::Te, rv(4.0, 32.0, 1.0), 5, 10, 0));
+    specs
+}
+
+#[test]
+fn fitgpp_picks_small_short_gp_victim() {
+    let res = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, 1, mixed_node_workload());
+    let big = &res.records[0];
+    assert_eq!(big.preemptions, 0, "big/long-GP job must be spared");
+    let small_preempted: u32 = res.records[1..=2].iter().map(|r| r.preemptions).sum();
+    assert_eq!(small_preempted, 1, "exactly one small victim (Eq. 2)");
+    // TE waits only the short GP: signal at t=5, GP 1 ⇒ start t=6.
+    assert_eq!(res.records[3].first_start, Some(6));
+}
+
+#[test]
+fn lrtp_picks_longest_remaining_regardless_of_gp() {
+    // Make the big job also the longest-remaining: LRTP evicts it and the
+    // TE job eats its 15-minute grace period.
+    let res = run(PolicyKind::Lrtp, 1, mixed_node_workload());
+    assert_eq!(res.records[0].preemptions, 1, "LRTP evicts the longest job");
+    assert_eq!(res.records[3].first_start, Some(20), "TE waits the 15-min GP");
+}
+
+#[test]
+fn te_slowdown_fitgpp_beats_fifo_on_contended_cluster() {
+    // Synthetic contention: FIFO's TE tail must collapse under FitGpp —
+    // the paper's headline claim, in miniature.
+    let wl = fitgpp::workload::synthetic::SyntheticWorkload::paper_section_4_2(11)
+        .with_cluster(ClusterSpec::tiny(4))
+        .with_num_jobs(800)
+        .generate();
+    let mut fifo_cfg = SimConfig::new(ClusterSpec::tiny(4), PolicyKind::Fifo);
+    fifo_cfg.seed = 1;
+    let fifo = Simulator::new(fifo_cfg).run(&wl);
+    let mut fg_cfg = SimConfig::new(
+        ClusterSpec::tiny(4),
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+    );
+    fg_cfg.seed = 1;
+    let fg = Simulator::new(fg_cfg).run(&wl);
+    let fifo_te = fifo.slowdown_report().te;
+    let fg_te = fg.slowdown_report().te;
+    assert!(
+        fg_te.p95 < fifo_te.p95 * 0.5,
+        "FitGpp TE p95 {} must be well below FIFO {}",
+        fg_te.p95,
+        fifo_te.p95
+    );
+    // BE jobs are not destroyed in the process (within 2× of FIFO median).
+    let fifo_be = fifo.slowdown_report().be;
+    let fg_be = fg.slowdown_report().be;
+    assert!(
+        fg_be.p50 < fifo_be.p50 * 2.0,
+        "FitGpp BE p50 {} vs FIFO {}",
+        fg_be.p50,
+        fifo_be.p50
+    );
+}
+
+#[test]
+fn fitgpp_preempts_fewer_jobs_than_rand() {
+    let wl = fitgpp::workload::synthetic::SyntheticWorkload::paper_section_4_2(13)
+        .with_cluster(ClusterSpec::tiny(4))
+        .with_num_jobs(800)
+        .generate();
+    let run_policy = |p: PolicyKind| {
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(4), p);
+        cfg.seed = 5;
+        Simulator::new(cfg).run(&wl)
+    };
+    let fg = run_policy(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+    let rand = run_policy(PolicyKind::Rand);
+    assert!(
+        fg.preempted_fraction() < rand.preempted_fraction(),
+        "FitGpp {} !< RAND {}",
+        fg.preempted_fraction(),
+        rand.preempted_fraction()
+    );
+}
+
+#[test]
+fn fastlane_explains_part_of_the_gain() {
+    // Ablation: TE bypass alone already helps vs FIFO, but preemption
+    // (FitGpp) helps more under saturation.
+    let wl = fitgpp::workload::synthetic::SyntheticWorkload::paper_section_4_2(17)
+        .with_cluster(ClusterSpec::tiny(4))
+        .with_num_jobs(600)
+        .generate();
+    let run_policy = |p: PolicyKind| {
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(4), p);
+        cfg.seed = 9;
+        Simulator::new(cfg).run(&wl).slowdown_report().te.p95
+    };
+    let fifo = run_policy(PolicyKind::Fifo);
+    let lane = run_policy(PolicyKind::FastLane);
+    let fg = run_policy(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+    assert!(lane < fifo, "bypass alone must beat FIFO ({lane} vs {fifo})");
+    assert!(fg <= lane, "preemption must not hurt vs bypass ({fg} vs {lane})");
+}
+
+#[test]
+fn zero_gp_means_zero_te_wait() {
+    // Every BE job rewindable (GP 0): the TE job starts the minute it
+    // arrives (§2's rewinding remark).
+    let specs = vec![
+        JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 100, 0),
+        JobSpec::new(1, JobClass::Te, rv(8.0, 64.0, 2.0), 7, 10, 0),
+    ];
+    let res = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, 1, specs);
+    assert_eq!(res.records[1].first_start, Some(7));
+    assert!((res.records[1].slowdown - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn victim_requeued_at_top_restarts_before_queue() {
+    // After preemption, the victim must re-enter service before BE jobs
+    // that were already queued (the paper's "top of the queue" rule).
+    let specs = vec![
+        JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 50, 0), // victim
+        JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 1, 50, 0), // queued
+        JobSpec::new(2, JobClass::Be, rv(32.0, 256.0, 8.0), 2, 50, 0), // queued
+        JobSpec::new(3, JobClass::Te, rv(8.0, 64.0, 2.0), 5, 5, 0),
+    ];
+    let res = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, 1, specs);
+    let victim = &res.records[0];
+    assert_eq!(victim.preemptions, 1);
+    let restart = victim.first_start.unwrap() + victim.resched_intervals[0] + 1;
+    assert!(
+        restart <= res.records[1].first_start.unwrap(),
+        "victim restarts at {restart}, queued job started {}",
+        res.records[1].first_start.unwrap()
+    );
+}
+
+#[test]
+fn sensitivity_larger_s_prefers_shorter_gp_victims() {
+    // Two candidate victims: small-with-long-GP vs large-with-zero-GP.
+    // s = 0 picks the small one (size only); s = 8 flips to the zero-GP one.
+    let specs_base = vec![
+        JobSpec::new(0, JobClass::Be, rv(6.0, 48.0, 2.0), 0, 200, 20), // small, GP 20
+        JobSpec::new(1, JobClass::Be, rv(20.0, 160.0, 5.0), 0, 200, 0), // large, GP 0
+        JobSpec::new(2, JobClass::Te, rv(8.0, 64.0, 2.0), 5, 10, 0),
+    ];
+    let low_s = run(PolicyKind::FitGpp { s: 0.0, p_max: Some(1) }, 1, specs_base.clone());
+    assert_eq!(low_s.records[0].preemptions, 1, "s=0 ⇒ smallest Size wins");
+    let high_s = run(PolicyKind::FitGpp { s: 8.0, p_max: Some(1) }, 1, specs_base);
+    assert_eq!(high_s.records[1].preemptions, 1, "s=8 ⇒ zero-GP wins");
+}

@@ -1,0 +1,247 @@
+//! Property-based tests over the coordinator invariants, using the
+//! in-tree `testkit` (proptest substitute). Each failure reports a
+//! replayable seed.
+
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::job::JobClass;
+use fitgpp::prop_assert;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::stats::rng::Pcg64;
+use fitgpp::testkit::{check, gen, PropConfig};
+
+fn policies(rng: &mut Pcg64) -> PolicyKind {
+    match rng.below(6) {
+        0 => PolicyKind::Fifo,
+        1 => PolicyKind::FastLane,
+        2 => PolicyKind::Lrtp,
+        3 => PolicyKind::Rand,
+        4 => PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        _ => PolicyKind::FitGpp { s: 2.0, p_max: None },
+    }
+}
+
+fn run_random(rng: &mut Pcg64, policy: PolicyKind) -> fitgpp::sim::SimResult {
+    let nodes = 1 + rng.below(4) as usize;
+    let n = 20 + rng.below(60) as usize;
+    let span = 30 + rng.below(100);
+    let wl = gen::workload(rng, n, span);
+    let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes), policy);
+    cfg.paranoid = true; // cluster invariants checked every tick
+    cfg.seed = rng.next_u64();
+    Simulator::new(cfg).run(&wl)
+}
+
+#[test]
+fn prop_all_jobs_complete_and_slowdowns_valid() {
+    check("complete+slowdown", PropConfig::default(), |rng| {
+        let policy = policies(rng);
+        let res = run_random(rng, policy);
+        prop_assert!(res.unfinished == 0, "{policy:?}: {} unfinished", res.unfinished);
+        for r in &res.records {
+            prop_assert!(r.finished_at.is_some(), "{:?} unfinished", r.id);
+            prop_assert!(
+                r.slowdown >= 1.0 - 1e-9,
+                "{:?} slowdown {} < 1",
+                r.id,
+                r.slowdown
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_te_jobs_never_preempted() {
+    check("te-never-preempted", PropConfig::default(), |rng| {
+        let policy = policies(rng);
+        let res = run_random(rng, policy);
+        for r in &res.records {
+            if r.class == JobClass::Te {
+                prop_assert!(r.preemptions == 0, "TE {:?} preempted {}", r.id, r.preemptions);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_p_cap_is_hard() {
+    // The paper's no-starvation guarantee: with P = p, no BE job is
+    // preempted more than p times — including through the random fallback.
+    check("p-cap", PropConfig::default(), |rng| {
+        let p = 1 + rng.below(3) as u32;
+        let res = run_random(rng, PolicyKind::FitGpp { s: 4.0, p_max: Some(p) });
+        for r in &res.records {
+            prop_assert!(
+                r.preemptions <= p,
+                "{:?} preempted {} > P={}",
+                r.id,
+                r.preemptions,
+                p
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_non_preemptive_policies_never_preempt() {
+    check("fifo-no-preempt", PropConfig::default(), |rng| {
+        for policy in [PolicyKind::Fifo, PolicyKind::FastLane] {
+            let res = run_random(rng, policy);
+            prop_assert!(
+                res.sched_stats.preemption_signals == 0,
+                "{policy:?} preempted"
+            );
+            for r in &res.records {
+                prop_assert!(r.preemptions == 0, "{:?}", r.id);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resched_intervals_match_preemption_counts() {
+    // Every vacated job eventually restarts (runs drain), so each
+    // preemption produces exactly one re-scheduling interval.
+    check("intervals-count", PropConfig::default(), |rng| {
+        let policy = policies(rng);
+        let res = run_random(rng, policy);
+        for r in &res.records {
+            prop_assert!(
+                r.resched_intervals.len() == r.preemptions as usize,
+                "{:?}: {} intervals for {} preemptions",
+                r.id,
+                r.resched_intervals.len(),
+                r.preemptions
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fifo_starts_in_submission_order() {
+    // Vanilla FIFO admits strictly head-first, so first-start times are
+    // non-decreasing in submission (= id) order.
+    check("fifo-order", PropConfig::default(), |rng| {
+        let res = run_random(rng, PolicyKind::Fifo);
+        let mut last = 0;
+        for r in &res.records {
+            let s = r.first_start.unwrap();
+            prop_assert!(s >= last, "{:?} started {} before predecessor {}", r.id, s, last);
+            last = s;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism() {
+    check("determinism", PropConfig { cases: 16, ..Default::default() }, |rng| {
+        let policy = policies(rng);
+        let nodes = 1 + rng.below(3) as usize;
+        let wl = gen::workload(rng, 40, 60);
+        let seed = rng.next_u64();
+        let mk = || {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes), policy);
+            cfg.seed = seed;
+            Simulator::new(cfg).run(&wl)
+        };
+        let (a, b) = (mk(), mk());
+        prop_assert!(a.makespan == b.makespan, "makespan differs");
+        for (x, y) in a.records.iter().zip(&b.records) {
+            prop_assert!(
+                x.finished_at == y.finished_at && x.preemptions == y.preemptions,
+                "{:?} differs",
+                x.id
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_makespan_at_least_critical_path() {
+    // Makespan is bounded below by (a) the longest single job and (b) the
+    // total-work / capacity ratio on the dominant axis.
+    check("makespan-lb", PropConfig::default(), |rng| {
+        let policy = policies(rng);
+        let nodes = 1 + rng.below(3) as usize;
+        let wl = gen::workload(rng, 30, 40);
+        let cap = ClusterSpec::tiny(nodes).total_capacity();
+        let work = wl.total_work();
+        let lb_work = work.dominant_share(&cap).floor() as u64;
+        let lb_job = wl.jobs.iter().map(|j| j.submit + j.exec_time).max().unwrap_or(0);
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes), policy);
+        cfg.seed = rng.next_u64();
+        let res = Simulator::new(cfg).run(&wl);
+        prop_assert!(
+            res.makespan >= lb_work.max(lb_job),
+            "makespan {} below bound {}",
+            res.makespan,
+            lb_work.max(lb_job)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parsers_never_panic_on_garbage() {
+    // Failure injection: the JSON and trace parsers must reject (not
+    // panic on) arbitrary byte soup, including truncations of valid input.
+    check("parser-fuzz", PropConfig { cases: 200, ..Default::default() }, |rng| {
+        let len = rng.below(200) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.below(96) + 32) as u8).collect();
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = fitgpp::util::json::Json::parse(&s); // Result, must not panic
+        let _ = fitgpp::workload::trace::Trace::from_csv(&s);
+        // Truncations of valid documents.
+        let valid = r#"{"cluster":{"nodes":4},"policy":"lrtp","workload":{"kind":"synthetic","jobs":16}}"#;
+        let cut = rng.below(valid.len() as u64) as usize;
+        let _ = fitgpp::config::ExperimentConfig::from_json(&valid[..cut]);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_parser_never_panics_on_bitflips() {
+    use fitgpp::runtime::Checkpoint;
+    check("checkpoint-fuzz", PropConfig { cases: 100, ..Default::default() }, |rng| {
+        let ckpt = Checkpoint::new(
+            rng.next_u64() % 1000,
+            vec![(vec![4, 4], (0..16).map(|i| i as f32).collect())],
+        );
+        let mut bytes = ckpt.to_bytes();
+        // Corrupt 1-4 random bytes and/or truncate.
+        for _ in 0..=rng.below(4) {
+            let i = rng.below(bytes.len() as u64) as usize;
+            bytes[i] ^= (1 << rng.below(8)) as u8;
+        }
+        if rng.chance(0.3) {
+            let cut = rng.below(bytes.len() as u64) as usize;
+            bytes.truncate(cut);
+        }
+        let _ = Checkpoint::from_bytes(&bytes); // Result, must not panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slowdown_percentiles_monotone() {
+    // p50 ≤ p95 ≤ p99 for both classes under every policy.
+    check("percentiles-monotone", PropConfig::default(), |rng| {
+        let policy = policies(rng);
+        let res = run_random(rng, policy);
+        let rep = res.slowdown_report();
+        for p in [rep.te, rep.be] {
+            if p.p50.is_nan() {
+                continue; // class absent from this random workload
+            }
+            prop_assert!(p.p50 <= p.p95 + 1e-9 && p.p95 <= p.p99 + 1e-9, "{p:?}");
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,114 @@
+//! End-to-end runtime tests: rust loads and executes the python-AOT HLO
+//! artifacts. Skips (prints a note) when `make artifacts` has not run.
+
+use fitgpp::runtime::{self, Checkpoint, Engine, Manifest, Trainer};
+
+fn manifest_or_skip() -> Option<(Engine, Manifest)> {
+    if !runtime::artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let manifest = Manifest::load(&runtime::artifacts_dir()).expect("manifest");
+    Some((engine, manifest))
+}
+
+#[test]
+fn probe_round_trip_matches_known_values() {
+    let Some((engine, manifest)) = manifest_or_skip() else { return };
+    let probe = manifest.probe.clone().expect("probe artifact");
+    let exe = engine
+        .load_hlo_text(&manifest.artifact_path(&probe))
+        .expect("compile probe");
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
+    let out = exe.run(&[x, y]).expect("run probe");
+    assert_eq!(out.len(), 1);
+    let vals = out[0].to_vec::<f32>().unwrap();
+    // matmul([[1,2],[3,4]], ones) + 2 = [[5,5],[9,9]]
+    assert_eq!(vals, vec![5., 5., 9., 9.]);
+}
+
+#[test]
+fn manifest_lists_tiny_and_small() {
+    let Some((_, manifest)) = manifest_or_skip() else { return };
+    let tiny = manifest.variant("tiny").unwrap();
+    let small = manifest.variant("small").unwrap();
+    assert!(tiny.param_count() > 10_000);
+    assert!(small.param_count() > tiny.param_count());
+    assert_eq!(tiny.tokens.dtype, "s32");
+}
+
+#[test]
+fn tiny_train_step_loss_decreases() {
+    let Some((engine, manifest)) = manifest_or_skip() else { return };
+    let mut t = Trainer::new(&engine, &manifest, "tiny", 42).expect("trainer");
+    let first = t.step_synthetic().expect("step");
+    assert!(first.is_finite());
+    // Random init ⇒ loss ≈ ln(vocab) = ln(256) ≈ 5.55.
+    assert!((first - 5.55).abs() < 1.0, "initial loss {first}");
+    let mut last = first;
+    for _ in 0..40 {
+        last = t.step_synthetic().expect("step");
+    }
+    assert!(
+        last < first * 0.9,
+        "loss must decrease: first {first}, last {last}"
+    );
+    assert_eq!(t.step, 41);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_params() {
+    let Some((engine, manifest)) = manifest_or_skip() else { return };
+    let mut t = Trainer::new(&engine, &manifest, "tiny", 7).expect("trainer");
+    for _ in 0..3 {
+        t.step_synthetic().unwrap();
+    }
+    let ckpt = t.checkpoint().unwrap();
+    assert_eq!(ckpt.step, 3);
+    // Serialize → parse → identical tensors.
+    let bytes = ckpt.to_bytes();
+    let back = Checkpoint::from_bytes(&bytes).unwrap();
+    assert_eq!(back, ckpt);
+    // Restore into a new trainer: same params (norms match exactly), and
+    // training continues from the recorded step.
+    let t2 = Trainer::from_checkpoint(&engine, &manifest, "tiny", &back, 7).unwrap();
+    assert_eq!(t2.step, 3);
+    let n1 = t.param_norm().unwrap();
+    let n2 = t2.param_norm().unwrap();
+    assert!((n1 - n2).abs() < 1e-9, "{n1} vs {n2}");
+}
+
+#[test]
+fn restored_trainer_keeps_learning() {
+    let Some((engine, manifest)) = manifest_or_skip() else { return };
+    let mut t = Trainer::new(&engine, &manifest, "tiny", 3).unwrap();
+    let mut before = f32::INFINITY;
+    for _ in 0..20 {
+        before = t.step_synthetic().unwrap();
+    }
+    let ckpt = t.checkpoint().unwrap();
+    let mut t2 = Trainer::from_checkpoint(&engine, &manifest, "tiny", &ckpt, 3).unwrap();
+    let mut after = f32::INFINITY;
+    for _ in 0..20 {
+        after = t2.step_synthetic().unwrap();
+    }
+    assert!(after < before, "resumed training regressed: {before} → {after}");
+}
+
+#[test]
+fn wrong_token_count_is_rejected() {
+    let Some((engine, manifest)) = manifest_or_skip() else { return };
+    let mut t = Trainer::new(&engine, &manifest, "tiny", 1).unwrap();
+    assert!(t.step_with(&[0i32; 3]).is_err());
+}
+
+#[test]
+fn checkpoint_variant_mismatch_rejected() {
+    let Some((engine, manifest)) = manifest_or_skip() else { return };
+    let t = Trainer::new(&engine, &manifest, "tiny", 1).unwrap();
+    let ckpt = t.checkpoint().unwrap();
+    // A tiny checkpoint cannot restore a small model.
+    assert!(Trainer::from_checkpoint(&engine, &manifest, "small", &ckpt, 1).is_err());
+}
