@@ -2,6 +2,10 @@
 //! preemption cap `P`, the TE-job proportion, and the grace-period scale,
 //! writing one CSV per sweep for plotting.
 //!
+//! Each figure is one [`SweepSpec`] grid run on all cores by the
+//! work-stealing sweep harness; workloads are generated once per
+//! coordinate and shared across policies.
+//!
 //! ```bash
 //! cargo run --release --example synthetic_sweep -- --jobs 4096 --out-dir sweeps
 //! ```
@@ -9,6 +13,7 @@
 use fitgpp::job::JobClass;
 use fitgpp::prelude::*;
 use fitgpp::stats::summary::percentile;
+use fitgpp::sweep::paper_policies;
 use fitgpp::util::cli::Cli;
 use fitgpp::util::table::Table;
 use std::path::Path;
@@ -17,63 +22,74 @@ fn main() -> anyhow::Result<()> {
     let cli = Cli::new("synthetic_sweep", "Figs. 4-7 sensitivity sweeps")
         .opt("jobs", Some("4096"), "jobs per configuration")
         .opt("out-dir", Some("sweeps"), "directory for CSV outputs")
-        .opt("seed", Some("7"), "workload seed");
+        .opt("seed", Some("7"), "workload seed")
+        .opt("threads", Some("0"), "worker threads (0 = all cores)");
     let args = cli.parse();
     let jobs = args.get_usize("jobs", 4096);
     let seed = args.get_u64("seed", 7);
+    let threads = args.get_usize("threads", 0);
     let out_dir = args.get_string("out-dir", "sweeps");
     std::fs::create_dir_all(&out_dir)?;
     let cluster = ClusterSpec::pfn();
 
-    let base_wl = || {
-        SyntheticWorkload::paper_section_4_2(seed)
-            .with_cluster(cluster.clone())
+    let base = |policies: Vec<PolicyKind>| {
+        SweepSpec::new(cluster.clone(), policies)
             .with_num_jobs(jobs)
-    };
-    let run = |wl: &Workload, p: PolicyKind| {
-        let mut cfg = SimConfig::new(cluster.clone(), p);
-        cfg.seed = 1;
-        Simulator::new(cfg).run(wl)
+            .with_seeds(vec![seed])
+            .with_threads(threads)
     };
 
     // -- Fig. 4: s sweep ---------------------------------------------------
-    let wl = base_wl().generate();
-    let mut t = Table::new("fig4: s sweep", &["s", "te_p50", "te_p95", "te_p99", "be_p50", "be_p95", "be_p99"]);
-    for s in [0.0, 0.5, 1.0, 2.0, 4.0, 8.0] {
-        let r = run(&wl, PolicyKind::FitGpp { s, p_max: Some(1) }).slowdown_report();
+    let s_grid = [0.0, 0.5, 1.0, 2.0, 4.0, 8.0];
+    let res = base(Vec::new()).fitgpp_s_grid(&s_grid, Some(1)).run();
+    let mut t = Table::new(
+        "fig4: s sweep",
+        &["s", "te_p50", "te_p95", "te_p99", "be_p50", "be_p95", "be_p99"],
+    );
+    for &s in &s_grid {
+        let p = PolicyKind::FitGpp { s, p_max: Some(1) };
+        let te = res.pooled_percentiles(p, JobClass::Te);
+        let be = res.pooled_percentiles(p, JobClass::Be);
         t.row(vec![
             s.to_string(),
-            format!("{:.3}", r.te.p50), format!("{:.3}", r.te.p95), format!("{:.3}", r.te.p99),
-            format!("{:.3}", r.be.p50), format!("{:.3}", r.be.p95), format!("{:.3}", r.be.p99),
+            format!("{:.3}", te.p50), format!("{:.3}", te.p95), format!("{:.3}", te.p99),
+            format!("{:.3}", be.p50), format!("{:.3}", be.p95), format!("{:.3}", be.p99),
         ]);
     }
     println!("{}", t.to_text());
     std::fs::write(Path::new(&out_dir).join("fig4_s.csv"), t.to_csv())?;
 
     // -- Fig. 5: P sweep -----------------------------------------------------
+    let p_grid = [Some(1), Some(2), Some(4), None];
+    let res = base(Vec::new()).fitgpp_p_grid(4.0, &p_grid).run();
     let mut t = Table::new("fig5: P sweep", &["P", "te_p95", "be_p95"]);
-    for p in [Some(1), Some(2), Some(4), None] {
-        let r = run(&wl, PolicyKind::FitGpp { s: 4.0, p_max: p }).slowdown_report();
+    for &p_max in &p_grid {
+        let p = PolicyKind::FitGpp { s: 4.0, p_max };
         t.row(vec![
-            p.map(|x| x.to_string()).unwrap_or("inf".into()),
-            format!("{:.3}", r.te.p95),
-            format!("{:.3}", r.be.p95),
+            p_max.map(|x| x.to_string()).unwrap_or("inf".into()),
+            format!("{:.3}", res.pooled_percentiles(p, JobClass::Te).p95),
+            format!("{:.3}", res.pooled_percentiles(p, JobClass::Be).p95),
         ]);
     }
     println!("{}", t.to_text());
     std::fs::write(Path::new(&out_dir).join("fig5_p.csv"), t.to_csv())?;
 
     // -- Fig. 6: TE-ratio sweep ----------------------------------------------
-    let mut t = Table::new("fig6: TE-ratio sweep", &["te_frac", "policy", "te_p95", "be_p95"]);
-    for frac in [0.1, 0.3, 0.5, 0.7] {
-        let wl = base_wl().with_te_fraction(frac).generate();
-        for p in [PolicyKind::Fifo, PolicyKind::Lrtp, PolicyKind::Rand, PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }] {
-            let res = run(&wl, p);
+    let ratios = vec![0.1, 0.3, 0.5, 0.7];
+    let res = base(paper_policies()).with_te_ratios(ratios.clone()).run();
+    let mut t = Table::new(
+        "fig6: TE-ratio sweep",
+        &["te_frac", "policy", "te_p95", "be_p95"],
+    );
+    for &frac in &ratios {
+        for p in paper_policies() {
+            let te = res.pooled_slowdowns_where(|c| c.policy == p && c.te_ratio == frac, JobClass::Te);
+            let be = res.pooled_slowdowns_where(|c| c.policy == p && c.te_ratio == frac, JobClass::Be);
             t.row(vec![
                 frac.to_string(),
                 p.name(),
-                format!("{:.2}", percentile(&res.slowdowns(JobClass::Te), 95.0)),
-                format!("{:.2}", percentile(&res.slowdowns(JobClass::Be), 95.0)),
+                format!("{:.2}", percentile(&te, 95.0)),
+                format!("{:.2}", percentile(&be, 95.0)),
             ]);
         }
     }
@@ -81,21 +97,27 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(Path::new(&out_dir).join("fig6_te_ratio.csv"), t.to_csv())?;
 
     // -- Fig. 7: GP-scale sweep -----------------------------------------------
-    let mut t = Table::new("fig7: GP-scale sweep", &["gp_scale", "policy", "te_p95", "be_p95"]);
-    for scale in [1.0, 2.0, 4.0, 8.0] {
-        let wl = base_wl().with_gp_scale(scale).generate();
-        for (label, p) in [
-            ("LRTP", PolicyKind::Lrtp),
-            ("RAND", PolicyKind::Rand),
-            ("FitGpp s=4", PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
-            ("FitGpp s=8", PolicyKind::FitGpp { s: 8.0, p_max: Some(1) }),
-        ] {
-            let res = run(&wl, p);
+    let scales = vec![1.0, 2.0, 4.0, 8.0];
+    let fig7_policies = vec![
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        PolicyKind::FitGpp { s: 8.0, p_max: Some(1) },
+    ];
+    let res = base(fig7_policies.clone()).with_gp_scales(scales.clone()).run();
+    let mut t = Table::new(
+        "fig7: GP-scale sweep",
+        &["gp_scale", "policy", "te_p95", "be_p95"],
+    );
+    for &scale in &scales {
+        for p in &fig7_policies {
+            let te = res.pooled_slowdowns_where(|c| c.policy == *p && c.gp_scale == scale, JobClass::Te);
+            let be = res.pooled_slowdowns_where(|c| c.policy == *p && c.gp_scale == scale, JobClass::Be);
             t.row(vec![
                 scale.to_string(),
-                label.to_string(),
-                format!("{:.2}", percentile(&res.slowdowns(JobClass::Te), 95.0)),
-                format!("{:.2}", percentile(&res.slowdowns(JobClass::Be), 95.0)),
+                p.name(),
+                format!("{:.2}", percentile(&te, 95.0)),
+                format!("{:.2}", percentile(&be, 95.0)),
             ]);
         }
     }

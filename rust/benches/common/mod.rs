@@ -52,21 +52,15 @@ pub fn run_policy(wl: &Workload, policy: PolicyKind, seed: u64) -> SimResult {
     Simulator::new(cfg).run(wl)
 }
 
-/// Pool per-job slowdowns across several seeds (the paper reports
-/// statistics over eight workloads).
-pub fn pooled_slowdowns(
-    policy: PolicyKind,
-    seeds: usize,
-    jobs: usize,
-    class: fitgpp::job::JobClass,
-) -> Vec<f64> {
-    let mut xs = Vec::new();
-    for s in 0..seeds {
-        let wl = paper_workload(100 + s as u64, jobs);
-        let res = run_policy(&wl, policy, s as u64);
-        xs.extend(res.slowdowns(class));
-    }
-    xs
+/// One-line sweep accounting every grid bench prints the same way.
+pub fn report_sweep(res: &fitgpp::sweep::SweepResult) {
+    eprintln!(
+        "sweep: {} cells, {:.1}s wall on {} threads ({:.1}s serial-equivalent sim time)",
+        res.cells.len(),
+        res.wall.as_secs_f64(),
+        res.threads,
+        res.total_cell_wall().as_secs_f64()
+    );
 }
 
 /// Write a machine-readable copy of a bench's output next to the target

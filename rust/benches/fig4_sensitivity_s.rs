@@ -2,28 +2,41 @@
 //! of grace-period length vs demand size in Eq. 3). Paper shape: TE
 //! slowdown falls with s and saturates between s = 4 and s = 8; BE
 //! slowdown is essentially independent of s.
+//!
+//! Driven by the parallel sweep harness: the whole s × seed grid runs as
+//! one work-stealing sweep, and workloads are generated once per seed and
+//! shared across the six s points.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use fitgpp::job::JobClass;
-use fitgpp::metrics::Percentiles;
 use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sweep::SweepSpec;
 use fitgpp::util::table::Table;
 
 fn main() {
     let jobs = common::jobs_default();
     let seeds = common::seeds_default();
-    println!("fig4_sensitivity_s: {jobs} jobs x {seeds} seeds (P = 1)");
+    let s_grid = [0.0, 0.5, 1.0, 2.0, 4.0, 8.0];
+    let spec = SweepSpec::new(common::cluster(), Vec::new())
+        .fitgpp_s_grid(&s_grid, Some(1))
+        .with_num_jobs(jobs)
+        .with_seeds((0..seeds).map(|i| 100 + i as u64).collect());
+    println!(
+        "fig4_sensitivity_s: {jobs} jobs x {seeds} seeds (P = 1), {} threads",
+        spec.threads_effective()
+    );
+    let res = spec.run();
 
     let mut t = Table::new(
         "Fig. 4: FitGpp slowdown vs s",
         &["s", "TE p50", "TE p95", "TE p99", "BE p50", "BE p95", "BE p99"],
     );
-    for s_param in [0.0, 0.5, 1.0, 2.0, 4.0, 8.0] {
+    for &s_param in &s_grid {
         let policy = PolicyKind::FitGpp { s: s_param, p_max: Some(1) };
-        let te = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Te));
-        let be = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Be));
+        let te = res.pooled_percentiles(policy, JobClass::Te);
+        let be = res.pooled_percentiles(policy, JobClass::Be);
         t.row(vec![
             format!("{s_param}"),
             format!("{:.3}", te.p50),
@@ -34,5 +47,6 @@ fn main() {
             format!("{:.2}", be.p99),
         ]);
     }
+    common::report_sweep(&res);
     common::save_results("fig4_sensitivity_s", &t.to_text());
 }

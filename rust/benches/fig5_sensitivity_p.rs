@@ -1,28 +1,40 @@
 //! Fig. 5: FitGpp slowdown percentiles vs the per-job preemption cap P.
 //! Paper shape: both TE and BE slowdowns are essentially independent of P
 //! (FitGpp rarely needs to preempt the same job twice).
+//!
+//! Driven by the parallel sweep harness (one work-stealing grid, workloads
+//! shared across the P points).
 
 #[path = "common/mod.rs"]
 mod common;
 
 use fitgpp::job::JobClass;
-use fitgpp::metrics::Percentiles;
 use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sweep::SweepSpec;
 use fitgpp::util::table::Table;
 
 fn main() {
     let jobs = common::jobs_default();
     let seeds = common::seeds_default();
-    println!("fig5_sensitivity_p: {jobs} jobs x {seeds} seeds (s = 4)");
+    let p_grid = [Some(1u32), Some(2), Some(4), Some(8), None];
+    let spec = SweepSpec::new(common::cluster(), Vec::new())
+        .fitgpp_p_grid(4.0, &p_grid)
+        .with_num_jobs(jobs)
+        .with_seeds((0..seeds).map(|i| 100 + i as u64).collect());
+    println!(
+        "fig5_sensitivity_p: {jobs} jobs x {seeds} seeds (s = 4), {} threads",
+        spec.threads_effective()
+    );
+    let res = spec.run();
 
     let mut t = Table::new(
         "Fig. 5: FitGpp slowdown vs P",
         &["P", "TE p50", "TE p95", "TE p99", "BE p50", "BE p95", "BE p99"],
     );
-    for p in [Some(1u32), Some(2), Some(4), Some(8), None] {
+    for &p in &p_grid {
         let policy = PolicyKind::FitGpp { s: 4.0, p_max: p };
-        let te = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Te));
-        let be = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Be));
+        let te = res.pooled_percentiles(policy, JobClass::Te);
+        let be = res.pooled_percentiles(policy, JobClass::Be);
         t.row(vec![
             p.map(|x| x.to_string()).unwrap_or("inf".into()),
             format!("{:.3}", te.p50),
@@ -33,5 +45,6 @@ fn main() {
             format!("{:.2}", be.p99),
         ]);
     }
+    common::report_sweep(&res);
     common::save_results("fig5_sensitivity_p", &t.to_text());
 }

@@ -2,40 +2,54 @@
 //! workload. Paper shape: TE slowdown grows with the TE share (their
 //! combined demand eventually exceeds capacity); FitGpp dominates the
 //! baselines at every ratio while keeping BE slowdown low.
+//!
+//! Driven by the parallel sweep harness: the TE-ratio axis is a first-class
+//! grid dimension, so all ratio × policy cells run as one work-stealing
+//! sweep with one workload generated per ratio.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use fitgpp::job::JobClass;
 use fitgpp::stats::summary::percentile;
+use fitgpp::sweep::{paper_policies, SweepSpec};
 use fitgpp::util::table::Table;
-use fitgpp::workload::synthetic::SyntheticWorkload;
 
 fn main() {
     let jobs = common::jobs_default();
-    println!("fig6_te_ratio: {jobs} jobs per point");
+    let ratios = vec![0.1, 0.2, 0.3, 0.5, 0.7];
+    let spec = SweepSpec::new(common::cluster(), paper_policies())
+        .with_num_jobs(jobs)
+        .with_seeds(vec![7])
+        .with_te_ratios(ratios.clone());
+    println!(
+        "fig6_te_ratio: {jobs} jobs per point, {} threads",
+        spec.threads_effective()
+    );
+    let res = spec.run();
 
     let mut t = Table::new(
         "Fig. 6: p95 slowdown vs TE-job proportion",
         &["TE %", "policy", "TE p95", "BE p95"],
     );
-    for frac in [0.1, 0.2, 0.3, 0.5, 0.7] {
-        let wl = SyntheticWorkload::paper_section_4_2(7)
-            .with_cluster(common::cluster())
-            .with_num_jobs(jobs)
-            .with_te_fraction(frac)
-            .generate();
-        for (name, policy) in common::paper_policies() {
-            let res = common::run_policy(&wl, policy, 1);
-            let te = res.slowdowns(JobClass::Te);
-            let be = res.slowdowns(JobClass::Be);
+    for &frac in &ratios {
+        for policy in paper_policies() {
+            let te = res.pooled_slowdowns_where(
+                |c| c.policy == policy && c.te_ratio == frac,
+                JobClass::Te,
+            );
+            let be = res.pooled_slowdowns_where(
+                |c| c.policy == policy && c.te_ratio == frac,
+                JobClass::Be,
+            );
             t.row(vec![
                 format!("{:.0}", frac * 100.0),
-                name,
+                policy.name(),
                 format!("{:.2}", percentile(&te, 95.0)),
                 format!("{:.2}", percentile(&be, 95.0)),
             ]);
         }
     }
+    common::report_sweep(&res);
     common::save_results("fig6_te_ratio", &t.to_text());
 }

@@ -3,6 +3,9 @@
 //! mean, σ, and truncation by k. Paper shape: TE slowdown grows with GP
 //! length for every policy; a larger s counters it (FitGpp s=8 beats s=4
 //! at scale 8); FitGpp keeps BE slowdown flat where LRTP/RAND degrade.
+//!
+//! Driven by the parallel sweep harness: the GP-scale axis is a grid
+//! dimension, one workload per scale, all cells work-stealing in parallel.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -10,33 +13,45 @@ mod common;
 use fitgpp::job::JobClass;
 use fitgpp::sched::policy::PolicyKind;
 use fitgpp::stats::summary::percentile;
+use fitgpp::sweep::SweepSpec;
 use fitgpp::util::table::Table;
-use fitgpp::workload::synthetic::SyntheticWorkload;
 
 fn main() {
     let jobs = common::jobs_default();
-    println!("fig7_gp_scale: {jobs} jobs per point");
-
+    let scales = vec![1.0, 2.0, 4.0, 8.0];
     let policies = [
         ("LRTP".to_string(), PolicyKind::Lrtp),
         ("RAND".to_string(), PolicyKind::Rand),
         ("FitGpp (s=4.0)".to_string(), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
         ("FitGpp (s=8.0)".to_string(), PolicyKind::FitGpp { s: 8.0, p_max: Some(1) }),
     ];
+    let spec = SweepSpec::new(
+        common::cluster(),
+        policies.iter().map(|(_, p)| *p).collect(),
+    )
+    .with_num_jobs(jobs)
+    .with_seeds(vec![7])
+    .with_gp_scales(scales.clone());
+    println!(
+        "fig7_gp_scale: {jobs} jobs per point, {} threads",
+        spec.threads_effective()
+    );
+    let res = spec.run();
+
     let mut t = Table::new(
         "Fig. 7: p95 slowdown vs GP-length scale",
         &["GP scale", "policy", "TE p95", "BE p95"],
     );
-    for scale in [1.0, 2.0, 4.0, 8.0] {
-        let wl = SyntheticWorkload::paper_section_4_2(7)
-            .with_cluster(common::cluster())
-            .with_num_jobs(jobs)
-            .with_gp_scale(scale)
-            .generate();
+    for &scale in &scales {
         for (name, policy) in &policies {
-            let res = common::run_policy(&wl, *policy, 1);
-            let te = res.slowdowns(JobClass::Te);
-            let be = res.slowdowns(JobClass::Be);
+            let te = res.pooled_slowdowns_where(
+                |c| c.policy == *policy && c.gp_scale == scale,
+                JobClass::Te,
+            );
+            let be = res.pooled_slowdowns_where(
+                |c| c.policy == *policy && c.gp_scale == scale,
+                JobClass::Be,
+            );
             t.row(vec![
                 format!("{scale}"),
                 name.clone(),
@@ -45,5 +60,6 @@ fn main() {
             ]);
         }
     }
+    common::report_sweep(&res);
     common::save_results("fig7_gp_scale", &t.to_text());
 }

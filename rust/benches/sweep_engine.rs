@@ -1,0 +1,121 @@
+//! Evaluation-substrate speedup on the Table-1 synthetic grid: the
+//! event-horizon engine + parallel sweep harness versus the seed's
+//! serial per-minute loop.
+//!
+//! Three measurements over the *same* grid (4 §4.1 policies × seeds, §4.2
+//! workloads, identical results asserted cell-by-cell):
+//!
+//! 1. `per-minute, serial` — the baseline: `SimEngine::PerMinute`, one
+//!    thread. This is exactly how the seed repository ran its evaluation.
+//! 2. `event-horizon, serial` — isolates the engine win (quiescent spans
+//!    fast-forwarded in bulk).
+//! 3. `event-horizon, parallel` — the shipped substrate: engine win ×
+//!    work-stealing thread parallelism.
+//!
+//! Scale knobs: `FITGPP_JOBS` (default 512), `FITGPP_SEEDS` (default 4),
+//! `FITGPP_NODES` (default 2 — a small cluster keeps the event density per
+//! simulated minute low, which is also the regime where minute-ticking
+//! wastes the most work), `FITGPP_THREADS`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::benchkit::env_usize;
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::sim::SimEngine;
+use fitgpp::sweep::{SweepResult, SweepSpec};
+use fitgpp::util::table::Table;
+
+fn grid(jobs: usize, seeds: usize, nodes: usize) -> SweepSpec {
+    SweepSpec::table1(jobs, &(0..seeds).map(|i| 100 + i as u64).collect::<Vec<_>>())
+        .with_cluster(ClusterSpec::tiny(nodes))
+}
+
+fn total_simulated_minutes(res: &SweepResult) -> u64 {
+    res.cells.iter().map(|c| c.makespan).sum()
+}
+
+fn main() {
+    let jobs = env_usize("FITGPP_JOBS", 512);
+    let seeds = env_usize("FITGPP_SEEDS", 4);
+    let nodes = env_usize("FITGPP_NODES", 2);
+    let spec = grid(jobs, seeds, nodes);
+    println!(
+        "sweep_engine: Table-1 grid, {} cells ({jobs} jobs x {seeds} seeds x 4 policies, {nodes} nodes), {} threads available",
+        spec.cells().len(),
+        spec.threads_effective()
+    );
+
+    // 1. Baseline: the seed's substrate — per-minute loop, one thread.
+    let pm = spec
+        .clone()
+        .with_engine(SimEngine::PerMinute)
+        .with_threads(1)
+        .run();
+    // 2. Engine isolated: event-horizon, still one thread.
+    let eh_serial = spec
+        .clone()
+        .with_engine(SimEngine::EventHorizon)
+        .with_threads(1)
+        .run();
+    // 3. The shipped substrate: event-horizon on all cores.
+    let eh_par = spec.clone().with_engine(SimEngine::EventHorizon).run();
+
+    // The grids must agree cell-for-cell (same reports; wall clock is the
+    // only column allowed to differ), or the speedup below is meaningless.
+    assert_eq!(
+        pm.to_csv_without_wall(),
+        eh_serial.to_csv_without_wall(),
+        "engines disagree on the grid"
+    );
+    assert_eq!(
+        pm.to_csv_without_wall(),
+        eh_par.to_csv_without_wall(),
+        "parallel run disagrees with the serial grid"
+    );
+
+    let pm_sim = pm.total_cell_wall().as_secs_f64();
+    let eh_sim = eh_serial.total_cell_wall().as_secs_f64();
+    let minutes = total_simulated_minutes(&pm) as f64;
+    let ff: u64 = eh_serial.cells.iter().map(|c| c.fast_forwarded_ticks).sum();
+
+    let mut t = Table::new(
+        "Table-1 grid: evaluation-substrate wall clock",
+        &["configuration", "wall (s)", "sim-only (s)", "speedup vs baseline"],
+    );
+    t.row(vec![
+        "per-minute, serial (seed substrate)".into(),
+        format!("{:.2}", pm.wall.as_secs_f64()),
+        format!("{:.2}", pm_sim),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "event-horizon, serial".into(),
+        format!("{:.2}", eh_serial.wall.as_secs_f64()),
+        format!("{:.2}", eh_sim),
+        format!("{:.2}x", pm.wall.as_secs_f64() / eh_serial.wall.as_secs_f64()),
+    ]);
+    t.row(vec![
+        format!("event-horizon, {} threads", eh_par.threads),
+        format!("{:.2}", eh_par.wall.as_secs_f64()),
+        "-".into(),
+        format!("{:.2}x", pm.wall.as_secs_f64() / eh_par.wall.as_secs_f64()),
+    ]);
+
+    let mut out = t.to_text();
+    out.push_str(&format!(
+        "\nsimulated minutes in grid: {:.0}; bulk fast-forwarded by event horizon: {ff} ({:.1}%)\n",
+        minutes,
+        100.0 * ff as f64 / minutes.max(1.0)
+    ));
+    out.push_str(&format!(
+        "engine-only speedup (sim time, serial): {:.2}x\n",
+        pm_sim / eh_sim
+    ));
+    out.push_str(&format!(
+        "total substrate speedup (event-horizon + {}-thread sweep vs per-minute serial): {:.2}x\n",
+        eh_par.threads,
+        pm.wall.as_secs_f64() / eh_par.wall.as_secs_f64()
+    ));
+    common::save_results("sweep_engine", &out);
+}

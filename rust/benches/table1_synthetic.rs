@@ -9,47 +9,49 @@
 //! RAND            1.00  1.17  1.58      3.87  7.49  12.9
 //! FitGpp (s=4)    1.00  1.15  1.54      3.28  6.06  10.3
 //! ```
+//!
+//! Driven by the parallel sweep harness: the 4-policy × seed grid runs as
+//! one work-stealing sweep with one generated workload per seed (the seed
+//! repo generated and simulated each policy/class pair separately and
+//! serially).
 
 #[path = "common/mod.rs"]
 mod common;
 
 use fitgpp::job::JobClass;
-use fitgpp::metrics::{slowdown_table, Percentiles, SlowdownReport};
-use std::time::Instant;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sweep::SweepSpec;
 
 fn main() {
     let jobs = common::jobs_default();
     let seeds = common::seeds_default();
-    println!("table1_synthetic: {jobs} jobs x {seeds} seeds (FITGPP_JOBS / FITGPP_SEEDS to scale)");
+    let spec = SweepSpec::table1(jobs, &(0..seeds).map(|i| 100 + i as u64).collect::<Vec<_>>());
+    println!(
+        "table1_synthetic: {jobs} jobs x {seeds} seeds on {} threads (FITGPP_JOBS / FITGPP_SEEDS / FITGPP_THREADS to scale)",
+        spec.threads_effective()
+    );
+    let res = spec.run();
 
-    let mut rows = Vec::new();
-    let mut fifo_te_p95 = f64::NAN;
-    let mut fifo_be = Percentiles { p50: f64::NAN, p95: f64::NAN, p99: f64::NAN };
-    let mut fitgpp_te_p95 = f64::NAN;
-    let mut fitgpp_be = fifo_be;
-    for (name, policy) in common::paper_policies() {
-        let t0 = Instant::now();
-        let te = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Te));
-        let be = Percentiles::of(&common::pooled_slowdowns(policy, seeds, jobs, JobClass::Be));
-        eprintln!("  {name}: {:.1}s", t0.elapsed().as_secs_f64());
-        if name == "FIFO" {
-            fifo_te_p95 = te.p95;
-            fifo_be = be;
-        }
-        if name.starts_with("FitGpp") {
-            fitgpp_te_p95 = te.p95;
-            fitgpp_be = be;
-        }
-        rows.push((name, SlowdownReport { te, be }));
-    }
-    let named: Vec<(&str, SlowdownReport)> = rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
-    let mut out = slowdown_table("Table 1: Percentiles of slowdown rates", &named).to_text();
+    let fifo_te = res.pooled_percentiles(PolicyKind::Fifo, JobClass::Te);
+    let fifo_be = res.pooled_percentiles(PolicyKind::Fifo, JobClass::Be);
+    let fg = PolicyKind::FitGpp { s: 4.0, p_max: Some(1) };
+    let fitgpp_te = res.pooled_percentiles(fg, JobClass::Te);
+    let fitgpp_be = res.pooled_percentiles(fg, JobClass::Be);
+
+    let mut out = res.table1("Table 1: Percentiles of slowdown rates").to_text();
     out.push_str(&format!(
         "\nheadline: FitGpp reduces FIFO's TE p95 by {:.1}% (paper: 96.6%)\n\
          BE p50 changes by {:+.1}% (paper: +18.0%), BE p95 by {:+.1}% (paper: +23.9%)\n",
-        (1.0 - fitgpp_te_p95 / fifo_te_p95) * 100.0,
+        (1.0 - fitgpp_te.p95 / fifo_te.p95) * 100.0,
         (fitgpp_be.p50 / fifo_be.p50 - 1.0) * 100.0,
         (fitgpp_be.p95 / fifo_be.p95 - 1.0) * 100.0,
+    ));
+    out.push_str(&format!(
+        "sweep: {} cells, {:.1}s wall on {} threads ({:.1}s serial-equivalent sim time)\n",
+        res.cells.len(),
+        res.wall.as_secs_f64(),
+        res.threads,
+        res.total_cell_wall().as_secs_f64()
     ));
     common::save_results("table1_synthetic", &out);
 }

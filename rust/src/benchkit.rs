@@ -10,13 +10,18 @@ use std::time::{Duration, Instant};
 /// One timed measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct Measurement {
+    /// Median of the measured runs.
     pub median: Duration,
+    /// Fastest run.
     pub min: Duration,
+    /// Slowest run.
     pub max: Duration,
+    /// Measured iterations.
     pub iters: usize,
 }
 
 impl Measurement {
+    /// Median in milliseconds.
     pub fn median_ms(&self) -> f64 {
         self.median.as_secs_f64() * 1e3
     }

@@ -53,7 +53,9 @@ impl ClusterSpec {
 /// One node's live state.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// This node's identifier.
     pub id: NodeId,
+    /// Total capacity.
     pub capacity: ResourceVec,
     /// Unallocated resources (the paper's `N` in Eq. 2).
     pub free: ResourceVec,

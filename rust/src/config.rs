@@ -25,6 +25,7 @@ use std::path::Path;
 /// Workload source in a config file.
 #[derive(Debug, Clone)]
 pub enum WorkloadConfig {
+    /// The §4.2 synthetic generator.
     Synthetic {
         jobs: usize,
         te_fraction: f64,
@@ -41,11 +42,17 @@ pub enum WorkloadConfig {
 /// A full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// Cluster to simulate.
     pub cluster: ClusterSpec,
+    /// Policy under test.
     pub policy: PolicyKind,
+    /// Placement rule.
     pub placement: Placement,
+    /// §2 ablation knob.
     pub progress_during_grace: bool,
+    /// Policy-RNG seed.
     pub seed: u64,
+    /// Workload source.
     pub workload: WorkloadConfig,
 }
 

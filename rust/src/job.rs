@@ -33,6 +33,7 @@ pub enum JobClass {
 }
 
 impl JobClass {
+    /// `"TE"` / `"BE"` (table rendering, traces).
     pub fn as_str(&self) -> &'static str {
         match self {
             JobClass::Te => "TE",
@@ -52,7 +53,9 @@ impl fmt::Display for JobClass {
 /// execution time; the LRTP baseline receives it as an oracle).
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
+    /// Dense identifier (submission order).
     pub id: JobId,
+    /// TE or BE.
     pub class: JobClass,
     /// Demand vector `[C, R, G]`.
     pub demand: ResourceVec,
@@ -99,7 +102,9 @@ pub enum JobState {
 /// scheduling policies see `&Job` views.
 #[derive(Debug, Clone)]
 pub struct Job {
+    /// The immutable submission-time spec.
     pub spec: JobSpec,
+    /// Current lifecycle state.
     pub state: JobState,
     /// Remaining execution time (minutes). `spec.exec_time` at submission;
     /// preserved across suspend/resume (no rewind).

@@ -29,6 +29,23 @@
 //! let result = Simulator::new(cfg).run(&wl);
 //! println!("{}", result.summary_table());
 //! ```
+//!
+//! For evaluation campaigns — grids of policy × parameter × seed — use the
+//! thread-parallel sweep harness instead of looping over `Simulator` by
+//! hand:
+//!
+//! ```no_run
+//! use fitgpp::prelude::*;
+//!
+//! let spec = SweepSpec::table1(4096, &[100, 101, 102, 103]);
+//! let result = spec.run(); // all cells in parallel, workloads cached
+//! println!("{}", result.table1("Table 1").to_text());
+//! ```
+//!
+//! See `README.md` for the architecture and `EXPERIMENTS.md` for the exact
+//! command reproducing every paper figure/table.
+
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod cluster;
@@ -42,9 +59,11 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod stats;
+pub mod sweep;
 pub mod testkit;
 pub mod util;
 pub mod workload;
+pub mod xla;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
@@ -53,8 +72,9 @@ pub mod prelude {
     pub use crate::metrics::{Percentiles, SlowdownReport};
     pub use crate::resources::ResourceVec;
     pub use crate::sched::policy::PolicyKind;
-    pub use crate::sim::{SimConfig, SimResult, Simulator};
+    pub use crate::sim::{SimConfig, SimEngine, SimResult, Simulator};
     pub use crate::stats::rng::Pcg64;
+    pub use crate::sweep::{SweepResult, SweepSpec};
     pub use crate::workload::{
         synthetic::SyntheticWorkload, trace::Trace, Workload,
     };

@@ -28,7 +28,9 @@ use std::time::{Duration, Instant};
 /// Live-run configuration.
 #[derive(Debug, Clone)]
 pub struct LiveConfig {
+    /// Cluster shape for the live scheduler.
     pub cluster: ClusterSpec,
+    /// Scheduling policy.
     pub policy: PolicyKind,
     /// Wall milliseconds per simulated minute.
     pub tick_ms: u64,
@@ -53,16 +55,22 @@ impl LiveConfig {
 /// One recorded training-loss sample.
 #[derive(Debug, Clone)]
 pub struct LossPoint {
+    /// Which job logged the sample.
     pub job: JobId,
+    /// Training step the loss belongs to.
     pub step: u64,
+    /// Loss value.
     pub loss: f32,
 }
 
 /// Worker lifecycle events (for the report).
 #[derive(Debug, Clone)]
 pub enum LiveEvent {
+    /// A worker thread came up (fresh or resumed from a checkpoint).
     Spawned { job: JobId, compile_ms: f64, resumed_at_step: u64 },
+    /// A worker received the preemption signal and serialized a checkpoint.
     Suspended { job: JobId, at_step: u64, checkpoint_ms: f64, checkpoint_bytes: usize },
+    /// A worker finished its job.
     Finished { job: JobId, steps: u64 },
 }
 
@@ -86,13 +94,19 @@ struct WorkerHandle {
 /// Outcome of a live run.
 #[derive(Debug)]
 pub struct LiveReport {
+    /// Policy that ran.
     pub policy: PolicyKind,
+    /// Scheduler ticks executed.
     pub ticks: u64,
+    /// End-to-end wall clock.
     pub wall: Duration,
+    /// All loss samples, in log order.
     pub losses: Vec<LossPoint>,
+    /// Worker lifecycle events.
     pub events: Vec<LiveEvent>,
     /// Final job table (same record type the simulator produces).
     pub records: Vec<crate::sim::JobRecord>,
+    /// Total train steps across all jobs.
     pub total_steps: u64,
 }
 

@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! fitgpp simulate --policy fitgpp:s=4,p=1 --jobs 8192
-//! fitgpp compare  --jobs 8192                      # all policies, Table-1 style
+//! fitgpp compare  --jobs 8192                      # all policies, Table-1 style, parallel
+//! fitgpp sweep    --policies fifo,lrtp,rand,fitgpp:s=4,p=1 --seeds 100,101,102,103
 //! fitgpp generate --jobs 4096 --out trace.csv
 //! fitgpp replay   --trace trace.csv --policy lrtp
 //! fitgpp live     --policy fitgpp:s=4,p=1 --jobs 12
@@ -14,9 +15,10 @@ use anyhow::{bail, Context, Result};
 use fitgpp::cluster::ClusterSpec;
 use fitgpp::config::ExperimentConfig;
 use fitgpp::live::{LiveCluster, LiveConfig};
-use fitgpp::metrics::slowdown_table;
+use fitgpp::metrics::{slowdown_table, SlowdownReport};
 use fitgpp::sched::policy::PolicyKind;
-use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::sim::{SimConfig, SimEngine, Simulator};
+use fitgpp::sweep::{compare_on, SweepSpec};
 use fitgpp::util::cli::Cli;
 use fitgpp::workload::{synthetic::SyntheticWorkload, trace::Trace, Workload};
 use std::path::Path;
@@ -38,6 +40,7 @@ fn run() -> Result<()> {
     match sub.as_str() {
         "simulate" => simulate(argv),
         "compare" => compare(argv),
+        "sweep" => sweep(argv),
         "generate" => generate(argv),
         "replay" => replay(argv),
         "live" => live(argv),
@@ -58,7 +61,8 @@ fn print_help() {
         "fitgpp — low-latency job scheduling with preemption (FitGpp)\n\n\
          SUBCOMMANDS:\n\
          \x20 simulate   run one policy on a synthetic workload\n\
-         \x20 compare    run FIFO/LRTP/RAND/FitGpp and print the Table-1 layout\n\
+         \x20 compare    run FIFO/LRTP/RAND/FitGpp in parallel, print the Table-1 layout\n\
+         \x20 sweep      run a policy x te-ratio x gp-scale x seed grid on all cores\n\
          \x20 generate   write a synthetic workload as a CSV trace\n\
          \x20 replay     replay a CSV trace under a policy\n\
          \x20 live       drive real PJRT training jobs under the scheduler\n\
@@ -133,7 +137,8 @@ fn simulate(argv: Vec<String>) -> Result<()> {
 }
 
 fn compare(argv: Vec<String>) -> Result<()> {
-    let cli = common_cli("fitgpp compare", "run all four §4 policies and print Table 1");
+    let cli = common_cli("fitgpp compare", "run all four §4 policies in parallel and print Table 1")
+        .opt("threads", Some("0"), "worker threads (0 = all cores)");
     let args = parse_or_exit(&cli, argv);
     let (cfg, wl) = build(&args)?;
     let policies = [
@@ -142,19 +147,141 @@ fn compare(argv: Vec<String>) -> Result<()> {
         PolicyKind::Rand,
         parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?,
     ];
-    let mut rows = Vec::new();
-    for p in policies {
-        let mut sim_cfg = cfg.sim_config();
-        sim_cfg.policy = p;
-        let res = Simulator::new(sim_cfg).run(&wl);
-        eprintln!("{} done: makespan {} min", p.name(), res.makespan);
-        rows.push((p.name(), res.slowdown_report()));
+    // The template carries the full experiment semantics (placement,
+    // progress-during-grace, seed, engine) from the config/flags.
+    let cells = compare_on(&wl, &cfg.sim_config(), &policies, args.get_usize("threads", 0));
+    let mut rows: Vec<(String, SlowdownReport)> = Vec::new();
+    for c in &cells {
+        eprintln!(
+            "{} done: makespan {} min ({:.2}s)",
+            c.cell.policy.name(),
+            c.makespan,
+            c.wall.as_secs_f64()
+        );
+        rows.push((c.cell.policy.name(), c.slowdown));
     }
     let named: Vec<(&str, _)> = rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
     println!(
         "{}",
         slowdown_table("Percentiles of slowdown rates (cf. paper Table 1)", &named).to_text()
     );
+    Ok(())
+}
+
+/// Parse a comma-separated list with a typed element parser.
+fn parse_list<T, F: Fn(&str) -> Option<T>>(raw: &str, what: &str, f: F) -> Result<Vec<T>> {
+    let mut out = Vec::new();
+    for tok in raw.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(f(tok).with_context(|| format!("bad {what} entry {tok:?}"))?);
+    }
+    if out.is_empty() {
+        bail!("empty {what} list");
+    }
+    Ok(out)
+}
+
+/// Parse a comma-separated policy list. Policy syntax itself uses commas
+/// (`fitgpp:s=4,p=1`), so a token like `p=1` — a `key=value` with no `:` —
+/// is a continuation of the previous entry, not a new one.
+fn parse_policy_list(raw: &str) -> Result<Vec<PolicyKind>> {
+    let mut entries: Vec<String> = Vec::new();
+    for tok in raw.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let continuation = tok.contains('=') && !tok.contains(':');
+        if continuation {
+            if let Some(last) = entries.last_mut() {
+                last.push(',');
+                last.push_str(tok);
+                continue;
+            }
+        }
+        entries.push(tok.to_string());
+    }
+    if entries.is_empty() {
+        bail!("empty policy list");
+    }
+    entries
+        .iter()
+        .map(|e| {
+            PolicyKind::parse(e).with_context(|| format!("bad policy entry {e:?}"))
+        })
+        .collect()
+}
+
+fn sweep(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new(
+        "fitgpp sweep",
+        "run a policy x te-ratio x gp-scale x seed grid on all cores",
+    )
+    .opt("policies", Some("fifo,lrtp,rand,fitgpp:s=4,p=1"), "comma-separated policy list")
+    .opt("te-ratios", Some("0.3"), "comma-separated TE-job fractions (Fig. 6 axis)")
+    .opt("gp-scales", Some("1.0"), "comma-separated grace-period scales (Fig. 7 axis)")
+    .opt("seeds", Some("100,101"), "comma-separated workload seeds")
+    .opt("jobs", Some("4096"), "jobs per workload")
+    .opt("nodes", Some("84"), "number of cluster nodes")
+    .opt("load", Some("2.0"), "target FIFO cluster load")
+    .opt("threads", Some("0"), "worker threads (0 = FITGPP_THREADS, else all cores)")
+    .opt("engine", Some("event-horizon"), "event-horizon | per-minute")
+    .opt("json-out", None, "write the full sweep JSON here")
+    .opt("csv-out", None, "write one CSV row per cell here");
+    let args = parse_or_exit(&cli, argv);
+
+    let policies = parse_policy_list(args.get_or("policies", "fifo,lrtp,rand,fitgpp:s=4,p=1"))?;
+    let te_ratios = parse_list(args.get_or("te-ratios", "0.3"), "te-ratio", |s| {
+        s.parse::<f64>().ok()
+    })?;
+    let gp_scales = parse_list(args.get_or("gp-scales", "1.0"), "gp-scale", |s| {
+        s.parse::<f64>().ok()
+    })?;
+    let seeds = parse_list(args.get_or("seeds", "100,101"), "seed", |s| {
+        s.parse::<u64>().ok()
+    })?;
+    let engine = match args.get_or("engine", "event-horizon") {
+        "event-horizon" => SimEngine::EventHorizon,
+        "per-minute" => SimEngine::PerMinute,
+        other => bail!("unknown --engine {other:?}"),
+    };
+
+    let spec = SweepSpec::new(
+        ClusterSpec::homogeneous(
+            args.get_usize("nodes", 84),
+            fitgpp::resources::ResourceVec::pfn_node(),
+        ),
+        policies,
+    )
+    .with_te_ratios(te_ratios)
+    .with_gp_scales(gp_scales)
+    .with_seeds(seeds)
+    .with_num_jobs(args.get_usize("jobs", 4096))
+    .with_target_load(args.get_f64("load", 2.0))
+    .with_engine(engine)
+    .with_threads(args.get_usize("threads", 0));
+
+    eprintln!(
+        "sweep: {} cells on {} threads ({} distinct workloads)",
+        spec.cells().len(),
+        spec.threads_effective(),
+        spec.seeds.len() * spec.te_ratios.len() * spec.gp_scales.len()
+    );
+    let res = spec.run();
+    println!(
+        "{}",
+        res.table1("Sweep: slowdown percentiles pooled across seeds").to_text()
+    );
+    println!(
+        "{} cells in {:.1}s wall on {} threads ({:.1}s serial-equivalent sim time)",
+        res.cells.len(),
+        res.wall.as_secs_f64(),
+        res.threads,
+        res.total_cell_wall().as_secs_f64()
+    );
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, res.to_json().to_pretty())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.get("csv-out") {
+        std::fs::write(path, res.to_csv())?;
+        eprintln!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -11,8 +11,11 @@ use crate::util::table::{sig3, Table};
 /// 50th/95th/99th percentiles — the triple every slowdown table reports.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Percentiles {
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
@@ -35,9 +38,11 @@ impl Percentiles {
 }
 
 /// Slowdown-rate percentiles for TE and BE jobs (Table 1 / Table 5 row).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SlowdownReport {
+    /// Trial-and-error (latency-sensitive) class.
     pub te: Percentiles,
+    /// Best-effort class.
     pub be: Percentiles,
 }
 
@@ -51,12 +56,17 @@ impl SlowdownReport {
 }
 
 /// Re-scheduling interval percentiles in minutes (Table 2 row).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct IntervalsReport {
+    /// Median interval.
     pub p50: f64,
+    /// 75th percentile.
     pub p75: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Number of completed vacate→restart intervals pooled.
     pub count: usize,
 }
 
@@ -72,7 +82,7 @@ impl IntervalsReport {
 }
 
 /// Preemption statistics (Tables 3 & 4 rows).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PreemptionReport {
     /// Fraction of all jobs preempted ≥ 1 time (Table 3).
     pub fraction_preempted: f64,

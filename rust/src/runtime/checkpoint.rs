@@ -20,7 +20,10 @@ const VERSION: u32 = 1;
 /// A serialized training state: step counter + parameter tensors.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Training steps completed when the snapshot was taken.
     pub step: u64,
+    /// `(shape, row-major data)` per parameter tensor, calling-convention
+    /// order.
     pub tensors: Vec<(Vec<usize>, Vec<f32>)>,
 }
 
@@ -34,6 +37,7 @@ fn fnv1a(bytes: &[u8]) -> u32 {
 }
 
 impl Checkpoint {
+    /// Build a checkpoint from raw tensors.
     pub fn new(step: u64, tensors: Vec<(Vec<usize>, Vec<f32>)>) -> Self {
         Checkpoint { step, tensors }
     }

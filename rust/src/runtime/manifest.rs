@@ -11,7 +11,9 @@ use std::path::{Path, PathBuf};
 /// Shape + dtype of one tensor in the AOT calling convention.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Parameter name (python-side pytree path).
     pub name: String,
+    /// Dimensions, row-major.
     pub shape: Vec<usize>,
     /// `"f32"` or `"s32"` (all the artifacts use).
     pub dtype: String,
@@ -39,6 +41,7 @@ impl TensorSpec {
 /// One lowered model variant (e.g. `tiny`, `small`).
 #[derive(Debug, Clone)]
 pub struct ModelVariant {
+    /// Variant name (`tiny`, `small`, ...).
     pub name: String,
     /// HLO-text file for the fused train step (params…, tokens) →
     /// (params…, loss).
@@ -60,7 +63,9 @@ impl ModelVariant {
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the artifacts live in.
     pub dir: PathBuf,
+    /// Lowered model variants by name.
     pub variants: BTreeMap<String, ModelVariant>,
     /// Stand-alone probe artifact for runtime smoke tests:
     /// `f(x, y) = (x·y + 2,)` over f32[2,2].

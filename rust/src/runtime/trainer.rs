@@ -10,6 +10,7 @@ use super::manifest::{Manifest, ModelVariant};
 use super::{Checkpoint, Engine, Executable};
 use crate::stats::dist::{Normal, Sample};
 use crate::stats::rng::Pcg64;
+use crate::xla;
 use anyhow::{bail, Context, Result};
 
 /// A live training job: compiled step + resident parameters.

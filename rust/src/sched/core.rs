@@ -85,37 +85,52 @@ pub struct SchedStats {
     pub completions: u64,
     /// TE jobs that found room with no preemption at all.
     pub te_no_preemption: u64,
-    /// Ticks executed.
+    /// Simulated minutes advanced (per-minute ticks plus bulk-burned
+    /// minutes — always equal to simulated time, whichever engine ran).
     pub ticks: u64,
     /// Reservations dropped and re-planned because the drained space did
     /// not materialize on a single node (aggregate baseline plans).
     pub replans: u64,
+    /// Quiescent spans fast-forwarded in bulk ([`Scheduler::burn_many`]
+    /// calls — only the event-horizon engine issues them).
+    pub fast_forwards: u64,
+    /// Simulated minutes covered by those bulk burns (a subset of `ticks`).
+    pub fast_forwarded_ticks: u64,
 }
 
-/// Per-tick outcome (used by tests and the live executor).
+/// Per-tick outcome (used by tests, the live executor, and the
+/// event-horizon engine's skip-eligibility check).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TickStats {
+    /// Jobs that completed this tick.
     pub completed: Vec<JobId>,
+    /// Jobs that vacated their node this tick (grace period elapsed).
     pub vacated: Vec<JobId>,
+    /// Jobs placed (started or resumed) this tick.
     pub started: Vec<JobId>,
+    /// Jobs signalled for preemption this tick.
     pub preempted: Vec<JobId>,
 }
 
 /// The scheduler. Owns cluster + queues; the job table lives outside (the
 /// simulator or live executor owns it) and is passed to `tick`.
 pub struct Scheduler {
+    /// The configuration this scheduler was built with.
     pub cfg: SchedConfig,
+    /// Live cluster state (node capacities, allocations).
     pub cluster: Cluster,
     /// BE queue (all jobs under vanilla FIFO).
     pub be_queue: JobQueue,
     /// TE fast lane (unused under vanilla FIFO).
     pub te_queue: JobQueue,
+    /// Live reservations pinning incoming TE jobs to draining nodes.
     pub reservations: Vec<Reservation>,
     /// Per-node sum of reservation holds.
     holds: Vec<ResourceVec>,
     /// Jobs currently occupying resources (Running or Draining).
     active: Vec<JobId>,
     rng: Pcg64,
+    /// Aggregate counters across the run.
     pub stats: SchedStats,
     /// Run `Cluster::check_invariants` every tick (tests; ~2× slower).
     pub paranoid: bool,
@@ -456,6 +471,126 @@ impl Scheduler {
     pub fn idle(&self) -> bool {
         self.active.is_empty() && self.be_queue.is_empty() && self.te_queue.is_empty()
     }
+
+    // ------------------------------------------------------------------
+    // Event-horizon support: the three methods below let the simulator
+    // fast-forward quiescent spans in O(1) ticks instead of calling `tick`
+    // once per simulated minute. See `sim::SimEngine::EventHorizon`.
+    // ------------------------------------------------------------------
+
+    /// True when no scheduling *decision* can change before the next event
+    /// (arrival, completion, or grace expiry):
+    ///
+    /// * every queued TE job is pinned to a reservation with at least one
+    ///   still-draining victim, so its admission pass is a deterministic
+    ///   no-op (it neither replans — which would consume policy RNG — nor
+    ///   places, since the cluster's free/hold state cannot change without
+    ///   an event), and
+    /// * BE admission is head-gated FIFO on that same frozen cluster state,
+    ///   so a head blocked now stays blocked for the whole span.
+    ///
+    /// The caller must additionally rule out the one same-tick rule that
+    /// is *not* visible from this state: a job that vacated in the tick
+    /// just executed becomes admittable one tick later
+    /// (check [`TickStats::vacated`]).
+    pub fn quiescent(&self, jobs: &[Job]) -> bool {
+        self.te_queue.iter().all(|id| {
+            self.reservations.iter().any(|r| {
+                r.te == id
+                    && r.victims
+                        .iter()
+                        .any(|v| jobs[v.0 as usize].state == JobState::Draining)
+            })
+        })
+    }
+
+    /// Minutes until the next scheduler-internal event — a running job
+    /// completing, a draining job's grace period expiring, or (under
+    /// progress-during-grace) a draining job finishing — measured from the
+    /// tick after the one that just ran. `None` when no job occupies
+    /// resources.
+    pub fn next_internal_event(&self, jobs: &[Job]) -> Option<Minutes> {
+        let mut min: Option<Minutes> = None;
+        for id in &self.active {
+            let job = &jobs[id.0 as usize];
+            let mut upd = |d: Minutes| {
+                min = Some(match min {
+                    Some(m) if m <= d => m,
+                    _ => d,
+                })
+            };
+            match job.state {
+                JobState::Running => upd(job.remaining),
+                JobState::Draining => {
+                    upd(job.grace_left);
+                    if self.cfg.progress_during_grace {
+                        upd(job.remaining);
+                    }
+                }
+                _ => unreachable!("active job in state {:?}", job.state),
+            }
+            if min == Some(0) {
+                break; // cannot get earlier than "next tick"
+            }
+        }
+        min
+    }
+
+    /// Advance `dt` quiescent simulated minutes in one step: running jobs
+    /// progress, draining jobs burn grace time (and progress, under
+    /// progress-during-grace), queued jobs accrue waiting time — exactly
+    /// what `dt` calls to [`Scheduler::tick`] would have done given that no
+    /// completion, grace expiry, arrival, or admission can occur inside the
+    /// span. The event-horizon engine establishes that precondition via
+    /// [`Scheduler::quiescent`] and [`Scheduler::next_internal_event`];
+    /// debug builds re-assert it here.
+    pub fn burn_many(&mut self, dt: Minutes, jobs: &mut [Job]) {
+        if dt == 0 {
+            return;
+        }
+        self.stats.ticks += dt;
+        self.stats.fast_forwards += 1;
+        self.stats.fast_forwarded_ticks += dt;
+        for id in &self.active {
+            let job = &mut jobs[id.0 as usize];
+            match job.state {
+                JobState::Running => {
+                    debug_assert!(
+                        job.remaining >= dt,
+                        "{} would complete mid-span (remaining {} < dt {})",
+                        job.id(),
+                        job.remaining,
+                        dt
+                    );
+                    job.remaining -= dt;
+                }
+                JobState::Draining => {
+                    debug_assert!(
+                        job.grace_left >= dt,
+                        "{} would vacate mid-span (grace {} < dt {})",
+                        job.id(),
+                        job.grace_left,
+                        dt
+                    );
+                    job.grace_left -= dt;
+                    if self.cfg.progress_during_grace && job.remaining > 0 {
+                        debug_assert!(
+                            job.remaining >= dt,
+                            "{} would finish mid-drain (remaining {} < dt {})",
+                            job.id(),
+                            job.remaining,
+                            dt
+                        );
+                        job.remaining -= dt;
+                    }
+                }
+                _ => unreachable!("active job in state {:?}", job.state),
+            }
+        }
+        for id in self.be_queue.iter().chain(self.te_queue.iter()) {
+            jobs[id.0 as usize].waiting += dt;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -661,6 +796,61 @@ mod tests {
         }
         assert_eq!(jobs[0].preemptions, 0, "finished during drain, never vacated");
         assert_eq!(jobs[0].finished_at, Some(3));
+    }
+
+    #[test]
+    fn burn_many_matches_repeated_ticks_on_quiescent_state() {
+        // One running job, one queued job blocked behind it: burning 5
+        // minutes in bulk must equal five per-minute ticks.
+        let spec = ClusterSpec::tiny(1);
+        let mk = || {
+            mkjobs(vec![
+                JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 50, 0),
+                JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 20, 0),
+            ])
+        };
+        let drive = |jobs: &mut Vec<Job>| {
+            let mut sched = Scheduler::new(&spec, SchedConfig::new(PolicyKind::Fifo));
+            let arrivals: Vec<JobId> = jobs.iter().map(|j| j.id()).collect();
+            sched.tick(0, jobs, &arrivals);
+            sched
+        };
+        let mut a = mk();
+        let mut sa = drive(&mut a);
+        assert!(sa.quiescent(&a), "blocked BE head is quiescent");
+        assert_eq!(sa.next_internal_event(&a), Some(49));
+        sa.burn_many(5, &mut a);
+
+        let mut b = mk();
+        let mut sb = drive(&mut b);
+        for t in 1..=5 {
+            sb.tick(t, &mut b, &[]);
+        }
+        assert_eq!(a[0].remaining, b[0].remaining);
+        assert_eq!(a[1].waiting, b[1].waiting);
+        assert_eq!(sa.stats.ticks, sb.stats.ticks);
+        assert_eq!(sa.stats.fast_forwards, 1);
+        assert_eq!(sa.stats.fast_forwarded_ticks, 5);
+    }
+
+    #[test]
+    fn te_without_draining_reservation_blocks_quiescence() {
+        // A queued TE job whose plan found nothing to preempt must force
+        // per-minute stepping (its admission path replans every tick).
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            // TE job filling the node; a second TE cannot preempt it.
+            JobSpec::new(0, JobClass::Te, rv(32.0, 256.0, 8.0), 0, 30, 0),
+            JobSpec::new(1, JobClass::Te, rv(32.0, 256.0, 8.0), 0, 5, 0),
+        ]);
+        let mut sched = Scheduler::new(
+            &spec,
+            SchedConfig::new(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
+        );
+        let arrivals: Vec<JobId> = jobs.iter().map(|j| j.id()).collect();
+        sched.tick(0, &mut jobs, &arrivals);
+        assert_eq!(sched.te_queue.len(), 1);
+        assert!(!sched.quiescent(&jobs));
     }
 
     #[test]

@@ -111,7 +111,9 @@ impl PolicyKind {
 /// `node`) so the TE job can start on `node` once they drain.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PreemptionPlan {
+    /// Node the TE job will start on once the victims drain.
     pub node: NodeId,
+    /// Victims to signal (all hosted on `node`).
     pub victims: Vec<JobId>,
     /// True when FitGpp's Eq. 4 candidate set was empty and the random
     /// escape hatch produced this plan (never fired in the paper's runs;
@@ -121,7 +123,9 @@ pub struct PreemptionPlan {
 
 /// Read-only view handed to policies.
 pub struct PolicyCtx<'a> {
+    /// Cluster state (node capacities, allocations).
     pub cluster: &'a Cluster,
+    /// The full job table, indexed by job id.
     pub jobs: &'a [Job],
     /// Per-node free resources minus reservation holds — what is really
     /// available to new placements.

@@ -1,10 +1,23 @@
 //! Discrete-time simulator: replays a [`Workload`] through a [`Scheduler`]
-//! one simulated minute at a time (§4.1: "the job scheduler decides
-//! resource allocation at every simulated minute").
+//! (§4.1: "the job scheduler decides resource allocation at every simulated
+//! minute").
+//!
+//! Two engines advance simulated time:
+//!
+//! * [`SimEngine::EventHorizon`] (default) — computes the next *event
+//!   horizon* (earliest of the next arrival, next completion, next grace
+//!   expiry, and "next minute" whenever a queued job's admission could
+//!   consume policy RNG or re-plan) and fast-forwards quiescent spans in a
+//!   single [`Scheduler::burn_many`] call instead of ticking minute by
+//!   minute.
+//! * [`SimEngine::PerMinute`] — the original reference loop, one
+//!   [`Scheduler::tick`] per simulated minute. Kept as the equivalence
+//!   oracle: `rust/tests/engine_equivalence.rs` asserts both engines
+//!   produce byte-identical reports on §4.2 workloads.
 //!
 //! The simulator is deterministic: (workload, config, seed) → identical
-//! results, which is what makes every number in EXPERIMENTS.md
-//! reproducible.
+//! results, whichever engine runs — which is what makes every number in
+//! EXPERIMENTS.md reproducible.
 
 use crate::cluster::{ClusterSpec, Placement};
 use crate::job::{Job, JobClass, JobId, JobState};
@@ -17,14 +30,34 @@ use crate::util::table::Table;
 use crate::workload::Workload;
 use crate::Minutes;
 
+/// Which driver advances simulated time. Both engines share
+/// [`Scheduler::tick`]; they differ only in how many quiescent minutes they
+/// step through one at a time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimEngine {
+    /// Fast-forward quiescent spans to the next event horizon (default).
+    #[default]
+    EventHorizon,
+    /// The original reference loop: one tick per simulated minute.
+    PerMinute,
+}
+
 /// Full configuration of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Cluster to simulate.
     pub cluster: ClusterSpec,
+    /// Scheduling/preemption policy under test.
     pub policy: PolicyKind,
+    /// Node-selection rule for placements.
     pub placement: Placement,
+    /// Whether draining jobs keep making progress (§2 ablation).
     pub progress_during_grace: bool,
+    /// Seed for the policy RNG (RAND victims, FitGpp fallback).
     pub seed: u64,
+    /// Time-advance engine (event-horizon by default; per-minute is the
+    /// equivalence oracle).
+    pub engine: SimEngine,
     /// Keep ticking after the last arrival until every job completes
     /// (default). With `false`, stop at the last arrival + `tail_ticks`.
     pub drain: bool,
@@ -37,6 +70,8 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// Defaults matching the paper's §4 setup: best-fit placement, no
+    /// progress during grace, drain to completion, event-horizon engine.
     pub fn new(cluster: ClusterSpec, policy: PolicyKind) -> Self {
         SimConfig {
             cluster,
@@ -44,6 +79,7 @@ impl SimConfig {
             placement: Placement::BestFit,
             progress_during_grace: false,
             seed: 0x5EED,
+            engine: SimEngine::default(),
             drain: true,
             tail_ticks: 0,
             max_ticks: 10_000_000,
@@ -53,18 +89,29 @@ impl SimConfig {
 }
 
 /// Immutable per-job outcome captured at the end of a run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobRecord {
+    /// The job's identifier.
     pub id: JobId,
+    /// TE or BE.
     pub class: JobClass,
+    /// Requested resources.
     pub demand: ResourceVec,
+    /// Submission tick.
     pub submit: Minutes,
+    /// Required execution time.
     pub exec_time: Minutes,
+    /// Declared grace period.
     pub grace_period: Minutes,
+    /// First tick the job ran (None if it never started).
     pub first_start: Option<Minutes>,
+    /// Completion tick (None if unfinished at cut-off).
     pub finished_at: Option<Minutes>,
+    /// How many times the job was preempted.
     pub preemptions: u32,
+    /// Completed vacate→restart intervals (Table 2).
     pub resched_intervals: Vec<Minutes>,
+    /// Eq. 5 slowdown rate.
     pub slowdown: f64,
 }
 
@@ -94,8 +141,11 @@ impl JobRecord {
 /// Everything a run produced.
 #[derive(Debug, Clone)]
 pub struct SimResult {
+    /// Policy that produced this result.
     pub policy: PolicyKind,
+    /// Per-job outcomes, in job-id (submission) order.
     pub records: Vec<JobRecord>,
+    /// Aggregate scheduler counters.
     pub sched_stats: SchedStats,
     /// Tick at which the simulation stopped.
     pub makespan: Minutes,
@@ -229,13 +279,23 @@ pub struct Simulator {
 }
 
 impl Simulator {
+    /// Build a simulator for one configuration.
     pub fn new(cfg: SimConfig) -> Self {
         Simulator { cfg }
     }
 
-    /// Run `workload` to completion and collect results.
+    /// Run `workload` to completion and collect results, dispatching to the
+    /// configured [`SimEngine`].
     pub fn run(&self, workload: &Workload) -> SimResult {
-        let mut jobs: Vec<Job> = workload.jobs.iter().cloned().map(Job::new).collect();
+        match self.cfg.engine {
+            SimEngine::EventHorizon => self.run_event_horizon(workload),
+            SimEngine::PerMinute => self.run_per_minute(workload),
+        }
+    }
+
+    /// Build the job table + scheduler for a run.
+    fn setup(&self, workload: &Workload) -> (Vec<Job>, Scheduler) {
+        let jobs: Vec<Job> = workload.jobs.iter().cloned().map(Job::new).collect();
         // Arrival index: jobs are sorted by submit time with dense ids.
         debug_assert!(workload.jobs.windows(2).all(|w| w[0].submit <= w[1].submit));
 
@@ -245,7 +305,25 @@ impl Simulator {
         sched_cfg.seed = self.cfg.seed;
         let mut sched = Scheduler::new(&self.cfg.cluster, sched_cfg);
         sched.paranoid = self.cfg.paranoid;
+        (jobs, sched)
+    }
 
+    fn finish(&self, jobs: Vec<Job>, sched: Scheduler, now: Minutes) -> SimResult {
+        let unfinished = jobs.iter().filter(|j| j.state != JobState::Done).count();
+        SimResult {
+            policy: self.cfg.policy,
+            records: jobs.iter().map(JobRecord::from_job).collect(),
+            sched_stats: sched.stats.clone(),
+            makespan: now,
+            unfinished,
+        }
+    }
+
+    /// The original reference loop: one [`Scheduler::tick`] per simulated
+    /// minute, exactly as the paper describes the scheduler operating. Kept
+    /// verbatim as the equivalence oracle for the event-horizon engine.
+    fn run_per_minute(&self, workload: &Workload) -> SimResult {
+        let (mut jobs, mut sched) = self.setup(workload);
         let last_submit = workload.jobs.last().map(|j| j.submit).unwrap_or(0);
         let mut next_arrival = 0usize; // index into jobs
         let mut now: Minutes = 0;
@@ -275,14 +353,75 @@ impl Simulator {
             }
         }
 
-        let unfinished = jobs.iter().filter(|j| j.state != JobState::Done).count();
-        SimResult {
-            policy: self.cfg.policy,
-            records: jobs.iter().map(JobRecord::from_job).collect(),
-            sched_stats: sched.stats.clone(),
-            makespan: now,
-            unfinished,
+        self.finish(jobs, sched, now)
+    }
+
+    /// Event-horizon loop: identical tick/break structure to
+    /// [`Self::run_per_minute`], plus a fast-forward step after each tick.
+    /// When the scheduler is [quiescent](Scheduler::quiescent) (and nothing
+    /// vacated in the tick just executed — a vacated job becomes admittable
+    /// one tick later), the span until the earliest of
+    ///
+    /// * the next arrival's submit tick,
+    /// * the next internal event (completion / grace expiry), and
+    /// * the engine's stopping caps (`max_ticks`, the no-drain tail cutoff)
+    ///
+    /// is advanced in one [`Scheduler::burn_many`] call. Quiescent spans
+    /// therefore cost O(jobs) once instead of O(jobs) per minute, and the
+    /// results are byte-identical to the per-minute loop (see
+    /// `rust/tests/engine_equivalence.rs`).
+    fn run_event_horizon(&self, workload: &Workload) -> SimResult {
+        let (mut jobs, mut sched) = self.setup(workload);
+        let last_submit = workload.jobs.last().map(|j| j.submit).unwrap_or(0);
+        let mut next_arrival = 0usize; // index into jobs
+        let mut now: Minutes = 0;
+        let mut arrivals: Vec<JobId> = Vec::new();
+
+        loop {
+            arrivals.clear();
+            while next_arrival < jobs.len() && jobs[next_arrival].spec.submit == now {
+                arrivals.push(jobs[next_arrival].id());
+                next_arrival += 1;
+            }
+            let out = sched.tick(now, &mut jobs, &arrivals);
+            now += 1;
+
+            let past_arrivals = next_arrival >= jobs.len() && now > last_submit;
+            if past_arrivals {
+                if self.cfg.drain {
+                    if sched.idle() {
+                        break;
+                    }
+                } else if now > last_submit + self.cfg.tail_ticks {
+                    break;
+                }
+            }
+            if now >= self.cfg.max_ticks {
+                break;
+            }
+
+            // ---- fast-forward to the next event horizon ----------------
+            if out.vacated.is_empty() && sched.quiescent(&jobs) {
+                // Latest tick the per-minute loop could still execute
+                // before one of its break conditions fires.
+                let mut target = self.cfg.max_ticks.saturating_sub(1);
+                if !self.cfg.drain && next_arrival >= jobs.len() {
+                    target = target.min(last_submit + self.cfg.tail_ticks);
+                }
+                if let Some(delta) = sched.next_internal_event(&jobs) {
+                    target = target.min(now.saturating_add(delta));
+                }
+                if next_arrival < jobs.len() {
+                    target = target.min(jobs[next_arrival].spec.submit);
+                }
+                if target > now {
+                    sched.burn_many(target - now, &mut jobs);
+                    now = target;
+                }
+            }
         }
+
+        self.finish(jobs, sched, now)
     }
 }
 
@@ -358,6 +497,89 @@ mod tests {
         )]));
         assert_eq!(res.unfinished, 1);
         assert!(res.makespan <= 4);
+    }
+
+    #[test]
+    fn engines_agree_on_crafted_workload() {
+        // Preemptions, grace drains, re-queues, and a long drain tail: the
+        // two engines must agree on every record and the makespan.
+        let specs: Vec<JobSpec> = (0..30)
+            .map(|i| {
+                JobSpec::new(
+                    i,
+                    if i % 3 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(6.0 + (i % 4) as f64 * 8.0, 48.0, (i % 3) as f64),
+                    (i as u64) / 2,
+                    4 + (i as u64 % 17) * 3,
+                    (i as u64) % 5,
+                )
+            })
+            .collect();
+        for policy in [
+            PolicyKind::Fifo,
+            PolicyKind::FastLane,
+            PolicyKind::Lrtp,
+            PolicyKind::Rand,
+            PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        ] {
+            let run = |engine: SimEngine| {
+                let mut cfg = SimConfig::new(ClusterSpec::tiny(2), policy);
+                cfg.paranoid = true;
+                cfg.engine = engine;
+                Simulator::new(cfg).run(&wl(specs.clone()))
+            };
+            let eh = run(SimEngine::EventHorizon);
+            let pm = run(SimEngine::PerMinute);
+            assert_eq!(eh.makespan, pm.makespan, "{policy:?} makespan");
+            assert_eq!(eh.records, pm.records, "{policy:?} records");
+            assert_eq!(
+                eh.sched_stats.ticks, pm.sched_stats.ticks,
+                "{policy:?} simulated minutes"
+            );
+            assert_eq!(pm.sched_stats.fast_forwards, 0);
+        }
+    }
+
+    #[test]
+    fn event_horizon_actually_fast_forwards() {
+        // A lone long job leaves the cluster quiescent: the event-horizon
+        // engine must cover almost the whole run in bulk burns.
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo);
+        cfg.engine = SimEngine::EventHorizon;
+        let res = Simulator::new(cfg).run(&wl(vec![JobSpec::new(
+            0, JobClass::Be, rv(4.0, 32.0, 1.0), 0, 5000, 0,
+        )]));
+        assert_eq!(res.makespan, 5001);
+        assert!(res.sched_stats.fast_forwards >= 1);
+        assert!(
+            res.sched_stats.fast_forwarded_ticks >= 4999,
+            "bulk-burned {} of {} minutes",
+            res.sched_stats.fast_forwarded_ticks,
+            res.sched_stats.ticks
+        );
+    }
+
+    #[test]
+    fn engines_agree_with_tail_cutoff_and_max_ticks() {
+        let specs = vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 1000, 0),
+            JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 3, 1000, 0),
+        ];
+        for (drain, tail, max) in [(false, 7, 10_000_000), (true, 0, 40), (false, 0, 2)] {
+            let run = |engine: SimEngine| {
+                let mut cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo);
+                cfg.drain = drain;
+                cfg.tail_ticks = tail;
+                cfg.max_ticks = max;
+                cfg.engine = engine;
+                Simulator::new(cfg).run(&wl(specs.clone()))
+            };
+            let eh = run(SimEngine::EventHorizon);
+            let pm = run(SimEngine::PerMinute);
+            assert_eq!(eh.makespan, pm.makespan, "drain={drain} tail={tail} max={max}");
+            assert_eq!(eh.records, pm.records);
+            assert_eq!(eh.sched_stats.ticks, pm.sched_stats.ticks);
+        }
     }
 
     #[test]

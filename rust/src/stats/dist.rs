@@ -6,6 +6,7 @@ use super::rng::Pcg64;
 
 /// A sampleable 1-D distribution.
 pub trait Sample {
+    /// Draw one value using `rng`.
     fn sample(&self, rng: &mut Pcg64) -> f64;
 }
 
@@ -13,11 +14,14 @@ pub trait Sample {
 /// stateless so substreams stay aligned regardless of call counts).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Normal {
+    /// Mean.
     pub mean: f64,
+    /// Standard deviation.
     pub std: f64,
 }
 
 impl Normal {
+    /// Construct; `std` must be non-negative.
     pub fn new(mean: f64, std: f64) -> Self {
         assert!(std >= 0.0, "std must be non-negative");
         Normal { mean, std }
@@ -43,14 +47,18 @@ impl Sample for Normal {
 /// parameterizations).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TruncatedNormal {
+    /// The untruncated normal.
     pub inner: Normal,
+    /// Lower truncation bound.
     pub lo: f64,
+    /// Upper truncation bound.
     pub hi: f64,
 }
 
 const MAX_REJECT: usize = 1024;
 
 impl TruncatedNormal {
+    /// Construct; requires `lo < hi`.
     pub fn new(mean: f64, std: f64, lo: f64, hi: f64) -> Self {
         assert!(lo < hi, "truncation interval must be non-empty ({lo}..{hi})");
         TruncatedNormal { inner: Normal::new(mean, std), lo, hi }
@@ -85,11 +93,14 @@ impl Sample for TruncatedNormal {
 /// DESIGN.md §3).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LogNormal {
+    /// Mean of the underlying normal (log scale).
     pub mu: f64,
+    /// Std of the underlying normal (log scale).
     pub sigma: f64,
 }
 
 impl LogNormal {
+    /// Construct from log-scale parameters.
     pub fn new(mu: f64, sigma: f64) -> Self {
         LogNormal { mu, sigma }
     }
@@ -114,10 +125,12 @@ impl Sample for LogNormal {
 /// Exponential(rate) via inverse CDF — Poisson-process inter-arrival gaps.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Exponential {
+    /// Rate parameter λ (events per unit time).
     pub rate: f64,
 }
 
 impl Exponential {
+    /// Construct; `rate` must be positive.
     pub fn new(rate: f64) -> Self {
         assert!(rate > 0.0);
         Exponential { rate }

@@ -41,17 +41,26 @@ pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
 /// Five-number-ish summary used by reports.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Minimum.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Maximum.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "summary of empty slice");
         let mut v: Vec<f64> = xs.to_vec();

@@ -1,0 +1,693 @@
+//! Thread-parallel sweep harness: run grids of
+//! policy × s × P × TE-ratio × GP-scale × seed simulations and aggregate
+//! the results deterministically.
+//!
+//! The paper's entire evaluation (§4) is such a grid — Table 1 is
+//! 4 policies × 8 workloads, Fig. 4 is an `s` sweep, Fig. 5 a `P` sweep,
+//! Fig. 6 a TE-ratio sweep, Fig. 7 a GP-scale sweep. The seed repository
+//! ran every cell serially; this module is the scaling substrate that
+//! replaces those loops:
+//!
+//! * **Work stealing** — cells go into a shared queue (an atomic cursor);
+//!   idle workers steal the next unclaimed cell, so a slow cell (FIFO's
+//!   long makespans) never gates the grid behind a fixed partition.
+//! * **Workload caching** — cells that share a `(seed, te_ratio, gp_scale)`
+//!   coordinate share one generated [`Workload`] (generation runs its own
+//!   internal calibration simulation and is as expensive as a policy run).
+//! * **Deterministic, order-independent aggregation** — every
+//!   [`CellResult`] is routed back to its grid index, so
+//!   [`SweepResult::cells`] is identical whatever the thread count or
+//!   completion order; a test pins `threads = 1` against `threads = N`.
+//!
+//! ```no_run
+//! use fitgpp::prelude::*;
+//!
+//! let res = SweepSpec::table1(8192, &[100, 101, 102, 103]).run();
+//! println!("{}", res.table1("Table 1: slowdown percentiles").to_text());
+//! ```
+
+use crate::cluster::ClusterSpec;
+use crate::job::JobClass;
+use crate::metrics::{slowdown_table, Percentiles, PreemptionReport, SlowdownReport};
+use crate::sched::policy::PolicyKind;
+use crate::sim::{SimConfig, SimEngine, Simulator};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workload::synthetic::SyntheticWorkload;
+use crate::workload::Workload;
+use crate::Minutes;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// One point of the grid: a policy run on the §4.2 synthetic workload with
+/// the given knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellSpec {
+    /// Position in [`SweepSpec::cells`] order (stable aggregation key).
+    pub index: usize,
+    /// Policy under test.
+    pub policy: PolicyKind,
+    /// Fraction of TE jobs in the workload (Fig. 6 axis).
+    pub te_ratio: f64,
+    /// Grace-period distribution scale (Fig. 7 axis).
+    pub gp_scale: f64,
+    /// Workload seed; also used as the simulation's policy-RNG seed.
+    pub seed: u64,
+}
+
+/// The grid description. Cells are the cross product
+/// `seeds × te_ratios × gp_scales × policies`.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Cluster every cell simulates.
+    pub cluster: ClusterSpec,
+    /// Policy axis. For FitGpp parameter sweeps put one `FitGpp { .. }`
+    /// variant per grid point here (see [`SweepSpec::fitgpp_s_grid`]).
+    pub policies: Vec<PolicyKind>,
+    /// TE-ratio axis (default `[0.3]`, the paper's base mix).
+    pub te_ratios: Vec<f64>,
+    /// GP-scale axis (default `[1.0]`).
+    pub gp_scales: Vec<f64>,
+    /// Workload seeds (the paper pools eight generated workloads).
+    pub seeds: Vec<u64>,
+    /// Jobs per workload.
+    pub num_jobs: usize,
+    /// FIFO-calibrated target cluster load (§4.2 uses 2.0).
+    pub target_load: f64,
+    /// Simulation engine for every cell.
+    pub engine: SimEngine,
+    /// §2 ablation knob, forwarded to every cell.
+    pub progress_during_grace: bool,
+    /// Worker threads; `0` = `FITGPP_THREADS` env var, else all cores.
+    pub threads: usize,
+}
+
+impl SweepSpec {
+    /// A sweep over `policies` on `cluster` with paper-default axes.
+    pub fn new(cluster: ClusterSpec, policies: Vec<PolicyKind>) -> Self {
+        SweepSpec {
+            cluster,
+            policies,
+            te_ratios: vec![0.3],
+            gp_scales: vec![1.0],
+            seeds: vec![7],
+            num_jobs: 4096,
+            target_load: 2.0,
+            engine: SimEngine::default(),
+            progress_during_grace: false,
+            threads: 0,
+        }
+    }
+
+    /// The Table-1 grid: the four §4.1 policies (FitGpp at its headline
+    /// s = 4, P = 1 setting) on the paper's 84-node cluster, one cell per
+    /// workload seed.
+    pub fn table1(num_jobs: usize, seeds: &[u64]) -> Self {
+        SweepSpec::new(ClusterSpec::pfn(), paper_policies())
+            .with_num_jobs(num_jobs)
+            .with_seeds(seeds.to_vec())
+    }
+
+    /// Replace the policy axis with `FitGpp { s, p_max }` for each `s`
+    /// (the Fig. 4 sweep).
+    pub fn fitgpp_s_grid(mut self, s_values: &[f64], p_max: Option<u32>) -> Self {
+        self.policies = s_values
+            .iter()
+            .map(|&s| PolicyKind::FitGpp { s, p_max })
+            .collect();
+        self
+    }
+
+    /// Replace the policy axis with `FitGpp { s, p_max }` for each `p_max`
+    /// (the Fig. 5 sweep).
+    pub fn fitgpp_p_grid(mut self, s: f64, p_values: &[Option<u32>]) -> Self {
+        self.policies = p_values
+            .iter()
+            .map(|&p_max| PolicyKind::FitGpp { s, p_max })
+            .collect();
+        self
+    }
+
+    /// Set the cluster.
+    pub fn with_cluster(mut self, cluster: ClusterSpec) -> Self {
+        self.cluster = cluster;
+        self
+    }
+
+    /// Set the TE-ratio axis.
+    pub fn with_te_ratios(mut self, ratios: Vec<f64>) -> Self {
+        assert!(!ratios.is_empty());
+        self.te_ratios = ratios;
+        self
+    }
+
+    /// Set the GP-scale axis.
+    pub fn with_gp_scales(mut self, scales: Vec<f64>) -> Self {
+        assert!(!scales.is_empty());
+        self.gp_scales = scales;
+        self
+    }
+
+    /// Set the workload seeds.
+    pub fn with_seeds(mut self, seeds: Vec<u64>) -> Self {
+        assert!(!seeds.is_empty());
+        self.seeds = seeds;
+        self
+    }
+
+    /// Set jobs per workload.
+    pub fn with_num_jobs(mut self, n: usize) -> Self {
+        self.num_jobs = n;
+        self
+    }
+
+    /// Set the target FIFO load of the workload calibration.
+    pub fn with_target_load(mut self, load: f64) -> Self {
+        self.target_load = load;
+        self
+    }
+
+    /// Pin the simulation engine (the speedup bench runs both).
+    pub fn with_engine(mut self, engine: SimEngine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Pin the worker-thread count (`1` = serial reference order).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Resolve the worker count: explicit `threads`, else `FITGPP_THREADS`,
+    /// else the machine's available parallelism.
+    pub fn threads_effective(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Some(n) = std::env::var("FITGPP_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            if n > 0 {
+                return n;
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Enumerate the grid in deterministic order: seeds (outer) ×
+    /// te_ratios × gp_scales × policies (inner). Cells sharing a workload
+    /// coordinate are contiguous.
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut out = Vec::new();
+        for &seed in &self.seeds {
+            for &te_ratio in &self.te_ratios {
+                for &gp_scale in &self.gp_scales {
+                    for &policy in &self.policies {
+                        out.push(CellSpec {
+                            index: out.len(),
+                            policy,
+                            te_ratio,
+                            gp_scale,
+                            seed,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Generate the workload for one `(seed, te_ratio, gp_scale)`
+    /// coordinate.
+    pub fn build_workload(&self, seed: u64, te_ratio: f64, gp_scale: f64) -> Workload {
+        SyntheticWorkload::paper_section_4_2(seed)
+            .with_cluster(self.cluster.clone())
+            .with_num_jobs(self.num_jobs)
+            .with_te_fraction(te_ratio)
+            .with_target_load(self.target_load)
+            .with_gp_scale(gp_scale)
+            .generate()
+    }
+
+    /// Run the whole grid. Workloads are generated once per coordinate and
+    /// shared; cells run on [`Self::threads_effective`] workers with
+    /// dynamic work stealing; results come back in grid order regardless of
+    /// completion order.
+    pub fn run(&self) -> SweepResult {
+        let t0 = Instant::now();
+        let threads = self.threads_effective();
+        let cells = self.cells();
+
+        // Unique workload coordinates, in first-use order (f64 axes are
+        // keyed by bit pattern — they come verbatim from the axis vectors).
+        let mut keys: Vec<(u64, u64, u64)> = Vec::new();
+        let mut key_index: HashMap<(u64, u64, u64), usize> = HashMap::new();
+        let mut cell_wl: Vec<usize> = Vec::with_capacity(cells.len());
+        for c in &cells {
+            let key = (c.seed, c.te_ratio.to_bits(), c.gp_scale.to_bits());
+            let idx = *key_index.entry(key).or_insert_with(|| {
+                keys.push(key);
+                keys.len() - 1
+            });
+            cell_wl.push(idx);
+        }
+
+        let workloads: Vec<Arc<Workload>> =
+            parallel_map(&keys, threads, |_, &(seed, te_bits, gp_bits)| {
+                Arc::new(self.build_workload(
+                    seed,
+                    f64::from_bits(te_bits),
+                    f64::from_bits(gp_bits),
+                ))
+            });
+
+        let jobs: Vec<(CellSpec, Arc<Workload>)> = cells
+            .iter()
+            .map(|c| (*c, Arc::clone(&workloads[cell_wl[c.index]])))
+            .collect();
+        let results = parallel_map(&jobs, threads, |_, (cell, wl)| self.run_cell(*cell, wl));
+
+        SweepResult {
+            cells: results,
+            wall: t0.elapsed(),
+            threads,
+            workloads_generated: keys.len(),
+        }
+    }
+
+    /// Run a single cell on a prepared workload.
+    pub fn run_cell(&self, cell: CellSpec, workload: &Workload) -> CellResult {
+        let mut cfg = SimConfig::new(self.cluster.clone(), cell.policy);
+        cfg.seed = cell.seed;
+        cfg.engine = self.engine;
+        cfg.progress_during_grace = self.progress_during_grace;
+        run_sim_cell(cell, cfg, workload)
+    }
+}
+
+/// Simulate one cell under an explicit [`SimConfig`] and package the
+/// results.
+fn run_sim_cell(cell: CellSpec, cfg: SimConfig, workload: &Workload) -> CellResult {
+    let c0 = Instant::now();
+    let res = Simulator::new(cfg).run(workload);
+    CellResult {
+        cell,
+        slowdown: res.slowdown_report(),
+        preemption: res.preemption_report(),
+        te_slowdowns: res.slowdowns(JobClass::Te),
+        be_slowdowns: res.slowdowns(JobClass::Be),
+        makespan: res.makespan,
+        unfinished: res.unfinished,
+        preemption_signals: res.sched_stats.preemption_signals,
+        fast_forwarded_ticks: res.sched_stats.fast_forwarded_ticks,
+        wall: c0.elapsed(),
+    }
+}
+
+/// The four §4.1 policies, FitGpp at its headline setting.
+pub fn paper_policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::Fifo,
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+    ]
+}
+
+/// Everything one cell produced (reports plus the raw per-job slowdowns,
+/// so callers can pool across seeds exactly like the paper does).
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// The grid point this belongs to.
+    pub cell: CellSpec,
+    /// Slowdown percentiles of this cell alone.
+    pub slowdown: SlowdownReport,
+    /// Preemption statistics of this cell alone.
+    pub preemption: PreemptionReport,
+    /// Raw TE slowdowns (completed jobs), for cross-seed pooling.
+    pub te_slowdowns: Vec<f64>,
+    /// Raw BE slowdowns (completed jobs), for cross-seed pooling.
+    pub be_slowdowns: Vec<f64>,
+    /// Simulated minutes until the cell's run stopped.
+    pub makespan: Minutes,
+    /// Jobs unfinished at cut-off (0 when draining).
+    pub unfinished: usize,
+    /// Preemption signals the scheduler issued.
+    pub preemption_signals: u64,
+    /// Simulated minutes the event-horizon engine advanced in bulk.
+    pub fast_forwarded_ticks: u64,
+    /// Wall-clock time of this cell's simulation (excludes workload
+    /// generation, which is shared).
+    pub wall: Duration,
+}
+
+/// All cells of a sweep, in grid order, plus run-level accounting.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    /// Per-cell results, ordered by [`CellSpec::index`].
+    pub cells: Vec<CellResult>,
+    /// End-to-end wall clock of the sweep (generation + simulation).
+    pub wall: Duration,
+    /// Worker threads used.
+    pub threads: usize,
+    /// Distinct workloads generated (cells ÷ policy-axis size).
+    pub workloads_generated: usize,
+}
+
+impl SweepResult {
+    /// Distinct policies, in grid order.
+    pub fn policies(&self) -> Vec<PolicyKind> {
+        let mut out: Vec<PolicyKind> = Vec::new();
+        for c in &self.cells {
+            if !out.contains(&c.cell.policy) {
+                out.push(c.cell.policy);
+            }
+        }
+        out
+    }
+
+    /// Pool raw slowdowns of `class` across every cell matching `keep`.
+    pub fn pooled_slowdowns_where<F: Fn(&CellSpec) -> bool>(
+        &self,
+        keep: F,
+        class: JobClass,
+    ) -> Vec<f64> {
+        let mut xs = Vec::new();
+        for c in &self.cells {
+            if keep(&c.cell) {
+                match class {
+                    JobClass::Te => xs.extend_from_slice(&c.te_slowdowns),
+                    JobClass::Be => xs.extend_from_slice(&c.be_slowdowns),
+                }
+            }
+        }
+        xs
+    }
+
+    /// Pool raw slowdowns of `class` across all seeds of `policy` (the
+    /// paper's "statistics over eight workloads").
+    pub fn pooled_slowdowns(&self, policy: PolicyKind, class: JobClass) -> Vec<f64> {
+        self.pooled_slowdowns_where(|c| c.policy == policy, class)
+    }
+
+    /// Percentiles of the cross-seed pool for one policy and class.
+    pub fn pooled_percentiles(&self, policy: PolicyKind, class: JobClass) -> Percentiles {
+        Percentiles::of(&self.pooled_slowdowns(policy, class))
+    }
+
+    /// Pooled per-policy slowdown reports, in grid order.
+    pub fn slowdown_rows(&self) -> Vec<(String, SlowdownReport)> {
+        self.policies()
+            .into_iter()
+            .map(|p| {
+                (
+                    p.name(),
+                    SlowdownReport {
+                        te: self.pooled_percentiles(p, JobClass::Te),
+                        be: self.pooled_percentiles(p, JobClass::Be),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Render the paper's Table-1 layout, pooling across seeds per policy.
+    pub fn table1(&self, title: &str) -> Table {
+        let rows = self.slowdown_rows();
+        let named: Vec<(&str, SlowdownReport)> =
+            rows.iter().map(|(n, r)| (n.as_str(), *r)).collect();
+        slowdown_table(title, &named)
+    }
+
+    /// Sum of per-cell simulation walls — the serial-equivalent time, i.e.
+    /// what the grid would cost on one thread (excluding generation).
+    pub fn total_cell_wall(&self) -> Duration {
+        self.cells.iter().map(|c| c.wall).sum()
+    }
+
+    /// [`Self::to_csv`] with the wall-clock column stripped — the
+    /// comparison key for "same grid, different engine/threads" checks
+    /// (wall time is the only legitimately nondeterministic column).
+    pub fn to_csv_without_wall(&self) -> String {
+        self.to_csv()
+            .lines()
+            .map(|l| l.rsplit_once(',').map(|(head, _)| head).unwrap_or("").to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// One CSV row per cell (plotting scripts; stable column set).
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(
+            "",
+            &[
+                "policy", "te_ratio", "gp_scale", "seed", "te_p50", "te_p95", "te_p99",
+                "be_p50", "be_p95", "be_p99", "preempted_frac", "signals", "makespan",
+                "unfinished", "wall_ms",
+            ],
+        );
+        for c in &self.cells {
+            t.row(vec![
+                c.cell.policy.name(),
+                format!("{}", c.cell.te_ratio),
+                format!("{}", c.cell.gp_scale),
+                c.cell.seed.to_string(),
+                format!("{:.6}", c.slowdown.te.p50),
+                format!("{:.6}", c.slowdown.te.p95),
+                format!("{:.6}", c.slowdown.te.p99),
+                format!("{:.6}", c.slowdown.be.p50),
+                format!("{:.6}", c.slowdown.be.p95),
+                format!("{:.6}", c.slowdown.be.p99),
+                format!("{:.8}", c.preemption.fraction_preempted),
+                c.preemption_signals.to_string(),
+                c.makespan.to_string(),
+                c.unfinished.to_string(),
+                format!("{:.3}", c.wall.as_secs_f64() * 1e3),
+            ]);
+        }
+        t.to_csv()
+    }
+
+    /// Machine-readable dump of the whole sweep.
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("policy", Json::str(&c.cell.policy.name())),
+                    ("te_ratio", Json::num(c.cell.te_ratio)),
+                    ("gp_scale", Json::num(c.cell.gp_scale)),
+                    ("seed", Json::num(c.cell.seed as f64)),
+                    (
+                        "slowdown",
+                        Json::obj(vec![
+                            ("te", c.slowdown.te.to_json()),
+                            ("be", c.slowdown.be.to_json()),
+                        ]),
+                    ),
+                    (
+                        "preempted_frac",
+                        Json::num(c.preemption.fraction_preempted),
+                    ),
+                    ("signals", Json::num(c.preemption_signals as f64)),
+                    ("makespan", Json::num(c.makespan as f64)),
+                    ("unfinished", Json::num(c.unfinished as f64)),
+                    ("wall_ms", Json::num(c.wall.as_secs_f64() * 1e3)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("threads", Json::num(self.threads as f64)),
+            ("wall_sec", Json::num(self.wall.as_secs_f64())),
+            (
+                "workloads_generated",
+                Json::num(self.workloads_generated as f64),
+            ),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+}
+
+/// Run a fixed workload under several policies in parallel — the `compare`
+/// fast path, usable with trace-file workloads the grid generator cannot
+/// express. `template` carries everything but the policy (cluster,
+/// placement, progress-during-grace, seed, engine), so a config-file
+/// experiment keeps its exact semantics. Results are in `policies` order;
+/// `threads == 0` resolves like [`SweepSpec::threads_effective`].
+pub fn compare_on(
+    workload: &Workload,
+    template: &SimConfig,
+    policies: &[PolicyKind],
+    threads: usize,
+) -> Vec<CellResult> {
+    let resolver = SweepSpec::new(template.cluster.clone(), policies.to_vec())
+        .with_threads(threads);
+    let te_ratio = workload.te_fraction();
+    let jobs: Vec<(usize, PolicyKind)> =
+        policies.iter().copied().enumerate().collect();
+    parallel_map(&jobs, resolver.threads_effective(), |_, &(index, policy)| {
+        let mut cfg = template.clone();
+        cfg.policy = policy;
+        run_sim_cell(
+            CellSpec { index, policy, te_ratio, gp_scale: 1.0, seed: template.seed },
+            cfg,
+            workload,
+        )
+    })
+}
+
+/// Run `f` over `items` on `threads` workers with dynamic self-scheduling:
+/// idle workers steal the next unclaimed index from a shared atomic
+/// cursor, so long items never gate short ones behind a static partition.
+/// Results return in input order regardless of completion order; with
+/// `threads == 1` this degenerates to a plain serial map (no thread spawn).
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|o| o.expect("every cell delivered exactly once"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec::new(
+            ClusterSpec::tiny(2),
+            vec![PolicyKind::Fifo, PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }],
+        )
+        .with_num_jobs(96)
+        .with_seeds(vec![5, 6])
+    }
+
+    #[test]
+    fn grid_enumeration_is_the_cross_product() {
+        let spec = tiny_spec()
+            .with_te_ratios(vec![0.1, 0.3])
+            .with_gp_scales(vec![1.0, 4.0]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // Policies innermost: consecutive cells share the workload coord.
+        assert_eq!(cells[0].seed, cells[1].seed);
+        assert_eq!(cells[0].te_ratio, cells[1].te_ratio);
+        assert_ne!(cells[0].policy, cells[1].policy);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_and_covers_all() {
+        let items: Vec<u64> = (0..57).collect();
+        let doubled = parallel_map(&items, 4, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * 2
+        });
+        assert_eq!(doubled, (0..57).map(|x| x * 2).collect::<Vec<_>>());
+        assert_eq!(parallel_map(&[] as &[u64], 4, |_, &x| x), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn sweep_is_deterministic_and_thread_count_invariant() {
+        let serial = tiny_spec().with_threads(1).run();
+        let parallel = tiny_spec().with_threads(4).run();
+        assert_eq!(serial.cells.len(), parallel.cells.len());
+        // Everything except wall clock must be identical.
+        assert_eq!(
+            serial.to_csv_without_wall(),
+            parallel.to_csv_without_wall(),
+            "aggregation must be order-independent"
+        );
+        assert_eq!(serial.workloads_generated, 2, "one workload per seed, shared across policies");
+        assert_eq!(parallel.threads, 4);
+    }
+
+    #[test]
+    fn cell_matches_direct_simulation() {
+        let spec = tiny_spec();
+        let res = spec.with_threads(2).run();
+        let c = &res.cells[0];
+        let wl = tiny_spec().build_workload(c.cell.seed, c.cell.te_ratio, c.cell.gp_scale);
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(2), c.cell.policy);
+        cfg.seed = c.cell.seed;
+        let direct = Simulator::new(cfg).run(&wl);
+        assert_eq!(c.makespan, direct.makespan);
+        assert_eq!(c.slowdown, direct.slowdown_report());
+        assert_eq!(c.unfinished, 0);
+    }
+
+    #[test]
+    fn pooling_concatenates_across_seeds() {
+        let res = tiny_spec().with_threads(2).run();
+        let pooled = res.pooled_slowdowns(PolicyKind::Fifo, JobClass::Be);
+        let per_cell: usize = res
+            .cells
+            .iter()
+            .filter(|c| c.cell.policy == PolicyKind::Fifo)
+            .map(|c| c.be_slowdowns.len())
+            .sum();
+        assert_eq!(pooled.len(), per_cell);
+        assert!(pooled.len() > 0);
+        let rows = res.slowdown_rows();
+        assert_eq!(rows.len(), 2);
+        let t = res.table1("t");
+        assert!(t.to_text().contains("FIFO"));
+    }
+
+    #[test]
+    fn compare_on_runs_each_policy_once() {
+        let wl = tiny_spec().build_workload(5, 0.3, 1.0);
+        let mut template = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Fifo);
+        template.seed = 1;
+        let cells = compare_on(&wl, &template, &paper_policies(), 2);
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].cell.policy, PolicyKind::Fifo);
+        assert!(cells.iter().all(|c| c.unfinished == 0));
+        assert!(cells.iter().all(|c| c.cell.seed == 1));
+    }
+}

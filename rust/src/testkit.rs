@@ -15,7 +15,9 @@ use crate::stats::rng::Pcg64;
 /// Configuration of a property run.
 #[derive(Debug, Clone, Copy)]
 pub struct PropConfig {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Base seed (each case derives its own).
     pub seed: u64,
 }
 

@@ -10,9 +10,13 @@ use std::fmt::Write as _;
 /// Declarative option spec for help text + validation.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Flag name (without the leading `--`).
     pub name: &'static str,
+    /// Help text shown by `-h`.
     pub help: &'static str,
+    /// Default shown in help (None = no default).
     pub default: Option<&'static str>,
+    /// True for boolean flags (no value token).
     pub is_flag: bool,
 }
 
@@ -21,31 +25,53 @@ pub struct OptSpec {
 pub struct Args {
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Non-flag tokens, in order.
     pub positional: Vec<String>,
     program: String,
 }
 
-#[derive(Debug, thiserror::Error)]
+/// Parse failures (rendered with the same messages thiserror would have
+/// produced; the derive macro is not available offline).
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
+    /// An option that was never declared on the [`Cli`].
     Unknown(String),
-    #[error("option --{0} requires a value")]
+    /// A value-taking option given as the last token with no value.
     MissingValue(String),
-    #[error("invalid value for --{0}: {1:?} ({2})")]
+    /// A typed accessor could not parse the raw value: `(name, raw, cause)`.
     BadValue(String, String, String),
-    #[error("help requested")]
+    /// `-h`/`--help` was passed.
     Help,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            CliError::BadValue(name, raw, cause) => {
+                write!(f, "invalid value for --{name}: {raw:?} ({cause})")
+            }
+            CliError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// A command-line interface: a name, a description, and its options.
 #[derive(Debug, Clone)]
 pub struct Cli {
+    /// Program name shown in help.
     pub name: &'static str,
+    /// One-line description shown in help.
     pub about: &'static str,
+    /// Declared options.
     pub opts: Vec<OptSpec>,
 }
 
 impl Cli {
+    /// Start a CLI description.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Cli { name, about, opts: Vec::new() }
     }

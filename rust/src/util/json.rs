@@ -14,20 +14,36 @@ use std::fmt;
 /// deterministic — results files diff cleanly between runs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always an f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+/// Parse failure with the byte offset where it occurred.
+#[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset into the input at which parsing failed.
     pub pos: usize,
+    /// Human-readable description of the failure.
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---- constructors ------------------------------------------------

@@ -5,12 +5,16 @@
 /// aligned plain text or GitHub-flavoured markdown.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Title line (empty = omitted).
     pub title: String,
+    /// Column names.
     pub header: Vec<String>,
+    /// Data rows; each row's width must match the header.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Start a table with a title and column names.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -19,6 +23,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);
@@ -78,13 +83,25 @@ impl Table {
         out
     }
 
-    /// CSV rendering (for plotting scripts).
+    /// CSV rendering (for plotting scripts). Fields containing commas,
+    /// quotes, or newlines are quoted per RFC 4180 (policy names like
+    /// `FitGpp(s=4,P=1)` embed commas).
     pub fn to_csv(&self) -> String {
+        fn field(s: &str) -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        }
+        let render = |cells: &[String]| -> String {
+            cells.iter().map(|c| field(c)).collect::<Vec<_>>().join(",")
+        };
         let mut out = String::new();
-        out.push_str(&self.header.join(","));
+        out.push_str(&render(&self.header));
         out.push('\n');
         for row in &self.rows {
-            out.push_str(&row.join(","));
+            out.push_str(&render(row));
             out.push('\n');
         }
         out
@@ -138,6 +155,17 @@ mod tests {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn csv_quotes_fields_with_commas() {
+        let mut t = Table::new("x", &["policy", "v"]);
+        t.row(vec!["FitGpp(s=4,P=1)".into(), "1".into()]);
+        t.row(vec!["say \"hi\"".into(), "2".into()]);
+        assert_eq!(
+            t.to_csv(),
+            "policy,v\n\"FitGpp(s=4,P=1)\",1\n\"say \"\"hi\"\"\",2\n"
+        );
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::resources::ResourceVec;
 /// indexes its job table by id).
 #[derive(Debug, Clone)]
 pub struct Workload {
+    /// Job specs sorted by submission time with dense ids.
     pub jobs: Vec<JobSpec>,
 }
 

@@ -1,0 +1,188 @@
+//! Equivalence property: the event-horizon engine must produce
+//! byte-identical results to the per-minute reference loop — same
+//! `SlowdownReport`, same `PreemptionReport`, same per-job records, same
+//! makespan — on §4.2 synthetic workloads across seeds, policies, and the
+//! progress-during-grace ablation, plus randomized workloads from the
+//! in-tree property kit.
+
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::prop_assert;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
+use fitgpp::testkit::{check, gen, PropConfig};
+use fitgpp::workload::synthetic::SyntheticWorkload;
+use fitgpp::workload::Workload;
+
+fn paper_policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::Fifo,
+        PolicyKind::FastLane,
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        PolicyKind::FitGpp { s: 2.0, p_max: None },
+    ]
+}
+
+fn run(
+    engine: SimEngine,
+    wl: &Workload,
+    cluster: &ClusterSpec,
+    policy: PolicyKind,
+    seed: u64,
+    progress: bool,
+) -> SimResult {
+    let mut cfg = SimConfig::new(cluster.clone(), policy);
+    cfg.engine = engine;
+    cfg.seed = seed;
+    cfg.progress_during_grace = progress;
+    cfg.paranoid = true;
+    Simulator::new(cfg).run(wl)
+}
+
+/// Byte-identical comparison: debug strings (covers every float bit via
+/// `{:?}` and dodges NaN != NaN) plus structural record equality.
+fn assert_identical(eh: &SimResult, pm: &SimResult, what: &str) {
+    assert_eq!(eh.makespan, pm.makespan, "{what}: makespan");
+    assert_eq!(
+        format!("{:?}", eh.slowdown_report()),
+        format!("{:?}", pm.slowdown_report()),
+        "{what}: SlowdownReport"
+    );
+    assert_eq!(
+        format!("{:?}", eh.preemption_report()),
+        format!("{:?}", pm.preemption_report()),
+        "{what}: PreemptionReport"
+    );
+    assert_eq!(
+        format!("{:?}", eh.intervals_report()),
+        format!("{:?}", pm.intervals_report()),
+        "{what}: IntervalsReport"
+    );
+    assert_eq!(eh.unfinished, pm.unfinished, "{what}: unfinished");
+    assert_eq!(eh.records.len(), pm.records.len());
+    for (a, b) in eh.records.iter().zip(&pm.records) {
+        assert_eq!(a, b, "{what}: record {:?}", a.id);
+        assert_eq!(
+            a.slowdown.to_bits(),
+            b.slowdown.to_bits(),
+            "{what}: slowdown bits of {:?}",
+            a.id
+        );
+    }
+    assert_eq!(
+        eh.sched_stats.ticks, pm.sched_stats.ticks,
+        "{what}: simulated minutes"
+    );
+    assert_eq!(
+        eh.sched_stats.preemption_signals, pm.sched_stats.preemption_signals,
+        "{what}: signals"
+    );
+}
+
+#[test]
+fn event_horizon_matches_per_minute_on_section_4_2_workloads() {
+    // The satellite requirement: ≥ 3 seeds on §4.2 synthetic workloads,
+    // byte-identical SlowdownReport / PreemptionReport.
+    let cluster = ClusterSpec::tiny(3);
+    let mut fast_forwarded_somewhere = false;
+    for seed in [11u64, 29, 47] {
+        let wl = SyntheticWorkload::paper_section_4_2(seed)
+            .with_cluster(cluster.clone())
+            .with_num_jobs(400)
+            .generate();
+        for policy in paper_policies() {
+            let eh = run(SimEngine::EventHorizon, &wl, &cluster, policy, seed, false);
+            let pm = run(SimEngine::PerMinute, &wl, &cluster, policy, seed, false);
+            assert_identical(&eh, &pm, &format!("seed {seed}, {policy:?}"));
+            fast_forwarded_somewhere |= eh.sched_stats.fast_forwards > 0;
+            assert_eq!(pm.sched_stats.fast_forwards, 0, "oracle never bulk-burns");
+        }
+    }
+    assert!(
+        fast_forwarded_somewhere,
+        "the event-horizon engine never skipped a span — it is not exercising its fast path"
+    );
+}
+
+#[test]
+fn equivalence_holds_under_progress_during_grace() {
+    let cluster = ClusterSpec::tiny(2);
+    for seed in [3u64, 13, 31] {
+        let wl = SyntheticWorkload::paper_section_4_2(seed)
+            .with_cluster(cluster.clone())
+            .with_num_jobs(250)
+            .with_gp_scale(4.0) // long drains: grace-expiry horizons matter
+            .generate();
+        for policy in [
+            PolicyKind::Lrtp,
+            PolicyKind::Rand,
+            PolicyKind::FitGpp { s: 4.0, p_max: Some(2) },
+        ] {
+            let eh = run(SimEngine::EventHorizon, &wl, &cluster, policy, seed, true);
+            let pm = run(SimEngine::PerMinute, &wl, &cluster, policy, seed, true);
+            assert_identical(&eh, &pm, &format!("pdg seed {seed}, {policy:?}"));
+        }
+    }
+}
+
+#[test]
+fn equivalence_holds_without_draining_the_backlog() {
+    // Cut-off runs exercise the tail/max-tick clamps of the fast-forward.
+    let cluster = ClusterSpec::tiny(2);
+    let wl = SyntheticWorkload::paper_section_4_2(17)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(200)
+        .generate();
+    for policy in [PolicyKind::Fifo, PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }] {
+        for (drain, tail, max) in [(false, 25, u64::MAX / 2), (true, 0, 500)] {
+            let mk = |engine| {
+                let mut cfg = SimConfig::new(cluster.clone(), policy);
+                cfg.engine = engine;
+                cfg.seed = 17;
+                cfg.drain = drain;
+                cfg.tail_ticks = tail;
+                cfg.max_ticks = max;
+                cfg.paranoid = true;
+                Simulator::new(cfg).run(&wl)
+            };
+            let eh = mk(SimEngine::EventHorizon);
+            let pm = mk(SimEngine::PerMinute);
+            assert_identical(&eh, &pm, &format!("{policy:?} drain={drain}"));
+        }
+    }
+}
+
+#[test]
+fn prop_engines_agree_on_random_workloads() {
+    // Randomized breadth: arbitrary demands, grace periods, and arrival
+    // patterns from the property kit, paranoid invariants on.
+    check("engine-equivalence", PropConfig::default(), |rng| {
+        let policy = match rng.below(6) {
+            0 => PolicyKind::Fifo,
+            1 => PolicyKind::FastLane,
+            2 => PolicyKind::Lrtp,
+            3 => PolicyKind::Rand,
+            4 => PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+            _ => PolicyKind::FitGpp { s: 8.0, p_max: None },
+        };
+        let cluster = ClusterSpec::tiny(1 + rng.below(3) as usize);
+        let wl = gen::workload(rng, 20 + rng.below(50) as usize, 30 + rng.below(80));
+        let seed = rng.next_u64();
+        let progress = rng.chance(0.3);
+        let eh = run(SimEngine::EventHorizon, &wl, &cluster, policy, seed, progress);
+        let pm = run(SimEngine::PerMinute, &wl, &cluster, policy, seed, progress);
+        prop_assert!(eh.makespan == pm.makespan, "{policy:?}: makespan {} vs {}", eh.makespan, pm.makespan);
+        prop_assert!(
+            eh.records == pm.records,
+            "{policy:?}: records diverge (seed {seed:#x})"
+        );
+        prop_assert!(
+            eh.sched_stats.ticks == pm.sched_stats.ticks,
+            "{policy:?}: ticks {} vs {}",
+            eh.sched_stats.ticks,
+            pm.sched_stats.ticks
+        );
+        Ok(())
+    });
+}

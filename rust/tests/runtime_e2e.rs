@@ -2,10 +2,15 @@
 //! artifacts. Skips (prints a note) when `make artifacts` has not run.
 
 use fitgpp::runtime::{self, Checkpoint, Engine, Manifest, Trainer};
+use fitgpp::xla;
 
 fn manifest_or_skip() -> Option<(Engine, Manifest)> {
     if !runtime::artifacts_available() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    if !runtime::backend_available() {
+        eprintln!("skipping: PJRT backend stubbed in this build (see rust/src/xla.rs)");
         return None;
     }
     let engine = Engine::cpu().expect("PJRT CPU client");
