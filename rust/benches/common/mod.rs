@@ -8,6 +8,8 @@
 //! FITGPP_JOBS=65536 FITGPP_SEEDS=8 cargo bench --bench table1_synthetic
 //! ```
 
+#![allow(dead_code)] // shared by all benches; each uses a subset
+
 use fitgpp::benchkit::env_usize;
 use fitgpp::cluster::ClusterSpec;
 use fitgpp::sched::policy::PolicyKind;
@@ -61,6 +63,18 @@ pub fn report_sweep(res: &fitgpp::sweep::SweepResult) {
         res.threads,
         res.total_cell_wall().as_secs_f64()
     );
+}
+
+/// Write a machine-readable bench result as `BENCH_<name>.json` in the
+/// repo root (cargo's working directory). Committed alongside the code, it
+/// tracks the perf trajectory across PRs — each PR re-runs the bench and
+/// refreshes the file.
+pub fn save_results_json(name: &str, json: &fitgpp::util::json::Json) {
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }
 
 /// Write a machine-readable copy of a bench's output next to the target

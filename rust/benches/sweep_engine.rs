@@ -24,6 +24,7 @@ use fitgpp::benchkit::env_usize;
 use fitgpp::cluster::ClusterSpec;
 use fitgpp::sim::SimEngine;
 use fitgpp::sweep::{SweepResult, SweepSpec};
+use fitgpp::util::json::Json;
 use fitgpp::util::table::Table;
 
 fn grid(jobs: usize, seeds: usize, nodes: usize) -> SweepSpec {
@@ -46,7 +47,10 @@ fn main() {
         spec.threads_effective()
     );
 
-    // 1. Baseline: the seed's substrate — per-minute loop, one thread.
+    // 1. Baseline: per-minute drive mode, one thread. (This mode also
+    //    benefits from the EventClock scan-skip, so cross-PR comparisons
+    //    should track the absolute sim_minutes_per_sec in the JSON rather
+    //    than the relative speedups, whose baseline improves over time.)
     let pm = spec
         .clone()
         .with_engine(SimEngine::PerMinute)
@@ -84,7 +88,7 @@ fn main() {
         &["configuration", "wall (s)", "sim-only (s)", "speedup vs baseline"],
     );
     t.row(vec![
-        "per-minute, serial (seed substrate)".into(),
+        "per-minute, serial (reference drive mode)".into(),
         format!("{:.2}", pm.wall.as_secs_f64()),
         format!("{:.2}", pm_sim),
         "1.00x".into(),
@@ -118,4 +122,54 @@ fn main() {
         pm.wall.as_secs_f64() / eh_par.wall.as_secs_f64()
     ));
     common::save_results("sweep_engine", &out);
+
+    // Machine-readable perf trajectory, committed across PRs.
+    let config_row = |label: &str, res: &SweepResult, sim_only: Option<f64>| {
+        Json::obj(vec![
+            ("label", Json::str(label)),
+            ("wall_sec", Json::num(res.wall.as_secs_f64())),
+            ("sim_only_sec", sim_only.map(Json::num).unwrap_or(Json::Null)),
+            ("threads", Json::num(res.threads as f64)),
+            (
+                "sim_minutes_per_sec",
+                Json::num(minutes / res.wall.as_secs_f64().max(1e-12)),
+            ),
+            (
+                "speedup_vs_baseline",
+                Json::num(pm.wall.as_secs_f64() / res.wall.as_secs_f64().max(1e-12)),
+            ),
+        ])
+    };
+    common::save_results_json(
+        "sweep_engine",
+        &Json::obj(vec![
+            ("bench", Json::str("sweep_engine")),
+            (
+                "grid",
+                Json::obj(vec![
+                    ("jobs", Json::num(jobs as f64)),
+                    ("seeds", Json::num(seeds as f64)),
+                    ("nodes", Json::num(nodes as f64)),
+                    ("cells", Json::num(pm.cells.len() as f64)),
+                    ("simulated_minutes", Json::num(minutes)),
+                ]),
+            ),
+            (
+                "configurations",
+                Json::Arr(vec![
+                    config_row("per-minute serial (reference drive mode)", &pm, Some(pm_sim)),
+                    config_row("event-horizon serial", &eh_serial, Some(eh_sim)),
+                    config_row("event-horizon parallel", &eh_par, None),
+                ]),
+            ),
+            (
+                "fast_forwarded_fraction",
+                Json::num(ff as f64 / minutes.max(1.0)),
+            ),
+            (
+                "engine_only_speedup_sim_time",
+                Json::num(pm_sim / eh_sim.max(1e-12)),
+            ),
+        ]),
+    );
 }

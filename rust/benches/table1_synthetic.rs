@@ -21,6 +21,7 @@ mod common;
 use fitgpp::job::JobClass;
 use fitgpp::sched::policy::PolicyKind;
 use fitgpp::sweep::SweepSpec;
+use fitgpp::util::json::Json;
 
 fn main() {
     let jobs = common::jobs_default();
@@ -54,4 +55,30 @@ fn main() {
         res.total_cell_wall().as_secs_f64()
     ));
     common::save_results("table1_synthetic", &out);
+
+    // Machine-readable perf + headline numbers, committed across PRs.
+    let minutes: u64 = res.cells.iter().map(|c| c.makespan).sum();
+    common::save_results_json(
+        "table1_synthetic",
+        &Json::obj(vec![
+            ("bench", Json::str("table1_synthetic")),
+            ("jobs", Json::num(jobs as f64)),
+            ("seeds", Json::num(seeds as f64)),
+            ("cells", Json::num(res.cells.len() as f64)),
+            ("threads", Json::num(res.threads as f64)),
+            ("wall_sec", Json::num(res.wall.as_secs_f64())),
+            (
+                "sim_minutes_per_sec",
+                Json::num(minutes as f64 / res.wall.as_secs_f64().max(1e-12)),
+            ),
+            (
+                "te_p95_reduction_vs_fifo",
+                Json::num(1.0 - fitgpp_te.p95 / fifo_te.p95),
+            ),
+            (
+                "be_p50_change_vs_fifo",
+                Json::num(fitgpp_be.p50 / fifo_be.p50 - 1.0),
+            ),
+        ]),
+    );
 }

@@ -7,32 +7,34 @@
 mod common;
 
 use fitgpp::metrics::{preempted_table, PreemptionReport};
-use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sweep::extended_policies;
 
 fn main() {
     let jobs = common::jobs_default();
     let seeds = common::seeds_default();
     println!("table3_preempted: {jobs} jobs x {seeds} seeds (P = 1)");
 
-    let policies = [
-        ("LRTP", PolicyKind::Lrtp),
-        ("RAND", PolicyKind::Rand),
-        ("FitGpp (s=4.0)", PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
-    ];
+    // Every preempting policy in the suite: the paper's LRTP/RAND/FitGpp
+    // row plus the SRTF and preempt-youngest trait ablations.
+    let policies: Vec<_> = extended_policies()
+        .into_iter()
+        .filter(|p| p.preempts())
+        .map(|p| (p.name(), p))
+        .collect();
     let mut rows = Vec::new();
     let mut extra = String::new();
-    for (name, policy) in policies {
+    for (name, policy) in &policies {
         let mut frac = 0.0;
         let mut signals = 0u64;
         for s in 0..seeds {
             let wl = common::paper_workload(100 + s as u64, jobs);
-            let res = common::run_policy(&wl, policy, s as u64);
+            let res = common::run_policy(&wl, *policy, s as u64);
             frac += res.preempted_fraction() / seeds as f64;
             signals += res.sched_stats.preemption_signals;
         }
-        extra.push_str(&format!("{name}: {} preemption signals\n", signals));
+        extra.push_str(&format!("{name}: {signals} preemption signals\n"));
         rows.push((
-            name,
+            name.as_str(),
             PreemptionReport { fraction_preempted: frac, hist: [0.0; 3] },
         ));
     }

@@ -1,13 +1,40 @@
-//! Cluster and node state: capacities, allocations, and placement search.
+//! Cluster and node state: capacities, allocations, reservation holds, and
+//! the incremental free-capacity index behind placement search.
 //!
 //! The paper's evaluation cluster is 84 homogeneous nodes of 32 CPUs /
 //! 256 GB RAM / 8 GPUs. We support heterogeneous nodes too (capacities are
 //! per-node), since nothing in FitGpp requires homogeneity — Eq. 1
 //! normalizes by the *hosting node's* capacity.
+//!
+//! ## The free-capacity index
+//!
+//! Admission asks two questions thousands of times per simulated run:
+//! *does this demand fit anywhere?* and *which node hosts it under the
+//! placement rule?* The seed implementation answered both with an O(nodes)
+//! scan per query. The index answers them incrementally — it is updated on
+//! every [`bind`](Cluster::bind) / [`unbind`](Cluster::unbind) /
+//! [`reserve`](Cluster::reserve) / [`unreserve`](Cluster::unreserve)
+//! (O(log nodes) each, far rarer than queries) and offers:
+//!
+//! * [`Cluster::fits_nowhere`] — per-axis maxima of *effective* free
+//!   (free − hold) across nodes. If the demand exceeds the max on any axis
+//!   no node can fit it: an O(1) reject, which is the common case on a
+//!   saturated cluster (§4.2 runs at FIFO load 2.0).
+//! * [`Cluster::fit_candidates`] — nodes ordered by the Eq. 1 `Size` of
+//!   their effective free space, range-pruned from below: componentwise
+//!   fit implies `Size(demand) ≤ Size(effective free)` (Size is monotone),
+//!   so nodes too full to matter are skipped without being visited.
+//!
+//! Both are *sound over-approximations*: they never hide a fitting node,
+//! so placement decisions are identical to the full scan. Because both
+//! simulator drive modes share this index, engine equivalence alone cannot
+//! catch an unsound prune — the randomized property
+//! `prop_capacity_index_never_hides_a_fitting_node`
+//! (`rust/tests/properties.rs`) checks it against a linear scan directly.
 
 use crate::job::JobId;
 use crate::resources::ResourceVec;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::fmt;
 
 /// Dense node identifier (index into `Cluster::nodes`).
@@ -19,6 +46,32 @@ impl fmt::Display for NodeId {
         write!(f, "node-{}", self.0)
     }
 }
+
+/// Cluster-state inconsistencies surfaced as typed errors instead of
+/// panics, so a corrupt input (e.g. a malformed trace driving the
+/// scheduler into an impossible release) degrades one operation rather
+/// than aborting a whole sweep.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterError {
+    /// The job is not bound anywhere.
+    NotBound(JobId),
+    /// The location index says the job is on a node whose allocation list
+    /// disagrees (index corruption).
+    NotOnNode(JobId, NodeId),
+}
+
+impl fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClusterError::NotBound(job) => write!(f, "{job} is not bound to any node"),
+            ClusterError::NotOnNode(job, node) => {
+                write!(f, "{job} indexed on {node} but absent from its allocations")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
 
 /// Static description of a cluster (used by configs and generators).
 #[derive(Debug, Clone, PartialEq)]
@@ -59,6 +112,9 @@ pub struct Node {
     pub capacity: ResourceVec,
     /// Unallocated resources (the paper's `N` in Eq. 2).
     pub free: ResourceVec,
+    /// Reservation holds pinned here by the scheduler (space drained for an
+    /// incoming TE job, invisible to other placements).
+    hold: ResourceVec,
     /// Jobs currently occupying resources here (Running or Draining), with
     /// their demands. Insertion order is preserved for determinism.
     allocations: Vec<(JobId, ResourceVec)>,
@@ -66,7 +122,7 @@ pub struct Node {
 
 impl Node {
     fn new(id: NodeId, capacity: ResourceVec) -> Self {
-        Node { id, capacity, free: capacity, allocations: Vec::new() }
+        Node { id, capacity, free: capacity, hold: ResourceVec::ZERO, allocations: Vec::new() }
     }
 
     /// Jobs hosted on this node, in allocation order.
@@ -74,6 +130,7 @@ impl Node {
         self.allocations.iter().map(|(id, _)| *id)
     }
 
+    /// Number of jobs hosted here.
     pub fn num_jobs(&self) -> usize {
         self.allocations.len()
     }
@@ -83,18 +140,29 @@ impl Node {
         self.capacity - self.free
     }
 
+    /// Sum of reservation holds pinned to this node.
+    pub fn hold(&self) -> ResourceVec {
+        self.hold
+    }
+
+    /// Free space actually available to new placements: free minus holds,
+    /// clamped at zero (a hold may exceed free while its victims drain).
+    pub fn effective_free(&self) -> ResourceVec {
+        self.free.saturating_sub(&self.hold)
+    }
+
     fn allocate(&mut self, job: JobId, demand: ResourceVec) {
         debug_assert!(demand.fits_in(&self.free), "oversubscription on {}", self.id);
         self.free -= demand;
         self.allocations.push((job, demand));
     }
 
-    fn release(&mut self, job: JobId) -> ResourceVec {
+    fn release(&mut self, job: JobId) -> Result<ResourceVec, ClusterError> {
         let idx = self
             .allocations
             .iter()
             .position(|(id, _)| *id == job)
-            .unwrap_or_else(|| panic!("{} not on {}", job, self.id));
+            .ok_or_else(|| ClusterError::NotOnNode(job, self.id))?;
         let (_, demand) = self.allocations.remove(idx);
         self.free += demand;
         // Snap tiny FP residue so long simulations never drift.
@@ -104,7 +172,7 @@ impl Node {
         {
             self.free = self.capacity;
         }
-        demand
+        Ok(demand)
     }
 }
 
@@ -122,30 +190,118 @@ pub enum Placement {
     WorstFit,
 }
 
-/// Live cluster state: nodes plus a job → node index for O(1) lookup.
-#[derive(Debug, Clone)]
-pub struct Cluster {
-    pub nodes: Vec<Node>,
-    location: HashMap<JobId, NodeId>,
+/// Map a non-negative `f64` to order-preserving bits (clamping the tiny
+/// negative residue FP arithmetic can leave) for use as a BTreeSet key.
+fn key_bits(x: f64) -> u64 {
+    x.max(0.0).to_bits()
 }
 
-impl Cluster {
-    pub fn new(spec: &ClusterSpec) -> Self {
-        Cluster {
-            nodes: spec
-                .nodes
-                .iter()
-                .enumerate()
-                .map(|(i, cap)| Node::new(NodeId(i as u32), *cap))
-                .collect(),
-            location: HashMap::new(),
+/// Slack subtracted from the Size lower bound in [`Cluster::fit_candidates`]
+/// so the `fits_in` EPS tolerance can never push a fitting node below the
+/// range cut.
+const SIZE_SLACK: f64 = 1e-6;
+
+/// The incremental free-capacity index: every node keyed by the Eq. 1
+/// `Size` of its effective free space, plus per-axis orderings for the
+/// componentwise-maximum reject. `keys` remembers exactly what was inserted
+/// per node so updates remove the right entries bit-for-bit.
+#[derive(Debug, Clone, Default)]
+struct FreeIndex {
+    by_size: BTreeSet<(u64, u32)>,
+    by_axis: [BTreeSet<(u64, u32)>; 3],
+    keys: Vec<[u64; 4]>, // [size, cpu, ram, gpu] bits per node
+}
+
+impl FreeIndex {
+    fn new(nodes: &[Node]) -> Self {
+        let mut ix = FreeIndex { keys: vec![[0; 4]; nodes.len()], ..Default::default() };
+        for n in nodes {
+            ix.insert(n);
+        }
+        ix
+    }
+
+    fn node_keys(node: &Node) -> [u64; 4] {
+        let eff = node.effective_free();
+        [
+            key_bits(eff.size(&node.capacity)),
+            key_bits(eff.cpu),
+            key_bits(eff.ram_gb),
+            key_bits(eff.gpu),
+        ]
+    }
+
+    fn insert(&mut self, node: &Node) {
+        let k = Self::node_keys(node);
+        let id = node.id.0;
+        self.by_size.insert((k[0], id));
+        for (axis, set) in self.by_axis.iter_mut().enumerate() {
+            set.insert((k[axis + 1], id));
+        }
+        self.keys[id as usize] = k;
+    }
+
+    fn remove(&mut self, id: NodeId) {
+        let k = self.keys[id.0 as usize];
+        self.by_size.remove(&(k[0], id.0));
+        for (axis, set) in self.by_axis.iter_mut().enumerate() {
+            set.remove(&(k[axis + 1], id.0));
         }
     }
 
+    fn update(&mut self, node: &Node) {
+        self.remove(node.id);
+        self.insert(node);
+    }
+
+    /// Componentwise maximum of effective free across all nodes.
+    fn max_effective_free(&self) -> ResourceVec {
+        let axis_max = |axis: usize| {
+            self.by_axis[axis]
+                .iter()
+                .next_back()
+                .map(|(bits, _)| f64::from_bits(*bits))
+                .unwrap_or(0.0)
+        };
+        ResourceVec::new(axis_max(0), axis_max(1), axis_max(2))
+    }
+}
+
+/// Live cluster state: nodes, a job → node index for O(1) lookup, and the
+/// incremental free-capacity index for placement queries.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    /// Per-node live state.
+    pub nodes: Vec<Node>,
+    location: HashMap<JobId, NodeId>,
+    index: FreeIndex,
+    /// Componentwise maximum node capacity — normalizer giving a lower
+    /// bound on `Size(demand, any node capacity)` for the range prune.
+    max_capacity: ResourceVec,
+}
+
+impl Cluster {
+    /// Build a cluster from its spec (all nodes empty).
+    pub fn new(spec: &ClusterSpec) -> Self {
+        let nodes: Vec<Node> = spec
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, cap)| Node::new(NodeId(i as u32), *cap))
+            .collect();
+        let index = FreeIndex::new(&nodes);
+        let max_capacity = spec.nodes.iter().fold(ResourceVec::ZERO, |acc, c| acc.max(c));
+        Cluster { nodes, location: HashMap::new(), index, max_capacity }
+    }
+
+    /// Shared view of one node.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.0 as usize]
     }
 
+    /// Mutable view of one node. Callers that change `free` must go through
+    /// [`Cluster::bind`]/[`Cluster::unbind`] instead, or the capacity index
+    /// goes stale ([`Cluster::check_invariants`] detects that).
     pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
         &mut self.nodes[id.0 as usize]
     }
@@ -161,12 +317,43 @@ impl Cluster {
         self.nodes.iter().fold(ResourceVec::ZERO, |acc, n| acc + n.free)
     }
 
+    /// Total capacity across nodes.
     pub fn total_capacity(&self) -> ResourceVec {
         self.nodes.iter().fold(ResourceVec::ZERO, |acc, n| acc + n.capacity)
     }
 
-    /// Find a node for `demand` under `placement`, or `None` if it fits
-    /// nowhere. Deterministic: ties break toward the lower node id.
+    /// Componentwise maximum node capacity (cached at construction; node
+    /// capacities are immutable). A demand that does not fit this vector
+    /// fits no node under any circumstances.
+    pub fn max_capacity(&self) -> ResourceVec {
+        self.max_capacity
+    }
+
+    /// O(1) saturation reject: true when `demand` exceeds the componentwise
+    /// maximum *effective* free across all nodes — no node can fit it, with
+    /// or without placement preferences. False means "some node might".
+    pub fn fits_nowhere(&self, demand: &ResourceVec) -> bool {
+        !demand.fits_in(&self.index.max_effective_free())
+    }
+
+    /// Nodes whose effective-free `Size` is large enough that `demand`
+    /// could componentwise fit, ascending by `(Size, id)`. A sound
+    /// over-approximation of the fitting set: callers still run
+    /// `fits_in` per candidate, but nodes too full to matter are never
+    /// visited.
+    pub fn fit_candidates(&self, demand: &ResourceVec) -> impl Iterator<Item = NodeId> + '_ {
+        let lower = (demand.size(&self.max_capacity) - SIZE_SLACK).max(0.0);
+        self.index
+            .by_size
+            .range((key_bits(lower), 0)..)
+            .map(|(_, id)| NodeId(*id))
+    }
+
+    /// Find a node for `demand` under `placement` considering **raw free**
+    /// space (reservation holds ignored), or `None` if it fits nowhere.
+    /// Deterministic: ties break toward the lower node id. The scheduler's
+    /// hold-aware search lives in `sched::core`; this entry point serves
+    /// diagnostics and setup code.
     pub fn find_node(&self, demand: &ResourceVec, placement: Placement) -> Option<NodeId> {
         match placement {
             Placement::FirstFit => self
@@ -204,18 +391,45 @@ impl Cluster {
             self.location.insert(job, node).is_none(),
             "{job} double-bound"
         );
-        self.node_mut(node).allocate(job, demand);
+        self.nodes[node.0 as usize].allocate(job, demand);
+        self.index.update(&self.nodes[node.0 as usize]);
     }
 
-    /// Release `job`'s resources. Returns the node it was on.
-    pub fn unbind(&mut self, job: JobId) -> NodeId {
-        let node = self.location.remove(&job).unwrap_or_else(|| panic!("{job} not bound"));
-        self.node_mut(node).release(job);
-        node
+    /// Release `job`'s resources. Returns the node it was on, or a typed
+    /// error when the job is not bound (the caller decides whether that is
+    /// fatal — the scheduler treats it as an internal inconsistency).
+    pub fn unbind(&mut self, job: JobId) -> Result<NodeId, ClusterError> {
+        let node = self
+            .location
+            .get(&job)
+            .copied()
+            .ok_or_else(|| ClusterError::NotBound(job))?;
+        self.nodes[node.0 as usize].release(job)?;
+        self.location.remove(&job);
+        self.index.update(&self.nodes[node.0 as usize]);
+        Ok(node)
+    }
+
+    /// Pin `amount` of `node`'s space for an incoming reservation: invisible
+    /// to placements until [`Cluster::unreserve`]d. May exceed current free
+    /// (the held space materializes as victims drain).
+    pub fn reserve(&mut self, node: NodeId, amount: ResourceVec) {
+        let n = &mut self.nodes[node.0 as usize];
+        n.hold += amount;
+        self.index.update(&self.nodes[node.0 as usize]);
+    }
+
+    /// Release `amount` of reservation hold on `node` (clamped at zero).
+    pub fn unreserve(&mut self, node: NodeId, amount: ResourceVec) {
+        let n = &mut self.nodes[node.0 as usize];
+        n.hold = n.hold.saturating_sub(&amount);
+        self.index.update(&self.nodes[node.0 as usize]);
     }
 
     /// Invariant check used by tests and the simulator's debug mode:
-    /// free ≥ 0, free ≤ capacity, and free + Σ allocations == capacity.
+    /// free ≥ 0, free ≤ capacity, free + Σ allocations == capacity, the
+    /// location index matches the per-node allocation lists, and the
+    /// capacity index agrees with recomputed per-node keys.
     pub fn check_invariants(&self) -> Result<(), String> {
         for n in &self.nodes {
             if n.free.any_negative() {
@@ -223,6 +437,9 @@ impl Cluster {
             }
             if !n.free.fits_in(&n.capacity) {
                 return Err(format!("{}: free {} exceeds capacity {}", n.id, n.free, n.capacity));
+            }
+            if n.hold.any_negative() {
+                return Err(format!("{}: negative hold {}", n.id, n.hold));
             }
             let allocated = n
                 .allocations
@@ -235,6 +452,19 @@ impl Cluster {
                     "{}: conservation violated: alloc {} + free {} != cap {}",
                     n.id, allocated, n.free, n.capacity
                 ));
+            }
+            let expect = FreeIndex::node_keys(n);
+            let axes_indexed = self
+                .index
+                .by_axis
+                .iter()
+                .enumerate()
+                .all(|(axis, set)| set.contains(&(expect[axis + 1], n.id.0)));
+            if self.index.keys[n.id.0 as usize] != expect
+                || !self.index.by_size.contains(&(expect[0], n.id.0))
+                || !axes_indexed
+            {
+                return Err(format!("{}: capacity index is stale", n.id));
             }
         }
         for (job, node) in &self.location {
@@ -268,10 +498,18 @@ mod tests {
         assert_eq!(c.locate(JobId(1)), Some(NodeId(0)));
         assert_eq!(c.node(NodeId(0)).free, demand(28.0, 224.0, 7.0));
         c.check_invariants().unwrap();
-        let n = c.unbind(JobId(1));
+        let n = c.unbind(JobId(1)).unwrap();
         assert_eq!(n, NodeId(0));
         assert_eq!(c.node(NodeId(0)).free, ResourceVec::pfn_node());
         assert!(c.locate(JobId(1)).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unbind_unknown_job_is_a_typed_error() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(1));
+        assert_eq!(c.unbind(JobId(9)), Err(ClusterError::NotBound(JobId(9))));
+        // The failed release left state untouched.
         c.check_invariants().unwrap();
     }
 
@@ -341,5 +579,64 @@ mod tests {
             c.find_node(&demand(1.0, 1.0, 1.0), Placement::FirstFit),
             Some(NodeId(1))
         );
+    }
+
+    #[test]
+    fn fits_nowhere_tracks_axis_maxima() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(2));
+        assert!(!c.fits_nowhere(&demand(32.0, 256.0, 8.0)));
+        // Take all GPUs on both nodes: any GPU demand now fits nowhere,
+        // while CPU-only demands still fit.
+        c.bind(JobId(0), demand(1.0, 1.0, 8.0), NodeId(0));
+        c.bind(JobId(1), demand(1.0, 1.0, 8.0), NodeId(1));
+        assert!(c.fits_nowhere(&demand(1.0, 1.0, 1.0)));
+        assert!(!c.fits_nowhere(&demand(31.0, 255.0, 0.0)));
+        // Releasing one restores the axis maximum.
+        c.unbind(JobId(0)).unwrap();
+        assert!(!c.fits_nowhere(&demand(1.0, 1.0, 8.0)));
+    }
+
+    #[test]
+    fn reserve_hides_space_from_the_index() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(1));
+        c.reserve(NodeId(0), demand(32.0, 256.0, 8.0));
+        assert_eq!(c.node(NodeId(0)).effective_free(), ResourceVec::ZERO);
+        assert!(c.fits_nowhere(&demand(1.0, 1.0, 0.0)));
+        c.unreserve(NodeId(0), demand(32.0, 256.0, 8.0));
+        assert!(!c.fits_nowhere(&demand(32.0, 256.0, 8.0)));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fit_candidates_exclude_full_nodes_but_keep_all_fitting() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(4));
+        // Node 0 completely full, node 1 nearly full, nodes 2-3 open.
+        c.bind(JobId(0), demand(32.0, 256.0, 8.0), NodeId(0));
+        c.bind(JobId(1), demand(31.0, 250.0, 8.0), NodeId(1));
+        let want = demand(8.0, 64.0, 2.0);
+        let cands: Vec<u32> = c.fit_candidates(&want).map(|n| n.0).collect();
+        assert!(!cands.contains(&0), "full node must be pruned");
+        assert!(cands.contains(&2) && cands.contains(&3), "open nodes must survive");
+        // Every node that actually fits is among the candidates.
+        for n in &c.nodes {
+            if want.fits_in(&n.effective_free()) {
+                assert!(cands.contains(&n.id.0), "candidate set hid {}", n.id);
+            }
+        }
+    }
+
+    #[test]
+    fn index_survives_bind_unbind_reserve_cycles() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(3));
+        c.bind(JobId(0), demand(16.0, 128.0, 4.0), NodeId(1));
+        c.reserve(NodeId(2), demand(10.0, 80.0, 2.0));
+        c.check_invariants().unwrap();
+        c.unbind(JobId(0)).unwrap();
+        c.unreserve(NodeId(2), demand(10.0, 80.0, 2.0));
+        c.check_invariants().unwrap();
+        // After a full cycle, every node is indexed at full capacity again.
+        assert!(!c.fits_nowhere(&demand(32.0, 256.0, 8.0)));
+        let cands: Vec<u32> = c.fit_candidates(&demand(32.0, 256.0, 8.0)).map(|n| n.0).collect();
+        assert_eq!(cands, vec![0, 1, 2]);
     }
 }

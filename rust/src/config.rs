@@ -241,12 +241,13 @@ mod tests {
         assert_eq!(cfg.cluster.nodes.len(), 4);
         assert_eq!(cfg.policy, PolicyKind::Lrtp);
         assert_eq!(cfg.placement, Placement::FirstFit);
-        match cfg.workload {
-            WorkloadConfig::Synthetic { jobs, te_fraction, .. } => {
-                assert_eq!(jobs, 128);
-                assert_eq!(te_fraction, 0.5);
-            }
-            _ => panic!("wrong workload kind"),
+        assert!(
+            matches!(cfg.workload, WorkloadConfig::Synthetic { jobs: 128, .. }),
+            "expected a 128-job synthetic workload, got {:?}",
+            cfg.workload
+        );
+        if let WorkloadConfig::Synthetic { te_fraction, .. } = cfg.workload {
+            assert_eq!(te_fraction, 0.5);
         }
     }
 

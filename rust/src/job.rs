@@ -127,6 +127,11 @@ pub struct Job {
     pub first_start: Option<Minutes>,
     /// Completion time.
     pub finished_at: Option<Minutes>,
+    /// Lifecycle-transition counter: bumped on every start / preemption
+    /// signal / vacate / complete. The [`EventClock`](crate::sched::clock)
+    /// stamps scheduled events with the epoch they were predicted under, so
+    /// a later transition invalidates them lazily (no heap surgery).
+    pub epoch: u64,
 }
 
 impl Job {
@@ -144,6 +149,7 @@ impl Job {
             resched_intervals: Vec::new(),
             first_start: None,
             finished_at: None,
+            epoch: 0,
         }
     }
 
@@ -163,6 +169,7 @@ impl Job {
     pub fn start(&mut self, node: crate::cluster::NodeId, now: Minutes) {
         debug_assert_eq!(self.state, JobState::Pending, "{} start from {:?}", self.id(), self.state);
         self.state = JobState::Running;
+        self.epoch += 1;
         self.node = Some(node);
         if self.first_start.is_none() {
             self.first_start = Some(now);
@@ -179,6 +186,7 @@ impl Job {
         debug_assert_eq!(self.state, JobState::Running, "{} preempt from {:?}", self.id(), self.state);
         debug_assert!(self.is_be(), "TE jobs are never preempted");
         self.state = JobState::Draining;
+        self.epoch += 1;
         self.grace_left = self.spec.grace_period;
     }
 
@@ -187,6 +195,7 @@ impl Job {
     pub fn vacate(&mut self, now: Minutes) {
         debug_assert_eq!(self.state, JobState::Draining);
         self.state = JobState::Pending;
+        self.epoch += 1;
         self.node = None;
         self.grace_left = 0;
         self.preemptions += 1;
@@ -197,6 +206,7 @@ impl Job {
     pub fn complete(&mut self, now: Minutes) {
         debug_assert!(matches!(self.state, JobState::Running | JobState::Draining));
         self.state = JobState::Done;
+        self.epoch += 1;
         self.node = None;
         self.finished_at = Some(now);
     }

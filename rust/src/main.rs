@@ -73,7 +73,7 @@ fn print_help() {
 
 fn common_cli(name: &'static str, about: &'static str) -> Cli {
     Cli::new(name, about)
-        .opt("policy", Some("fitgpp:s=4,p=1"), "fifo | fastlane | lrtp | rand | fitgpp:s=<f>,p=<n|inf>")
+        .opt("policy", Some("fitgpp:s=4,p=1"), "fifo | fastlane | lrtp | rand | srtf | youngest | fitgpp:s=<f>,p=<n|inf>")
         .opt("jobs", Some("8192"), "number of jobs to generate")
         .opt("nodes", Some("84"), "number of cluster nodes")
         .opt("te-fraction", Some("0.3"), "fraction of TE jobs")

@@ -1,0 +1,213 @@
+//! The event clock: min-heaps over the scheduler's three future event
+//! streams — job completions, grace-period expiries, and workload arrivals.
+//!
+//! Both simulator drive modes consume the same clock (see
+//! [`sim`](crate::sim)): the per-minute mode uses it to skip the per-tick
+//! job-table scan on event-free minutes, and the event-horizon mode
+//! additionally reads [`EventClock::next_internal_at`] to know how far a
+//! quiescent span may be fast-forwarded in one
+//! [`burn_many`](crate::sched::Scheduler::burn_many) call. Either way the
+//! scheduler no longer rescans the whole job table to answer "when does
+//! anything happen next?" — that query is a heap peek.
+//!
+//! ## Lazy invalidation by epoch
+//!
+//! Events are predictions: "job `j` completes at minute `t`" is only true
+//! while `j` keeps running every minute until `t`. Instead of deleting
+//! entries from the middle of a heap when a prediction dies (a preempted
+//! job no longer completes on schedule), every entry is stamped with the
+//! job's [`epoch`](crate::job::Job::epoch) — a counter bumped on every
+//! lifecycle transition. An entry whose stamp no longer matches the job's
+//! current epoch is *stale* and is discarded the first time it reaches the
+//! top of its heap. Live entries are exact: the scheduler pushes them only
+//! at transitions, and a job's counters (remaining time, grace left) burn
+//! down one minute per tick from that point, so the stamped minute is
+//! precisely when the counter reaches zero.
+//!
+//! Arrivals need no epochs — submission times are immutable workload data.
+
+use crate::job::{Job, JobId};
+use crate::Minutes;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One prediction: `(minute, job, epoch-at-push)`. Ordered by minute, then
+/// job id, so heap ties are deterministic.
+type Entry = (Minutes, u32, u64);
+
+/// Min-heaps over the scheduler's future events. See the module docs for
+/// the staleness protocol.
+#[derive(Debug, Default)]
+pub struct EventClock {
+    /// Predicted completions of running (or, under progress-during-grace,
+    /// draining) jobs.
+    completions: BinaryHeap<Reverse<Entry>>,
+    /// Predicted grace-period expiries of draining jobs.
+    grace_expiries: BinaryHeap<Reverse<Entry>>,
+    /// Workload arrivals `(submit minute, job)`; immutable, never stale.
+    arrivals: BinaryHeap<Reverse<(Minutes, u32)>>,
+}
+
+/// Discard stale heads, then report the head's minute without popping it.
+fn live_peek(heap: &mut BinaryHeap<Reverse<Entry>>, jobs: &[Job]) -> Option<Minutes> {
+    while let Some(Reverse((at, id, epoch))) = heap.peek().copied() {
+        if jobs[id as usize].epoch == epoch {
+            return Some(at);
+        }
+        heap.pop();
+    }
+    None
+}
+
+/// Pop every entry scheduled at or before `now`; true iff any was live.
+fn drain_due(heap: &mut BinaryHeap<Reverse<Entry>>, now: Minutes, jobs: &[Job]) -> bool {
+    let mut any = false;
+    while let Some(Reverse((at, id, epoch))) = heap.peek().copied() {
+        if at > now {
+            break;
+        }
+        heap.pop();
+        if jobs[id as usize].epoch == epoch {
+            debug_assert_eq!(at, now, "live event for {id} missed its minute");
+            any = true;
+        }
+    }
+    any
+}
+
+impl EventClock {
+    /// An empty clock.
+    pub fn new() -> Self {
+        EventClock::default()
+    }
+
+    /// Schedule a predicted completion of `job` at minute `at`, valid while
+    /// the job stays in its current `epoch`.
+    pub fn push_completion(&mut self, at: Minutes, job: JobId, epoch: u64) {
+        self.completions.push(Reverse((at, job.0, epoch)));
+    }
+
+    /// Schedule a predicted grace-period expiry of `job` at minute `at`.
+    pub fn push_grace_expiry(&mut self, at: Minutes, job: JobId, epoch: u64) {
+        self.grace_expiries.push(Reverse((at, job.0, epoch)));
+    }
+
+    /// Register a workload arrival (done once per job at run setup).
+    pub fn push_arrival(&mut self, at: Minutes, job: JobId) {
+        self.arrivals.push(Reverse((at, job.0)));
+    }
+
+    /// Minute of the next pending arrival, if any.
+    pub fn next_arrival_at(&self) -> Option<Minutes> {
+        self.arrivals.peek().map(|Reverse((at, _))| *at)
+    }
+
+    /// Pop one arrival due exactly at `now` (submission order within the
+    /// minute: ids are dense in submission order and break heap ties).
+    pub fn pop_arrival_due(&mut self, now: Minutes) -> Option<JobId> {
+        match self.arrivals.peek() {
+            Some(Reverse((at, _))) if *at == now => {
+                self.arrivals.pop().map(|Reverse((_, id))| JobId(id))
+            }
+            _ => None,
+        }
+    }
+
+    /// Are any arrivals still pending?
+    pub fn arrivals_pending(&self) -> bool {
+        !self.arrivals.is_empty()
+    }
+
+    /// Consume every internal event due at `now` (and discard stale
+    /// leftovers). Returns true iff a *live* completion or grace expiry is
+    /// due — i.e. the scheduler's completion/expiry scan has work to do
+    /// this tick.
+    pub fn take_due(&mut self, now: Minutes, jobs: &[Job]) -> bool {
+        // `|` not `||`: both heaps must drain even when the first had work.
+        drain_due(&mut self.completions, now, jobs) | drain_due(&mut self.grace_expiries, now, jobs)
+    }
+
+    /// Absolute minute of the next live internal event (completion or
+    /// grace expiry), or `None` when nothing occupies resources. Stale
+    /// heads are discarded on the way.
+    pub fn next_internal_at(&mut self, jobs: &[Job]) -> Option<Minutes> {
+        let c = live_peek(&mut self.completions, jobs);
+        let g = live_peek(&mut self.grace_expiries, jobs);
+        match (c, g) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (x, None) => x,
+            (None, y) => y,
+        }
+    }
+
+    /// Entries currently held across all heaps (diagnostics; includes
+    /// stale entries awaiting lazy discard).
+    pub fn len(&self) -> usize {
+        self.completions.len() + self.grace_expiries.len() + self.arrivals.len()
+    }
+
+    /// True when no entries are held at all.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobClass, JobSpec};
+    use crate::resources::ResourceVec;
+
+    fn job(id: u32) -> Job {
+        Job::new(JobSpec::new(id, JobClass::Be, ResourceVec::new(1.0, 1.0, 0.0), 0, 10, 2))
+    }
+
+    #[test]
+    fn arrivals_pop_in_time_then_id_order() {
+        let mut c = EventClock::new();
+        c.push_arrival(5, JobId(2));
+        c.push_arrival(3, JobId(1));
+        c.push_arrival(3, JobId(0));
+        assert_eq!(c.next_arrival_at(), Some(3));
+        assert_eq!(c.pop_arrival_due(3), Some(JobId(0)));
+        assert_eq!(c.pop_arrival_due(3), Some(JobId(1)));
+        assert_eq!(c.pop_arrival_due(3), None, "next arrival is at 5");
+        assert!(c.arrivals_pending());
+        assert_eq!(c.pop_arrival_due(5), Some(JobId(2)));
+        assert!(!c.arrivals_pending());
+    }
+
+    #[test]
+    fn stale_entries_are_discarded() {
+        let mut c = EventClock::new();
+        let mut jobs = vec![job(0)];
+        c.push_completion(10, JobId(0), jobs[0].epoch);
+        assert_eq!(c.next_internal_at(&jobs), Some(10));
+        // A lifecycle transition invalidates the prediction.
+        jobs[0].epoch += 1;
+        assert_eq!(c.next_internal_at(&jobs), None);
+        assert!(c.is_empty(), "stale head was discarded by the peek");
+    }
+
+    #[test]
+    fn take_due_reports_live_events_only() {
+        let mut c = EventClock::new();
+        let mut jobs = vec![job(0), job(1)];
+        c.push_completion(4, JobId(0), jobs[0].epoch);
+        c.push_grace_expiry(4, JobId(1), jobs[1].epoch);
+        jobs[1].epoch += 1; // grace prediction dies
+        assert!(!c.take_due(3, &jobs), "nothing due before minute 4");
+        assert!(c.take_due(4, &jobs), "live completion at 4");
+        assert!(!c.take_due(4, &jobs), "events are consumed");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn next_internal_is_min_across_heaps() {
+        let mut c = EventClock::new();
+        let jobs = vec![job(0), job(1)];
+        c.push_completion(9, JobId(0), jobs[0].epoch);
+        c.push_grace_expiry(6, JobId(1), jobs[1].epoch);
+        assert_eq!(c.next_internal_at(&jobs), Some(6));
+    }
+}

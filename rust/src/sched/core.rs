@@ -23,18 +23,37 @@
 //!
 //! Zero-GP victims vacate synchronously inside the admission step, so a TE
 //! job whose victim permits rewinding starts in the same minute.
+//!
+//! ## Layering
+//!
+//! The core is deliberately thin; each concern lives one layer down:
+//!
+//! * **Policy** — *whom to evict* is behind the
+//!   [`PreemptionPolicy`] trait, built once per run from the plain-data
+//!   [`PolicyKind`](crate::sched::policy::PolicyKind) config.
+//! * **Clock** — *when anything happens next* is answered by the
+//!   [`EventClock`]: steps 1–2 scan the active set only on minutes where
+//!   the clock says a completion/expiry is actually due, and the
+//!   event-horizon engine reads [`Scheduler::next_internal_at`] (a heap
+//!   peek, not a job-table rescan) to size its bulk burns.
+//! * **Cluster** — *where space exists* is answered by the incremental
+//!   free-capacity index in [`Cluster`] (updated on bind/unbind/reserve),
+//!   so fits-anywhere checks and best-fit search stop scanning every node.
 
-use crate::cluster::{Cluster, ClusterSpec, NodeId, Placement};
+use crate::cluster::{Cluster, ClusterSpec, Node, NodeId, Placement};
 use crate::job::{Job, JobId, JobState};
 use crate::queue::JobQueue;
 use crate::resources::ResourceVec;
-use crate::sched::policy::{plan_preemption, PolicyCtx, PolicyKind};
+use crate::sched::clock::EventClock;
+use crate::sched::policy::{build_policy, PolicyCtx, PolicyKind, PreemptionPolicy};
 use crate::stats::rng::Pcg64;
 use crate::Minutes;
 
 /// Scheduler configuration (everything §4 varies is here).
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
+    /// Scheduling/preemption policy (plain data; behaviour is built from it
+    /// once, at scheduler construction).
     pub policy: PolicyKind,
     /// Node-selection rule for placements (paper does not pin one; best-fit
     /// is the default — see the `placement_ablation` bench).
@@ -47,6 +66,7 @@ pub struct SchedConfig {
 }
 
 impl SchedConfig {
+    /// Paper-default configuration for `policy`.
     pub fn new(policy: PolicyKind) -> Self {
         SchedConfig {
             policy,
@@ -62,7 +82,9 @@ impl SchedConfig {
 /// until the TE job starts or finds a seat elsewhere.
 #[derive(Debug, Clone)]
 pub struct Reservation {
+    /// The TE job this reservation belongs to.
     pub te: JobId,
+    /// The node whose space is held.
     pub node: NodeId,
     /// Amount held = the TE job's demand.
     pub hold: ResourceVec,
@@ -96,6 +118,9 @@ pub struct SchedStats {
     pub fast_forwards: u64,
     /// Simulated minutes covered by those bulk burns (a subset of `ticks`).
     pub fast_forwarded_ticks: u64,
+    /// Internal inconsistencies survived in release builds (debug builds
+    /// panic instead). Always 0 in a healthy run.
+    pub internal_errors: u64,
 }
 
 /// Per-tick outcome (used by tests, the live executor, and the
@@ -117,7 +142,7 @@ pub struct TickStats {
 pub struct Scheduler {
     /// The configuration this scheduler was built with.
     pub cfg: SchedConfig,
-    /// Live cluster state (node capacities, allocations).
+    /// Live cluster state (node capacities, allocations, holds, index).
     pub cluster: Cluster,
     /// BE queue (all jobs under vanilla FIFO).
     pub be_queue: JobQueue,
@@ -125,10 +150,14 @@ pub struct Scheduler {
     pub te_queue: JobQueue,
     /// Live reservations pinning incoming TE jobs to draining nodes.
     pub reservations: Vec<Reservation>,
-    /// Per-node sum of reservation holds.
-    holds: Vec<ResourceVec>,
+    /// Future completions / grace expiries / arrivals (see
+    /// [`crate::sched::clock`]). Shared by both simulator drive modes.
+    pub clock: EventClock,
     /// Jobs currently occupying resources (Running or Draining).
     active: Vec<JobId>,
+    /// Behaviour built from `cfg.policy` at construction (one build per
+    /// run, per the [`PreemptionPolicy`] contract).
+    policy: Box<dyn PreemptionPolicy>,
     rng: Pcg64,
     /// Aggregate counters across the run.
     pub stats: SchedStats,
@@ -137,50 +166,52 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Build a scheduler for `spec` under `cfg`.
     pub fn new(spec: &ClusterSpec, cfg: SchedConfig) -> Self {
-        let n = spec.nodes.len();
         Scheduler {
             rng: Pcg64::new(cfg.seed),
+            policy: build_policy(&cfg.policy),
             cfg,
             cluster: Cluster::new(spec),
             be_queue: JobQueue::new(),
             te_queue: JobQueue::new(),
             reservations: Vec::new(),
-            holds: vec![ResourceVec::ZERO; n],
+            clock: EventClock::new(),
             active: Vec::new(),
             stats: SchedStats::default(),
             paranoid: false,
         }
     }
 
-    /// Effective free space on `node`: free minus holds (clamped at zero),
-    /// optionally crediting back the hold of `own` (a job trying to use its
-    /// own reservation).
-    fn effective_free(&self, node: NodeId, own: Option<JobId>) -> ResourceVec {
-        let mut held = self.holds[node.0 as usize];
-        if let Some(te) = own {
-            if let Some(r) = self.reservations.iter().find(|r| r.te == te) {
-                if r.node == node {
-                    held = held.saturating_sub(&r.hold);
-                }
-            }
-        }
-        self.cluster.node(node).free.saturating_sub(&held)
+    /// Per-node effective free space (free minus holds, clamped at zero) —
+    /// the policy view of the cluster.
+    fn effective_free_all(&self) -> Vec<ResourceVec> {
+        self.cluster.nodes.iter().map(Node::effective_free).collect()
     }
 
-    fn effective_free_all(&self) -> Vec<ResourceVec> {
-        (0..self.cluster.nodes.len())
-            .map(|i| self.effective_free(NodeId(i as u32), None))
-            .collect()
+    /// Placement preference key for the residual-based rules: strictly
+    /// smaller is better, ties break to the lower node id (matching the
+    /// pre-index linear scan exactly). FirstFit never reaches this — it
+    /// takes its own id-order early-exit branch in
+    /// [`Self::find_node_effective`].
+    fn placement_key(&self, free: &ResourceVec, demand: &ResourceVec, node: &Node) -> f64 {
+        match self.cfg.placement {
+            Placement::FirstFit => unreachable!("FirstFit uses the id-order scan"),
+            Placement::BestFit => (*free - *demand).size(&node.capacity),
+            Placement::WorstFit => -(*free - *demand).size(&node.capacity),
+        }
     }
 
     /// Find a node where `demand` fits in *effective* free space, honouring
     /// `own`'s reservation, under the configured placement rule.
     ///
-    /// Hot path (28% of a full-scale simulation before optimization): the
-    /// `own`-reservation lookup is hoisted out of the per-node loop and
-    /// free/holds are combined inline instead of calling
-    /// [`Self::effective_free`] per node (§Perf, EXPERIMENTS.md).
+    /// Hot path (28% of a full-scale simulation before optimization). The
+    /// cluster's capacity index prunes it twice over: an O(1)
+    /// [`fits_nowhere`](Cluster::fits_nowhere) reject covers the saturated
+    /// common case, and [`fit_candidates`](Cluster::fit_candidates) visits
+    /// only nodes whose effective free `Size` can cover the demand. The
+    /// node holding `own`'s reservation is evaluated directly with its
+    /// hold credited back — the index cannot know about the credit.
     fn find_node_effective(&self, demand: &ResourceVec, own: Option<JobId>) -> Option<NodeId> {
         let own_res: Option<(NodeId, ResourceVec)> = own.and_then(|te| {
             self.reservations
@@ -188,27 +219,65 @@ impl Scheduler {
                 .find(|r| r.te == te)
                 .map(|r| (r.node, r.hold))
         });
-        let mut best: Option<(f64, NodeId)> = None;
-        for node in &self.cluster.nodes {
-            let mut held = self.holds[node.id.0 as usize];
-            if let Some((rnode, hold)) = own_res {
-                if rnode == node.id {
-                    held = held.saturating_sub(&hold);
+
+        // FirstFit keeps its id-order early exit: size-ordered candidates
+        // cannot stop at the first hit, a plain id-order walk can. The O(1)
+        // saturation reject still skips hopeless non-credited nodes.
+        if self.cfg.placement == Placement::FirstFit {
+            let nowhere = self.cluster.fits_nowhere(demand);
+            if nowhere && own_res.is_none() {
+                return None; // saturated cluster, no credit to consider
+            }
+            for node in &self.cluster.nodes {
+                let free = match own_res {
+                    Some((rnode, hold)) if rnode == node.id => {
+                        let held = node.hold().saturating_sub(&hold);
+                        node.free.saturating_sub(&held)
+                    }
+                    _ => {
+                        if nowhere {
+                            continue;
+                        }
+                        node.effective_free()
+                    }
+                };
+                if demand.fits_in(&free) {
+                    return Some(node.id);
                 }
             }
+            return None;
+        }
+
+        let mut best: Option<(f64, NodeId)> = None;
+
+        if let Some((rnode, hold)) = own_res {
+            let node = self.cluster.node(rnode);
+            let held = node.hold().saturating_sub(&hold);
             let free = node.free.saturating_sub(&held);
-            if !demand.fits_in(&free) {
-                continue;
+            if demand.fits_in(&free) {
+                best = Some((self.placement_key(&free, demand, node), rnode));
             }
-            let residual = (free - *demand).size(&node.capacity);
-            let key = match self.cfg.placement {
-                Placement::FirstFit => return Some(node.id),
-                Placement::BestFit => residual,
-                Placement::WorstFit => -residual,
-            };
-            match best {
-                Some((k, _)) if k <= key => {}
-                _ => best = Some((key, node.id)),
+        }
+
+        if !self.cluster.fits_nowhere(demand) {
+            let own_node = own_res.map(|(rnode, _)| rnode);
+            for id in self.cluster.fit_candidates(demand) {
+                if own_node == Some(id) {
+                    continue; // already evaluated with its credit above
+                }
+                let node = self.cluster.node(id);
+                let free = node.effective_free();
+                if !demand.fits_in(&free) {
+                    continue;
+                }
+                let key = self.placement_key(&free, demand, node);
+                let better = match best {
+                    None => true,
+                    Some((k, bid)) => key < k || (key == k && id < bid),
+                };
+                if better {
+                    best = Some((key, id));
+                }
             }
         }
         best.map(|(_, id)| id)
@@ -222,7 +291,20 @@ impl Scheduler {
     fn release_reservation(&mut self, job: JobId) {
         if let Some(i) = self.reservations.iter().position(|r| r.te == job) {
             let r = self.reservations.remove(i);
-            self.holds[r.node.0 as usize] = self.holds[r.node.0 as usize].saturating_sub(&r.hold);
+            self.cluster.unreserve(r.node, r.hold);
+        }
+    }
+
+    /// Release `id`'s resources. A missing binding is a scheduler-internal
+    /// inconsistency: fatal in debug builds, counted and skipped in release
+    /// builds (a corrupt input must degrade one decision, not abort a whole
+    /// sweep).
+    fn unbind_checked(&mut self, id: JobId, jobs: &[Job]) {
+        if let Err(e) = self.cluster.unbind(id) {
+            if cfg!(debug_assertions) {
+                panic!("scheduler inconsistency: {e} ({:?})", jobs[id.0 as usize].state);
+            }
+            self.stats.internal_errors += 1;
         }
     }
 
@@ -260,33 +342,54 @@ impl Scheduler {
         self.stats.ticks += 1;
 
         // -- 1+2: completions and grace expirations ----------------------
-        let mut i = 0;
-        while i < self.active.len() {
-            let id = self.active[i];
-            let job = &mut jobs[id.0 as usize];
-            match job.state {
-                JobState::Running if job.remaining == 0 => {
-                    job.complete(now);
-                    self.cluster.unbind(id);
-                    self.active.swap_remove(i);
-                    self.stats.completions += 1;
-                    out.completed.push(id);
+        // The clock knows whether anything is due this minute; event-free
+        // minutes skip the whole active-set scan. When a scan does run it
+        // walks `active` in insertion order, exactly like the pre-clock
+        // core, so multi-event ticks process in the identical order.
+        if self.clock.take_due(now, jobs) {
+            let mut i = 0;
+            while i < self.active.len() {
+                let id = self.active[i];
+                let job = &mut jobs[id.0 as usize];
+                match job.state {
+                    JobState::Running if job.remaining == 0 => {
+                        job.complete(now);
+                        self.unbind_checked(id, jobs);
+                        self.active.swap_remove(i);
+                        self.stats.completions += 1;
+                        out.completed.push(id);
+                    }
+                    JobState::Draining if job.remaining == 0 && self.cfg.progress_during_grace => {
+                        job.complete(now);
+                        self.unbind_checked(id, jobs);
+                        self.active.swap_remove(i);
+                        self.stats.completions += 1;
+                        out.completed.push(id);
+                    }
+                    JobState::Draining if job.grace_left == 0 => {
+                        job.vacate(now);
+                        self.unbind_checked(id, jobs);
+                        self.active.swap_remove(i);
+                        self.be_queue.reinsert_front(id);
+                        out.vacated.push(id);
+                    }
+                    _ => i += 1,
                 }
-                JobState::Draining if job.remaining == 0 && self.cfg.progress_during_grace => {
-                    job.complete(now);
-                    self.cluster.unbind(id);
-                    self.active.swap_remove(i);
-                    self.stats.completions += 1;
-                    out.completed.push(id);
-                }
-                JobState::Draining if job.grace_left == 0 => {
-                    job.vacate(now);
-                    self.cluster.unbind(id);
-                    self.active.swap_remove(i);
-                    self.be_queue.reinsert_front(id);
-                    out.vacated.push(id);
-                }
-                _ => i += 1,
+            }
+        } else if self.paranoid {
+            // Cross-check the skip: no active job may have a due transition
+            // the clock failed to predict.
+            for id in &self.active {
+                let job = &jobs[id.0 as usize];
+                let due = match job.state {
+                    JobState::Running => job.remaining == 0,
+                    JobState::Draining => {
+                        job.grace_left == 0
+                            || (self.cfg.progress_during_grace && job.remaining == 0)
+                    }
+                    _ => false,
+                };
+                assert!(!due, "{} has a due transition the clock missed", job.id());
             }
         }
 
@@ -377,7 +480,7 @@ impl Scheduler {
                     effective_free: &eff,
                     oracle_remaining: &|id: JobId| jobs[id.0 as usize].remaining,
                 };
-                plan_preemption(&self.cfg.policy, &jobs[head.0 as usize].spec, &ctx, &mut self.rng)
+                self.policy.plan(&jobs[head.0 as usize].spec, &ctx, &mut self.rng)
             };
             let Some(plan) = plan else {
                 continue; // nothing to preempt (or non-preemptive policy)
@@ -395,13 +498,19 @@ impl Scheduler {
                 out.preempted.push(*v);
                 if job.grace_left == 0 {
                     job.vacate(now);
-                    self.cluster.unbind(*v);
+                    self.unbind_checked(*v, jobs);
                     if let Some(i) = self.active.iter().position(|a| a == v) {
                         self.active.swap_remove(i);
                     }
                     self.be_queue.reinsert_front(*v);
                     out.vacated.push(*v);
                 } else {
+                    self.clock
+                        .push_grace_expiry(now.saturating_add(job.grace_left), *v, job.epoch);
+                    if self.cfg.progress_during_grace {
+                        self.clock
+                            .push_completion(now.saturating_add(job.remaining), *v, job.epoch);
+                    }
                     victims.push(*v);
                 }
             }
@@ -411,7 +520,7 @@ impl Scheduler {
                 hold: demand,
                 victims,
             });
-            self.holds[plan.node.0 as usize] += demand;
+            self.cluster.reserve(plan.node, demand);
             // Retry immediately: zero-GP victims may have freed the seat.
             if let Some(node) = self.find_node_effective(&demand, Some(head)) {
                 self.place(head, node, now, jobs, out);
@@ -439,30 +548,39 @@ impl Scheduler {
 
     fn place(&mut self, id: JobId, node: NodeId, now: Minutes, jobs: &mut [Job], out: &mut TickStats) {
         // Remove from whichever queue holds it (TE lane admission is
-        // per-arrival, so the job may not be at the head).
-        if !self.te_queue.remove(id) && !self.be_queue.remove(id) {
-            panic!("{id} placed but not queued");
+        // per-arrival, so the job may not be at the head). A job that is in
+        // neither queue is an internal inconsistency (it may already be
+        // placed); release builds skip this one decision rather than
+        // risking a double-bind that would corrupt cluster accounting.
+        let removed = self.te_queue.remove(id) || self.be_queue.remove(id);
+        debug_assert!(removed, "{id} placed but not queued");
+        if !removed {
+            self.stats.internal_errors += 1;
+            return;
         }
         self.release_reservation(id);
         let job = &mut jobs[id.0 as usize];
         job.start(node, now);
+        self.clock
+            .push_completion(now.saturating_add(job.remaining), id, job.epoch);
         self.cluster.bind(id, job.spec.demand, node);
         self.active.push(id);
         self.stats.placements += 1;
         out.started.push(id);
     }
 
-    /// Debug check: holds match live reservations.
+    /// Debug check: cluster holds match live reservations.
     fn check_hold_invariants(&self) {
         let mut expect = vec![ResourceVec::ZERO; self.cluster.nodes.len()];
         for r in &self.reservations {
             expect[r.node.0 as usize] += r.hold;
         }
-        for (i, (a, b)) in expect.iter().zip(&self.holds).enumerate() {
-            let d = *a - *b;
+        for (i, (a, n)) in expect.iter().zip(&self.cluster.nodes).enumerate() {
+            let d = *a - n.hold();
             assert!(
                 d.cpu.abs() < 1e-6 && d.ram_gb.abs() < 1e-6 && d.gpu.abs() < 1e-6,
-                "hold mismatch on node {i}: {a} vs {b}"
+                "hold mismatch on node {i}: {a} vs {}",
+                n.hold()
             );
         }
     }
@@ -504,36 +622,13 @@ impl Scheduler {
         })
     }
 
-    /// Minutes until the next scheduler-internal event — a running job
+    /// Absolute minute of the next scheduler-internal event — a running job
     /// completing, a draining job's grace period expiring, or (under
-    /// progress-during-grace) a draining job finishing — measured from the
-    /// tick after the one that just ran. `None` when no job occupies
-    /// resources.
-    pub fn next_internal_event(&self, jobs: &[Job]) -> Option<Minutes> {
-        let mut min: Option<Minutes> = None;
-        for id in &self.active {
-            let job = &jobs[id.0 as usize];
-            let mut upd = |d: Minutes| {
-                min = Some(match min {
-                    Some(m) if m <= d => m,
-                    _ => d,
-                })
-            };
-            match job.state {
-                JobState::Running => upd(job.remaining),
-                JobState::Draining => {
-                    upd(job.grace_left);
-                    if self.cfg.progress_during_grace {
-                        upd(job.remaining);
-                    }
-                }
-                _ => unreachable!("active job in state {:?}", job.state),
-            }
-            if min == Some(0) {
-                break; // cannot get earlier than "next tick"
-            }
-        }
-        min
+    /// progress-during-grace) a draining job finishing — or `None` when no
+    /// job occupies resources. A lazy heap peek on the [`EventClock`], not
+    /// a job-table scan.
+    pub fn next_internal_at(&mut self, jobs: &[Job]) -> Option<Minutes> {
+        self.clock.next_internal_at(jobs)
     }
 
     /// Advance `dt` quiescent simulated minutes in one step: running jobs
@@ -542,8 +637,8 @@ impl Scheduler {
     /// what `dt` calls to [`Scheduler::tick`] would have done given that no
     /// completion, grace expiry, arrival, or admission can occur inside the
     /// span. The event-horizon engine establishes that precondition via
-    /// [`Scheduler::quiescent`] and [`Scheduler::next_internal_event`];
-    /// debug builds re-assert it here.
+    /// [`Scheduler::quiescent`] and [`Scheduler::next_internal_at`]; debug
+    /// builds re-assert it here.
     pub fn burn_many(&mut self, dt: Minutes, jobs: &mut [Job]) {
         if dt == 0 {
             return;
@@ -773,6 +868,38 @@ mod tests {
     }
 
     #[test]
+    fn srtf_preempts_shortest_remaining_victim() {
+        // Two BE jobs fill the node; SRTF must evict the one closer to
+        // completion (oracle-assisted), not the long one.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(16.0, 128.0, 4.0), 0, 100, 0),
+            JobSpec::new(1, JobClass::Be, rv(16.0, 128.0, 4.0), 0, 8, 0),
+            JobSpec::new(2, JobClass::Te, rv(16.0, 128.0, 4.0), 1, 5, 0),
+        ]);
+        let (sched, _) = run(PolicyKind::Srtf, &spec, &mut jobs);
+        assert!(sched.stats.preemption_signals >= 1);
+        assert_eq!(jobs[1].preemptions, 1, "short-remaining job is the victim");
+        assert_eq!(jobs[0].preemptions, 0);
+    }
+
+    #[test]
+    fn youngest_preempts_latest_submission() {
+        // Jobs 0 (t=0) and 1 (t=1) fill the node; a TE at t=2 must evict
+        // job 1 — the youngest — under the preempt-youngest ablation.
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(16.0, 128.0, 4.0), 0, 100, 0),
+            JobSpec::new(1, JobClass::Be, rv(16.0, 128.0, 4.0), 1, 100, 0),
+            JobSpec::new(2, JobClass::Te, rv(16.0, 128.0, 4.0), 2, 5, 0),
+        ]);
+        let (sched, _) = run(PolicyKind::Youngest, &spec, &mut jobs);
+        assert!(sched.stats.preemption_signals >= 1);
+        assert_eq!(jobs[1].preemptions, 1, "youngest job is the victim");
+        assert_eq!(jobs[0].preemptions, 0);
+    }
+
+    #[test]
     fn draining_job_finishing_early_completes() {
         // progress_during_grace = true: a victim whose remaining < GP
         // finishes during the drain instead of being suspended.
@@ -818,7 +945,8 @@ mod tests {
         let mut a = mk();
         let mut sa = drive(&mut a);
         assert!(sa.quiescent(&a), "blocked BE head is quiescent");
-        assert_eq!(sa.next_internal_event(&a), Some(49));
+        // Job 0 started at t=0 with 50 minutes ⇒ completion event at t=50.
+        assert_eq!(sa.next_internal_at(&a), Some(50));
         sa.burn_many(5, &mut a);
 
         let mut b = mk();
@@ -863,5 +991,26 @@ mod tests {
         let (sched, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
         assert_eq!(sched.stats.te_no_preemption, 2);
         assert_eq!(sched.stats.plans, 0);
+    }
+
+    #[test]
+    fn no_internal_errors_across_a_mixed_run() {
+        let spec = ClusterSpec::tiny(2);
+        let mut jobs = mkjobs(
+            (0..24)
+                .map(|i| {
+                    JobSpec::new(
+                        i,
+                        if i % 3 == 0 { JobClass::Te } else { JobClass::Be },
+                        rv(6.0 + (i % 4) as f64 * 8.0, 48.0, (i % 3) as f64),
+                        (i as u64) / 2,
+                        4 + (i as u64 % 11),
+                        (i as u64) % 4,
+                    )
+                })
+                .collect(),
+        );
+        let (sched, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
+        assert_eq!(sched.stats.internal_errors, 0);
     }
 }

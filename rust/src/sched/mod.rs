@@ -1,8 +1,15 @@
-//! The scheduler: FIFO admission core plus pluggable preemption policies
-//! (§3 of the paper).
+//! The scheduler: FIFO admission core, the event clock, and pluggable
+//! preemption policies (§3 of the paper).
+//!
+//! Three layers: [`policy`] decides *whom to evict* (behind the
+//! [`PreemptionPolicy`](policy::PreemptionPolicy) trait), [`clock`] knows
+//! *when anything happens next* (min-heaps, no job-table rescans), and the
+//! [`core`] ties them to the cluster's incremental capacity index.
 
+pub mod clock;
 pub mod core;
 pub mod policy;
 
+pub use clock::EventClock;
 pub use core::{SchedConfig, SchedStats, Scheduler, TickStats};
-pub use policy::{PolicyKind, PreemptionPlan};
+pub use policy::{PolicyKind, PreemptionPlan, PreemptionPolicy};

@@ -16,9 +16,28 @@
 //! random BE job" — we reuse the RAND policy's node-sticky plan for that
 //! (and count how often it fires; in the paper's experiments it never did).
 
-use super::{rand_policy, PolicyCtx, PreemptionPlan};
+use super::{rand_policy, PolicyCtx, PreemptionPlan, PreemptionPolicy};
 use crate::job::JobSpec;
 use crate::stats::rng::Pcg64;
+
+/// Trait wrapper for [`plan`]: the paper's FitGpp with its two knobs.
+pub struct FitGpp {
+    /// Eq. 3 grace-period weight.
+    pub s: f64,
+    /// Per-job preemption cap `P` (`None` = unlimited).
+    pub p_max: Option<u32>,
+}
+
+impl PreemptionPolicy for FitGpp {
+    fn plan(
+        &self,
+        te: &JobSpec,
+        ctx: &PolicyCtx<'_>,
+        rng: &mut Pcg64,
+    ) -> Option<PreemptionPlan> {
+        plan(te, ctx, self.s, self.p_max, rng)
+    }
+}
 
 /// Eq. 3: `Score(j) = Size(D_j)/max_J Size + s * GP_j/max_J GP`.
 ///

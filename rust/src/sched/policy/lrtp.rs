@@ -13,76 +13,35 @@
 //! that never end up hosting the TE job are collateral damage. That
 //! node-blindness is precisely why LRTP/RAND preempt an order of magnitude
 //! more jobs than FitGpp in the paper's Tables 3–4 (FitGpp's Eq. 2 is the
-//! fix), so we deliberately do *not* make the baseline smarter here.
+//! fix), so we deliberately do *not* make the baseline smarter here. The
+//! shared eviction loop lives in
+//! [`greedy_global_plan`](super::greedy_global_plan).
 
-use super::{PolicyCtx, PreemptionPlan};
+use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
 use crate::job::JobSpec;
-use crate::resources::ResourceVec;
+use crate::stats::rng::Pcg64;
 
-pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
-    // A demand no node could ever satisfy is not plannable (the paper's
-    // clusters never see one — demands are capped at node capacity).
-    let max_node_cap = ctx
-        .cluster
-        .nodes
-        .iter()
-        .fold(ResourceVec::ZERO, |acc, n| acc.max(&n.capacity));
-    if !te.demand.fits_in(&max_node_cap) {
-        return None;
+/// Trait wrapper for [`plan`].
+pub struct Lrtp;
+
+impl PreemptionPolicy for Lrtp {
+    fn plan(
+        &self,
+        te: &JobSpec,
+        ctx: &PolicyCtx<'_>,
+        _rng: &mut Pcg64,
+    ) -> Option<PreemptionPlan> {
+        plan(te, ctx)
     }
-    // All running BE jobs, sorted by remaining time descending (oracle).
+}
+
+/// Plan LRTP eviction: all running BE jobs sorted by remaining time
+/// descending (perfect oracle), fed to the greedy global loop.
+pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
     let mut pool = ctx.running_be();
     pool.sort_by_key(|id| (std::cmp::Reverse((ctx.oracle_remaining)(*id)), id.0));
-    let mut pool = pool.into_iter();
-
-    // Projected free per node as victims accumulate.
-    let mut projected: Vec<ResourceVec> = ctx.effective_free.to_vec();
-    let fit_node = |proj: &[ResourceVec]| {
-        proj.iter()
-            .enumerate()
-            .find(|(_, f)| te.demand.fits_in(f))
-            .map(|(i, _)| crate::cluster::NodeId(i as u32))
-    };
-
-    let total_cap = ctx.cluster.total_capacity();
-    let mut victims = Vec::new();
-    loop {
-        if let Some(node) = fit_node(&projected) {
-            return Some(PreemptionPlan { node, victims, fallback: false });
-        }
-
-    // The paper's baselines measure "enough resource" against the
-    // *aggregate* freed space, not a single node (FitGpp's Eq. 2 is the
-    // per-node fix). If the victims' scattered space sums to the demand
-    // but no single node fits yet, stop here — the scheduler will re-plan
-    // once the drains land and the TE job still cannot be placed. At
-    // least one victim must be chosen per plan so re-planning always
-    // makes progress (the Draining victims leave the candidate pool).
-    // Reserve on the node with the most projected headroom.
-        if !victims.is_empty() {
-            let aggregate = projected
-                .iter()
-                .fold(ResourceVec::ZERO, |acc, f| acc + *f);
-            if te.demand.fits_in(&aggregate) {
-                let node = projected
-                    .iter()
-                    .enumerate()
-                    .max_by(|(_, a), (_, b)| {
-                        a.size(&total_cap).partial_cmp(&b.size(&total_cap)).unwrap()
-                    })
-                    .map(|(i, _)| crate::cluster::NodeId(i as u32))
-                    .unwrap();
-                return Some(PreemptionPlan { node, victims, fallback: false });
-            }
-        }
-        let Some(id) = pool.next() else {
-            return None; // evicting every BE job still would not fit
-        };
-        let j = &ctx.jobs[id.0 as usize];
-        let node = j.node.expect("running");
-        projected[node.0 as usize] += j.spec.demand;
-        victims.push(id);
-    }
+    let mut it = pool.into_iter();
+    greedy_global_plan(te, ctx, || it.next())
 }
 
 #[cfg(test)]

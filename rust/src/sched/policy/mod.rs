@@ -3,20 +3,35 @@
 //!
 //! All policies answer the same question: *given a TE job that fits on no
 //! node right now, produce a `PreemptionPlan` — a target node plus victim
-//! set on that node whose eviction makes the TE job fit.* The scheduler
-//! core then signals the victims (starting their grace periods), reserves
-//! the target node's space, and starts the TE job once the space drains.
+//! set whose eviction makes the TE job fit.* The scheduler core then
+//! signals the victims (starting their grace periods), reserves the target
+//! node's space, and starts the TE job once the space drains.
+//!
+//! ## Layering
+//!
+//! [`PolicyKind`] is plain data — the config/CLI surface (parsed from
+//! strings, stored in experiment configs, rendered in tables). Behaviour
+//! lives behind the [`PreemptionPolicy`] trait; [`build_policy`] turns a
+//! kind into a boxed strategy exactly once per run, so adding a policy
+//! means adding a module + one `build_policy` arm — the scheduler core
+//! never changes.
 //!
 //! Implemented policies:
 //! * [`fitgpp`] — the paper's contribution (Eq. 1–4).
 //! * [`lrtp`] — Big-C's Longest-Remaining-Time Preemption, with the
 //!   paper's perfect-oracle assumption.
-//! * [`rand`] — uniformly random victims.
+//! * [`srtf`] — Shortest-Remaining-Time-First eviction (ablation: evicts
+//!   the jobs closest to completion, maximizing wasted progress-latency).
+//! * [`youngest`] — preempt the most recently submitted BE job (ablation:
+//!   minimizes sunk work per victim, ignores fit and grace periods).
+//! * [`rand`](rand_policy) — uniformly random victims.
 //! * `Fifo` / `FastLane` — no preemption (baseline / bypass-only ablation).
 
 pub mod fitgpp;
 pub mod lrtp;
 pub mod rand_policy;
+pub mod srtf;
+pub mod youngest;
 
 use crate::cluster::{Cluster, NodeId};
 use crate::job::{Job, JobId, JobSpec, JobState};
@@ -24,7 +39,7 @@ use crate::resources::ResourceVec;
 use crate::stats::rng::Pcg64;
 
 /// Which scheduling strategy to run. `PolicyKind` is plain data (configs,
-/// CLI) and is turned into behaviour by [`plan_preemption`].
+/// CLI) and is turned into behaviour by [`build_policy`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PolicyKind {
     /// Vanilla non-preemptive FIFO: one queue for everything, head blocks.
@@ -41,6 +56,10 @@ pub enum PolicyKind {
     Lrtp,
     /// Random victim selection.
     Rand,
+    /// Shortest-Remaining-Time-First eviction (oracle-assisted ablation).
+    Srtf,
+    /// Preempt the most recently submitted running BE job (ablation).
+    Youngest,
 }
 
 impl PolicyKind {
@@ -55,6 +74,7 @@ impl PolicyKind {
         !matches!(self, PolicyKind::Fifo)
     }
 
+    /// Human-readable name (tables, CSV rows, CLI echo).
     pub fn name(&self) -> String {
         match self {
             PolicyKind::Fifo => "FIFO".into(),
@@ -65,11 +85,14 @@ impl PolicyKind {
             },
             PolicyKind::Lrtp => "LRTP".into(),
             PolicyKind::Rand => "RAND".into(),
+            PolicyKind::Srtf => "SRTF".into(),
+            PolicyKind::Youngest => "Youngest".into(),
         }
     }
 
     /// Parse from a CLI string: `fifo`, `fastlane`, `fitgpp`, `fitgpp:s=4`,
-    /// `fitgpp:s=4,p=1`, `fitgpp:s=8,p=inf`, `lrtp`, `rand`.
+    /// `fitgpp:s=4,p=1`, `fitgpp:s=8,p=inf`, `lrtp`, `rand`, `srtf`,
+    /// `youngest`.
     pub fn parse(s: &str) -> Option<PolicyKind> {
         let lower = s.to_ascii_lowercase();
         let (head, rest) = match lower.split_once(':') {
@@ -81,6 +104,8 @@ impl PolicyKind {
             "fastlane" => Some(PolicyKind::FastLane),
             "lrtp" => Some(PolicyKind::Lrtp),
             "rand" => Some(PolicyKind::Rand),
+            "srtf" => Some(PolicyKind::Srtf),
+            "youngest" => Some(PolicyKind::Youngest),
             "fitgpp" => {
                 let mut s_param = 4.0;
                 let mut p_max = Some(1);
@@ -107,13 +132,13 @@ impl PolicyKind {
     }
 }
 
-/// The outcome of a preemption decision: evict `victims` (all hosted on
-/// `node`) so the TE job can start on `node` once they drain.
+/// The outcome of a preemption decision: evict `victims` so the TE job can
+/// start on `node` once they drain.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PreemptionPlan {
     /// Node the TE job will start on once the victims drain.
     pub node: NodeId,
-    /// Victims to signal (all hosted on `node`).
+    /// Victims to signal.
     pub victims: Vec<JobId>,
     /// True when FitGpp's Eq. 4 candidate set was empty and the random
     /// escape hatch produced this plan (never fired in the paper's runs;
@@ -130,8 +155,8 @@ pub struct PolicyCtx<'a> {
     /// Per-node free resources minus reservation holds — what is really
     /// available to new placements.
     pub effective_free: &'a [ResourceVec],
-    /// The remaining-execution-time oracle (only LRTP may consult it; the
-    /// paper grants Big-C perfect predictions, §4.1).
+    /// The remaining-execution-time oracle (only LRTP/SRTF may consult it;
+    /// the paper grants Big-C perfect predictions, §4.1).
     pub oracle_remaining: &'a dyn Fn(JobId) -> u64,
 }
 
@@ -175,19 +200,120 @@ impl<'a> PolicyCtx<'a> {
     }
 }
 
-/// Dispatch: produce a preemption plan for `te` under `kind`, or `None`
-/// if the policy does not preempt / nothing feasible exists.
-pub fn plan_preemption(
-    kind: &PolicyKind,
+/// A pluggable preemption strategy. Object-safe: the scheduler holds one
+/// `Box<dyn PreemptionPolicy>` built by [`build_policy`] at construction.
+///
+/// # Contract
+///
+/// * **Determinism.** Given identical `(te, ctx)` views and an RNG in an
+///   identical state, `plan` must return an identical plan. All randomness
+///   must flow through the supplied `rng` — never thread-local or global
+///   entropy — so `(workload, config, seed)` fully determines a run and
+///   both simulator drive modes stay byte-identical.
+/// * **No hidden state.** Implementations must not carry mutable state
+///   across calls or across runs: a policy value constructed from the same
+///   [`PolicyKind`] must behave identically whether it plans once or a
+///   million times. Anything the decision needs must come from `ctx`.
+/// * **Victim validity.** Every returned victim must be a *running BE* job
+///   (TE jobs are never preempted; draining jobs are already signalled),
+///   and victims must be distinct.
+/// * **No side effects.** `plan` observes; only the scheduler core mutates
+///   cluster or job state.
+pub trait PreemptionPolicy: Send {
+    /// Produce a preemption plan for `te`, or `None` if this policy does
+    /// not preempt / nothing feasible exists.
+    fn plan(
+        &self,
+        te: &JobSpec,
+        ctx: &PolicyCtx<'_>,
+        rng: &mut Pcg64,
+    ) -> Option<PreemptionPlan>;
+}
+
+/// The non-preemptive strategy shared by `Fifo` and `FastLane`.
+struct NoPreemption;
+
+impl PreemptionPolicy for NoPreemption {
+    fn plan(&self, _: &JobSpec, _: &PolicyCtx<'_>, _: &mut Pcg64) -> Option<PreemptionPlan> {
+        None
+    }
+}
+
+/// Turn a plain-data [`PolicyKind`] into behaviour. Called once per run
+/// (scheduler construction); the returned object is immutable thereafter
+/// (see the [`PreemptionPolicy`] contract).
+pub fn build_policy(kind: &PolicyKind) -> Box<dyn PreemptionPolicy> {
+    match kind {
+        PolicyKind::Fifo | PolicyKind::FastLane => Box::new(NoPreemption),
+        PolicyKind::FitGpp { s, p_max } => Box::new(fitgpp::FitGpp { s: *s, p_max: *p_max }),
+        PolicyKind::Lrtp => Box::new(lrtp::Lrtp),
+        PolicyKind::Rand => Box::new(rand_policy::Rand),
+        PolicyKind::Srtf => Box::new(srtf::Srtf),
+        PolicyKind::Youngest => Box::new(youngest::Youngest),
+    }
+}
+
+/// The greedy *global* eviction loop shared by the node-blind baselines
+/// (LRTP, RAND, SRTF, Youngest): pull victims from `next_victim` one at a
+/// time until some node's projected free space fits the TE job.
+///
+/// The paper's baselines measure "enough resource" against the *aggregate*
+/// freed space, not a single node (FitGpp's Eq. 2 is the per-node fix). If
+/// the victims' scattered space sums to the demand but no single node fits
+/// yet, stop here — the scheduler will re-plan once the drains land and the
+/// TE job still cannot be placed. At least one victim is chosen per plan so
+/// re-planning always makes progress (the Draining victims leave the
+/// candidate pool). Reservations land on the node with the most projected
+/// headroom.
+pub(crate) fn greedy_global_plan(
     te: &JobSpec,
     ctx: &PolicyCtx<'_>,
-    rng: &mut Pcg64,
+    mut next_victim: impl FnMut() -> Option<JobId>,
 ) -> Option<PreemptionPlan> {
-    match kind {
-        PolicyKind::Fifo | PolicyKind::FastLane => None,
-        PolicyKind::FitGpp { s, p_max } => fitgpp::plan(te, ctx, *s, *p_max, rng),
-        PolicyKind::Lrtp => lrtp::plan(te, ctx),
-        PolicyKind::Rand => rand_policy::plan(te, ctx, rng, None),
+    // A demand no node could ever satisfy is not plannable (the paper's
+    // clusters never see one — demands are capped at node capacity).
+    if !te.demand.fits_in(&ctx.cluster.max_capacity()) {
+        return None;
+    }
+
+    // Projected free per node as victims accumulate.
+    let mut projected: Vec<ResourceVec> = ctx.effective_free.to_vec();
+    let fit_node = |proj: &[ResourceVec]| {
+        proj.iter()
+            .enumerate()
+            .find(|(_, f)| te.demand.fits_in(f))
+            .map(|(i, _)| NodeId(i as u32))
+    };
+
+    let total_cap = ctx.cluster.total_capacity();
+    let mut victims = Vec::new();
+    loop {
+        if let Some(node) = fit_node(&projected) {
+            return Some(PreemptionPlan { node, victims, fallback: false });
+        }
+        if !victims.is_empty() {
+            let aggregate = projected
+                .iter()
+                .fold(ResourceVec::ZERO, |acc, f| acc + *f);
+            if te.demand.fits_in(&aggregate) {
+                let node = projected
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| {
+                        a.size(&total_cap).partial_cmp(&b.size(&total_cap)).unwrap()
+                    })
+                    .map(|(i, _)| NodeId(i as u32))
+                    .unwrap();
+                return Some(PreemptionPlan { node, victims, fallback: false });
+            }
+        }
+        let Some(id) = next_victim() else {
+            return None; // pool exhausted — no fit possible
+        };
+        let j = &ctx.jobs[id.0 as usize];
+        let node = j.node.expect("running");
+        projected[node.0 as usize] += j.spec.demand;
+        victims.push(id);
     }
 }
 
@@ -201,6 +327,9 @@ mod tests {
         assert_eq!(PolicyKind::parse("FIFO"), Some(PolicyKind::Fifo));
         assert_eq!(PolicyKind::parse("lrtp"), Some(PolicyKind::Lrtp));
         assert_eq!(PolicyKind::parse("rand"), Some(PolicyKind::Rand));
+        assert_eq!(PolicyKind::parse("srtf"), Some(PolicyKind::Srtf));
+        assert_eq!(PolicyKind::parse("SRTF"), Some(PolicyKind::Srtf));
+        assert_eq!(PolicyKind::parse("youngest"), Some(PolicyKind::Youngest));
         assert_eq!(PolicyKind::parse("fastlane"), Some(PolicyKind::FastLane));
         assert_eq!(
             PolicyKind::parse("fitgpp"),
@@ -225,6 +354,10 @@ mod tests {
         assert!(!PolicyKind::FastLane.preempts());
         assert!(PolicyKind::FastLane.te_bypass());
         assert!(PolicyKind::Lrtp.preempts());
+        assert!(PolicyKind::Srtf.preempts());
+        assert!(PolicyKind::Srtf.te_bypass());
+        assert!(PolicyKind::Youngest.preempts());
+        assert!(PolicyKind::Youngest.te_bypass());
         assert!(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }.preempts());
     }
 
@@ -232,5 +365,43 @@ mod tests {
     fn names_render() {
         assert_eq!(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }.name(), "FitGpp(s=4,P=1)");
         assert_eq!(PolicyKind::FitGpp { s: 4.0, p_max: None }.name(), "FitGpp(s=4,P=inf)");
+        assert_eq!(PolicyKind::Srtf.name(), "SRTF");
+        assert_eq!(PolicyKind::Youngest.name(), "Youngest");
+    }
+
+    #[test]
+    fn build_policy_covers_every_kind() {
+        // Non-preemptive kinds yield a strategy that always declines.
+        use crate::cluster::ClusterSpec;
+        let cluster = Cluster::new(&ClusterSpec::tiny(1));
+        let jobs: Vec<Job> = Vec::new();
+        let free = vec![ResourceVec::pfn_node()];
+        let oracle = |_: JobId| 0u64;
+        let ctx = PolicyCtx {
+            cluster: &cluster,
+            jobs: &jobs,
+            effective_free: &free,
+            oracle_remaining: &oracle,
+        };
+        let te = JobSpec::new(0, crate::job::JobClass::Te, ResourceVec::new(1.0, 1.0, 0.0), 0, 5, 0);
+        let mut rng = Pcg64::new(1);
+        for kind in [
+            PolicyKind::Fifo,
+            PolicyKind::FastLane,
+            PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+            PolicyKind::Lrtp,
+            PolicyKind::Rand,
+            PolicyKind::Srtf,
+            PolicyKind::Youngest,
+        ] {
+            let p = build_policy(&kind);
+            // An empty cluster view must never yield victims.
+            let plan = p.plan(&te, &ctx, &mut rng);
+            let victims_empty = match &plan {
+                None => true,
+                Some(pl) => pl.victims.is_empty(),
+            };
+            assert!(victims_empty, "{kind:?} invented victims on an empty cluster");
+        }
     }
 }

@@ -6,9 +6,11 @@
 //!
 //! Like LRTP, selection is *global and node-blind*: a uniformly random
 //! running BE job anywhere, repeated until some node's projected free
-//! space fits the TE job. Victims on nodes that never host the TE job are
-//! collateral damage — which is why RAND preempts an order of magnitude
-//! more jobs than FitGpp in the paper's Tables 3–4.
+//! space fits the TE job (the loop lives in
+//! [`greedy_global_plan`](super::greedy_global_plan)). Victims on nodes
+//! that never host the TE job are collateral damage — which is why RAND
+//! preempts an order of magnitude more jobs than FitGpp in the paper's
+//! Tables 3–4.
 //!
 //! This module also serves as FitGpp's escape hatch ("preempts a random BE
 //! job" when no Eq. 4 candidate exists). In that role it receives FitGpp's
@@ -16,80 +18,40 @@
 //! the paper's no-starvation guarantee (§3.2, strategy 4) would be void.
 //! Stand-alone RAND passes `None` (the paper's RAND has no cap).
 
-use super::{PolicyCtx, PreemptionPlan};
+use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
 use crate::job::JobSpec;
-use crate::resources::ResourceVec;
 use crate::stats::rng::Pcg64;
 
+/// Trait wrapper for [`plan`] (stand-alone RAND: no preemption cap).
+pub struct Rand;
+
+impl PreemptionPolicy for Rand {
+    fn plan(
+        &self,
+        te: &JobSpec,
+        ctx: &PolicyCtx<'_>,
+        rng: &mut Pcg64,
+    ) -> Option<PreemptionPlan> {
+        plan(te, ctx, rng, None)
+    }
+}
+
+/// Plan random eviction: uniformly random running BE victims (optionally
+/// filtered by the `p_max` cap), fed to the greedy global loop.
 pub fn plan(
     te: &JobSpec,
     ctx: &PolicyCtx<'_>,
     rng: &mut Pcg64,
     p_max: Option<u32>,
 ) -> Option<PreemptionPlan> {
-    // A demand no node could ever satisfy is not plannable (the paper's
-    // clusters never see one — demands are capped at node capacity).
-    let max_node_cap = ctx
-        .cluster
-        .nodes
-        .iter()
-        .fold(ResourceVec::ZERO, |acc, n| acc.max(&n.capacity));
-    if !te.demand.fits_in(&max_node_cap) {
-        return None;
-    }
     let mut pool = ctx.running_be();
     if let Some(p) = p_max {
         pool.retain(|id| ctx.jobs[id.0 as usize].preemptions < p);
     }
-
-    let mut projected: Vec<ResourceVec> = ctx.effective_free.to_vec();
-    let fit_node = |proj: &[ResourceVec]| {
-        proj.iter()
-            .enumerate()
-            .find(|(_, f)| te.demand.fits_in(f))
-            .map(|(i, _)| crate::cluster::NodeId(i as u32))
-    };
-
-    let total_cap = ctx.cluster.total_capacity();
-    let mut victims = Vec::new();
-    loop {
-        if let Some(node) = fit_node(&projected) {
-            return Some(PreemptionPlan { node, victims, fallback: false });
-        }
-
-    // The paper's baselines measure "enough resource" against the
-    // *aggregate* freed space, not a single node (FitGpp's Eq. 2 is the
-    // per-node fix). If the victims' scattered space sums to the demand
-    // but no single node fits yet, stop here — the scheduler will re-plan
-    // once the drains land and the TE job still cannot be placed. At
-    // least one victim must be chosen per plan so re-planning always
-    // makes progress (the Draining victims leave the candidate pool).
-    // Reserve on the node with the most projected headroom.
-        if !victims.is_empty() {
-            let aggregate = projected
-                .iter()
-                .fold(ResourceVec::ZERO, |acc, f| acc + *f);
-            if te.demand.fits_in(&aggregate) {
-                let node = projected
-                    .iter()
-                    .enumerate()
-                    .max_by(|(_, a), (_, b)| {
-                        a.size(&total_cap).partial_cmp(&b.size(&total_cap)).unwrap()
-                    })
-                    .map(|(i, _)| crate::cluster::NodeId(i as u32))
-                    .unwrap();
-                return Some(PreemptionPlan { node, victims, fallback: false });
-            }
-        }
-        let Some(i) = rng.pick_index(pool.len()) else {
-            return None; // pool exhausted — no fit possible
-        };
-        let id = pool.swap_remove(i);
-        let j = &ctx.jobs[id.0 as usize];
-        let node = j.node.expect("running");
-        projected[node.0 as usize] += j.spec.demand;
-        victims.push(id);
-    }
+    greedy_global_plan(te, ctx, || {
+        let i = rng.pick_index(pool.len())?;
+        Some(pool.swap_remove(i))
+    })
 }
 
 #[cfg(test)]

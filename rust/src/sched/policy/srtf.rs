@@ -1,0 +1,108 @@
+//! SRTF — Shortest-Remaining-Time-First eviction (ablation).
+//!
+//! The mirror image of [`lrtp`](super::lrtp): it preempts the running BE
+//! job with the *shortest* remaining execution time first, using the same
+//! perfect oracle (`PolicyCtx::oracle_remaining`) and the same greedy
+//! global eviction loop. Jobs nearest completion need the least space for
+//! the shortest time, but evicting them throws away almost-finished work
+//! and makes their flow time balloon — the worst case the paper's Eq. 3
+//! size/GP trade-off is designed to avoid. Keeping this strategy swappable
+//! demonstrates the [`PreemptionPolicy`](super::PreemptionPolicy) layering
+//! and gives the sensitivity sweeps a pessimal oracle-assisted baseline.
+//!
+//! Selection is global and node-blind like the paper's baselines: victims
+//! accumulate in ascending-remaining-time order (ties break toward the
+//! lower job id) until some node's projected free space — or, failing
+//! that, the aggregate freed space — fits the TE job.
+
+use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use crate::job::JobSpec;
+use crate::stats::rng::Pcg64;
+
+/// Trait wrapper for [`plan`].
+pub struct Srtf;
+
+impl PreemptionPolicy for Srtf {
+    fn plan(
+        &self,
+        te: &JobSpec,
+        ctx: &PolicyCtx<'_>,
+        _rng: &mut Pcg64,
+    ) -> Option<PreemptionPlan> {
+        plan(te, ctx)
+    }
+}
+
+/// Plan SRTF eviction: all running BE jobs sorted by remaining time
+/// ascending (perfect oracle), fed to the greedy global loop.
+pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
+    let mut pool = ctx.running_be();
+    pool.sort_by_key(|id| ((ctx.oracle_remaining)(*id), id.0));
+    let mut it = pool.into_iter();
+    greedy_global_plan(te, ctx, || it.next())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterSpec, NodeId};
+    use crate::job::{Job, JobClass, JobId, JobSpec};
+    use crate::resources::ResourceVec;
+    use crate::sched::policy::PolicyCtx;
+
+    fn setup(
+        nodes: usize,
+        placements: &[(u32, ResourceVec, u64)], // (node, demand, remaining)
+    ) -> (Cluster, Vec<Job>, Vec<u64>) {
+        let spec = ClusterSpec::tiny(nodes);
+        let mut cluster = Cluster::new(&spec);
+        let mut jobs = Vec::new();
+        let mut remaining = Vec::new();
+        for (i, (node, demand, rem)) in placements.iter().enumerate() {
+            let spec = JobSpec::new(i as u32, JobClass::Be, *demand, 0, (*rem).max(1), 0);
+            let mut job = Job::new(spec);
+            job.start(NodeId(*node), 0);
+            cluster.bind(JobId(i as u32), *demand, NodeId(*node));
+            jobs.push(job);
+            remaining.push(*rem);
+        }
+        (cluster, jobs, remaining)
+    }
+
+    fn te(demand: ResourceVec) -> JobSpec {
+        JobSpec::new(999, JobClass::Te, demand, 0, 5, 0)
+    }
+
+    #[test]
+    fn picks_shortest_remaining_globally() {
+        let d = ResourceVec::new(8.0, 64.0, 2.0);
+        let (cluster, jobs, rem) = setup(2, &[(0, d, 100), (1, d, 5)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let oracle = move |id: JobId| rem[id.0 as usize];
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        assert_eq!(plan.victims, vec![JobId(1)], "remaining-5 job is evicted first");
+        assert_eq!(plan.node, NodeId(1));
+    }
+
+    #[test]
+    fn ties_break_to_lower_id() {
+        let d = ResourceVec::new(16.0, 128.0, 4.0);
+        let (cluster, jobs, rem) = setup(1, &[(0, d, 10), (0, d, 10)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let oracle = move |id: JobId| rem[id.0 as usize];
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        assert_eq!(p.victims, vec![JobId(0), JobId(1)]);
+    }
+
+    #[test]
+    fn infeasible_everywhere_returns_none() {
+        let d = ResourceVec::new(4.0, 32.0, 2.0);
+        let (cluster, jobs, rem) = setup(1, &[(0, d, 10)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let oracle = move |id: JobId| rem[id.0 as usize];
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
+    }
+}

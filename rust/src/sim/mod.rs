@@ -2,17 +2,19 @@
 //! (§4.1: "the job scheduler decides resource allocation at every simulated
 //! minute").
 //!
-//! Two engines advance simulated time:
+//! One core loop (`Simulator::run_core`) drives both engines off the
+//! scheduler's shared [`EventClock`](crate::sched::EventClock) — arrivals,
+//! completions, and grace expiries all come from its min-heaps:
 //!
-//! * [`SimEngine::EventHorizon`] (default) — computes the next *event
-//!   horizon* (earliest of the next arrival, next completion, next grace
-//!   expiry, and "next minute" whenever a queued job's admission could
-//!   consume policy RNG or re-plan) and fast-forwards quiescent spans in a
+//! * [`SimEngine::EventHorizon`] (default) — after each tick, if the
+//!   scheduler is quiescent, fast-forwards to the next *event horizon*
+//!   (earliest of the next arrival, next completion/grace expiry — a heap
+//!   peek, not a job-table scan — and the engine's stopping caps) in a
 //!   single [`Scheduler::burn_many`] call instead of ticking minute by
 //!   minute.
-//! * [`SimEngine::PerMinute`] — the original reference loop, one
+//! * [`SimEngine::PerMinute`] — the reference drive mode, one
 //!   [`Scheduler::tick`] per simulated minute. Kept as the equivalence
-//!   oracle: `rust/tests/engine_equivalence.rs` asserts both engines
+//!   oracle: `rust/tests/engine_equivalence.rs` asserts both drive modes
 //!   produce byte-identical reports on §4.2 workloads.
 //!
 //! The simulator is deterministic: (workload, config, seed) → identical
@@ -284,13 +286,11 @@ impl Simulator {
         Simulator { cfg }
     }
 
-    /// Run `workload` to completion and collect results, dispatching to the
-    /// configured [`SimEngine`].
+    /// Run `workload` to completion and collect results. Both
+    /// [`SimEngine`]s are drive modes of one core loop; the event-horizon
+    /// mode additionally fast-forwards quiescent spans.
     pub fn run(&self, workload: &Workload) -> SimResult {
-        match self.cfg.engine {
-            SimEngine::EventHorizon => self.run_event_horizon(workload),
-            SimEngine::PerMinute => self.run_per_minute(workload),
-        }
+        self.run_core(workload, self.cfg.engine == SimEngine::EventHorizon)
     }
 
     /// Build the job table + scheduler for a run.
@@ -319,74 +319,42 @@ impl Simulator {
         }
     }
 
-    /// The original reference loop: one [`Scheduler::tick`] per simulated
-    /// minute, exactly as the paper describes the scheduler operating. Kept
-    /// verbatim as the equivalence oracle for the event-horizon engine.
-    fn run_per_minute(&self, workload: &Workload) -> SimResult {
-        let (mut jobs, mut sched) = self.setup(workload);
-        let last_submit = workload.jobs.last().map(|j| j.submit).unwrap_or(0);
-        let mut next_arrival = 0usize; // index into jobs
-        let mut now: Minutes = 0;
-        let mut arrivals: Vec<JobId> = Vec::new();
-
-        loop {
-            arrivals.clear();
-            while next_arrival < jobs.len() && jobs[next_arrival].spec.submit == now {
-                arrivals.push(jobs[next_arrival].id());
-                next_arrival += 1;
-            }
-            sched.tick(now, &mut jobs, &arrivals);
-            now += 1;
-
-            let past_arrivals = next_arrival >= jobs.len() && now > last_submit;
-            if past_arrivals {
-                if self.cfg.drain {
-                    if sched.idle() {
-                        break;
-                    }
-                } else if now > last_submit + self.cfg.tail_ticks {
-                    break;
-                }
-            }
-            if now >= self.cfg.max_ticks {
-                break;
-            }
-        }
-
-        self.finish(jobs, sched, now)
-    }
-
-    /// Event-horizon loop: identical tick/break structure to
-    /// [`Self::run_per_minute`], plus a fast-forward step after each tick.
-    /// When the scheduler is [quiescent](Scheduler::quiescent) (and nothing
-    /// vacated in the tick just executed — a vacated job becomes admittable
-    /// one tick later), the span until the earliest of
+    /// The shared core loop. Every iteration: pop arrivals due this minute
+    /// from the clock, run one [`Scheduler::tick`] (exactly as the paper
+    /// describes the scheduler operating), then check the stop conditions.
     ///
-    /// * the next arrival's submit tick,
-    /// * the next internal event (completion / grace expiry), and
+    /// With `fast_forward` set (the event-horizon mode), a tick after which
+    /// the scheduler is [quiescent](Scheduler::quiescent) — and nothing
+    /// vacated in the tick just executed, since a vacated job becomes
+    /// admittable one tick later — advances the span until the earliest of
+    ///
+    /// * the next arrival (clock heap peek),
+    /// * the next internal event — completion or grace expiry
+    ///   ([`Scheduler::next_internal_at`], a clock heap peek), and
     /// * the engine's stopping caps (`max_ticks`, the no-drain tail cutoff)
     ///
-    /// is advanced in one [`Scheduler::burn_many`] call. Quiescent spans
-    /// therefore cost O(jobs) once instead of O(jobs) per minute, and the
-    /// results are byte-identical to the per-minute loop (see
+    /// in one [`Scheduler::burn_many`] call. Quiescent spans therefore cost
+    /// O(jobs) once instead of O(jobs) per minute, and the results are
+    /// byte-identical to the per-minute drive mode (see
     /// `rust/tests/engine_equivalence.rs`).
-    fn run_event_horizon(&self, workload: &Workload) -> SimResult {
+    fn run_core(&self, workload: &Workload, fast_forward: bool) -> SimResult {
         let (mut jobs, mut sched) = self.setup(workload);
+        for j in &jobs {
+            sched.clock.push_arrival(j.spec.submit, j.id());
+        }
         let last_submit = workload.jobs.last().map(|j| j.submit).unwrap_or(0);
-        let mut next_arrival = 0usize; // index into jobs
         let mut now: Minutes = 0;
         let mut arrivals: Vec<JobId> = Vec::new();
 
         loop {
             arrivals.clear();
-            while next_arrival < jobs.len() && jobs[next_arrival].spec.submit == now {
-                arrivals.push(jobs[next_arrival].id());
-                next_arrival += 1;
+            while let Some(id) = sched.clock.pop_arrival_due(now) {
+                arrivals.push(id);
             }
             let out = sched.tick(now, &mut jobs, &arrivals);
             now += 1;
 
-            let past_arrivals = next_arrival >= jobs.len() && now > last_submit;
+            let past_arrivals = !sched.clock.arrivals_pending() && now > last_submit;
             if past_arrivals {
                 if self.cfg.drain {
                     if sched.idle() {
@@ -401,18 +369,18 @@ impl Simulator {
             }
 
             // ---- fast-forward to the next event horizon ----------------
-            if out.vacated.is_empty() && sched.quiescent(&jobs) {
-                // Latest tick the per-minute loop could still execute
+            if fast_forward && out.vacated.is_empty() && sched.quiescent(&jobs) {
+                // Latest tick the per-minute mode could still execute
                 // before one of its break conditions fires.
                 let mut target = self.cfg.max_ticks.saturating_sub(1);
-                if !self.cfg.drain && next_arrival >= jobs.len() {
+                if !self.cfg.drain && !sched.clock.arrivals_pending() {
                     target = target.min(last_submit + self.cfg.tail_ticks);
                 }
-                if let Some(delta) = sched.next_internal_event(&jobs) {
-                    target = target.min(now.saturating_add(delta));
+                if let Some(at) = sched.next_internal_at(&jobs) {
+                    target = target.min(at);
                 }
-                if next_arrival < jobs.len() {
-                    target = target.min(jobs[next_arrival].spec.submit);
+                if let Some(at) = sched.clock.next_arrival_at() {
+                    target = target.min(at);
                 }
                 if target > now {
                     sched.burn_many(target - now, &mut jobs);
@@ -520,6 +488,8 @@ mod tests {
             PolicyKind::FastLane,
             PolicyKind::Lrtp,
             PolicyKind::Rand,
+            PolicyKind::Srtf,
+            PolicyKind::Youngest,
             PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
         ] {
             let run = |engine: SimEngine| {

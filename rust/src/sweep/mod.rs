@@ -320,6 +320,21 @@ pub fn paper_policies() -> Vec<PolicyKind> {
     ]
 }
 
+/// Every implemented policy: the §4.1 four plus the bypass-only FastLane
+/// ablation and the SRTF / preempt-youngest ablations that ride on the
+/// [`PreemptionPolicy`](crate::sched::policy::PreemptionPolicy) trait.
+pub fn extended_policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::Fifo,
+        PolicyKind::FastLane,
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        PolicyKind::Srtf,
+        PolicyKind::Youngest,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+    ]
+}
+
 /// Everything one cell produced (reports plus the raw per-job slowdowns,
 /// so callers can pool across seeds exactly like the paper does).
 #[derive(Debug, Clone)]

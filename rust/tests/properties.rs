@@ -2,7 +2,10 @@
 //! in-tree `testkit` (proptest substitute). Each failure reports a
 //! replayable seed.
 
-use fitgpp::cluster::ClusterSpec;
+use fitgpp::cluster::{Cluster, ClusterSpec, NodeId};
+use fitgpp::job::JobId;
+use fitgpp::queue::JobQueue;
+use fitgpp::resources::ResourceVec;
 use fitgpp::job::JobClass;
 use fitgpp::prop_assert;
 use fitgpp::sched::policy::PolicyKind;
@@ -11,12 +14,14 @@ use fitgpp::stats::rng::Pcg64;
 use fitgpp::testkit::{check, gen, PropConfig};
 
 fn policies(rng: &mut Pcg64) -> PolicyKind {
-    match rng.below(6) {
+    match rng.below(8) {
         0 => PolicyKind::Fifo,
         1 => PolicyKind::FastLane,
         2 => PolicyKind::Lrtp,
         3 => PolicyKind::Rand,
-        4 => PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        4 => PolicyKind::Srtf,
+        5 => PolicyKind::Youngest,
+        6 => PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
         _ => PolicyKind::FitGpp { s: 2.0, p_max: None },
     }
 }
@@ -241,6 +246,200 @@ fn prop_slowdown_percentiles_monotone() {
                 continue; // class absent from this random workload
             }
             prop_assert!(p.p50 <= p.p95 + 1e-9 && p.p95 <= p.p99 + 1e-9, "{p:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_node_free_equals_capacity_minus_allocations() {
+    // The Node conservation invariant — free == capacity − Σ allocations —
+    // and the capacity-index consistency must survive arbitrary
+    // alloc/release/reserve/unreserve interleavings.
+    check("node-conservation", PropConfig::default(), |rng| {
+        let nodes = 1 + rng.below(4) as usize;
+        let mut cluster = Cluster::new(&ClusterSpec::tiny(nodes));
+        // Live allocations (job id -> (node, demand)) and per-node reserve
+        // tallies, mirrored outside the cluster as the ground truth.
+        let mut live: Vec<(u32, NodeId, ResourceVec)> = Vec::new();
+        let mut reserved: Vec<ResourceVec> = vec![ResourceVec::ZERO; nodes];
+        let mut next_id = 0u32;
+        for _ in 0..120 {
+            match rng.below(4) {
+                0 => {
+                    // Allocate a random demand on a random node if it fits.
+                    let demand = ResourceVec::new(
+                        1.0 + rng.below(16) as f64,
+                        1.0 + rng.below(128) as f64,
+                        rng.below(5) as f64,
+                    );
+                    let node = NodeId(rng.below(nodes as u64) as u32);
+                    if demand.fits_in(&cluster.node(node).free) {
+                        cluster.bind(JobId(next_id), demand, node);
+                        live.push((next_id, node, demand));
+                        next_id += 1;
+                    }
+                }
+                1 => {
+                    // Release a random live allocation.
+                    if let Some(i) = rng.pick_index(live.len()) {
+                        let (id, node, _) = live.swap_remove(i);
+                        let got = cluster.unbind(JobId(id));
+                        prop_assert!(got == Ok(node), "unbind returned {got:?}");
+                    }
+                }
+                2 => {
+                    // Reserve space (may exceed free — that is legal).
+                    let node = rng.below(nodes as u64) as usize;
+                    let amount = ResourceVec::new(
+                        rng.below(20) as f64,
+                        rng.below(100) as f64,
+                        rng.below(6) as f64,
+                    );
+                    cluster.reserve(NodeId(node as u32), amount);
+                    reserved[node] += amount;
+                }
+                _ => {
+                    // Unreserve up to what we reserved.
+                    let node = rng.below(nodes as u64) as usize;
+                    let amount = reserved[node].scale(0.5);
+                    cluster.unreserve(NodeId(node as u32), amount);
+                    reserved[node] = reserved[node].saturating_sub(&amount);
+                }
+            }
+            // Ground truth: free == capacity − Σ live allocations per node.
+            for n in &cluster.nodes {
+                let allocated = live
+                    .iter()
+                    .filter(|(_, node, _)| *node == n.id)
+                    .fold(ResourceVec::ZERO, |acc, (_, _, d)| acc + *d);
+                let expect = n.capacity - allocated;
+                let diff = n.free - expect;
+                prop_assert!(
+                    diff.cpu.abs() < 1e-6 && diff.ram_gb.abs() < 1e-6 && diff.gpu.abs() < 1e-6,
+                    "{}: free {} != capacity - allocations {}",
+                    n.id,
+                    n.free,
+                    expect
+                );
+            }
+            if let Err(e) = cluster.check_invariants() {
+                return Err(format!("invariants: {e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_queue_reinsertion_is_most_recent_preemption_first() {
+    // The documented re-insertion rule: preempted jobs return to the *top*
+    // of the queue, and when several victims vacate in one tick the most
+    // recently vacated sits closest to the head (LIFO among themselves),
+    // with previously queued jobs behind them in unchanged order.
+    check("queue-reinsertion", PropConfig::default(), |rng| {
+        let mut q = JobQueue::new();
+        let base = rng.below(6);
+        for i in 0..base {
+            q.submit(JobId(i as u32));
+        }
+        let before: Vec<JobId> = q.iter().collect();
+        // One tick's victim batch, vacating in this order.
+        let victims: Vec<JobId> =
+            (0..1 + rng.below(5)).map(|i| JobId(1000 + i as u32)).collect();
+        for v in &victims {
+            q.reinsert_front(*v);
+        }
+        let got: Vec<JobId> = q.iter().collect();
+        let mut want: Vec<JobId> = victims.iter().rev().copied().collect();
+        want.extend(before.iter().copied());
+        prop_assert!(
+            got == want,
+            "queue order {got:?} != most-recent-preemption-first {want:?}"
+        );
+        // Head is always the most recent preemption.
+        prop_assert!(
+            q.head() == victims.last().copied(),
+            "head {:?} is not the last vacated victim",
+            q.head()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_capacity_index_never_hides_a_fitting_node() {
+    // Soundness of the free-capacity index, independently of any engine:
+    // for arbitrary cluster states (allocations + reservation holds) and
+    // arbitrary demands, (a) `fits_nowhere` may only say "nowhere" when a
+    // linear scan agrees no node fits, and (b) every node whose effective
+    // free space fits the demand appears among `fit_candidates`. Either
+    // failure would change placements identically in BOTH simulator drive
+    // modes, so the engine-equivalence suite cannot catch it — this
+    // property is the index's dedicated safety net.
+    check("index-soundness", PropConfig::default(), |rng| {
+        let nodes = 1 + rng.below(6) as usize;
+        let mut cluster = Cluster::new(&ClusterSpec::tiny(nodes));
+        let mut next_id = 0u32;
+        for _ in 0..rng.below(40) {
+            match rng.below(3) {
+                0 => {
+                    let demand = ResourceVec::new(
+                        1.0 + rng.below(24) as f64,
+                        1.0 + rng.below(200) as f64,
+                        rng.below(9) as f64,
+                    );
+                    let node = NodeId(rng.below(nodes as u64) as u32);
+                    if demand.fits_in(&cluster.node(node).free) {
+                        cluster.bind(JobId(next_id), demand, node);
+                        next_id += 1;
+                    }
+                }
+                1 => {
+                    let node = NodeId(rng.below(nodes as u64) as u32);
+                    let amount = ResourceVec::new(
+                        rng.below(20) as f64,
+                        rng.below(150) as f64,
+                        rng.below(6) as f64,
+                    );
+                    cluster.reserve(node, amount);
+                }
+                _ => {
+                    let node = NodeId(rng.below(nodes as u64) as u32);
+                    let amount = ResourceVec::new(
+                        rng.below(10) as f64,
+                        rng.below(60) as f64,
+                        rng.below(3) as f64,
+                    );
+                    cluster.unreserve(node, amount);
+                }
+            }
+        }
+        for _ in 0..16 {
+            let demand = ResourceVec::new(
+                rng.below(40) as f64,
+                rng.below(300) as f64,
+                rng.below(12) as f64,
+            );
+            let fitting: Vec<u32> = cluster
+                .nodes
+                .iter()
+                .filter(|n| demand.fits_in(&n.effective_free()))
+                .map(|n| n.id.0)
+                .collect();
+            if cluster.fits_nowhere(&demand) {
+                prop_assert!(
+                    fitting.is_empty(),
+                    "fits_nowhere lied: {demand} fits nodes {fitting:?}"
+                );
+            }
+            let candidates: Vec<u32> = cluster.fit_candidates(&demand).map(|n| n.0).collect();
+            for id in &fitting {
+                prop_assert!(
+                    candidates.contains(id),
+                    "fit_candidates hid node-{id} which fits {demand}"
+                );
+            }
         }
         Ok(())
     });
