@@ -12,7 +12,6 @@
 
 use fitgpp::job::JobClass;
 use fitgpp::prelude::*;
-use fitgpp::stats::summary::percentile;
 use fitgpp::sweep::paper_policies;
 use fitgpp::util::cli::Cli;
 use fitgpp::util::table::Table;
@@ -83,13 +82,13 @@ fn main() -> anyhow::Result<()> {
     );
     for &frac in &ratios {
         for p in paper_policies() {
-            let te = res.pooled_slowdowns_where(|c| c.policy == p && c.te_ratio == frac, JobClass::Te);
-            let be = res.pooled_slowdowns_where(|c| c.policy == p && c.te_ratio == frac, JobClass::Be);
+            let te = res.pooled_percentiles_where(|c| c.policy == p && c.te_ratio == frac, JobClass::Te);
+            let be = res.pooled_percentiles_where(|c| c.policy == p && c.te_ratio == frac, JobClass::Be);
             t.row(vec![
                 frac.to_string(),
                 p.name(),
-                format!("{:.2}", percentile(&te, 95.0)),
-                format!("{:.2}", percentile(&be, 95.0)),
+                format!("{:.2}", te.p95),
+                format!("{:.2}", be.p95),
             ]);
         }
     }
@@ -111,13 +110,13 @@ fn main() -> anyhow::Result<()> {
     );
     for &scale in &scales {
         for p in &fig7_policies {
-            let te = res.pooled_slowdowns_where(|c| c.policy == *p && c.gp_scale == scale, JobClass::Te);
-            let be = res.pooled_slowdowns_where(|c| c.policy == *p && c.gp_scale == scale, JobClass::Be);
+            let te = res.pooled_percentiles_where(|c| c.policy == *p && c.gp_scale == scale, JobClass::Te);
+            let be = res.pooled_percentiles_where(|c| c.policy == *p && c.gp_scale == scale, JobClass::Be);
             t.row(vec![
                 scale.to_string(),
                 p.name(),
-                format!("{:.2}", percentile(&te, 95.0)),
-                format!("{:.2}", percentile(&be, 95.0)),
+                format!("{:.2}", te.p95),
+                format!("{:.2}", be.p95),
             ]);
         }
     }

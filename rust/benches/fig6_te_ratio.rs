@@ -11,7 +11,6 @@
 mod common;
 
 use fitgpp::job::JobClass;
-use fitgpp::stats::summary::percentile;
 use fitgpp::sweep::{paper_policies, SweepSpec};
 use fitgpp::util::table::Table;
 
@@ -34,19 +33,19 @@ fn main() {
     );
     for &frac in &ratios {
         for policy in paper_policies() {
-            let te = res.pooled_slowdowns_where(
+            let te = res.pooled_percentiles_where(
                 |c| c.policy == policy && c.te_ratio == frac,
                 JobClass::Te,
             );
-            let be = res.pooled_slowdowns_where(
+            let be = res.pooled_percentiles_where(
                 |c| c.policy == policy && c.te_ratio == frac,
                 JobClass::Be,
             );
             t.row(vec![
                 format!("{:.0}", frac * 100.0),
                 policy.name(),
-                format!("{:.2}", percentile(&te, 95.0)),
-                format!("{:.2}", percentile(&be, 95.0)),
+                format!("{:.2}", te.p95),
+                format!("{:.2}", be.p95),
             ]);
         }
     }

@@ -12,7 +12,6 @@ mod common;
 
 use fitgpp::job::JobClass;
 use fitgpp::sched::policy::PolicyKind;
-use fitgpp::stats::summary::percentile;
 use fitgpp::sweep::SweepSpec;
 use fitgpp::util::table::Table;
 
@@ -44,19 +43,19 @@ fn main() {
     );
     for &scale in &scales {
         for (name, policy) in &policies {
-            let te = res.pooled_slowdowns_where(
+            let te = res.pooled_percentiles_where(
                 |c| c.policy == *policy && c.gp_scale == scale,
                 JobClass::Te,
             );
-            let be = res.pooled_slowdowns_where(
+            let be = res.pooled_percentiles_where(
                 |c| c.policy == *policy && c.gp_scale == scale,
                 JobClass::Be,
             );
             t.row(vec![
                 format!("{scale}"),
                 name.clone(),
-                format!("{:.2}", percentile(&te, 95.0)),
-                format!("{:.2}", percentile(&be, 95.0)),
+                format!("{:.2}", te.p95),
+                format!("{:.2}", be.p95),
             ]);
         }
     }

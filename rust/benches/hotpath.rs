@@ -21,7 +21,7 @@ use fitgpp::stats::summary::percentiles;
 use fitgpp::workload::synthetic::SyntheticWorkload;
 
 /// Build a cluster with `n_jobs` running BE jobs spread across 84 nodes.
-fn packed_cluster(n_jobs: usize) -> (Cluster, Vec<Job>) {
+fn packed_cluster(n_jobs: usize) -> (Cluster, fitgpp::job_table::JobTable) {
     let spec = ClusterSpec::pfn();
     let mut cluster = Cluster::new(&spec);
     let mut jobs = Vec::new();
@@ -43,7 +43,7 @@ fn packed_cluster(n_jobs: usize) -> (Cluster, Vec<Job>) {
         jobs.push(j);
         placed += 1;
     }
-    (cluster, jobs)
+    (cluster, fitgpp::job_table::JobTable::from_jobs(jobs))
 }
 
 fn main() {
@@ -65,7 +65,7 @@ fn main() {
         let (cluster, jobs) = packed_cluster(n);
         let free: Vec<ResourceVec> = cluster.nodes.iter().map(|nd| nd.free).collect();
         let te = JobSpec::new(999_999, JobClass::Te, ResourceVec::new(16.0, 128.0, 4.0), 0, 5, 0);
-        let oracle = |id: JobId| jobs[id.0 as usize].remaining;
+        let oracle = |id: JobId| jobs[id].remaining;
         let mut rng = Pcg64::new(7);
         r.bench(&format!("fitgpp scan @{n} running"), 10, 50, || {
             let ctx = PolicyCtx {

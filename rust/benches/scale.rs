@@ -1,0 +1,85 @@
+//! Streaming scale bench: replay a million-job institution trace through
+//! the streaming simulator and record throughput (jobs/sec, simulated
+//! minutes/sec) and the peak resident live set to `BENCH_scale.json`.
+//!
+//! This is the headline number for the streaming layer: total jobs are
+//! *not* materialized anywhere — the trace is generated on the fly by
+//! [`InstitutionSource`] and every completed job retires into the
+//! mergeable metrics sink — so the run's resident job state is bounded by
+//! the live set (asserted here via the high-water counter, not RSS).
+//!
+//! Scale knobs: `FITGPP_SCALE_JOBS` (default 1_000_000), `FITGPP_SEED`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::benchkit::env_usize;
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::util::json::Json;
+use fitgpp::workload::trace::InstitutionSource;
+use std::time::Instant;
+
+fn main() {
+    let jobs = env_usize("FITGPP_SCALE_JOBS", 1_000_000);
+    let seed = env_usize("FITGPP_SEED", 9) as u64;
+    let policy = PolicyKind::FitGpp { s: 4.0, p_max: Some(1) };
+    println!("scale: streaming {jobs} institution-trace jobs under {}", policy.name());
+
+    let mut cfg = SimConfig::new(ClusterSpec::pfn(), policy);
+    cfg.seed = seed;
+    cfg.record_jobs = false; // the point: no O(total-jobs) record vector
+    let mut source = InstitutionSource::new(seed, jobs);
+
+    let t0 = Instant::now();
+    let res = Simulator::new(cfg).run_source(&mut source);
+    let wall = t0.elapsed().as_secs_f64();
+
+    assert_eq!(res.metrics.jobs_seen, jobs as u64, "every job must be observed");
+    assert_eq!(res.unfinished, 0, "drain mode completes everything");
+    assert!(
+        res.peak_live < jobs,
+        "peak live set {} must be bounded by the live set, not total jobs",
+        res.peak_live
+    );
+
+    let sd = res.slowdown_report();
+    let jobs_per_sec = jobs as f64 / wall.max(1e-9);
+    let sim_minutes_per_sec = res.makespan as f64 / wall.max(1e-9);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "streamed {jobs} jobs in {wall:.1}s: {jobs_per_sec:.0} jobs/sec, {sim_minutes_per_sec:.0} simulated min/sec\n"
+    ));
+    out.push_str(&format!(
+        "peak live set: {} jobs ({:.3}% of total); makespan {} min ({:.1} simulated days)\n",
+        res.peak_live,
+        100.0 * res.peak_live as f64 / jobs as f64,
+        res.makespan,
+        res.makespan as f64 / 1440.0
+    ));
+    out.push_str(&format!(
+        "sketch-backed slowdowns: TE p50 {:.2} p95 {:.2} p99 {:.2} | BE p50 {:.2} p95 {:.2} p99 {:.2}\n",
+        sd.te.p50, sd.te.p95, sd.te.p99, sd.be.p50, sd.be.p95, sd.be.p99
+    ));
+    common::save_results("scale", &out);
+
+    common::save_results_json(
+        "scale",
+        &Json::obj(vec![
+            ("jobs", Json::num(jobs as f64)),
+            ("seed", Json::num(seed as f64)),
+            ("policy", Json::str(&policy.name())),
+            ("wall_sec", Json::num(wall)),
+            ("jobs_per_sec", Json::num(jobs_per_sec)),
+            ("sim_minutes_per_sec", Json::num(sim_minutes_per_sec)),
+            ("peak_live", Json::num(res.peak_live as f64)),
+            ("makespan", Json::num(res.makespan as f64)),
+            ("unfinished", Json::num(res.unfinished as f64)),
+            (
+                "slowdown",
+                Json::obj(vec![("te", sd.te.to_json()), ("be", sd.be.to_json())]),
+            ),
+        ]),
+    );
+}

@@ -1,0 +1,241 @@
+//! The resident job table: a slab with a free list, keyed by [`JobId`].
+//!
+//! The streaming simulator (see [`sim`](crate::sim)) keeps only *live* jobs
+//! resident: a job is inserted when its arrival is pulled from the
+//! [`ArrivalSource`](crate::workload::source::ArrivalSource) and removed
+//! ("retired") the tick it completes, with its outcome folded into a
+//! metrics sink. Resident state is therefore O(live jobs), not
+//! O(total jobs) — the property that opens year-scale and million-job
+//! traces (`peak_live` is the high-water counter the scale bench and CI
+//! smoke assert on).
+//!
+//! Retired slots go on a free list and are reused, so the slab does not
+//! grow past the live-set high-water mark. The id → slot index is a dense
+//! `Vec<u32>` (ids are assigned densely in submission order by every
+//! workload source); at 4 bytes per job ever seen it is negligible next to
+//! the ~200-byte `Job` records the slab avoids keeping.
+//!
+//! Lookups of retired or not-yet-inserted ids return `None` from
+//! [`JobTable::get`] / [`JobTable::epoch_of`] — the
+//! [`EventClock`](crate::sched::clock::EventClock) relies on this to treat
+//! events predicted for retired jobs as stale.
+
+use crate::job::{Job, JobId};
+
+const ABSENT: u32 = u32::MAX;
+
+/// Slab of live jobs with O(1) insert/lookup/retire by [`JobId`].
+#[derive(Debug, Default)]
+pub struct JobTable {
+    /// Slab slots; `None` = free (on the free list).
+    slots: Vec<Option<Job>>,
+    /// Indices of free slots, reused LIFO.
+    free: Vec<u32>,
+    /// Job id → slot index (`ABSENT` when not resident).
+    slot_of: Vec<u32>,
+    /// Jobs currently resident.
+    live: usize,
+    /// High-water mark of `live` — the counter the scale bench asserts on.
+    peak_live: usize,
+    /// Total jobs ever inserted.
+    inserted: u64,
+}
+
+impl JobTable {
+    /// An empty table.
+    pub fn new() -> Self {
+        JobTable::default()
+    }
+
+    /// Build a table holding `jobs` (tests and small fixed workloads).
+    pub fn from_jobs(jobs: Vec<Job>) -> Self {
+        let mut t = JobTable::new();
+        for j in jobs {
+            t.insert(j);
+        }
+        t
+    }
+
+    /// Insert a job. Panics (debug) if the id is already resident.
+    pub fn insert(&mut self, job: Job) {
+        let id = job.id().0 as usize;
+        if id >= self.slot_of.len() {
+            self.slot_of.resize(id + 1, ABSENT);
+        }
+        debug_assert_eq!(self.slot_of[id], ABSENT, "{} inserted twice", job.id());
+        let slot = match self.free.pop() {
+            Some(s) => s as usize,
+            None => {
+                self.slots.push(None);
+                self.slots.len() - 1
+            }
+        };
+        self.slots[slot] = Some(job);
+        self.slot_of[id] = slot as u32;
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        self.inserted += 1;
+    }
+
+    /// Retire a job: remove it and free its slot for reuse. Panics if the
+    /// id is not resident.
+    pub fn remove(&mut self, id: JobId) -> Job {
+        let slot = self.slot_of[id.0 as usize];
+        assert_ne!(slot, ABSENT, "{id} not resident");
+        self.slot_of[id.0 as usize] = ABSENT;
+        self.free.push(slot);
+        self.live -= 1;
+        self.slots[slot as usize].take().expect("occupied slot")
+    }
+
+    /// Shared view of a resident job, or `None` if retired / never seen.
+    pub fn get(&self, id: JobId) -> Option<&Job> {
+        let slot = *self.slot_of.get(id.0 as usize)?;
+        if slot == ABSENT {
+            return None;
+        }
+        self.slots[slot as usize].as_ref()
+    }
+
+    /// Mutable view of a resident job.
+    pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
+        let slot = *self.slot_of.get(id.0 as usize)?;
+        if slot == ABSENT {
+            return None;
+        }
+        self.slots[slot as usize].as_mut()
+    }
+
+    /// Epoch of a resident job; `None` marks the id's clock entries stale
+    /// (retired jobs have no future events).
+    pub fn epoch_of(&self, id: JobId) -> Option<u64> {
+        self.get(id).map(|j| j.epoch)
+    }
+
+    /// Is `id` currently resident?
+    pub fn contains(&self, id: JobId) -> bool {
+        self.get(id).is_some()
+    }
+
+    /// Number of resident jobs.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark of the resident set over the table's lifetime.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Total jobs ever inserted (live + retired).
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    /// True when no job is resident.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate the resident jobs in slot order (deterministic for a given
+    /// insert/retire sequence, *not* id order).
+    pub fn iter(&self) -> impl Iterator<Item = &Job> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+}
+
+impl std::ops::Index<JobId> for JobTable {
+    type Output = Job;
+
+    fn index(&self, id: JobId) -> &Job {
+        self.get(id)
+            .unwrap_or_else(|| panic!("{id} not resident in the job table"))
+    }
+}
+
+impl std::ops::IndexMut<JobId> for JobTable {
+    fn index_mut(&mut self, id: JobId) -> &mut Job {
+        self.get_mut(id)
+            .unwrap_or_else(|| panic!("{id} not resident in the job table"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobClass, JobSpec};
+    use crate::resources::ResourceVec;
+
+    fn job(id: u32) -> Job {
+        Job::new(JobSpec::new(
+            id,
+            JobClass::Be,
+            ResourceVec::new(1.0, 1.0, 0.0),
+            0,
+            10,
+            2,
+        ))
+    }
+
+    #[test]
+    fn insert_lookup_remove_roundtrip() {
+        let mut t = JobTable::new();
+        t.insert(job(0));
+        t.insert(job(1));
+        assert_eq!(t.live(), 2);
+        assert!(t.contains(JobId(0)));
+        assert_eq!(t[JobId(1)].id(), JobId(1));
+        let j = t.remove(JobId(0));
+        assert_eq!(j.id(), JobId(0));
+        assert!(!t.contains(JobId(0)));
+        assert!(t.get(JobId(0)).is_none());
+        assert_eq!(t.live(), 1);
+        assert_eq!(t.inserted(), 2);
+    }
+
+    #[test]
+    fn slots_are_reused_and_peak_tracks_high_water() {
+        let mut t = JobTable::new();
+        // Interleave insert/remove: the slab must not grow past the peak
+        // live set.
+        for i in 0..100u32 {
+            t.insert(job(i));
+            if i >= 3 {
+                t.remove(JobId(i - 3));
+            }
+        }
+        assert_eq!(t.peak_live(), 4);
+        assert_eq!(t.slots.len(), 4, "slab bounded by peak live set");
+        assert_eq!(t.live(), 4);
+        assert_eq!(t.inserted(), 100);
+    }
+
+    #[test]
+    fn retired_ids_report_no_epoch() {
+        let mut t = JobTable::new();
+        t.insert(job(7));
+        assert_eq!(t.epoch_of(JobId(7)), Some(0));
+        t[JobId(7)].epoch += 3;
+        assert_eq!(t.epoch_of(JobId(7)), Some(3));
+        t.remove(JobId(7));
+        assert_eq!(t.epoch_of(JobId(7)), None);
+        assert_eq!(t.epoch_of(JobId(999)), None, "never-seen id");
+    }
+
+    #[test]
+    fn iter_visits_exactly_the_live_set() {
+        let mut t = JobTable::from_jobs(vec![job(0), job(1), job(2)]);
+        t.remove(JobId(1));
+        let ids: Vec<u32> = t.iter().map(|j| j.id().0).collect();
+        assert_eq!(ids.len(), 2);
+        assert!(ids.contains(&0) && ids.contains(&2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn indexing_a_retired_job_panics() {
+        let mut t = JobTable::from_jobs(vec![job(0)]);
+        t.remove(JobId(0));
+        let _ = &t[JobId(0)];
+    }
+}

@@ -51,6 +51,7 @@ pub mod benchkit;
 pub mod cluster;
 pub mod config;
 pub mod job;
+pub mod job_table;
 pub mod live;
 pub mod metrics;
 pub mod queue;
@@ -69,14 +70,19 @@ pub mod xla;
 pub mod prelude {
     pub use crate::cluster::{Cluster, ClusterSpec, NodeId};
     pub use crate::job::{Job, JobClass, JobId, JobSpec, JobState};
-    pub use crate::metrics::{Percentiles, SlowdownReport};
+    pub use crate::job_table::JobTable;
+    pub use crate::metrics::{Percentiles, SlowdownReport, StreamingMetrics};
     pub use crate::resources::ResourceVec;
     pub use crate::sched::policy::PolicyKind;
     pub use crate::sim::{SimConfig, SimEngine, SimResult, Simulator};
     pub use crate::stats::rng::Pcg64;
+    pub use crate::stats::sketch::QuantileSketch;
     pub use crate::sweep::{SweepResult, SweepSpec};
     pub use crate::workload::{
-        synthetic::SyntheticWorkload, trace::Trace, Workload,
+        source::{ArrivalSource, ClosedLoopSource, WorkloadSource},
+        synthetic::{SyntheticSource, SyntheticWorkload},
+        trace::{CsvStreamSource, InstitutionSource, Trace},
+        Workload,
     };
 }
 

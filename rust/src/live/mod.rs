@@ -13,6 +13,7 @@
 //! reported so the overhead is visible).
 
 use crate::job::{Job, JobClass, JobId, JobState};
+use crate::job_table::JobTable;
 use crate::runtime::{self, Checkpoint, Engine, Manifest, Trainer};
 use crate::sched::policy::PolicyKind;
 use crate::sched::{SchedConfig, Scheduler};
@@ -179,7 +180,9 @@ impl LiveCluster {
     /// Run `workload` live. Returns when every job has completed.
     pub fn run(&self, workload: &Workload) -> Result<LiveReport> {
         let wall0 = Instant::now();
-        let mut jobs: Vec<Job> = workload.jobs.iter().cloned().map(Job::new).collect();
+        let specs = workload.jobs.clone();
+        let mut jobs =
+            JobTable::from_jobs(specs.iter().cloned().map(Job::new).collect());
         let mut sched = Scheduler::new(&self.cfg.cluster, SchedConfig::new(self.cfg.policy));
         let log: Arc<Mutex<SharedLog>> = Arc::new(Mutex::new(SharedLog::default()));
         let mut workers: HashMap<JobId, WorkerHandle> = HashMap::new();
@@ -189,8 +192,8 @@ impl LiveCluster {
         loop {
             let tick_start = Instant::now();
             let mut arrivals = Vec::new();
-            while next_arrival < jobs.len() && jobs[next_arrival].spec.submit == now {
-                arrivals.push(jobs[next_arrival].id());
+            while next_arrival < specs.len() && specs[next_arrival].submit == now {
+                arrivals.push(specs[next_arrival].id);
                 next_arrival += 1;
             }
             let out = sched.tick(now, &mut jobs, &arrivals);
@@ -223,7 +226,7 @@ impl LiveCluster {
             }
 
             now += 1;
-            let all_submitted = next_arrival >= jobs.len();
+            let all_submitted = next_arrival >= specs.len();
             if all_submitted && sched.idle() {
                 break;
             }
@@ -244,6 +247,10 @@ impl LiveCluster {
         }
 
         debug_assert!(jobs.iter().all(|j| j.state == JobState::Done));
+        let records = specs
+            .iter()
+            .map(|s| crate::sim::JobRecord::from_job(&jobs[s.id]))
+            .collect();
         let log = Arc::try_unwrap(log)
             .map_err(|_| anyhow::anyhow!("worker still holds log"))?
             .into_inner()
@@ -262,7 +269,7 @@ impl LiveCluster {
             wall: wall0.elapsed(),
             losses: log.losses,
             events: log.events,
-            records: jobs.iter().map(crate::sim::JobRecord::from_job_public).collect(),
+            records,
             total_steps,
         })
     }

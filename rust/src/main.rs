@@ -7,6 +7,9 @@
 //! fitgpp sweep    --policies fifo,lrtp,rand,fitgpp:s=4,p=1 --seeds 100,101,102,103
 //! fitgpp generate --jobs 4096 --out trace.csv
 //! fitgpp replay   --trace trace.csv --policy lrtp
+//! fitgpp replay   --trace big.csv --stream --max-live 20000   # O(live-set) memory
+//! fitgpp simulate --stream --jobs 1000000          # stream the §4.2 generator
+//! fitgpp simulate --closed-loop --users 64 --trials 32        # TE trial-and-error loop
 //! fitgpp live     --policy fitgpp:s=4,p=1 --jobs 12
 //! fitgpp config   --dump                           # print default config JSON
 //! ```
@@ -17,11 +20,17 @@ use fitgpp::config::ExperimentConfig;
 use fitgpp::live::{LiveCluster, LiveConfig};
 use fitgpp::metrics::{slowdown_table, SlowdownReport};
 use fitgpp::sched::policy::PolicyKind;
-use fitgpp::sim::{SimConfig, SimEngine, Simulator};
+use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
 use fitgpp::sweep::{compare_on, SweepSpec};
 use fitgpp::util::cli::Cli;
-use fitgpp::workload::{synthetic::SyntheticWorkload, trace::Trace, Workload};
+use fitgpp::workload::{
+    source::{ClosedLoopParams, ClosedLoopSource},
+    synthetic::SyntheticWorkload,
+    trace::{CsvStreamSource, Trace},
+    Workload,
+};
 use std::path::Path;
+use std::time::Instant;
 
 fn main() {
     if let Err(e) = run() {
@@ -60,11 +69,11 @@ fn print_help() {
     println!(
         "fitgpp — low-latency job scheduling with preemption (FitGpp)\n\n\
          SUBCOMMANDS:\n\
-         \x20 simulate   run one policy on a synthetic workload\n\
+         \x20 simulate   run one policy on a synthetic workload (--stream / --closed-loop)\n\
          \x20 compare    run FIFO/LRTP/RAND/FitGpp in parallel, print the Table-1 layout\n\
          \x20 sweep      run a policy x te-ratio x gp-scale x seed grid on all cores\n\
          \x20 generate   write a synthetic workload as a CSV trace\n\
-         \x20 replay     replay a CSV trace under a policy\n\
+         \x20 replay     replay a CSV trace under a policy (--stream for O(live-set) memory)\n\
          \x20 live       drive real PJRT training jobs under the scheduler\n\
          \x20 config     print the default experiment config JSON\n\n\
          Run `fitgpp <subcommand> --help` for options."
@@ -110,9 +119,100 @@ fn build(args: &fitgpp::util::cli::Args) -> Result<(ExperimentConfig, Workload)>
     Ok((cfg, wl))
 }
 
+/// Print a streamed run: sketch-backed table plus live-set/throughput
+/// accounting, optionally enforcing a live-set ceiling.
+fn report_streamed(
+    res: &SimResult,
+    wall_sec: f64,
+    max_live: Option<usize>,
+    json_out: Option<&str>,
+) -> Result<()> {
+    println!("{}", res.summary_table());
+    let jobs = res.metrics.jobs_seen;
+    println!(
+        "streamed {jobs} jobs in {wall_sec:.2}s ({:.0} jobs/sec) | peak live set {} | makespan {} min | unfinished {}",
+        jobs as f64 / wall_sec.max(1e-9),
+        res.peak_live,
+        res.makespan,
+        res.unfinished
+    );
+    if let Some(cap) = max_live {
+        if res.peak_live > cap {
+            bail!("peak live set {} exceeded --max-live {cap}", res.peak_live);
+        }
+        println!("live-set bound ok: {} <= {cap}", res.peak_live);
+    }
+    if let Some(path) = json_out {
+        std::fs::write(path, res.to_json().to_pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn simulate(argv: Vec<String>) -> Result<()> {
-    let cli = common_cli("fitgpp simulate", "run one policy on a synthetic workload");
+    let cli = common_cli("fitgpp simulate", "run one policy on a synthetic workload")
+        .flag("stream", "stream the workload generator (O(live-set) memory, sketch-backed percentiles)")
+        .flag("closed-loop", "closed-loop arrivals: users resubmit after completion + think time")
+        .opt("users", Some("64"), "closed-loop: concurrent users")
+        .opt("trials", Some("32"), "closed-loop: trials per user")
+        .opt("think", Some("10"), "closed-loop: mean think time (minutes)");
     let args = parse_or_exit(&cli, argv);
+
+    if args.has("closed-loop") {
+        let users = args.get_usize("users", 64);
+        let trials = args.get_usize("trials", 32);
+        if users == 0 || trials == 0 {
+            bail!("--users and --trials must be positive");
+        }
+        let mut params = ClosedLoopParams::demo(users, trials as u32);
+        if let Some(v) = args.get("te-fraction") {
+            params.te_fraction = v.parse::<f64>().context("bad --te-fraction")?.clamp(0.0, 1.0);
+        }
+        params.think_mean = args.get_f64("think", 10.0);
+        let mut source = ClosedLoopSource::new(params, args.get_u64("seed", 7));
+        let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
+        let mut cfg = SimConfig::new(
+            ClusterSpec::homogeneous(
+                args.get_usize("nodes", 84),
+                fitgpp::resources::ResourceVec::pfn_node(),
+            ),
+            policy,
+        );
+        cfg.seed = args.get_u64("seed", 7);
+        cfg.record_jobs = false;
+        eprintln!(
+            "closed loop: {} users x {} trials, think ~{} min; policy {}",
+            args.get_usize("users", 64),
+            args.get_usize("trials", 32),
+            args.get_f64("think", 10.0),
+            policy.name()
+        );
+        let t0 = Instant::now();
+        let res = Simulator::new(cfg).run_source(&mut source);
+        return report_streamed(&res, t0.elapsed().as_secs_f64(), None, args.get("json-out"));
+    }
+
+    if args.has("stream") {
+        let params = SyntheticWorkload::paper_section_4_2(args.get_u64("seed", 7))
+            .with_cluster(ClusterSpec::homogeneous(
+                args.get_usize("nodes", 84),
+                fitgpp::resources::ResourceVec::pfn_node(),
+            ))
+            .with_num_jobs(args.get_usize("jobs", 8192))
+            .with_te_fraction(args.get_f64("te-fraction", 0.3))
+            .with_target_load(args.get_f64("load", 2.0))
+            .with_gp_scale(args.get_f64("gp-scale", 1.0));
+        let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
+        let mut cfg = SimConfig::new(params.cluster.clone(), policy);
+        cfg.seed = params.seed;
+        cfg.record_jobs = false;
+        eprintln!("streaming {} §4.2 jobs; policy {}", params.num_jobs, policy.name());
+        let t0 = Instant::now();
+        let mut source = params.stream();
+        let res = Simulator::new(cfg).run_source(&mut source);
+        return report_streamed(&res, t0.elapsed().as_secs_f64(), None, args.get("json-out"));
+    }
+
     let (cfg, wl) = build(&args)?;
     eprintln!(
         "workload: {} jobs ({:.1}% TE), span {} min; policy {}",
@@ -303,18 +403,41 @@ fn generate(argv: Vec<String>) -> Result<()> {
 
 fn replay(argv: Vec<String>) -> Result<()> {
     let cli = common_cli("fitgpp replay", "replay a CSV trace under a policy")
-        .opt("trace", None, "input CSV trace path (required)");
+        .opt("trace", None, "input CSV trace path (required)")
+        .flag("stream", "stream the trace through a buffered reader (O(live-set) memory)")
+        .opt("max-live", None, "fail if the peak resident live set exceeds this (streaming smoke checks)");
     let args = parse_or_exit(&cli, argv);
     let path = args.get("trace").context("--trace is required")?;
-    let wl = Trace::read_csv(Path::new(path))?;
     let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
     let nodes = args.get_usize("nodes", 84);
-    let cfg = SimConfig::new(
+    let mut cfg = SimConfig::new(
         ClusterSpec::homogeneous(nodes, fitgpp::resources::ResourceVec::pfn_node()),
         policy,
     );
+    let max_live = match args.get("max-live") {
+        Some(v) => Some(v.parse::<usize>().context("bad --max-live")?),
+        None => None,
+    };
+
+    if args.has("stream") {
+        cfg.record_jobs = false;
+        let mut source = CsvStreamSource::open(Path::new(path))?;
+        let t0 = Instant::now();
+        let res = Simulator::new(cfg).run_source(&mut source);
+        if let Some(e) = source.error() {
+            bail!("trace stream aborted after {} rows: {e:#}", source.rows_yielded());
+        }
+        return report_streamed(&res, t0.elapsed().as_secs_f64(), max_live, args.get("json-out"));
+    }
+
+    let wl = Trace::read_csv(Path::new(path))?;
     let res = Simulator::new(cfg).run(&wl);
     println!("{}", res.summary_table());
+    if let Some(cap) = max_live {
+        if res.peak_live > cap {
+            bail!("peak live set {} exceeded --max-live {cap}", res.peak_live);
+        }
+    }
     if let Some(p) = args.get("json-out") {
         std::fs::write(p, res.to_json().to_pretty())?;
     }

@@ -1,10 +1,21 @@
 //! Evaluation metrics: slowdown-rate percentiles (Tables 1 & 5),
 //! re-scheduling intervals (Table 2), and preemption statistics
 //! (Tables 3 & 4).
+//!
+//! Two backends feed the same report types:
+//!
+//! * **Exact** — computed from pooled `JobRecord`s with one shared sort
+//!   per sample (the `record_jobs` mode; the equivalence oracle).
+//! * **Streaming** — [`StreamingMetrics`], a mergeable sink the simulator
+//!   folds each *retiring* job into: per-class
+//!   [`QuantileSketch`]es plus exact counters, O(1) memory however long
+//!   the run. Sweep cells merge these sinks instead of pooling raw
+//!   slowdown vectors.
 
 use crate::job::JobClass;
-use crate::sim::SimResult;
-use crate::stats::summary::percentiles;
+use crate::sim::{JobRecord, SimResult};
+use crate::stats::sketch::QuantileSketch;
+use crate::stats::summary::{percentile_sorted, percentiles, sort_ascending};
 use crate::util::json::Json;
 use crate::util::table::{sig3, Table};
 
@@ -24,8 +35,31 @@ impl Percentiles {
         if xs.is_empty() {
             return Percentiles { p50: f64::NAN, p95: f64::NAN, p99: f64::NAN };
         }
-        let v = percentiles(xs, &[50.0, 95.0, 99.0]);
-        Percentiles { p50: v[0], p95: v[1], p99: v[2] }
+        Self::of_sorted(&sort_ascending(xs))
+    }
+
+    /// The triple over an already-sorted sample — the shared-sort path for
+    /// callers that compute several reports from one sample.
+    pub fn of_sorted(sorted: &[f64]) -> Percentiles {
+        if sorted.is_empty() {
+            return Percentiles { p50: f64::NAN, p95: f64::NAN, p99: f64::NAN };
+        }
+        Percentiles {
+            p50: percentile_sorted(sorted, 50.0),
+            p95: percentile_sorted(sorted, 95.0),
+            p99: percentile_sorted(sorted, 99.0),
+        }
+    }
+
+    /// The triple estimated from a streaming sketch (no sort, no samples
+    /// held; ≤ ~0.5% relative error). NaN on an empty sketch, matching
+    /// [`Percentiles::of`] on an empty slice.
+    pub fn from_sketch(s: &QuantileSketch) -> Percentiles {
+        Percentiles {
+            p50: s.percentile(50.0),
+            p95: s.percentile(95.0),
+            p99: s.percentile(99.0),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -96,6 +130,139 @@ impl PreemptionReport {
             fraction_preempted: res.preempted_fraction(),
             hist: res.preemption_histogram(),
         }
+    }
+}
+
+/// A mergeable streaming metrics sink: everything the report types need,
+/// accumulated one retiring job at a time in O(1) memory.
+///
+/// The simulator folds each job into the sink the tick it completes (or at
+/// cut-off, for unfinished jobs); with `record_jobs` off this is the *only*
+/// per-job state the run keeps. Sinks from different runs/cells
+/// [`merge`](StreamingMetrics::merge) associatively and commutatively, so
+/// the sweep layer pools across seeds by merging sketches instead of
+/// concatenating and re-sorting raw slowdown vectors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamingMetrics {
+    /// Slowdown sketch over completed TE jobs.
+    pub te_slowdown: QuantileSketch,
+    /// Slowdown sketch over completed BE jobs.
+    pub be_slowdown: QuantileSketch,
+    /// Re-scheduling intervals (vacate → restart), all jobs pooled.
+    pub intervals: QuantileSketch,
+    /// Jobs observed (completed + unfinished).
+    pub jobs_seen: u64,
+    /// Jobs that completed.
+    pub completed: u64,
+    /// Jobs unfinished at cut-off.
+    pub unfinished: u64,
+    /// Jobs preempted exactly 1 / exactly 2 / ≥ 3 times (Table 4
+    /// numerators).
+    pub preempt_hist: [u64; 3],
+    /// Jobs preempted at least once (Table 3 numerator).
+    pub preempted: u64,
+}
+
+impl StreamingMetrics {
+    /// An empty sink.
+    pub fn new() -> Self {
+        StreamingMetrics::default()
+    }
+
+    /// Fold one job's outcome in.
+    pub fn observe(&mut self, r: &JobRecord) {
+        self.jobs_seen += 1;
+        match r.preemptions {
+            0 => {}
+            1 => {
+                self.preempt_hist[0] += 1;
+                self.preempted += 1;
+            }
+            2 => {
+                self.preempt_hist[1] += 1;
+                self.preempted += 1;
+            }
+            _ => {
+                self.preempt_hist[2] += 1;
+                self.preempted += 1;
+            }
+        }
+        for iv in &r.resched_intervals {
+            self.intervals.insert(*iv as f64);
+        }
+        if r.finished_at.is_some() {
+            self.completed += 1;
+            match r.class {
+                JobClass::Te => self.te_slowdown.insert(r.slowdown),
+                JobClass::Be => self.be_slowdown.insert(r.slowdown),
+            }
+        } else {
+            self.unfinished += 1;
+        }
+    }
+
+    /// Fold another sink in (order-independent for every reported value).
+    pub fn merge(&mut self, other: &StreamingMetrics) {
+        self.te_slowdown.merge(&other.te_slowdown);
+        self.be_slowdown.merge(&other.be_slowdown);
+        self.intervals.merge(&other.intervals);
+        self.jobs_seen += other.jobs_seen;
+        self.completed += other.completed;
+        self.unfinished += other.unfinished;
+        for (a, b) in self.preempt_hist.iter_mut().zip(&other.preempt_hist) {
+            *a += *b;
+        }
+        self.preempted += other.preempted;
+    }
+
+    /// Sketch-backed slowdown report (Table 1 / Table 5 row).
+    pub fn slowdown_report(&self) -> SlowdownReport {
+        SlowdownReport {
+            te: Percentiles::from_sketch(&self.te_slowdown),
+            be: Percentiles::from_sketch(&self.be_slowdown),
+        }
+    }
+
+    /// Sketch-backed re-scheduling-interval report (Table 2 row).
+    pub fn intervals_report(&self) -> IntervalsReport {
+        IntervalsReport {
+            p50: self.intervals.percentile(50.0),
+            p75: self.intervals.percentile(75.0),
+            p95: self.intervals.percentile(95.0),
+            p99: self.intervals.percentile(99.0),
+            count: self.intervals.count() as usize,
+        }
+    }
+
+    /// Exact preemption report (counters, not sketches — identical to the
+    /// record-based computation).
+    pub fn preemption_report(&self) -> PreemptionReport {
+        let n = self.jobs_seen.max(1) as f64;
+        PreemptionReport {
+            fraction_preempted: if self.jobs_seen == 0 {
+                0.0
+            } else {
+                self.preempted as f64 / n
+            },
+            hist: [
+                self.preempt_hist[0] as f64 / n,
+                self.preempt_hist[1] as f64 / n,
+                self.preempt_hist[2] as f64 / n,
+            ],
+        }
+    }
+
+    /// Machine-readable dump.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs_seen", Json::num(self.jobs_seen as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("unfinished", Json::num(self.unfinished as f64)),
+            ("te_slowdown", self.te_slowdown.to_json()),
+            ("be_slowdown", self.be_slowdown.to_json()),
+            ("intervals", self.intervals.to_json()),
+            ("preempted", Json::num(self.preempted as f64)),
+        ])
     }
 }
 

@@ -19,14 +19,22 @@
 //! job's [`epoch`](crate::job::Job::epoch) — a counter bumped on every
 //! lifecycle transition. An entry whose stamp no longer matches the job's
 //! current epoch is *stale* and is discarded the first time it reaches the
-//! top of its heap. Live entries are exact: the scheduler pushes them only
-//! at transitions, and a job's counters (remaining time, grace left) burn
-//! down one minute per tick from that point, so the stamped minute is
-//! precisely when the counter reaches zero.
+//! top of its heap. A job that has been *retired* from the
+//! [`JobTable`] (completed and folded into a metrics sink by the streaming
+//! simulator) has no epoch at all — [`JobTable::epoch_of`] returns `None`
+//! — and any leftover entries for it are likewise stale. Live entries are
+//! exact: the scheduler pushes them only at transitions, and a job's
+//! counters (remaining time, grace left) burn down one minute per tick
+//! from that point, so the stamped minute is precisely when the counter
+//! reaches zero.
 //!
 //! Arrivals need no epochs — submission times are immutable workload data.
+//! Under the streaming simulator only arrivals inside the bounded
+//! lookahead window are resident here; the earlier ones live in the
+//! [`ArrivalSource`](crate::workload::source::ArrivalSource) until pulled.
 
-use crate::job::{Job, JobId};
+use crate::job::JobId;
+use crate::job_table::JobTable;
 use crate::Minutes;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -48,10 +56,15 @@ pub struct EventClock {
     arrivals: BinaryHeap<Reverse<(Minutes, u32)>>,
 }
 
+/// Is the entry's prediction still live? Retired jobs have no epoch.
+fn is_live(jobs: &JobTable, id: u32, epoch: u64) -> bool {
+    jobs.epoch_of(JobId(id)) == Some(epoch)
+}
+
 /// Discard stale heads, then report the head's minute without popping it.
-fn live_peek(heap: &mut BinaryHeap<Reverse<Entry>>, jobs: &[Job]) -> Option<Minutes> {
+fn live_peek(heap: &mut BinaryHeap<Reverse<Entry>>, jobs: &JobTable) -> Option<Minutes> {
     while let Some(Reverse((at, id, epoch))) = heap.peek().copied() {
-        if jobs[id as usize].epoch == epoch {
+        if is_live(jobs, id, epoch) {
             return Some(at);
         }
         heap.pop();
@@ -60,14 +73,14 @@ fn live_peek(heap: &mut BinaryHeap<Reverse<Entry>>, jobs: &[Job]) -> Option<Minu
 }
 
 /// Pop every entry scheduled at or before `now`; true iff any was live.
-fn drain_due(heap: &mut BinaryHeap<Reverse<Entry>>, now: Minutes, jobs: &[Job]) -> bool {
+fn drain_due(heap: &mut BinaryHeap<Reverse<Entry>>, now: Minutes, jobs: &JobTable) -> bool {
     let mut any = false;
     while let Some(Reverse((at, id, epoch))) = heap.peek().copied() {
         if at > now {
             break;
         }
         heap.pop();
-        if jobs[id as usize].epoch == epoch {
+        if is_live(jobs, id, epoch) {
             debug_assert_eq!(at, now, "live event for {id} missed its minute");
             any = true;
         }
@@ -92,7 +105,8 @@ impl EventClock {
         self.grace_expiries.push(Reverse((at, job.0, epoch)));
     }
 
-    /// Register a workload arrival (done once per job at run setup).
+    /// Register a workload arrival (the streaming simulator pushes each
+    /// arrival when it pulls the job from its source).
     pub fn push_arrival(&mut self, at: Minutes, job: JobId) {
         self.arrivals.push(Reverse((at, job.0)));
     }
@@ -122,7 +136,7 @@ impl EventClock {
     /// leftovers). Returns true iff a *live* completion or grace expiry is
     /// due — i.e. the scheduler's completion/expiry scan has work to do
     /// this tick.
-    pub fn take_due(&mut self, now: Minutes, jobs: &[Job]) -> bool {
+    pub fn take_due(&mut self, now: Minutes, jobs: &JobTable) -> bool {
         // `|` not `||`: both heaps must drain even when the first had work.
         drain_due(&mut self.completions, now, jobs) | drain_due(&mut self.grace_expiries, now, jobs)
     }
@@ -130,7 +144,7 @@ impl EventClock {
     /// Absolute minute of the next live internal event (completion or
     /// grace expiry), or `None` when nothing occupies resources. Stale
     /// heads are discarded on the way.
-    pub fn next_internal_at(&mut self, jobs: &[Job]) -> Option<Minutes> {
+    pub fn next_internal_at(&mut self, jobs: &JobTable) -> Option<Minutes> {
         let c = live_peek(&mut self.completions, jobs);
         let g = live_peek(&mut self.grace_expiries, jobs);
         match (c, g) {
@@ -155,11 +169,15 @@ impl EventClock {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::job::{JobClass, JobSpec};
+    use crate::job::{Job, JobClass, JobSpec};
     use crate::resources::ResourceVec;
 
     fn job(id: u32) -> Job {
         Job::new(JobSpec::new(id, JobClass::Be, ResourceVec::new(1.0, 1.0, 0.0), 0, 10, 2))
+    }
+
+    fn table(n: u32) -> JobTable {
+        JobTable::from_jobs((0..n).map(job).collect())
     }
 
     #[test]
@@ -180,22 +198,32 @@ mod tests {
     #[test]
     fn stale_entries_are_discarded() {
         let mut c = EventClock::new();
-        let mut jobs = vec![job(0)];
-        c.push_completion(10, JobId(0), jobs[0].epoch);
+        let mut jobs = table(1);
+        c.push_completion(10, JobId(0), jobs[JobId(0)].epoch);
         assert_eq!(c.next_internal_at(&jobs), Some(10));
         // A lifecycle transition invalidates the prediction.
-        jobs[0].epoch += 1;
+        jobs[JobId(0)].epoch += 1;
         assert_eq!(c.next_internal_at(&jobs), None);
         assert!(c.is_empty(), "stale head was discarded by the peek");
     }
 
     #[test]
+    fn retired_jobs_entries_are_stale() {
+        let mut c = EventClock::new();
+        let mut jobs = table(1);
+        c.push_completion(10, JobId(0), jobs[JobId(0)].epoch);
+        jobs.remove(JobId(0)); // streaming simulator retired it
+        assert_eq!(c.next_internal_at(&jobs), None);
+        assert!(c.is_empty());
+    }
+
+    #[test]
     fn take_due_reports_live_events_only() {
         let mut c = EventClock::new();
-        let mut jobs = vec![job(0), job(1)];
-        c.push_completion(4, JobId(0), jobs[0].epoch);
-        c.push_grace_expiry(4, JobId(1), jobs[1].epoch);
-        jobs[1].epoch += 1; // grace prediction dies
+        let mut jobs = table(2);
+        c.push_completion(4, JobId(0), jobs[JobId(0)].epoch);
+        c.push_grace_expiry(4, JobId(1), jobs[JobId(1)].epoch);
+        jobs[JobId(1)].epoch += 1; // grace prediction dies
         assert!(!c.take_due(3, &jobs), "nothing due before minute 4");
         assert!(c.take_due(4, &jobs), "live completion at 4");
         assert!(!c.take_due(4, &jobs), "events are consumed");
@@ -205,9 +233,9 @@ mod tests {
     #[test]
     fn next_internal_is_min_across_heaps() {
         let mut c = EventClock::new();
-        let jobs = vec![job(0), job(1)];
-        c.push_completion(9, JobId(0), jobs[0].epoch);
-        c.push_grace_expiry(6, JobId(1), jobs[1].epoch);
+        let jobs = table(2);
+        c.push_completion(9, JobId(0), jobs[JobId(0)].epoch);
+        c.push_grace_expiry(6, JobId(1), jobs[JobId(1)].epoch);
         assert_eq!(c.next_internal_at(&jobs), Some(6));
     }
 }

@@ -42,6 +42,7 @@
 
 use crate::cluster::{Cluster, ClusterSpec, Node, NodeId, Placement};
 use crate::job::{Job, JobId, JobState};
+use crate::job_table::JobTable;
 use crate::queue::JobQueue;
 use crate::resources::ResourceVec;
 use crate::sched::clock::EventClock;
@@ -299,10 +300,10 @@ impl Scheduler {
     /// inconsistency: fatal in debug builds, counted and skipped in release
     /// builds (a corrupt input must degrade one decision, not abort a whole
     /// sweep).
-    fn unbind_checked(&mut self, id: JobId, jobs: &[Job]) {
+    fn unbind_checked(&mut self, id: JobId, jobs: &JobTable) {
         if let Err(e) = self.cluster.unbind(id) {
             if cfg!(debug_assertions) {
-                panic!("scheduler inconsistency: {e} ({:?})", jobs[id.0 as usize].state);
+                panic!("scheduler inconsistency: {e} ({:?})", jobs.get(id).map(|j| j.state));
             }
             self.stats.internal_errors += 1;
         }
@@ -325,19 +326,19 @@ impl Scheduler {
 
     /// Total demand of queued + active jobs (the "cluster load" numerator
     /// used by the §4.2 arrival calibration).
-    pub fn outstanding_demand(&self, jobs: &[Job]) -> ResourceVec {
+    pub fn outstanding_demand(&self, jobs: &JobTable) -> ResourceVec {
         let mut d = ResourceVec::ZERO;
         for id in self.be_queue.iter().chain(self.te_queue.iter()) {
-            d += jobs[id.0 as usize].spec.demand;
+            d += jobs[id].spec.demand;
         }
         for id in &self.active {
-            d += jobs[id.0 as usize].spec.demand;
+            d += jobs[*id].spec.demand;
         }
         d
     }
 
     /// One simulated minute. `arrivals` must be sorted by submission order.
-    pub fn tick(&mut self, now: Minutes, jobs: &mut [Job], arrivals: &[JobId]) -> TickStats {
+    pub fn tick(&mut self, now: Minutes, jobs: &mut JobTable, arrivals: &[JobId]) -> TickStats {
         let mut out = TickStats::default();
         self.stats.ticks += 1;
 
@@ -350,7 +351,7 @@ impl Scheduler {
             let mut i = 0;
             while i < self.active.len() {
                 let id = self.active[i];
-                let job = &mut jobs[id.0 as usize];
+                let job = &mut jobs[id];
                 match job.state {
                     JobState::Running if job.remaining == 0 => {
                         job.complete(now);
@@ -380,7 +381,7 @@ impl Scheduler {
             // Cross-check the skip: no active job may have a due transition
             // the clock failed to predict.
             for id in &self.active {
-                let job = &jobs[id.0 as usize];
+                let job = &jobs[*id];
                 let due = match job.state {
                     JobState::Running => job.remaining == 0,
                     JobState::Draining => {
@@ -395,8 +396,8 @@ impl Scheduler {
 
         // -- 3: arrivals --------------------------------------------------
         for id in arrivals {
-            debug_assert_eq!(jobs[id.0 as usize].spec.submit, now, "arrival at wrong tick");
-            self.submit(&jobs[id.0 as usize]);
+            debug_assert_eq!(jobs[*id].spec.submit, now, "arrival at wrong tick");
+            self.submit(&jobs[*id]);
         }
 
         // -- 4: admission --------------------------------------------------
@@ -412,7 +413,7 @@ impl Scheduler {
 
         // -- 5: burn -------------------------------------------------------
         for id in &self.active {
-            let job = &mut jobs[id.0 as usize];
+            let job = &mut jobs[*id];
             match job.state {
                 JobState::Running => job.remaining -= 1,
                 JobState::Draining => {
@@ -425,7 +426,7 @@ impl Scheduler {
             }
         }
         for id in self.be_queue.iter().chain(self.te_queue.iter()) {
-            jobs[id.0 as usize].waiting += 1;
+            jobs[id].waiting += 1;
         }
 
         out
@@ -436,10 +437,10 @@ impl Scheduler {
     /// TE job whose victims drained may start while an earlier TE job is
     /// still waiting out a longer grace period. Order is still FIFO among
     /// TE jobs for placement attempts.
-    fn admit_te_lane(&mut self, now: Minutes, jobs: &mut [Job], out: &mut TickStats) {
+    fn admit_te_lane(&mut self, now: Minutes, jobs: &mut JobTable, out: &mut TickStats) {
         let waiting: Vec<JobId> = self.te_queue.iter().collect();
         for head in waiting {
-            let demand = jobs[head.0 as usize].spec.demand;
+            let demand = jobs[head].spec.demand;
             // (a) Fits somewhere (own reservation credited)?
             if let Some(node) = self.find_node_effective(&demand, Some(head)) {
                 if !self.has_reservation(head) {
@@ -462,7 +463,7 @@ impl Scheduler {
                     .map(|r| {
                         r.victims
                             .iter()
-                            .any(|v| jobs[v.0 as usize].state == JobState::Draining)
+                            .any(|v| jobs[*v].state == JobState::Draining)
                     })
                     .unwrap_or(false);
                 if still_draining {
@@ -478,9 +479,9 @@ impl Scheduler {
                     cluster: &self.cluster,
                     jobs,
                     effective_free: &eff,
-                    oracle_remaining: &|id: JobId| jobs[id.0 as usize].remaining,
+                    oracle_remaining: &|id: JobId| jobs[id].remaining,
                 };
-                self.policy.plan(&jobs[head.0 as usize].spec, &ctx, &mut self.rng)
+                self.policy.plan(&jobs[head].spec, &ctx, &mut self.rng)
             };
             let Some(plan) = plan else {
                 continue; // nothing to preempt (or non-preemptive policy)
@@ -492,7 +493,7 @@ impl Scheduler {
             // Signal victims; zero-GP victims vacate synchronously.
             let mut victims = Vec::new();
             for v in &plan.victims {
-                let job = &mut jobs[v.0 as usize];
+                let job = &mut jobs[*v];
                 job.signal_preemption();
                 self.stats.preemption_signals += 1;
                 out.preempted.push(*v);
@@ -529,16 +530,16 @@ impl Scheduler {
     }
 
     /// BE queue admission: strict FIFO, no preemption on behalf of the head.
-    fn admit_be_queue(&mut self, now: Minutes, jobs: &mut [Job], out: &mut TickStats) {
+    fn admit_be_queue(&mut self, now: Minutes, jobs: &mut JobTable, out: &mut TickStats) {
         while let Some(head) = self.be_queue.head() {
             // A job that vacated in this very scheduling round is not
             // re-admittable until the next one (the scheduler "decides
             // resource allocation at every simulated minute" — a suspend
             // and a restart cannot share one decision).
-            if jobs[head.0 as usize].last_vacated == Some(now) {
+            if jobs[head].last_vacated == Some(now) {
                 break;
             }
-            let demand = jobs[head.0 as usize].spec.demand;
+            let demand = jobs[head].spec.demand;
             match self.find_node_effective(&demand, Some(head)) {
                 Some(node) => self.place(head, node, now, jobs, out),
                 None => break, // head-of-line blocking (the FIFO principle)
@@ -546,7 +547,7 @@ impl Scheduler {
         }
     }
 
-    fn place(&mut self, id: JobId, node: NodeId, now: Minutes, jobs: &mut [Job], out: &mut TickStats) {
+    fn place(&mut self, id: JobId, node: NodeId, now: Minutes, jobs: &mut JobTable, out: &mut TickStats) {
         // Remove from whichever queue holds it (TE lane admission is
         // per-arrival, so the job may not be at the head). A job that is in
         // neither queue is an internal inconsistency (it may already be
@@ -559,7 +560,7 @@ impl Scheduler {
             return;
         }
         self.release_reservation(id);
-        let job = &mut jobs[id.0 as usize];
+        let job = &mut jobs[id];
         job.start(node, now);
         self.clock
             .push_completion(now.saturating_add(job.remaining), id, job.epoch);
@@ -611,13 +612,13 @@ impl Scheduler {
     /// is *not* visible from this state: a job that vacated in the tick
     /// just executed becomes admittable one tick later
     /// (check [`TickStats::vacated`]).
-    pub fn quiescent(&self, jobs: &[Job]) -> bool {
+    pub fn quiescent(&self, jobs: &JobTable) -> bool {
         self.te_queue.iter().all(|id| {
             self.reservations.iter().any(|r| {
                 r.te == id
                     && r.victims
                         .iter()
-                        .any(|v| jobs[v.0 as usize].state == JobState::Draining)
+                        .any(|v| jobs[*v].state == JobState::Draining)
             })
         })
     }
@@ -627,7 +628,7 @@ impl Scheduler {
     /// progress-during-grace) a draining job finishing — or `None` when no
     /// job occupies resources. A lazy heap peek on the [`EventClock`], not
     /// a job-table scan.
-    pub fn next_internal_at(&mut self, jobs: &[Job]) -> Option<Minutes> {
+    pub fn next_internal_at(&mut self, jobs: &JobTable) -> Option<Minutes> {
         self.clock.next_internal_at(jobs)
     }
 
@@ -639,7 +640,7 @@ impl Scheduler {
     /// span. The event-horizon engine establishes that precondition via
     /// [`Scheduler::quiescent`] and [`Scheduler::next_internal_at`]; debug
     /// builds re-assert it here.
-    pub fn burn_many(&mut self, dt: Minutes, jobs: &mut [Job]) {
+    pub fn burn_many(&mut self, dt: Minutes, jobs: &mut JobTable) {
         if dt == 0 {
             return;
         }
@@ -647,7 +648,7 @@ impl Scheduler {
         self.stats.fast_forwards += 1;
         self.stats.fast_forwarded_ticks += dt;
         for id in &self.active {
-            let job = &mut jobs[id.0 as usize];
+            let job = &mut jobs[*id];
             match job.state {
                 JobState::Running => {
                     debug_assert!(
@@ -683,7 +684,7 @@ impl Scheduler {
             }
         }
         for id in self.be_queue.iter().chain(self.te_queue.iter()) {
-            jobs[id.0 as usize].waiting += dt;
+            jobs[id].waiting += dt;
         }
     }
 }
@@ -698,16 +699,17 @@ mod tests {
     }
 
     /// Tiny driver: run the scheduler over `jobs` until idle (or 10k ticks).
-    fn run(policy: PolicyKind, spec: &ClusterSpec, jobs: &mut Vec<Job>) -> (Scheduler, Minutes) {
+    fn run(policy: PolicyKind, spec: &ClusterSpec, jobs: &mut JobTable) -> (Scheduler, Minutes) {
         let mut sched = Scheduler::new(spec, SchedConfig::new(policy));
         sched.paranoid = true;
         let mut now = 0;
         loop {
-            let arrivals: Vec<JobId> = jobs
+            let mut arrivals: Vec<JobId> = jobs
                 .iter()
                 .filter(|j| j.spec.submit == now)
                 .map(|j| j.id())
                 .collect();
+            arrivals.sort();
             sched.tick(now, jobs, &arrivals);
             now += 1;
             let all_submitted = jobs.iter().all(|j| j.spec.submit < now);
@@ -718,8 +720,8 @@ mod tests {
         }
     }
 
-    fn mkjobs(specs: Vec<JobSpec>) -> Vec<Job> {
-        specs.into_iter().map(Job::new).collect()
+    fn mkjobs(specs: Vec<JobSpec>) -> JobTable {
+        JobTable::from_jobs(specs.into_iter().map(Job::new).collect())
     }
 
     #[test]
@@ -727,8 +729,8 @@ mod tests {
         let spec = ClusterSpec::tiny(1);
         let mut jobs = mkjobs(vec![JobSpec::new(0, JobClass::Be, rv(4.0, 32.0, 1.0), 0, 5, 0)]);
         let (_, end) = run(PolicyKind::Fifo, &spec, &mut jobs);
-        assert_eq!(jobs[0].finished_at, Some(5));
-        assert!((jobs[0].slowdown() - 1.0).abs() < 1e-12);
+        assert_eq!(jobs[JobId(0)].finished_at, Some(5));
+        assert!((jobs[JobId(0)].slowdown() - 1.0).abs() < 1e-12);
         assert_eq!(end, 6);
     }
 
@@ -744,8 +746,8 @@ mod tests {
         ]);
         let (_, _) = run(PolicyKind::Fifo, &spec, &mut jobs);
         // Job 1 starts at 10 (after job 0), job 2 only after job 1 at 15.
-        assert_eq!(jobs[1].first_start, Some(10));
-        assert_eq!(jobs[2].first_start, Some(15));
+        assert_eq!(jobs[JobId(1)].first_start, Some(10));
+        assert_eq!(jobs[JobId(2)].first_start, Some(15));
     }
 
     #[test]
@@ -759,7 +761,7 @@ mod tests {
             JobSpec::new(2, JobClass::Te, rv(1.0, 1.0, 1.0), 1, 5, 0),
         ]);
         let (sched, _) = run(PolicyKind::FastLane, &spec, &mut jobs);
-        assert_eq!(jobs[2].first_start, Some(1), "TE starts immediately");
+        assert_eq!(jobs[JobId(2)].first_start, Some(1), "TE starts immediately");
         assert_eq!(sched.stats.preemption_signals, 0);
     }
 
@@ -779,13 +781,13 @@ mod tests {
             &mut jobs,
         );
         assert_eq!(sched.stats.preemption_signals, 1);
-        assert_eq!(jobs[1].preemptions, 1, "small job is the victim");
-        assert_eq!(jobs[0].preemptions, 0);
+        assert_eq!(jobs[JobId(1)].preemptions, 1, "small job is the victim");
+        assert_eq!(jobs[JobId(0)].preemptions, 0);
         // Signal at t=1, GP 2 burns at t=1,2 ⇒ vacate at t=3, TE starts t=3.
-        assert_eq!(jobs[2].first_start, Some(3));
+        assert_eq!(jobs[JobId(2)].first_start, Some(3));
         // Victim re-queued at top and resumed once the TE job finished (it
         // needs 8 CPUs; TE holds 4 of the 0 free... it refits when space allows).
-        assert!(jobs[1].resched_intervals.len() == 1);
+        assert!(jobs[JobId(1)].resched_intervals.len() == 1);
     }
 
     #[test]
@@ -796,8 +798,8 @@ mod tests {
             JobSpec::new(1, JobClass::Te, rv(4.0, 32.0, 1.0), 1, 5, 0),
         ]);
         let (_, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
-        assert_eq!(jobs[1].first_start, Some(1), "rewind-OK victim frees seat instantly");
-        assert_eq!(jobs[1].slowdown(), 1.0);
+        assert_eq!(jobs[JobId(1)].first_start, Some(1), "rewind-OK victim frees seat instantly");
+        assert_eq!(jobs[JobId(1)].slowdown(), 1.0);
     }
 
     #[test]
@@ -813,9 +815,9 @@ mod tests {
         let (_, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
         // Job 0 vacates at t=1 (GP 0), requeued at head, refits at t=6 once
         // the TE job is done (its 16 CPUs + 32-16 free = fits at TE end).
-        assert!(jobs[0].first_start.unwrap() < jobs[1].first_start.unwrap(),
+        assert!(jobs[JobId(0)].first_start.unwrap() < jobs[JobId(1)].first_start.unwrap(),
             "victim resumes before the younger queued job");
-        assert_eq!(jobs[0].preemptions, 1);
+        assert_eq!(jobs[JobId(0)].preemptions, 1);
     }
 
     #[test]
@@ -830,10 +832,10 @@ mod tests {
         ]);
         let (_, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: None }, &spec, &mut jobs);
         // Victim vacates at t=4 (signal t=1, GP 3). TE must start t=4.
-        assert_eq!(jobs[1].first_start, Some(4));
+        assert_eq!(jobs[JobId(1)].first_start, Some(4));
         // The small BE job fits beside the TE job (2 CPUs free) at t=4, not
         // before (node was full/draining with hold).
-        assert!(jobs[2].first_start.unwrap() >= 4);
+        assert!(jobs[JobId(2)].first_start.unwrap() >= 4);
     }
 
     #[test]
@@ -847,8 +849,8 @@ mod tests {
         ]);
         let (sched, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
         assert_eq!(sched.stats.preemption_signals, 0);
-        assert_eq!(jobs[1].first_start, Some(10));
-        assert_eq!(jobs[0].preemptions, 0);
+        assert_eq!(jobs[JobId(1)].first_start, Some(10));
+        assert_eq!(jobs[JobId(0)].preemptions, 0);
     }
 
     #[test]
@@ -862,9 +864,9 @@ mod tests {
             JobSpec::new(2, JobClass::Te, rv(32.0, 256.0, 8.0), 10, 3, 0),
         ]);
         let (_, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
-        assert_eq!(jobs[0].preemptions, 1, "P=1 ⇒ at most one preemption");
+        assert_eq!(jobs[JobId(0)].preemptions, 1, "P=1 ⇒ at most one preemption");
         // Second TE waits for the BE job to finish instead.
-        assert!(jobs[2].first_start.unwrap() > 10);
+        assert!(jobs[JobId(2)].first_start.unwrap() > 10);
     }
 
     #[test]
@@ -879,8 +881,8 @@ mod tests {
         ]);
         let (sched, _) = run(PolicyKind::Srtf, &spec, &mut jobs);
         assert!(sched.stats.preemption_signals >= 1);
-        assert_eq!(jobs[1].preemptions, 1, "short-remaining job is the victim");
-        assert_eq!(jobs[0].preemptions, 0);
+        assert_eq!(jobs[JobId(1)].preemptions, 1, "short-remaining job is the victim");
+        assert_eq!(jobs[JobId(0)].preemptions, 0);
     }
 
     #[test]
@@ -895,8 +897,8 @@ mod tests {
         ]);
         let (sched, _) = run(PolicyKind::Youngest, &spec, &mut jobs);
         assert!(sched.stats.preemption_signals >= 1);
-        assert_eq!(jobs[1].preemptions, 1, "youngest job is the victim");
-        assert_eq!(jobs[0].preemptions, 0);
+        assert_eq!(jobs[JobId(1)].preemptions, 1, "youngest job is the victim");
+        assert_eq!(jobs[JobId(0)].preemptions, 0);
     }
 
     #[test]
@@ -914,15 +916,17 @@ mod tests {
         sched.paranoid = true;
         let mut now = 0;
         while now < 100 {
-            let arrivals: Vec<JobId> = jobs.iter().filter(|j| j.spec.submit == now).map(|j| j.id()).collect();
+            let mut arrivals: Vec<JobId> =
+                jobs.iter().filter(|j| j.spec.submit == now).map(|j| j.id()).collect();
+            arrivals.sort();
             sched.tick(now, &mut jobs, &arrivals);
             now += 1;
             if jobs.iter().all(|j| j.state == JobState::Done) {
                 break;
             }
         }
-        assert_eq!(jobs[0].preemptions, 0, "finished during drain, never vacated");
-        assert_eq!(jobs[0].finished_at, Some(3));
+        assert_eq!(jobs[JobId(0)].preemptions, 0, "finished during drain, never vacated");
+        assert_eq!(jobs[JobId(0)].finished_at, Some(3));
     }
 
     #[test]
@@ -936,9 +940,10 @@ mod tests {
                 JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 20, 0),
             ])
         };
-        let drive = |jobs: &mut Vec<Job>| {
+        let drive = |jobs: &mut JobTable| {
             let mut sched = Scheduler::new(&spec, SchedConfig::new(PolicyKind::Fifo));
-            let arrivals: Vec<JobId> = jobs.iter().map(|j| j.id()).collect();
+            let mut arrivals: Vec<JobId> = jobs.iter().map(|j| j.id()).collect();
+            arrivals.sort();
             sched.tick(0, jobs, &arrivals);
             sched
         };
@@ -954,8 +959,8 @@ mod tests {
         for t in 1..=5 {
             sb.tick(t, &mut b, &[]);
         }
-        assert_eq!(a[0].remaining, b[0].remaining);
-        assert_eq!(a[1].waiting, b[1].waiting);
+        assert_eq!(a[JobId(0)].remaining, b[JobId(0)].remaining);
+        assert_eq!(a[JobId(1)].waiting, b[JobId(1)].waiting);
         assert_eq!(sa.stats.ticks, sb.stats.ticks);
         assert_eq!(sa.stats.fast_forwards, 1);
         assert_eq!(sa.stats.fast_forwarded_ticks, 5);
@@ -975,7 +980,8 @@ mod tests {
             &spec,
             SchedConfig::new(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
         );
-        let arrivals: Vec<JobId> = jobs.iter().map(|j| j.id()).collect();
+        let mut arrivals: Vec<JobId> = jobs.iter().map(|j| j.id()).collect();
+        arrivals.sort();
         sched.tick(0, &mut jobs, &arrivals);
         assert_eq!(sched.te_queue.len(), 1);
         assert!(!sched.quiescent(&jobs));

@@ -80,7 +80,7 @@ pub fn plan(
     let sizes: Vec<f64> = running
         .iter()
         .map(|id| {
-            let j = &ctx.jobs[id.0 as usize];
+            let j = &ctx.jobs[*id];
             let node = ctx.cluster.node(j.node.expect("running job has a node"));
             let sz = j.spec.demand.size(&node.capacity);
             max_size = max_size.max(sz);
@@ -91,7 +91,7 @@ pub fn plan(
 
     let mut best: Option<(f64, usize)> = None; // (score, index into `running`)
     for (i, id) in running.iter().enumerate() {
-        let j = &ctx.jobs[id.0 as usize];
+        let j = &ctx.jobs[*id];
         if let Some(p) = p_max {
             if j.preemptions >= p {
                 continue; // starvation guard (strategy 4)
@@ -117,7 +117,7 @@ pub fn plan(
 
     if let Some((_, i)) = best {
         let id = running[i];
-        let node = ctx.jobs[id.0 as usize].node.unwrap();
+        let node = ctx.jobs[id].node.unwrap();
         return Some(PreemptionPlan { node, victims: vec![id], fallback: false });
     }
 
@@ -136,6 +136,7 @@ mod tests {
     use super::*;
     use crate::cluster::{Cluster, ClusterSpec, NodeId};
     use crate::job::{Job, JobClass, JobId, JobSpec};
+    use crate::job_table::JobTable;
     use crate::resources::ResourceVec;
 
     /// Build a cluster + job table: `placements[i] = (node, demand, gp)`
@@ -143,7 +144,7 @@ mod tests {
     fn setup(
         nodes: usize,
         placements: &[(u32, ResourceVec, u64)],
-    ) -> (Cluster, Vec<Job>) {
+    ) -> (Cluster, JobTable) {
         let spec = ClusterSpec::tiny(nodes);
         let mut cluster = Cluster::new(&spec);
         let mut jobs = Vec::new();
@@ -154,12 +155,12 @@ mod tests {
             cluster.bind(JobId(i as u32), *demand, NodeId(*node));
             jobs.push(job);
         }
-        (cluster, jobs)
+        (cluster, JobTable::from_jobs(jobs))
     }
 
     fn ctx<'a>(
         cluster: &'a Cluster,
-        jobs: &'a [Job],
+        jobs: &'a JobTable,
         free: &'a [ResourceVec],
         oracle: &'a dyn Fn(JobId) -> u64,
     ) -> PolicyCtx<'a> {
@@ -240,7 +241,7 @@ mod tests {
     fn respects_preemption_cap() {
         let d = ResourceVec::new(4.0, 32.0, 1.0);
         let (cluster, mut jobs) = setup(2, &[(0, d, 0), (1, d, 5)]);
-        jobs[0].preemptions = 1; // job 0 already preempted once
+        jobs[JobId(0)].preemptions = 1; // job 0 already preempted once
         let free = frees(&cluster);
         let c = ctx(&cluster, &jobs, &free, &ORACLE);
         // P = 1: job 0 is off-limits despite its better (lower-GP) score.

@@ -34,7 +34,8 @@ pub mod srtf;
 pub mod youngest;
 
 use crate::cluster::{Cluster, NodeId};
-use crate::job::{Job, JobId, JobSpec, JobState};
+use crate::job::{JobId, JobSpec, JobState};
+use crate::job_table::JobTable;
 use crate::resources::ResourceVec;
 use crate::stats::rng::Pcg64;
 
@@ -150,8 +151,8 @@ pub struct PreemptionPlan {
 pub struct PolicyCtx<'a> {
     /// Cluster state (node capacities, allocations).
     pub cluster: &'a Cluster,
-    /// The full job table, indexed by job id.
-    pub jobs: &'a [Job],
+    /// The live job table (resident jobs only), indexed by job id.
+    pub jobs: &'a JobTable,
     /// Per-node free resources minus reservation holds — what is really
     /// available to new placements.
     pub effective_free: &'a [ResourceVec],
@@ -167,7 +168,7 @@ impl<'a> PolicyCtx<'a> {
             .node(node)
             .jobs()
             .filter(|id| {
-                let j = &self.jobs[id.0 as usize];
+                let j = &self.jobs[*id];
                 j.is_be() && j.state == JobState::Running
             })
             .collect()
@@ -191,7 +192,7 @@ impl<'a> PolicyCtx<'a> {
             .filter(|n| {
                 let mut avail = self.effective_free[n.id.0 as usize];
                 for id in self.running_be_on(n.id) {
-                    avail += self.jobs[id.0 as usize].spec.demand;
+                    avail += self.jobs[id].spec.demand;
                 }
                 demand.fits_in(&avail)
             })
@@ -310,7 +311,7 @@ pub(crate) fn greedy_global_plan(
         let Some(id) = next_victim() else {
             return None; // pool exhausted — no fit possible
         };
-        let j = &ctx.jobs[id.0 as usize];
+        let j = &ctx.jobs[id];
         let node = j.node.expect("running");
         projected[node.0 as usize] += j.spec.demand;
         victims.push(id);
@@ -374,7 +375,7 @@ mod tests {
         // Non-preemptive kinds yield a strategy that always declines.
         use crate::cluster::ClusterSpec;
         let cluster = Cluster::new(&ClusterSpec::tiny(1));
-        let jobs: Vec<Job> = Vec::new();
+        let jobs = JobTable::new();
         let free = vec![ResourceVec::pfn_node()];
         let oracle = |_: JobId| 0u64;
         let ctx = PolicyCtx {

@@ -46,7 +46,7 @@ pub fn plan(
 ) -> Option<PreemptionPlan> {
     let mut pool = ctx.running_be();
     if let Some(p) = p_max {
-        pool.retain(|id| ctx.jobs[id.0 as usize].preemptions < p);
+        pool.retain(|id| ctx.jobs[*id].preemptions < p);
     }
     greedy_global_plan(te, ctx, || {
         let i = rng.pick_index(pool.len())?;
@@ -62,7 +62,7 @@ mod tests {
     use crate::resources::ResourceVec;
     use crate::sched::policy::PolicyCtx;
 
-    fn setup(nodes: usize, placements: &[(u32, ResourceVec)]) -> (Cluster, Vec<Job>) {
+    fn setup(nodes: usize, placements: &[(u32, ResourceVec)]) -> (Cluster, crate::job_table::JobTable) {
         let spec = ClusterSpec::tiny(nodes);
         let mut cluster = Cluster::new(&spec);
         let mut jobs = Vec::new();
@@ -73,7 +73,7 @@ mod tests {
             cluster.bind(JobId(i as u32), *demand, NodeId(*node));
             jobs.push(job);
         }
-        (cluster, jobs)
+        (cluster, crate::job_table::JobTable::from_jobs(jobs))
     }
 
     fn te(demand: ResourceVec) -> JobSpec {
@@ -97,7 +97,7 @@ mod tests {
             let mut node_proj = free[p.node.0 as usize];
             let mut agg = free.iter().fold(ResourceVec::ZERO, |a, f| a + *f);
             for v in &p.victims {
-                let j = &jobs[v.0 as usize];
+                let j = &jobs[*v];
                 agg += j.spec.demand;
                 if j.node == Some(p.node) {
                     node_proj += j.spec.demand;
@@ -151,8 +151,8 @@ mod tests {
         // Both jobs at the cap ⇒ no victims available ⇒ None.
         let d = ResourceVec::new(16.0, 128.0, 4.0);
         let (cluster, mut jobs) = setup(1, &[(0, d), (0, d)]);
-        jobs[0].preemptions = 1;
-        jobs[1].preemptions = 1;
+        jobs[JobId(0)].preemptions = 1;
+        jobs[JobId(1)].preemptions = 1;
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
         let mut rng = Pcg64::new(1);

@@ -53,7 +53,7 @@ mod tests {
     fn setup(
         nodes: usize,
         placements: &[(u32, ResourceVec, u64)], // (node, demand, remaining)
-    ) -> (Cluster, Vec<Job>, Vec<u64>) {
+    ) -> (Cluster, crate::job_table::JobTable, Vec<u64>) {
         let spec = ClusterSpec::tiny(nodes);
         let mut cluster = Cluster::new(&spec);
         let mut jobs = Vec::new();
@@ -66,7 +66,7 @@ mod tests {
             jobs.push(job);
             remaining.push(*rem);
         }
-        (cluster, jobs, remaining)
+        (cluster, crate::job_table::JobTable::from_jobs(jobs), remaining)
     }
 
     fn te(demand: ResourceVec) -> JobSpec {

@@ -40,7 +40,7 @@ impl PreemptionPolicy for Youngest {
 pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
     let mut pool = ctx.running_be();
     pool.sort_by_key(|id| {
-        let j = &ctx.jobs[id.0 as usize];
+        let j = &ctx.jobs[*id];
         (Reverse(j.spec.submit), Reverse(id.0))
     });
     let mut it = pool.into_iter();
@@ -58,7 +58,7 @@ mod tests {
     fn setup(
         nodes: usize,
         placements: &[(u32, ResourceVec, u64)], // (node, demand, submit)
-    ) -> (Cluster, Vec<Job>) {
+    ) -> (Cluster, crate::job_table::JobTable) {
         let spec = ClusterSpec::tiny(nodes);
         let mut cluster = Cluster::new(&spec);
         let mut jobs = Vec::new();
@@ -69,7 +69,7 @@ mod tests {
             cluster.bind(JobId(i as u32), *demand, NodeId(*node));
             jobs.push(job);
         }
-        (cluster, jobs)
+        (cluster, crate::job_table::JobTable::from_jobs(jobs))
     }
 
     fn te(demand: ResourceVec) -> JobSpec {

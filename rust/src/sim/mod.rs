@@ -1,34 +1,50 @@
-//! Discrete-time simulator: replays a [`Workload`] through a [`Scheduler`]
-//! (§4.1: "the job scheduler decides resource allocation at every simulated
-//! minute").
+//! Discrete-time simulator: streams an
+//! [`ArrivalSource`](crate::workload::source::ArrivalSource) through a
+//! [`Scheduler`] (§4.1: "the job scheduler decides resource allocation at
+//! every simulated minute").
 //!
-//! One core loop (`Simulator::run_core`) drives both engines off the
-//! scheduler's shared [`EventClock`](crate::sched::EventClock) — arrivals,
-//! completions, and grace expiries all come from its min-heaps:
+//! ## Streaming core
+//!
+//! One core loop (`Simulator::run_core`) pulls arrivals *lazily* from the
+//! source through a bounded lookahead window into the scheduler's
+//! [`EventClock`](crate::sched::EventClock), and retires each job out of
+//! the slab [`JobTable`] the tick it completes, folding its outcome into a
+//! [`StreamingMetrics`] sink. Resident state is therefore O(live jobs) —
+//! queued + running + draining — not O(total jobs), which is what lets a
+//! million-job trace replay in bounded memory (`SimResult::peak_live` is
+//! the asserted high-water counter). Full per-job records stay available
+//! behind [`SimConfig::record_jobs`] (the default, and the equivalence
+//! oracle's mode): a streamed run with records on is byte-identical to the
+//! old materialize-everything driver.
+//!
+//! Both engines share the loop:
 //!
 //! * [`SimEngine::EventHorizon`] (default) — after each tick, if the
 //!   scheduler is quiescent, fast-forwards to the next *event horizon*
-//!   (earliest of the next arrival, next completion/grace expiry — a heap
-//!   peek, not a job-table scan — and the engine's stopping caps) in a
+//!   (earliest of the next arrival — resident or still inside the source —
+//!   next completion/grace expiry, and the engine's stopping caps) in a
 //!   single [`Scheduler::burn_many`] call instead of ticking minute by
 //!   minute.
 //! * [`SimEngine::PerMinute`] — the reference drive mode, one
 //!   [`Scheduler::tick`] per simulated minute. Kept as the equivalence
-//!   oracle: `rust/tests/engine_equivalence.rs` asserts both drive modes
-//!   produce byte-identical reports on §4.2 workloads.
+//!   oracle: `rust/tests/engine_equivalence.rs` and
+//!   `rust/tests/streaming_equivalence.rs` assert both drive modes and all
+//!   source types produce byte-identical records.
 //!
-//! The simulator is deterministic: (workload, config, seed) → identical
+//! The simulator is deterministic: (source, config, seed) → identical
 //! results, whichever engine runs — which is what makes every number in
 //! EXPERIMENTS.md reproducible.
 
 use crate::cluster::{ClusterSpec, Placement};
 use crate::job::{Job, JobClass, JobId, JobState};
-use crate::metrics::{IntervalsReport, PreemptionReport, SlowdownReport};
+use crate::job_table::JobTable;
+use crate::metrics::{IntervalsReport, PreemptionReport, SlowdownReport, StreamingMetrics};
 use crate::resources::ResourceVec;
 use crate::sched::policy::PolicyKind;
 use crate::sched::{SchedConfig, SchedStats, Scheduler};
 use crate::util::json::Json;
 use crate::util::table::Table;
+use crate::workload::source::{ArrivalSource, WorkloadSource};
 use crate::workload::Workload;
 use crate::Minutes;
 
@@ -69,6 +85,17 @@ pub struct SimConfig {
     pub max_ticks: Minutes,
     /// Run invariant checks every tick (tests).
     pub paranoid: bool,
+    /// Keep full per-job [`JobRecord`]s (default). With `false`, retiring
+    /// jobs are folded into the [`StreamingMetrics`] sink only, and the
+    /// run's memory is O(live jobs) — the streaming/scale mode.
+    pub record_jobs: bool,
+    /// How many minutes ahead of `now` arrivals are pulled from the source
+    /// into the clock. `0` (default) pulls each arrival exactly on its
+    /// submission minute — the smallest possible live set; larger windows
+    /// trade a bigger resident prefix for fewer source interactions.
+    /// Ignored (clamped to 0) for feedback-driven sources — see
+    /// [`ArrivalSource::feedback_driven`].
+    pub arrival_lookahead: Minutes,
 }
 
 impl SimConfig {
@@ -86,6 +113,8 @@ impl SimConfig {
             tail_ticks: 0,
             max_ticks: 10_000_000,
             paranoid: false,
+            record_jobs: true,
+            arrival_lookahead: 0,
         }
     }
 }
@@ -118,12 +147,11 @@ pub struct JobRecord {
 }
 
 impl JobRecord {
-    /// Capture a job's outcome (also used by the live executor).
-    pub fn from_job_public(j: &Job) -> Self {
-        Self::from_job(j)
-    }
-
-    fn from_job(j: &Job) -> Self {
+    /// Capture a job's outcome at its current state. Used by the simulator
+    /// when a job retires (and at cut-off for unfinished jobs) and by the
+    /// live executor's final report; for an unfinished job `finished_at`
+    /// is `None` and `slowdown` is the accrued-wait lower bound (Eq. 5).
+    pub fn from_job(j: &Job) -> Self {
         JobRecord {
             id: j.id(),
             class: j.spec.class,
@@ -145,14 +173,24 @@ impl JobRecord {
 pub struct SimResult {
     /// Policy that produced this result.
     pub policy: PolicyKind,
-    /// Per-job outcomes, in job-id (submission) order.
+    /// Per-job outcomes, in job-id (submission) order. Empty when the run
+    /// was streamed with [`SimConfig::record_jobs`] off.
     pub records: Vec<JobRecord>,
+    /// The streaming metrics sink every retiring job was folded into
+    /// (always populated, records on or off; mergeable across runs).
+    pub metrics: StreamingMetrics,
     /// Aggregate scheduler counters.
     pub sched_stats: SchedStats,
     /// Tick at which the simulation stopped.
     pub makespan: Minutes,
     /// Number of jobs still unfinished at the end (0 when draining).
     pub unfinished: usize,
+    /// High-water mark of the resident job table — the live-set bound the
+    /// scale bench and CI smoke assert on.
+    pub peak_live: usize,
+    /// Whether full records were kept (selects exact vs sketch-backed
+    /// reports).
+    pub record_jobs: bool,
 }
 
 impl SimResult {
@@ -200,16 +238,35 @@ impl SimResult {
         [h[0] as f64 / n, h[1] as f64 / n, h[2] as f64 / n]
     }
 
+    /// Slowdown percentiles: exact (from records) when `record_jobs` was
+    /// on, sketch-backed (≤ ~0.5% relative error) when streamed without
+    /// records.
     pub fn slowdown_report(&self) -> SlowdownReport {
-        SlowdownReport::from_result(self)
+        if self.record_jobs {
+            SlowdownReport::from_result(self)
+        } else {
+            self.metrics.slowdown_report()
+        }
     }
 
+    /// Re-scheduling-interval percentiles (exact or sketch-backed, as
+    /// above).
     pub fn intervals_report(&self) -> IntervalsReport {
-        IntervalsReport::from_result(self)
+        if self.record_jobs {
+            IntervalsReport::from_result(self)
+        } else {
+            self.metrics.intervals_report()
+        }
     }
 
+    /// Preemption statistics (exact in both modes — counters, not
+    /// sketches).
     pub fn preemption_report(&self) -> PreemptionReport {
-        PreemptionReport::from_result(self)
+        if self.record_jobs {
+            PreemptionReport::from_result(self)
+        } else {
+            self.metrics.preemption_report()
+        }
     }
 
     /// One-run table matching the layout of the paper's Table 1 row.
@@ -243,6 +300,8 @@ impl SimResult {
             ("policy", Json::str(&self.policy.name())),
             ("makespan", Json::num(self.makespan as f64)),
             ("unfinished", Json::num(self.unfinished as f64)),
+            ("jobs_seen", Json::num(self.metrics.jobs_seen as f64)),
+            ("peak_live", Json::num(self.peak_live as f64)),
             (
                 "slowdown",
                 Json::obj(vec![
@@ -286,76 +345,120 @@ impl Simulator {
         Simulator { cfg }
     }
 
-    /// Run `workload` to completion and collect results. Both
-    /// [`SimEngine`]s are drive modes of one core loop; the event-horizon
-    /// mode additionally fast-forwards quiescent spans.
+    /// Run a materialized `workload` to completion and collect results —
+    /// streams it through the back-compat [`WorkloadSource`] adapter.
     pub fn run(&self, workload: &Workload) -> SimResult {
-        self.run_core(workload, self.cfg.engine == SimEngine::EventHorizon)
+        self.run_source(&mut WorkloadSource::new(workload))
     }
 
-    /// Build the job table + scheduler for a run.
-    fn setup(&self, workload: &Workload) -> (Vec<Job>, Scheduler) {
-        let jobs: Vec<Job> = workload.jobs.iter().cloned().map(Job::new).collect();
-        // Arrival index: jobs are sorted by submit time with dense ids.
-        debug_assert!(workload.jobs.windows(2).all(|w| w[0].submit <= w[1].submit));
+    /// Run any pull-based [`ArrivalSource`] to completion. This is the
+    /// primary entry point: [`Simulator::run`] and every sweep cell route
+    /// through it. Both [`SimEngine`]s are drive modes of one core loop;
+    /// the event-horizon mode additionally fast-forwards quiescent spans.
+    pub fn run_source(&self, source: &mut dyn ArrivalSource) -> SimResult {
+        self.run_core(source, self.cfg.engine == SimEngine::EventHorizon)
+    }
 
+    /// Build the scheduler for a run.
+    fn setup(&self) -> Scheduler {
         let mut sched_cfg = SchedConfig::new(self.cfg.policy);
         sched_cfg.placement = self.cfg.placement;
         sched_cfg.progress_during_grace = self.cfg.progress_during_grace;
         sched_cfg.seed = self.cfg.seed;
         let mut sched = Scheduler::new(&self.cfg.cluster, sched_cfg);
         sched.paranoid = self.cfg.paranoid;
-        (jobs, sched)
+        sched
     }
 
-    fn finish(&self, jobs: Vec<Job>, sched: Scheduler, now: Minutes) -> SimResult {
-        let unfinished = jobs.iter().filter(|j| j.state != JobState::Done).count();
-        SimResult {
-            policy: self.cfg.policy,
-            records: jobs.iter().map(JobRecord::from_job).collect(),
-            sched_stats: sched.stats.clone(),
-            makespan: now,
-            unfinished,
-        }
-    }
-
-    /// The shared core loop. Every iteration: pop arrivals due this minute
-    /// from the clock, run one [`Scheduler::tick`] (exactly as the paper
-    /// describes the scheduler operating), then check the stop conditions.
+    /// The shared streaming core loop. Every iteration:
+    ///
+    /// 1. **Pull** — arrivals whose submit minute is within
+    ///    `now + arrival_lookahead` move from the source into the job
+    ///    table and the clock's arrival heap.
+    /// 2. **Pop + tick** — arrivals due this minute leave the heap and one
+    ///    [`Scheduler::tick`] runs (exactly as the paper describes the
+    ///    scheduler operating).
+    /// 3. **Retire** — jobs that completed this tick leave the job table;
+    ///    each outcome is folded into the [`StreamingMetrics`] sink (and
+    ///    kept as a [`JobRecord`] when `record_jobs` is on), and the
+    ///    source is notified so closed-loop users can schedule their next
+    ///    trial.
+    /// 4. **Stop check** — mirrors the pre-streaming driver exactly:
+    ///    arrivals are exhausted when the source is done *and* the clock's
+    ///    heap is empty, at which point `last_submit` (the max pulled) is
+    ///    the true final submission.
     ///
     /// With `fast_forward` set (the event-horizon mode), a tick after which
     /// the scheduler is [quiescent](Scheduler::quiescent) — and nothing
     /// vacated in the tick just executed, since a vacated job becomes
     /// admittable one tick later — advances the span until the earliest of
     ///
-    /// * the next arrival (clock heap peek),
+    /// * the next arrival (clock heap peek *or* the source's
+    ///   [`peek_submit`](ArrivalSource::peek_submit) for not-yet-pulled
+    ///   jobs),
     /// * the next internal event — completion or grace expiry
     ///   ([`Scheduler::next_internal_at`], a clock heap peek), and
     /// * the engine's stopping caps (`max_ticks`, the no-drain tail cutoff)
     ///
     /// in one [`Scheduler::burn_many`] call. Quiescent spans therefore cost
-    /// O(jobs) once instead of O(jobs) per minute, and the results are
+    /// O(live jobs) once instead of per minute, and the results are
     /// byte-identical to the per-minute drive mode (see
     /// `rust/tests/engine_equivalence.rs`).
-    fn run_core(&self, workload: &Workload, fast_forward: bool) -> SimResult {
-        let (mut jobs, mut sched) = self.setup(workload);
-        for j in &jobs {
-            sched.clock.push_arrival(j.spec.submit, j.id());
-        }
-        let last_submit = workload.jobs.last().map(|j| j.submit).unwrap_or(0);
+    fn run_core(&self, source: &mut dyn ArrivalSource, fast_forward: bool) -> SimResult {
+        let mut jobs = JobTable::new();
+        let mut sched = self.setup();
+        let mut metrics = StreamingMetrics::new();
+        let mut records: Vec<JobRecord> = Vec::new();
+        // Feedback-driven (closed-loop) sources may schedule a new arrival
+        // earlier than one already visible: pulling ahead would break the
+        // monotone-submit contract, so their lookahead is pinned to zero.
+        let lookahead = if source.feedback_driven() {
+            0
+        } else {
+            self.cfg.arrival_lookahead
+        };
+        // Latest submission pulled so far; equals the workload's final
+        // submission once the source is exhausted.
+        let mut last_submit: Minutes = 0;
         let mut now: Minutes = 0;
         let mut arrivals: Vec<JobId> = Vec::new();
 
         loop {
+            // ---- 1: pull arrivals inside the lookahead window ----------
+            while let Some(at) = source.peek_submit() {
+                if at > now.saturating_add(lookahead) {
+                    break;
+                }
+                let spec = source.next_job().expect("peeked arrival must be yieldable");
+                debug_assert!(spec.submit == at && at >= now, "source out of order");
+                debug_assert!(spec.submit >= last_submit, "submits must be monotone");
+                last_submit = last_submit.max(spec.submit);
+                sched.clock.push_arrival(spec.submit, spec.id);
+                jobs.insert(Job::new(spec));
+            }
+
+            // ---- 2: pop due arrivals, tick -----------------------------
             arrivals.clear();
             while let Some(id) = sched.clock.pop_arrival_due(now) {
                 arrivals.push(id);
             }
             let out = sched.tick(now, &mut jobs, &arrivals);
+
+            // ---- 3: retire completed jobs into the sink ----------------
+            for id in &out.completed {
+                let job = jobs.remove(*id);
+                source.on_job_finished(*id, now);
+                let rec = JobRecord::from_job(&job);
+                metrics.observe(&rec);
+                if self.cfg.record_jobs {
+                    records.push(rec);
+                }
+            }
             now += 1;
 
-            let past_arrivals = !sched.clock.arrivals_pending() && now > last_submit;
-            if past_arrivals {
+            // ---- 4: stop conditions ------------------------------------
+            let no_more_arrivals = source.done() && !sched.clock.arrivals_pending();
+            if no_more_arrivals && now > last_submit {
                 if self.cfg.drain {
                     if sched.idle() {
                         break;
@@ -373,13 +476,18 @@ impl Simulator {
                 // Latest tick the per-minute mode could still execute
                 // before one of its break conditions fires.
                 let mut target = self.cfg.max_ticks.saturating_sub(1);
-                if !self.cfg.drain && !sched.clock.arrivals_pending() {
+                if !self.cfg.drain && no_more_arrivals {
                     target = target.min(last_submit + self.cfg.tail_ticks);
                 }
                 if let Some(at) = sched.next_internal_at(&jobs) {
                     target = target.min(at);
                 }
                 if let Some(at) = sched.clock.next_arrival_at() {
+                    target = target.min(at);
+                }
+                if let Some(at) = source.peek_submit() {
+                    // Next unpulled arrival: stop there so the pull loop
+                    // picks it up on its submission minute.
                     target = target.min(at);
                 }
                 if target > now {
@@ -389,7 +497,52 @@ impl Simulator {
             }
         }
 
-        self.finish(jobs, sched, now)
+        self.finish(jobs, sched, source, metrics, records, now)
+    }
+
+    /// Assemble the result: fold unfinished resident jobs (and any jobs
+    /// the source still holds after a `max_ticks` cut-off — the
+    /// materialized driver recorded those as never-started, so the
+    /// streamed one must too) into the sink, then sort records into job-id
+    /// order for byte-compatibility with the materialized path.
+    fn finish(
+        &self,
+        jobs: JobTable,
+        sched: Scheduler,
+        source: &mut dyn ArrivalSource,
+        mut metrics: StreamingMetrics,
+        mut records: Vec<JobRecord>,
+        now: Minutes,
+    ) -> SimResult {
+        let mut unfinished = 0usize;
+        for job in jobs.iter() {
+            debug_assert!(job.state != JobState::Done, "Done jobs retire eagerly");
+            unfinished += 1;
+            let rec = JobRecord::from_job(job);
+            metrics.observe(&rec);
+            if self.cfg.record_jobs {
+                records.push(rec);
+            }
+        }
+        while let Some(spec) = source.next_job() {
+            unfinished += 1;
+            let rec = JobRecord::from_job(&Job::new(spec));
+            metrics.observe(&rec);
+            if self.cfg.record_jobs {
+                records.push(rec);
+            }
+        }
+        records.sort_by_key(|r| r.id);
+        SimResult {
+            policy: self.cfg.policy,
+            records,
+            metrics,
+            sched_stats: sched.stats.clone(),
+            makespan: now,
+            unfinished,
+            peak_live: jobs.peak_live(),
+            record_jobs: self.cfg.record_jobs,
+        }
     }
 }
 
@@ -550,6 +703,94 @@ mod tests {
             assert_eq!(eh.records, pm.records);
             assert_eq!(eh.sched_stats.ticks, pm.sched_stats.ticks);
         }
+    }
+
+    #[test]
+    fn streaming_sink_and_live_set_counters() {
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Fifo);
+        cfg.paranoid = true;
+        let specs: Vec<JobSpec> = (0..20)
+            .map(|i| {
+                JobSpec::new(i, if i % 3 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(8.0, 64.0, 2.0), (i as u64) * 3, 7, 1)
+            })
+            .collect();
+        let res = Simulator::new(cfg).run(&wl(specs));
+        assert_eq!(res.metrics.jobs_seen, 20);
+        assert_eq!(res.metrics.completed, 20);
+        assert_eq!(res.metrics.unfinished, 0);
+        // Arrivals are spread out: the live set must stay well below the
+        // total job count.
+        assert!(res.peak_live >= 1 && res.peak_live < 20, "peak {}", res.peak_live);
+        // Sink-backed percentiles agree with the exact ones within the
+        // sketch's error bound.
+        let exact = res.slowdown_report();
+        let sketch = res.metrics.slowdown_report();
+        assert!((exact.be.p50 - sketch.be.p50).abs() / exact.be.p50 < 0.01);
+    }
+
+    #[test]
+    fn record_jobs_off_reports_from_the_sink() {
+        let specs: Vec<JobSpec> = (0..60)
+            .map(|i| {
+                JobSpec::new(i, if i % 4 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(4.0 + (i % 3) as f64 * 8.0, 32.0, (i % 2) as f64 + 1.0),
+                    (i as u64) / 3, 5 + (i as u64 % 13), (i as u64) % 4)
+            })
+            .collect();
+        let mk = |record_jobs: bool| {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+            cfg.record_jobs = record_jobs;
+            Simulator::new(cfg).run(&wl(specs.clone()))
+        };
+        let exact = mk(true);
+        let streamed = mk(false);
+        assert!(streamed.records.is_empty(), "no records kept");
+        assert_eq!(streamed.metrics, exact.metrics, "sink is identical either way");
+        assert_eq!(streamed.makespan, exact.makespan);
+        let e = exact.slowdown_report();
+        let s = streamed.slowdown_report();
+        // At this small n the sketch's rank rounding (nearest sample vs
+        // linear interpolation) dominates; the large-sample 1% bound is
+        // asserted in rust/tests/streaming_equivalence.rs.
+        for (a, b) in [(e.be.p50, s.be.p50), (e.te.p50, s.te.p50)] {
+            assert!((a - b).abs() / a < 0.05, "exact {a} vs sketch {b}");
+        }
+        // Preemption stats are exact counters in both modes.
+        assert_eq!(
+            format!("{:?}", exact.preemption_report()),
+            format!("{:?}", streamed.preemption_report())
+        );
+    }
+
+    #[test]
+    fn lookahead_window_does_not_change_results() {
+        let specs: Vec<JobSpec> = (0..40)
+            .map(|i| {
+                JobSpec::new(i, if i % 4 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(4.0 + (i % 3) as f64 * 8.0, 32.0, (i % 2) as f64 + 1.0),
+                    (i as u64) * 2, 5 + (i as u64 % 13), (i as u64) % 4)
+            })
+            .collect();
+        let mk = |lookahead: Minutes, engine: SimEngine| {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Rand);
+            cfg.seed = 5;
+            cfg.engine = engine;
+            cfg.arrival_lookahead = lookahead;
+            cfg.paranoid = true;
+            Simulator::new(cfg).run(&wl(specs.clone()))
+        };
+        let base = mk(0, SimEngine::EventHorizon);
+        for lookahead in [1, 16, 10_000] {
+            for engine in [SimEngine::EventHorizon, SimEngine::PerMinute] {
+                let other = mk(lookahead, engine);
+                assert_eq!(base.records, other.records, "lookahead {lookahead} {engine:?}");
+                assert_eq!(base.makespan, other.makespan);
+            }
+        }
+        // A big window pulls everything up front: the live set degenerates
+        // to the materialized one.
+        assert!(mk(10_000, SimEngine::EventHorizon).peak_live >= base.peak_live);
     }
 
     #[test]

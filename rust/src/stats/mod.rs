@@ -5,12 +5,15 @@
 //! the small, well-specified pieces the evaluation needs: a PCG generator,
 //! Box-Muller normals with truncation (the paper's §4.2 workload model),
 //! lognormals (for the synthesized institution trace), exponential
-//! inter-arrivals, and exact percentile computation.
+//! inter-arrivals, exact percentile computation, and a mergeable streaming
+//! quantile [`sketch`] for O(1)-memory percentiles over streamed runs.
 
 pub mod dist;
 pub mod rng;
+pub mod sketch;
 pub mod summary;
 
 pub use dist::{Exponential, LogNormal, Normal, TruncatedNormal};
 pub use rng::Pcg64;
+pub use sketch::QuantileSketch;
 pub use summary::{percentile, percentiles, Summary};

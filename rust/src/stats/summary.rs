@@ -1,15 +1,23 @@
 //! Summary statistics: exact percentiles (the paper reports 50th/95th/99th
 //! percentile slowdown rates) and basic moments.
 
+/// Sort a copy ascending — the one shared sort every exact-percentile
+/// path funnels through. Callers that need several percentiles (or several
+/// reports) over the same sample should call this once and use the
+/// `*_sorted` variants instead of re-sorting per query.
+pub fn sort_ascending(xs: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
 /// Exact percentile by sorting a copy — linear-interpolation definition
 /// (same as `numpy.percentile(..., method="linear")`), so the python tests
 /// can cross-check values bit-for-bit.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     assert!((0.0..=100.0).contains(&p), "p out of range: {p}");
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    percentile_sorted(&v, p)
+    percentile_sorted(&sort_ascending(xs), p)
 }
 
 /// Percentile over an already-sorted slice (ascending). Callers computing
@@ -33,9 +41,12 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 
 /// Compute several percentiles with one sort.
 pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    ps.iter().map(|&p| percentile_sorted(&v, p)).collect()
+    percentiles_sorted(&sort_ascending(xs), ps)
+}
+
+/// Several percentiles over an already-sorted slice (no copy, no sort).
+pub fn percentiles_sorted(sorted: &[f64], ps: &[f64]) -> Vec<f64> {
+    ps.iter().map(|&p| percentile_sorted(sorted, p)).collect()
 }
 
 /// Five-number-ish summary used by reports.
@@ -63,8 +74,13 @@ impl Summary {
     /// Summarize a non-empty sample.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "summary of empty slice");
-        let mut v: Vec<f64> = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self::of_sorted(&sort_ascending(xs))
+    }
+
+    /// Summarize an already-sorted (ascending) non-empty sample — the
+    /// shared-sort fast path for callers that also need raw percentiles.
+    pub fn of_sorted(v: &[f64]) -> Summary {
+        assert!(!v.is_empty(), "summary of empty slice");
         let n = v.len();
         let mean = v.iter().sum::<f64>() / n as f64;
         let var = v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;

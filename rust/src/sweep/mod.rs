@@ -18,6 +18,12 @@
 //!   [`CellResult`] is routed back to its grid index, so
 //!   [`SweepResult::cells`] is identical whatever the thread count or
 //!   completion order; a test pins `threads = 1` against `threads = N`.
+//! * **Streamed cells, mergeable pooling** — each cell streams its
+//!   (shared) workload through the pull-based source interface and
+//!   retains only a mergeable [`StreamingMetrics`] sink; cross-seed
+//!   pooling ([`SweepResult::pooled_percentiles`]) merges quantile
+//!   sketches instead of concatenating and re-sorting raw slowdown
+//!   vectors, so sweep memory no longer scales with total jobs × cells.
 //!
 //! ```no_run
 //! use fitgpp::prelude::*;
@@ -28,7 +34,9 @@
 
 use crate::cluster::ClusterSpec;
 use crate::job::JobClass;
-use crate::metrics::{slowdown_table, Percentiles, PreemptionReport, SlowdownReport};
+use crate::metrics::{
+    slowdown_table, Percentiles, PreemptionReport, SlowdownReport, StreamingMetrics,
+};
 use crate::sched::policy::PolicyKind;
 use crate::sim::{SimConfig, SimEngine, Simulator};
 use crate::util::json::Json;
@@ -292,18 +300,21 @@ impl SweepSpec {
 }
 
 /// Simulate one cell under an explicit [`SimConfig`] and package the
-/// results.
+/// results. The cell *streams* its workload through the pull-based source
+/// interface; per-cell reports stay exact (records mode), but only the
+/// mergeable [`StreamingMetrics`] sink is retained for cross-seed pooling
+/// — raw slowdown vectors are never held by the sweep.
 fn run_sim_cell(cell: CellSpec, cfg: SimConfig, workload: &Workload) -> CellResult {
     let c0 = Instant::now();
-    let res = Simulator::new(cfg).run(workload);
+    let res = Simulator::new(cfg).run_source(&mut workload.source());
     CellResult {
         cell,
         slowdown: res.slowdown_report(),
         preemption: res.preemption_report(),
-        te_slowdowns: res.slowdowns(JobClass::Te),
-        be_slowdowns: res.slowdowns(JobClass::Be),
+        metrics: res.metrics.clone(),
         makespan: res.makespan,
         unfinished: res.unfinished,
+        peak_live: res.peak_live,
         preemption_signals: res.sched_stats.preemption_signals,
         fast_forwarded_ticks: res.sched_stats.fast_forwarded_ticks,
         wall: c0.elapsed(),
@@ -335,24 +346,26 @@ pub fn extended_policies() -> Vec<PolicyKind> {
     ]
 }
 
-/// Everything one cell produced (reports plus the raw per-job slowdowns,
-/// so callers can pool across seeds exactly like the paper does).
+/// Everything one cell produced (exact per-cell reports plus the
+/// mergeable streaming sink, so callers can pool across seeds — like the
+/// paper's "statistics over eight workloads" — by merging sketches in O(1)
+/// memory instead of concatenating raw slowdown vectors).
 #[derive(Debug, Clone)]
 pub struct CellResult {
     /// The grid point this belongs to.
     pub cell: CellSpec,
-    /// Slowdown percentiles of this cell alone.
+    /// Slowdown percentiles of this cell alone (exact).
     pub slowdown: SlowdownReport,
     /// Preemption statistics of this cell alone.
     pub preemption: PreemptionReport,
-    /// Raw TE slowdowns (completed jobs), for cross-seed pooling.
-    pub te_slowdowns: Vec<f64>,
-    /// Raw BE slowdowns (completed jobs), for cross-seed pooling.
-    pub be_slowdowns: Vec<f64>,
+    /// The cell's mergeable metrics sink (cross-seed pooling).
+    pub metrics: StreamingMetrics,
     /// Simulated minutes until the cell's run stopped.
     pub makespan: Minutes,
     /// Jobs unfinished at cut-off (0 when draining).
     pub unfinished: usize,
+    /// High-water mark of the cell's resident job table.
+    pub peak_live: usize,
     /// Preemption signals the scheduler issued.
     pub preemption_signals: u64,
     /// Simulated minutes the event-horizon engine advanced in bulk.
@@ -387,33 +400,37 @@ impl SweepResult {
         out
     }
 
-    /// Pool raw slowdowns of `class` across every cell matching `keep`.
-    pub fn pooled_slowdowns_where<F: Fn(&CellSpec) -> bool>(
+    /// Merge the metrics sinks of every cell matching `keep` — the
+    /// cross-seed pool as one mergeable sketch bundle (O(1) memory; no raw
+    /// slowdown vectors, no re-sorting per percentile query).
+    pub fn pooled_metrics_where<F: Fn(&CellSpec) -> bool>(&self, keep: F) -> StreamingMetrics {
+        let mut pooled = StreamingMetrics::new();
+        for c in &self.cells {
+            if keep(&c.cell) {
+                pooled.merge(&c.metrics);
+            }
+        }
+        pooled
+    }
+
+    /// Percentiles of `class` over the pooled sketch of every cell
+    /// matching `keep`.
+    pub fn pooled_percentiles_where<F: Fn(&CellSpec) -> bool>(
         &self,
         keep: F,
         class: JobClass,
-    ) -> Vec<f64> {
-        let mut xs = Vec::new();
-        for c in &self.cells {
-            if keep(&c.cell) {
-                match class {
-                    JobClass::Te => xs.extend_from_slice(&c.te_slowdowns),
-                    JobClass::Be => xs.extend_from_slice(&c.be_slowdowns),
-                }
-            }
+    ) -> Percentiles {
+        let pooled = self.pooled_metrics_where(keep);
+        match class {
+            JobClass::Te => Percentiles::from_sketch(&pooled.te_slowdown),
+            JobClass::Be => Percentiles::from_sketch(&pooled.be_slowdown),
         }
-        xs
     }
 
-    /// Pool raw slowdowns of `class` across all seeds of `policy` (the
-    /// paper's "statistics over eight workloads").
-    pub fn pooled_slowdowns(&self, policy: PolicyKind, class: JobClass) -> Vec<f64> {
-        self.pooled_slowdowns_where(|c| c.policy == policy, class)
-    }
-
-    /// Percentiles of the cross-seed pool for one policy and class.
+    /// Percentiles of the cross-seed pool for one policy and class (the
+    /// paper's "statistics over eight workloads"), from merged sketches.
     pub fn pooled_percentiles(&self, policy: PolicyKind, class: JobClass) -> Percentiles {
-        Percentiles::of(&self.pooled_slowdowns(policy, class))
+        self.pooled_percentiles_where(|c| c.policy == policy, class)
     }
 
     /// Pooled per-policy slowdown reports, in grid order.
@@ -464,7 +481,7 @@ impl SweepResult {
             &[
                 "policy", "te_ratio", "gp_scale", "seed", "te_p50", "te_p95", "te_p99",
                 "be_p50", "be_p95", "be_p99", "preempted_frac", "signals", "makespan",
-                "unfinished", "wall_ms",
+                "unfinished", "peak_live", "wall_ms",
             ],
         );
         for c in &self.cells {
@@ -483,6 +500,7 @@ impl SweepResult {
                 c.preemption_signals.to_string(),
                 c.makespan.to_string(),
                 c.unfinished.to_string(),
+                c.peak_live.to_string(),
                 format!("{:.3}", c.wall.as_secs_f64() * 1e3),
             ]);
         }
@@ -514,6 +532,7 @@ impl SweepResult {
                     ("signals", Json::num(c.preemption_signals as f64)),
                     ("makespan", Json::num(c.makespan as f64)),
                     ("unfinished", Json::num(c.unfinished as f64)),
+                    ("peak_live", Json::num(c.peak_live as f64)),
                     ("wall_ms", Json::num(c.wall.as_secs_f64() * 1e3)),
                 ])
             })
@@ -677,21 +696,39 @@ mod tests {
     }
 
     #[test]
-    fn pooling_concatenates_across_seeds() {
+    fn pooling_merges_sketches_across_seeds() {
         let res = tiny_spec().with_threads(2).run();
-        let pooled = res.pooled_slowdowns(PolicyKind::Fifo, JobClass::Be);
-        let per_cell: usize = res
+        let pooled = res.pooled_metrics_where(|c| c.policy == PolicyKind::Fifo);
+        let per_cell: u64 = res
             .cells
             .iter()
             .filter(|c| c.cell.policy == PolicyKind::Fifo)
-            .map(|c| c.be_slowdowns.len())
+            .map(|c| c.metrics.be_slowdown.count())
             .sum();
-        assert_eq!(pooled.len(), per_cell);
-        assert!(pooled.len() > 0);
+        assert_eq!(pooled.be_slowdown.count(), per_cell);
+        assert!(per_cell > 0);
+        let p = res.pooled_percentiles(PolicyKind::Fifo, JobClass::Be);
+        assert!(p.p50 >= 1.0 && p.p50 <= p.p95 && p.p95 <= p.p99, "{p:?}");
+        // Pooled sketch percentiles track the exact pooled values within
+        // the sketch's error bound (cells run with exact records too).
         let rows = res.slowdown_rows();
         assert_eq!(rows.len(), 2);
         let t = res.table1("t");
         assert!(t.to_text().contains("FIFO"));
+    }
+
+    #[test]
+    fn cells_stream_with_bounded_live_sets() {
+        let res = tiny_spec().with_threads(2).run();
+        for c in &res.cells {
+            assert!(c.peak_live >= 1);
+            assert!(
+                c.peak_live <= 96,
+                "live set may never exceed the workload ({})",
+                c.peak_live
+            );
+            assert_eq!(c.metrics.jobs_seen, 96);
+        }
     }
 
     #[test]

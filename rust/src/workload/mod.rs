@@ -1,14 +1,24 @@
 //! Workloads: job sequences fed to the simulator.
 //!
+//! * [`source`] — the pull-based [`ArrivalSource`](source::ArrivalSource)
+//!   trait: workloads as streams, so the simulator's resident state is
+//!   O(live jobs) instead of O(total jobs). Includes the closed-loop
+//!   trial-and-error source, whose arrivals depend on completions.
 //! * [`synthetic`] — the §4.2 generator: per-class truncated-normal
 //!   execution times / demands / grace periods, with submission times
 //!   calibrated so the FIFO cluster load stays at the target (2.0).
-//! * [`trace`] — CSV trace I/O plus a synthesized "institution trace"
-//!   (heavy-tailed, bursty) standing in for the private cluster trace of
-//!   §4.4 (see DESIGN.md §3 for the substitution argument).
+//!   Materializes via [`SyntheticWorkload::generate`](synthetic::SyntheticWorkload::generate)
+//!   or streams via [`SyntheticSource`](synthetic::SyntheticSource).
+//! * [`trace`] — CSV trace I/O (materialized and streamed) plus a
+//!   synthesized "institution trace" (heavy-tailed, bursty) standing in
+//!   for the private cluster trace of §4.4 (see DESIGN.md §3 for the
+//!   substitution argument).
 
+pub mod source;
 pub mod synthetic;
 pub mod trace;
+
+pub use source::{ArrivalSource, WorkloadSource};
 
 use crate::job::{JobClass, JobSpec};
 use crate::resources::ResourceVec;
@@ -67,6 +77,12 @@ impl Workload {
     /// Filter to a class (diagnostics).
     pub fn of_class(&self, class: JobClass) -> impl Iterator<Item = &JobSpec> {
         self.jobs.iter().filter(move |j| j.class == class)
+    }
+
+    /// Stream this workload through the pull-based [`ArrivalSource`]
+    /// interface (the back-compat adapter the simulator and sweep use).
+    pub fn source(&self) -> WorkloadSource<'_> {
+        WorkloadSource::new(self)
     }
 }
 

@@ -1,0 +1,370 @@
+//! Pull-based arrival sources: workloads as streams.
+//!
+//! The materialized [`Workload`] is a `Vec<JobSpec>` — fine for §4.2-scale
+//! experiments, O(total jobs) memory for everything else. An
+//! [`ArrivalSource`] instead *yields* jobs in submission order and is
+//! pulled lazily by the streaming simulator
+//! ([`Simulator::run_source`](crate::sim::Simulator::run_source)), so only
+//! the live set is ever resident. Implementations:
+//!
+//! * [`WorkloadSource`] — back-compat adapter over a materialized
+//!   [`Workload`] (what [`Simulator::run`](crate::sim::Simulator::run) and
+//!   every sweep cell use).
+//! * [`SyntheticSource`](crate::workload::synthetic::SyntheticSource) —
+//!   the §4.2 generator, jobs drawn on the fly while its internal FIFO
+//!   calibration sim advances.
+//! * [`InstitutionSource`](crate::workload::trace::InstitutionSource) —
+//!   the §4.4 institution-trace synthesizer as a stream.
+//! * [`CsvStreamSource`](crate::workload::trace::CsvStreamSource) — a
+//!   buffered-reader CSV trace streamer (replay traces bigger than RAM).
+//! * [`ClosedLoopSource`] — the paper's actual trial-and-error scenario:
+//!   users who resubmit their next job only after the previous one
+//!   finishes plus think time. Arrival times *depend on scheduling
+//!   decisions*, so no fixed trace (materialized or streamed) can express
+//!   it — this is what the [`ArrivalSource::on_job_finished`] feedback
+//!   channel exists for.
+//!
+//! ## Contract
+//!
+//! * Jobs are yielded in non-decreasing `submit` order with dense ids
+//!   (`0..n` in yield order) — the simulator's clock breaks same-minute
+//!   ties by id, so this keeps streamed runs byte-identical to
+//!   materialized ones.
+//! * `peek_submit` never returns a minute earlier than the last yielded
+//!   job's `submit`.
+//! * A source whose `peek_submit` is `None` but which is not [`done`]
+//!   (a closed loop waiting on completions) must become ready again after
+//!   some pending job finishes; the simulator keeps ticking (or
+//!   fast-forwards to its internal events) until then.
+//!
+//! [`done`]: ArrivalSource::done
+
+use super::Workload;
+use crate::job::{JobClass, JobId, JobSpec};
+use crate::resources::ResourceVec;
+use crate::stats::dist::{Exponential, Sample, TruncatedNormal};
+use crate::stats::rng::Pcg64;
+use crate::Minutes;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A workload yielded one job at a time, in submission order. See the
+/// module docs for the contract.
+pub trait ArrivalSource {
+    /// Submission minute of the next job, if one is currently known.
+    /// Generative sources may need to advance internal state to answer
+    /// (hence `&mut self`); the call must not consume the job.
+    fn peek_submit(&mut self) -> Option<Minutes>;
+
+    /// Yield the next job. `None` when no job is currently available
+    /// (exhausted, or a closed loop waiting on completions).
+    fn next_job(&mut self) -> Option<JobSpec>;
+
+    /// Completion feedback: `id` finished at tick `finished_at`. Open
+    /// (feed-forward) sources ignore this; closed-loop sources use it to
+    /// schedule the submitting user's next trial.
+    fn on_job_finished(&mut self, _id: JobId, _finished_at: Minutes) {}
+
+    /// True when this source will never yield another job.
+    fn done(&self) -> bool;
+
+    /// True when future arrivals depend on completion feedback (closed
+    /// loops). The simulator clamps its arrival lookahead to zero for
+    /// such sources: pulling a known arrival early could ordering-race a
+    /// not-yet-scheduled resubmission with an earlier submit minute,
+    /// violating the monotone-submit/dense-id contract above.
+    fn feedback_driven(&self) -> bool {
+        false
+    }
+
+    /// Total jobs this source will yield, when known up front.
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Back-compat adapter: stream a materialized [`Workload`] (already sorted
+/// with dense ids by `Workload::new`).
+pub struct WorkloadSource<'a> {
+    jobs: &'a [JobSpec],
+    next: usize,
+}
+
+impl<'a> WorkloadSource<'a> {
+    /// Stream `workload` in order.
+    pub fn new(workload: &'a Workload) -> Self {
+        debug_assert!(
+            workload.jobs.windows(2).all(|w| w[0].submit <= w[1].submit),
+            "Workload::new guarantees submit order"
+        );
+        WorkloadSource { jobs: &workload.jobs, next: 0 }
+    }
+}
+
+impl ArrivalSource for WorkloadSource<'_> {
+    fn peek_submit(&mut self) -> Option<Minutes> {
+        self.jobs.get(self.next).map(|j| j.submit)
+    }
+
+    fn next_job(&mut self) -> Option<JobSpec> {
+        let spec = self.jobs.get(self.next)?.clone();
+        self.next += 1;
+        Some(spec)
+    }
+
+    fn done(&self) -> bool {
+        self.next >= self.jobs.len()
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.jobs.len())
+    }
+}
+
+/// Parameters of the closed-loop trial-and-error scenario.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopParams {
+    /// Concurrent users iterating on models.
+    pub users: usize,
+    /// Trials each user submits before stopping.
+    pub trials_per_user: u32,
+    /// Probability a trial is a TE job (users occasionally promote an
+    /// experiment to a longer best-effort training run).
+    pub te_fraction: f64,
+    /// Mean think time between a job finishing and the user's next
+    /// submission (exponential, minutes; at least 1 minute elapses).
+    pub think_mean: f64,
+    /// Users' first submissions are spread uniformly over this ramp-up
+    /// window (minutes).
+    pub ramp: Minutes,
+    /// Per-job demands are capped at this vector so every job fits some
+    /// node.
+    pub node_cap: ResourceVec,
+}
+
+impl ClosedLoopParams {
+    /// A paper-flavoured default: TE-heavy iteration with ~10-minute think
+    /// times on PFN-sized nodes.
+    pub fn demo(users: usize, trials_per_user: u32) -> Self {
+        ClosedLoopParams {
+            users,
+            trials_per_user,
+            te_fraction: 0.85,
+            think_mean: 10.0,
+            ramp: 60,
+            node_cap: ResourceVec::pfn_node(),
+        }
+    }
+}
+
+/// One pending submission: `(ready minute, user)` — the heap orders by
+/// time, then user index, so ids stay dense in submission order even when
+/// several users' think timers expire out of completion order.
+type PendingUser = Reverse<(Minutes, u32)>;
+
+/// The closed-loop source. Each user runs `submit → wait for completion →
+/// think → resubmit` for `trials_per_user` rounds; job bodies are drawn
+/// from the §4.2 distributions.
+pub struct ClosedLoopSource {
+    params: ClosedLoopParams,
+    exec_te: TruncatedNormal,
+    exec_be: TruncatedNormal,
+    cpu: TruncatedNormal,
+    ram: TruncatedNormal,
+    gpu: TruncatedNormal,
+    gp: TruncatedNormal,
+    think: Exponential,
+    body_rng: Pcg64,
+    think_rng: Pcg64,
+    class_rng: Pcg64,
+    /// Users whose next submission time is already known.
+    ready: BinaryHeap<PendingUser>,
+    /// Trials each user still has left to *submit*.
+    trials_left: Vec<u32>,
+    /// In-flight job id → user (removed on completion; O(live) entries).
+    in_flight: std::collections::HashMap<u32, u32>,
+    next_id: u32,
+}
+
+impl ClosedLoopSource {
+    /// Build the source. Deterministic per `(params, seed)`.
+    pub fn new(params: ClosedLoopParams, seed: u64) -> Self {
+        assert!(params.users > 0 && params.trials_per_user > 0);
+        let mut root = Pcg64::new(seed);
+        let mut ramp_rng = root.split(1);
+        let body_rng = root.split(2);
+        let think_rng = root.split(3);
+        let class_rng = root.split(4);
+        let mut ready = BinaryHeap::with_capacity(params.users);
+        for u in 0..params.users {
+            ready.push(Reverse((ramp_rng.below(params.ramp.max(1)), u as u32)));
+        }
+        ClosedLoopSource {
+            // §4.2 bodies: TE trials short (≤30 min), BE promotions long.
+            exec_te: TruncatedNormal::new(5.0, 6.0, 1.0, 30.0),
+            exec_be: TruncatedNormal::new(30.0, 60.0, 1.0, 1440.0),
+            cpu: TruncatedNormal::new(8.0, 8.0, 1.0, 32.0),
+            ram: TruncatedNormal::new(64.0, 64.0, 1.0, 256.0),
+            gpu: TruncatedNormal::new(3.0, 2.5, 0.0, 8.0),
+            gp: TruncatedNormal::new(3.0, 4.0, 0.0, 20.0),
+            think: Exponential::new(1.0 / params.think_mean.max(1e-9)),
+            body_rng,
+            think_rng,
+            class_rng,
+            ready,
+            trials_left: vec![params.trials_per_user; params.users],
+            in_flight: std::collections::HashMap::new(),
+            next_id: 0,
+            params,
+        }
+    }
+
+    /// Total jobs this source will yield over its lifetime.
+    pub fn total_jobs(&self) -> usize {
+        self.params.users * self.params.trials_per_user as usize
+    }
+}
+
+impl ArrivalSource for ClosedLoopSource {
+    fn peek_submit(&mut self) -> Option<Minutes> {
+        self.ready.peek().map(|Reverse((at, _))| *at)
+    }
+
+    fn next_job(&mut self) -> Option<JobSpec> {
+        let Reverse((at, user)) = self.ready.pop()?;
+        debug_assert!(self.trials_left[user as usize] > 0);
+        self.trials_left[user as usize] -= 1;
+        let class = if self.class_rng.chance(self.params.te_fraction) {
+            JobClass::Te
+        } else {
+            JobClass::Be
+        };
+        let exec_dist = match class {
+            JobClass::Te => &self.exec_te,
+            JobClass::Be => &self.exec_be,
+        };
+        let exec = exec_dist.sample(&mut self.body_rng).round().max(1.0) as u64;
+        let cpu = self.cpu.sample(&mut self.body_rng).round().max(1.0);
+        let ram = self.ram.sample(&mut self.body_rng).round().max(1.0);
+        let gpu = self.gpu.sample(&mut self.body_rng).round().max(0.0);
+        let demand = ResourceVec::new(cpu, ram, gpu).min(&self.params.node_cap);
+        let gp = self.gp.sample(&mut self.body_rng).round().max(0.0) as u64;
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        self.in_flight.insert(id.0, user);
+        Some(JobSpec {
+            id,
+            class,
+            demand,
+            submit: at,
+            exec_time: exec,
+            grace_period: gp,
+        })
+    }
+
+    fn on_job_finished(&mut self, id: JobId, finished_at: Minutes) {
+        let Some(user) = self.in_flight.remove(&id.0) else {
+            return; // not ours (defensive; the simulator only reports ours)
+        };
+        if self.trials_left[user as usize] == 0 {
+            return; // user is done iterating
+        }
+        // Think, then resubmit. At least one minute passes: the arrival
+        // must land on a strictly later tick than the completion.
+        let think = self.think.sample(&mut self.think_rng).round().max(1.0) as u64;
+        self.ready.push(Reverse((finished_at.saturating_add(think), user)));
+    }
+
+    fn done(&self) -> bool {
+        self.ready.is_empty() && self.in_flight.is_empty()
+    }
+
+    fn feedback_driven(&self) -> bool {
+        true
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.total_jobs())
+    }
+}
+
+/// Drain an arrival source into a materialized [`Workload`] (diagnostics
+/// and tests; defeats the purpose for closed loops, which never yield
+/// beyond their first wave without completion feedback).
+pub fn collect_workload(source: &mut dyn ArrivalSource) -> Workload {
+    let mut jobs = Vec::new();
+    while let Some(spec) = source.next_job() {
+        jobs.push(spec);
+    }
+    Workload::new(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_source_streams_in_order() {
+        let wl = Workload::new(vec![
+            JobSpec::new(0, JobClass::Be, ResourceVec::new(1.0, 1.0, 0.0), 5, 5, 0),
+            JobSpec::new(1, JobClass::Te, ResourceVec::new(1.0, 1.0, 0.0), 2, 5, 0),
+        ]);
+        let mut src = WorkloadSource::new(&wl);
+        assert_eq!(src.size_hint(), Some(2));
+        assert_eq!(src.peek_submit(), Some(2));
+        let a = src.next_job().unwrap();
+        assert_eq!((a.id, a.submit), (JobId(0), 2));
+        assert!(!src.done());
+        let b = src.next_job().unwrap();
+        assert_eq!((b.id, b.submit), (JobId(1), 5));
+        assert!(src.done());
+        assert_eq!(src.next_job(), None);
+    }
+
+    #[test]
+    fn closed_loop_waits_for_completions() {
+        let mut src = ClosedLoopSource::new(ClosedLoopParams::demo(2, 2), 7);
+        assert_eq!(src.size_hint(), Some(4));
+        // First wave: one job per user, no more until something finishes.
+        let first = src.next_job().unwrap();
+        let second = src.next_job().unwrap();
+        assert_eq!(first.id, JobId(0));
+        assert_eq!(second.id, JobId(1));
+        assert!(first.submit <= second.submit, "ids dense in submit order");
+        assert_eq!(src.peek_submit(), None, "closed loop is blocked");
+        assert!(!src.done(), "users still mid-trial");
+
+        // A completion wakes the corresponding user.
+        src.on_job_finished(JobId(0), 100);
+        let at = src.peek_submit().expect("user 0 resubmits");
+        assert!(at > 100, "think time puts the arrival strictly later");
+        let third = src.next_job().unwrap();
+        assert_eq!(third.id, JobId(2));
+
+        // Finishing the last trials closes the loop.
+        src.on_job_finished(JobId(1), 120);
+        let fourth = src.next_job().unwrap();
+        assert_eq!(fourth.id, JobId(3));
+        src.on_job_finished(JobId(2), 130);
+        src.on_job_finished(JobId(3), 140);
+        assert!(src.done(), "all trials submitted and finished");
+        assert_eq!(src.next_job(), None);
+    }
+
+    #[test]
+    fn closed_loop_is_deterministic() {
+        let drive = || {
+            let mut src = ClosedLoopSource::new(ClosedLoopParams::demo(3, 2), 11);
+            let mut specs = Vec::new();
+            // Deterministic completion schedule.
+            let mut t = 50;
+            while let Some(s) = src.next_job() {
+                specs.push(s.clone());
+                src.on_job_finished(s.id, t);
+                t += 13;
+            }
+            specs
+        };
+        assert_eq!(drive(), drive());
+    }
+}

@@ -21,14 +21,18 @@
 //! target. The resulting submission times are frozen into the workload,
 //! and every policy replays the identical sequence.
 
+use super::source::ArrivalSource;
 use super::Workload;
 use crate::cluster::ClusterSpec;
 use crate::job::{Job, JobClass, JobId, JobSpec};
+use crate::job_table::JobTable;
 use crate::resources::ResourceVec;
 use crate::sched::policy::PolicyKind;
 use crate::sched::{SchedConfig, Scheduler};
 use crate::stats::dist::{Sample, TruncatedNormal};
 use crate::stats::rng::Pcg64;
+use crate::Minutes;
+use std::collections::VecDeque;
 
 /// Per-class demand/exec distribution bundle.
 #[derive(Debug, Clone)]
@@ -157,46 +161,131 @@ impl SyntheticWorkload {
     }
 
     /// Generate the workload: run the internal FIFO calibration sim and
-    /// freeze submission times.
+    /// freeze submission times. Equivalent to draining a
+    /// [`SyntheticSource`] — the streamed and materialized §4.2 workloads
+    /// are byte-identical (pinned by `rust/tests/streaming_equivalence.rs`).
     pub fn generate(&self) -> Workload {
-        let mut root = Pcg64::new(self.seed);
-        let mut demand_rng = root.split(1);
-        let mut gp_rng = root.split(2);
-        let mut class_rng = root.split(3);
-
-        let total_cap = self.cluster.total_capacity();
-        let mut sched = Scheduler::new(&self.cluster, SchedConfig::new(PolicyKind::Fifo));
-        let mut jobs: Vec<Job> = Vec::with_capacity(self.num_jobs);
-        let mut arrivals: Vec<JobId> = Vec::new();
-        let mut now: u64 = 0;
-        let mut drawn = 0usize;
-
-        while drawn < self.num_jobs {
-            // Inject while the FIFO outstanding load is below target.
-            arrivals.clear();
-            loop {
-                let load = sched
-                    .outstanding_demand(&jobs)
-                    .dominant_share(&total_cap);
-                if load >= self.target_load || drawn >= self.num_jobs {
-                    break;
-                }
-                let (class, demand, exec, gp) = self.draw_job(&mut demand_rng, &mut gp_rng, &mut class_rng);
-                let id = JobId(drawn as u32);
-                let spec = JobSpec { id, class, demand, submit: now, exec_time: exec, grace_period: gp };
-                jobs.push(Job::new(spec));
-                arrivals.push(id);
-                // The arrival immediately counts toward outstanding demand
-                // once submitted below.
-                sched.submit(&jobs[drawn]);
-                drawn += 1;
-            }
-            // Tick FIFO (arrivals were already submitted above; pass none).
-            sched.tick(now, &mut jobs, &[]);
-            now += 1;
+        let mut src = SyntheticSource::new(self.clone());
+        let mut jobs = Vec::with_capacity(self.num_jobs);
+        while let Some(spec) = src.next_job() {
+            jobs.push(spec);
         }
+        Workload::new(jobs)
+    }
 
-        Workload::new(jobs.into_iter().map(|j| j.spec).collect())
+    /// Stream this generator (jobs drawn on the fly; O(live) memory).
+    pub fn stream(&self) -> SyntheticSource {
+        SyntheticSource::new(self.clone())
+    }
+}
+
+/// The §4.2 generator as a pull-based [`ArrivalSource`]: jobs are drawn
+/// while the internal FIFO calibration simulation advances, one simulated
+/// minute at a time, and buffered only until the consumer pulls them. The
+/// calibration sim itself retires completed jobs from its job table, so
+/// generating an N-job workload is O(live jobs) resident — the workload is
+/// never materialized.
+pub struct SyntheticSource {
+    params: SyntheticWorkload,
+    demand_rng: Pcg64,
+    gp_rng: Pcg64,
+    class_rng: Pcg64,
+    total_cap: ResourceVec,
+    sched: Scheduler,
+    table: JobTable,
+    now: u64,
+    drawn: usize,
+    /// Jobs drawn but not yet pulled (at most one injection burst).
+    buffer: VecDeque<JobSpec>,
+}
+
+impl SyntheticSource {
+    /// Build the streaming generator (same RNG layout as `generate`, so
+    /// the job sequence is identical).
+    pub fn new(params: SyntheticWorkload) -> Self {
+        let mut root = Pcg64::new(params.seed);
+        let demand_rng = root.split(1);
+        let gp_rng = root.split(2);
+        let class_rng = root.split(3);
+        let total_cap = params.cluster.total_capacity();
+        let sched = Scheduler::new(&params.cluster, SchedConfig::new(PolicyKind::Fifo));
+        SyntheticSource {
+            demand_rng,
+            gp_rng,
+            class_rng,
+            total_cap,
+            sched,
+            table: JobTable::new(),
+            now: 0,
+            drawn: 0,
+            buffer: VecDeque::new(),
+            params,
+        }
+    }
+
+    /// Advance the calibration sim one simulated minute: inject while the
+    /// FIFO outstanding load is below target (buffering each drawn spec),
+    /// then tick and retire completions.
+    fn advance_minute(&mut self) {
+        loop {
+            let load = self
+                .sched
+                .outstanding_demand(&self.table)
+                .dominant_share(&self.total_cap);
+            if load >= self.params.target_load || self.drawn >= self.params.num_jobs {
+                break;
+            }
+            let (class, demand, exec, gp) =
+                self.params
+                    .draw_job(&mut self.demand_rng, &mut self.gp_rng, &mut self.class_rng);
+            let id = JobId(self.drawn as u32);
+            let spec = JobSpec {
+                id,
+                class,
+                demand,
+                submit: self.now,
+                exec_time: exec,
+                grace_period: gp,
+            };
+            self.table.insert(Job::new(spec.clone()));
+            // The arrival immediately counts toward outstanding demand.
+            self.sched.submit(&self.table[id]);
+            self.buffer.push_back(spec);
+            self.drawn += 1;
+        }
+        // Tick FIFO (arrivals were already submitted above; pass none).
+        let out = self.sched.tick(self.now, &mut self.table, &[]);
+        for id in &out.completed {
+            self.table.remove(*id);
+        }
+        self.now += 1;
+    }
+}
+
+impl ArrivalSource for SyntheticSource {
+    fn peek_submit(&mut self) -> Option<Minutes> {
+        loop {
+            if let Some(spec) = self.buffer.front() {
+                return Some(spec.submit);
+            }
+            if self.drawn >= self.params.num_jobs {
+                return None;
+            }
+            self.advance_minute();
+        }
+    }
+
+    fn next_job(&mut self) -> Option<JobSpec> {
+        self.peek_submit()?;
+        self.buffer.pop_front()
+    }
+
+    fn done(&self) -> bool {
+        self.buffer.is_empty() && self.drawn >= self.params.num_jobs
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.params.num_jobs)
     }
 }
 
@@ -273,6 +362,32 @@ mod tests {
         let max_gp = wl.jobs.iter().map(|j| j.grace_period).max().unwrap();
         assert!(max_gp > 20, "scaled GPs must exceed the 1.0-scale cap");
         assert!(max_gp <= 160);
+    }
+
+    #[test]
+    fn stream_matches_generate_byte_for_byte() {
+        let params = small();
+        let wl = params.generate();
+        let mut src = params.stream();
+        let mut streamed = Vec::new();
+        while let Some(s) = src.next_job() {
+            streamed.push(s);
+        }
+        assert!(src.done());
+        assert_eq!(wl.jobs, streamed, "streamed §4.2 jobs must equal the materialized ones");
+    }
+
+    #[test]
+    fn streaming_generator_retires_calibration_jobs() {
+        let mut src = small().stream();
+        while src.next_job().is_some() {}
+        // The internal calibration sim must not have materialized the
+        // whole workload: its job table holds only the live backlog.
+        assert!(
+            src.table.peak_live() < 512,
+            "calibration table peaked at {} of 512 jobs",
+            src.table.peak_live()
+        );
     }
 
     #[test]

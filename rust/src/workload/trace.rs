@@ -2,11 +2,14 @@
 //!
 //! The paper replays a six-month trace (~50k jobs > 180 s) of the private
 //! cluster at the authors' institution. That trace is not public, so —
-//! per the substitution rule in DESIGN.md §3 — `synthesize_institution`
-//! builds a statistically similar stand-in: heavy-tailed (lognormal)
+//! per the substitution rule in DESIGN.md §3 — [`InstitutionSource`]
+//! synthesizes a statistically similar stand-in: heavy-tailed (lognormal)
 //! execution times, a diurnal arrival rate with bursts, per-class demand
 //! marginals, and GP lengths sampled from the §4.2 distribution (the paper
 //! itself had to synthesize GPs for the trace experiment too).
+//! [`Trace::synthesize_institution`] materializes it;
+//! [`InstitutionSource`] streams it one job at a time, which is how the
+//! million-job `scale` bench runs it.
 //!
 //! The CSV format lets a *real* trace be replayed instead:
 //!
@@ -14,14 +17,87 @@
 //! id,class,submit_min,exec_min,grace_min,cpu,ram_gb,gpu
 //! 0,TE,0,12,3,2,16,1
 //! ```
+//!
+//! [`Trace::from_csv`] materializes a whole file;
+//! [`CsvStreamSource`] streams it through a buffered reader (`fitgpp
+//! replay --stream`), never holding more than one row. Both accept CRLF
+//! line endings and whitespace around fields, and both reject non-monotone
+//! `submit_min` — an unsorted trace would otherwise break the simulator's
+//! submission-order invariants at a distance. Duplicate job ids are
+//! rejected by `from_csv` only: the streamer *reassigns* ids densely in
+//! row order (it cannot hold a seen-id set in O(1) memory), so the CSV id
+//! column is echo data on that path.
 
+use super::source::ArrivalSource;
 use super::Workload;
-use crate::job::{JobClass, JobSpec};
+use crate::job::{JobClass, JobId, JobSpec};
 use crate::resources::ResourceVec;
 use crate::stats::dist::{LogNormal, Sample, TruncatedNormal};
 use crate::stats::rng::Pcg64;
+use crate::Minutes;
 use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
+use std::io::BufRead;
 use std::path::Path;
+
+/// The required CSV header.
+const HEADER: &str = "id,class,submit_min,exec_min,grace_min,cpu,ram_gb,gpu";
+
+/// One parsed CSV data row (before id/order validation).
+struct Row {
+    id: u32,
+    class: JobClass,
+    submit: Minutes,
+    exec: Minutes,
+    grace: Minutes,
+    demand: ResourceVec,
+}
+
+/// Parse one line. `Ok(None)` for blank lines and `#` comments. Tolerates
+/// CRLF endings and spaces around fields.
+fn parse_row(lineno: usize, line: &str) -> Result<Option<Row>> {
+    let line = line.trim_end_matches('\r').trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+    if cols.len() != 8 {
+        bail!("line {lineno}: expected 8 columns, got {}", cols.len());
+    }
+    let class = match cols[1] {
+        "TE" | "te" => JobClass::Te,
+        "BE" | "be" => JobClass::Be,
+        other => bail!("line {lineno}: bad class {other:?}"),
+    };
+    let parse_u64 = |i: usize| -> Result<u64> {
+        cols[i]
+            .parse::<u64>()
+            .with_context(|| format!("line {lineno}: column {i}"))
+    };
+    let parse_f64 = |i: usize| -> Result<f64> {
+        cols[i]
+            .parse::<f64>()
+            .with_context(|| format!("line {lineno}: column {i}"))
+    };
+    Ok(Some(Row {
+        id: cols[0]
+            .parse()
+            .with_context(|| format!("line {lineno}: id"))?,
+        class,
+        submit: parse_u64(2)?,
+        exec: parse_u64(3)?.max(1),
+        grace: parse_u64(4)?,
+        demand: ResourceVec::new(parse_f64(5)?, parse_f64(6)?, parse_f64(7)?),
+    }))
+}
+
+/// Check a header line (CRLF/whitespace tolerant).
+fn check_header(header: &str) -> Result<()> {
+    if header.trim_end_matches('\r').trim() != HEADER {
+        bail!("bad trace header: {header:?} (expected {HEADER:?})");
+    }
+    Ok(())
+}
 
 /// Trace I/O entry points.
 pub struct Trace;
@@ -29,7 +105,8 @@ pub struct Trace;
 impl Trace {
     /// Serialize a workload to the CSV trace format.
     pub fn to_csv(workload: &Workload) -> String {
-        let mut out = String::from("id,class,submit_min,exec_min,grace_min,cpu,ram_gb,gpu\n");
+        let mut out = String::from(HEADER);
+        out.push('\n');
         for j in &workload.jobs {
             out.push_str(&format!(
                 "{},{},{},{},{},{},{},{}\n",
@@ -46,46 +123,41 @@ impl Trace {
         out
     }
 
-    /// Parse the CSV trace format (header required).
+    /// Parse the CSV trace format (header required). Rejects duplicate job
+    /// ids and rows whose `submit_min` decreases — both would silently
+    /// corrupt the simulator's submission-order invariants after the
+    /// workload's ids are renumbered.
     pub fn from_csv(text: &str) -> Result<Workload> {
         let mut lines = text.lines().enumerate();
         let (_, header) = lines.next().context("empty trace")?;
-        let expect = "id,class,submit_min,exec_min,grace_min,cpu,ram_gb,gpu";
-        if header.trim() != expect {
-            bail!("bad trace header: {header:?} (expected {expect:?})");
-        }
+        check_header(header)?;
         let mut jobs = Vec::new();
+        let mut seen_ids: HashSet<u32> = HashSet::new();
+        let mut last_submit: Option<Minutes> = None;
         for (lineno, line) in lines {
-            let line = line.trim();
-            if line.is_empty() || line.starts_with('#') {
+            let Some(row) = parse_row(lineno + 1, line)? else {
                 continue;
+            };
+            if !seen_ids.insert(row.id) {
+                bail!("line {}: duplicate job id {}", lineno + 1, row.id);
             }
-            let cols: Vec<&str> = line.split(',').collect();
-            if cols.len() != 8 {
-                bail!("line {}: expected 8 columns, got {}", lineno + 1, cols.len());
+            if let Some(prev) = last_submit {
+                if row.submit < prev {
+                    bail!(
+                        "line {}: submit_min {} decreases (previous row was {prev}); traces must be sorted by submission time",
+                        lineno + 1,
+                        row.submit
+                    );
+                }
             }
-            let class = match cols[1] {
-                "TE" | "te" => JobClass::Te,
-                "BE" | "be" => JobClass::Be,
-                other => bail!("line {}: bad class {other:?}", lineno + 1),
-            };
-            let parse_u64 = |i: usize| -> Result<u64> {
-                cols[i]
-                    .parse::<u64>()
-                    .with_context(|| format!("line {}: column {}", lineno + 1, i))
-            };
-            let parse_f64 = |i: usize| -> Result<f64> {
-                cols[i]
-                    .parse::<f64>()
-                    .with_context(|| format!("line {}: column {}", lineno + 1, i))
-            };
+            last_submit = Some(row.submit);
             jobs.push(JobSpec {
-                id: crate::job::JobId(cols[0].parse().with_context(|| format!("line {}: id", lineno + 1))?),
-                class,
-                submit: parse_u64(2)?,
-                exec_time: parse_u64(3)?.max(1),
-                grace_period: parse_u64(4)?,
-                demand: ResourceVec::new(parse_f64(5)?, parse_f64(6)?, parse_f64(7)?),
+                id: JobId(row.id),
+                class: row.class,
+                submit: row.submit,
+                exec_time: row.exec,
+                grace_period: row.grace,
+                demand: row.demand,
             });
         }
         Ok(Workload::new(jobs))
@@ -102,69 +174,265 @@ impl Trace {
         Self::from_csv(&text)
     }
 
-    /// Synthesize the institution-trace stand-in (§4.4). `days` of
-    /// submissions; ~`jobs_per_day` arrivals per day with diurnal +
-    /// bursty modulation; heavy-tailed exec times.
+    /// Materialize the institution-trace stand-in (§4.4) by draining
+    /// [`InstitutionSource`] — the streamed and materialized traces are
+    /// byte-identical.
     pub fn synthesize_institution(seed: u64, num_jobs: usize) -> Workload {
-        let mut root = Pcg64::new(seed);
-        let mut arrival_rng = root.split(1);
-        let mut body_rng = root.split(2);
-        let mut gp_rng = root.split(3);
-
-        // Heavy-tailed execution times (minutes). TE: median 5, p95 25
-        // (capped at 30 per the TE definition). BE: median 25, p95 600,
-        // capped at 24 h — the long tail that makes FIFO head-of-line
-        // blocking catastrophic in Table 5.
-        let te_exec = LogNormal::from_median_p95(5.0, 25.0);
-        let be_exec = LogNormal::from_median_p95(25.0, 600.0);
-        // Demands: same marginals as §4.2 (Fig. 2 is the common source).
-        let params = super::synthetic::SyntheticWorkload::paper_section_4_2(seed);
-        let gp_dist = TruncatedNormal::new(3.0, 4.0, 0.0, 20.0);
-
+        let mut src = InstitutionSource::new(seed, num_jobs);
         let mut jobs = Vec::with_capacity(num_jobs);
-        let mut now_f = 0.0f64;
-        // Base rate: ~2.0 jobs/min daytime, ~0.3 nighttime, occasional
-        // 30-minute bursts at 6× (paper-style "everyone debugging at once").
-        let mut burst_until = 0.0f64;
-        for i in 0..num_jobs {
-            let minute_of_day = (now_f as u64) % 1440;
-            let day_phase = (minute_of_day as f64 / 1440.0) * std::f64::consts::TAU;
-            // Diurnal: peak early afternoon, trough at night.
-            let diurnal = 1.15 - (day_phase - 0.6).cos();
-            let mut rate = 0.25 + 1.75 * (diurnal / 2.15).clamp(0.0, 1.0);
-            if now_f < burst_until {
-                rate *= 6.0;
-            } else if arrival_rng.chance(0.0005) {
-                burst_until = now_f + 30.0;
-            }
-            let gap = -(1.0 - arrival_rng.next_f64()).ln() / rate;
-            now_f += gap;
-
-            let class = if body_rng.chance(0.30) { JobClass::Te } else { JobClass::Be };
-            let (dists, exec_dist, cap): (_, &LogNormal, f64) = match class {
-                JobClass::Te => (&params.te, &te_exec, 30.0),
-                JobClass::Be => (&params.be, &be_exec, 1440.0),
-            };
-            let exec = exec_dist.sample(&mut body_rng).min(cap).max(1.0).round() as u64;
-            let cpu = dists.cpu.sample(&mut body_rng).round().max(1.0);
-            let ram = dists.ram_gb.sample(&mut body_rng).round().max(1.0);
-            let gpu = if body_rng.chance(params.cpu_only_fraction) {
-                0.0
-            } else {
-                dists.gpu.sample(&mut body_rng).round().max(0.0)
-            };
-            let demand = ResourceVec::new(cpu, ram, gpu).min(&ResourceVec::pfn_node());
-            let gp = gp_dist.sample(&mut gp_rng).round().max(0.0) as u64;
-            jobs.push(JobSpec {
-                id: crate::job::JobId(i as u32),
-                class,
-                submit: now_f as u64,
-                exec_time: exec,
-                grace_period: gp,
-                demand,
-            });
+        while let Some(spec) = src.next_job() {
+            jobs.push(spec);
         }
         Workload::new(jobs)
+    }
+}
+
+/// The §4.4 institution-trace synthesizer as a pull-based stream: one job
+/// generated per pull, O(1) resident state. `days` worth of submissions
+/// with diurnal + bursty arrival modulation and heavy-tailed (lognormal)
+/// execution times — the long BE tail that makes FIFO head-of-line
+/// blocking catastrophic in Table 5.
+pub struct InstitutionSource {
+    arrival_rng: Pcg64,
+    body_rng: Pcg64,
+    gp_rng: Pcg64,
+    te_exec: LogNormal,
+    be_exec: LogNormal,
+    params: super::synthetic::SyntheticWorkload,
+    gp_dist: TruncatedNormal,
+    num_jobs: usize,
+    generated: usize,
+    now_f: f64,
+    burst_until: f64,
+    pending: Option<JobSpec>,
+}
+
+impl InstitutionSource {
+    /// Build the stream. Deterministic per `(seed, num_jobs)` and
+    /// prefix-stable: the first `k` jobs do not depend on `num_jobs`.
+    pub fn new(seed: u64, num_jobs: usize) -> Self {
+        let mut root = Pcg64::new(seed);
+        let arrival_rng = root.split(1);
+        let body_rng = root.split(2);
+        let gp_rng = root.split(3);
+        InstitutionSource {
+            arrival_rng,
+            body_rng,
+            gp_rng,
+            // Heavy-tailed execution times (minutes). TE: median 5, p95 25
+            // (capped at 30 per the TE definition). BE: median 25, p95
+            // 600, capped at 24 h.
+            te_exec: LogNormal::from_median_p95(5.0, 25.0),
+            be_exec: LogNormal::from_median_p95(25.0, 600.0),
+            // Demands: same marginals as §4.2 (Fig. 2 is the common source).
+            params: super::synthetic::SyntheticWorkload::paper_section_4_2(seed),
+            gp_dist: TruncatedNormal::new(3.0, 4.0, 0.0, 20.0),
+            num_jobs,
+            generated: 0,
+            now_f: 0.0,
+            burst_until: 0.0,
+            pending: None,
+        }
+    }
+
+    /// Generate the next job into `pending` if any remain.
+    fn refill(&mut self) {
+        if self.pending.is_some() || self.generated >= self.num_jobs {
+            return;
+        }
+        let minute_of_day = (self.now_f as u64) % 1440;
+        let day_phase = (minute_of_day as f64 / 1440.0) * std::f64::consts::TAU;
+        // Diurnal: peak early afternoon, trough at night. Base rate ~2.0
+        // jobs/min daytime, ~0.3 nighttime, occasional 30-minute bursts at
+        // 6x (paper-style "everyone debugging at once").
+        let diurnal = 1.15 - (day_phase - 0.6).cos();
+        let mut rate = 0.25 + 1.75 * (diurnal / 2.15).clamp(0.0, 1.0);
+        if self.now_f < self.burst_until {
+            rate *= 6.0;
+        } else if self.arrival_rng.chance(0.0005) {
+            self.burst_until = self.now_f + 30.0;
+        }
+        let gap = -(1.0 - self.arrival_rng.next_f64()).ln() / rate;
+        self.now_f += gap;
+
+        let class = if self.body_rng.chance(0.30) { JobClass::Te } else { JobClass::Be };
+        let (dists, exec_dist, cap): (_, &LogNormal, f64) = match class {
+            JobClass::Te => (&self.params.te, &self.te_exec, 30.0),
+            JobClass::Be => (&self.params.be, &self.be_exec, 1440.0),
+        };
+        let exec = exec_dist.sample(&mut self.body_rng).min(cap).max(1.0).round() as u64;
+        let cpu = dists.cpu.sample(&mut self.body_rng).round().max(1.0);
+        let ram = dists.ram_gb.sample(&mut self.body_rng).round().max(1.0);
+        let gpu = if self.body_rng.chance(self.params.cpu_only_fraction) {
+            0.0
+        } else {
+            dists.gpu.sample(&mut self.body_rng).round().max(0.0)
+        };
+        let demand = ResourceVec::new(cpu, ram, gpu).min(&ResourceVec::pfn_node());
+        // GP from its own RNG stream, so the demand draws stay aligned
+        // whatever the GP distribution does.
+        let gp = self.gp_dist.sample(&mut self.gp_rng).round().max(0.0) as u64;
+        let spec = JobSpec {
+            id: JobId(self.generated as u32),
+            class,
+            submit: self.now_f as u64,
+            exec_time: exec,
+            grace_period: gp,
+            demand,
+        };
+        self.generated += 1;
+        self.pending = Some(spec);
+    }
+}
+
+impl ArrivalSource for InstitutionSource {
+    fn peek_submit(&mut self) -> Option<Minutes> {
+        self.refill();
+        self.pending.as_ref().map(|s| s.submit)
+    }
+
+    fn next_job(&mut self) -> Option<JobSpec> {
+        self.refill();
+        self.pending.take()
+    }
+
+    fn done(&self) -> bool {
+        self.pending.is_none() && self.generated >= self.num_jobs
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.num_jobs)
+    }
+}
+
+/// Stream a CSV trace through a buffered reader: at most one row resident.
+///
+/// Ids are re-assigned densely in row order (matching what
+/// `Workload::new` does for the materialized path), so the CSV id column
+/// is not validated here — duplicate-id rejection needs the whole file
+/// and lives in [`Trace::from_csv`]. Rows must be sorted by `submit_min`:
+/// a decreasing submit aborts the stream with an error surfaced via
+/// [`CsvStreamSource::error`], since a pull-based source cannot sort what
+/// it has not read.
+pub struct CsvStreamSource<R: BufRead> {
+    reader: R,
+    pending: Option<JobSpec>,
+    next_id: u32,
+    last_submit: Minutes,
+    lineno: usize,
+    eof: bool,
+    error: Option<anyhow::Error>,
+}
+
+impl CsvStreamSource<std::io::BufReader<std::fs::File>> {
+    /// Open a CSV trace file for streaming (header validated eagerly).
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::from_reader(std::io::BufReader::new(file))
+    }
+}
+
+impl<R: BufRead> CsvStreamSource<R> {
+    /// Stream from any buffered reader (header validated eagerly).
+    pub fn from_reader(mut reader: R) -> Result<Self> {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            bail!("empty trace");
+        }
+        check_header(&header)?;
+        Ok(CsvStreamSource {
+            reader,
+            pending: None,
+            next_id: 0,
+            last_submit: 0,
+            lineno: 1,
+            eof: false,
+            error: None,
+        })
+    }
+
+    /// The error that aborted the stream, if any. Callers should check
+    /// this after the run: a mid-stream parse error ends the stream early
+    /// rather than panicking inside the simulator.
+    pub fn error(&self) -> Option<&anyhow::Error> {
+        self.error.as_ref()
+    }
+
+    /// Rows successfully streamed so far.
+    pub fn rows_yielded(&self) -> u32 {
+        self.next_id
+    }
+
+    fn refill(&mut self) {
+        if self.pending.is_some() || self.eof || self.error.is_some() {
+            return;
+        }
+        let mut line = String::new();
+        loop {
+            line.clear();
+            self.lineno += 1;
+            match self.reader.read_line(&mut line) {
+                Ok(0) => {
+                    self.eof = true;
+                    return;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    self.error = Some(
+                        anyhow::Error::from(e)
+                            .context(format!("reading trace line {}", self.lineno)),
+                    );
+                    return;
+                }
+            }
+            match parse_row(self.lineno, &line) {
+                Ok(None) => continue, // blank/comment
+                Ok(Some(row)) => {
+                    if row.submit < self.last_submit {
+                        self.error = Some(anyhow::anyhow!(
+                            "line {}: submit_min {} decreases (previous row was {}); streamed traces must be sorted",
+                            self.lineno,
+                            row.submit,
+                            self.last_submit
+                        ));
+                        return;
+                    }
+                    self.last_submit = row.submit;
+                    let id = JobId(self.next_id);
+                    self.next_id += 1;
+                    self.pending = Some(JobSpec {
+                        id,
+                        class: row.class,
+                        submit: row.submit,
+                        exec_time: row.exec,
+                        grace_period: row.grace,
+                        demand: row.demand,
+                    });
+                    return;
+                }
+                Err(e) => {
+                    self.error = Some(e);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl<R: BufRead> ArrivalSource for CsvStreamSource<R> {
+    fn peek_submit(&mut self) -> Option<Minutes> {
+        self.refill();
+        self.pending.as_ref().map(|s| s.submit)
+    }
+
+    fn next_job(&mut self) -> Option<JobSpec> {
+        self.refill();
+        self.pending.take()
+    }
+
+    fn done(&self) -> bool {
+        self.pending.is_none() && (self.eof || self.error.is_some())
     }
 }
 
@@ -197,6 +465,64 @@ mod tests {
         let text = "id,class,submit_min,exec_min,grace_min,cpu,ram_gb,gpu\n\n# c\n0,TE,0,5,0,1,1,0\n";
         let wl = Trace::from_csv(text).unwrap();
         assert_eq!(wl.len(), 1);
+    }
+
+    #[test]
+    fn accepts_crlf_and_spaces() {
+        let text = "id,class,submit_min,exec_min,grace_min,cpu,ram_gb,gpu\r\n 0 , TE , 0 , 5 , 0 , 1 , 1 , 0 \r\n1,be,3,7,2,2,8,1\r\n";
+        let wl = Trace::from_csv(text).unwrap();
+        assert_eq!(wl.len(), 2);
+        assert_eq!(wl.jobs[0].class, JobClass::Te);
+        assert_eq!(wl.jobs[1].submit, 3);
+    }
+
+    #[test]
+    fn rejects_duplicate_ids_and_non_monotone_submits() {
+        let h = "id,class,submit_min,exec_min,grace_min,cpu,ram_gb,gpu";
+        let dup = format!("{h}\n0,TE,0,5,0,1,1,0\n0,BE,1,5,0,1,1,0\n");
+        let err = Trace::from_csv(&dup).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate job id"), "{err:#}");
+        let unsorted = format!("{h}\n0,TE,5,5,0,1,1,0\n1,BE,2,5,0,1,1,0\n");
+        let err = Trace::from_csv(&unsorted).unwrap_err();
+        assert!(format!("{err:#}").contains("decreases"), "{err:#}");
+    }
+
+    #[test]
+    fn stream_source_matches_from_csv() {
+        let wl = Trace::synthesize_institution(5, 300);
+        let csv = Trace::to_csv(&wl);
+        let mut src = CsvStreamSource::from_reader(std::io::Cursor::new(csv.as_bytes())).unwrap();
+        let mut streamed = Vec::new();
+        while let Some(s) = src.next_job() {
+            streamed.push(s);
+        }
+        assert!(src.error().is_none());
+        assert!(src.done());
+        assert_eq!(streamed, wl.jobs);
+    }
+
+    #[test]
+    fn stream_source_surfaces_mid_stream_errors() {
+        let h = "id,class,submit_min,exec_min,grace_min,cpu,ram_gb,gpu";
+        let text = format!("{h}\n0,TE,5,5,0,1,1,0\n1,BE,2,5,0,1,1,0\n");
+        let mut src = CsvStreamSource::from_reader(std::io::Cursor::new(text.into_bytes())).unwrap();
+        assert!(src.next_job().is_some(), "first row is fine");
+        assert!(src.next_job().is_none(), "stream stops at the bad row");
+        assert!(src.done());
+        assert!(format!("{:#}", src.error().unwrap()).contains("decreases"));
+        assert_eq!(src.rows_yielded(), 1);
+    }
+
+    #[test]
+    fn institution_stream_matches_materialized() {
+        let wl = Trace::synthesize_institution(7, 400);
+        let mut src = InstitutionSource::new(7, 400);
+        let mut streamed = Vec::new();
+        while let Some(s) = src.next_job() {
+            streamed.push(s);
+        }
+        assert!(src.done());
+        assert_eq!(streamed, wl.jobs);
     }
 
     #[test]

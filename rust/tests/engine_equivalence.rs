@@ -19,6 +19,7 @@
 
 use fitgpp::cluster::{Cluster, ClusterSpec, NodeId};
 use fitgpp::job::{Job, JobClass, JobId, JobSpec};
+use fitgpp::job_table::JobTable;
 use fitgpp::prop_assert;
 use fitgpp::resources::ResourceVec;
 use fitgpp::sched::policy::{build_policy, PolicyCtx, PolicyKind, PreemptionPlan};
@@ -269,7 +270,7 @@ mod pre_refactor_oracle {
             let Some(id) = pool.next() else {
                 return None;
             };
-            let j = &ctx.jobs[id.0 as usize];
+            let j = &ctx.jobs[id];
             let node = j.node.expect("running");
             projected[node.0 as usize] += j.spec.demand;
             victims.push(id);
@@ -288,7 +289,7 @@ mod pre_refactor_oracle {
         }
         let mut pool = ctx.running_be();
         if let Some(p) = p_max {
-            pool.retain(|id| ctx.jobs[id.0 as usize].preemptions < p);
+            pool.retain(|id| ctx.jobs[*id].preemptions < p);
         }
 
         let mut projected: Vec<ResourceVec> = ctx.effective_free.to_vec();
@@ -318,7 +319,7 @@ mod pre_refactor_oracle {
                 return None;
             };
             let id = pool.swap_remove(i);
-            let j = &ctx.jobs[id.0 as usize];
+            let j = &ctx.jobs[id];
             let node = j.node.expect("running");
             projected[node.0 as usize] += j.spec.demand;
             victims.push(id);
@@ -367,6 +368,7 @@ fn prop_trait_policies_match_pre_refactor_oracle() {
         let (cluster, jobs) = random_cluster_state(rng);
         let free: Vec<ResourceVec> = cluster.nodes.iter().map(|n| n.free).collect();
         let remaining: Vec<u64> = jobs.iter().map(|j| j.remaining).collect();
+        let jobs = JobTable::from_jobs(jobs);
         let oracle = |id: JobId| remaining[id.0 as usize];
         let ctx = PolicyCtx {
             cluster: &cluster,

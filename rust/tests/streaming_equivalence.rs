@@ -1,0 +1,258 @@
+//! Equivalence properties of the streaming scale layer.
+//!
+//! 1. **Source equivalence** — a streamed [`ArrivalSource`] must
+//!    reproduce the materialized [`Workload`] run byte-for-byte (records,
+//!    makespan, simulated minutes) across every policy and both simulator
+//!    drive modes: the §4.2 generator stream, the §4.4 institution stream,
+//!    and the buffered CSV stream against their materialized twins.
+//! 2. **Sketch accuracy** — the mergeable quantile sketch backing
+//!    streamed (no-records) runs must stay within 1% relative error of the
+//!    exact percentiles, both on raw heavy-tailed lognormal samples and on
+//!    the TE/BE slowdown distributions of a ≥100k-job institution trace.
+//! 3. **Closed loop** — the completion-fed source is deterministic,
+//!    bounded by the user count (peak live set ≤ users), and identical
+//!    under both drive modes — no fixed trace can express it, so the only
+//!    oracle is the per-minute drive mode.
+
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::job::JobClass;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
+use fitgpp::stats::dist::{LogNormal, Sample};
+use fitgpp::stats::rng::Pcg64;
+use fitgpp::stats::sketch::QuantileSketch;
+use fitgpp::stats::summary::percentile;
+use fitgpp::workload::source::{ClosedLoopParams, ClosedLoopSource};
+use fitgpp::workload::synthetic::SyntheticWorkload;
+use fitgpp::workload::trace::{CsvStreamSource, InstitutionSource, Trace};
+
+fn all_policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::Fifo,
+        PolicyKind::FastLane,
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        PolicyKind::Srtf,
+        PolicyKind::Youngest,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+    ]
+}
+
+fn cfg(cluster: &ClusterSpec, policy: PolicyKind, engine: SimEngine) -> SimConfig {
+    let mut cfg = SimConfig::new(cluster.clone(), policy);
+    cfg.engine = engine;
+    cfg.seed = 0xA11CE;
+    cfg.paranoid = true;
+    cfg
+}
+
+fn assert_identical(streamed: &SimResult, materialized: &SimResult, what: &str) {
+    assert_eq!(streamed.makespan, materialized.makespan, "{what}: makespan");
+    assert_eq!(
+        streamed.records.len(),
+        materialized.records.len(),
+        "{what}: record count"
+    );
+    for (a, b) in streamed.records.iter().zip(&materialized.records) {
+        assert_eq!(a, b, "{what}: record {:?}", a.id);
+        assert_eq!(
+            a.slowdown.to_bits(),
+            b.slowdown.to_bits(),
+            "{what}: slowdown bits of {:?}",
+            a.id
+        );
+    }
+    assert_eq!(
+        streamed.sched_stats.ticks, materialized.sched_stats.ticks,
+        "{what}: simulated minutes"
+    );
+    assert_eq!(streamed.unfinished, materialized.unfinished, "{what}: unfinished");
+    assert_eq!(
+        streamed.metrics, materialized.metrics,
+        "{what}: streaming sinks diverge"
+    );
+}
+
+#[test]
+fn synthetic_stream_matches_materialized_run_for_all_policies() {
+    let cluster = ClusterSpec::tiny(3);
+    let params = SyntheticWorkload::paper_section_4_2(23)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(300);
+    let wl = params.generate();
+    for policy in all_policies() {
+        for engine in [SimEngine::EventHorizon, SimEngine::PerMinute] {
+            let materialized = Simulator::new(cfg(&cluster, policy, engine)).run(&wl);
+            let streamed = Simulator::new(cfg(&cluster, policy, engine))
+                .run_source(&mut params.stream());
+            assert_identical(&streamed, &materialized, &format!("{policy:?}/{engine:?}"));
+        }
+    }
+}
+
+#[test]
+fn institution_and_csv_streams_match_materialized_run() {
+    let cluster = ClusterSpec::tiny(4);
+    let wl = Trace::synthesize_institution(31, 600);
+    let csv = Trace::to_csv(&wl);
+    for engine in [SimEngine::EventHorizon, SimEngine::PerMinute] {
+        let policy = PolicyKind::FitGpp { s: 4.0, p_max: Some(1) };
+        let materialized = Simulator::new(cfg(&cluster, policy, engine)).run(&wl);
+
+        let mut inst = InstitutionSource::new(31, 600);
+        let streamed = Simulator::new(cfg(&cluster, policy, engine)).run_source(&mut inst);
+        assert_identical(&streamed, &materialized, &format!("institution/{engine:?}"));
+
+        let mut csv_src =
+            CsvStreamSource::from_reader(std::io::Cursor::new(csv.as_bytes())).unwrap();
+        let streamed = Simulator::new(cfg(&cluster, policy, engine)).run_source(&mut csv_src);
+        assert!(csv_src.error().is_none());
+        assert_identical(&streamed, &materialized, &format!("csv/{engine:?}"));
+    }
+}
+
+#[test]
+fn stream_with_lookahead_matches_materialized_run() {
+    let cluster = ClusterSpec::tiny(2);
+    let params = SyntheticWorkload::paper_section_4_2(5)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(200);
+    let wl = params.generate();
+    let policy = PolicyKind::Lrtp;
+    let materialized = Simulator::new(cfg(&cluster, policy, SimEngine::EventHorizon)).run(&wl);
+    for lookahead in [1u64, 32, 1 << 20] {
+        let mut c = cfg(&cluster, policy, SimEngine::EventHorizon);
+        c.arrival_lookahead = lookahead;
+        let streamed = Simulator::new(c).run_source(&mut params.stream());
+        assert_identical(&streamed, &materialized, &format!("lookahead {lookahead}"));
+    }
+}
+
+#[test]
+fn sketch_tracks_exact_percentiles_on_heavy_tailed_lognormals() {
+    // Satellite property test: sketch p50/p95/p99 within 1% relative error
+    // of exact stats::summary percentiles on heavy-tailed lognormal
+    // samples (the BE slowdown regime), across seeds and tail weights.
+    for (seed, median, p95) in [(1u64, 2.0, 20.0), (2, 3.0, 80.0), (3, 1.2, 400.0)] {
+        let dist = LogNormal::from_median_p95(median, p95);
+        let mut rng = Pcg64::new(seed);
+        let mut sketch = QuantileSketch::new();
+        let mut xs = Vec::with_capacity(100_000);
+        for _ in 0..100_000 {
+            let v = 1.0 + dist.sample(&mut rng);
+            sketch.insert(v);
+            xs.push(v);
+        }
+        for p in [50.0, 95.0, 99.0] {
+            let exact = percentile(&xs, p);
+            let est = sketch.percentile(p);
+            let rel = (est - exact).abs() / exact;
+            assert!(
+                rel < 0.01,
+                "seed {seed} p{p}: exact {exact}, sketch {est}, rel {rel}"
+            );
+        }
+    }
+}
+
+#[test]
+fn streamed_reports_within_one_percent_on_100k_job_trace() {
+    // Acceptance: with record_jobs off, sketch-backed TE/BE p50/p95/p99
+    // stay within 1% relative error of the exact values on a >= 100k-job
+    // institution trace. The sink is identical with records on or off
+    // (pinned in sim unit tests), so one records-on run provides both the
+    // exact and the sketch values.
+    let jobs = fitgpp::benchkit::env_usize("FITGPP_STREAM_TEST_JOBS", 100_000);
+    let mut source = InstitutionSource::new(12, jobs);
+    let mut c = cfg(&ClusterSpec::pfn(), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        SimEngine::EventHorizon);
+    c.paranoid = false; // full invariant sweeps are too slow at 100k jobs
+    let res = Simulator::new(c).run_source(&mut source);
+    assert_eq!(res.metrics.jobs_seen, jobs as u64);
+    assert_eq!(res.unfinished, 0);
+    assert!(
+        res.peak_live < jobs / 2,
+        "live set ({}) must stay well below total jobs ({jobs})",
+        res.peak_live
+    );
+
+    let exact_te = fitgpp::metrics::Percentiles::of(&res.slowdowns(JobClass::Te));
+    let exact_be = fitgpp::metrics::Percentiles::of(&res.slowdowns(JobClass::Be));
+    let sketch = res.metrics.slowdown_report();
+    for (what, exact, est) in [
+        ("te.p50", exact_te.p50, sketch.te.p50),
+        ("te.p95", exact_te.p95, sketch.te.p95),
+        ("te.p99", exact_te.p99, sketch.te.p99),
+        ("be.p50", exact_be.p50, sketch.be.p50),
+        ("be.p95", exact_be.p95, sketch.be.p95),
+        ("be.p99", exact_be.p99, sketch.be.p99),
+    ] {
+        let rel = (est - exact).abs() / exact;
+        assert!(rel < 0.01, "{what}: exact {exact}, sketch {est}, rel {rel}");
+    }
+}
+
+#[test]
+fn closed_loop_is_deterministic_and_bounded_by_users() {
+    let cluster = ClusterSpec::tiny(3);
+    let params = ClosedLoopParams::demo(12, 6);
+    let run = |engine: SimEngine| {
+        let mut source = ClosedLoopSource::new(params.clone(), 42);
+        Simulator::new(cfg(&cluster, PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, engine))
+            .run_source(&mut source)
+    };
+    let a = run(SimEngine::EventHorizon);
+    let b = run(SimEngine::EventHorizon);
+    assert_eq!(a.records, b.records, "closed loop must be deterministic");
+
+    // The per-minute drive mode is the only oracle for a feedback source.
+    let pm = run(SimEngine::PerMinute);
+    assert_identical(&a, &pm, "closed-loop engines");
+
+    assert_eq!(a.metrics.jobs_seen, 12 * 6, "every trial ran");
+    assert_eq!(a.unfinished, 0);
+    assert!(
+        a.peak_live <= 12,
+        "each user has at most one job in flight (peak {})",
+        a.peak_live
+    );
+    // Think time really separates a user's trials: with 12 users and think
+    // ~10 min the run must span well past the ramp window.
+    assert!(a.makespan > params.ramp, "makespan {} vs ramp {}", a.makespan, params.ramp);
+}
+
+#[test]
+fn closed_loop_clamps_arrival_lookahead() {
+    // A feedback-driven source must never be pulled ahead of `now`: a
+    // completion can schedule a resubmission *earlier* than an already
+    // visible arrival. The simulator clamps the lookahead to zero for
+    // such sources, so any configured window changes nothing.
+    let cluster = ClusterSpec::tiny(3);
+    let run = |lookahead: u64| {
+        let mut source = ClosedLoopSource::new(ClosedLoopParams::demo(6, 3), 9);
+        let mut c = cfg(
+            &cluster,
+            PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+            SimEngine::EventHorizon,
+        );
+        c.arrival_lookahead = lookahead;
+        Simulator::new(c).run_source(&mut source)
+    };
+    let base = run(0);
+    for lookahead in [1u64, 64, 1 << 20] {
+        assert_eq!(base.records, run(lookahead).records, "lookahead {lookahead}");
+    }
+}
+
+#[test]
+fn closed_loop_source_seed_changes_schedule() {
+    let cluster = ClusterSpec::tiny(3);
+    let run = |seed: u64| {
+        let mut source = ClosedLoopSource::new(ClosedLoopParams::demo(8, 4), seed);
+        Simulator::new(cfg(&cluster, PolicyKind::FastLane, SimEngine::EventHorizon))
+            .run_source(&mut source)
+    };
+    let a = run(1);
+    let b = run(2);
+    assert_ne!(a.records, b.records, "different seeds, different trials");
+}
