@@ -58,6 +58,8 @@ pub enum ClusterError {
     /// The location index says the job is on a node whose allocation list
     /// disagrees (index corruption).
     NotOnNode(JobId, NodeId),
+    /// A resize would shrink the node below its current allocations.
+    CapacityBelowUse(NodeId),
 }
 
 impl fmt::Display for ClusterError {
@@ -67,8 +69,28 @@ impl fmt::Display for ClusterError {
             ClusterError::NotOnNode(job, node) => {
                 write!(f, "{job} indexed on {node} but absent from its allocations")
             }
+            ClusterError::CapacityBelowUse(node) => {
+                write!(f, "{node} cannot shrink below its current allocations")
+            }
         }
     }
+}
+
+/// Control-plane availability of a node. Only `Up` nodes accept new
+/// placements; the free-capacity index reports non-`Up` nodes as having
+/// zero effective free space, so every placement and preemption-planning
+/// path excludes them without special-casing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NodeAvailability {
+    /// Healthy: schedulable.
+    #[default]
+    Up,
+    /// Draining for maintenance: hosted jobs run to completion, but no new
+    /// placement may land here.
+    Draining,
+    /// Failed / removed: hosts nothing (the scheduler evicts hosted jobs
+    /// when it marks a node down) and accepts nothing.
+    Down,
 }
 
 impl std::error::Error for ClusterError {}
@@ -97,6 +119,14 @@ impl ClusterSpec {
         Self::homogeneous(n, ResourceVec::pfn_node())
     }
 
+    /// The live-demo cluster preset: `n` small nodes sized for the PJRT
+    /// worker threads the live executor actually spawns (8 CPU, 64 GB,
+    /// 4 GPU each). `LiveConfig::demo` and the `fitgpp live --nodes N` CLI
+    /// path both route through this.
+    pub fn live_demo(n: usize) -> Self {
+        Self::homogeneous(n, ResourceVec::new(8.0, 64.0, 4.0))
+    }
+
     /// Total capacity across all nodes.
     pub fn total_capacity(&self) -> ResourceVec {
         self.nodes.iter().fold(ResourceVec::ZERO, |acc, c| acc + *c)
@@ -112,6 +142,8 @@ pub struct Node {
     pub capacity: ResourceVec,
     /// Unallocated resources (the paper's `N` in Eq. 2).
     pub free: ResourceVec,
+    /// Control-plane availability (Up / Draining / Down).
+    pub availability: NodeAvailability,
     /// Reservation holds pinned here by the scheduler (space drained for an
     /// incoming TE job, invisible to other placements).
     hold: ResourceVec,
@@ -122,7 +154,19 @@ pub struct Node {
 
 impl Node {
     fn new(id: NodeId, capacity: ResourceVec) -> Self {
-        Node { id, capacity, free: capacity, hold: ResourceVec::ZERO, allocations: Vec::new() }
+        Node {
+            id,
+            capacity,
+            free: capacity,
+            availability: NodeAvailability::Up,
+            hold: ResourceVec::ZERO,
+            allocations: Vec::new(),
+        }
+    }
+
+    /// May new placements land here? Only `Up` nodes are schedulable.
+    pub fn is_schedulable(&self) -> bool {
+        self.availability == NodeAvailability::Up
     }
 
     /// Jobs hosted on this node, in allocation order.
@@ -147,7 +191,14 @@ impl Node {
 
     /// Free space actually available to new placements: free minus holds,
     /// clamped at zero (a hold may exceed free while its victims drain).
+    /// A non-`Up` node reports zero — Draining/Down nodes accept no
+    /// placements, and routing that fact through this one accessor keeps
+    /// the capacity index, the admission paths, and every preemption
+    /// policy's cluster view consistent.
     pub fn effective_free(&self) -> ResourceVec {
+        if !self.is_schedulable() {
+            return ResourceVec::ZERO;
+        }
         self.free.saturating_sub(&self.hold)
     }
 
@@ -350,21 +401,21 @@ impl Cluster {
     }
 
     /// Find a node for `demand` under `placement` considering **raw free**
-    /// space (reservation holds ignored), or `None` if it fits nowhere.
-    /// Deterministic: ties break toward the lower node id. The scheduler's
-    /// hold-aware search lives in `sched::core`; this entry point serves
-    /// diagnostics and setup code.
+    /// space (reservation holds ignored; non-`Up` nodes excluded), or
+    /// `None` if it fits nowhere. Deterministic: ties break toward the
+    /// lower node id. The scheduler's hold-aware search lives in
+    /// `sched::core`; this entry point serves diagnostics and setup code.
     pub fn find_node(&self, demand: &ResourceVec, placement: Placement) -> Option<NodeId> {
         match placement {
             Placement::FirstFit => self
                 .nodes
                 .iter()
-                .find(|n| demand.fits_in(&n.free))
+                .find(|n| n.is_schedulable() && demand.fits_in(&n.free))
                 .map(|n| n.id),
             Placement::BestFit => self
                 .nodes
                 .iter()
-                .filter(|n| demand.fits_in(&n.free))
+                .filter(|n| n.is_schedulable() && demand.fits_in(&n.free))
                 .min_by(|a, b| {
                     let ra = (a.free - *demand).size(&a.capacity);
                     let rb = (b.free - *demand).size(&b.capacity);
@@ -374,7 +425,7 @@ impl Cluster {
             Placement::WorstFit => self
                 .nodes
                 .iter()
-                .filter(|n| demand.fits_in(&n.free))
+                .filter(|n| n.is_schedulable() && demand.fits_in(&n.free))
                 .max_by(|a, b| {
                     let ra = (a.free - *demand).size(&a.capacity);
                     let rb = (b.free - *demand).size(&b.capacity);
@@ -426,6 +477,51 @@ impl Cluster {
         self.index.update(&self.nodes[node.0 as usize]);
     }
 
+    /// Change `node`'s control-plane availability and refresh its index
+    /// entry (a non-`Up` node indexes at zero effective free, so the O(1)
+    /// saturation reject and the candidate range both exclude it).
+    pub fn set_availability(&mut self, node: NodeId, availability: NodeAvailability) {
+        self.nodes[node.0 as usize].availability = availability;
+        self.index.update(&self.nodes[node.0 as usize]);
+    }
+
+    /// Release every allocation on `node` at once (node failure). Returns
+    /// the evicted jobs in allocation order — deterministic, so requeue
+    /// order (and therefore every downstream scheduling decision) is
+    /// reproducible. The caller owns the job-side transitions.
+    pub fn evict_all(&mut self, node: NodeId) -> Vec<JobId> {
+        let ids: Vec<JobId> = self.nodes[node.0 as usize].jobs().collect();
+        for id in &ids {
+            self.nodes[node.0 as usize]
+                .release(*id)
+                .expect("allocation list is authoritative");
+            self.location.remove(id);
+        }
+        self.index.update(&self.nodes[node.0 as usize]);
+        ids
+    }
+
+    /// Change `node`'s capacity (elastic cluster resize). Fails with
+    /// [`ClusterError::CapacityBelowUse`] if current allocations would no
+    /// longer fit; otherwise free space and the capacity index (whose keys
+    /// normalize by the node's own capacity) are recomputed, as is the
+    /// cached cluster-wide maximum capacity.
+    pub fn resize(&mut self, node: NodeId, capacity: ResourceVec) -> Result<(), ClusterError> {
+        let n = &mut self.nodes[node.0 as usize];
+        let used = n.used();
+        if !used.fits_in(&capacity) {
+            return Err(ClusterError::CapacityBelowUse(node));
+        }
+        n.capacity = capacity;
+        n.free = capacity - used;
+        self.max_capacity = self
+            .nodes
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, n| acc.max(&n.capacity));
+        self.index.update(&self.nodes[node.0 as usize]);
+        Ok(())
+    }
+
     /// Invariant check used by tests and the simulator's debug mode:
     /// free ≥ 0, free ≤ capacity, free + Σ allocations == capacity, the
     /// location index matches the per-node allocation lists, and the
@@ -451,6 +547,16 @@ impl Cluster {
                 return Err(format!(
                     "{}: conservation violated: alloc {} + free {} != cap {}",
                     n.id, allocated, n.free, n.capacity
+                ));
+            }
+            if n.availability == NodeAvailability::Down
+                && (!n.allocations.is_empty() || !n.hold.is_zero())
+            {
+                return Err(format!(
+                    "{}: down node still hosts {} jobs / hold {}",
+                    n.id,
+                    n.allocations.len(),
+                    n.hold
                 ));
             }
             let expect = FreeIndex::node_keys(n);
@@ -623,6 +729,78 @@ mod tests {
                 assert!(cands.contains(&n.id.0), "candidate set hid {}", n.id);
             }
         }
+    }
+
+    #[test]
+    fn draining_node_accepts_no_placement_but_keeps_jobs() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(2));
+        c.bind(JobId(0), demand(4.0, 32.0, 1.0), NodeId(0));
+        c.set_availability(NodeId(0), NodeAvailability::Draining);
+        // Effective free collapses to zero: the index prunes the node.
+        assert_eq!(c.node(NodeId(0)).effective_free(), ResourceVec::ZERO);
+        assert_eq!(
+            c.find_node(&demand(1.0, 1.0, 0.0), Placement::FirstFit),
+            Some(NodeId(1)),
+            "placements must route around the draining node"
+        );
+        // The hosted job is untouched and raw free still reflects it.
+        assert_eq!(c.locate(JobId(0)), Some(NodeId(0)));
+        c.check_invariants().unwrap();
+        // Restoring the node re-exposes its space.
+        c.set_availability(NodeId(0), NodeAvailability::Up);
+        assert!(!c.node(NodeId(0)).effective_free().is_zero());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_all_releases_in_allocation_order() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(2));
+        c.bind(JobId(3), demand(4.0, 32.0, 1.0), NodeId(0));
+        c.bind(JobId(1), demand(8.0, 64.0, 2.0), NodeId(0));
+        c.bind(JobId(2), demand(1.0, 1.0, 0.0), NodeId(1));
+        let lost = c.evict_all(NodeId(0));
+        assert_eq!(lost, vec![JobId(3), JobId(1)], "allocation order, not id order");
+        assert_eq!(c.node(NodeId(0)).free, ResourceVec::pfn_node());
+        assert!(c.locate(JobId(3)).is_none() && c.locate(JobId(1)).is_none());
+        assert_eq!(c.locate(JobId(2)), Some(NodeId(1)), "other nodes untouched");
+        c.set_availability(NodeId(0), NodeAvailability::Down);
+        c.check_invariants().unwrap();
+        // A full-node demand now fits nowhere: node 0 is down (despite being
+        // empty) and node 1 is partially used.
+        assert!(c.fits_nowhere(&demand(32.0, 256.0, 8.0)));
+        assert!(c.find_node(&demand(32.0, 256.0, 8.0), Placement::BestFit).is_none());
+    }
+
+    #[test]
+    fn resize_grows_and_shrinks_with_guard() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(1));
+        c.bind(JobId(0), demand(16.0, 128.0, 4.0), NodeId(0));
+        // Shrinking below current use is a typed error; state is untouched.
+        assert_eq!(
+            c.resize(NodeId(0), demand(8.0, 64.0, 2.0)),
+            Err(ClusterError::CapacityBelowUse(NodeId(0)))
+        );
+        c.check_invariants().unwrap();
+        // Growing doubles the free headroom and updates the index + the
+        // cached max capacity used by the candidate range prune.
+        c.resize(NodeId(0), demand(64.0, 512.0, 16.0)).unwrap();
+        assert_eq!(c.node(NodeId(0)).free, demand(48.0, 384.0, 12.0));
+        assert_eq!(c.max_capacity(), demand(64.0, 512.0, 16.0));
+        assert!(!c.fits_nowhere(&demand(48.0, 384.0, 12.0)));
+        c.check_invariants().unwrap();
+        // Shrinking to exactly the current use leaves zero free.
+        c.unbind(JobId(0)).unwrap();
+        c.resize(NodeId(0), demand(4.0, 4.0, 1.0)).unwrap();
+        assert_eq!(c.node(NodeId(0)).free, demand(4.0, 4.0, 1.0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn down_node_with_leftovers_fails_invariants() {
+        let mut c = Cluster::new(&ClusterSpec::tiny(1));
+        c.bind(JobId(0), demand(1.0, 1.0, 0.0), NodeId(0));
+        c.set_availability(NodeId(0), NodeAvailability::Down);
+        assert!(c.check_invariants().is_err(), "down nodes must host nothing");
     }
 
     #[test]

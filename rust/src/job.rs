@@ -84,6 +84,18 @@ impl JobSpec {
 ///  Running ──complete──▶ Done                      too if their remaining
 ///                                                  work hits 0 first)
 /// ```
+///
+/// Two further transitions come from the control plane
+/// ([`sched::control`](crate::sched::control)) rather than the scheduler's
+/// own decisions:
+///
+/// * `Pending | Running | Draining ──cancel──▶ Cancelled` — the user (or a
+///   [`ScenarioScript`](crate::sim::scenario::ScenarioScript) standing in
+///   for one) kills the job; it never completes and is excluded from
+///   slowdown statistics.
+/// * `Running | Draining ──fail_over──▶ Pending(top)` — the hosting node
+///   failed; the job is re-queued with priority. Unlike [`Job::vacate`]
+///   this does **not** count as a policy preemption.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
     /// In the queue (either never started, or suspended and re-queued).
@@ -96,6 +108,8 @@ pub enum JobState {
     Draining,
     /// Finished.
     Done,
+    /// Killed by a control-plane cancellation before completing.
+    Cancelled,
 }
 
 /// A job's full runtime record. The simulator owns one `Job` per `JobSpec`;
@@ -127,6 +141,12 @@ pub struct Job {
     pub first_start: Option<Minutes>,
     /// Completion time.
     pub finished_at: Option<Minutes>,
+    /// Cancellation time (control plane). Mutually exclusive with
+    /// `finished_at`.
+    pub cancelled_at: Option<Minutes>,
+    /// Node-failure evictions suffered (control plane; *not* counted as
+    /// preemptions — the `P` starvation cap only reads `preemptions`).
+    pub evictions: u32,
     /// Lifecycle-transition counter: bumped on every start / preemption
     /// signal / vacate / complete. The [`EventClock`](crate::sched::clock)
     /// stamps scheduled events with the epoch they were predicted under, so
@@ -149,6 +169,8 @@ impl Job {
             resched_intervals: Vec::new(),
             first_start: None,
             finished_at: None,
+            cancelled_at: None,
+            evictions: 0,
             epoch: 0,
         }
     }
@@ -209,6 +231,44 @@ impl Job {
         self.epoch += 1;
         self.node = None;
         self.finished_at = Some(now);
+    }
+
+    /// Control-plane cancellation: Pending/Running/Draining → Cancelled.
+    /// The job never completes (`finished_at` stays `None`, so cancelled
+    /// jobs fall out of every slowdown percentile) and is retired
+    /// immediately by the caller.
+    pub fn cancel(&mut self, now: Minutes) {
+        debug_assert!(
+            matches!(
+                self.state,
+                JobState::Pending | JobState::Running | JobState::Draining
+            ),
+            "{} cancelled from {:?}",
+            self.id(),
+            self.state
+        );
+        self.state = JobState::Cancelled;
+        self.epoch += 1;
+        self.node = None;
+        self.grace_left = 0;
+        self.cancelled_at = Some(now);
+    }
+
+    /// Node-failure eviction: Running/Draining → Pending. The hosting node
+    /// disappeared, so there is no grace period — the job vacates at once
+    /// and is re-queued at the top. Completed work is preserved (the live
+    /// executor restores from the last checkpoint; the simulator models the
+    /// optimistic no-rewind case, matching [`Job::vacate`]). Unlike a
+    /// vacate this is *not* a policy preemption: `preemptions` (the paper's
+    /// `PreemptionCount_j`, which the `P` cap reads) stays untouched and
+    /// the interruption is tallied in `evictions` instead.
+    pub fn fail_over(&mut self, _now: Minutes) {
+        debug_assert!(matches!(self.state, JobState::Running | JobState::Draining));
+        self.state = JobState::Pending;
+        self.epoch += 1;
+        self.node = None;
+        self.grace_left = 0;
+        self.evictions += 1;
     }
 
     /// Eq. 5: `slowdown = 1 + WaitingTime / ExecutionTime`.
@@ -307,6 +367,48 @@ mod tests {
         b.signal_preemption();
         b.complete(3); // finished while draining
         assert_eq!(b.state, JobState::Done);
+    }
+
+    #[test]
+    fn cancel_from_each_live_state() {
+        // Pending.
+        let mut a = Job::new(spec(JobClass::Te));
+        a.cancel(4);
+        assert_eq!(a.state, JobState::Cancelled);
+        assert_eq!(a.cancelled_at, Some(4));
+        assert_eq!(a.finished_at, None, "cancelled jobs never finish");
+
+        // Running.
+        let mut b = Job::new(spec(JobClass::Be));
+        b.start(NodeId(0), 0);
+        let epoch = b.epoch;
+        b.cancel(7);
+        assert_eq!(b.state, JobState::Cancelled);
+        assert!(b.node.is_none());
+        assert_eq!(b.epoch, epoch + 1, "cancel invalidates clock predictions");
+
+        // Draining.
+        let mut c = Job::new(spec(JobClass::Be));
+        c.start(NodeId(0), 0);
+        c.signal_preemption();
+        c.cancel(2);
+        assert_eq!(c.state, JobState::Cancelled);
+        assert_eq!(c.grace_left, 0);
+    }
+
+    #[test]
+    fn fail_over_requeues_without_counting_a_preemption() {
+        let mut j = Job::new(spec(JobClass::Be));
+        j.start(NodeId(0), 0);
+        j.fail_over(5);
+        assert_eq!(j.state, JobState::Pending);
+        assert_eq!(j.preemptions, 0, "node failure is not a policy preemption");
+        assert_eq!(j.evictions, 1);
+        assert!(j.node.is_none());
+        // The job restarts like any pending job; no resched interval is
+        // recorded (Table 2 measures preemption intervals only).
+        j.start(NodeId(1), 9);
+        assert!(j.resched_intervals.is_empty());
     }
 
     #[test]

@@ -23,6 +23,10 @@
 use crate::job::{Job, JobId};
 
 const ABSENT: u32 = u32::MAX;
+/// Sentinel for "was resident, has been retired" — distinct from `ABSENT`
+/// ("never seen") so the control plane can tell a stale reference to a
+/// finished job from a reference to one that has not arrived yet.
+const RETIRED: u32 = u32::MAX - 1;
 
 /// Slab of live jobs with O(1) insert/lookup/retire by [`JobId`].
 #[derive(Debug, Default)]
@@ -81,8 +85,8 @@ impl JobTable {
     /// id is not resident.
     pub fn remove(&mut self, id: JobId) -> Job {
         let slot = self.slot_of[id.0 as usize];
-        assert_ne!(slot, ABSENT, "{id} not resident");
-        self.slot_of[id.0 as usize] = ABSENT;
+        assert!(slot < RETIRED, "{id} not resident");
+        self.slot_of[id.0 as usize] = RETIRED;
         self.free.push(slot);
         self.live -= 1;
         self.slots[slot as usize].take().expect("occupied slot")
@@ -91,7 +95,7 @@ impl JobTable {
     /// Shared view of a resident job, or `None` if retired / never seen.
     pub fn get(&self, id: JobId) -> Option<&Job> {
         let slot = *self.slot_of.get(id.0 as usize)?;
-        if slot == ABSENT {
+        if slot >= RETIRED {
             return None;
         }
         self.slots[slot as usize].as_ref()
@@ -100,7 +104,7 @@ impl JobTable {
     /// Mutable view of a resident job.
     pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
         let slot = *self.slot_of.get(id.0 as usize)?;
-        if slot == ABSENT {
+        if slot >= RETIRED {
             return None;
         }
         self.slots[slot as usize].as_mut()
@@ -115,6 +119,17 @@ impl JobTable {
     /// Is `id` currently resident?
     pub fn contains(&self, id: JobId) -> bool {
         self.get(id).is_some()
+    }
+
+    /// Has a job with this id *ever* been inserted? True for resident and
+    /// retired jobs, false for jobs no source has yielded yet. The
+    /// scenario driver uses this to tell a stale cancellation (target
+    /// already retired → drop) from a premature one (target not yet
+    /// arrived → hold and retry).
+    pub fn seen(&self, id: JobId) -> bool {
+        self.slot_of
+            .get(id.0 as usize)
+            .is_some_and(|slot| *slot != ABSENT)
     }
 
     /// Number of resident jobs.
@@ -220,6 +235,22 @@ mod tests {
         t.remove(JobId(7));
         assert_eq!(t.epoch_of(JobId(7)), None);
         assert_eq!(t.epoch_of(JobId(999)), None, "never-seen id");
+    }
+
+    #[test]
+    fn seen_distinguishes_retired_from_future_ids() {
+        let mut t = JobTable::new();
+        t.insert(job(0));
+        t.insert(job(1));
+        assert!(t.seen(JobId(0)) && t.seen(JobId(1)));
+        assert!(!t.seen(JobId(2)), "not yielded yet");
+        t.remove(JobId(0));
+        assert!(t.seen(JobId(0)), "retired is still seen");
+        assert!(!t.contains(JobId(0)));
+        // The freed slot is reused without confusing the bookkeeping.
+        t.insert(job(2));
+        assert!(t.seen(JobId(2)) && t.contains(JobId(2)));
+        assert!(t.seen(JobId(0)) && !t.contains(JobId(0)));
     }
 
     #[test]

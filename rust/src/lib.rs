@@ -68,12 +68,17 @@ pub mod xla;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
-    pub use crate::cluster::{Cluster, ClusterSpec, NodeId};
+    pub use crate::cluster::{Cluster, ClusterSpec, NodeAvailability, NodeId};
     pub use crate::job::{Job, JobClass, JobId, JobSpec, JobState};
     pub use crate::job_table::JobTable;
     pub use crate::metrics::{Percentiles, SlowdownReport, StreamingMetrics};
     pub use crate::resources::ResourceVec;
+    pub use crate::sched::control::{
+        ClusterController, EventSubscriber, JsonlEventLog, SchedulerCommand, SchedulerEvent,
+        SharedEventLog,
+    };
     pub use crate::sched::policy::PolicyKind;
+    pub use crate::sim::scenario::ScenarioScript;
     pub use crate::sim::{SimConfig, SimEngine, SimResult, Simulator};
     pub use crate::stats::rng::Pcg64;
     pub use crate::stats::sketch::QuantileSketch;

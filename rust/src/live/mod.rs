@@ -8,16 +8,25 @@
 //! period performs *real* suspension work — serializing the model
 //! parameters to a checkpoint — exactly the §2 story.
 //!
+//! The coordinator speaks the same
+//! [`ClusterController`](crate::sched::control::ClusterController)
+//! command/event protocol the simulator drives, so both execution paths
+//! are provably one API: the live report carries the run's
+//! [`SchedulerEvent`](crate::sched::control::SchedulerEvent) stream, and
+//! worker threads are spawned/checkpointed/stopped off the same
+//! [`StepOutcome`](crate::sched::control::StepOutcome)s a simulated round
+//! produces.
+//!
 //! Per-thread PJRT clients: the xla handles are not `Sync`, so each worker
 //! owns an `Engine` and compiles the artifact at spawn (compile time is
 //! reported so the overhead is visible).
 
-use crate::job::{Job, JobClass, JobId, JobState};
-use crate::job_table::JobTable;
-use crate::runtime::{self, Checkpoint, Engine, Manifest, Trainer};
-use crate::sched::policy::PolicyKind;
-use crate::sched::{SchedConfig, Scheduler};
 use crate::cluster::ClusterSpec;
+use crate::job::{JobClass, JobId};
+use crate::runtime::{self, Checkpoint, Engine, Manifest, Trainer};
+use crate::sched::control::{ClusterController, SchedulerEvent, SharedEventLog};
+use crate::sched::policy::PolicyKind;
+use crate::sched::SchedConfig;
 use crate::util::json::Json;
 use crate::workload::Workload;
 use anyhow::{Context, Result};
@@ -42,14 +51,25 @@ pub struct LiveConfig {
 }
 
 impl LiveConfig {
+    /// The demo configuration: the [`ClusterSpec::live_demo`] preset at
+    /// its default two nodes. Resize with [`LiveConfig::with_nodes`]
+    /// (`fitgpp live --nodes N`).
     pub fn demo(policy: PolicyKind) -> Self {
         LiveConfig {
-            cluster: ClusterSpec::homogeneous(2, crate::resources::ResourceVec::new(8.0, 64.0, 4.0)),
+            cluster: ClusterSpec::live_demo(2),
             policy,
             tick_ms: 150,
             variant: "tiny".to_string(),
             seed: 7,
         }
+    }
+
+    /// Rebuild the cluster from the [`ClusterSpec::live_demo`] preset with
+    /// `n` nodes.
+    pub fn with_nodes(mut self, n: usize) -> Self {
+        assert!(n > 0, "a live cluster needs at least one node");
+        self.cluster = ClusterSpec::live_demo(n);
+        self
     }
 }
 
@@ -105,7 +125,12 @@ pub struct LiveReport {
     pub losses: Vec<LossPoint>,
     /// Worker lifecycle events.
     pub events: Vec<LiveEvent>,
-    /// Final job table (same record type the simulator produces).
+    /// The scheduler's control-plane event stream (the same
+    /// [`SchedulerEvent`]s a simulated run emits — the proof both drivers
+    /// speak one protocol).
+    pub sched_events: Vec<SchedulerEvent>,
+    /// Final job records (same record type the simulator produces), in
+    /// job-id order.
     pub records: Vec<crate::sim::JobRecord>,
     /// Total train steps across all jobs.
     pub total_steps: u64,
@@ -157,6 +182,7 @@ impl LiveReport {
             ("ticks", Json::num(self.ticks as f64)),
             ("wall_sec", Json::num(self.wall.as_secs_f64())),
             ("total_steps", Json::num(self.total_steps as f64)),
+            ("sched_events", Json::num(self.sched_events.len() as f64)),
             ("jobs", Json::Arr(per_job)),
         ])
     }
@@ -178,56 +204,74 @@ impl LiveCluster {
     }
 
     /// Run `workload` live. Returns when every job has completed.
+    ///
+    /// The coordinator drives the same [`ClusterController`]
+    /// command/event protocol the simulator does — every scheduling round
+    /// is one [`step`](ClusterController::step), and the worker threads
+    /// are controlled off the round's outcome (preempt → checkpoint,
+    /// finish → stop, start/resume → spawn). The run's
+    /// [`SchedulerEvent`] stream is captured in the report, so a live run
+    /// and a simulated run of the same workload can be diffed event by
+    /// event.
     pub fn run(&self, workload: &Workload) -> Result<LiveReport> {
         let wall0 = Instant::now();
-        let specs = workload.jobs.clone();
-        let mut jobs =
-            JobTable::from_jobs(specs.iter().cloned().map(Job::new).collect());
-        let mut sched = Scheduler::new(&self.cfg.cluster, SchedConfig::new(self.cfg.policy));
+        let mut ctl =
+            ClusterController::new(&self.cfg.cluster, SchedConfig::new(self.cfg.policy));
+        let sched_log = SharedEventLog::new();
+        ctl.subscribe(Box::new(sched_log.clone()));
+        // Live workloads are small: stage every arrival up front (the
+        // clock pops each at its submit minute).
+        for spec in &workload.jobs {
+            ctl.stage_arrival(spec.clone());
+        }
         let log: Arc<Mutex<SharedLog>> = Arc::new(Mutex::new(SharedLog::default()));
         let mut workers: HashMap<JobId, WorkerHandle> = HashMap::new();
+        let mut records: Vec<crate::sim::JobRecord> = Vec::new();
 
         let mut now = 0u64;
-        let mut next_arrival = 0usize;
         loop {
             let tick_start = Instant::now();
-            let mut arrivals = Vec::new();
-            while next_arrival < specs.len() && specs[next_arrival].submit == now {
-                arrivals.push(specs[next_arrival].id);
-                next_arrival += 1;
-            }
-            let out = sched.tick(now, &mut jobs, &arrivals);
+            let out = ctl.step(now);
 
             // Preemption signals → tell workers to checkpoint.
-            for id in &out.preempted {
+            for id in &out.tick.preempted {
                 if let Some(w) = workers.get(id) {
                     let _ = w.tx.send(Cmd::Preempt);
                 }
             }
             // Completions (scheduler is the source of truth for timing).
-            for id in &out.completed {
-                if let Some(w) = workers.remove(id) {
+            for rec in out.finished {
+                if let Some(w) = workers.remove(&rec.id) {
                     let _ = w.tx.send(Cmd::Stop);
                     let _ = w.join.join();
                 }
+                records.push(rec);
+            }
+            // Cancelled jobs' workers stop without a checkpoint (the run
+            // is dead; nobody resumes it).
+            for rec in out.cancelled {
+                if let Some(w) = workers.remove(&rec.id) {
+                    let _ = w.tx.send(Cmd::Stop);
+                    let _ = w.join.join();
+                }
+                records.push(rec);
             }
             // Vacated jobs' workers are already checkpointing; join so the
             // checkpoint is durable before any restart.
-            for id in &out.vacated {
+            for id in &out.tick.vacated {
                 if let Some(w) = workers.remove(id) {
                     let _ = w.tx.send(Cmd::Preempt); // idempotent nudge
                     let _ = w.join.join();
                 }
             }
             // Starts (fresh or resumed).
-            for id in &out.started {
+            for id in &out.tick.started {
                 let handle = self.spawn_worker(*id, Arc::clone(&log))?;
                 workers.insert(*id, handle);
             }
 
             now += 1;
-            let all_submitted = next_arrival >= specs.len();
-            if all_submitted && sched.idle() {
+            if !ctl.sched.clock.arrivals_pending() && ctl.idle() {
                 break;
             }
             if now > 1_000_000 {
@@ -246,11 +290,8 @@ impl LiveCluster {
             let _ = w.join.join();
         }
 
-        debug_assert!(jobs.iter().all(|j| j.state == JobState::Done));
-        let records = specs
-            .iter()
-            .map(|s| crate::sim::JobRecord::from_job(&jobs[s.id]))
-            .collect();
+        records.sort_by_key(|r| r.id);
+        debug_assert_eq!(records.len(), workload.jobs.len(), "every job retired");
         let log = Arc::try_unwrap(log)
             .map_err(|_| anyhow::anyhow!("worker still holds log"))?
             .into_inner()
@@ -269,6 +310,7 @@ impl LiveCluster {
             wall: wall0.elapsed(),
             losses: log.losses,
             events: log.events,
+            sched_events: sched_log.events(),
             records,
             total_steps,
         })
@@ -386,7 +428,15 @@ mod tests {
     fn demo_config_is_sane() {
         let c = LiveConfig::demo(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
         assert_eq!(c.cluster.nodes.len(), 2);
+        assert_eq!(c.cluster, ClusterSpec::live_demo(2), "demo routes through the preset");
         assert!(c.tick_ms > 0);
+    }
+
+    #[test]
+    fn with_nodes_resizes_the_preset() {
+        let c = LiveConfig::demo(PolicyKind::Fifo).with_nodes(5);
+        assert_eq!(c.cluster, ClusterSpec::live_demo(5));
+        assert_eq!(c.cluster.nodes.len(), 5);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! fitgpp replay   --trace big.csv --stream --max-live 20000   # O(live-set) memory
 //! fitgpp simulate --stream --jobs 1000000          # stream the §4.2 generator
 //! fitgpp simulate --closed-loop --users 64 --trials 32        # TE trial-and-error loop
-//! fitgpp live     --policy fitgpp:s=4,p=1 --jobs 12
+//! fitgpp simulate --scenario chaos.json --events-out events.jsonl  # fault/cancel injections
+//! fitgpp live     --policy fitgpp:s=4,p=1 --jobs 12 --nodes 2
 //! fitgpp config   --dump                           # print default config JSON
 //! ```
 
@@ -19,16 +20,19 @@ use fitgpp::cluster::ClusterSpec;
 use fitgpp::config::ExperimentConfig;
 use fitgpp::live::{LiveCluster, LiveConfig};
 use fitgpp::metrics::{slowdown_table, SlowdownReport};
+use fitgpp::sched::control::{EventSubscriber, JsonlErrorFlag, JsonlEventLog};
 use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::scenario::ScenarioScript;
 use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
 use fitgpp::sweep::{compare_on, SweepSpec};
 use fitgpp::util::cli::Cli;
 use fitgpp::workload::{
-    source::{ClosedLoopParams, ClosedLoopSource},
+    source::{ClosedLoopParams, ClosedLoopSource, WorkloadSource},
     synthetic::SyntheticWorkload,
     trace::{CsvStreamSource, Trace},
     Workload,
 };
+use std::io::BufWriter;
 use std::path::Path;
 use std::time::Instant;
 
@@ -97,6 +101,53 @@ fn parse_policy(s: &str) -> Result<PolicyKind> {
     PolicyKind::parse(s).with_context(|| format!("bad --policy {s:?}"))
 }
 
+/// Load `--scenario <file>` if given.
+fn load_scenario(args: &fitgpp::util::cli::Args) -> Result<Option<ScenarioScript>> {
+    match args.get("scenario") {
+        Some(p) => Ok(Some(ScenarioScript::from_file(Path::new(p))?)),
+        None => Ok(None),
+    }
+}
+
+/// Build the `--events-out <file>` JSONL subscriber list (empty without
+/// the flag), plus an error flag to check after the run: the log flushes
+/// when the run drops it, and a write/flush failure must fail the command
+/// rather than ship a silently truncated log.
+fn event_subscribers(
+    args: &fitgpp::util::cli::Args,
+) -> Result<(Vec<Box<dyn EventSubscriber>>, Option<JsonlErrorFlag>)> {
+    match args.get("events-out") {
+        Some(p) => {
+            let f = std::fs::File::create(p)
+                .with_context(|| format!("creating --events-out {p}"))?;
+            eprintln!("logging scheduler events to {p}");
+            let log = JsonlEventLog::new(BufWriter::new(f));
+            let flag = log.error_flag();
+            Ok((vec![Box::new(log)], Some(flag)))
+        }
+        None => Ok((Vec::new(), None)),
+    }
+}
+
+/// Fail the command if the `--events-out` log recorded a write error.
+fn check_event_log(flag: Option<JsonlErrorFlag>) -> Result<()> {
+    if let Some(err) = flag.and_then(|f| f.get()) {
+        bail!("--events-out log is incomplete: {err}");
+    }
+    Ok(())
+}
+
+/// Print the control-plane cancellation summary when a scenario killed
+/// jobs (cancelled jobs are excluded from every percentile table).
+fn report_cancellations(res: &SimResult) {
+    if res.metrics.cancelled() > 0 {
+        println!(
+            "cancelled by the control plane: {} TE, {} BE (excluded from the percentiles above)",
+            res.metrics.cancelled_te, res.metrics.cancelled_be
+        );
+    }
+}
+
 fn build(args: &fitgpp::util::cli::Args) -> Result<(ExperimentConfig, Workload)> {
     if let Some(path) = args.get("config") {
         let cfg = ExperimentConfig::from_file(Path::new(path))?;
@@ -136,6 +187,7 @@ fn report_streamed(
         res.makespan,
         res.unfinished
     );
+    report_cancellations(res);
     if let Some(cap) = max_live {
         if res.peak_live > cap {
             bail!("peak live set {} exceeded --max-live {cap}", res.peak_live);
@@ -155,7 +207,9 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         .flag("closed-loop", "closed-loop arrivals: users resubmit after completion + think time")
         .opt("users", Some("64"), "closed-loop: concurrent users")
         .opt("trials", Some("32"), "closed-loop: trials per user")
-        .opt("think", Some("10"), "closed-loop: mean think time (minutes)");
+        .opt("think", Some("10"), "closed-loop: mean think time (minutes)")
+        .opt("scenario", None, "JSON scenario file: timed commands + te_patience rule (see EXPERIMENTS.md)")
+        .opt("events-out", None, "write the scheduler's JSONL event log to this path");
     let args = parse_or_exit(&cli, argv);
 
     if args.has("closed-loop") {
@@ -180,6 +234,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         );
         cfg.seed = args.get_u64("seed", 7);
         cfg.record_jobs = false;
+        cfg.scenario = load_scenario(&args)?;
         eprintln!(
             "closed loop: {} users x {} trials, think ~{} min; policy {}",
             args.get_usize("users", 64),
@@ -188,7 +243,9 @@ fn simulate(argv: Vec<String>) -> Result<()> {
             policy.name()
         );
         let t0 = Instant::now();
-        let res = Simulator::new(cfg).run_source(&mut source);
+        let (subs, ev_err) = event_subscribers(&args)?;
+        let res = Simulator::new(cfg).run_with(&mut source, subs);
+        check_event_log(ev_err)?;
         return report_streamed(&res, t0.elapsed().as_secs_f64(), None, args.get("json-out"));
     }
 
@@ -206,10 +263,13 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         let mut cfg = SimConfig::new(params.cluster.clone(), policy);
         cfg.seed = params.seed;
         cfg.record_jobs = false;
+        cfg.scenario = load_scenario(&args)?;
         eprintln!("streaming {} §4.2 jobs; policy {}", params.num_jobs, policy.name());
         let t0 = Instant::now();
         let mut source = params.stream();
-        let res = Simulator::new(cfg).run_source(&mut source);
+        let (subs, ev_err) = event_subscribers(&args)?;
+        let res = Simulator::new(cfg).run_with(&mut source, subs);
+        check_event_log(ev_err)?;
         return report_streamed(&res, t0.elapsed().as_secs_f64(), None, args.get("json-out"));
     }
 
@@ -221,7 +281,11 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         wl.submit_span(),
         cfg.policy.name()
     );
-    let res = Simulator::new(cfg.sim_config()).run(&wl);
+    let mut sim_cfg = cfg.sim_config();
+    sim_cfg.scenario = load_scenario(&args)?;
+    let (subs, ev_err) = event_subscribers(&args)?;
+    let res = Simulator::new(sim_cfg).run_with(&mut WorkloadSource::new(&wl), subs);
+    check_event_log(ev_err)?;
     println!("{}", res.summary_table());
     println!(
         "preempted jobs: {:.3}% | preemption signals: {} | makespan {} min",
@@ -229,6 +293,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         res.sched_stats.preemption_signals,
         res.makespan
     );
+    report_cancellations(&res);
     if let Some(path) = args.get("json-out") {
         std::fs::write(path, res.to_json().to_pretty())?;
         eprintln!("wrote {path}");
@@ -405,7 +470,9 @@ fn replay(argv: Vec<String>) -> Result<()> {
     let cli = common_cli("fitgpp replay", "replay a CSV trace under a policy")
         .opt("trace", None, "input CSV trace path (required)")
         .flag("stream", "stream the trace through a buffered reader (O(live-set) memory)")
-        .opt("max-live", None, "fail if the peak resident live set exceeds this (streaming smoke checks)");
+        .opt("max-live", None, "fail if the peak resident live set exceeds this (streaming smoke checks)")
+        .opt("scenario", None, "JSON scenario file: timed commands + te_patience rule (see EXPERIMENTS.md)")
+        .opt("events-out", None, "write the scheduler's JSONL event log to this path");
     let args = parse_or_exit(&cli, argv);
     let path = args.get("trace").context("--trace is required")?;
     let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
@@ -414,6 +481,7 @@ fn replay(argv: Vec<String>) -> Result<()> {
         ClusterSpec::homogeneous(nodes, fitgpp::resources::ResourceVec::pfn_node()),
         policy,
     );
+    cfg.scenario = load_scenario(&args)?;
     let max_live = match args.get("max-live") {
         Some(v) => Some(v.parse::<usize>().context("bad --max-live")?),
         None => None,
@@ -423,16 +491,21 @@ fn replay(argv: Vec<String>) -> Result<()> {
         cfg.record_jobs = false;
         let mut source = CsvStreamSource::open(Path::new(path))?;
         let t0 = Instant::now();
-        let res = Simulator::new(cfg).run_source(&mut source);
+        let (subs, ev_err) = event_subscribers(&args)?;
+        let res = Simulator::new(cfg).run_with(&mut source, subs);
         if let Some(e) = source.error() {
             bail!("trace stream aborted after {} rows: {e:#}", source.rows_yielded());
         }
+        check_event_log(ev_err)?;
         return report_streamed(&res, t0.elapsed().as_secs_f64(), max_live, args.get("json-out"));
     }
 
     let wl = Trace::read_csv(Path::new(path))?;
-    let res = Simulator::new(cfg).run(&wl);
+    let (subs, ev_err) = event_subscribers(&args)?;
+    let res = Simulator::new(cfg).run_with(&mut WorkloadSource::new(&wl), subs);
+    check_event_log(ev_err)?;
     println!("{}", res.summary_table());
+    report_cancellations(&res);
     if let Some(cap) = max_live {
         if res.peak_live > cap {
             bail!("peak live set {} exceeded --max-live {cap}", res.peak_live);
@@ -448,22 +521,28 @@ fn live(argv: Vec<String>) -> Result<()> {
     let cli = Cli::new("fitgpp live", "drive real PJRT training jobs under the scheduler")
         .opt("policy", Some("fitgpp:s=4,p=1"), "scheduling policy")
         .opt("jobs", Some("10"), "number of live jobs")
+        .opt("nodes", Some("2"), "number of live-demo cluster nodes")
         .opt("tick-ms", Some("150"), "wall milliseconds per simulated minute")
         .opt("seed", Some("7"), "seed")
         .opt("json-out", None, "write the live report JSON here");
     let args = parse_or_exit(&cli, argv);
     let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
-    let mut cfg = LiveConfig::demo(policy);
+    let nodes = args.get_usize("nodes", 2);
+    if nodes == 0 {
+        bail!("--nodes must be positive");
+    }
+    let mut cfg = LiveConfig::demo(policy).with_nodes(nodes);
     cfg.tick_ms = args.get_u64("tick-ms", 150);
     cfg.seed = args.get_u64("seed", 7);
     let wl = fitgpp::live::demo_workload(args.get_usize("jobs", 10), cfg.seed);
     let cluster = LiveCluster::new(cfg)?;
     let report = cluster.run(&wl)?;
     println!(
-        "live run: {} ticks in {:.1}s, {} total train steps",
+        "live run: {} ticks in {:.1}s, {} total train steps, {} scheduler events",
         report.ticks,
         report.wall.as_secs_f64(),
-        report.total_steps
+        report.total_steps,
+        report.sched_events.len()
     );
     for r in &report.records {
         let drop = report.loss_drop(r.id);

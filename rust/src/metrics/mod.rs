@@ -161,6 +161,14 @@ pub struct StreamingMetrics {
     pub preempt_hist: [u64; 3],
     /// Jobs preempted at least once (Table 3 numerator).
     pub preempted: u64,
+    /// TE jobs cancelled by the control plane. Cancelled jobs are counted
+    /// here and **nowhere else** — not in `jobs_seen`, the slowdown
+    /// sketches, or the preemption histogram — so scenario runs report
+    /// Table 1-style statistics over exactly the jobs that ran to an
+    /// outcome.
+    pub cancelled_te: u64,
+    /// BE jobs cancelled by the control plane (see `cancelled_te`).
+    pub cancelled_be: u64,
 }
 
 impl StreamingMetrics {
@@ -201,6 +209,23 @@ impl StreamingMetrics {
         }
     }
 
+    /// Fold one cancelled job in: only the per-class cancellation counter
+    /// moves. Slowdown percentiles, the preemption histogram, and
+    /// `jobs_seen` deliberately exclude cancelled jobs — a scenario that
+    /// kills impatient TE jobs must not skew the Table 1 layout.
+    pub fn observe_cancelled(&mut self, r: &JobRecord) {
+        debug_assert!(r.cancelled && r.finished_at.is_none());
+        match r.class {
+            JobClass::Te => self.cancelled_te += 1,
+            JobClass::Be => self.cancelled_be += 1,
+        }
+    }
+
+    /// Total cancellations across both classes.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled_te + self.cancelled_be
+    }
+
     /// Fold another sink in (order-independent for every reported value).
     pub fn merge(&mut self, other: &StreamingMetrics) {
         self.te_slowdown.merge(&other.te_slowdown);
@@ -213,6 +238,8 @@ impl StreamingMetrics {
             *a += *b;
         }
         self.preempted += other.preempted;
+        self.cancelled_te += other.cancelled_te;
+        self.cancelled_be += other.cancelled_be;
     }
 
     /// Sketch-backed slowdown report (Table 1 / Table 5 row).
@@ -262,6 +289,13 @@ impl StreamingMetrics {
             ("be_slowdown", self.be_slowdown.to_json()),
             ("intervals", self.intervals.to_json()),
             ("preempted", Json::num(self.preempted as f64)),
+            (
+                "cancelled",
+                Json::obj(vec![
+                    ("te", Json::num(self.cancelled_te as f64)),
+                    ("be", Json::num(self.cancelled_be as f64)),
+                ]),
+            ),
         ])
     }
 }

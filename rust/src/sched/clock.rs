@@ -45,6 +45,16 @@ type Entry = (Minutes, u32, u64);
 
 /// Min-heaps over the scheduler's future events. See the module docs for
 /// the staleness protocol.
+///
+/// The fourth heap, `controls`, carries **control-plane wakeups**: minutes
+/// at which a [`ScenarioScript`](crate::sim::scenario::ScenarioScript)
+/// injects a command (cancellation, node failure/restore, drain, resize)
+/// or a deferred action (a TE patience deadline, a held-over cancel) may
+/// fire. Entries are bare minutes — the scenario driver owns *what*
+/// happens; the clock only answers *when next*, so the event-horizon
+/// engine never fast-forwards across an injection point. Stale wakeups
+/// (e.g. a patience deadline for a TE job that started in time) cost one
+/// spurious per-minute tick and nothing else.
 #[derive(Debug, Default)]
 pub struct EventClock {
     /// Predicted completions of running (or, under progress-during-grace,
@@ -54,6 +64,9 @@ pub struct EventClock {
     grace_expiries: BinaryHeap<Reverse<Entry>>,
     /// Workload arrivals `(submit minute, job)`; immutable, never stale.
     arrivals: BinaryHeap<Reverse<(Minutes, u32)>>,
+    /// Control-plane wakeup minutes (scenario commands, patience
+    /// deadlines, held-over cancellations).
+    controls: BinaryHeap<Reverse<Minutes>>,
 }
 
 /// Is the entry's prediction still live? Retired jobs have no epoch.
@@ -132,6 +145,35 @@ impl EventClock {
         !self.arrivals.is_empty()
     }
 
+    /// Register a control-plane wakeup at minute `at` (scenario command
+    /// times, TE patience deadlines, held-over cancellations). Duplicates
+    /// are harmless.
+    pub fn push_control(&mut self, at: Minutes) {
+        self.controls.push(Reverse(at));
+    }
+
+    /// Minute of the next control-plane wakeup, if any. The event-horizon
+    /// engine includes this in its burn-target minimum so no quiescent
+    /// span ever crosses a command injection point.
+    pub fn next_control_at(&self) -> Option<Minutes> {
+        self.controls.peek().map(|Reverse(at)| *at)
+    }
+
+    /// Discard every control wakeup at or before `now`; true iff any was
+    /// due. The scenario driver calls this each tick it services, keeping
+    /// the heap bounded by the not-yet-fired injection points.
+    pub fn pop_controls_due(&mut self, now: Minutes) -> bool {
+        let mut any = false;
+        while let Some(Reverse(at)) = self.controls.peek().copied() {
+            if at > now {
+                break;
+            }
+            self.controls.pop();
+            any = true;
+        }
+        any
+    }
+
     /// Consume every internal event due at `now` (and discard stale
     /// leftovers). Returns true iff a *live* completion or grace expiry is
     /// due — i.e. the scheduler's completion/expiry scan has work to do
@@ -157,7 +199,10 @@ impl EventClock {
     /// Entries currently held across all heaps (diagnostics; includes
     /// stale entries awaiting lazy discard).
     pub fn len(&self) -> usize {
-        self.completions.len() + self.grace_expiries.len() + self.arrivals.len()
+        self.completions.len()
+            + self.grace_expiries.len()
+            + self.arrivals.len()
+            + self.controls.len()
     }
 
     /// True when no entries are held at all.
@@ -227,6 +272,21 @@ mod tests {
         assert!(!c.take_due(3, &jobs), "nothing due before minute 4");
         assert!(c.take_due(4, &jobs), "live completion at 4");
         assert!(!c.take_due(4, &jobs), "events are consumed");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn control_wakeups_order_and_drain() {
+        let mut c = EventClock::new();
+        c.push_control(9);
+        c.push_control(3);
+        c.push_control(3); // duplicates are fine
+        assert_eq!(c.next_control_at(), Some(3));
+        assert!(!c.pop_controls_due(2), "nothing due yet");
+        assert!(c.pop_controls_due(3), "both minute-3 entries drain");
+        assert_eq!(c.next_control_at(), Some(9));
+        assert!(c.pop_controls_due(100), "late drains catch up");
+        assert_eq!(c.next_control_at(), None);
         assert!(c.is_empty());
     }
 

@@ -1,0 +1,916 @@
+//! The control plane: a typed command/event protocol over the scheduler.
+//!
+//! The paper's premise is that TE jobs are *interactive*: users watch
+//! their runs, kill the ones that misbehave, promote the ones that work,
+//! and the cluster underneath them loses nodes, drains machines for
+//! maintenance, and grows. The bare [`Scheduler::tick`] loop can express
+//! exactly one of those things (arrivals in, completions out); everything
+//! else — cancellation, reclassification, node failure/restore, drains,
+//! capacity changes — arrives here, as a [`SchedulerCommand`], and every
+//! observable state change leaves as a [`SchedulerEvent`] delivered to
+//! pluggable [`EventSubscriber`]s.
+//!
+//! ## The facade
+//!
+//! [`ClusterController`] owns the scheduler *and* the resident
+//! [`JobTable`] and exposes exactly three verbs:
+//!
+//! * [`stage_arrival`](ClusterController::stage_arrival) — a job becomes
+//!   known (inserted into the table, its submit minute registered with the
+//!   [`EventClock`](crate::sched::EventClock));
+//! * [`command`](ClusterController::command) — a control-plane command is
+//!   applied *between* scheduling rounds;
+//! * [`step`](ClusterController::step) — one scheduling round runs: due
+//!   arrivals pop, [`Scheduler::tick`] decides, completed jobs retire.
+//!
+//! Both drivers — the simulator's
+//! [`run_core`](crate::sim::Simulator::run_with) and the live executor
+//! ([`live::LiveCluster::run`](crate::live::LiveCluster::run)) — speak
+//! only these verbs, so a scenario that holds in simulation is expressed
+//! in exactly the language the live cluster runs.
+//!
+//! ## Events and subscribers
+//!
+//! The built-in [`StreamingMetrics`] sink is itself a subscriber (it folds
+//! [`SchedulerEvent::Finished`] and [`SchedulerEvent::Cancelled`] records
+//! in); additional subscribers bolt on without touching the scheduler:
+//! [`JsonlEventLog`] serializes every event as one deterministic JSON line
+//! (the golden-file tests pin a seeded scenario's whole log byte-for-byte
+//! across engines and lookahead settings), and [`SharedEventLog`] collects
+//! events in memory for tests and the live report.
+//!
+//! Within one step, event order is normalized: `Submitted` (arrival
+//! order), then `Finished`, `Preempted`, `Vacated`, `Started`/`Resumed`
+//! (each in [`TickStats`] order). Command-derived events precede the step
+//! they were applied before. The per-tick interleaving inside the
+//! scheduler is not observable through [`TickStats`]; the normalized
+//! order is part of the protocol contract and what the JSONL golden files
+//! pin.
+
+use crate::cluster::{ClusterSpec, NodeAvailability, NodeId};
+use crate::job::{Job, JobClass, JobId, JobSpec};
+use crate::job_table::JobTable;
+use crate::metrics::StreamingMetrics;
+use crate::resources::ResourceVec;
+use crate::sched::{SchedConfig, Scheduler, TickStats};
+use crate::sim::JobRecord;
+use crate::util::json::Json;
+use crate::Minutes;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+/// A control-plane command. Commands are applied between scheduling
+/// rounds ([`ClusterController::command`]); invalid ones degrade into a
+/// [`SchedulerEvent::CommandRejected`] instead of corrupting state, so a
+/// hostile or stale scenario file cannot abort a run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedulerCommand {
+    /// Make a job known to the scheduler. Its arrival is staged on the
+    /// clock and pops at `spec.submit` like any source-pulled job. (The
+    /// simulator's [`ArrivalSource`](crate::workload::source::ArrivalSource)
+    /// pulls stage arrivals directly; `Submit` serves live/manual driving.)
+    Submit(JobSpec),
+    /// Kill a queued, running, or draining job. It retires immediately as
+    /// [`Cancelled`](crate::job::JobState::Cancelled), its resources (if
+    /// any) return to the cluster, and it is excluded from slowdown
+    /// statistics.
+    Cancel {
+        /// The job to kill.
+        job: JobId,
+    },
+    /// Change a job's TE/BE class mid-flight (promote a trial to a full
+    /// run, or demote one). Queued jobs re-enqueue at the tail of the lane
+    /// their new class routes to; running jobs flip in place.
+    Reclassify {
+        /// The job whose class changes.
+        job: JobId,
+        /// The class it becomes.
+        class: JobClass,
+    },
+    /// A node fails: hosted jobs are evicted with no grace period and
+    /// re-queued at the top of their lane; the node stops accepting
+    /// placements until [`SchedulerCommand::NodeUp`].
+    NodeDown {
+        /// The failing node.
+        node: NodeId,
+    },
+    /// A failed or draining node returns to service.
+    NodeUp {
+        /// The node restored.
+        node: NodeId,
+    },
+    /// Drain a node for maintenance: tenants run to completion, no new
+    /// placement lands there.
+    Drain {
+        /// The node to drain.
+        node: NodeId,
+    },
+    /// Change a node's capacity (elastic resize). Rejected if current
+    /// allocations would no longer fit.
+    Resize {
+        /// The node resized.
+        node: NodeId,
+        /// Its new capacity vector.
+        capacity: ResourceVec,
+    },
+}
+
+/// An observable scheduler state change. Every event carries the minute
+/// it happened at; `Finished`/`Cancelled` carry the job's full final
+/// [`JobRecord`] so subscribers (metrics sinks, logs) need no access to
+/// the job table.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedulerEvent {
+    /// A job's arrival was processed (it entered a queue).
+    Submitted {
+        /// Minute of the event.
+        at: Minutes,
+        /// The job submitted.
+        job: JobId,
+        /// Its class at submission.
+        class: JobClass,
+    },
+    /// A job started running for the first time.
+    Started {
+        /// Minute of the event.
+        at: Minutes,
+        /// The job placed.
+        job: JobId,
+        /// The node hosting it.
+        node: NodeId,
+    },
+    /// A previously interrupted (preempted or evicted) job restarted.
+    Resumed {
+        /// Minute of the event.
+        at: Minutes,
+        /// The job placed again.
+        job: JobId,
+        /// The node hosting it.
+        node: NodeId,
+    },
+    /// A job received the preemption signal (its grace period begins).
+    Preempted {
+        /// Minute of the event.
+        at: Minutes,
+        /// The signalled victim.
+        job: JobId,
+    },
+    /// A draining job's grace period elapsed and it released its node
+    /// (re-queued at the top).
+    Vacated {
+        /// Minute of the event.
+        at: Minutes,
+        /// The job that vacated.
+        job: JobId,
+    },
+    /// A job completed.
+    Finished {
+        /// Minute of the event.
+        at: Minutes,
+        /// The completed job.
+        job: JobId,
+        /// Its final record.
+        record: JobRecord,
+    },
+    /// A job was cancelled by the control plane.
+    Cancelled {
+        /// Minute of the event.
+        at: Minutes,
+        /// The cancelled job.
+        job: JobId,
+        /// Its final record (`finished_at` is `None`, `cancelled` is set).
+        record: JobRecord,
+    },
+    /// A job's class changed.
+    Reclassified {
+        /// Minute of the event.
+        at: Minutes,
+        /// The reclassified job.
+        job: JobId,
+        /// Its new class.
+        class: JobClass,
+    },
+    /// A node failed; `lost` lists the jobs evicted with it (allocation
+    /// order), each re-queued at the top of its lane.
+    NodeLost {
+        /// Minute of the event.
+        at: Minutes,
+        /// The failed node.
+        node: NodeId,
+        /// Jobs evicted with the node.
+        lost: Vec<JobId>,
+    },
+    /// A node returned to service.
+    NodeRestored {
+        /// Minute of the event.
+        at: Minutes,
+        /// The restored node.
+        node: NodeId,
+    },
+    /// A node began draining for maintenance.
+    NodeDraining {
+        /// Minute of the event.
+        at: Minutes,
+        /// The draining node.
+        node: NodeId,
+    },
+    /// A node's capacity changed.
+    NodeResized {
+        /// Minute of the event.
+        at: Minutes,
+        /// The resized node.
+        node: NodeId,
+        /// Its new capacity.
+        capacity: ResourceVec,
+    },
+    /// A command could not be applied; the run continues.
+    CommandRejected {
+        /// Minute of the event.
+        at: Minutes,
+        /// Why the command was declined.
+        reason: String,
+    },
+}
+
+impl SchedulerEvent {
+    /// The minute this event occurred at.
+    pub fn at(&self) -> Minutes {
+        match self {
+            SchedulerEvent::Submitted { at, .. }
+            | SchedulerEvent::Started { at, .. }
+            | SchedulerEvent::Resumed { at, .. }
+            | SchedulerEvent::Preempted { at, .. }
+            | SchedulerEvent::Vacated { at, .. }
+            | SchedulerEvent::Finished { at, .. }
+            | SchedulerEvent::Cancelled { at, .. }
+            | SchedulerEvent::Reclassified { at, .. }
+            | SchedulerEvent::NodeLost { at, .. }
+            | SchedulerEvent::NodeRestored { at, .. }
+            | SchedulerEvent::NodeDraining { at, .. }
+            | SchedulerEvent::NodeResized { at, .. }
+            | SchedulerEvent::CommandRejected { at, .. } => *at,
+        }
+    }
+
+    /// Snake-case discriminant (the `"type"` field of the JSONL form).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SchedulerEvent::Submitted { .. } => "submitted",
+            SchedulerEvent::Started { .. } => "started",
+            SchedulerEvent::Resumed { .. } => "resumed",
+            SchedulerEvent::Preempted { .. } => "preempted",
+            SchedulerEvent::Vacated { .. } => "vacated",
+            SchedulerEvent::Finished { .. } => "finished",
+            SchedulerEvent::Cancelled { .. } => "cancelled",
+            SchedulerEvent::Reclassified { .. } => "reclassified",
+            SchedulerEvent::NodeLost { .. } => "node_lost",
+            SchedulerEvent::NodeRestored { .. } => "node_restored",
+            SchedulerEvent::NodeDraining { .. } => "node_draining",
+            SchedulerEvent::NodeResized { .. } => "node_resized",
+            SchedulerEvent::CommandRejected { .. } => "command_rejected",
+        }
+    }
+
+    /// The job this event concerns, when it concerns exactly one.
+    pub fn job(&self) -> Option<JobId> {
+        match self {
+            SchedulerEvent::Submitted { job, .. }
+            | SchedulerEvent::Started { job, .. }
+            | SchedulerEvent::Resumed { job, .. }
+            | SchedulerEvent::Preempted { job, .. }
+            | SchedulerEvent::Vacated { job, .. }
+            | SchedulerEvent::Finished { job, .. }
+            | SchedulerEvent::Cancelled { job, .. }
+            | SchedulerEvent::Reclassified { job, .. } => Some(*job),
+            _ => None,
+        }
+    }
+
+    /// One deterministic JSON object per event (keys sorted; the JSONL
+    /// log is one such object per line).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("type", Json::str(self.kind())),
+            ("at", Json::num(self.at() as f64)),
+        ];
+        match self {
+            SchedulerEvent::Submitted { job, class, .. } => {
+                fields.push(("job", Json::num(job.0 as f64)));
+                fields.push(("class", Json::str(class.as_str())));
+            }
+            SchedulerEvent::Started { job, node, .. }
+            | SchedulerEvent::Resumed { job, node, .. } => {
+                fields.push(("job", Json::num(job.0 as f64)));
+                fields.push(("node", Json::num(node.0 as f64)));
+            }
+            SchedulerEvent::Preempted { job, .. } | SchedulerEvent::Vacated { job, .. } => {
+                fields.push(("job", Json::num(job.0 as f64)));
+            }
+            SchedulerEvent::Finished { job, record, .. }
+            | SchedulerEvent::Cancelled { job, record, .. } => {
+                fields.push(("job", Json::num(job.0 as f64)));
+                fields.push(("class", Json::str(record.class.as_str())));
+                fields.push(("preemptions", Json::num(record.preemptions as f64)));
+                fields.push(("evictions", Json::num(record.evictions as f64)));
+                if let Some(fin) = record.finished_at {
+                    fields.push(("slowdown", Json::num(record.slowdown)));
+                    fields.push(("finished_at", Json::num(fin as f64)));
+                }
+            }
+            SchedulerEvent::Reclassified { job, class, .. } => {
+                fields.push(("job", Json::num(job.0 as f64)));
+                fields.push(("class", Json::str(class.as_str())));
+            }
+            SchedulerEvent::NodeLost { node, lost, .. } => {
+                fields.push(("node", Json::num(node.0 as f64)));
+                fields.push((
+                    "lost",
+                    Json::arr(lost.iter().map(|j| Json::num(j.0 as f64))),
+                ));
+            }
+            SchedulerEvent::NodeRestored { node, .. }
+            | SchedulerEvent::NodeDraining { node, .. } => {
+                fields.push(("node", Json::num(node.0 as f64)));
+            }
+            SchedulerEvent::NodeResized { node, capacity, .. } => {
+                fields.push(("node", Json::num(node.0 as f64)));
+                fields.push(("cpu", Json::num(capacity.cpu)));
+                fields.push(("ram_gb", Json::num(capacity.ram_gb)));
+                fields.push(("gpu", Json::num(capacity.gpu)));
+            }
+            SchedulerEvent::CommandRejected { reason, .. } => {
+                fields.push(("reason", Json::str(reason)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+/// A consumer of the scheduler's event stream. Subscribers observe; they
+/// never mutate scheduler state, and they must be deterministic given the
+/// event sequence (the sequence itself is deterministic per
+/// `(source, config, scenario, seed)`).
+pub trait EventSubscriber {
+    /// Deliver one event. Called in emission order, synchronously, within
+    /// the scheduling round the event belongs to.
+    fn on_event(&mut self, ev: &SchedulerEvent);
+}
+
+/// The metrics sink is the canonical first subscriber: retiring jobs fold
+/// into it exactly as the pre-protocol simulator did, so scenario-free
+/// runs stay byte-identical.
+impl EventSubscriber for StreamingMetrics {
+    fn on_event(&mut self, ev: &SchedulerEvent) {
+        match ev {
+            SchedulerEvent::Finished { record, .. } => self.observe(record),
+            SchedulerEvent::Cancelled { record, .. } => self.observe_cancelled(record),
+            _ => {}
+        }
+    }
+}
+
+/// A subscriber serializing each event as one JSON line. The output is
+/// fully deterministic (sorted keys, normalized in-step order), which is
+/// what lets a golden file pin a whole scenario run.
+///
+/// Write failures do not abort the run: logging stops at the first error,
+/// which is recorded in a cloneable [`JsonlErrorFlag`] — take one with
+/// [`error_flag`](JsonlEventLog::error_flag) *before* boxing the log, so
+/// the caller can still fail loudly after the run instead of shipping a
+/// silently truncated log. Dropping the log flushes the writer and
+/// records any flush error in the same flag.
+pub struct JsonlEventLog<W: Write> {
+    w: W,
+    lines: u64,
+    error: JsonlErrorFlag,
+}
+
+/// Cloneable observer of a [`JsonlEventLog`]'s first write/flush error,
+/// readable after the log itself has been boxed into a controller and
+/// dropped.
+#[derive(Clone, Default)]
+pub struct JsonlErrorFlag(Arc<Mutex<Option<String>>>);
+
+impl JsonlErrorFlag {
+    /// The first recorded error, if any.
+    pub fn get(&self) -> Option<String> {
+        self.0.lock().unwrap().clone()
+    }
+
+    fn set(&self, msg: String) {
+        let mut slot = self.0.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+    }
+}
+
+impl<W: Write> JsonlEventLog<W> {
+    /// Log into `w` (a file, a [`SharedBuf`], any writer).
+    pub fn new(w: W) -> Self {
+        JsonlEventLog { w, lines: 0, error: JsonlErrorFlag::default() }
+    }
+
+    /// Lines written so far.
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// The first write error, if any (logging stops at the first failure;
+    /// the run itself continues).
+    pub fn error(&self) -> Option<String> {
+        self.error.get()
+    }
+
+    /// A cloneable handle to this log's error slot (see the type docs).
+    pub fn error_flag(&self) -> JsonlErrorFlag {
+        self.error.clone()
+    }
+}
+
+impl<W: Write> EventSubscriber for JsonlEventLog<W> {
+    fn on_event(&mut self, ev: &SchedulerEvent) {
+        if self.error.get().is_some() {
+            return;
+        }
+        match writeln!(self.w, "{}", ev.to_json()) {
+            Ok(()) => self.lines += 1,
+            Err(e) => self.error.set(e.to_string()),
+        }
+    }
+}
+
+impl<W: Write> Drop for JsonlEventLog<W> {
+    fn drop(&mut self) {
+        // Surface buffered-writer flush failures (a BufWriter's own Drop
+        // would swallow them).
+        if let Err(e) = self.w.flush() {
+            self.error.set(format!("flush: {e}"));
+        }
+    }
+}
+
+/// An in-memory, handle-cloneable event collector: attach one clone as a
+/// subscriber, keep the other to read the events back after the run
+/// (tests, the live report).
+#[derive(Clone, Default)]
+pub struct SharedEventLog(Arc<Mutex<Vec<SchedulerEvent>>>);
+
+impl SharedEventLog {
+    /// An empty log.
+    pub fn new() -> Self {
+        SharedEventLog::default()
+    }
+
+    /// Snapshot of all events observed so far.
+    pub fn events(&self) -> Vec<SchedulerEvent> {
+        self.0.lock().unwrap().clone()
+    }
+
+    /// Number of events observed so far.
+    pub fn len(&self) -> usize {
+        self.0.lock().unwrap().len()
+    }
+
+    /// True when nothing has been observed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl EventSubscriber for SharedEventLog {
+    fn on_event(&mut self, ev: &SchedulerEvent) {
+        self.0.lock().unwrap().push(ev.clone());
+    }
+}
+
+/// A handle-cloneable in-memory byte sink implementing [`Write`] — pair it
+/// with [`JsonlEventLog`] to capture the JSONL text of a run (golden
+/// tests, diagnostics).
+#[derive(Clone, Default)]
+pub struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    /// An empty buffer.
+    pub fn new() -> Self {
+        SharedBuf::default()
+    }
+
+    /// The buffered bytes as UTF-8 text.
+    pub fn contents(&self) -> String {
+        String::from_utf8_lossy(&self.0.lock().unwrap()).into_owned()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// What one scheduling round produced, in protocol terms. `finished` and
+/// `cancelled` carry final records (the jobs are already retired from the
+/// table); the driver forwards both to its
+/// [`ArrivalSource`](crate::workload::source::ArrivalSource) so
+/// closed-loop users schedule their next trial after kills exactly as
+/// after completions.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// Arrivals whose submission was processed this round (id order within
+    /// the minute).
+    pub arrivals: Vec<JobId>,
+    /// The raw per-tick outcome from the scheduler core.
+    pub tick: TickStats,
+    /// Jobs that completed this round, retired, in completion order.
+    pub finished: Vec<JobRecord>,
+    /// Jobs cancelled by commands applied since the previous round.
+    pub cancelled: Vec<JobRecord>,
+}
+
+/// The control-plane facade: owns the [`Scheduler`] and the resident
+/// [`JobTable`], consumes [`SchedulerCommand`]s, and emits
+/// [`SchedulerEvent`]s to the built-in metrics sink and every attached
+/// subscriber. See the module docs for the protocol.
+pub struct ClusterController {
+    /// The scheduler under control (public: drivers read clock/queue state
+    /// directly — e.g. the event-horizon engine's burn-target peeks).
+    pub sched: Scheduler,
+    /// Resident jobs (queued + active + staged arrivals inside the
+    /// lookahead window).
+    pub jobs: JobTable,
+    metrics: StreamingMetrics,
+    subs: Vec<Box<dyn EventSubscriber>>,
+    cancelled_buf: Vec<JobRecord>,
+}
+
+impl ClusterController {
+    /// Build a controller for `spec` under `cfg`.
+    pub fn new(spec: &ClusterSpec, cfg: SchedConfig) -> Self {
+        ClusterController {
+            sched: Scheduler::new(spec, cfg),
+            jobs: JobTable::new(),
+            metrics: StreamingMetrics::new(),
+            subs: Vec::new(),
+            cancelled_buf: Vec::new(),
+        }
+    }
+
+    /// Attach a subscriber; it receives every event emitted from now on.
+    pub fn subscribe(&mut self, sub: Box<dyn EventSubscriber>) {
+        self.subs.push(sub);
+    }
+
+    /// The built-in metrics sink (read-only view).
+    pub fn metrics(&self) -> &StreamingMetrics {
+        &self.metrics
+    }
+
+    /// Make a job known: insert it into the table and stage its arrival on
+    /// the clock. The `Submitted` event fires when the arrival is
+    /// *processed* (at `spec.submit`), not here — staging is driver
+    /// plumbing (lookahead pulls), not an observable scheduling act.
+    pub fn stage_arrival(&mut self, spec: JobSpec) {
+        self.sched.clock.push_arrival(spec.submit, spec.id);
+        self.jobs.insert(Job::new(spec));
+    }
+
+    /// Apply one command between scheduling rounds. Invalid commands emit
+    /// [`SchedulerEvent::CommandRejected`] and change nothing.
+    pub fn command(&mut self, now: Minutes, cmd: SchedulerCommand) {
+        match cmd {
+            SchedulerCommand::Submit(spec) => {
+                if spec.submit < now {
+                    self.reject(now, format!("submit {}: submit minute is in the past", spec.id));
+                } else if self.jobs.seen(spec.id) {
+                    // `seen`, not `contains`: a retired id must be rejected
+                    // too — job ids are never reused, and the slab's
+                    // RETIRED sentinel would (rightly) refuse the insert.
+                    self.reject(now, format!("submit {}: id already used", spec.id));
+                } else {
+                    self.stage_arrival(spec);
+                }
+            }
+            SchedulerCommand::Cancel { job } => {
+                if !self.sched.discard(job, &mut self.jobs) {
+                    self.reject(now, format!("cancel {job}: not under scheduler management"));
+                    return;
+                }
+                self.jobs[job].cancel(now);
+                let rec = JobRecord::from_job(&self.jobs.remove(job));
+                let ev = SchedulerEvent::Cancelled { at: now, job, record: rec };
+                self.emit(&ev);
+                let SchedulerEvent::Cancelled { record, .. } = ev else {
+                    unreachable!()
+                };
+                self.cancelled_buf.push(record);
+            }
+            SchedulerCommand::Reclassify { job, class } => {
+                match self.sched.reclassify(job, class, &mut self.jobs) {
+                    // Valid no-op (already that class): nothing changed, so
+                    // nothing is emitted — the event stream stays truthful.
+                    Ok(changed) => {
+                        if changed {
+                            self.emit(&SchedulerEvent::Reclassified { at: now, job, class });
+                        }
+                    }
+                    Err(e) => self.reject(now, format!("reclassify {job}: {e}")),
+                }
+            }
+            SchedulerCommand::NodeDown { node } => {
+                let Some(availability) = self.availability(node) else {
+                    self.reject(now, format!("node_down: {node} does not exist"));
+                    return;
+                };
+                if availability == NodeAvailability::Down {
+                    self.reject(now, format!("node_down: {node} is already down"));
+                    return;
+                }
+                let lost = self.sched.fail_node(node, now, &mut self.jobs);
+                self.emit(&SchedulerEvent::NodeLost { at: now, node, lost });
+            }
+            SchedulerCommand::NodeUp { node } => {
+                let Some(availability) = self.availability(node) else {
+                    self.reject(now, format!("node_up: {node} does not exist"));
+                    return;
+                };
+                if availability == NodeAvailability::Up {
+                    self.reject(now, format!("node_up: {node} is already up"));
+                    return;
+                }
+                self.sched.restore_node(node);
+                self.emit(&SchedulerEvent::NodeRestored { at: now, node });
+            }
+            SchedulerCommand::Drain { node } => {
+                let Some(availability) = self.availability(node) else {
+                    self.reject(now, format!("drain: {node} does not exist"));
+                    return;
+                };
+                if availability != NodeAvailability::Up {
+                    self.reject(now, format!("drain: {node} is not up"));
+                    return;
+                }
+                self.sched.drain_node(node);
+                self.emit(&SchedulerEvent::NodeDraining { at: now, node });
+            }
+            SchedulerCommand::Resize { node, capacity } => {
+                if self.availability(node).is_none() {
+                    self.reject(now, format!("resize: {node} does not exist"));
+                    return;
+                }
+                match self.sched.cluster.resize(node, capacity) {
+                    Ok(()) => self.emit(&SchedulerEvent::NodeResized { at: now, node, capacity }),
+                    Err(e) => self.reject(now, format!("resize: {e}")),
+                }
+            }
+        }
+    }
+
+    /// One scheduling round: pop due arrivals, emit their `Submitted`
+    /// events, run [`Scheduler::tick`], emit the round's events in
+    /// normalized order, retire completed jobs into records, and hand back
+    /// any cancellations applied since the previous round.
+    pub fn step(&mut self, now: Minutes) -> StepOutcome {
+        let mut arrivals = Vec::new();
+        while let Some(id) = self.sched.clock.pop_arrival_due(now) {
+            arrivals.push(id);
+        }
+        for id in &arrivals {
+            let class = self.jobs[*id].spec.class;
+            self.emit(&SchedulerEvent::Submitted { at: now, job: *id, class });
+        }
+
+        let tick = self.sched.tick(now, &mut self.jobs, &arrivals);
+
+        let mut finished = Vec::with_capacity(tick.completed.len());
+        for id in &tick.completed {
+            let job = self.jobs.remove(*id);
+            let ev = SchedulerEvent::Finished {
+                at: now,
+                job: *id,
+                record: JobRecord::from_job(&job),
+            };
+            self.emit(&ev);
+            // Recover the record rather than cloning one per job — this is
+            // the million-job streaming hot path.
+            let SchedulerEvent::Finished { record, .. } = ev else {
+                unreachable!()
+            };
+            finished.push(record);
+        }
+        for id in &tick.preempted {
+            self.emit(&SchedulerEvent::Preempted { at: now, job: *id });
+        }
+        for id in &tick.vacated {
+            self.emit(&SchedulerEvent::Vacated { at: now, job: *id });
+        }
+        for id in &tick.started {
+            let (node, first_start) = {
+                let j = &self.jobs[*id];
+                (j.node.expect("started job has a node"), j.first_start)
+            };
+            let ev = if first_start == Some(now) {
+                SchedulerEvent::Started { at: now, job: *id, node }
+            } else {
+                SchedulerEvent::Resumed { at: now, job: *id, node }
+            };
+            self.emit(&ev);
+        }
+
+        StepOutcome {
+            arrivals,
+            tick,
+            finished,
+            cancelled: std::mem::take(&mut self.cancelled_buf),
+        }
+    }
+
+    /// All work done and nothing queued?
+    pub fn idle(&self) -> bool {
+        self.sched.idle()
+    }
+
+    /// Forwarded [`Scheduler::quiescent`] on the owned table.
+    pub fn quiescent(&self) -> bool {
+        self.sched.quiescent(&self.jobs)
+    }
+
+    /// Forwarded [`Scheduler::next_internal_at`] on the owned table.
+    pub fn next_internal_at(&mut self) -> Option<Minutes> {
+        self.sched.clock.next_internal_at(&self.jobs)
+    }
+
+    /// Bulk-burn a quiescent span (the event-horizon engine's fast path).
+    pub fn burn_many(&mut self, dt: Minutes) {
+        self.sched.burn_many(dt, &mut self.jobs);
+    }
+
+    /// Tear down into the pieces result assembly needs.
+    pub fn into_parts(self) -> (Scheduler, JobTable, StreamingMetrics) {
+        (self.sched, self.jobs, self.metrics)
+    }
+
+    fn availability(&self, node: NodeId) -> Option<NodeAvailability> {
+        self.sched
+            .cluster
+            .nodes
+            .get(node.0 as usize)
+            .map(|n| n.availability)
+    }
+
+    fn reject(&mut self, now: Minutes, reason: String) {
+        self.emit(&SchedulerEvent::CommandRejected { at: now, reason });
+    }
+
+    /// Broadcast one event: the built-in metrics sink first, then every
+    /// attached subscriber. By reference, so the hot retire path can
+    /// recover the `Finished`/`Cancelled` record from the event afterwards
+    /// instead of cloning one per job.
+    fn emit(&mut self, ev: &SchedulerEvent) {
+        EventSubscriber::on_event(&mut self.metrics, ev);
+        for s in &mut self.subs {
+            s.on_event(ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::policy::PolicyKind;
+
+    fn rv(c: f64, r: f64, g: f64) -> ResourceVec {
+        ResourceVec::new(c, r, g)
+    }
+
+    fn controller(policy: PolicyKind, nodes: usize) -> (ClusterController, SharedEventLog) {
+        let mut ctl = ClusterController::new(&ClusterSpec::tiny(nodes), SchedConfig::new(policy));
+        ctl.sched.paranoid = true;
+        let log = SharedEventLog::new();
+        ctl.subscribe(Box::new(log.clone()));
+        (ctl, log)
+    }
+
+    fn spec(id: u32, class: JobClass, submit: Minutes, exec: Minutes) -> JobSpec {
+        JobSpec::new(id, class, rv(4.0, 32.0, 1.0), submit, exec, 0)
+    }
+
+    #[test]
+    fn submit_start_finish_event_sequence() {
+        let (mut ctl, log) = controller(PolicyKind::Fifo, 1);
+        ctl.stage_arrival(spec(0, JobClass::Be, 0, 2));
+        ctl.step(0);
+        ctl.step(1);
+        let out = ctl.step(2);
+        assert_eq!(out.finished.len(), 1);
+        assert!(ctl.idle());
+        let kinds: Vec<&str> = log.events().iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, vec!["submitted", "started", "finished"]);
+        assert_eq!(ctl.metrics().completed, 1);
+    }
+
+    #[test]
+    fn cancel_running_job_frees_its_seat() {
+        let (mut ctl, log) = controller(PolicyKind::Fifo, 1);
+        ctl.stage_arrival(JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 100, 0));
+        ctl.stage_arrival(JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 5, 0));
+        ctl.step(0);
+        // Job 0 hogs the node; kill it and job 1 starts next round.
+        ctl.command(1, SchedulerCommand::Cancel { job: JobId(0) });
+        let out = ctl.step(1);
+        assert_eq!(out.cancelled.len(), 1);
+        assert!(out.cancelled[0].cancelled);
+        assert_eq!(out.tick.started, vec![JobId(1)]);
+        assert_eq!(ctl.metrics().cancelled_be, 1);
+        assert_eq!(ctl.metrics().jobs_seen, 0, "cancelled jobs stay out of the stats pool");
+        assert!(log.events().iter().any(|e| e.kind() == "cancelled"));
+        // The record is excluded from slowdown percentiles by construction:
+        // no finished_at.
+        assert!(out.cancelled[0].finished_at.is_none());
+    }
+
+    #[test]
+    fn cancel_unknown_job_is_rejected_not_fatal() {
+        let (mut ctl, log) = controller(PolicyKind::Fifo, 1);
+        ctl.command(0, SchedulerCommand::Cancel { job: JobId(9) });
+        assert_eq!(log.events().len(), 1);
+        assert_eq!(log.events()[0].kind(), "command_rejected");
+        ctl.step(0);
+        assert!(ctl.idle());
+    }
+
+    #[test]
+    fn node_down_emits_lost_jobs_and_up_restores() {
+        let (mut ctl, log) = controller(PolicyKind::Fifo, 2);
+        ctl.stage_arrival(spec(0, JobClass::Be, 0, 50));
+        ctl.step(0);
+        let host = ctl.jobs[JobId(0)].node.unwrap();
+        ctl.command(1, SchedulerCommand::NodeDown { node: host });
+        let out = ctl.step(1);
+        // The evicted job restarts immediately on the surviving node.
+        assert_eq!(out.tick.started, vec![JobId(0)]);
+        let evs = log.events();
+        let lost = evs.iter().find(|e| e.kind() == "node_lost").unwrap();
+        match lost {
+            SchedulerEvent::NodeLost { lost, .. } => assert_eq!(lost, &vec![JobId(0)]),
+            _ => unreachable!(),
+        }
+        let resumed = evs
+            .iter()
+            .any(|e| matches!(e, SchedulerEvent::Resumed { job, .. } if *job == JobId(0)));
+        assert!(resumed, "an eviction restart is a resume, not a first start");
+        // Double-down is rejected; up restores.
+        ctl.command(2, SchedulerCommand::NodeDown { node: host });
+        assert!(log.events().iter().any(|e| e.kind() == "command_rejected"));
+        ctl.command(2, SchedulerCommand::NodeUp { node: host });
+        assert!(log.events().iter().any(|e| e.kind() == "node_restored"));
+    }
+
+    #[test]
+    fn resize_rejects_below_use_and_applies_otherwise() {
+        let (mut ctl, log) = controller(PolicyKind::Fifo, 1);
+        ctl.stage_arrival(JobSpec::new(0, JobClass::Be, rv(16.0, 128.0, 4.0), 0, 50, 0));
+        ctl.step(0);
+        ctl.command(1, SchedulerCommand::Resize { node: NodeId(0), capacity: rv(8.0, 64.0, 2.0) });
+        assert_eq!(log.events().last().unwrap().kind(), "command_rejected");
+        let bigger = rv(64.0, 512.0, 16.0);
+        ctl.command(1, SchedulerCommand::Resize { node: NodeId(0), capacity: bigger });
+        assert_eq!(log.events().last().unwrap().kind(), "node_resized");
+        ctl.step(1);
+    }
+
+    #[test]
+    fn jsonl_log_is_one_object_per_line() {
+        let buf = SharedBuf::new();
+        let mut ctl = ClusterController::new(
+            &ClusterSpec::tiny(1),
+            SchedConfig::new(PolicyKind::Fifo),
+        );
+        ctl.subscribe(Box::new(JsonlEventLog::new(buf.clone())));
+        ctl.stage_arrival(spec(0, JobClass::Te, 0, 1));
+        ctl.step(0);
+        ctl.step(1);
+        let text = buf.contents();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "submitted, started, finished: {text}");
+        for line in lines {
+            let v = Json::parse(line).expect("every line parses");
+            assert!(v.get("type").as_str().is_some());
+            assert!(v.get("at").as_u64().is_some());
+        }
+        assert!(text.contains("\"type\":\"finished\""));
+    }
+
+    #[test]
+    fn event_json_kinds_are_stable() {
+        let ev = SchedulerEvent::NodeLost { at: 3, node: NodeId(1), lost: vec![JobId(2)] };
+        assert_eq!(ev.kind(), "node_lost");
+        assert_eq!(ev.at(), 3);
+        let j = ev.to_json().to_string();
+        assert!(j.contains("\"lost\":[2]"), "{j}");
+    }
+}

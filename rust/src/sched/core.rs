@@ -40,8 +40,8 @@
 //!   free-capacity index in [`Cluster`] (updated on bind/unbind/reserve),
 //!   so fits-anywhere checks and best-fit search stop scanning every node.
 
-use crate::cluster::{Cluster, ClusterSpec, Node, NodeId, Placement};
-use crate::job::{Job, JobId, JobState};
+use crate::cluster::{Cluster, ClusterSpec, Node, NodeAvailability, NodeId, Placement};
+use crate::job::{Job, JobClass, JobId, JobState};
 use crate::job_table::JobTable;
 use crate::queue::JobQueue;
 use crate::resources::ResourceVec;
@@ -232,6 +232,12 @@ impl Scheduler {
             for node in &self.cluster.nodes {
                 let free = match own_res {
                     Some((rnode, hold)) if rnode == node.id => {
+                        if !node.is_schedulable() {
+                            // Defensive: reservations are dropped when a
+                            // node drains or fails, so the credit should
+                            // never point at a non-Up node.
+                            continue;
+                        }
                         let held = node.hold().saturating_sub(&hold);
                         node.free.saturating_sub(&held)
                     }
@@ -253,10 +259,12 @@ impl Scheduler {
 
         if let Some((rnode, hold)) = own_res {
             let node = self.cluster.node(rnode);
-            let held = node.hold().saturating_sub(&hold);
-            let free = node.free.saturating_sub(&held);
-            if demand.fits_in(&free) {
-                best = Some((self.placement_key(&free, demand, node), rnode));
+            if node.is_schedulable() {
+                let held = node.hold().saturating_sub(&hold);
+                let free = node.free.saturating_sub(&held);
+                if demand.fits_in(&free) {
+                    best = Some((self.placement_key(&free, demand, node), rnode));
+                }
             }
         }
 
@@ -456,6 +464,10 @@ impl Scheduler {
             // re-plan — the paper's "continue the preemption process until
             // they can prepare enough resource".
             if self.has_reservation(head) {
+                // `get`, not indexing: a victim may have been retired from
+                // the table (completed under progress-during-grace, or
+                // cancelled by the control plane) — a retired victim is
+                // simply "no longer draining".
                 let still_draining = self
                     .reservations
                     .iter()
@@ -463,7 +475,7 @@ impl Scheduler {
                     .map(|r| {
                         r.victims
                             .iter()
-                            .any(|v| jobs[*v].state == JobState::Draining)
+                            .any(|v| jobs.get(*v).is_some_and(|j| j.state == JobState::Draining))
                     })
                     .unwrap_or(false);
                 if still_draining {
@@ -618,7 +630,7 @@ impl Scheduler {
                 r.te == id
                     && r.victims
                         .iter()
-                        .any(|v| jobs[*v].state == JobState::Draining)
+                        .any(|v| jobs.get(*v).is_some_and(|j| j.state == JobState::Draining))
             })
         })
     }
@@ -686,6 +698,161 @@ impl Scheduler {
         for id in self.be_queue.iter().chain(self.te_queue.iter()) {
             jobs[id].waiting += dt;
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Control-plane support: the operations behind
+    // [`SchedulerCommand`](crate::sched::control::SchedulerCommand).
+    // The [`ClusterController`](crate::sched::control::ClusterController)
+    // facade calls these and emits the corresponding events; nothing here
+    // runs on the scenario-free hot path.
+    // ------------------------------------------------------------------
+
+    /// Is `id` under this scheduler's management — queued in either lane or
+    /// occupying resources? False for jobs whose arrival has not been
+    /// processed yet (staged in the clock's arrival heap) and for retired
+    /// jobs; the scenario driver uses this to defer cancellations until
+    /// the target actually exists scheduler-side.
+    pub fn tracks(&self, id: JobId) -> bool {
+        self.active.contains(&id)
+            || self.te_queue.position(id).is_some()
+            || self.be_queue.position(id).is_some()
+    }
+
+    /// Withdraw `id` from the scheduler entirely (cancellation): remove it
+    /// from whichever queue holds it or release its resources if active,
+    /// and drop any reservation it owns. Returns false when the job is not
+    /// tracked (the caller turns that into a rejected command). Job-side
+    /// state is untouched — the controller applies [`Job::cancel`] and
+    /// retires the record.
+    pub fn discard(&mut self, id: JobId, jobs: &mut JobTable) -> bool {
+        if self.te_queue.remove(id) || self.be_queue.remove(id) {
+            self.release_reservation(id);
+            return true;
+        }
+        if let Some(i) = self.active.iter().position(|a| *a == id) {
+            self.active.swap_remove(i);
+            self.unbind_checked(id, jobs);
+            return true;
+        }
+        false
+    }
+
+    /// Change a job's class mid-flight (the user promotes a trial run to a
+    /// full training job, or demotes one). Queued jobs move to the tail of
+    /// the lane their new class routes to (their reservation, if any, is
+    /// dropped — the TE lane will re-plan); running jobs flip in place,
+    /// which changes their preemption eligibility from the next decision
+    /// on. Draining jobs cannot be reclassified (the preemption signal is
+    /// already out), nor can jobs the scheduler does not track.
+    ///
+    /// Every failure mode returns the *same* message: whether a missing
+    /// target is "not yet pulled" or "staged but not arrived" depends on
+    /// the driver's `arrival_lookahead`, and the rejection text ends up in
+    /// the deterministic event log — it must not leak that distinction.
+    ///
+    /// Returns `Ok(true)` when the class actually changed and `Ok(false)`
+    /// for a valid no-op (the job already has that class), so the
+    /// controller only emits a `Reclassified` event for real transitions.
+    pub fn reclassify(
+        &mut self,
+        id: JobId,
+        class: JobClass,
+        jobs: &mut JobTable,
+    ) -> Result<bool, &'static str> {
+        const REJECT: &str = "only a queued or running job can be reclassified";
+        let Some(state) = jobs.get(id).map(|j| j.state) else {
+            return Err(REJECT);
+        };
+        match state {
+            JobState::Pending => {
+                if !self.tracks(id) {
+                    return Err(REJECT); // staged pre-arrival
+                }
+                if jobs[id].spec.class == class {
+                    return Ok(false);
+                }
+                let queued = self.te_queue.remove(id) || self.be_queue.remove(id);
+                debug_assert!(queued, "tracked pending job must be queued");
+                self.release_reservation(id);
+                jobs[id].spec.class = class;
+                self.submit(&jobs[id]);
+                Ok(true)
+            }
+            JobState::Running => {
+                if jobs[id].spec.class == class {
+                    return Ok(false);
+                }
+                jobs[id].spec.class = class;
+                Ok(true)
+            }
+            _ => Err(REJECT),
+        }
+    }
+
+    /// Node failure: drop every reservation pinned to `node` (their TE
+    /// jobs re-plan on the remaining nodes), evict every hosted job with
+    /// **no** grace period — the node is gone — and mark the node `Down`.
+    /// Evicted jobs re-queue at the top of their lane (like preempted
+    /// jobs, but without counting a policy preemption) and may restart in
+    /// the very next scheduling round. Returns the evicted jobs in
+    /// allocation order.
+    pub fn fail_node(&mut self, node: NodeId, now: Minutes, jobs: &mut JobTable) -> Vec<JobId> {
+        self.drop_reservations_on(node);
+        let lost = self.cluster.evict_all(node);
+        for id in &lost {
+            match self.active.iter().position(|a| a == id) {
+                Some(i) => {
+                    self.active.swap_remove(i);
+                }
+                None => {
+                    debug_assert!(false, "{id} hosted but not active");
+                    self.stats.internal_errors += 1;
+                }
+            }
+            let is_te = {
+                let job = &mut jobs[*id];
+                job.fail_over(now);
+                job.is_te()
+            };
+            if self.cfg.policy.te_bypass() && is_te {
+                self.te_queue.reinsert_front(*id);
+            } else {
+                self.be_queue.reinsert_front(*id);
+            }
+        }
+        self.cluster.set_availability(node, NodeAvailability::Down);
+        lost
+    }
+
+    /// Maintenance drain: no new placements land on `node`, hosted jobs
+    /// run to completion. Reservations pinned here are dropped so their TE
+    /// jobs re-plan elsewhere.
+    pub fn drain_node(&mut self, node: NodeId) {
+        self.drop_reservations_on(node);
+        self.cluster.set_availability(node, NodeAvailability::Draining);
+    }
+
+    /// Bring a node (back) into service: `Down → Up` after a repair —
+    /// the node returns empty at full capacity — or `Draining → Up` to
+    /// abort a maintenance drain with its tenants intact.
+    pub fn restore_node(&mut self, node: NodeId) {
+        self.cluster.set_availability(node, NodeAvailability::Up);
+    }
+
+    /// Drop every reservation pinned to `node`, returning the TE jobs that
+    /// owned them.
+    fn drop_reservations_on(&mut self, node: NodeId) -> Vec<JobId> {
+        let tes: Vec<JobId> = self
+            .reservations
+            .iter()
+            .filter(|r| r.node == node)
+            .map(|r| r.te)
+            .collect();
+        for te in &tes {
+            self.release_reservation(*te);
+        }
+        tes
     }
 }
 
@@ -997,6 +1164,109 @@ mod tests {
         let (sched, _) = run(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }, &spec, &mut jobs);
         assert_eq!(sched.stats.te_no_preemption, 2);
         assert_eq!(sched.stats.plans, 0);
+    }
+
+    #[test]
+    fn fail_node_evicts_and_requeues_with_priority() {
+        // Two nodes; node 0 hosts job 0, node 1 hosts job 1; job 2 queued.
+        let spec = ClusterSpec::tiny(2);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 50, 0),
+            JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 50, 0),
+            JobSpec::new(2, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 50, 0),
+        ]);
+        let mut sched = Scheduler::new(&spec, SchedConfig::new(PolicyKind::Fifo));
+        sched.paranoid = true;
+        sched.tick(0, &mut jobs, &[JobId(0), JobId(1), JobId(2)]);
+        assert_eq!(jobs[JobId(0)].state, JobState::Running);
+        assert_eq!(jobs[JobId(1)].state, JobState::Running);
+
+        let lost = sched.fail_node(crate::cluster::NodeId(0), 1, &mut jobs);
+        assert_eq!(lost, vec![JobId(0)]);
+        assert_eq!(jobs[JobId(0)].state, JobState::Pending);
+        assert_eq!(jobs[JobId(0)].evictions, 1);
+        assert_eq!(jobs[JobId(0)].preemptions, 0);
+        // The evicted job jumped the queue: it restarts before job 2 once
+        // capacity returns.
+        assert_eq!(sched.be_queue.head(), Some(JobId(0)));
+
+        // With node 0 down, nothing can be placed on it; restoring brings
+        // the evicted job back ahead of the queue.
+        sched.tick(1, &mut jobs, &[]);
+        assert_eq!(jobs[JobId(0)].state, JobState::Pending, "no capacity while down");
+        sched.restore_node(crate::cluster::NodeId(0));
+        sched.tick(2, &mut jobs, &[]);
+        assert_eq!(jobs[JobId(0)].state, JobState::Running);
+        assert_eq!(jobs[JobId(2)].state, JobState::Pending, "priority preserved");
+    }
+
+    #[test]
+    fn drain_node_blocks_placement_but_keeps_tenants() {
+        let spec = ClusterSpec::tiny(2);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(4.0, 32.0, 1.0), 0, 5, 0),
+            JobSpec::new(1, JobClass::Be, rv(4.0, 32.0, 1.0), 1, 5, 0),
+        ]);
+        let mut sched = Scheduler::new(&spec, SchedConfig::new(PolicyKind::Fifo));
+        sched.paranoid = true;
+        sched.tick(0, &mut jobs, &[JobId(0)]);
+        let host = jobs[JobId(0)].node.unwrap();
+        sched.drain_node(host);
+        // Job 1 arrives: it must land on the other node.
+        sched.tick(1, &mut jobs, &[JobId(1)]);
+        assert_eq!(jobs[JobId(1)].state, JobState::Running);
+        assert_ne!(jobs[JobId(1)].node.unwrap(), host);
+        // The tenant runs to completion undisturbed.
+        for t in 2..8 {
+            sched.tick(t, &mut jobs, &[]);
+        }
+        assert_eq!(jobs[JobId(0)].state, JobState::Done);
+    }
+
+    #[test]
+    fn discard_covers_queued_and_active_jobs() {
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 50, 0),
+            JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 50, 0),
+        ]);
+        let mut sched = Scheduler::new(&spec, SchedConfig::new(PolicyKind::Fifo));
+        sched.paranoid = true;
+        sched.tick(0, &mut jobs, &[JobId(0), JobId(1)]);
+        assert!(sched.tracks(JobId(0)) && sched.tracks(JobId(1)));
+
+        // Queued job: vanishes from the queue.
+        assert!(sched.discard(JobId(1), &mut jobs));
+        assert!(!sched.tracks(JobId(1)));
+        // Active job: resources come back.
+        assert!(sched.discard(JobId(0), &mut jobs));
+        assert!(sched.idle());
+        sched.cluster.check_invariants().unwrap();
+        // Unknown job: declined.
+        assert!(!sched.discard(JobId(7), &mut jobs));
+    }
+
+    #[test]
+    fn reclassify_moves_queued_job_between_lanes() {
+        let spec = ClusterSpec::tiny(1);
+        let mut jobs = mkjobs(vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 50, 0),
+            JobSpec::new(1, JobClass::Be, rv(4.0, 32.0, 1.0), 0, 50, 0),
+        ]);
+        let mut sched = Scheduler::new(
+            &spec,
+            SchedConfig::new(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
+        );
+        sched.tick(0, &mut jobs, &[JobId(0), JobId(1)]);
+        // Job 1 is stuck behind the full node in the BE queue.
+        assert_eq!(jobs[JobId(1)].state, JobState::Pending);
+        sched.reclassify(JobId(1), JobClass::Te, &mut jobs).unwrap();
+        assert_eq!(sched.te_queue.len(), 1, "promoted into the TE lane");
+        assert_eq!(sched.be_queue.len(), 0);
+        // Running jobs flip in place; draining jobs are refused.
+        sched.reclassify(JobId(0), JobClass::Te, &mut jobs).unwrap();
+        assert_eq!(jobs[JobId(0)].spec.class, JobClass::Te);
+        assert!(sched.reclassify(JobId(9), JobClass::Be, &mut jobs).is_err());
     }
 
     #[test]

@@ -1,15 +1,25 @@
-//! The scheduler: FIFO admission core, the event clock, and pluggable
-//! preemption policies (§3 of the paper).
+//! The scheduler: FIFO admission core, the event clock, pluggable
+//! preemption policies (§3 of the paper), and the control-plane protocol.
 //!
-//! Three layers: [`policy`] decides *whom to evict* (behind the
+//! Four layers: [`policy`] decides *whom to evict* (behind the
 //! [`PreemptionPolicy`](policy::PreemptionPolicy) trait), [`clock`] knows
-//! *when anything happens next* (min-heaps, no job-table rescans), and the
-//! [`core`] ties them to the cluster's incremental capacity index.
+//! *when anything happens next* (min-heaps, no job-table rescans), the
+//! [`core`] ties them to the cluster's incremental capacity index, and
+//! [`control`] is the public face: a typed
+//! [`SchedulerCommand`](control::SchedulerCommand) /
+//! [`SchedulerEvent`](control::SchedulerEvent) protocol consumed by the
+//! [`ClusterController`](control::ClusterController) facade that both the
+//! simulator and the live executor drive.
 
 pub mod clock;
+pub mod control;
 pub mod core;
 pub mod policy;
 
 pub use clock::EventClock;
+pub use control::{
+    ClusterController, EventSubscriber, JsonlErrorFlag, JsonlEventLog, SchedulerCommand,
+    SchedulerEvent, SharedBuf, SharedEventLog, StepOutcome,
+};
 pub use core::{SchedConfig, SchedStats, Scheduler, TickStats};
 pub use policy::{PolicyKind, PreemptionPlan, PreemptionPolicy};

@@ -163,10 +163,16 @@ pub struct PolicyCtx<'a> {
 
 impl<'a> PolicyCtx<'a> {
     /// Running (not draining) BE jobs on `node` — the preemptible set.
+    /// Empty for non-`Up` nodes: a TE job can never be *placed* on a
+    /// draining or down node, so evicting its tenants would burn grace
+    /// periods for space the TE job cannot use. Every policy's victim pool
+    /// flows through here, so the availability rule holds uniformly.
     pub fn running_be_on(&self, node: NodeId) -> Vec<JobId> {
-        self.cluster
-            .node(node)
-            .jobs()
+        let n = self.cluster.node(node);
+        if !n.is_schedulable() {
+            return Vec::new();
+        }
+        n.jobs()
             .filter(|id| {
                 let j = &self.jobs[*id];
                 j.is_be() && j.state == JobState::Running

@@ -1,15 +1,24 @@
 //! Discrete-time simulator: streams an
 //! [`ArrivalSource`](crate::workload::source::ArrivalSource) through a
-//! [`Scheduler`] (§4.1: "the job scheduler decides resource allocation at
+//! [`Scheduler`](crate::sched::Scheduler) (§4.1: "the job scheduler decides resource allocation at
 //! every simulated minute").
 //!
-//! ## Streaming core
+//! ## Streaming core over the control-plane protocol
 //!
-//! One core loop (`Simulator::run_core`) pulls arrivals *lazily* from the
-//! source through a bounded lookahead window into the scheduler's
-//! [`EventClock`](crate::sched::EventClock), and retires each job out of
-//! the slab [`JobTable`] the tick it completes, folding its outcome into a
-//! [`StreamingMetrics`] sink. Resident state is therefore O(live jobs) —
+//! One core loop (`Simulator::run_core`) drives a
+//! [`ClusterController`] — the same command/event facade the live
+//! executor uses — pulling arrivals *lazily* from the source through a
+//! bounded lookahead window into the scheduler's
+//! [`EventClock`](crate::sched::EventClock), translating any attached
+//! [`ScenarioScript`] (timed cancellations, node failures/drains/resizes,
+//! the TE-patience rule — see [`scenario`]) into
+//! [`SchedulerCommand`](crate::sched::control::SchedulerCommand)s applied
+//! between rounds, and retiring each job out of the slab
+//! [`JobTable`](crate::job_table::JobTable) the tick it completes, folding
+//! its outcome into a [`StreamingMetrics`] sink. Every observable state
+//! change is emitted as a
+//! [`SchedulerEvent`](crate::sched::control::SchedulerEvent) to any
+//! subscribers passed to [`Simulator::run_with`]. Resident state is therefore O(live jobs) —
 //! queued + running + draining — not O(total jobs), which is what lets a
 //! million-job trace replay in bounded memory (`SimResult::peak_live` is
 //! the asserted high-water counter). Full per-job records stay available
@@ -23,10 +32,10 @@
 //!   scheduler is quiescent, fast-forwards to the next *event horizon*
 //!   (earliest of the next arrival — resident or still inside the source —
 //!   next completion/grace expiry, and the engine's stopping caps) in a
-//!   single [`Scheduler::burn_many`] call instead of ticking minute by
+//!   single [`Scheduler::burn_many`](crate::sched::Scheduler::burn_many) call instead of ticking minute by
 //!   minute.
 //! * [`SimEngine::PerMinute`] — the reference drive mode, one
-//!   [`Scheduler::tick`] per simulated minute. Kept as the equivalence
+//!   [`Scheduler::tick`](crate::sched::Scheduler::tick) per simulated minute. Kept as the equivalence
 //!   oracle: `rust/tests/engine_equivalence.rs` and
 //!   `rust/tests/streaming_equivalence.rs` assert both drive modes and all
 //!   source types produce byte-identical records.
@@ -35,13 +44,16 @@
 //! results, whichever engine runs — which is what makes every number in
 //! EXPERIMENTS.md reproducible.
 
+pub mod scenario;
+
 use crate::cluster::{ClusterSpec, Placement};
 use crate::job::{Job, JobClass, JobId, JobState};
-use crate::job_table::JobTable;
 use crate::metrics::{IntervalsReport, PreemptionReport, SlowdownReport, StreamingMetrics};
 use crate::resources::ResourceVec;
+use crate::sched::control::{ClusterController, EventSubscriber};
 use crate::sched::policy::PolicyKind;
-use crate::sched::{SchedConfig, SchedStats, Scheduler};
+use crate::sched::{SchedConfig, SchedStats};
+use crate::sim::scenario::{ScenarioDriver, ScenarioScript};
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::workload::source::{ArrivalSource, WorkloadSource};
@@ -49,7 +61,7 @@ use crate::workload::Workload;
 use crate::Minutes;
 
 /// Which driver advances simulated time. Both engines share
-/// [`Scheduler::tick`]; they differ only in how many quiescent minutes they
+/// [`Scheduler::tick`](crate::sched::Scheduler::tick); they differ only in how many quiescent minutes they
 /// step through one at a time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SimEngine {
@@ -96,6 +108,11 @@ pub struct SimConfig {
     /// Ignored (clamped to 0) for feedback-driven sources — see
     /// [`ArrivalSource::feedback_driven`].
     pub arrival_lookahead: Minutes,
+    /// Deterministic control-plane injections (cancellations, node
+    /// failures/drains/resizes, the TE-patience kill rule) replayed against
+    /// the run. `None` (default) — and an *empty* script alike — leaves
+    /// results byte-identical to a scenario-free run.
+    pub scenario: Option<ScenarioScript>,
 }
 
 impl SimConfig {
@@ -115,6 +132,7 @@ impl SimConfig {
             paranoid: false,
             record_jobs: true,
             arrival_lookahead: 0,
+            scenario: None,
         }
     }
 }
@@ -140,10 +158,17 @@ pub struct JobRecord {
     pub finished_at: Option<Minutes>,
     /// How many times the job was preempted.
     pub preemptions: u32,
+    /// Node-failure evictions the job suffered (control plane; not
+    /// preemptions).
+    pub evictions: u32,
     /// Completed vacate→restart intervals (Table 2).
     pub resched_intervals: Vec<Minutes>,
     /// Eq. 5 slowdown rate.
     pub slowdown: f64,
+    /// True when the job was cancelled by the control plane (then
+    /// `finished_at` is `None` and the job is excluded from slowdown,
+    /// interval, and preemption statistics).
+    pub cancelled: bool,
 }
 
 impl JobRecord {
@@ -162,8 +187,10 @@ impl JobRecord {
             first_start: j.first_start,
             finished_at: j.finished_at,
             preemptions: j.preemptions,
+            evictions: j.evictions,
             resched_intervals: j.resched_intervals.clone(),
             slowdown: j.slowdown(),
+            cancelled: j.state == JobState::Cancelled,
         }
     }
 }
@@ -203,31 +230,46 @@ impl SimResult {
             .collect()
     }
 
-    /// Re-scheduling intervals (vacate → restart) in minutes, all jobs
-    /// pooled (Table 2).
+    /// Re-scheduling intervals (vacate → restart) in minutes, all
+    /// non-cancelled jobs pooled (Table 2; matches the streaming sink,
+    /// which never sees cancelled jobs' intervals).
     pub fn resched_intervals(&self) -> Vec<f64> {
         self.records
             .iter()
+            .filter(|r| !r.cancelled)
             .flat_map(|r| r.resched_intervals.iter().map(|m| *m as f64))
             .collect()
     }
 
-    /// Fraction of all jobs preempted at least once (Table 3).
+    /// Fraction of non-cancelled jobs preempted at least once (Table 3).
     pub fn preempted_fraction(&self) -> f64 {
-        let n = self.records.len();
+        let mut n = 0usize;
+        let mut p = 0usize;
+        for r in &self.records {
+            if r.cancelled {
+                continue;
+            }
+            n += 1;
+            if r.preemptions > 0 {
+                p += 1;
+            }
+        }
         if n == 0 {
             return 0.0;
         }
-        let p = self.records.iter().filter(|r| r.preemptions > 0).count();
         p as f64 / n as f64
     }
 
-    /// Fractions of jobs preempted exactly 1, exactly 2, and ≥3 times
-    /// (Table 4).
+    /// Fractions of non-cancelled jobs preempted exactly 1, exactly 2,
+    /// and ≥3 times (Table 4).
     pub fn preemption_histogram(&self) -> [f64; 3] {
-        let n = self.records.len().max(1) as f64;
+        let mut n = 0usize;
         let mut h = [0usize; 3];
         for r in &self.records {
+            if r.cancelled {
+                continue;
+            }
+            n += 1;
             match r.preemptions {
                 0 => {}
                 1 => h[0] += 1,
@@ -235,7 +277,14 @@ impl SimResult {
                 _ => h[2] += 1,
             }
         }
+        let n = n.max(1) as f64;
         [h[0] as f64 / n, h[1] as f64 / n, h[2] as f64 / n]
+    }
+
+    /// Control-plane cancellations `(te, be)` — always sourced from the
+    /// metrics sink, which counts them exactly in both record modes.
+    pub fn cancelled(&self) -> (u64, u64) {
+        (self.metrics.cancelled_te, self.metrics.cancelled_be)
     }
 
     /// Slowdown percentiles: exact (from records) when `record_jobs` was
@@ -303,6 +352,13 @@ impl SimResult {
             ("jobs_seen", Json::num(self.metrics.jobs_seen as f64)),
             ("peak_live", Json::num(self.peak_live as f64)),
             (
+                "cancelled",
+                Json::obj(vec![
+                    ("te", Json::num(self.metrics.cancelled_te as f64)),
+                    ("be", Json::num(self.metrics.cancelled_be as f64)),
+                ]),
+            ),
+            (
                 "slowdown",
                 Json::obj(vec![
                     ("te", r.te.to_json()),
@@ -351,23 +407,41 @@ impl Simulator {
         self.run_source(&mut WorkloadSource::new(workload))
     }
 
-    /// Run any pull-based [`ArrivalSource`] to completion. This is the
-    /// primary entry point: [`Simulator::run`] and every sweep cell route
-    /// through it. Both [`SimEngine`]s are drive modes of one core loop;
-    /// the event-horizon mode additionally fast-forwards quiescent spans.
+    /// Run any pull-based [`ArrivalSource`] to completion with no extra
+    /// event subscribers. [`Simulator::run`] and every sweep cell route
+    /// through it.
     pub fn run_source(&self, source: &mut dyn ArrivalSource) -> SimResult {
-        self.run_core(source, self.cfg.engine == SimEngine::EventHorizon)
+        self.run_with(source, Vec::new())
     }
 
-    /// Build the scheduler for a run.
-    fn setup(&self) -> Scheduler {
+    /// Run a source with additional [`EventSubscriber`]s attached (a JSONL
+    /// event log, an in-memory collector, …). This is the primary entry
+    /// point: both [`SimEngine`]s are drive modes of one core loop over the
+    /// [`ClusterController`] protocol; the event-horizon mode additionally
+    /// fast-forwards quiescent spans. Subscribers are dropped (flushing
+    /// any buffered output) before the result returns.
+    pub fn run_with(
+        &self,
+        source: &mut dyn ArrivalSource,
+        subscribers: Vec<Box<dyn EventSubscriber>>,
+    ) -> SimResult {
+        self.run_core(
+            source,
+            self.cfg.engine == SimEngine::EventHorizon,
+            subscribers,
+        )
+    }
+
+    /// Build the controller (scheduler + resident job table + metrics
+    /// sink) for a run.
+    fn setup(&self) -> ClusterController {
         let mut sched_cfg = SchedConfig::new(self.cfg.policy);
         sched_cfg.placement = self.cfg.placement;
         sched_cfg.progress_during_grace = self.cfg.progress_during_grace;
         sched_cfg.seed = self.cfg.seed;
-        let mut sched = Scheduler::new(&self.cfg.cluster, sched_cfg);
-        sched.paranoid = self.cfg.paranoid;
-        sched
+        let mut ctl = ClusterController::new(&self.cfg.cluster, sched_cfg);
+        ctl.sched.paranoid = self.cfg.paranoid;
+        ctl
     }
 
     /// The shared streaming core loop. Every iteration:
@@ -376,7 +450,7 @@ impl Simulator {
     ///    `now + arrival_lookahead` move from the source into the job
     ///    table and the clock's arrival heap.
     /// 2. **Pop + tick** — arrivals due this minute leave the heap and one
-    ///    [`Scheduler::tick`] runs (exactly as the paper describes the
+    ///    [`Scheduler::tick`](crate::sched::Scheduler::tick) runs (exactly as the paper describes the
     ///    scheduler operating).
     /// 3. **Retire** — jobs that completed this tick leave the job table;
     ///    each outcome is folded into the [`StreamingMetrics`] sink (and
@@ -389,7 +463,7 @@ impl Simulator {
     ///    the true final submission.
     ///
     /// With `fast_forward` set (the event-horizon mode), a tick after which
-    /// the scheduler is [quiescent](Scheduler::quiescent) — and nothing
+    /// the scheduler is [quiescent](crate::sched::Scheduler::quiescent) — and nothing
     /// vacated in the tick just executed, since a vacated job becomes
     /// admittable one tick later — advances the span until the earliest of
     ///
@@ -397,17 +471,33 @@ impl Simulator {
     ///   [`peek_submit`](ArrivalSource::peek_submit) for not-yet-pulled
     ///   jobs),
     /// * the next internal event — completion or grace expiry
-    ///   ([`Scheduler::next_internal_at`], a clock heap peek), and
+    ///   ([`Scheduler::next_internal_at`](crate::sched::Scheduler::next_internal_at), a clock heap peek), and
     /// * the engine's stopping caps (`max_ticks`, the no-drain tail cutoff)
     ///
-    /// in one [`Scheduler::burn_many`] call. Quiescent spans therefore cost
+    /// in one [`Scheduler::burn_many`](crate::sched::Scheduler::burn_many) call. Quiescent spans therefore cost
     /// O(live jobs) once instead of per minute, and the results are
     /// byte-identical to the per-minute drive mode (see
     /// `rust/tests/engine_equivalence.rs`).
-    fn run_core(&self, source: &mut dyn ArrivalSource, fast_forward: bool) -> SimResult {
-        let mut jobs = JobTable::new();
-        let mut sched = self.setup();
-        let mut metrics = StreamingMetrics::new();
+    fn run_core(
+        &self,
+        source: &mut dyn ArrivalSource,
+        fast_forward: bool,
+        subscribers: Vec<Box<dyn EventSubscriber>>,
+    ) -> SimResult {
+        let mut ctl = self.setup();
+        for sub in subscribers {
+            ctl.subscribe(sub);
+        }
+        let mut scenario = self
+            .cfg
+            .scenario
+            .as_ref()
+            .map(|s| ScenarioDriver::new(s.clone()));
+        if let Some(driver) = &scenario {
+            // Every timed command minute becomes a clock control entry so
+            // the fast-forward target below can never cross one.
+            driver.prime(&mut ctl.sched.clock);
+        }
         let mut records: Vec<JobRecord> = Vec::new();
         // Feedback-driven (closed-loop) sources may schedule a new arrival
         // earlier than one already visible: pulling ahead would break the
@@ -421,7 +511,6 @@ impl Simulator {
         // submission once the source is exhausted.
         let mut last_submit: Minutes = 0;
         let mut now: Minutes = 0;
-        let mut arrivals: Vec<JobId> = Vec::new();
 
         loop {
             // ---- 1: pull arrivals inside the lookahead window ----------
@@ -433,34 +522,52 @@ impl Simulator {
                 debug_assert!(spec.submit == at && at >= now, "source out of order");
                 debug_assert!(spec.submit >= last_submit, "submits must be monotone");
                 last_submit = last_submit.max(spec.submit);
-                sched.clock.push_arrival(spec.submit, spec.id);
-                jobs.insert(Job::new(spec));
+                ctl.stage_arrival(spec);
             }
 
-            // ---- 2: pop due arrivals, tick -----------------------------
-            arrivals.clear();
-            while let Some(id) = sched.clock.pop_arrival_due(now) {
-                arrivals.push(id);
+            // ---- 2: control plane — commands due this minute -----------
+            if let Some(driver) = &mut scenario {
+                ctl.sched.clock.pop_controls_due(now);
+                let (cmds, wake) = driver.due(now, &ctl.sched, &ctl.jobs);
+                for cmd in cmds {
+                    ctl.command(now, cmd);
+                }
+                for at in wake {
+                    ctl.sched.clock.push_control(at);
+                }
             }
-            let out = sched.tick(now, &mut jobs, &arrivals);
 
-            // ---- 3: retire completed jobs into the sink ----------------
-            for id in &out.completed {
-                let job = jobs.remove(*id);
-                source.on_job_finished(*id, now);
-                let rec = JobRecord::from_job(&job);
-                metrics.observe(&rec);
+            // ---- 3: one scheduling round (arrivals pop inside) ---------
+            let out = ctl.step(now);
+            if let Some(driver) = &mut scenario {
+                for at in driver.watch_arrivals(now, &out.arrivals, &ctl.jobs) {
+                    ctl.sched.clock.push_control(at);
+                }
+            }
+
+            // ---- 4: retire into records, notify the source -------------
+            // Cancellations first (they were applied before the round);
+            // closed-loop users treat a kill like a completion and
+            // schedule their next trial.
+            for rec in out.cancelled {
+                source.on_job_finished(rec.id, now);
+                if self.cfg.record_jobs {
+                    records.push(rec);
+                }
+            }
+            for rec in out.finished {
+                source.on_job_finished(rec.id, now);
                 if self.cfg.record_jobs {
                     records.push(rec);
                 }
             }
             now += 1;
 
-            // ---- 4: stop conditions ------------------------------------
-            let no_more_arrivals = source.done() && !sched.clock.arrivals_pending();
+            // ---- 5: stop conditions ------------------------------------
+            let no_more_arrivals = source.done() && !ctl.sched.clock.arrivals_pending();
             if no_more_arrivals && now > last_submit {
                 if self.cfg.drain {
-                    if sched.idle() {
+                    if ctl.idle() {
                         break;
                     }
                 } else if now > last_submit + self.cfg.tail_ticks {
@@ -472,17 +579,22 @@ impl Simulator {
             }
 
             // ---- fast-forward to the next event horizon ----------------
-            if fast_forward && out.vacated.is_empty() && sched.quiescent(&jobs) {
+            if fast_forward && out.tick.vacated.is_empty() && ctl.quiescent() {
                 // Latest tick the per-minute mode could still execute
                 // before one of its break conditions fires.
                 let mut target = self.cfg.max_ticks.saturating_sub(1);
                 if !self.cfg.drain && no_more_arrivals {
                     target = target.min(last_submit + self.cfg.tail_ticks);
                 }
-                if let Some(at) = sched.next_internal_at(&jobs) {
+                if let Some(at) = ctl.next_internal_at() {
                     target = target.min(at);
                 }
-                if let Some(at) = sched.clock.next_arrival_at() {
+                if let Some(at) = ctl.sched.clock.next_arrival_at() {
+                    target = target.min(at);
+                }
+                if let Some(at) = ctl.sched.clock.next_control_at() {
+                    // Pending command injections (or deferred-cancel
+                    // retries) pin the horizon exactly like arrivals.
                     target = target.min(at);
                 }
                 if let Some(at) = source.peek_submit() {
@@ -491,29 +603,30 @@ impl Simulator {
                     target = target.min(at);
                 }
                 if target > now {
-                    sched.burn_many(target - now, &mut jobs);
+                    ctl.burn_many(target - now);
                     now = target;
                 }
             }
         }
 
-        self.finish(jobs, sched, source, metrics, records, now)
+        self.finish(ctl, source, records, now)
     }
 
     /// Assemble the result: fold unfinished resident jobs (and any jobs
     /// the source still holds after a `max_ticks` cut-off — the
     /// materialized driver recorded those as never-started, so the
     /// streamed one must too) into the sink, then sort records into job-id
-    /// order for byte-compatibility with the materialized path.
+    /// order for byte-compatibility with the materialized path. Cancelled
+    /// jobs were retired (and recorded) at cancellation time and are *not*
+    /// unfinished.
     fn finish(
         &self,
-        jobs: JobTable,
-        sched: Scheduler,
+        ctl: ClusterController,
         source: &mut dyn ArrivalSource,
-        mut metrics: StreamingMetrics,
         mut records: Vec<JobRecord>,
         now: Minutes,
     ) -> SimResult {
+        let (sched, jobs, mut metrics) = ctl.into_parts();
         let mut unfinished = 0usize;
         for job in jobs.iter() {
             debug_assert!(job.state != JobState::Done, "Done jobs retire eagerly");
@@ -803,5 +916,108 @@ mod tests {
         let parsed = Json::parse(&j.to_pretty()).unwrap();
         assert_eq!(parsed.get("policy").as_str(), Some("FIFO"));
         assert_eq!(parsed.get("unfinished").as_u64(), Some(0));
+        assert_eq!(parsed.get("cancelled").get("te").as_u64(), Some(0));
+    }
+
+    #[test]
+    fn empty_scenario_changes_nothing() {
+        // Attaching an empty script must leave every record and counter
+        // byte-identical to a scenario-free run (the acceptance pin; the
+        // full 7-policy × 2-engine sweep lives in
+        // rust/tests/streaming_equivalence.rs).
+        let specs: Vec<JobSpec> = (0..30)
+            .map(|i| {
+                JobSpec::new(i, if i % 3 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(6.0 + (i % 4) as f64 * 8.0, 48.0, (i % 3) as f64),
+                    (i as u64) / 2, 4 + (i as u64 % 11), (i as u64) % 4)
+            })
+            .collect();
+        let mk = |scenario: Option<crate::sim::scenario::ScenarioScript>| {
+            let mut cfg = SimConfig::new(
+                ClusterSpec::tiny(2),
+                PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+            );
+            cfg.paranoid = true;
+            cfg.scenario = scenario;
+            Simulator::new(cfg).run(&wl(specs.clone()))
+        };
+        let plain = mk(None);
+        let scripted = mk(Some(crate::sim::scenario::ScenarioScript::new()));
+        assert_eq!(plain.records, scripted.records);
+        assert_eq!(plain.metrics, scripted.metrics);
+        assert_eq!(plain.makespan, scripted.makespan);
+        assert_eq!(plain.sched_stats.ticks, scripted.sched_stats.ticks);
+    }
+
+    #[test]
+    fn cancelled_jobs_are_recorded_but_not_pooled() {
+        use crate::sched::control::SchedulerCommand;
+        // One hog, one blocked job; cancel the hog at minute 3.
+        let specs = vec![
+            JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 1000, 0),
+            JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 5, 0),
+        ];
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo);
+        cfg.paranoid = true;
+        cfg.scenario = Some(
+            crate::sim::scenario::ScenarioScript::new()
+                .at(3, SchedulerCommand::Cancel { job: JobId(0) }),
+        );
+        let res = Simulator::new(cfg).run(&wl(specs));
+        assert_eq!(res.cancelled(), (0, 1));
+        assert_eq!(res.unfinished, 0, "cancelled is not unfinished");
+        assert_eq!(res.records.len(), 2, "cancelled jobs keep a record");
+        let hog = &res.records[0];
+        assert!(hog.cancelled && hog.finished_at.is_none());
+        // Job 1 got the freed seat at minute 3 and finished.
+        assert_eq!(res.records[1].first_start, Some(3));
+        assert_eq!(res.records[1].finished_at, Some(8));
+        // Pooled stats ignore the cancelled hog entirely.
+        assert_eq!(res.metrics.jobs_seen, 1);
+        assert_eq!(res.slowdowns(JobClass::Be).len(), 1);
+        assert_eq!(res.preempted_fraction(), 0.0);
+    }
+
+    #[test]
+    fn scenario_runs_agree_across_engines_and_lookahead() {
+        use crate::sched::control::SchedulerCommand;
+        let specs: Vec<JobSpec> = (0..40)
+            .map(|i| {
+                JobSpec::new(i, if i % 4 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(4.0 + (i % 3) as f64 * 8.0, 32.0, (i % 2) as f64 + 1.0),
+                    (i as u64) * 2, 5 + (i as u64 % 13), (i as u64) % 4)
+            })
+            .collect();
+        let scenario = crate::sim::scenario::ScenarioScript::new()
+            .with_te_patience(3)
+            .at(10, SchedulerCommand::NodeDown { node: crate::cluster::NodeId(0) })
+            .at(40, SchedulerCommand::NodeUp { node: crate::cluster::NodeId(0) })
+            .at(20, SchedulerCommand::Drain { node: crate::cluster::NodeId(1) })
+            .at(55, SchedulerCommand::NodeUp { node: crate::cluster::NodeId(1) })
+            .at(15, SchedulerCommand::Cancel { job: JobId(7) })
+            // Pre-arrival cancel: job 35 submits at minute 70; the cancel
+            // is issued at 5 and must defer identically whatever the
+            // lookahead window staged.
+            .at(5, SchedulerCommand::Cancel { job: JobId(35) });
+        let mk = |engine: SimEngine, lookahead: Minutes| {
+            let policy = PolicyKind::FitGpp { s: 4.0, p_max: Some(1) };
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(2), policy);
+            cfg.paranoid = true;
+            cfg.engine = engine;
+            cfg.arrival_lookahead = lookahead;
+            cfg.scenario = Some(scenario.clone());
+            Simulator::new(cfg).run(&wl(specs.clone()))
+        };
+        let base = mk(SimEngine::PerMinute, 0);
+        assert!(base.cancelled().0 + base.cancelled().1 >= 2, "{:?}", base.cancelled());
+        assert_eq!(base.unfinished, 0, "scenario run still drains");
+        for engine in [SimEngine::PerMinute, SimEngine::EventHorizon] {
+            for lookahead in [0u64, 1, 32, 1 << 20] {
+                let other = mk(engine, lookahead);
+                assert_eq!(base.records, other.records, "{engine:?}/{lookahead}");
+                assert_eq!(base.metrics, other.metrics, "{engine:?}/{lookahead}");
+                assert_eq!(base.makespan, other.makespan, "{engine:?}/{lookahead}");
+            }
+        }
     }
 }

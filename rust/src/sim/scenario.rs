@@ -1,0 +1,470 @@
+//! Deterministic scenario scripts: timed control-plane command injections
+//! plus standing rules, replayed identically by both simulator engines.
+//!
+//! A [`ScenarioScript`] is data — a list of `(minute, command)` pairs and
+//! an optional *TE patience* rule — parsed from a small JSON file
+//! (`fitgpp simulate --scenario <file>`) or built in code. The
+//! [`ScenarioDriver`] executes it against a
+//! [`ClusterController`](crate::sched::control::ClusterController)-driven
+//! run:
+//!
+//! * **Timed commands** fire at their minute, before that minute's
+//!   scheduling round (so a cancellation beats a same-minute completion,
+//!   and a node failure is visible to the round's admission pass).
+//! * **TE patience** models the paper's impatient trial-and-error user:
+//!   any TE job still waiting `patience` minutes after submission is
+//!   killed ([`SchedulerCommand::Cancel`]) — exactly the "user watches the
+//!   queue and gives up" behaviour §2 motivates preemption with.
+//! * **Deferred cancellations**: a `cancel` whose target has not arrived
+//!   yet is held until the job exists scheduler-side — it then applies the
+//!   minute after the target's submission — or dropped if the target
+//!   already retired. This makes scenario outcomes independent of
+//!   `arrival_lookahead` — a cancel can never hit a job merely because a
+//!   wide pull window staged it early — and costs no extra wakeups: an
+//!   unarrived target's own arrival already pins the event horizon.
+//!
+//! Every future action minute is mirrored into the
+//! [`EventClock`](crate::sched::EventClock)'s control heap, so the
+//! event-horizon engine never fast-forwards across an injection point —
+//! scenario runs stay byte-identical across engines and lookahead
+//! settings (pinned by the JSONL golden test).
+//!
+//! ## File format
+//!
+//! ```json
+//! {
+//!   "te_patience": 30,
+//!   "commands": [
+//!     {"at": 60,  "cmd": "node_down", "node": 3},
+//!     {"at": 240, "cmd": "node_up",   "node": 3},
+//!     {"at": 120, "cmd": "drain",     "node": 2},
+//!     {"at": 360, "cmd": "cancel",    "job": 17},
+//!     {"at": 90,  "cmd": "reclassify", "job": 5, "class": "TE"},
+//!     {"at": 45,  "cmd": "resize",    "node": 1, "cpu": 16, "ram_gb": 128, "gpu": 4}
+//!   ]
+//! }
+//! ```
+//!
+//! `submit` is deliberately not a scenario command: arrivals belong to the
+//! [`ArrivalSource`](crate::workload::source::ArrivalSource) (job ids must
+//! stay dense in yield order); [`SchedulerCommand::Submit`] exists for
+//! live/manual driving of the controller.
+
+use crate::job::{JobClass, JobId};
+use crate::job_table::JobTable;
+use crate::resources::ResourceVec;
+use crate::sched::clock::EventClock;
+use crate::sched::control::SchedulerCommand;
+use crate::sched::Scheduler;
+use crate::util::json::Json;
+use crate::Minutes;
+use anyhow::{bail, Context, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::path::Path;
+
+/// A deterministic scenario: timed commands plus the TE-patience rule.
+/// Plain data — clones into [`SimConfig`](crate::sim::SimConfig), compares
+/// in tests, and parses from JSON.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ScenarioScript {
+    /// `(minute, command)` injections; stable-sorted by minute when the
+    /// driver is built, so same-minute commands apply in listed order.
+    pub commands: Vec<(Minutes, SchedulerCommand)>,
+    /// Kill any TE job still waiting this many minutes after submission
+    /// (≥ 1; the paper's impatient interactive user).
+    pub te_patience: Option<Minutes>,
+}
+
+impl ScenarioScript {
+    /// An empty scenario (attaching it changes nothing — pinned by the
+    /// equivalence tests).
+    pub fn new() -> Self {
+        ScenarioScript::default()
+    }
+
+    /// Builder: add a timed command.
+    pub fn at(mut self, minute: Minutes, cmd: SchedulerCommand) -> Self {
+        self.commands.push((minute, cmd));
+        self
+    }
+
+    /// Builder: set the TE patience threshold (minutes, ≥ 1).
+    pub fn with_te_patience(mut self, patience: Minutes) -> Self {
+        assert!(patience >= 1, "patience must be at least one minute");
+        self.te_patience = Some(patience);
+        self
+    }
+
+    /// Number of timed commands.
+    pub fn len(&self) -> usize {
+        self.commands.len()
+    }
+
+    /// True when the script has no timed commands and no standing rule.
+    pub fn is_empty(&self) -> bool {
+        self.commands.is_empty() && self.te_patience.is_none()
+    }
+
+    /// Parse the JSON scenario format (see the module docs).
+    pub fn parse(text: &str) -> Result<ScenarioScript> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("scenario json: {e}"))?;
+        let mut script = ScenarioScript::new();
+        match v.get("te_patience") {
+            Json::Null => {}
+            p => {
+                let p = p.as_u64().context("te_patience must be a non-negative integer")?;
+                if p == 0 {
+                    bail!("te_patience must be at least one minute");
+                }
+                script.te_patience = Some(p);
+            }
+        }
+        let empty: Vec<Json> = Vec::new();
+        let items: &[Json] = match v.get("commands") {
+            Json::Null => &empty, // key absent: patience-only scenarios are fine
+            arr => arr
+                .as_arr()
+                .context("'commands' must be an array of command objects")?,
+        };
+        for (i, item) in items.iter().enumerate() {
+            let at = item
+                .get("at")
+                .as_u64()
+                .with_context(|| format!("command {i}: missing integer 'at'"))?;
+            let kind = item
+                .get("cmd")
+                .as_str()
+                .with_context(|| format!("command {i}: missing 'cmd'"))?;
+            // Range-checked u32 ids: a typo'd out-of-range id must be a
+            // parse error, never a silent truncation onto some other
+            // job/node.
+            let id32 = |key: &str| -> Result<u32> {
+                let v = item.get(key).as_u64().with_context(|| {
+                    format!("command {i} ({kind}): missing integer '{key}'")
+                })?;
+                u32::try_from(v).map_err(|_| {
+                    anyhow::anyhow!("command {i} ({kind}): '{key}' {v} exceeds u32 range")
+                })
+            };
+            let job = |key: &str| -> Result<JobId> { Ok(JobId(id32(key)?)) };
+            let node = || -> Result<crate::cluster::NodeId> {
+                Ok(crate::cluster::NodeId(id32("node")?))
+            };
+            let cmd = match kind {
+                "cancel" => SchedulerCommand::Cancel { job: job("job")? },
+                "reclassify" => {
+                    let class = match item.get("class").as_str() {
+                        Some("TE") | Some("te") => JobClass::Te,
+                        Some("BE") | Some("be") => JobClass::Be,
+                        _ => bail!("command {i} (reclassify): 'class' must be \"TE\" or \"BE\""),
+                    };
+                    SchedulerCommand::Reclassify { job: job("job")?, class }
+                }
+                "node_down" => SchedulerCommand::NodeDown { node: node()? },
+                "node_up" => SchedulerCommand::NodeUp { node: node()? },
+                "drain" => SchedulerCommand::Drain { node: node()? },
+                "resize" => {
+                    let axis = |key: &str| -> Result<f64> {
+                        item.get(key).as_f64().with_context(|| {
+                            format!("command {i} (resize): missing number '{key}'")
+                        })
+                    };
+                    SchedulerCommand::Resize {
+                        node: node()?,
+                        capacity: ResourceVec::new(axis("cpu")?, axis("ram_gb")?, axis("gpu")?),
+                    }
+                }
+                "submit" => bail!(
+                    "command {i}: 'submit' is not a scenario command — arrivals \
+                     belong to the workload source (job ids must stay dense)"
+                ),
+                other => bail!("command {i}: unknown command {other:?}"),
+            };
+            script.commands.push((at, cmd));
+        }
+        Ok(script)
+    }
+
+    /// Read and parse a scenario file.
+    pub fn from_file(path: &Path) -> Result<ScenarioScript> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario file {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing scenario file {}", path.display()))
+    }
+}
+
+/// Executes a [`ScenarioScript`] against a run: tracks which timed
+/// commands have fired, which TE jobs are on patience watch, and which
+/// cancellations are deferred until their target arrives. One driver per
+/// run; state is deterministic given the event sequence.
+pub struct ScenarioDriver {
+    timed: Vec<(Minutes, SchedulerCommand)>,
+    cursor: usize,
+    te_patience: Option<Minutes>,
+    /// `(deadline minute, TE job)` patience watches.
+    deadlines: BinaryHeap<Reverse<(Minutes, u32)>>,
+    /// Cancellations whose target has not arrived yet; retried each
+    /// minute.
+    holdover: Vec<JobId>,
+}
+
+impl ScenarioDriver {
+    /// Build a driver from a script (stable-sorts the timed commands).
+    pub fn new(script: ScenarioScript) -> Self {
+        let mut timed = script.commands;
+        timed.sort_by_key(|(at, _)| *at);
+        ScenarioDriver {
+            timed,
+            cursor: 0,
+            te_patience: script.te_patience,
+            deadlines: BinaryHeap::new(),
+            holdover: Vec::new(),
+        }
+    }
+
+    /// Mirror every timed command minute into the clock's control heap so
+    /// the event-horizon engine cannot fast-forward across one. Call once
+    /// before the run's first round.
+    pub fn prime(&self, clock: &mut EventClock) {
+        for (at, _) in &self.timed {
+            clock.push_control(*at);
+        }
+    }
+
+    /// Commands to apply at `now`, plus new wakeup minutes the caller must
+    /// push into the clock (deferred-cancel retries). Call once per
+    /// scheduling round, before [`ClusterController::step`]
+    /// (crate::sched::control::ClusterController::step).
+    pub fn due(
+        &mut self,
+        now: Minutes,
+        sched: &Scheduler,
+        jobs: &JobTable,
+    ) -> (Vec<SchedulerCommand>, Vec<Minutes>) {
+        let mut cmds = Vec::new();
+        let mut wake = Vec::new();
+
+        // Held-over cancellations first — they were due at an earlier
+        // minute.
+        if !self.holdover.is_empty() {
+            let pending = std::mem::take(&mut self.holdover);
+            for id in pending {
+                self.route_cancel(id, now, sched, jobs, &mut cmds, &mut wake);
+            }
+        }
+
+        // Timed commands due this minute, in script order.
+        while self.cursor < self.timed.len() && self.timed[self.cursor].0 <= now {
+            let cmd = self.timed[self.cursor].1.clone();
+            self.cursor += 1;
+            match cmd {
+                SchedulerCommand::Cancel { job } => {
+                    self.route_cancel(job, now, sched, jobs, &mut cmds, &mut wake);
+                }
+                other => cmds.push(other),
+            }
+        }
+
+        // Patience deadlines due this minute: kill TE jobs that never got
+        // scheduled in time. Stale watches are dropped silently: the job
+        // started, retired, or was reclassified to BE (a user who demotes
+        // a trial to batch is explicitly choosing to wait). A BE job
+        // promoted to TE mid-queue gains no watch — patience measures
+        // time since a TE *submission*, the only moment the user's
+        // interactive clock starts.
+        while let Some(Reverse((at, id))) = self.deadlines.peek().copied() {
+            if at > now {
+                break;
+            }
+            self.deadlines.pop();
+            let id = JobId(id);
+            let still_waiting_te = jobs
+                .get(id)
+                .is_some_and(|j| j.is_te() && j.first_start.is_none());
+            if still_waiting_te && sched.tracks(id) {
+                cmds.push(SchedulerCommand::Cancel { job: id });
+            }
+        }
+
+        (cmds, wake)
+    }
+
+    /// Put this round's processed arrivals on patience watch (TE jobs that
+    /// did not start in their arrival round). Returns deadline minutes the
+    /// caller must push into the clock. Call after each round.
+    pub fn watch_arrivals(
+        &mut self,
+        now: Minutes,
+        arrivals: &[JobId],
+        jobs: &JobTable,
+    ) -> Vec<Minutes> {
+        let Some(patience) = self.te_patience else {
+            return Vec::new();
+        };
+        let mut wake = Vec::new();
+        for id in arrivals {
+            let waiting_te = jobs
+                .get(*id)
+                .is_some_and(|j| j.is_te() && j.first_start.is_none());
+            if waiting_te {
+                let deadline = now.saturating_add(patience);
+                self.deadlines.push(Reverse((deadline, id.0)));
+                wake.push(deadline);
+            }
+        }
+        wake
+    }
+
+    /// Apply, drop, or defer one cancellation:
+    /// * target tracked by the scheduler → apply now;
+    /// * target already retired (finished or cancelled) → stale, drop;
+    /// * target staged but not arrived → hold, wake the minute after its
+    ///   (known) submission — it is tracked from then on;
+    /// * target not yielded by the source at all yet → hold with **no**
+    ///   wakeup: its arrival already pins the event-horizon burn target,
+    ///   and the re-check at that minute lands in the staged case above.
+    ///   A holdover for an id the source never yields therefore costs
+    ///   nothing (no per-minute wakeups) and is dropped at run end.
+    ///
+    /// Deterministic across `arrival_lookahead` by construction: residency
+    /// without arrival never makes a job cancellable, and both deferral
+    /// paths converge on the same cancel minute (submission + 1).
+    fn route_cancel(
+        &mut self,
+        id: JobId,
+        now: Minutes,
+        sched: &Scheduler,
+        jobs: &JobTable,
+        cmds: &mut Vec<SchedulerCommand>,
+        wake: &mut Vec<Minutes>,
+    ) {
+        if sched.tracks(id) {
+            cmds.push(SchedulerCommand::Cancel { job: id });
+        } else if let Some(job) = jobs.get(id) {
+            // Staged inside the lookahead window, not arrived yet.
+            self.holdover.push(id);
+            wake.push(job.spec.submit.saturating_add(1).max(now.saturating_add(1)));
+        } else if jobs.seen(id) {
+            // Already retired — the cancel lost the race; nothing to do.
+        } else {
+            self.holdover.push(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+
+    #[test]
+    fn parse_full_scenario() {
+        let text = r#"{
+            "te_patience": 30,
+            "commands": [
+                {"at": 60, "cmd": "node_down", "node": 3},
+                {"at": 240, "cmd": "node_up", "node": 3},
+                {"at": 120, "cmd": "drain", "node": 2},
+                {"at": 360, "cmd": "cancel", "job": 17},
+                {"at": 90, "cmd": "reclassify", "job": 5, "class": "TE"},
+                {"at": 45, "cmd": "resize", "node": 1, "cpu": 16, "ram_gb": 128, "gpu": 4}
+            ]
+        }"#;
+        let s = ScenarioScript::parse(text).unwrap();
+        assert_eq!(s.te_patience, Some(30));
+        assert_eq!(s.len(), 6);
+        assert!(s
+            .commands
+            .contains(&(60, SchedulerCommand::NodeDown { node: NodeId(3) })));
+        assert!(s.commands.contains(&(
+            90,
+            SchedulerCommand::Reclassify { job: JobId(5), class: JobClass::Te }
+        )));
+        assert!(s.commands.contains(&(
+            45,
+            SchedulerCommand::Resize {
+                node: NodeId(1),
+                capacity: ResourceVec::new(16.0, 128.0, 4.0)
+            }
+        )));
+    }
+
+    #[test]
+    fn parse_rejects_bad_scenarios() {
+        for bad in [
+            "not json",
+            r#"{"te_patience": 0}"#,
+            r#"{"commands": [{"cmd": "cancel", "job": 1}]}"#,
+            r#"{"commands": [{"at": 5, "cmd": "warp"}]}"#,
+            r#"{"commands": [{"at": 5, "cmd": "submit"}]}"#,
+            r#"{"commands": [{"at": 5, "cmd": "reclassify", "job": 1, "class": "XX"}]}"#,
+            r#"{"commands": [{"at": 5, "cmd": "resize", "node": 0, "cpu": 1}]}"#,
+            r#"{"commands": [{"at": 5, "cmd": "cancel", "job": 4294967296}]}"#,
+            r#"{"commands": {"at": 5, "cmd": "drain", "node": 0}}"#,
+        ] {
+            assert!(ScenarioScript::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_scenario_is_empty() {
+        assert!(ScenarioScript::parse("{}").unwrap().is_empty());
+        assert!(!ScenarioScript::new().with_te_patience(5).is_empty());
+    }
+
+    #[test]
+    fn driver_sorts_and_fires_in_minute_order() {
+        let script = ScenarioScript::new()
+            .at(9, SchedulerCommand::NodeUp { node: NodeId(0) })
+            .at(3, SchedulerCommand::Drain { node: NodeId(0) });
+        let mut driver = ScenarioDriver::new(script);
+        let mut clock = EventClock::new();
+        driver.prime(&mut clock);
+        assert_eq!(clock.next_control_at(), Some(3));
+
+        let sched = Scheduler::new(
+            &crate::cluster::ClusterSpec::tiny(1),
+            crate::sched::SchedConfig::new(crate::sched::policy::PolicyKind::Fifo),
+        );
+        let jobs = JobTable::new();
+        let (cmds, _) = driver.due(2, &sched, &jobs);
+        assert!(cmds.is_empty());
+        let (cmds, _) = driver.due(3, &sched, &jobs);
+        assert_eq!(cmds, vec![SchedulerCommand::Drain { node: NodeId(0) }]);
+        let (cmds, _) = driver.due(10, &sched, &jobs);
+        let late = vec![SchedulerCommand::NodeUp { node: NodeId(0) }];
+        assert_eq!(cmds, late, "late fire catches up");
+    }
+
+    #[test]
+    fn cancel_for_unseen_job_is_held_without_wakeups() {
+        let script = ScenarioScript::new().at(0, SchedulerCommand::Cancel { job: JobId(0) });
+        let mut driver = ScenarioDriver::new(script);
+        let sched = Scheduler::new(
+            &crate::cluster::ClusterSpec::tiny(1),
+            crate::sched::SchedConfig::new(crate::sched::policy::PolicyKind::Fifo),
+        );
+        let mut jobs = JobTable::new();
+        let (cmds, wake) = driver.due(0, &sched, &jobs);
+        assert!(cmds.is_empty(), "target does not exist yet");
+        assert!(
+            wake.is_empty(),
+            "an unseen target must not force per-minute wakeups — its arrival pins the horizon"
+        );
+
+        // Once the job is staged (pulled, not arrived), the retry is
+        // scheduled for the minute after its known submission.
+        jobs.insert(crate::job::Job::new(crate::job::JobSpec::new(
+            0,
+            JobClass::Be,
+            ResourceVec::new(1.0, 1.0, 0.0),
+            7,
+            5,
+            0,
+        )));
+        let (cmds, wake) = driver.due(1, &sched, &jobs);
+        assert!(cmds.is_empty());
+        assert_eq!(wake, vec![8], "wake the minute after submit=7");
+    }
+}

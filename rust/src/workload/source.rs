@@ -60,9 +60,12 @@ pub trait ArrivalSource {
     /// (exhausted, or a closed loop waiting on completions).
     fn next_job(&mut self) -> Option<JobSpec>;
 
-    /// Completion feedback: `id` finished at tick `finished_at`. Open
-    /// (feed-forward) sources ignore this; closed-loop sources use it to
-    /// schedule the submitting user's next trial.
+    /// Completion feedback: `id` left the system at tick `finished_at` —
+    /// it completed, or the control plane cancelled it (a scenario kill).
+    /// Open (feed-forward) sources ignore this; closed-loop sources use it
+    /// to schedule the submitting user's next trial — a user whose job was
+    /// killed resubmits exactly like one whose job finished, which is the
+    /// paper's trial-and-error story.
     fn on_job_finished(&mut self, _id: JobId, _finished_at: Minutes) {}
 
     /// True when this source will never yield another job.

@@ -1,0 +1,425 @@
+//! Control-plane protocol properties: event-stream conservation, fault &
+//! cancellation scenarios end-to-end, and the golden JSONL event log.
+//!
+//! 1. **Conservation** — in any run, every occupancy opened by
+//!    `Started`/`Resumed` is closed by exactly one of `Vacated`,
+//!    `Finished`, `Cancelled`, or membership in a `NodeLost` eviction
+//!    list; every job is `Submitted` exactly once and reaches at most one
+//!    terminal (`Finished` xor `Cancelled`) — exactly one in a drained
+//!    run. Node-resource conservation under `NodeDown`/`NodeUp`/`Drain`
+//!    sequences is enforced *inside* the runs: `paranoid` mode re-checks
+//!    `free + Σ allocations == capacity`, hold bookkeeping, and capacity-
+//!    index consistency on every tick, and `internal_errors` must stay 0.
+//! 2. **Determinism** — a scenario run's full event stream is
+//!    byte-identical across both engines and every `arrival_lookahead`
+//!    setting; a seeded scenario's JSONL log is pinned by a golden file
+//!    (regenerate with `FITGPP_BLESS=1 cargo test golden`).
+//! 3. **End-to-end** — a node-failure + TE-patience-cancellation scenario
+//!    behaves as §2's interactive-user story demands: impatient TE kills
+//!    are counted per class and excluded from slowdown percentiles,
+//!    evicted jobs resume with priority, and the run still drains.
+
+use fitgpp::cluster::{ClusterSpec, NodeId};
+use fitgpp::job::{JobClass, JobId, JobSpec};
+use fitgpp::resources::ResourceVec;
+use fitgpp::sched::control::{
+    JsonlEventLog, SchedulerCommand, SchedulerEvent, SharedBuf, SharedEventLog,
+};
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::scenario::ScenarioScript;
+use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
+use fitgpp::testkit::{check, gen, PropConfig};
+use fitgpp::workload::source::WorkloadSource;
+use fitgpp::workload::Workload;
+use std::collections::{HashMap, HashSet};
+
+fn rv(c: f64, r: f64, g: f64) -> ResourceVec {
+    ResourceVec::new(c, r, g)
+}
+
+fn run_with_events(
+    mut cfg: SimConfig,
+    wl: &Workload,
+    scenario: ScenarioScript,
+) -> (SimResult, Vec<SchedulerEvent>) {
+    cfg.scenario = Some(scenario);
+    let log = SharedEventLog::new();
+    let res = Simulator::new(cfg)
+        .run_with(&mut WorkloadSource::new(wl), vec![Box::new(log.clone())]);
+    (res, log.events())
+}
+
+/// The conservation checker: replays the event stream against the
+/// protocol's state machine and fails on any violation.
+fn assert_conservation(events: &[SchedulerEvent], drained: bool) -> Result<(), String> {
+    let mut submitted: HashSet<u32> = HashSet::new();
+    let mut first_started: HashSet<u32> = HashSet::new();
+    let mut terminal: HashMap<u32, &'static str> = HashMap::new();
+    let mut open: HashSet<u32> = HashSet::new(); // jobs occupying a node
+    for ev in events {
+        match ev {
+            SchedulerEvent::Submitted { job, .. } => {
+                if !submitted.insert(job.0) {
+                    return Err(format!("{job} submitted twice"));
+                }
+            }
+            SchedulerEvent::Started { job, .. } => {
+                if !submitted.contains(&job.0) {
+                    return Err(format!("{job} started before submission"));
+                }
+                if !first_started.insert(job.0) {
+                    return Err(format!("{job} 'Started' twice (restart must be 'Resumed')"));
+                }
+                if !open.insert(job.0) {
+                    return Err(format!("{job} started while already occupying"));
+                }
+            }
+            SchedulerEvent::Resumed { job, .. } => {
+                if !first_started.contains(&job.0) {
+                    return Err(format!("{job} resumed before its first start"));
+                }
+                if !open.insert(job.0) {
+                    return Err(format!("{job} resumed while already occupying"));
+                }
+            }
+            SchedulerEvent::Preempted { job, .. } => {
+                if !open.contains(&job.0) {
+                    return Err(format!("{job} preempted while not occupying"));
+                }
+            }
+            SchedulerEvent::Vacated { job, .. } => {
+                if !open.remove(&job.0) {
+                    return Err(format!("{job} vacated without occupancy"));
+                }
+            }
+            SchedulerEvent::Finished { job, record, .. } => {
+                if !open.remove(&job.0) {
+                    return Err(format!("{job} finished without occupancy"));
+                }
+                if record.finished_at.is_none() || record.cancelled {
+                    return Err(format!("{job} finished with a non-finished record"));
+                }
+                if terminal.insert(job.0, "finished").is_some() {
+                    return Err(format!("{job} reached two terminals"));
+                }
+            }
+            SchedulerEvent::Cancelled { job, record, .. } => {
+                // A queued job cancels without occupancy; a running or
+                // draining one releases its seat.
+                open.remove(&job.0);
+                if !record.cancelled || record.finished_at.is_some() {
+                    return Err(format!("{job} cancelled with a non-cancelled record"));
+                }
+                if terminal.insert(job.0, "cancelled").is_some() {
+                    return Err(format!("{job} reached two terminals"));
+                }
+            }
+            SchedulerEvent::NodeLost { lost, .. } => {
+                for job in lost {
+                    if !open.remove(&job.0) {
+                        return Err(format!("{job} evicted by node loss while not occupying"));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    if !open.is_empty() {
+        return Err(format!("occupancies never closed: {open:?}"));
+    }
+    if drained {
+        for id in &submitted {
+            if !terminal.contains_key(id) {
+                return Err(format!("job-{id} submitted but reached no terminal"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_event_stream_conservation_under_chaos() {
+    // Random workloads under random fault/cancel scenarios, both engines:
+    // the conservation state machine must hold, the cluster invariants
+    // must survive every tick (paranoid), the run must drain, and the two
+    // engines must produce identical event streams.
+    let policies = [
+        PolicyKind::Fifo,
+        PolicyKind::FastLane,
+        PolicyKind::Lrtp,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+    ];
+    let cases = PropConfig { cases: 16, ..Default::default() };
+    check("event-stream conservation", cases, |rng| {
+        let wl = gen::workload(rng, 50, 120);
+        let nodes = 3u32;
+        let mut script = ScenarioScript::new();
+        if rng.chance(0.5) {
+            script = script.with_te_patience(gen::int(rng, 1, 30));
+        }
+        for node in 0..nodes {
+            if rng.chance(0.5) {
+                // Fail/restore pair; windows may overlap across nodes.
+                let down = gen::int(rng, 1, 160);
+                script = script
+                    .at(down, SchedulerCommand::NodeDown { node: NodeId(node) })
+                    .at(
+                        down + gen::int(rng, 1, 120),
+                        SchedulerCommand::NodeUp { node: NodeId(node) },
+                    );
+            } else if rng.chance(0.4) {
+                let start = gen::int(rng, 1, 160);
+                script = script
+                    .at(start, SchedulerCommand::Drain { node: NodeId(node) })
+                    .at(
+                        start + gen::int(rng, 1, 120),
+                        SchedulerCommand::NodeUp { node: NodeId(node) },
+                    );
+            }
+        }
+        for _ in 0..4 {
+            if rng.chance(0.7) {
+                script = script.at(
+                    gen::int(rng, 0, 250),
+                    SchedulerCommand::Cancel { job: JobId(gen::int(rng, 0, 49) as u32) },
+                );
+            }
+        }
+        let policy = policies[gen::int(rng, 0, policies.len() as u64 - 1) as usize];
+
+        let mk = |engine: SimEngine| {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes as usize), policy);
+            cfg.engine = engine;
+            cfg.paranoid = true;
+            cfg.seed = 0xC0FFEE;
+            run_with_events(cfg, &wl, script.clone())
+        };
+        let (res_pm, ev_pm) = mk(SimEngine::PerMinute);
+        let (res_eh, ev_eh) = mk(SimEngine::EventHorizon);
+
+        fitgpp::prop_assert!(
+            res_pm.unfinished == 0,
+            "{policy:?}: scenario run failed to drain ({} unfinished)",
+            res_pm.unfinished
+        );
+        fitgpp::prop_assert!(
+            res_pm.sched_stats.internal_errors == 0 && res_eh.sched_stats.internal_errors == 0,
+            "{policy:?}: internal errors surfaced"
+        );
+        assert_conservation(&ev_pm, true).map_err(|e| format!("{policy:?}/PerMinute: {e}"))?;
+        fitgpp::prop_assert!(
+            ev_pm == ev_eh,
+            "{policy:?}: engines produced different event streams ({} vs {} events)",
+            ev_pm.len(),
+            ev_eh.len()
+        );
+        fitgpp::prop_assert!(
+            res_pm.records == res_eh.records && res_pm.metrics == res_eh.metrics,
+            "{policy:?}: engines disagree on records/metrics"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn node_failure_plus_te_cancellation_end_to_end() {
+    // The acceptance scenario: two full-node BE hogs, an impatient TE user
+    // (patience 5), a node failure with a later repair. FIFO (no bypass)
+    // guarantees the TE job waits past its patience.
+    let wl = Workload::new(vec![
+        JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 100, 0),
+        JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 100, 0),
+        JobSpec::new(2, JobClass::Te, rv(4.0, 32.0, 1.0), 10, 5, 0),
+        JobSpec::new(3, JobClass::Be, rv(4.0, 32.0, 1.0), 20, 10, 0),
+    ]);
+    let script = ScenarioScript::new()
+        .with_te_patience(5)
+        .at(30, SchedulerCommand::NodeDown { node: NodeId(0) })
+        .at(50, SchedulerCommand::NodeUp { node: NodeId(0) });
+    let mut cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Fifo);
+    cfg.paranoid = true;
+    let (res, events) = run_with_events(cfg, &wl, script);
+
+    // The impatient TE job was killed after exactly its patience.
+    assert_eq!(res.cancelled(), (1, 0));
+    let cancel = events
+        .iter()
+        .find(|e| e.kind() == "cancelled")
+        .expect("a TE cancellation");
+    assert_eq!(cancel.at(), 15, "submitted at 10, patience 5");
+    assert_eq!(cancel.job(), Some(JobId(2)));
+
+    // The node failure evicted the hog on node 0; it resumed after repair
+    // with its progress intact and still finished.
+    let lost = events.iter().find(|e| e.kind() == "node_lost").expect("a node loss");
+    match lost {
+        SchedulerEvent::NodeLost { at, lost, .. } => {
+            assert_eq!(*at, 30);
+            assert_eq!(lost, &vec![JobId(0)]);
+        }
+        _ => unreachable!(),
+    }
+    let resumed_at_repair = events.iter().any(|e| {
+        matches!(e, SchedulerEvent::Resumed { job, at, .. } if *job == JobId(0) && *at == 50)
+    });
+    assert!(resumed_at_repair, "evicted hog resumes the minute the node returns");
+    let hog = &res.records[0];
+    assert_eq!(hog.evictions, 1);
+    assert_eq!(hog.preemptions, 0, "a node failure is not a policy preemption");
+    assert!(hog.finished_at.is_some());
+
+    // The cancelled job is excluded from percentiles but keeps a record.
+    assert!(res.records[2].cancelled && res.records[2].finished_at.is_none());
+    assert_eq!(res.slowdowns(JobClass::Te).len(), 0);
+    assert_eq!(res.metrics.jobs_seen, 3, "three jobs ran to an outcome");
+
+    // Everything else drained; conservation holds.
+    assert_eq!(res.unfinished, 0);
+    assert_eq!(res.sched_stats.internal_errors, 0);
+    assert_conservation(&events, true).unwrap();
+}
+
+#[test]
+fn scenario_reclassification_promotes_a_blocked_job() {
+    // FastLane: a blocked BE job promoted to TE takes the fragmented free
+    // space at once (the "user promotes their trial" story).
+    let wl = Workload::new(vec![
+        JobSpec::new(0, JobClass::Be, rv(30.0, 200.0, 7.0), 0, 50, 0),
+        JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 1, 10, 0),
+        JobSpec::new(2, JobClass::Be, rv(2.0, 16.0, 1.0), 1, 5, 0),
+    ]);
+    let script = ScenarioScript::new().at(
+        5,
+        SchedulerCommand::Reclassify { job: JobId(2), class: JobClass::Te },
+    );
+    let mut cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::FastLane);
+    cfg.paranoid = true;
+    let (res, events) = run_with_events(cfg, &wl, script);
+    assert!(events.iter().any(|e| e.kind() == "reclassified"));
+    assert_eq!(
+        res.records[2].first_start,
+        Some(5),
+        "promoted job starts the minute it enters the TE lane"
+    );
+    assert_eq!(res.records[2].class, JobClass::Te, "record carries the final class");
+    assert_eq!(res.unfinished, 0);
+    assert_conservation(&events, true).unwrap();
+}
+
+#[test]
+fn scenario_resize_opens_capacity_mid_run() {
+    // A queued job that cannot fit the node starts the minute an elastic
+    // resize grows it.
+    let wl = Workload::new(vec![
+        JobSpec::new(0, JobClass::Be, rv(16.0, 128.0, 4.0), 0, 30, 0),
+        JobSpec::new(1, JobClass::Be, rv(32.0, 256.0, 8.0), 1, 5, 0),
+    ]);
+    let script = ScenarioScript::new().at(
+        5,
+        SchedulerCommand::Resize { node: NodeId(0), capacity: rv(64.0, 512.0, 16.0) },
+    );
+    let mut cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo);
+    cfg.paranoid = true;
+    let (res, events) = run_with_events(cfg, &wl, script);
+    assert!(events.iter().any(|e| e.kind() == "node_resized"));
+    assert_eq!(res.records[1].first_start, Some(5));
+    assert_eq!(res.unfinished, 0);
+    assert_conservation(&events, true).unwrap();
+}
+
+/// The golden scenario: one seeded workload, every command type, the
+/// patience rule — the JSONL log must be byte-identical across engines
+/// and lookahead settings, and must match the checked-in golden file.
+fn golden_log(engine: SimEngine, lookahead: u64) -> String {
+    let wl = Workload::new(vec![
+        JobSpec::new(0, JobClass::Be, rv(32.0, 256.0, 8.0), 0, 60, 2),
+        JobSpec::new(1, JobClass::Be, rv(16.0, 128.0, 4.0), 0, 40, 0),
+        JobSpec::new(2, JobClass::Te, rv(8.0, 64.0, 2.0), 4, 6, 0),
+        JobSpec::new(3, JobClass::Te, rv(4.0, 32.0, 1.0), 12, 8, 0),
+        JobSpec::new(4, JobClass::Be, rv(2.0, 16.0, 1.0), 15, 20, 1),
+        JobSpec::new(5, JobClass::Be, rv(24.0, 192.0, 6.0), 30, 25, 3),
+        JobSpec::new(6, JobClass::Te, rv(6.0, 48.0, 2.0), 55, 5, 0),
+    ]);
+    let script = ScenarioScript::new()
+        .with_te_patience(4)
+        .at(8, SchedulerCommand::Drain { node: NodeId(1) })
+        .at(20, SchedulerCommand::NodeUp { node: NodeId(1) })
+        .at(25, SchedulerCommand::NodeDown { node: NodeId(0) })
+        .at(45, SchedulerCommand::NodeUp { node: NodeId(0) })
+        .at(16, SchedulerCommand::Reclassify { job: JobId(4), class: JobClass::Te })
+        .at(35, SchedulerCommand::Cancel { job: JobId(0) })
+        .at(2, SchedulerCommand::Resize { node: NodeId(1), capacity: rv(48.0, 384.0, 12.0) })
+        // Stale by the time its target finished / premature for a job not
+        // yet arrived: exercises both deferral paths deterministically.
+        .at(1, SchedulerCommand::Cancel { job: JobId(6) });
+    let mut cfg = SimConfig::new(
+        ClusterSpec::tiny(2),
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+    );
+    cfg.paranoid = true;
+    cfg.engine = engine;
+    cfg.arrival_lookahead = lookahead;
+    cfg.scenario = Some(script);
+    let buf = SharedBuf::new();
+    let res = Simulator::new(cfg).run_with(
+        &mut WorkloadSource::new(&wl),
+        vec![Box::new(JsonlEventLog::new(buf.clone()))],
+    );
+    assert_eq!(res.sched_stats.internal_errors, 0);
+    buf.contents()
+}
+
+#[test]
+fn golden_jsonl_event_log_pins_the_scenario() {
+    let reference = golden_log(SimEngine::EventHorizon, 0);
+    assert!(!reference.is_empty());
+    for (engine, lookahead) in [
+        (SimEngine::PerMinute, 0),
+        (SimEngine::PerMinute, 7),
+        (SimEngine::EventHorizon, 1),
+        (SimEngine::EventHorizon, 1 << 20),
+    ] {
+        assert_eq!(
+            golden_log(engine, lookahead),
+            reference,
+            "JSONL log diverged under {engine:?}/lookahead {lookahead}"
+        );
+    }
+    // The log must witness the whole command vocabulary.
+    for kind in [
+        "submitted",
+        "started",
+        "finished",
+        "cancelled",
+        "node_lost",
+        "node_restored",
+        "node_draining",
+        "node_resized",
+        "reclassified",
+    ] {
+        assert!(
+            reference.contains(&format!("\"type\":\"{kind}\"")),
+            "golden scenario never produced a {kind:?} event:\n{reference}"
+        );
+    }
+
+    // Golden-file pin. Regenerate with FITGPP_BLESS=1 after an intended
+    // protocol change; a missing file (first run) self-blesses.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/scenario_events.jsonl");
+    let bless = std::env::var("FITGPP_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &reference).unwrap();
+        eprintln!("blessed golden event log at {}", path.display());
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        reference,
+        golden,
+        "JSONL event log diverged from the golden file {} — rerun with \
+         FITGPP_BLESS=1 if the protocol change is intended",
+        path.display()
+    );
+}
