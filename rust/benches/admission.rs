@@ -1,0 +1,101 @@
+//! Admission-layer dispatch bench: stream a million-job institution trace
+//! with 1000 tenants under the `WeightedFair` discipline and compare
+//! jobs/sec against the `Fifo` baseline, writing `BENCH_admission.json`.
+//!
+//! The queue discipline sits on the hot admission path (one round per
+//! scheduling tick), so this bench keeps its dispatch cost visible: the
+//! baseline pays the same tenant-identity and per-tenant-metrics costs
+//! (both runs stream the identical tenant-tagged trace), isolating the
+//! delta to the discipline itself — trait dispatch, per-tenant sub-queues,
+//! and round-robin bookkeeping.
+//!
+//! Scale knobs: `FITGPP_ADMISSION_JOBS` (default 1_000_000),
+//! `FITGPP_ADMISSION_TENANTS` (default 1000), `FITGPP_SEED`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fitgpp::benchkit::env_usize;
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::sched::admission::DisciplineKind;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::{SimConfig, SimResult, Simulator};
+use fitgpp::util::json::Json;
+use fitgpp::workload::source::TenantAssigner;
+use fitgpp::workload::trace::InstitutionSource;
+use std::time::Instant;
+
+fn run(discipline: DisciplineKind, jobs: usize, tenants: u32, seed: u64) -> (SimResult, f64) {
+    let policy = PolicyKind::FitGpp { s: 4.0, p_max: Some(1) };
+    let mut cfg = SimConfig::new(ClusterSpec::pfn(), policy);
+    cfg.seed = seed;
+    cfg.record_jobs = false; // streaming mode: the discipline is the variable
+    cfg.discipline = discipline;
+    let mut source =
+        InstitutionSource::new(seed, jobs).with_tenants(TenantAssigner::round_robin(tenants));
+    let t0 = Instant::now();
+    let res = Simulator::new(cfg).run_source(&mut source);
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(res.metrics.jobs_seen, jobs as u64, "every job observed");
+    assert_eq!(res.unfinished, 0, "drain mode completes everything");
+    (res, wall)
+}
+
+fn main() {
+    let jobs = env_usize("FITGPP_ADMISSION_JOBS", 1_000_000);
+    let tenants = env_usize("FITGPP_ADMISSION_TENANTS", 1000) as u32;
+    let seed = env_usize("FITGPP_SEED", 9) as u64;
+    println!("admission: streaming {jobs} jobs across {tenants} tenants, fifo vs weighted_fair");
+
+    let (fifo_res, fifo_wall) = run(DisciplineKind::Fifo, jobs, tenants, seed);
+    let (wf_res, wf_wall) = run(DisciplineKind::WeightedFair, jobs, tenants, seed);
+
+    assert_eq!(fifo_res.metrics.tenants.len(), tenants as usize);
+    assert_eq!(wf_res.metrics.tenants.len(), tenants as usize);
+
+    let fifo_rate = jobs as f64 / fifo_wall.max(1e-9);
+    let wf_rate = jobs as f64 / wf_wall.max(1e-9);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "fifo:          {jobs} jobs in {fifo_wall:.1}s = {fifo_rate:.0} jobs/sec (makespan {} min)\n",
+        fifo_res.makespan
+    ));
+    out.push_str(&format!(
+        "weighted_fair: {jobs} jobs in {wf_wall:.1}s = {wf_rate:.0} jobs/sec (makespan {} min)\n",
+        wf_res.makespan
+    ));
+    out.push_str(&format!(
+        "discipline dispatch cost: {:.1}% throughput vs the fifo baseline\n",
+        100.0 * wf_rate / fifo_rate.max(1e-9)
+    ));
+    common::save_results("admission", &out);
+
+    common::save_results_json(
+        "admission",
+        &Json::obj(vec![
+            ("jobs", Json::num(jobs as f64)),
+            ("tenants", Json::num(tenants as f64)),
+            ("seed", Json::num(seed as f64)),
+            (
+                "fifo",
+                Json::obj(vec![
+                    ("wall_sec", Json::num(fifo_wall)),
+                    ("jobs_per_sec", Json::num(fifo_rate)),
+                    ("makespan", Json::num(fifo_res.makespan as f64)),
+                    ("peak_live", Json::num(fifo_res.peak_live as f64)),
+                ]),
+            ),
+            (
+                "weighted_fair",
+                Json::obj(vec![
+                    ("wall_sec", Json::num(wf_wall)),
+                    ("jobs_per_sec", Json::num(wf_rate)),
+                    ("makespan", Json::num(wf_res.makespan as f64)),
+                    ("peak_live", Json::num(wf_res.peak_live as f64)),
+                    ("admission_skips", Json::num(wf_res.sched_stats.admission_skips as f64)),
+                ]),
+            ),
+            ("throughput_ratio", Json::num(wf_rate / fifo_rate.max(1e-9))),
+        ]),
+    );
+}

@@ -22,6 +22,29 @@ impl fmt::Display for JobId {
     }
 }
 
+/// Opaque tenant (user / team / account) identifier. Every job belongs to
+/// exactly one tenant; single-tenant workloads use [`TenantId::DEFAULT`].
+///
+/// Tenancy is *admission-layer* identity: the
+/// [`QueueDiscipline`](crate::sched::admission::QueueDiscipline) uses it
+/// for fair sharing and quota gating, and the metrics sink keys per-tenant
+/// percentiles by it. The preemption policies (§3) never read it — fairness
+/// composes with FitGpp orthogonally, at the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct TenantId(pub u32);
+
+impl TenantId {
+    /// The tenant every job belongs to unless a workload source assigns
+    /// one (single-tenant runs are byte-identical to the pre-tenant code).
+    pub const DEFAULT: TenantId = TenantId(0);
+}
+
+impl fmt::Display for TenantId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tenant-{}", self.0)
+    }
+}
+
 /// The paper's two job classes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum JobClass {
@@ -66,12 +89,30 @@ pub struct JobSpec {
     /// User-declared grace period: how long the job needs to checkpoint
     /// before vacating. Zero means "rewind is fine" (§2).
     pub grace_period: Minutes,
+    /// The tenant this job belongs to ([`TenantId::DEFAULT`] unless the
+    /// workload source assigned one). Read by the admission layer only.
+    pub tenant: TenantId,
 }
 
 impl JobSpec {
-    /// Builder-style constructor for tests and examples.
+    /// Builder-style constructor for tests and examples (tenant =
+    /// [`TenantId::DEFAULT`]; chain [`JobSpec::with_tenant`] to set one).
     pub fn new(id: u32, class: JobClass, demand: ResourceVec, submit: Minutes, exec_time: Minutes, grace_period: Minutes) -> Self {
-        JobSpec { id: JobId(id), class, demand, submit, exec_time: exec_time.max(1), grace_period }
+        JobSpec {
+            id: JobId(id),
+            class,
+            demand,
+            submit,
+            exec_time: exec_time.max(1),
+            grace_period,
+            tenant: TenantId::DEFAULT,
+        }
+    }
+
+    /// Builder: assign the job to `tenant`.
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
+        self
     }
 }
 
@@ -185,6 +226,11 @@ impl Job {
 
     pub fn is_be(&self) -> bool {
         self.spec.class == JobClass::Be
+    }
+
+    /// The tenant this job belongs to.
+    pub fn tenant(&self) -> TenantId {
+        self.spec.tenant
     }
 
     /// Transition Pending → Running on `node` at time `now`.

@@ -69,10 +69,11 @@ pub mod xla;
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
     pub use crate::cluster::{Cluster, ClusterSpec, NodeAvailability, NodeId};
-    pub use crate::job::{Job, JobClass, JobId, JobSpec, JobState};
+    pub use crate::job::{Job, JobClass, JobId, JobSpec, JobState, TenantId};
     pub use crate::job_table::JobTable;
-    pub use crate::metrics::{Percentiles, SlowdownReport, StreamingMetrics};
+    pub use crate::metrics::{Percentiles, SlowdownReport, StreamingMetrics, TenantMetrics};
     pub use crate::resources::ResourceVec;
+    pub use crate::sched::admission::{DisciplineKind, QueueDiscipline, TenantDirectory};
     pub use crate::sched::control::{
         ClusterController, EventSubscriber, JsonlEventLog, SchedulerCommand, SchedulerEvent,
         SharedEventLog,
@@ -84,7 +85,7 @@ pub mod prelude {
     pub use crate::stats::sketch::QuantileSketch;
     pub use crate::sweep::{SweepResult, SweepSpec};
     pub use crate::workload::{
-        source::{ArrivalSource, ClosedLoopSource, WorkloadSource},
+        source::{ArrivalSource, ClosedLoopSource, TenantAssigner, WorkloadSource},
         synthetic::{SyntheticSource, SyntheticWorkload},
         trace::{CsvStreamSource, InstitutionSource, Trace},
         Workload,

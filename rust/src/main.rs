@@ -11,6 +11,8 @@
 //! fitgpp simulate --stream --jobs 1000000          # stream the §4.2 generator
 //! fitgpp simulate --closed-loop --users 64 --trials 32        # TE trial-and-error loop
 //! fitgpp simulate --scenario chaos.json --events-out events.jsonl  # fault/cancel injections
+//! fitgpp simulate --stream --discipline weighted_fair --tenants 8  # tenant-aware admission
+//! fitgpp replay --trace big.csv --stream --discipline quota_gate --tenants 4 --quota 0.3
 //! fitgpp live     --policy fitgpp:s=4,p=1 --jobs 12 --nodes 2
 //! fitgpp config   --dump                           # print default config JSON
 //! ```
@@ -20,6 +22,7 @@ use fitgpp::cluster::ClusterSpec;
 use fitgpp::config::ExperimentConfig;
 use fitgpp::live::{LiveCluster, LiveConfig};
 use fitgpp::metrics::{slowdown_table, SlowdownReport};
+use fitgpp::sched::admission::DisciplineKind;
 use fitgpp::sched::control::{EventSubscriber, JsonlErrorFlag, JsonlEventLog};
 use fitgpp::sched::policy::PolicyKind;
 use fitgpp::sim::scenario::ScenarioScript;
@@ -27,7 +30,7 @@ use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
 use fitgpp::sweep::{compare_on, SweepSpec};
 use fitgpp::util::cli::Cli;
 use fitgpp::workload::{
-    source::{ClosedLoopParams, ClosedLoopSource, WorkloadSource},
+    source::{ClosedLoopParams, ClosedLoopSource, TenantAssigner, WorkloadSource},
     synthetic::SyntheticWorkload,
     trace::{CsvStreamSource, Trace},
     Workload,
@@ -140,12 +143,77 @@ fn check_event_log(flag: Option<JsonlErrorFlag>) -> Result<()> {
 /// Print the control-plane cancellation summary when a scenario killed
 /// jobs (cancelled jobs are excluded from every percentile table).
 fn report_cancellations(res: &SimResult) {
-    if res.metrics.cancelled() > 0 {
+    if res.metrics.cancelled_total() > 0 {
         println!(
             "cancelled by the control plane: {} TE, {} BE (excluded from the percentiles above)",
-            res.metrics.cancelled_te, res.metrics.cancelled_be
+            res.metrics.cancelled.te, res.metrics.cancelled.be
         );
     }
+}
+
+/// Print the per-tenant fairness table (only when the run actually had
+/// more than one tenant).
+fn report_tenants(res: &SimResult) {
+    if res.tenants_seen() > 1 {
+        println!("{}", res.tenant_table());
+    }
+}
+
+/// Shared tenant/discipline CLI options (simulate + replay).
+fn tenant_cli(cli: Cli) -> Cli {
+    cli.opt("discipline", Some("fifo"), "admission discipline: fifo | weighted_fair | quota_gate[:w=<n>]")
+        .opt("tenants", Some("1"), "assign this many tenants round-robin over the workload")
+        .opt("quota", None, "occupied-Size quota applied to every tenant (Eq. 1 Size vs total capacity)")
+        .opt("tenant-burst", None, "periodic tenant storm: <tenant>:<period>:<len> (minutes)")
+}
+
+/// Parse `--tenants` / `--tenant-burst` into an assignment rule.
+fn tenant_assigner(args: &fitgpp::util::cli::Args) -> Result<TenantAssigner> {
+    let n = args.get_u64("tenants", 1);
+    if n == 0 || n > u32::MAX as u64 {
+        bail!("--tenants must be between 1 and {}", u32::MAX);
+    }
+    let mut assigner = TenantAssigner::round_robin(n as u32);
+    if let Some(spec) = args.get("tenant-burst") {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let [tenant, period, len] = parts.as_slice() else {
+            bail!("bad --tenant-burst {spec:?}: expected <tenant>:<period>:<len>");
+        };
+        let tenant: u32 = tenant.parse().context("bad --tenant-burst tenant")?;
+        let period: u64 = period.parse().context("bad --tenant-burst period")?;
+        let len: u64 = len.parse().context("bad --tenant-burst len")?;
+        if period == 0 {
+            bail!("--tenant-burst period must be positive");
+        }
+        if tenant >= n as u32 {
+            bail!("--tenant-burst tenant {tenant} out of range (--tenants {n})");
+        }
+        assigner = assigner.with_burst(tenant, period, len);
+    }
+    Ok(assigner)
+}
+
+/// Parse `--quota` (the per-tenant occupied-Size cap), if given.
+fn parse_quota(args: &fitgpp::util::cli::Args) -> Result<Option<f64>> {
+    match args.get("quota") {
+        Some(q) => {
+            let q: f64 = q.parse().context("bad --quota")?;
+            if !q.is_finite() || q < 0.0 {
+                bail!("--quota must be finite and non-negative");
+            }
+            Ok(Some(q))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Apply `--discipline` / `--quota` onto a simulation config.
+fn apply_discipline(cfg: &mut SimConfig, args: &fitgpp::util::cli::Args) -> Result<()> {
+    cfg.discipline = DisciplineKind::parse(args.get_or("discipline", "fifo"))?;
+    if let Some(q) = parse_quota(args)? {
+        cfg.default_quota = Some(q);
+    }
+    Ok(())
 }
 
 fn build(args: &fitgpp::util::cli::Args) -> Result<(ExperimentConfig, Workload)> {
@@ -187,6 +255,7 @@ fn report_streamed(
         res.makespan,
         res.unfinished
     );
+    report_tenants(res);
     report_cancellations(res);
     if let Some(cap) = max_live {
         if res.peak_live > cap {
@@ -202,15 +271,18 @@ fn report_streamed(
 }
 
 fn simulate(argv: Vec<String>) -> Result<()> {
-    let cli = common_cli("fitgpp simulate", "run one policy on a synthetic workload")
-        .flag("stream", "stream the workload generator (O(live-set) memory, sketch-backed percentiles)")
-        .flag("closed-loop", "closed-loop arrivals: users resubmit after completion + think time")
-        .opt("users", Some("64"), "closed-loop: concurrent users")
-        .opt("trials", Some("32"), "closed-loop: trials per user")
-        .opt("think", Some("10"), "closed-loop: mean think time (minutes)")
-        .opt("scenario", None, "JSON scenario file: timed commands + te_patience rule (see EXPERIMENTS.md)")
-        .opt("events-out", None, "write the scheduler's JSONL event log to this path");
+    let cli = tenant_cli(
+        common_cli("fitgpp simulate", "run one policy on a synthetic workload")
+            .flag("stream", "stream the workload generator (O(live-set) memory, sketch-backed percentiles)")
+            .flag("closed-loop", "closed-loop arrivals: users resubmit after completion + think time")
+            .opt("users", Some("64"), "closed-loop: concurrent users")
+            .opt("trials", Some("32"), "closed-loop: trials per user")
+            .opt("think", Some("10"), "closed-loop: mean think time (minutes)")
+            .opt("scenario", None, "JSON scenario file: timed commands + te_patience rule (see EXPERIMENTS.md)")
+            .opt("events-out", None, "write the scheduler's JSONL event log to this path"),
+    );
     let args = parse_or_exit(&cli, argv);
+    let assigner = tenant_assigner(&args)?;
 
     if args.has("closed-loop") {
         let users = args.get_usize("users", 64);
@@ -218,7 +290,13 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         if users == 0 || trials == 0 {
             bail!("--users and --trials must be positive");
         }
-        let mut params = ClosedLoopParams::demo(users, trials as u32);
+        if assigner.burst.is_some() {
+            // Closed loops assign tenants by *user* (a user's whole trial
+            // history is one tenant); a time-windowed burst rule cannot
+            // apply, so refuse rather than silently ignore it.
+            bail!("--tenant-burst applies to open arrival sources, not --closed-loop");
+        }
+        let mut params = ClosedLoopParams::demo(users, trials as u32).with_tenants(assigner.tenants);
         if let Some(v) = args.get("te-fraction") {
             params.te_fraction = v.parse::<f64>().context("bad --te-fraction")?.clamp(0.0, 1.0);
         }
@@ -235,6 +313,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         cfg.seed = args.get_u64("seed", 7);
         cfg.record_jobs = false;
         cfg.scenario = load_scenario(&args)?;
+        apply_discipline(&mut cfg, &args)?;
         eprintln!(
             "closed loop: {} users x {} trials, think ~{} min; policy {}",
             args.get_usize("users", 64),
@@ -258,12 +337,14 @@ fn simulate(argv: Vec<String>) -> Result<()> {
             .with_num_jobs(args.get_usize("jobs", 8192))
             .with_te_fraction(args.get_f64("te-fraction", 0.3))
             .with_target_load(args.get_f64("load", 2.0))
-            .with_gp_scale(args.get_f64("gp-scale", 1.0));
+            .with_gp_scale(args.get_f64("gp-scale", 1.0))
+            .with_tenant_assigner(assigner);
         let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
         let mut cfg = SimConfig::new(params.cluster.clone(), policy);
         cfg.seed = params.seed;
         cfg.record_jobs = false;
         cfg.scenario = load_scenario(&args)?;
+        apply_discipline(&mut cfg, &args)?;
         eprintln!("streaming {} §4.2 jobs; policy {}", params.num_jobs, policy.name());
         let t0 = Instant::now();
         let mut source = params.stream();
@@ -273,7 +354,8 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         return report_streamed(&res, t0.elapsed().as_secs_f64(), None, args.get("json-out"));
     }
 
-    let (cfg, wl) = build(&args)?;
+    let (cfg, mut wl) = build(&args)?;
+    wl.assign_tenants(&assigner);
     eprintln!(
         "workload: {} jobs ({:.1}% TE), span {} min; policy {}",
         wl.len(),
@@ -283,6 +365,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
     );
     let mut sim_cfg = cfg.sim_config();
     sim_cfg.scenario = load_scenario(&args)?;
+    apply_discipline(&mut sim_cfg, &args)?;
     let (subs, ev_err) = event_subscribers(&args)?;
     let res = Simulator::new(sim_cfg).run_with(&mut WorkloadSource::new(&wl), subs);
     check_event_log(ev_err)?;
@@ -293,6 +376,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         res.sched_stats.preemption_signals,
         res.makespan
     );
+    report_tenants(&res);
     report_cancellations(&res);
     if let Some(path) = args.get("json-out") {
         std::fs::write(path, res.to_json().to_pretty())?;
@@ -386,6 +470,9 @@ fn sweep(argv: Vec<String>) -> Result<()> {
     .opt("load", Some("2.0"), "target FIFO cluster load")
     .opt("threads", Some("0"), "worker threads (0 = FITGPP_THREADS, else all cores)")
     .opt("engine", Some("event-horizon"), "event-horizon | per-minute")
+    .opt("discipline", Some("fifo"), "admission discipline: fifo | weighted_fair | quota_gate[:w=<n>]")
+    .opt("tenants", Some("1"), "assign this many tenants round-robin over every workload")
+    .opt("quota", None, "occupied-Size quota applied to every tenant in every cell")
     .opt("json-out", None, "write the full sweep JSON here")
     .opt("csv-out", None, "write one CSV row per cell here");
     let args = parse_or_exit(&cli, argv);
@@ -406,6 +493,10 @@ fn sweep(argv: Vec<String>) -> Result<()> {
         other => bail!("unknown --engine {other:?}"),
     };
 
+    let discipline = DisciplineKind::parse(args.get_or("discipline", "fifo"))?;
+    let tenants = tenant_assigner(&args)?.tenants;
+    let quota = parse_quota(&args)?;
+
     let spec = SweepSpec::new(
         ClusterSpec::homogeneous(
             args.get_usize("nodes", 84),
@@ -419,6 +510,9 @@ fn sweep(argv: Vec<String>) -> Result<()> {
     .with_num_jobs(args.get_usize("jobs", 4096))
     .with_target_load(args.get_f64("load", 2.0))
     .with_engine(engine)
+    .with_discipline(discipline)
+    .with_tenants(tenants)
+    .with_default_quota(quota)
     .with_threads(args.get_usize("threads", 0));
 
     eprintln!(
@@ -467,13 +561,16 @@ fn generate(argv: Vec<String>) -> Result<()> {
 }
 
 fn replay(argv: Vec<String>) -> Result<()> {
-    let cli = common_cli("fitgpp replay", "replay a CSV trace under a policy")
-        .opt("trace", None, "input CSV trace path (required)")
-        .flag("stream", "stream the trace through a buffered reader (O(live-set) memory)")
-        .opt("max-live", None, "fail if the peak resident live set exceeds this (streaming smoke checks)")
-        .opt("scenario", None, "JSON scenario file: timed commands + te_patience rule (see EXPERIMENTS.md)")
-        .opt("events-out", None, "write the scheduler's JSONL event log to this path");
+    let cli = tenant_cli(
+        common_cli("fitgpp replay", "replay a CSV trace under a policy")
+            .opt("trace", None, "input CSV trace path (required)")
+            .flag("stream", "stream the trace through a buffered reader (O(live-set) memory)")
+            .opt("max-live", None, "fail if the peak resident live set exceeds this (streaming smoke checks)")
+            .opt("scenario", None, "JSON scenario file: timed commands + te_patience rule (see EXPERIMENTS.md)")
+            .opt("events-out", None, "write the scheduler's JSONL event log to this path"),
+    );
     let args = parse_or_exit(&cli, argv);
+    let assigner = tenant_assigner(&args)?;
     let path = args.get("trace").context("--trace is required")?;
     let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
     let nodes = args.get_usize("nodes", 84);
@@ -482,6 +579,7 @@ fn replay(argv: Vec<String>) -> Result<()> {
         policy,
     );
     cfg.scenario = load_scenario(&args)?;
+    apply_discipline(&mut cfg, &args)?;
     let max_live = match args.get("max-live") {
         Some(v) => Some(v.parse::<usize>().context("bad --max-live")?),
         None => None,
@@ -489,7 +587,7 @@ fn replay(argv: Vec<String>) -> Result<()> {
 
     if args.has("stream") {
         cfg.record_jobs = false;
-        let mut source = CsvStreamSource::open(Path::new(path))?;
+        let mut source = CsvStreamSource::open(Path::new(path))?.with_tenants(assigner);
         let t0 = Instant::now();
         let (subs, ev_err) = event_subscribers(&args)?;
         let res = Simulator::new(cfg).run_with(&mut source, subs);
@@ -500,11 +598,13 @@ fn replay(argv: Vec<String>) -> Result<()> {
         return report_streamed(&res, t0.elapsed().as_secs_f64(), max_live, args.get("json-out"));
     }
 
-    let wl = Trace::read_csv(Path::new(path))?;
+    let mut wl = Trace::read_csv(Path::new(path))?;
+    wl.assign_tenants(&assigner);
     let (subs, ev_err) = event_subscribers(&args)?;
     let res = Simulator::new(cfg).run_with(&mut WorkloadSource::new(&wl), subs);
     check_event_log(ev_err)?;
     println!("{}", res.summary_table());
+    report_tenants(&res);
     report_cancellations(&res);
     if let Some(cap) = max_live {
         if res.peak_live > cap {

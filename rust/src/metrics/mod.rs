@@ -18,6 +18,55 @@ use crate::stats::sketch::QuantileSketch;
 use crate::stats::summary::{percentile_sorted, percentiles, sort_ascending};
 use crate::util::json::Json;
 use crate::util::table::{sig3, Table};
+use std::collections::BTreeMap;
+
+/// One value per job class — the keyed-counter helper behind every
+/// "TE column / BE column" pair in the sink. Replaces the hand-rolled
+/// `foo_te` / `foo_be` field pairs (one match on [`JobClass`] in one
+/// place) and is reused verbatim by the per-tenant metrics map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassKeyed<T> {
+    /// The trial-and-error (latency-sensitive) class's value.
+    pub te: T,
+    /// The best-effort class's value.
+    pub be: T,
+}
+
+impl<T> ClassKeyed<T> {
+    /// The value for `class`.
+    pub fn get(&self, class: JobClass) -> &T {
+        match class {
+            JobClass::Te => &self.te,
+            JobClass::Be => &self.be,
+        }
+    }
+
+    /// Mutable value for `class`.
+    pub fn get_mut(&mut self, class: JobClass) -> &mut T {
+        match class {
+            JobClass::Te => &mut self.te,
+            JobClass::Be => &mut self.be,
+        }
+    }
+
+    /// Fold `other` in, one class at a time (`f` merges one pair).
+    pub fn merge_with(&mut self, other: &Self, mut f: impl FnMut(&mut T, &T)) {
+        f(&mut self.te, &other.te);
+        f(&mut self.be, &other.be);
+    }
+}
+
+impl ClassKeyed<u64> {
+    /// Increment the counter for `class`.
+    pub fn bump(&mut self, class: JobClass) {
+        *self.get_mut(class) += 1;
+    }
+
+    /// Sum across both classes.
+    pub fn total(&self) -> u64 {
+        self.te + self.be
+    }
+}
 
 /// 50th/95th/99th percentiles — the triple every slowdown table reports.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -144,10 +193,8 @@ impl PreemptionReport {
 /// concatenating and re-sorting raw slowdown vectors.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StreamingMetrics {
-    /// Slowdown sketch over completed TE jobs.
-    pub te_slowdown: QuantileSketch,
-    /// Slowdown sketch over completed BE jobs.
-    pub be_slowdown: QuantileSketch,
+    /// Slowdown sketches over completed jobs, keyed by class.
+    pub slowdown: ClassKeyed<QuantileSketch>,
     /// Re-scheduling intervals (vacate → restart), all jobs pooled.
     pub intervals: QuantileSketch,
     /// Jobs observed (completed + unfinished).
@@ -161,14 +208,82 @@ pub struct StreamingMetrics {
     pub preempt_hist: [u64; 3],
     /// Jobs preempted at least once (Table 3 numerator).
     pub preempted: u64,
-    /// TE jobs cancelled by the control plane. Cancelled jobs are counted
-    /// here and **nowhere else** — not in `jobs_seen`, the slowdown
-    /// sketches, or the preemption histogram — so scenario runs report
-    /// Table 1-style statistics over exactly the jobs that ran to an
-    /// outcome.
-    pub cancelled_te: u64,
-    /// BE jobs cancelled by the control plane (see `cancelled_te`).
-    pub cancelled_be: u64,
+    /// Jobs cancelled by the control plane, keyed by class. Cancelled
+    /// jobs are counted here and **nowhere else** — not in `jobs_seen`,
+    /// the slowdown sketches, or the preemption histogram — so scenario
+    /// runs report Table 1-style statistics over exactly the jobs that
+    /// ran to an outcome.
+    pub cancelled: ClassKeyed<u64>,
+    /// Per-tenant sub-sinks, keyed by [`TenantId`](crate::job::TenantId)
+    /// value. Every observed job is folded into its tenant's entry as
+    /// well as the global fields above; the map merges keywise, so sweep
+    /// cells pool per-tenant percentiles exactly like the global ones.
+    /// Single-tenant runs hold one entry (tenant 0).
+    pub tenants: BTreeMap<u32, TenantMetrics>,
+}
+
+/// One tenant's slice of the sink: per-class slowdown sketches plus the
+/// completion / cancellation / preemption counters the fairness tables
+/// report. Built from the same [`ClassKeyed`] helper as the global sink.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantMetrics {
+    /// Slowdown sketches over the tenant's completed jobs, by class.
+    pub slowdown: ClassKeyed<QuantileSketch>,
+    /// The tenant's completed jobs, by class.
+    pub completed: ClassKeyed<u64>,
+    /// The tenant's control-plane cancellations, by class.
+    pub cancelled: ClassKeyed<u64>,
+    /// The tenant's jobs preempted at least once.
+    pub preempted: u64,
+    /// The tenant's jobs unfinished at cut-off.
+    pub unfinished: u64,
+}
+
+impl TenantMetrics {
+    /// Fold another tenant slice in.
+    pub fn merge(&mut self, other: &TenantMetrics) {
+        self.slowdown.merge_with(&other.slowdown, |a, b| a.merge(b));
+        self.completed.merge_with(&other.completed, |a, b| *a += *b);
+        self.cancelled.merge_with(&other.cancelled, |a, b| *a += *b);
+        self.preempted += other.preempted;
+        self.unfinished += other.unfinished;
+    }
+
+    /// Sketch-backed slowdown report for this tenant.
+    pub fn slowdown_report(&self) -> SlowdownReport {
+        SlowdownReport {
+            te: Percentiles::from_sketch(&self.slowdown.te),
+            be: Percentiles::from_sketch(&self.slowdown.be),
+        }
+    }
+
+    /// Jobs observed for this tenant (completed + unfinished; cancelled
+    /// jobs excluded, as in the global sink).
+    pub fn jobs_seen(&self) -> u64 {
+        self.completed.total() + self.unfinished
+    }
+
+    /// Machine-readable dump (one entry of the JSON `tenants` object).
+    pub fn to_json(&self) -> Json {
+        let r = self.slowdown_report();
+        Json::obj(vec![
+            ("jobs_seen", Json::num(self.jobs_seen() as f64)),
+            ("completed", Json::num(self.completed.total() as f64)),
+            ("unfinished", Json::num(self.unfinished as f64)),
+            ("preempted", Json::num(self.preempted as f64)),
+            (
+                "cancelled",
+                Json::obj(vec![
+                    ("te", Json::num(self.cancelled.te as f64)),
+                    ("be", Json::num(self.cancelled.be as f64)),
+                ]),
+            ),
+            (
+                "slowdown",
+                Json::obj(vec![("te", r.te.to_json()), ("be", r.be.to_json())]),
+            ),
+        ])
+    }
 }
 
 impl StreamingMetrics {
@@ -180,19 +295,23 @@ impl StreamingMetrics {
     /// Fold one job's outcome in.
     pub fn observe(&mut self, r: &JobRecord) {
         self.jobs_seen += 1;
+        let tenant = self.tenants.entry(r.tenant.0).or_default();
         match r.preemptions {
             0 => {}
             1 => {
                 self.preempt_hist[0] += 1;
                 self.preempted += 1;
+                tenant.preempted += 1;
             }
             2 => {
                 self.preempt_hist[1] += 1;
                 self.preempted += 1;
+                tenant.preempted += 1;
             }
             _ => {
                 self.preempt_hist[2] += 1;
                 self.preempted += 1;
+                tenant.preempted += 1;
             }
         }
         for iv in &r.resched_intervals {
@@ -200,36 +319,34 @@ impl StreamingMetrics {
         }
         if r.finished_at.is_some() {
             self.completed += 1;
-            match r.class {
-                JobClass::Te => self.te_slowdown.insert(r.slowdown),
-                JobClass::Be => self.be_slowdown.insert(r.slowdown),
-            }
+            tenant.completed.bump(r.class);
+            self.slowdown.get_mut(r.class).insert(r.slowdown);
+            tenant.slowdown.get_mut(r.class).insert(r.slowdown);
         } else {
             self.unfinished += 1;
+            tenant.unfinished += 1;
         }
     }
 
-    /// Fold one cancelled job in: only the per-class cancellation counter
-    /// moves. Slowdown percentiles, the preemption histogram, and
-    /// `jobs_seen` deliberately exclude cancelled jobs — a scenario that
-    /// kills impatient TE jobs must not skew the Table 1 layout.
+    /// Fold one cancelled job in: only the per-class cancellation
+    /// counters (global and tenant) move. Slowdown percentiles, the
+    /// preemption histogram, and `jobs_seen` deliberately exclude
+    /// cancelled jobs — a scenario that kills impatient TE jobs must not
+    /// skew the Table 1 layout.
     pub fn observe_cancelled(&mut self, r: &JobRecord) {
         debug_assert!(r.cancelled && r.finished_at.is_none());
-        match r.class {
-            JobClass::Te => self.cancelled_te += 1,
-            JobClass::Be => self.cancelled_be += 1,
-        }
+        self.cancelled.bump(r.class);
+        self.tenants.entry(r.tenant.0).or_default().cancelled.bump(r.class);
     }
 
     /// Total cancellations across both classes.
-    pub fn cancelled(&self) -> u64 {
-        self.cancelled_te + self.cancelled_be
+    pub fn cancelled_total(&self) -> u64 {
+        self.cancelled.total()
     }
 
     /// Fold another sink in (order-independent for every reported value).
     pub fn merge(&mut self, other: &StreamingMetrics) {
-        self.te_slowdown.merge(&other.te_slowdown);
-        self.be_slowdown.merge(&other.be_slowdown);
+        self.slowdown.merge_with(&other.slowdown, |a, b| a.merge(b));
         self.intervals.merge(&other.intervals);
         self.jobs_seen += other.jobs_seen;
         self.completed += other.completed;
@@ -238,15 +355,17 @@ impl StreamingMetrics {
             *a += *b;
         }
         self.preempted += other.preempted;
-        self.cancelled_te += other.cancelled_te;
-        self.cancelled_be += other.cancelled_be;
+        self.cancelled.merge_with(&other.cancelled, |a, b| *a += *b);
+        for (t, m) in &other.tenants {
+            self.tenants.entry(*t).or_default().merge(m);
+        }
     }
 
     /// Sketch-backed slowdown report (Table 1 / Table 5 row).
     pub fn slowdown_report(&self) -> SlowdownReport {
         SlowdownReport {
-            te: Percentiles::from_sketch(&self.te_slowdown),
-            be: Percentiles::from_sketch(&self.be_slowdown),
+            te: Percentiles::from_sketch(&self.slowdown.te),
+            be: Percentiles::from_sketch(&self.slowdown.be),
         }
     }
 
@@ -285,19 +404,57 @@ impl StreamingMetrics {
             ("jobs_seen", Json::num(self.jobs_seen as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("unfinished", Json::num(self.unfinished as f64)),
-            ("te_slowdown", self.te_slowdown.to_json()),
-            ("be_slowdown", self.be_slowdown.to_json()),
+            ("te_slowdown", self.slowdown.te.to_json()),
+            ("be_slowdown", self.slowdown.be.to_json()),
             ("intervals", self.intervals.to_json()),
             ("preempted", Json::num(self.preempted as f64)),
             (
                 "cancelled",
                 Json::obj(vec![
-                    ("te", Json::num(self.cancelled_te as f64)),
-                    ("be", Json::num(self.cancelled_be as f64)),
+                    ("te", Json::num(self.cancelled.te as f64)),
+                    ("be", Json::num(self.cancelled.be as f64)),
                 ]),
             ),
+            ("tenants", self.tenants_json()),
         ])
     }
+
+    /// The per-tenant map as a JSON object keyed by tenant id.
+    pub fn tenants_json(&self) -> Json {
+        Json::Obj(
+            self.tenants
+                .iter()
+                .map(|(t, m)| (t.to_string(), m.to_json()))
+                .collect(),
+        )
+    }
+}
+
+/// Render the per-tenant fairness table (one row per tenant): job counts
+/// and per-class slowdown percentiles from the tenant sub-sinks.
+pub fn tenant_table(title: &str, tenants: &BTreeMap<u32, TenantMetrics>) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "tenant", "jobs", "TE 50th", "TE 95th", "TE 99th", "BE 50th", "BE 95th", "BE 99th",
+            "cancelled",
+        ],
+    );
+    for (id, m) in tenants {
+        let r = m.slowdown_report();
+        t.row(vec![
+            format!("tenant-{id}"),
+            m.jobs_seen().to_string(),
+            sig3(r.te.p50),
+            sig3(r.te.p95),
+            sig3(r.te.p99),
+            sig3(r.be.p50),
+            sig3(r.be.p95),
+            sig3(r.be.p99),
+            m.cancelled.total().to_string(),
+        ]);
+    }
+    t
 }
 
 /// Render the paper's Table-1 layout for a set of runs (one row per
@@ -389,6 +546,60 @@ mod tests {
         let text = t.to_text();
         assert!(text.contains("FitGpp"));
         assert!(text.contains("10.3"));
+    }
+
+    #[test]
+    fn class_keyed_counters_and_tenant_map() {
+        use crate::job::{JobId, TenantId};
+        use crate::resources::ResourceVec;
+        let rec = |id: u32, class: JobClass, tenant: u32, finished: bool| JobRecord {
+            id: JobId(id),
+            class,
+            demand: ResourceVec::new(1.0, 1.0, 0.0),
+            submit: 0,
+            exec_time: 10,
+            grace_period: 0,
+            first_start: Some(0),
+            finished_at: if finished { Some(10) } else { None },
+            preemptions: 0,
+            evictions: 0,
+            resched_intervals: Vec::new(),
+            slowdown: 1.0,
+            cancelled: false,
+            tenant: TenantId(tenant),
+        };
+        let mut sink = StreamingMetrics::new();
+        sink.observe(&rec(0, JobClass::Te, 0, true));
+        sink.observe(&rec(1, JobClass::Be, 1, true));
+        sink.observe(&rec(2, JobClass::Be, 1, false));
+        let mut cancelled = rec(3, JobClass::Te, 1, false);
+        cancelled.cancelled = true;
+        sink.observe_cancelled(&cancelled);
+
+        assert_eq!(sink.jobs_seen, 3);
+        assert_eq!(sink.cancelled.te, 1);
+        assert_eq!(sink.cancelled_total(), 1);
+        assert_eq!(sink.tenants.len(), 2);
+        let t1 = &sink.tenants[&1];
+        assert_eq!(t1.completed.be, 1);
+        assert_eq!(t1.unfinished, 1);
+        assert_eq!(t1.cancelled.te, 1);
+        assert_eq!(t1.jobs_seen(), 2);
+        assert_eq!(sink.tenants[&0].completed.te, 1);
+
+        // Keywise merge: tenant slices pool like the global sketches.
+        let mut other = StreamingMetrics::new();
+        other.observe(&rec(4, JobClass::Be, 1, true));
+        sink.merge(&other);
+        assert_eq!(sink.tenants[&1].completed.be, 2);
+        assert_eq!(sink.completed, 4);
+
+        // Rendering: one row per tenant, json roundtrips.
+        let table = tenant_table("fairness", &sink.tenants);
+        assert!(table.to_text().contains("tenant-1"));
+        let j = sink.to_json().to_pretty();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("tenants").get("1").get("completed").as_u64(), Some(2));
     }
 
     #[test]

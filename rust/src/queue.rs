@@ -5,6 +5,13 @@
 //! scheduler only ever examines the head (FIFO admission — a blocked head
 //! blocks everything behind it; that head-of-line blocking is precisely the
 //! phenomenon FitGpp mitigates by preempting *small* BE jobs).
+//!
+//! `JobQueue` is the ordered backing store; *which queued job admission
+//! tries next* is decided one layer up, by the pluggable
+//! [`QueueDiscipline`](crate::sched::admission::QueueDiscipline) (the
+//! default [`Fifo`](crate::sched::admission::Fifo) discipline reproduces
+//! the head-only loop verbatim). The TE fast lane uses `JobQueue`
+//! directly — it is per-arrival, so there is no head to discipline.
 
 use crate::job::JobId;
 use std::collections::VecDeque;
@@ -62,6 +69,12 @@ impl JobQueue {
     /// Position of a job in the queue (0 = head), if queued.
     pub fn position(&self, id: JobId) -> Option<usize> {
         self.q.iter().position(|j| *j == id)
+    }
+
+    /// The job at position `i` (0 = head), if any. The quota-gate
+    /// discipline's backfill scan walks the queue by index.
+    pub fn get(&self, i: usize) -> Option<JobId> {
+        self.q.get(i).copied()
     }
 
     /// Remove a specific job (TE-lane admission is per-arrival: a TE job

@@ -1,0 +1,901 @@
+//! The admission layer: pluggable queue disciplines, tenant weights, and
+//! running-size quotas.
+//!
+//! The paper's scheduler examines only the head of one global FIFO (§2) —
+//! which is exactly the head-of-line blocking FitGpp mitigates. Fairness
+//! and quota enforcement for a multi-tenant cluster live one layer *up*
+//! from preemption: at admission, deciding **which queued job to try
+//! next**, orthogonally to the policy's *whom to evict*. This module is
+//! that layer.
+//!
+//! ## The discipline protocol
+//!
+//! [`QueueDiscipline`] is an object-safe trait the scheduler core drives
+//! once per tick in an *admission round*:
+//!
+//! 1. [`begin_round`](QueueDiscipline::begin_round) resets round-local
+//!    cursor state;
+//! 2. [`next_candidate`](QueueDiscipline::next_candidate) yields the next
+//!    queued job to attempt (or `None` — round over);
+//! 3. the scheduler attempts it (quota check, node search, placement) and
+//!    [`report`](QueueDiscipline::report)s the [`AdmitOutcome`], which the
+//!    discipline turns into its blocking / skipping / rotation rule.
+//!
+//! **The frozen-state contract.** A round that places nothing must leave
+//! all *persistent* discipline state untouched, and its candidate sequence
+//! must be a pure function of (discipline state, job table, cluster
+//! state, tenant directory). The event-horizon engine relies on this: a
+//! quiescent span skips whole ticks, so a placement-free round replayed on
+//! frozen state must reproduce itself exactly or the two simulator drive
+//! modes would diverge. All round-local state (cursors, blocked sets,
+//! backfill budgets) is reset by `begin_round`; persistent state (the
+//! round-robin turn, queue contents) moves only on placements — which only
+//! happen on ticks both engines execute.
+//!
+//! ## Disciplines
+//!
+//! * [`Fifo`] — verbatim port of the original [`JobQueue`] admission loop,
+//!   byte-identical including the preemption re-insertion rule (§2:
+//!   *"suspended BE jobs are placed back on the top of the job queue"*)
+//!   and the blocked-head semantics. The default.
+//! * [`WeightedFair`] — per-tenant sub-queues with weighted round-robin
+//!   across tenants: the turn tenant admits up to `weight` jobs before the
+//!   turn rotates, and a tenant whose head is blocked is skipped *for this
+//!   round only*, so one tenant's blocked head no longer stalls the rest.
+//!   Every non-empty tenant's head is attempted at least once per round —
+//!   the starvation bound `rust/tests/properties.rs` pins.
+//! * [`QuotaGate`] — the global FIFO order, but over-quota heads are
+//!   *skipped* (not blocked), and up to `backfill` blocked (doesn't-fit)
+//!   heads per scan are stepped over so small jobs behind a blocked head
+//!   can backfill.
+//!
+//! ## Quotas and weights
+//!
+//! Per-tenant state lives in the scheduler-owned [`TenantDirectory`]
+//! (mutated by the control plane's `SetQuota` / `SetWeight` commands), not
+//! in the disciplines. A quota caps a tenant's **occupied Size** — the
+//! Eq. 1 `Size` of all its Running + Draining demand, measured against the
+//! cluster's total capacity at scheduler construction. The cap is checked
+//! *before* admission: a tenant strictly below its cap may overshoot by at
+//! most one job, which guarantees every queued job stays admissible once
+//! the tenant drains (the conservation property). A quota of `0` is a full
+//! stop for the tenant. The TE fast lane is *not* quota-gated: TE latency
+//! is the paper's whole objective, and the lane is already per-arrival
+//! (no head-of-line blocking to fix); tenant quotas gate the shared/BE
+//! queue, while TE occupancy still *counts against* the tenant's usage.
+
+use crate::job::{JobId, TenantId};
+use crate::queue::JobQueue;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Which queue discipline admits jobs. Plain data (config/CLI surface,
+/// like [`PolicyKind`](crate::sched::policy::PolicyKind)); behaviour is
+/// built once per run by [`build_discipline`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum DisciplineKind {
+    /// The paper's single global FIFO: head-only admission, a blocked head
+    /// blocks everything behind it. The default — byte-identical to the
+    /// pre-admission-layer scheduler.
+    #[default]
+    Fifo,
+    /// Weighted round-robin over per-tenant FIFO sub-queues.
+    WeightedFair,
+    /// Global FIFO with over-quota skip and a bounded backfill window.
+    QuotaGate {
+        /// How many blocked (doesn't-fit) heads one scan may step over
+        /// before the round ends (≥ 1).
+        backfill: usize,
+    },
+}
+
+/// Default backfill window for [`DisciplineKind::QuotaGate`].
+pub const DEFAULT_BACKFILL: usize = 8;
+
+impl DisciplineKind {
+    /// Human-readable name (tables, logs).
+    pub fn name(&self) -> String {
+        match self {
+            DisciplineKind::Fifo => "fifo".to_string(),
+            DisciplineKind::WeightedFair => "weighted_fair".to_string(),
+            DisciplineKind::QuotaGate { backfill } => format!("quota_gate:w={backfill}"),
+        }
+    }
+
+    /// Parse the CLI form: `fifo` | `weighted_fair` | `quota_gate` |
+    /// `quota_gate:w=<n>`.
+    pub fn parse(s: &str) -> Result<DisciplineKind> {
+        let s = s.trim();
+        match s {
+            "fifo" => return Ok(DisciplineKind::Fifo),
+            "weighted_fair" | "wfq" => return Ok(DisciplineKind::WeightedFair),
+            "quota_gate" => return Ok(DisciplineKind::QuotaGate { backfill: DEFAULT_BACKFILL }),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("quota_gate:") {
+            let Some(raw) = rest.strip_prefix("w=") else {
+                bail!("bad discipline {s:?}: expected quota_gate:w=<n>");
+            };
+            let w: usize = raw
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad discipline {s:?}: {e}"))?;
+            if w == 0 {
+                bail!("bad discipline {s:?}: backfill window must be at least 1");
+            }
+            return Ok(DisciplineKind::QuotaGate { backfill: w });
+        }
+        bail!("unknown discipline {s:?} (expected fifo | weighted_fair | quota_gate[:w=<n>])")
+    }
+}
+
+impl fmt::Display for DisciplineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// Build the discipline for `kind` (once per run, at scheduler
+/// construction — mirroring
+/// [`build_policy`](crate::sched::policy::build_policy)).
+pub fn build_discipline(kind: &DisciplineKind) -> Box<dyn QueueDiscipline> {
+    match kind {
+        DisciplineKind::Fifo => Box::new(Fifo::new()),
+        DisciplineKind::WeightedFair => Box::new(WeightedFair::new()),
+        DisciplineKind::QuotaGate { backfill } => Box::new(QuotaGate::new(*backfill)),
+    }
+}
+
+/// Per-tenant scheduling parameters: weights (weighted-fair shares) and
+/// occupied-Size quotas. Owned by the scheduler, mutated between rounds by
+/// the control plane (`SetQuota` / `SetWeight`), read by the admission
+/// loop and the disciplines.
+#[derive(Debug, Clone, Default)]
+pub struct TenantDirectory {
+    weights: BTreeMap<u32, u32>,
+    quotas: BTreeMap<u32, f64>,
+    /// Quota applied to tenants with no explicit entry (`None` =
+    /// unlimited, the default).
+    default_quota: Option<f64>,
+}
+
+impl TenantDirectory {
+    /// A directory with every tenant at weight 1 and no quotas.
+    pub fn new(default_quota: Option<f64>) -> Self {
+        TenantDirectory { default_quota, ..TenantDirectory::default() }
+    }
+
+    /// The tenant's weighted-fair share (default 1).
+    pub fn weight(&self, tenant: TenantId) -> u32 {
+        self.weights.get(&tenant.0).copied().unwrap_or(1)
+    }
+
+    /// The tenant's occupied-Size cap, if any.
+    pub fn quota(&self, tenant: TenantId) -> Option<f64> {
+        self.quotas.get(&tenant.0).copied().or(self.default_quota)
+    }
+
+    /// Set the tenant's weighted-fair share (≥ 1; the controller rejects 0
+    /// before it gets here).
+    pub fn set_weight(&mut self, tenant: TenantId, weight: u32) {
+        self.weights.insert(tenant.0, weight.max(1));
+    }
+
+    /// Set the tenant's occupied-Size cap.
+    pub fn set_quota(&mut self, tenant: TenantId, size: f64) {
+        self.quotas.insert(tenant.0, size.max(0.0));
+    }
+}
+
+/// Per-tenant occupied Size (Eq. 1 `Size` of all Running + Draining
+/// demand), maintained incrementally by the scheduler at bind/unbind
+/// points. The job count rides along so a tenant whose last job releases
+/// resets to exactly `0.0` — accumulated f64 round-off cannot drift a
+/// quota decision, and the add/sub sequence is identical in both simulator
+/// drive modes, so decisions stay engine-invariant.
+#[derive(Debug, Clone, Default)]
+pub struct TenantUsage {
+    occupied: BTreeMap<u32, (f64, u32)>,
+}
+
+impl TenantUsage {
+    /// A job of `size` started occupying resources for `tenant`.
+    pub fn add(&mut self, tenant: TenantId, size: f64) {
+        let slot = self.occupied.entry(tenant.0).or_insert((0.0, 0));
+        slot.0 += size;
+        slot.1 += 1;
+    }
+
+    /// A job of `size` released its resources.
+    pub fn sub(&mut self, tenant: TenantId, size: f64) {
+        let Some(slot) = self.occupied.get_mut(&tenant.0) else {
+            debug_assert!(false, "{tenant} released without occupancy");
+            return;
+        };
+        debug_assert!(slot.1 > 0, "{tenant} released more jobs than it held");
+        slot.1 = slot.1.saturating_sub(1);
+        if slot.1 == 0 {
+            self.occupied.remove(&tenant.0);
+        } else {
+            slot.0 = (slot.0 - size).max(0.0);
+        }
+    }
+
+    /// The tenant's currently occupied Size.
+    pub fn occupied_size(&self, tenant: TenantId) -> f64 {
+        self.occupied.get(&tenant.0).map(|(s, _)| *s).unwrap_or(0.0)
+    }
+
+    /// Number of jobs currently occupying resources for the tenant.
+    pub fn occupied_jobs(&self, tenant: TenantId) -> u32 {
+        self.occupied.get(&tenant.0).map(|(_, n)| *n).unwrap_or(0)
+    }
+}
+
+/// Read-only context the scheduler hands the discipline on every
+/// `next_candidate` / `report` call.
+pub struct AdmissionCtx<'a> {
+    /// Tenant weights and quotas (the disciplines read weights; the
+    /// scheduler applies quotas before the attempt).
+    pub tenants: &'a TenantDirectory,
+}
+
+/// Outcome of one admission attempt, reported back to the discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitOutcome {
+    /// The job was placed. The scheduler has already removed it from the
+    /// discipline via [`QueueDiscipline::remove`]; cluster and quota state
+    /// changed, so round-local blocked state must be forgotten.
+    Placed,
+    /// No node can host the job right now.
+    NoFit,
+    /// The job's tenant is at or over its occupied-Size quota.
+    OverQuota,
+    /// The job vacated in this same scheduling round and is not
+    /// re-admittable until the next one (§2's one-decision-per-minute
+    /// rule). Disciplines treat it like [`AdmitOutcome::NoFit`].
+    VacatedNow,
+}
+
+/// An admission queue discipline. See the module docs for the round
+/// protocol and the frozen-state contract.
+pub trait QueueDiscipline: fmt::Debug + Send {
+    /// New submission: tail (of the tenant's sub-queue, where one exists).
+    fn submit(&mut self, id: JobId, tenant: TenantId);
+
+    /// Preempted / evicted job returning: *top* of its queue, ahead of
+    /// everything — the paper's re-insertion rule, applied per tenant
+    /// under tenant-aware disciplines.
+    fn reinsert_front(&mut self, id: JobId, tenant: TenantId);
+
+    /// Remove a queued job (placement, cancellation, reclassification).
+    /// Returns true when it was queued. Must be callable mid-round.
+    fn remove(&mut self, id: JobId) -> bool;
+
+    /// Queued job count.
+    fn len(&self) -> usize;
+
+    /// True when nothing is queued.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Is `id` queued?
+    fn contains(&self, id: JobId) -> bool;
+
+    /// Visit every queued id in a deterministic, implementation-defined
+    /// order ([`Fifo`] preserves exact queue order — the synthetic
+    /// generator's load calibration sums demands in that order).
+    fn for_each(&self, f: &mut dyn FnMut(JobId));
+
+    /// Begin an admission round: reset all round-local cursor state.
+    fn begin_round(&mut self);
+
+    /// The next queued job to attempt, or `None` when the round is over.
+    /// Must not mutate persistent state.
+    fn next_candidate(&mut self, ctx: &AdmissionCtx) -> Option<JobId>;
+
+    /// Report the outcome of the attempt on `id`. Persistent state may
+    /// move only on [`AdmitOutcome::Placed`].
+    fn report(&mut self, id: JobId, tenant: TenantId, outcome: AdmitOutcome, ctx: &AdmissionCtx);
+}
+
+// ---------------------------------------------------------------------
+// Fifo
+// ---------------------------------------------------------------------
+
+/// The paper's single global FIFO as a discipline: head-only admission,
+/// any non-placement outcome ends the round (a blocked head blocks
+/// everything behind it). Byte-identical to the pre-refactor
+/// `while let Some(head) = be_queue.head()` loop — pinned by
+/// `rust/tests/streaming_equivalence.rs`.
+#[derive(Debug, Default)]
+pub struct Fifo {
+    q: JobQueue,
+    round_over: bool,
+}
+
+impl Fifo {
+    /// An empty FIFO discipline.
+    pub fn new() -> Self {
+        Fifo::default()
+    }
+}
+
+impl QueueDiscipline for Fifo {
+    fn submit(&mut self, id: JobId, _tenant: TenantId) {
+        self.q.submit(id);
+    }
+
+    fn reinsert_front(&mut self, id: JobId, _tenant: TenantId) {
+        self.q.reinsert_front(id);
+    }
+
+    fn remove(&mut self, id: JobId) -> bool {
+        self.q.remove(id)
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn contains(&self, id: JobId) -> bool {
+        self.q.position(id).is_some()
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(JobId)) {
+        for id in self.q.iter() {
+            f(id);
+        }
+    }
+
+    fn begin_round(&mut self) {
+        self.round_over = false;
+    }
+
+    fn next_candidate(&mut self, _ctx: &AdmissionCtx) -> Option<JobId> {
+        if self.round_over {
+            return None;
+        }
+        self.q.head()
+    }
+
+    fn report(
+        &mut self,
+        _id: JobId,
+        _tenant: TenantId,
+        outcome: AdmitOutcome,
+        _ctx: &AdmissionCtx,
+    ) {
+        // Placed: the head was removed, the new head is the next candidate.
+        // Anything else: the head blocks the queue for this round.
+        if outcome != AdmitOutcome::Placed {
+            self.round_over = true;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// WeightedFair
+// ---------------------------------------------------------------------
+
+/// Weighted round-robin over per-tenant FIFO sub-queues.
+///
+/// The *turn* tenant admits up to `weight(tenant)` jobs, then the turn
+/// rotates to the next tenant (cyclic by tenant id). Within a round, a
+/// tenant whose head is blocked (no fit, over quota, vacated-this-tick)
+/// is skipped for the rest of the round — sound because placements only
+/// consume capacity and grow usage, so a blocked verdict cannot flip
+/// mid-round — so one tenant's blocked head never stalls the others, and
+/// every non-empty tenant's head is attempted at least once per round
+/// (the starvation bound).
+///
+/// Persistent state (`turn`, `served`) moves only on placements, per the
+/// frozen-state contract.
+#[derive(Debug, Default)]
+pub struct WeightedFair {
+    /// Tenant id → its FIFO sub-queue. Entries persist once created
+    /// (bounded by the tenant count, not the job count).
+    queues: BTreeMap<u32, JobQueue>,
+    /// Queued job → its tenant, so [`QueueDiscipline::remove`] (the hot
+    /// placement path: the candidate is its sub-queue's head) goes
+    /// straight to the right sub-queue instead of scanning all of them.
+    tenant_of: BTreeMap<u32, u32>,
+    /// The tenant currently holding the turn.
+    turn: u32,
+    /// Placements the turn tenant has used of its weight.
+    served: u32,
+    /// Total queued jobs across all sub-queues.
+    len: usize,
+    /// Round-local: tenants whose head was blocked this round.
+    round_blocked: Vec<u32>,
+    /// Round-local: candidate handed out by the last `next_candidate`
+    /// (the tenant whose verdict `report` settles).
+    offered: Option<u32>,
+}
+
+impl WeightedFair {
+    /// An empty weighted-fair discipline.
+    pub fn new() -> Self {
+        WeightedFair::default()
+    }
+
+    /// Tenants in cyclic id order starting from the turn holder.
+    fn cyclic_tenants(&self) -> impl Iterator<Item = u32> + '_ {
+        let turn = self.turn;
+        self.queues
+            .range(turn..)
+            .map(|(t, _)| *t)
+            .chain(self.queues.range(..turn).map(|(t, _)| *t))
+    }
+
+    /// The tenant id after `t` in cyclic order (among known tenants).
+    fn tenant_after(&self, t: u32) -> u32 {
+        use std::ops::Bound;
+        self.queues
+            .range((Bound::Excluded(t), Bound::Unbounded))
+            .map(|(k, _)| *k)
+            .next()
+            .or_else(|| self.queues.keys().next().copied())
+            .unwrap_or(t)
+    }
+}
+
+impl QueueDiscipline for WeightedFair {
+    fn submit(&mut self, id: JobId, tenant: TenantId) {
+        self.queues.entry(tenant.0).or_default().submit(id);
+        self.tenant_of.insert(id.0, tenant.0);
+        self.len += 1;
+    }
+
+    fn reinsert_front(&mut self, id: JobId, tenant: TenantId) {
+        self.queues.entry(tenant.0).or_default().reinsert_front(id);
+        self.tenant_of.insert(id.0, tenant.0);
+        self.len += 1;
+    }
+
+    fn remove(&mut self, id: JobId) -> bool {
+        let Some(t) = self.tenant_of.get(&id.0).copied() else {
+            return false;
+        };
+        let removed = self
+            .queues
+            .get_mut(&t)
+            .map(|q| q.remove(id))
+            .unwrap_or(false);
+        debug_assert!(removed, "{id} tracked for tenant-{t} but not queued");
+        if removed {
+            self.tenant_of.remove(&id.0);
+            self.len -= 1;
+        }
+        removed
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn contains(&self, id: JobId) -> bool {
+        self.tenant_of.contains_key(&id.0)
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(JobId)) {
+        for q in self.queues.values() {
+            for id in q.iter() {
+                f(id);
+            }
+        }
+    }
+
+    fn begin_round(&mut self) {
+        self.round_blocked.clear();
+        self.offered = None;
+    }
+
+    fn next_candidate(&mut self, _ctx: &AdmissionCtx) -> Option<JobId> {
+        let mut pick: Option<(u32, JobId)> = None;
+        for t in self.cyclic_tenants() {
+            if self.round_blocked.contains(&t) {
+                continue;
+            }
+            if let Some(head) = self.queues[&t].head() {
+                pick = Some((t, head));
+                break;
+            }
+        }
+        let (t, head) = pick?;
+        self.offered = Some(t);
+        Some(head)
+    }
+
+    fn report(&mut self, _id: JobId, tenant: TenantId, outcome: AdmitOutcome, ctx: &AdmissionCtx) {
+        debug_assert_eq!(self.offered, Some(tenant.0), "report for an unoffered tenant");
+        self.offered = None;
+        match outcome {
+            AdmitOutcome::Placed => {
+                // Blocked tenants stay blocked for the rest of the round:
+                // within one round placements only *bind* capacity and
+                // *grow* usage (BE candidates never hold reservations), so
+                // a NoFit/OverQuota verdict can never flip — re-attempting
+                // would just repeat the failed node search.
+                //
+                // Turn accounting: the placement belongs to `tenant` (the
+                // turn holder, or the next tenant in order when the holder
+                // was empty/blocked — then the turn passes to it).
+                if self.turn != tenant.0 {
+                    self.turn = tenant.0;
+                    self.served = 0;
+                }
+                self.served += 1;
+                if self.served >= ctx.tenants.weight(tenant) {
+                    self.turn = self.tenant_after(tenant.0);
+                    self.served = 0;
+                }
+            }
+            AdmitOutcome::NoFit | AdmitOutcome::OverQuota | AdmitOutcome::VacatedNow => {
+                self.round_blocked.push(tenant.0);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// QuotaGate
+// ---------------------------------------------------------------------
+
+/// Global FIFO order with over-quota skip and bounded backfill.
+///
+/// One forward scan per round: over-quota heads are skipped outright
+/// (they cost nothing), and up to `backfill` doesn't-fit heads total are
+/// stepped over before the round ends — so a blocked head delays, but no
+/// longer stalls, everything behind it. The scan never revisits a failed
+/// prefix: within a round placements only consume capacity and grow
+/// usage, so earlier NoFit/OverQuota verdicts cannot flip, and FIFO
+/// preference among *admissible* jobs is preserved by the forward order
+/// alone.
+#[derive(Debug)]
+pub struct QuotaGate {
+    q: JobQueue,
+    backfill: usize,
+    /// Round-local scan position.
+    pos: usize,
+    /// Round-local doesn't-fit heads stepped over this round.
+    misses: usize,
+    /// Round-local: the scan ended.
+    round_over: bool,
+}
+
+impl QuotaGate {
+    /// An empty quota-gate discipline with the given backfill window
+    /// (≥ 1).
+    pub fn new(backfill: usize) -> Self {
+        QuotaGate {
+            q: JobQueue::new(),
+            backfill: backfill.max(1),
+            pos: 0,
+            misses: 0,
+            round_over: false,
+        }
+    }
+}
+
+impl QueueDiscipline for QuotaGate {
+    fn submit(&mut self, id: JobId, _tenant: TenantId) {
+        self.q.submit(id);
+    }
+
+    fn reinsert_front(&mut self, id: JobId, _tenant: TenantId) {
+        self.q.reinsert_front(id);
+    }
+
+    fn remove(&mut self, id: JobId) -> bool {
+        self.q.remove(id)
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn contains(&self, id: JobId) -> bool {
+        self.q.position(id).is_some()
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(JobId)) {
+        for id in self.q.iter() {
+            f(id);
+        }
+    }
+
+    fn begin_round(&mut self) {
+        self.pos = 0;
+        self.misses = 0;
+        self.round_over = false;
+    }
+
+    fn next_candidate(&mut self, _ctx: &AdmissionCtx) -> Option<JobId> {
+        if self.round_over {
+            return None;
+        }
+        match self.q.get(self.pos) {
+            Some(id) => Some(id),
+            None => {
+                self.round_over = true;
+                None
+            }
+        }
+    }
+
+    fn report(
+        &mut self,
+        _id: JobId,
+        _tenant: TenantId,
+        outcome: AdmitOutcome,
+        _ctx: &AdmissionCtx,
+    ) {
+        match outcome {
+            AdmitOutcome::Placed => {
+                // The candidate left the queue at `pos`, so `pos` already
+                // points at the next job; the failed prefix is not
+                // revisited (its verdicts cannot flip mid-round).
+            }
+            AdmitOutcome::OverQuota => {
+                // Skipping an over-quota head is free: it is not waiting on
+                // capacity, only on its own tenant's drain.
+                self.pos += 1;
+            }
+            AdmitOutcome::NoFit | AdmitOutcome::VacatedNow => {
+                self.misses += 1;
+                if self.misses >= self.backfill {
+                    self.round_over = true;
+                } else {
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(dir: &TenantDirectory) -> AdmissionCtx<'_> {
+        AdmissionCtx { tenants: dir }
+    }
+
+    /// Drive one admission round against a closure deciding each
+    /// attempt's outcome; returns the placed ids in order.
+    fn round(
+        d: &mut dyn QueueDiscipline,
+        dir: &TenantDirectory,
+        tenant_of: &dyn Fn(JobId) -> TenantId,
+        mut verdict: impl FnMut(JobId) -> AdmitOutcome,
+    ) -> Vec<JobId> {
+        let mut placed = Vec::new();
+        d.begin_round();
+        while let Some(id) = d.next_candidate(&ctx(dir)) {
+            let t = tenant_of(id);
+            let out = verdict(id);
+            if out == AdmitOutcome::Placed {
+                assert!(d.remove(id), "{id} placed but not queued");
+                placed.push(id);
+            }
+            d.report(id, t, out, &ctx(dir));
+        }
+        placed
+    }
+
+    #[test]
+    fn discipline_kind_parses() {
+        assert_eq!(DisciplineKind::parse("fifo").unwrap(), DisciplineKind::Fifo);
+        assert_eq!(
+            DisciplineKind::parse("weighted_fair").unwrap(),
+            DisciplineKind::WeightedFair
+        );
+        assert_eq!(
+            DisciplineKind::parse("quota_gate").unwrap(),
+            DisciplineKind::QuotaGate { backfill: DEFAULT_BACKFILL }
+        );
+        assert_eq!(
+            DisciplineKind::parse("quota_gate:w=3").unwrap(),
+            DisciplineKind::QuotaGate { backfill: 3 }
+        );
+        for bad in ["", "lifo", "quota_gate:w=0", "quota_gate:w=x", "quota_gate:3"] {
+            assert!(DisciplineKind::parse(bad).is_err(), "{bad:?}");
+        }
+        assert_eq!(DisciplineKind::parse("quota_gate:w=3").unwrap().name(), "quota_gate:w=3");
+    }
+
+    #[test]
+    fn tenant_directory_defaults_and_overrides() {
+        let mut dir = TenantDirectory::new(Some(2.0));
+        assert_eq!(dir.weight(TenantId(5)), 1);
+        assert_eq!(dir.quota(TenantId(5)), Some(2.0));
+        dir.set_weight(TenantId(5), 4);
+        dir.set_quota(TenantId(5), 0.5);
+        assert_eq!(dir.weight(TenantId(5)), 4);
+        assert_eq!(dir.quota(TenantId(5)), Some(0.5));
+        let open = TenantDirectory::new(None);
+        assert_eq!(open.quota(TenantId(0)), None);
+    }
+
+    #[test]
+    fn tenant_usage_resets_exactly_on_empty() {
+        let mut u = TenantUsage::default();
+        let t = TenantId(3);
+        u.add(t, 0.1);
+        u.add(t, 0.2);
+        assert_eq!(u.occupied_jobs(t), 2);
+        u.sub(t, 0.1);
+        assert!(u.occupied_size(t) > 0.0);
+        u.sub(t, 0.2);
+        assert_eq!(u.occupied_size(t), 0.0, "exact zero when the tenant empties");
+        assert_eq!(u.occupied_jobs(t), 0);
+    }
+
+    #[test]
+    fn fifo_discipline_blocks_on_first_failure() {
+        let dir = TenantDirectory::default();
+        let mut d = Fifo::new();
+        for i in 0..3 {
+            d.submit(JobId(i), TenantId::DEFAULT);
+        }
+        // First job fits, second blocks: the third is never attempted.
+        let mut attempts = Vec::new();
+        let placed = round(&mut d, &dir, &|_| TenantId::DEFAULT, |id| {
+            attempts.push(id);
+            if id == JobId(0) { AdmitOutcome::Placed } else { AdmitOutcome::NoFit }
+        });
+        assert_eq!(placed, vec![JobId(0)]);
+        assert_eq!(attempts, vec![JobId(0), JobId(1)], "blocked head ends the round");
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn weighted_fair_rotates_by_weight() {
+        let mut dir = TenantDirectory::default();
+        dir.set_weight(TenantId(0), 2);
+        let mut d = WeightedFair::new();
+        // Tenant 0: jobs 0,1,2; tenant 1: jobs 10,11.
+        for i in [0u32, 1, 2] {
+            d.submit(JobId(i), TenantId(0));
+        }
+        for i in [10u32, 11] {
+            d.submit(JobId(i), TenantId(1));
+        }
+        // Everything fits: weight-2 tenant places twice, then the turn
+        // rotates; within one round all five jobs land.
+        let placed = round(&mut d, &dir, &|id| TenantId(if id.0 < 10 { 0 } else { 1 }), |_| {
+            AdmitOutcome::Placed
+        });
+        assert_eq!(
+            placed,
+            vec![JobId(0), JobId(1), JobId(10), JobId(2), JobId(11)],
+            "2 from tenant 0, turn passes, interleave"
+        );
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn weighted_fair_skips_blocked_tenant_within_round() {
+        let dir = TenantDirectory::default();
+        let mut d = WeightedFair::new();
+        d.submit(JobId(0), TenantId(0)); // huge, never fits
+        d.submit(JobId(10), TenantId(1));
+        d.submit(JobId(11), TenantId(1));
+        let mut attempts = Vec::new();
+        let placed = round(&mut d, &dir, &|id| TenantId(if id.0 < 10 { 0 } else { 1 }), |id| {
+            attempts.push(id.0);
+            if id.0 < 10 { AdmitOutcome::NoFit } else { AdmitOutcome::Placed }
+        });
+        // Tenant 0's blocked head does not stall tenant 1, and it is not
+        // re-attempted after placements (its verdict cannot flip
+        // mid-round — placements only consume capacity).
+        assert_eq!(placed, vec![JobId(10), JobId(11)]);
+        assert_eq!(attempts, vec![0, 10, 11], "blocked head attempted exactly once");
+        assert_eq!(d.len(), 1, "blocked job stays queued");
+    }
+
+    #[test]
+    fn weighted_fair_attempts_every_nonempty_tenant_each_round() {
+        let dir = TenantDirectory::default();
+        let mut d = WeightedFair::new();
+        for t in 0..5u32 {
+            d.submit(JobId(100 + t), TenantId(t));
+        }
+        let mut attempted = Vec::new();
+        let placed = round(&mut d, &dir, &|id| TenantId(id.0 - 100), |id| {
+            attempted.push(id.0 - 100);
+            AdmitOutcome::NoFit
+        });
+        assert!(placed.is_empty());
+        attempted.sort();
+        assert_eq!(attempted, vec![0, 1, 2, 3, 4], "every tenant's head attempted");
+    }
+
+    #[test]
+    fn weighted_fair_empty_round_leaves_turn_untouched() {
+        // The frozen-state contract: a placement-free round must not move
+        // persistent state, so replaying it yields the same sequence.
+        let dir = TenantDirectory::default();
+        let mut d = WeightedFair::new();
+        d.submit(JobId(0), TenantId(0));
+        d.submit(JobId(1), TenantId(1));
+        let first: Vec<JobId> = {
+            let mut seen = Vec::new();
+            round(&mut d, &dir, &|id| TenantId(id.0), |id| {
+                seen.push(id);
+                AdmitOutcome::NoFit
+            });
+            seen
+        };
+        let second: Vec<JobId> = {
+            let mut seen = Vec::new();
+            round(&mut d, &dir, &|id| TenantId(id.0), |id| {
+                seen.push(id);
+                AdmitOutcome::NoFit
+            });
+            seen
+        };
+        assert_eq!(first, second, "identical candidate sequence on frozen state");
+    }
+
+    #[test]
+    fn quota_gate_skips_over_quota_and_backfills() {
+        let dir = TenantDirectory::default();
+        let mut d = QuotaGate::new(2);
+        for i in 0..5 {
+            d.submit(JobId(i), TenantId(i));
+        }
+        // Job 0 over quota (skipped, free), job 1 doesn't fit (one miss),
+        // job 2 places (scan continues — the failed prefix cannot flip),
+        // job 3 misses → window (2) exhausted → round over; job 4 is
+        // never attempted.
+        let mut attempts = Vec::new();
+        let placed = round(&mut d, &dir, &|id| TenantId(id.0), |id| {
+            attempts.push(id.0);
+            match id.0 {
+                0 => AdmitOutcome::OverQuota,
+                2 => AdmitOutcome::Placed,
+                _ => AdmitOutcome::NoFit,
+            }
+        });
+        assert_eq!(placed, vec![JobId(2)]);
+        assert_eq!(attempts, vec![0, 1, 2, 3], "skip, miss, place, miss, window out");
+        assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn quota_gate_round_ends_at_queue_end() {
+        let dir = TenantDirectory::default();
+        let mut d = QuotaGate::new(100);
+        d.submit(JobId(0), TenantId(0));
+        d.submit(JobId(1), TenantId(1));
+        let placed = round(&mut d, &dir, &|id| TenantId(id.0), |_| AdmitOutcome::OverQuota);
+        assert!(placed.is_empty());
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn disciplines_share_bookkeeping_semantics() {
+        for kind in [
+            DisciplineKind::Fifo,
+            DisciplineKind::WeightedFair,
+            DisciplineKind::QuotaGate { backfill: 4 },
+        ] {
+            let mut d = build_discipline(&kind);
+            d.submit(JobId(1), TenantId(0));
+            d.submit(JobId(2), TenantId(1));
+            d.reinsert_front(JobId(3), TenantId(0));
+            assert_eq!(d.len(), 3, "{kind:?}");
+            assert!(d.contains(JobId(3)));
+            let mut seen = Vec::new();
+            d.for_each(&mut |id| seen.push(id));
+            assert_eq!(seen.len(), 3);
+            assert!(d.remove(JobId(2)));
+            assert!(!d.remove(JobId(2)));
+            assert_eq!(d.len(), 2);
+            assert!(!d.is_empty());
+        }
+    }
+}

@@ -40,15 +40,15 @@
 //! events in memory for tests and the live report.
 //!
 //! Within one step, event order is normalized: `Submitted` (arrival
-//! order), then `Finished`, `Preempted`, `Vacated`, `Started`/`Resumed`
-//! (each in [`TickStats`] order). Command-derived events precede the step
-//! they were applied before. The per-tick interleaving inside the
+//! order), then `Finished`, `Preempted`, `Vacated`, `Started`/`Resumed`,
+//! and finally `AdmissionSkipped` (each in [`TickStats`] order).
+//! Command-derived events precede the step they were applied before. The per-tick interleaving inside the
 //! scheduler is not observable through [`TickStats`]; the normalized
 //! order is part of the protocol contract and what the JSONL golden files
 //! pin.
 
 use crate::cluster::{ClusterSpec, NodeAvailability, NodeId};
-use crate::job::{Job, JobClass, JobId, JobSpec};
+use crate::job::{Job, JobClass, JobId, JobSpec, TenantId};
 use crate::job_table::JobTable;
 use crate::metrics::StreamingMetrics;
 use crate::resources::ResourceVec;
@@ -112,6 +112,26 @@ pub enum SchedulerCommand {
         node: NodeId,
         /// Its new capacity vector.
         capacity: ResourceVec,
+    },
+    /// Cap a tenant's occupied Size (Eq. 1 `Size` of its Running +
+    /// Draining demand against the cluster's construction-time total
+    /// capacity). Checked before admission by the queue disciplines'
+    /// quota gate; `0` is a full stop. Rejected for non-finite or
+    /// negative sizes.
+    SetQuota {
+        /// The tenant capped.
+        tenant: TenantId,
+        /// The occupied-Size cap.
+        size: f64,
+    },
+    /// Set a tenant's weighted-fair share (how many consecutive
+    /// admissions its turn is worth under the `WeightedFair` discipline).
+    /// Rejected for weight 0.
+    SetWeight {
+        /// The tenant whose share changes.
+        tenant: TenantId,
+        /// The new share (≥ 1).
+        weight: u32,
     },
 }
 
@@ -223,6 +243,35 @@ pub enum SchedulerEvent {
         /// Its new capacity.
         capacity: ResourceVec,
     },
+    /// A tenant's occupied-Size quota changed.
+    QuotaChanged {
+        /// Minute of the event.
+        at: Minutes,
+        /// The tenant capped.
+        tenant: TenantId,
+        /// Its new occupied-Size cap.
+        size: f64,
+    },
+    /// A tenant's weighted-fair share changed.
+    WeightChanged {
+        /// Minute of the event.
+        at: Minutes,
+        /// The tenant whose share changed.
+        tenant: TenantId,
+        /// Its new share.
+        weight: u32,
+    },
+    /// A queued job was newly skipped by quota gating (one event per
+    /// transition into the skipped state, not per round — the stream is
+    /// identical under both simulator drive modes).
+    AdmissionSkipped {
+        /// Minute of the event.
+        at: Minutes,
+        /// The skipped job.
+        job: JobId,
+        /// Its over-quota tenant.
+        tenant: TenantId,
+    },
     /// A command could not be applied; the run continues.
     CommandRejected {
         /// Minute of the event.
@@ -248,6 +297,9 @@ impl SchedulerEvent {
             | SchedulerEvent::NodeRestored { at, .. }
             | SchedulerEvent::NodeDraining { at, .. }
             | SchedulerEvent::NodeResized { at, .. }
+            | SchedulerEvent::QuotaChanged { at, .. }
+            | SchedulerEvent::WeightChanged { at, .. }
+            | SchedulerEvent::AdmissionSkipped { at, .. }
             | SchedulerEvent::CommandRejected { at, .. } => *at,
         }
     }
@@ -267,6 +319,9 @@ impl SchedulerEvent {
             SchedulerEvent::NodeRestored { .. } => "node_restored",
             SchedulerEvent::NodeDraining { .. } => "node_draining",
             SchedulerEvent::NodeResized { .. } => "node_resized",
+            SchedulerEvent::QuotaChanged { .. } => "quota_changed",
+            SchedulerEvent::WeightChanged { .. } => "weight_changed",
+            SchedulerEvent::AdmissionSkipped { .. } => "admission_skipped",
             SchedulerEvent::CommandRejected { .. } => "command_rejected",
         }
     }
@@ -281,7 +336,8 @@ impl SchedulerEvent {
             | SchedulerEvent::Vacated { job, .. }
             | SchedulerEvent::Finished { job, .. }
             | SchedulerEvent::Cancelled { job, .. }
-            | SchedulerEvent::Reclassified { job, .. } => Some(*job),
+            | SchedulerEvent::Reclassified { job, .. }
+            | SchedulerEvent::AdmissionSkipped { job, .. } => Some(*job),
             _ => None,
         }
     }
@@ -309,6 +365,7 @@ impl SchedulerEvent {
             SchedulerEvent::Finished { job, record, .. }
             | SchedulerEvent::Cancelled { job, record, .. } => {
                 fields.push(("job", Json::num(job.0 as f64)));
+                fields.push(("tenant", Json::num(record.tenant.0 as f64)));
                 fields.push(("class", Json::str(record.class.as_str())));
                 fields.push(("preemptions", Json::num(record.preemptions as f64)));
                 fields.push(("evictions", Json::num(record.evictions as f64)));
@@ -337,6 +394,18 @@ impl SchedulerEvent {
                 fields.push(("cpu", Json::num(capacity.cpu)));
                 fields.push(("ram_gb", Json::num(capacity.ram_gb)));
                 fields.push(("gpu", Json::num(capacity.gpu)));
+            }
+            SchedulerEvent::QuotaChanged { tenant, size, .. } => {
+                fields.push(("tenant", Json::num(tenant.0 as f64)));
+                fields.push(("size", Json::num(*size)));
+            }
+            SchedulerEvent::WeightChanged { tenant, weight, .. } => {
+                fields.push(("tenant", Json::num(tenant.0 as f64)));
+                fields.push(("weight", Json::num(*weight as f64)));
+            }
+            SchedulerEvent::AdmissionSkipped { job, tenant, .. } => {
+                fields.push(("job", Json::num(job.0 as f64)));
+                fields.push(("tenant", Json::num(tenant.0 as f64)));
             }
             SchedulerEvent::CommandRejected { reason, .. } => {
                 fields.push(("reason", Json::str(reason)));
@@ -667,6 +736,25 @@ impl ClusterController {
                     Err(e) => self.reject(now, format!("resize: {e}")),
                 }
             }
+            SchedulerCommand::SetQuota { tenant, size } => {
+                if !size.is_finite() || size < 0.0 {
+                    self.reject(
+                        now,
+                        format!("set_quota {tenant}: size must be a finite non-negative number"),
+                    );
+                    return;
+                }
+                self.sched.set_quota(tenant, size);
+                self.emit(&SchedulerEvent::QuotaChanged { at: now, tenant, size });
+            }
+            SchedulerCommand::SetWeight { tenant, weight } => {
+                if weight == 0 {
+                    self.reject(now, format!("set_weight {tenant}: weight must be at least 1"));
+                    return;
+                }
+                self.sched.set_weight(tenant, weight);
+                self.emit(&SchedulerEvent::WeightChanged { at: now, tenant, weight });
+            }
         }
     }
 
@@ -719,6 +807,9 @@ impl ClusterController {
                 SchedulerEvent::Resumed { at: now, job: *id, node }
             };
             self.emit(&ev);
+        }
+        for (id, tenant) in &tick.skipped {
+            self.emit(&SchedulerEvent::AdmissionSkipped { at: now, job: *id, tenant: *tenant });
         }
 
         StepOutcome {
@@ -825,7 +916,7 @@ mod tests {
         assert_eq!(out.cancelled.len(), 1);
         assert!(out.cancelled[0].cancelled);
         assert_eq!(out.tick.started, vec![JobId(1)]);
-        assert_eq!(ctl.metrics().cancelled_be, 1);
+        assert_eq!(ctl.metrics().cancelled.be, 1);
         assert_eq!(ctl.metrics().jobs_seen, 0, "cancelled jobs stay out of the stats pool");
         assert!(log.events().iter().any(|e| e.kind() == "cancelled"));
         // The record is excluded from slowdown percentiles by construction:
@@ -881,6 +972,57 @@ mod tests {
         ctl.command(1, SchedulerCommand::Resize { node: NodeId(0), capacity: bigger });
         assert_eq!(log.events().last().unwrap().kind(), "node_resized");
         ctl.step(1);
+    }
+
+    #[test]
+    fn quota_and_weight_commands_emit_events_and_gate_admission() {
+        use crate::sched::admission::DisciplineKind;
+        let mut cfg = SchedConfig::new(PolicyKind::Fifo);
+        cfg.discipline = DisciplineKind::WeightedFair;
+        let mut ctl = ClusterController::new(&ClusterSpec::tiny(1), cfg);
+        ctl.sched.paranoid = true;
+        let log = SharedEventLog::new();
+        ctl.subscribe(Box::new(log.clone()));
+
+        // Full-stop quota on tenant 1 before its job arrives; a weight
+        // change for good measure; and two invalid forms.
+        ctl.command(0, SchedulerCommand::SetQuota { tenant: TenantId(1), size: 0.0 });
+        ctl.command(0, SchedulerCommand::SetWeight { tenant: TenantId(0), weight: 2 });
+        ctl.command(0, SchedulerCommand::SetQuota { tenant: TenantId(1), size: -1.0 });
+        ctl.command(0, SchedulerCommand::SetWeight { tenant: TenantId(1), weight: 0 });
+
+        ctl.stage_arrival(spec(0, JobClass::Be, 0, 2).with_tenant(TenantId(0)));
+        ctl.stage_arrival(spec(1, JobClass::Be, 0, 2).with_tenant(TenantId(1)));
+        let out = ctl.step(0);
+        assert_eq!(out.tick.started, vec![JobId(0)], "tenant 0 runs");
+        assert_eq!(out.tick.skipped, vec![(JobId(1), TenantId(1))], "tenant 1 gated");
+        let kinds: Vec<&str> = log.events().iter().map(|e| e.kind()).collect();
+        assert!(kinds.contains(&"quota_changed"));
+        assert!(kinds.contains(&"weight_changed"));
+        assert!(kinds.contains(&"admission_skipped"));
+        assert_eq!(kinds.iter().filter(|k| **k == "command_rejected").count(), 2);
+
+        // Steady-state skips are not re-reported (fresh transitions only).
+        let before = log.events().len();
+        ctl.step(1);
+        let re_skips = log.events()[before..]
+            .iter()
+            .filter(|e| e.kind() == "admission_skipped")
+            .count();
+        assert_eq!(re_skips, 0, "a head that stays gated is reported once");
+
+        // Lifting the quota admits the gated job.
+        ctl.command(2, SchedulerCommand::SetQuota { tenant: TenantId(1), size: 100.0 });
+        let out = ctl.step(2);
+        assert_eq!(out.tick.started, vec![JobId(1)]);
+        let ev = log
+            .events()
+            .iter()
+            .find(|e| e.kind() == "admission_skipped")
+            .unwrap()
+            .to_json()
+            .to_string();
+        assert!(ev.contains("\"tenant\":1"), "{ev}");
     }
 
     #[test]

@@ -1,21 +1,26 @@
-//! The scheduler: FIFO admission core, the event clock, pluggable
-//! preemption policies (§3 of the paper), and the control-plane protocol.
+//! The scheduler: tenant-aware admission, the FIFO core, the event clock,
+//! pluggable preemption policies (§3 of the paper), and the control-plane
+//! protocol.
 //!
-//! Four layers: [`policy`] decides *whom to evict* (behind the
-//! [`PreemptionPolicy`](policy::PreemptionPolicy) trait), [`clock`] knows
-//! *when anything happens next* (min-heaps, no job-table rescans), the
-//! [`core`] ties them to the cluster's incremental capacity index, and
-//! [`control`] is the public face: a typed
+//! Five layers: [`admission`] decides *which queued job to try next*
+//! (behind the object-safe [`QueueDiscipline`](admission::QueueDiscipline)
+//! trait — FIFO, weighted-fair, quota-gated), [`policy`] decides *whom to
+//! evict* (behind the [`PreemptionPolicy`](policy::PreemptionPolicy)
+//! trait), [`clock`] knows *when anything happens next* (min-heaps, no
+//! job-table rescans), the [`core`] ties them to the cluster's incremental
+//! capacity index, and [`control`] is the public face: a typed
 //! [`SchedulerCommand`](control::SchedulerCommand) /
 //! [`SchedulerEvent`](control::SchedulerEvent) protocol consumed by the
 //! [`ClusterController`](control::ClusterController) facade that both the
 //! simulator and the live executor drive.
 
+pub mod admission;
 pub mod clock;
 pub mod control;
 pub mod core;
 pub mod policy;
 
+pub use admission::{DisciplineKind, QueueDiscipline, TenantDirectory};
 pub use clock::EventClock;
 pub use control::{
     ClusterController, EventSubscriber, JsonlErrorFlag, JsonlEventLog, SchedulerCommand,

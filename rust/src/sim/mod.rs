@@ -47,9 +47,12 @@
 pub mod scenario;
 
 use crate::cluster::{ClusterSpec, Placement};
-use crate::job::{Job, JobClass, JobId, JobState};
-use crate::metrics::{IntervalsReport, PreemptionReport, SlowdownReport, StreamingMetrics};
+use crate::job::{Job, JobClass, JobId, JobState, TenantId};
+use crate::metrics::{
+    tenant_table, IntervalsReport, PreemptionReport, SlowdownReport, StreamingMetrics,
+};
 use crate::resources::ResourceVec;
+use crate::sched::admission::DisciplineKind;
 use crate::sched::control::{ClusterController, EventSubscriber};
 use crate::sched::policy::PolicyKind;
 use crate::sched::{SchedConfig, SchedStats};
@@ -79,6 +82,13 @@ pub struct SimConfig {
     pub cluster: ClusterSpec,
     /// Scheduling/preemption policy under test.
     pub policy: PolicyKind,
+    /// Admission queue discipline for the shared/BE queue
+    /// ([`DisciplineKind::Fifo`] by default — byte-identical to the
+    /// pre-admission-layer simulator).
+    pub discipline: DisciplineKind,
+    /// Occupied-Size quota applied to every tenant with no explicit
+    /// `SetQuota` entry (`None` = unlimited, the default).
+    pub default_quota: Option<f64>,
     /// Node-selection rule for placements.
     pub placement: Placement,
     /// Whether draining jobs keep making progress (§2 ablation).
@@ -122,6 +132,8 @@ impl SimConfig {
         SimConfig {
             cluster,
             policy,
+            discipline: DisciplineKind::Fifo,
+            default_quota: None,
             placement: Placement::BestFit,
             progress_during_grace: false,
             seed: 0x5EED,
@@ -169,6 +181,9 @@ pub struct JobRecord {
     /// `finished_at` is `None` and the job is excluded from slowdown,
     /// interval, and preemption statistics).
     pub cancelled: bool,
+    /// The tenant the job belonged to (admission-layer identity; keys the
+    /// per-tenant metrics map).
+    pub tenant: TenantId,
 }
 
 impl JobRecord {
@@ -191,6 +206,7 @@ impl JobRecord {
             resched_intervals: j.resched_intervals.clone(),
             slowdown: j.slowdown(),
             cancelled: j.state == JobState::Cancelled,
+            tenant: j.spec.tenant,
         }
     }
 }
@@ -284,7 +300,7 @@ impl SimResult {
     /// Control-plane cancellations `(te, be)` — always sourced from the
     /// metrics sink, which counts them exactly in both record modes.
     pub fn cancelled(&self) -> (u64, u64) {
-        (self.metrics.cancelled_te, self.metrics.cancelled_be)
+        (self.metrics.cancelled.te, self.metrics.cancelled.be)
     }
 
     /// Slowdown percentiles: exact (from records) when `record_jobs` was
@@ -340,6 +356,20 @@ impl SimResult {
         t.to_text()
     }
 
+    /// Per-tenant fairness table (sketch-backed; one row per tenant seen).
+    pub fn tenant_table(&self) -> String {
+        tenant_table(
+            &format!("{} — per-tenant slowdown percentiles", self.policy.name()),
+            &self.metrics.tenants,
+        )
+        .to_text()
+    }
+
+    /// Number of distinct tenants observed by the run.
+    pub fn tenants_seen(&self) -> usize {
+        self.metrics.tenants.len()
+    }
+
     /// Machine-readable dump for plotting scripts.
     pub fn to_json(&self) -> Json {
         let r = self.slowdown_report();
@@ -351,11 +381,12 @@ impl SimResult {
             ("unfinished", Json::num(self.unfinished as f64)),
             ("jobs_seen", Json::num(self.metrics.jobs_seen as f64)),
             ("peak_live", Json::num(self.peak_live as f64)),
+            ("tenants", self.metrics.tenants_json()),
             (
                 "cancelled",
                 Json::obj(vec![
-                    ("te", Json::num(self.metrics.cancelled_te as f64)),
-                    ("be", Json::num(self.metrics.cancelled_be as f64)),
+                    ("te", Json::num(self.metrics.cancelled.te as f64)),
+                    ("be", Json::num(self.metrics.cancelled.be as f64)),
                 ]),
             ),
             (
@@ -436,6 +467,8 @@ impl Simulator {
     /// sink) for a run.
     fn setup(&self) -> ClusterController {
         let mut sched_cfg = SchedConfig::new(self.cfg.policy);
+        sched_cfg.discipline = self.cfg.discipline;
+        sched_cfg.default_quota = self.cfg.default_quota;
         sched_cfg.placement = self.cfg.placement;
         sched_cfg.progress_during_grace = self.cfg.progress_during_grace;
         sched_cfg.seed = self.cfg.seed;

@@ -40,10 +40,17 @@
 //!     {"at": 120, "cmd": "drain",     "node": 2},
 //!     {"at": 360, "cmd": "cancel",    "job": 17},
 //!     {"at": 90,  "cmd": "reclassify", "job": 5, "class": "TE"},
-//!     {"at": 45,  "cmd": "resize",    "node": 1, "cpu": 16, "ram_gb": 128, "gpu": 4}
+//!     {"at": 45,  "cmd": "resize",    "node": 1, "cpu": 16, "ram_gb": 128, "gpu": 4},
+//!     {"at": 180, "cmd": "set_quota",  "tenant": 2, "size": 0.25},
+//!     {"at": 200, "cmd": "set_weight", "tenant": 2, "weight": 4}
 //!   ]
 //! }
 //! ```
+//!
+//! `set_quota` caps the tenant's occupied Size (Eq. 1, against the
+//! cluster's total capacity; `0` is a full stop) and `set_weight` sets its
+//! weighted-fair share — the timed "quota squeeze" knobs of the tenant
+//! scenario family (see EXPERIMENTS.md).
 //!
 //! `submit` is deliberately not a scenario command: arrivals belong to the
 //! [`ArrivalSource`](crate::workload::source::ArrivalSource) (job ids must
@@ -164,6 +171,33 @@ impl ScenarioScript {
                 "node_down" => SchedulerCommand::NodeDown { node: node()? },
                 "node_up" => SchedulerCommand::NodeUp { node: node()? },
                 "drain" => SchedulerCommand::Drain { node: node()? },
+                "set_quota" => {
+                    let size = item.get("size").as_f64().with_context(|| {
+                        format!("command {i} (set_quota): missing number 'size'")
+                    })?;
+                    if !size.is_finite() || size < 0.0 {
+                        bail!("command {i} (set_quota): 'size' must be finite and non-negative");
+                    }
+                    SchedulerCommand::SetQuota {
+                        tenant: crate::job::TenantId(id32("tenant")?),
+                        size,
+                    }
+                }
+                "set_weight" => {
+                    let weight = item.get("weight").as_u64().with_context(|| {
+                        format!("command {i} (set_weight): missing integer 'weight'")
+                    })?;
+                    let weight = u32::try_from(weight).map_err(|_| {
+                        anyhow::anyhow!("command {i} (set_weight): 'weight' exceeds u32 range")
+                    })?;
+                    if weight == 0 {
+                        bail!("command {i} (set_weight): 'weight' must be at least 1");
+                    }
+                    SchedulerCommand::SetWeight {
+                        tenant: crate::job::TenantId(id32("tenant")?),
+                        weight,
+                    }
+                }
                 "resize" => {
                     let axis = |key: &str| -> Result<f64> {
                         item.get(key).as_f64().with_context(|| {
@@ -402,9 +436,33 @@ mod tests {
             r#"{"commands": [{"at": 5, "cmd": "resize", "node": 0, "cpu": 1}]}"#,
             r#"{"commands": [{"at": 5, "cmd": "cancel", "job": 4294967296}]}"#,
             r#"{"commands": {"at": 5, "cmd": "drain", "node": 0}}"#,
+            r#"{"commands": [{"at": 5, "cmd": "set_quota", "tenant": 0}]}"#,
+            r#"{"commands": [{"at": 5, "cmd": "set_quota", "tenant": 0, "size": -1}]}"#,
+            r#"{"commands": [{"at": 5, "cmd": "set_weight", "tenant": 0, "weight": 0}]}"#,
+            r#"{"commands": [{"at": 5, "cmd": "set_weight", "weight": 2}]}"#,
         ] {
             assert!(ScenarioScript::parse(bad).is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn parse_tenant_commands() {
+        use crate::job::TenantId;
+        let s = ScenarioScript::parse(
+            r#"{"commands": [
+                {"at": 180, "cmd": "set_quota", "tenant": 2, "size": 0.25},
+                {"at": 200, "cmd": "set_weight", "tenant": 2, "weight": 4}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(s.commands.contains(&(
+            180,
+            SchedulerCommand::SetQuota { tenant: TenantId(2), size: 0.25 }
+        )));
+        assert!(s.commands.contains(&(
+            200,
+            SchedulerCommand::SetWeight { tenant: TenantId(2), weight: 4 }
+        )));
     }
 
     #[test]

@@ -37,7 +37,9 @@ use crate::job::JobClass;
 use crate::metrics::{
     slowdown_table, Percentiles, PreemptionReport, SlowdownReport, StreamingMetrics,
 };
+use crate::sched::admission::DisciplineKind;
 use crate::sched::policy::PolicyKind;
+use crate::workload::source::TenantAssigner;
 use crate::sim::{SimConfig, SimEngine, Simulator};
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -88,6 +90,14 @@ pub struct SweepSpec {
     pub engine: SimEngine,
     /// §2 ablation knob, forwarded to every cell.
     pub progress_during_grace: bool,
+    /// Admission discipline for every cell (fairness-vs-latency sweeps
+    /// put `weighted_fair` here; default `fifo`).
+    pub discipline: DisciplineKind,
+    /// Tenants assigned round-robin over each workload (1 = the
+    /// single-tenant pre-refactor behaviour).
+    pub tenants: u32,
+    /// Occupied-Size quota applied to every tenant in every cell.
+    pub default_quota: Option<f64>,
     /// Worker threads; `0` = `FITGPP_THREADS` env var, else all cores.
     pub threads: usize,
 }
@@ -105,6 +115,9 @@ impl SweepSpec {
             target_load: 2.0,
             engine: SimEngine::default(),
             progress_during_grace: false,
+            discipline: DisciplineKind::Fifo,
+            tenants: 1,
+            default_quota: None,
             threads: 0,
         }
     }
@@ -183,6 +196,25 @@ impl SweepSpec {
         self
     }
 
+    /// Set the admission discipline for every cell.
+    pub fn with_discipline(mut self, discipline: DisciplineKind) -> Self {
+        self.discipline = discipline;
+        self
+    }
+
+    /// Assign `n` tenants round-robin over every workload (≥ 1).
+    pub fn with_tenants(mut self, n: u32) -> Self {
+        assert!(n >= 1);
+        self.tenants = n;
+        self
+    }
+
+    /// Apply an occupied-Size quota to every tenant in every cell.
+    pub fn with_default_quota(mut self, quota: Option<f64>) -> Self {
+        self.default_quota = quota;
+        self
+    }
+
     /// Pin the worker-thread count (`1` = serial reference order).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -232,7 +264,7 @@ impl SweepSpec {
     }
 
     /// Generate the workload for one `(seed, te_ratio, gp_scale)`
-    /// coordinate.
+    /// coordinate (tenants assigned round-robin when `tenants > 1`).
     pub fn build_workload(&self, seed: u64, te_ratio: f64, gp_scale: f64) -> Workload {
         SyntheticWorkload::paper_section_4_2(seed)
             .with_cluster(self.cluster.clone())
@@ -240,6 +272,7 @@ impl SweepSpec {
             .with_te_fraction(te_ratio)
             .with_target_load(self.target_load)
             .with_gp_scale(gp_scale)
+            .with_tenant_assigner(TenantAssigner::round_robin(self.tenants))
             .generate()
     }
 
@@ -295,6 +328,8 @@ impl SweepSpec {
         cfg.seed = cell.seed;
         cfg.engine = self.engine;
         cfg.progress_during_grace = self.progress_during_grace;
+        cfg.discipline = self.discipline;
+        cfg.default_quota = self.default_quota;
         run_sim_cell(cell, cfg, workload)
     }
 }
@@ -421,10 +456,7 @@ impl SweepResult {
         class: JobClass,
     ) -> Percentiles {
         let pooled = self.pooled_metrics_where(keep);
-        match class {
-            JobClass::Te => Percentiles::from_sketch(&pooled.te_slowdown),
-            JobClass::Be => Percentiles::from_sketch(&pooled.be_slowdown),
-        }
+        Percentiles::from_sketch(pooled.slowdown.get(class))
     }
 
     /// Percentiles of the cross-seed pool for one policy and class (the
@@ -703,9 +735,9 @@ mod tests {
             .cells
             .iter()
             .filter(|c| c.cell.policy == PolicyKind::Fifo)
-            .map(|c| c.metrics.be_slowdown.count())
+            .map(|c| c.metrics.slowdown.be.count())
             .sum();
-        assert_eq!(pooled.be_slowdown.count(), per_cell);
+        assert_eq!(pooled.slowdown.be.count(), per_cell);
         assert!(per_cell > 0);
         let p = res.pooled_percentiles(PolicyKind::Fifo, JobClass::Be);
         assert!(p.p50 >= 1.0 && p.p50 <= p.p95 && p.p95 <= p.p99, "{p:?}");
@@ -729,6 +761,24 @@ mod tests {
             );
             assert_eq!(c.metrics.jobs_seen, 96);
         }
+    }
+
+    #[test]
+    fn multi_tenant_weighted_fair_sweep_pools_per_tenant() {
+        let res = tiny_spec()
+            .with_discipline(DisciplineKind::WeightedFair)
+            .with_tenants(4)
+            .with_threads(2)
+            .run();
+        for c in &res.cells {
+            assert_eq!(c.metrics.tenants.len(), 4, "4 tenants observed per cell");
+            assert_eq!(c.unfinished, 0, "weighted-fair cells still drain");
+        }
+        // Cross-seed pooling merges the tenant maps keywise.
+        let pooled = res.pooled_metrics_where(|c| c.policy == PolicyKind::Fifo);
+        assert_eq!(pooled.tenants.len(), 4);
+        let per_tenant_total: u64 = pooled.tenants.values().map(|m| m.jobs_seen()).sum();
+        assert_eq!(per_tenant_total, pooled.jobs_seen);
     }
 
     #[test]

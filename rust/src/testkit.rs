@@ -101,6 +101,7 @@ pub mod gen {
             submit: int(rng, 0, span),
             exec_time: exec,
             grace_period: int(rng, 0, 20),
+            tenant: crate::job::TenantId::DEFAULT,
         }
     }
 

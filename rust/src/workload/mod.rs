@@ -84,6 +84,24 @@ impl Workload {
     pub fn source(&self) -> WorkloadSource<'_> {
         WorkloadSource::new(self)
     }
+
+    /// Re-assign tenants with `assigner` (by the dense id, which equals
+    /// the submission sequence number). Pure metadata: arrival times,
+    /// demands, and ids are untouched, so a tenant-tagged workload runs
+    /// byte-identically under the `fifo` discipline.
+    pub fn assign_tenants(&mut self, assigner: &source::TenantAssigner) {
+        for j in &mut self.jobs {
+            j.tenant = assigner.assign(j.id.0, j.submit);
+        }
+    }
+
+    /// Distinct tenants present in the workload.
+    pub fn tenant_count(&self) -> usize {
+        let mut seen: Vec<u32> = self.jobs.iter().map(|j| j.tenant.0).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len()
+    }
 }
 
 #[cfg(test)]

@@ -40,13 +40,88 @@
 //! [`done`]: ArrivalSource::done
 
 use super::Workload;
-use crate::job::{JobClass, JobId, JobSpec};
+use crate::job::{JobClass, JobId, JobSpec, TenantId};
 use crate::resources::ResourceVec;
 use crate::stats::dist::{Exponential, Sample, TruncatedNormal};
 use crate::stats::rng::Pcg64;
 use crate::Minutes;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+/// Deterministic tenant-assignment rule shared by the open (feed-forward)
+/// sources: tenants are assigned round-robin by job sequence number, with
+/// an optional *burst window* during which every arrival belongs to one
+/// designated tenant — the "tenant storm" scenario family (one tenant
+/// floods the queue on a schedule; the others ride out the burst).
+///
+/// Assignment is pure metadata: it never changes arrival times, demands,
+/// or RNG draws, so a tenant-tagged workload is byte-identical to the
+/// untagged one under the `fifo` discipline (pinned by
+/// `rust/tests/streaming_equivalence.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantAssigner {
+    /// Number of tenants (≥ 1). One tenant ⇒ everything is
+    /// [`TenantId::DEFAULT`].
+    pub tenants: u32,
+    /// Optional burst rule.
+    pub burst: Option<TenantBurst>,
+}
+
+/// A periodic burst window: while `submit % period < len`, every arrival
+/// belongs to `tenant`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantBurst {
+    /// The bursting tenant.
+    pub tenant: u32,
+    /// Window period in minutes (> 0).
+    pub period: Minutes,
+    /// Window length in minutes (≤ period).
+    pub len: Minutes,
+}
+
+impl TenantAssigner {
+    /// Everything on the default tenant (the pre-tenant behaviour).
+    pub fn single() -> Self {
+        TenantAssigner { tenants: 1, burst: None }
+    }
+
+    /// Round-robin over `n` tenants by job sequence number (`n` ≥ 1).
+    pub fn round_robin(n: u32) -> Self {
+        TenantAssigner { tenants: n.max(1), burst: None }
+    }
+
+    /// Add a periodic burst window for `tenant` (must be one of the
+    /// `0..tenants` ids — a typo'd out-of-range tenant would otherwise
+    /// silently storm some other tenant).
+    pub fn with_burst(mut self, tenant: u32, period: Minutes, len: Minutes) -> Self {
+        assert!(period > 0, "burst period must be positive");
+        assert!(
+            tenant < self.tenants.max(1),
+            "burst tenant {tenant} out of range (tenants: {})",
+            self.tenants
+        );
+        self.burst = Some(TenantBurst { tenant, period, len: len.min(period) });
+        self
+    }
+
+    /// The tenant for the job with sequence number `seq` submitting at
+    /// `submit`.
+    pub fn assign(&self, seq: u32, submit: Minutes) -> TenantId {
+        let n = self.tenants.max(1);
+        if let Some(b) = self.burst {
+            if submit % b.period < b.len {
+                return TenantId(b.tenant % n);
+            }
+        }
+        TenantId(seq % n)
+    }
+}
+
+impl Default for TenantAssigner {
+    fn default() -> Self {
+        TenantAssigner::single()
+    }
+}
 
 /// A workload yielded one job at a time, in submission order. See the
 /// module docs for the contract.
@@ -143,6 +218,10 @@ pub struct ClosedLoopParams {
     /// Per-job demands are capped at this vector so every job fits some
     /// node.
     pub node_cap: ResourceVec,
+    /// Tenants the users map onto (`user % tenants`; 1 = single-tenant).
+    /// Closed loops assign by *user*, not by job sequence — a user's whole
+    /// trial history belongs to one tenant, the natural "team" mapping.
+    pub tenants: u32,
 }
 
 impl ClosedLoopParams {
@@ -156,7 +235,14 @@ impl ClosedLoopParams {
             think_mean: 10.0,
             ramp: 60,
             node_cap: ResourceVec::pfn_node(),
+            tenants: 1,
         }
+    }
+
+    /// Map users onto `n` tenants (`user % n`).
+    pub fn with_tenants(mut self, n: u32) -> Self {
+        self.tenants = n.max(1);
+        self
     }
 }
 
@@ -262,6 +348,7 @@ impl ArrivalSource for ClosedLoopSource {
             submit: at,
             exec_time: exec,
             grace_period: gp,
+            tenant: TenantId(user % self.params.tenants.max(1)),
         })
     }
 
@@ -352,6 +439,31 @@ mod tests {
         src.on_job_finished(JobId(3), 140);
         assert!(src.done(), "all trials submitted and finished");
         assert_eq!(src.next_job(), None);
+    }
+
+    #[test]
+    fn tenant_assigner_round_robin_and_burst() {
+        let a = TenantAssigner::round_robin(3);
+        assert_eq!(a.assign(0, 10), TenantId(0));
+        assert_eq!(a.assign(4, 10), TenantId(1));
+        assert_eq!(TenantAssigner::single().assign(7, 99), TenantId::DEFAULT);
+        // Burst window: minutes [0, 30) of every 120 belong to tenant 2.
+        let b = TenantAssigner::round_robin(3).with_burst(2, 120, 30);
+        assert_eq!(b.assign(0, 10), TenantId(2), "inside the window");
+        assert_eq!(b.assign(0, 30), TenantId(0), "outside: round-robin");
+        assert_eq!(b.assign(1, 125), TenantId(2), "window repeats");
+    }
+
+    #[test]
+    fn closed_loop_maps_users_to_tenants() {
+        let mut src = ClosedLoopSource::new(ClosedLoopParams::demo(4, 1).with_tenants(2), 3);
+        let mut tenants = Vec::new();
+        while let Some(s) = src.next_job() {
+            tenants.push(s.tenant.0);
+        }
+        assert_eq!(tenants.len(), 4);
+        assert!(tenants.iter().any(|t| *t == 0) && tenants.iter().any(|t| *t == 1));
+        assert!(tenants.iter().all(|t| *t < 2));
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! target. The resulting submission times are frozen into the workload,
 //! and every policy replays the identical sequence.
 
-use super::source::ArrivalSource;
+use super::source::{ArrivalSource, TenantAssigner};
 use super::Workload;
 use crate::cluster::ClusterSpec;
 use crate::job::{Job, JobClass, JobId, JobSpec};
@@ -57,6 +57,9 @@ pub struct SyntheticWorkload {
     /// Fraction of jobs that request zero GPUs (CPU-only preprocessing
     /// etc.; gives the GPU axis the bimodal shape of a real DL cluster).
     pub cpu_only_fraction: f64,
+    /// Tenant-assignment rule (single-tenant by default; pure metadata —
+    /// never changes arrival times or RNG draws).
+    pub tenants: TenantAssigner,
 }
 
 impl SyntheticWorkload {
@@ -93,6 +96,7 @@ impl SyntheticWorkload {
             // meaningful mass sits near zero — rewind-tolerant jobs).
             gp: TruncatedNormal::new(3.0, 4.0, 0.0, 20.0),
             cpu_only_fraction: 0.1,
+            tenants: TenantAssigner::single(),
         }
     }
 
@@ -126,6 +130,12 @@ impl SyntheticWorkload {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Set the tenant-assignment rule (round-robin, bursty tenant, …).
+    pub fn with_tenant_assigner(mut self, tenants: TenantAssigner) -> Self {
+        self.tenants = tenants;
         self
     }
 
@@ -246,6 +256,7 @@ impl SyntheticSource {
                 submit: self.now,
                 exec_time: exec,
                 grace_period: gp,
+                tenant: self.params.tenants.assign(id.0, self.now),
             };
             self.table.insert(Job::new(spec.clone()));
             // The arrival immediately counts toward outstanding demand.

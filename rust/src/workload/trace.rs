@@ -28,7 +28,7 @@
 //! row order (it cannot hold a seen-id set in O(1) memory), so the CSV id
 //! column is echo data on that path.
 
-use super::source::ArrivalSource;
+use super::source::{ArrivalSource, TenantAssigner};
 use super::Workload;
 use crate::job::{JobClass, JobId, JobSpec};
 use crate::resources::ResourceVec;
@@ -158,6 +158,7 @@ impl Trace {
                 exec_time: row.exec,
                 grace_period: row.grace,
                 demand: row.demand,
+                tenant: crate::job::TenantId::DEFAULT,
             });
         }
         Ok(Workload::new(jobs))
@@ -205,9 +206,17 @@ pub struct InstitutionSource {
     now_f: f64,
     burst_until: f64,
     pending: Option<JobSpec>,
+    assigner: TenantAssigner,
 }
 
 impl InstitutionSource {
+    /// Assign tenants with `assigner` (pure metadata — the job stream's
+    /// times, demands, and RNG draws are unchanged).
+    pub fn with_tenants(mut self, assigner: TenantAssigner) -> Self {
+        self.assigner = assigner;
+        self
+    }
+
     /// Build the stream. Deterministic per `(seed, num_jobs)` and
     /// prefix-stable: the first `k` jobs do not depend on `num_jobs`.
     pub fn new(seed: u64, num_jobs: usize) -> Self {
@@ -232,6 +241,7 @@ impl InstitutionSource {
             now_f: 0.0,
             burst_until: 0.0,
             pending: None,
+            assigner: TenantAssigner::single(),
         }
     }
 
@@ -272,13 +282,15 @@ impl InstitutionSource {
         // GP from its own RNG stream, so the demand draws stay aligned
         // whatever the GP distribution does.
         let gp = self.gp_dist.sample(&mut self.gp_rng).round().max(0.0) as u64;
+        let submit = self.now_f as u64;
         let spec = JobSpec {
             id: JobId(self.generated as u32),
             class,
-            submit: self.now_f as u64,
+            submit,
             exec_time: exec,
             grace_period: gp,
             demand,
+            tenant: self.assigner.assign(self.generated as u32, submit),
         };
         self.generated += 1;
         self.pending = Some(spec);
@@ -322,6 +334,7 @@ pub struct CsvStreamSource<R: BufRead> {
     lineno: usize,
     eof: bool,
     error: Option<anyhow::Error>,
+    assigner: TenantAssigner,
 }
 
 impl CsvStreamSource<std::io::BufReader<std::fs::File>> {
@@ -349,7 +362,16 @@ impl<R: BufRead> CsvStreamSource<R> {
             lineno: 1,
             eof: false,
             error: None,
+            assigner: TenantAssigner::single(),
         })
+    }
+
+    /// Assign tenants to streamed rows with `assigner` (the CSV format
+    /// carries no tenant column; replay-time rules — round-robin, bursty
+    /// tenant — are applied here).
+    pub fn with_tenants(mut self, assigner: TenantAssigner) -> Self {
+        self.assigner = assigner;
+        self
     }
 
     /// The error that aborted the stream, if any. Callers should check
@@ -408,6 +430,7 @@ impl<R: BufRead> CsvStreamSource<R> {
                         exec_time: row.exec,
                         grace_period: row.grace,
                         demand: row.demand,
+                        tenant: self.assigner.assign(id.0, row.submit),
                     });
                     return;
                 }

@@ -4,14 +4,21 @@
 
 use fitgpp::cluster::{Cluster, ClusterSpec, NodeId};
 use fitgpp::job::JobId;
+use fitgpp::job::TenantId;
 use fitgpp::queue::JobQueue;
 use fitgpp::resources::ResourceVec;
 use fitgpp::job::JobClass;
 use fitgpp::prop_assert;
+use fitgpp::sched::admission::{
+    build_discipline, AdmissionCtx, AdmitOutcome, DisciplineKind, QueueDiscipline, TenantDirectory,
+};
+use fitgpp::sched::control::SchedulerCommand;
 use fitgpp::sched::policy::PolicyKind;
-use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::sim::scenario::ScenarioScript;
+use fitgpp::sim::{SimConfig, SimEngine, Simulator};
 use fitgpp::stats::rng::Pcg64;
 use fitgpp::testkit::{check, gen, PropConfig};
+use fitgpp::workload::source::TenantAssigner;
 
 fn policies(rng: &mut Pcg64) -> PolicyKind {
     match rng.below(8) {
@@ -247,6 +254,142 @@ fn prop_slowdown_percentiles_monotone() {
             }
             prop_assert!(p.p50 <= p.p95 + 1e-9 && p.p95 <= p.p99 + 1e-9, "{p:?}");
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_fair_never_starves_a_nonempty_tenant() {
+    // Satellite property: under the weighted-fair discipline, every
+    // non-empty tenant's head is attempted at least once per admission
+    // round regardless of other tenants' backlogs or weights, and with
+    // any per-round admission capacity ≥ 1 every queued job is admitted
+    // within a bounded number of rounds (no starvation). Driven directly
+    // against the discipline protocol with an adversarial random
+    // capacity, so the bound is the discipline's own, not the cluster's.
+    check("wf-no-starvation", PropConfig::default(), |rng| {
+        let tenants = 2 + rng.below(6) as u32;
+        let mut dir = TenantDirectory::new(None);
+        for t in 0..tenants {
+            dir.set_weight(TenantId(t), 1 + rng.below(4) as u32);
+        }
+        let mut d = build_discipline(&DisciplineKind::WeightedFair);
+        let mut tenant_of: Vec<u32> = Vec::new();
+        for id in 0..(10 + rng.below(40)) as u32 {
+            let t = rng.below(tenants as u64) as u32;
+            d.submit(JobId(id), TenantId(t));
+            tenant_of.push(t);
+        }
+        let total = d.len();
+        let mut admitted = 0usize;
+        let mut rounds = 0usize;
+        while admitted < total {
+            rounds += 1;
+            prop_assert!(
+                rounds <= total + 1,
+                "{admitted}/{total} admitted after {rounds} rounds — starvation"
+            );
+            // Adversarial per-round capacity: 1..=3 placements, everything
+            // else reports NoFit.
+            let mut capacity = 1 + rng.below(3);
+            let mut attempted: Vec<u32> = Vec::new();
+            d.begin_round();
+            while let Some(id) = d.next_candidate(&AdmissionCtx { tenants: &dir }) {
+                let t = TenantId(tenant_of[id.0 as usize]);
+                if !attempted.contains(&t.0) {
+                    attempted.push(t.0);
+                }
+                if capacity > 0 {
+                    capacity -= 1;
+                    prop_assert!(d.remove(id), "{id} offered but not queued");
+                    admitted += 1;
+                    d.report(id, t, AdmitOutcome::Placed, &AdmissionCtx { tenants: &dir });
+                } else {
+                    d.report(id, t, AdmitOutcome::NoFit, &AdmissionCtx { tenants: &dir });
+                }
+            }
+            // Every tenant with a queued job got at least one attempt.
+            let mut queued: Vec<u32> = Vec::new();
+            d.for_each(&mut |id| queued.push(tenant_of[id.0 as usize]));
+            for t in queued {
+                prop_assert!(
+                    attempted.contains(&t),
+                    "tenant {t} had queued work but was never attempted this round"
+                );
+            }
+        }
+        prop_assert!(d.is_empty(), "all jobs admitted");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quota_gate_conserves_jobs_under_chaos() {
+    // Satellite property: with the quota-gate discipline under randomized
+    // quota-squeeze chaos scripts (random caps applied mid-run, lifted
+    // later), every skipped head is eventually admitted or cancelled —
+    // the run drains, nothing is lost, and both simulator drive modes
+    // agree on every record.
+    let cases = PropConfig { cases: 12, ..Default::default() };
+    check("quota-gate-conservation", cases, |rng| {
+        let nodes = 1 + rng.below(3) as usize;
+        let tenants = 2 + rng.below(4) as u32;
+        let n = 20 + rng.below(50) as usize;
+        let mut wl = gen::workload(rng, n, 30 + rng.below(80));
+        wl.assign_tenants(&TenantAssigner::round_robin(tenants));
+
+        // Random squeeze: tight caps on a couple of tenants early, a few
+        // cancellations, everything lifted at minute 500 so the backlog
+        // can drain (a cap below one job's Size is a full stop while it
+        // lasts).
+        let mut script = ScenarioScript::new();
+        for _ in 0..1 + rng.below(3) {
+            let t = TenantId(rng.below(tenants as u64) as u32);
+            let at = rng.below(60);
+            let size = rng.below(100) as f64 / 100.0;
+            script = script.at(at, SchedulerCommand::SetQuota { tenant: t, size });
+        }
+        if rng.chance(0.5) {
+            script = script.at(
+                10 + rng.below(40),
+                SchedulerCommand::Cancel { job: JobId(rng.below(n as u64) as u32) },
+            );
+        }
+        for t in 0..tenants {
+            script = script.at(500, SchedulerCommand::SetQuota { tenant: TenantId(t), size: 1e9 });
+        }
+
+        let policy = policies(rng);
+        let seed = rng.next_u64();
+        let backfill = 1 + rng.below(8) as usize;
+        let mk = |engine: SimEngine| {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes), policy);
+            cfg.paranoid = true;
+            cfg.seed = seed;
+            cfg.engine = engine;
+            cfg.discipline = DisciplineKind::QuotaGate { backfill };
+            cfg.scenario = Some(script.clone());
+            Simulator::new(cfg).run(&wl)
+        };
+        let res = mk(SimEngine::EventHorizon);
+        prop_assert!(res.unfinished == 0, "{} jobs lost by the quota gate", res.unfinished);
+        let cancelled = res.metrics.cancelled_total();
+        for r in &res.records {
+            prop_assert!(
+                r.finished_at.is_some() || r.cancelled,
+                "{:?} neither finished nor cancelled",
+                r.id
+            );
+        }
+        prop_assert!(
+            res.metrics.jobs_seen + cancelled == n as u64,
+            "seen {} + cancelled {cancelled} != {n}",
+            res.metrics.jobs_seen
+        );
+        // Engine equivalence holds under quota chaos too.
+        let pm = mk(SimEngine::PerMinute);
+        prop_assert!(pm.records == res.records, "engines diverge under quota chaos");
+        prop_assert!(pm.metrics == res.metrics, "sinks diverge under quota chaos");
         Ok(())
     });
 }

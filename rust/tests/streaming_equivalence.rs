@@ -236,6 +236,138 @@ fn protocol_layer_is_invisible_without_a_scenario() {
     }
 }
 
+/// Strip tenant identity from a result so tenant-tagged runs can be
+/// compared byte-for-byte against untagged baselines (tenant assignment is
+/// pure metadata under the `fifo` discipline — nothing else may move).
+fn strip_tenants(res: &SimResult) -> SimResult {
+    let mut out = res.clone();
+    for r in &mut out.records {
+        r.tenant = fitgpp::job::TenantId::DEFAULT;
+    }
+    out.metrics.tenants.clear();
+    out
+}
+
+#[test]
+fn fifo_discipline_with_tenant_identity_is_byte_identical() {
+    // The refactor's safety net: an explicit `--discipline fifo` run over
+    // a tenant-tagged workload must be byte-identical (records, makespan,
+    // simulated minutes, global metrics) to the pre-refactor default for
+    // every policy, both engines, and both generator source types.
+    use fitgpp::sched::admission::DisciplineKind;
+    use fitgpp::workload::source::TenantAssigner;
+    use fitgpp::workload::trace::InstitutionSource;
+
+    let cluster = ClusterSpec::tiny(3);
+    let params = SyntheticWorkload::paper_section_4_2(23)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(300);
+    let tagged_params = params
+        .clone()
+        .with_tenant_assigner(TenantAssigner::round_robin(5).with_burst(3, 200, 40));
+    for policy in all_policies() {
+        for engine in [SimEngine::EventHorizon, SimEngine::PerMinute] {
+            let base = Simulator::new(cfg(&cluster, policy, engine))
+                .run_source(&mut params.stream());
+            let mut tagged_cfg = cfg(&cluster, policy, engine);
+            tagged_cfg.discipline = DisciplineKind::Fifo;
+            let tagged = Simulator::new(tagged_cfg).run_source(&mut tagged_params.stream());
+            assert!(
+                tagged.metrics.tenants.len() == 5,
+                "{policy:?}/{engine:?}: expected 5 tenants, saw {}",
+                tagged.metrics.tenants.len()
+            );
+            assert_identical(
+                &strip_tenants(&tagged),
+                &strip_tenants(&base),
+                &format!("{policy:?}/{engine:?} fifo+tenants"),
+            );
+        }
+    }
+
+    // Institution stream: same pin on the other generator.
+    let policy = PolicyKind::FitGpp { s: 4.0, p_max: Some(1) };
+    let base = Simulator::new(cfg(&cluster, policy, SimEngine::EventHorizon))
+        .run_source(&mut InstitutionSource::new(31, 400));
+    let tagged = Simulator::new(cfg(&cluster, policy, SimEngine::EventHorizon)).run_source(
+        &mut InstitutionSource::new(31, 400).with_tenants(TenantAssigner::round_robin(7)),
+    );
+    assert_identical(&strip_tenants(&tagged), &strip_tenants(&base), "institution fifo+tenants");
+}
+
+#[test]
+fn weighted_fair_with_one_tenant_is_byte_identical_to_fifo() {
+    // With a single tenant, weighted round-robin degenerates to the exact
+    // FIFO order (one sub-queue, head-gated by the same outcomes), so the
+    // whole run must be byte-identical — a strong pin that the discipline
+    // protocol itself (round/report bookkeeping) adds no drift.
+    use fitgpp::sched::admission::DisciplineKind;
+    let cluster = ClusterSpec::tiny(3);
+    let params = SyntheticWorkload::paper_section_4_2(29)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(250);
+    for policy in all_policies() {
+        for engine in [SimEngine::EventHorizon, SimEngine::PerMinute] {
+            let base = Simulator::new(cfg(&cluster, policy, engine))
+                .run_source(&mut params.stream());
+            let mut wf_cfg = cfg(&cluster, policy, engine);
+            wf_cfg.discipline = DisciplineKind::WeightedFair;
+            let wf = Simulator::new(wf_cfg).run_source(&mut params.stream());
+            assert_identical(&wf, &base, &format!("{policy:?}/{engine:?} wf-single-tenant"));
+        }
+    }
+}
+
+#[test]
+fn tenant_disciplines_agree_across_engines_and_lookahead() {
+    // The tenant-aware acceptance pin: weighted-fair and quota-gate runs
+    // with 8 tenants and a mid-run quota squeeze must produce identical
+    // records, metrics (including the per-tenant map), and makespans
+    // under both drive modes and every lookahead window — i.e. the
+    // disciplines respect the frozen-state contract the event-horizon
+    // engine depends on.
+    use fitgpp::job::TenantId;
+    use fitgpp::sched::admission::DisciplineKind;
+    use fitgpp::sched::control::SchedulerCommand;
+    use fitgpp::sim::scenario::ScenarioScript;
+    use fitgpp::workload::source::TenantAssigner;
+
+    let cluster = ClusterSpec::tiny(3);
+    let params = SyntheticWorkload::paper_section_4_2(41)
+        .with_cluster(cluster.clone())
+        .with_num_jobs(300)
+        .with_tenant_assigner(TenantAssigner::round_robin(8));
+    let scenario = ScenarioScript::new()
+        .at(20, SchedulerCommand::SetQuota { tenant: TenantId(3), size: 0.2 })
+        .at(25, SchedulerCommand::SetWeight { tenant: TenantId(1), weight: 4 })
+        .at(300, SchedulerCommand::SetQuota { tenant: TenantId(3), size: 1e9 });
+    for discipline in [
+        DisciplineKind::WeightedFair,
+        DisciplineKind::QuotaGate { backfill: 2 },
+    ] {
+        let mk = |engine: SimEngine, lookahead: u64| {
+            let mut c = cfg(
+                &cluster,
+                PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+                engine,
+            );
+            c.discipline = discipline;
+            c.arrival_lookahead = lookahead;
+            c.scenario = Some(scenario.clone());
+            Simulator::new(c).run_source(&mut params.stream())
+        };
+        let base = mk(SimEngine::PerMinute, 0);
+        assert_eq!(base.unfinished, 0, "{discipline:?}: quota squeeze was lifted, run drains");
+        assert_eq!(base.metrics.tenants.len(), 8, "{discipline:?}");
+        for engine in [SimEngine::PerMinute, SimEngine::EventHorizon] {
+            for lookahead in [0u64, 1, 32, 1 << 20] {
+                let other = mk(engine, lookahead);
+                assert_identical(&other, &base, &format!("{discipline:?}/{engine:?}/{lookahead}"));
+            }
+        }
+    }
+}
+
 #[test]
 fn closed_loop_is_deterministic_and_bounded_by_users() {
     let cluster = ClusterSpec::tiny(3);
