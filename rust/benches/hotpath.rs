@@ -73,6 +73,7 @@ fn main() {
                 jobs: &jobs,
                 effective_free: &free,
                 oracle_remaining: &oracle,
+                predicted_remaining: &|_: JobId| 0.0,
             };
             black_box(fitgpp_policy::plan(&te, &ctx, 4.0, Some(1), &mut rng))
         });

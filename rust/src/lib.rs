@@ -79,6 +79,7 @@ pub mod prelude {
         SharedEventLog,
     };
     pub use crate::sched::policy::PolicyKind;
+    pub use crate::sched::predict::{EstimatorKind, RuntimeEstimator, SharedEstimator};
     pub use crate::sim::scenario::ScenarioScript;
     pub use crate::sim::{SimConfig, SimEngine, SimResult, Simulator};
     pub use crate::stats::rng::Pcg64;

@@ -13,6 +13,8 @@
 //! fitgpp simulate --scenario chaos.json --events-out events.jsonl  # fault/cancel injections
 //! fitgpp simulate --stream --discipline weighted_fair --tenants 8  # tenant-aware admission
 //! fitgpp replay --trace big.csv --stream --discipline quota_gate --tenants 4 --quota 0.3
+//! fitgpp simulate --policy psrtf --estimator ewma:alpha=0.2   # prediction-aware SRTF
+//! fitgpp sweep --policies srtf,psrtf,fitgpp_pr:s=4,p=1 --estimators sensitivity
 //! fitgpp live     --policy fitgpp:s=4,p=1 --jobs 12 --nodes 2
 //! fitgpp config   --dump                           # print default config JSON
 //! ```
@@ -25,6 +27,7 @@ use fitgpp::metrics::{slowdown_table, SlowdownReport};
 use fitgpp::sched::admission::DisciplineKind;
 use fitgpp::sched::control::{EventSubscriber, JsonlErrorFlag, JsonlEventLog};
 use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sched::predict::EstimatorKind;
 use fitgpp::sim::scenario::ScenarioScript;
 use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
 use fitgpp::sweep::{compare_on, SweepSpec};
@@ -89,7 +92,7 @@ fn print_help() {
 
 fn common_cli(name: &'static str, about: &'static str) -> Cli {
     Cli::new(name, about)
-        .opt("policy", Some("fitgpp:s=4,p=1"), "fifo | fastlane | lrtp | rand | srtf | youngest | fitgpp:s=<f>,p=<n|inf>")
+        .opt("policy", Some("fitgpp:s=4,p=1"), "fifo | fastlane | lrtp | rand | srtf | youngest | psrtf | fitgpp:s=<f>,p=<n|inf> | fitgpp_pr:s=<f>,p=<n|inf>")
         .opt("jobs", Some("8192"), "number of jobs to generate")
         .opt("nodes", Some("84"), "number of cluster nodes")
         .opt("te-fraction", Some("0.3"), "fraction of TE jobs")
@@ -165,6 +168,29 @@ fn tenant_cli(cli: Cli) -> Cli {
         .opt("tenants", Some("1"), "assign this many tenants round-robin over the workload")
         .opt("quota", None, "occupied-Size quota applied to every tenant (Eq. 1 Size vs total capacity)")
         .opt("tenant-burst", None, "periodic tenant storm: <tenant>:<period>:<len> (minutes)")
+}
+
+/// Shared runtime-estimator CLI options (simulate + replay).
+fn estimator_cli(cli: Cli) -> Cli {
+    cli.opt("estimator", Some("oracle"), "runtime estimator: oracle | ewma[:alpha=<f>] | noisy[:sigma=<f>]")
+        .opt("pred-error", None, "shorthand for --estimator noisy:sigma=<f> (multiplicative log-normal error)")
+}
+
+/// Apply `--estimator` / `--pred-error` onto a simulation config.
+/// `--pred-error <sigma>` wins when both are given — it is the sweep-style
+/// "how wrong can predictions be" knob.
+fn apply_estimator(cfg: &mut SimConfig, args: &fitgpp::util::cli::Args) -> Result<()> {
+    let raw = args.get_or("estimator", "oracle");
+    cfg.estimator = EstimatorKind::parse(raw)
+        .with_context(|| format!("bad --estimator {raw:?}"))?;
+    if let Some(sig) = args.get("pred-error") {
+        let sigma: f64 = sig.parse().context("bad --pred-error")?;
+        if !sigma.is_finite() || sigma < 0.0 {
+            bail!("--pred-error must be finite and non-negative");
+        }
+        cfg.estimator = EstimatorKind::Noisy { sigma };
+    }
+    Ok(())
 }
 
 /// Parse `--tenants` / `--tenant-burst` into an assignment rule.
@@ -257,6 +283,7 @@ fn report_streamed(
     );
     report_tenants(res);
     report_cancellations(res);
+    println!("prediction updates: {}", res.prediction_updates);
     if let Some(cap) = max_live {
         if res.peak_live > cap {
             bail!("peak live set {} exceeded --max-live {cap}", res.peak_live);
@@ -271,7 +298,7 @@ fn report_streamed(
 }
 
 fn simulate(argv: Vec<String>) -> Result<()> {
-    let cli = tenant_cli(
+    let cli = estimator_cli(tenant_cli(
         common_cli("fitgpp simulate", "run one policy on a synthetic workload")
             .flag("stream", "stream the workload generator (O(live-set) memory, sketch-backed percentiles)")
             .flag("closed-loop", "closed-loop arrivals: users resubmit after completion + think time")
@@ -280,7 +307,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
             .opt("think", Some("10"), "closed-loop: mean think time (minutes)")
             .opt("scenario", None, "JSON scenario file: timed commands + te_patience rule (see EXPERIMENTS.md)")
             .opt("events-out", None, "write the scheduler's JSONL event log to this path"),
-    );
+    ));
     let args = parse_or_exit(&cli, argv);
     let assigner = tenant_assigner(&args)?;
 
@@ -314,6 +341,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         cfg.record_jobs = false;
         cfg.scenario = load_scenario(&args)?;
         apply_discipline(&mut cfg, &args)?;
+        apply_estimator(&mut cfg, &args)?;
         eprintln!(
             "closed loop: {} users x {} trials, think ~{} min; policy {}",
             args.get_usize("users", 64),
@@ -345,6 +373,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
         cfg.record_jobs = false;
         cfg.scenario = load_scenario(&args)?;
         apply_discipline(&mut cfg, &args)?;
+        apply_estimator(&mut cfg, &args)?;
         eprintln!("streaming {} §4.2 jobs; policy {}", params.num_jobs, policy.name());
         let t0 = Instant::now();
         let mut source = params.stream();
@@ -366,6 +395,7 @@ fn simulate(argv: Vec<String>) -> Result<()> {
     let mut sim_cfg = cfg.sim_config();
     sim_cfg.scenario = load_scenario(&args)?;
     apply_discipline(&mut sim_cfg, &args)?;
+    apply_estimator(&mut sim_cfg, &args)?;
     let (subs, ev_err) = event_subscribers(&args)?;
     let res = Simulator::new(sim_cfg).run_with(&mut WorkloadSource::new(&wl), subs);
     check_event_log(ev_err)?;
@@ -473,6 +503,7 @@ fn sweep(argv: Vec<String>) -> Result<()> {
     .opt("discipline", Some("fifo"), "admission discipline: fifo | weighted_fair | quota_gate[:w=<n>]")
     .opt("tenants", Some("1"), "assign this many tenants round-robin over every workload")
     .opt("quota", None, "occupied-Size quota applied to every tenant in every cell")
+    .opt("estimators", Some("oracle"), "comma-separated estimator axis: oracle | ewma[:alpha=<f>] | noisy[:sigma=<f>] | sensitivity")
     .opt("json-out", None, "write the full sweep JSON here")
     .opt("csv-out", None, "write one CSV row per cell here");
     let args = parse_or_exit(&cli, argv);
@@ -496,6 +527,12 @@ fn sweep(argv: Vec<String>) -> Result<()> {
     let discipline = DisciplineKind::parse(args.get_or("discipline", "fifo"))?;
     let tenants = tenant_assigner(&args)?.tenants;
     let quota = parse_quota(&args)?;
+    // "sensitivity" expands to the canonical error-sensitivity axis
+    // (oracle, cold-start EWMA, noisy at sigma 0 / 0.25 / 0.5 / 1.0).
+    let estimators = match args.get_or("estimators", "oracle") {
+        "sensitivity" => fitgpp::sweep::error_sensitivity_estimators(),
+        raw => parse_list(raw, "estimator", EstimatorKind::parse)?,
+    };
 
     let spec = SweepSpec::new(
         ClusterSpec::homogeneous(
@@ -513,6 +550,7 @@ fn sweep(argv: Vec<String>) -> Result<()> {
     .with_discipline(discipline)
     .with_tenants(tenants)
     .with_default_quota(quota)
+    .with_estimators(estimators)
     .with_threads(args.get_usize("threads", 0));
 
     eprintln!(
@@ -526,6 +564,13 @@ fn sweep(argv: Vec<String>) -> Result<()> {
         "{}",
         res.table1("Sweep: slowdown percentiles pooled across seeds").to_text()
     );
+    if res.estimators().len() > 1 {
+        println!(
+            "{}",
+            res.estimator_grid("Prediction-error sensitivity (TE p95 / BE p50, pooled across seeds)")
+                .to_text()
+        );
+    }
     println!(
         "{} cells in {:.1}s wall on {} threads ({:.1}s serial-equivalent sim time)",
         res.cells.len(),
@@ -561,14 +606,14 @@ fn generate(argv: Vec<String>) -> Result<()> {
 }
 
 fn replay(argv: Vec<String>) -> Result<()> {
-    let cli = tenant_cli(
+    let cli = estimator_cli(tenant_cli(
         common_cli("fitgpp replay", "replay a CSV trace under a policy")
             .opt("trace", None, "input CSV trace path (required)")
             .flag("stream", "stream the trace through a buffered reader (O(live-set) memory)")
             .opt("max-live", None, "fail if the peak resident live set exceeds this (streaming smoke checks)")
             .opt("scenario", None, "JSON scenario file: timed commands + te_patience rule (see EXPERIMENTS.md)")
             .opt("events-out", None, "write the scheduler's JSONL event log to this path"),
-    );
+    ));
     let args = parse_or_exit(&cli, argv);
     let assigner = tenant_assigner(&args)?;
     let path = args.get("trace").context("--trace is required")?;
@@ -580,6 +625,7 @@ fn replay(argv: Vec<String>) -> Result<()> {
     );
     cfg.scenario = load_scenario(&args)?;
     apply_discipline(&mut cfg, &args)?;
+    apply_estimator(&mut cfg, &args)?;
     let max_live = match args.get("max-live") {
         Some(v) => Some(v.parse::<usize>().context("bad --max-live")?),
         None => None,

@@ -618,13 +618,17 @@ pub struct ClusterController {
 }
 
 impl ClusterController {
-    /// Build a controller for `spec` under `cfg`.
+    /// Build a controller for `spec` under `cfg`. The scheduler's runtime
+    /// estimator is subscribed to the event stream here, so every
+    /// `Finished` record feeds it — identically under both engines.
     pub fn new(spec: &ClusterSpec, cfg: SchedConfig) -> Self {
+        let sched = Scheduler::new(spec, cfg);
+        let estimator = sched.estimator();
         ClusterController {
-            sched: Scheduler::new(spec, cfg),
+            sched,
             jobs: JobTable::new(),
             metrics: StreamingMetrics::new(),
-            subs: Vec::new(),
+            subs: vec![Box::new(estimator)],
             cancelled_buf: Vec::new(),
         }
     }

@@ -57,6 +57,7 @@ use crate::sched::admission::{
 };
 use crate::sched::clock::EventClock;
 use crate::sched::policy::{build_policy, PolicyCtx, PolicyKind, PreemptionPolicy};
+use crate::sched::predict::{EstimatorKind, SharedEstimator};
 use crate::stats::rng::Pcg64;
 use crate::Minutes;
 
@@ -81,6 +82,11 @@ pub struct SchedConfig {
     /// Occupied-Size quota applied to every tenant with no explicit
     /// `SetQuota` entry (`None` = unlimited, the default).
     pub default_quota: Option<f64>,
+    /// Runtime estimator feeding the prediction-aware policies (plain
+    /// data, like `policy`). Default [`EstimatorKind::Oracle`] —
+    /// byte-identical to the pre-prediction scheduler for every policy
+    /// that ignores predictions.
+    pub estimator: EstimatorKind,
 }
 
 impl SchedConfig {
@@ -93,6 +99,7 @@ impl SchedConfig {
             progress_during_grace: false,
             seed: 0x5EED,
             default_quota: None,
+            estimator: EstimatorKind::Oracle,
         }
     }
 }
@@ -201,6 +208,11 @@ pub struct Scheduler {
     /// Behaviour built from `cfg.policy` at construction (one build per
     /// run, per the [`PreemptionPolicy`] contract).
     policy: Box<dyn PreemptionPolicy>,
+    /// Runtime-estimator handle built from `cfg.estimator` at
+    /// construction. The controller subscribes a clone to the event stream
+    /// so `Finished` records feed the estimator; the policy view reads
+    /// predictions through it.
+    estimator: SharedEstimator,
     rng: Pcg64,
     /// Aggregate counters across the run.
     pub stats: SchedStats,
@@ -214,6 +226,7 @@ impl Scheduler {
         Scheduler {
             rng: Pcg64::new(cfg.seed),
             policy: build_policy(&cfg.policy),
+            estimator: SharedEstimator::new(&cfg.estimator, cfg.seed),
             be_queue: build_discipline(&cfg.discipline),
             tenants: TenantDirectory::new(cfg.default_quota),
             cfg,
@@ -234,6 +247,13 @@ impl Scheduler {
     /// the policy view of the cluster.
     fn effective_free_all(&self) -> Vec<ResourceVec> {
         self.cluster.nodes.iter().map(Node::effective_free).collect()
+    }
+
+    /// A clone of the runtime-estimator handle (shared state): the
+    /// controller subscribes one to the event stream; diagnostics read
+    /// update counts through another.
+    pub fn estimator(&self) -> SharedEstimator {
+        self.estimator.clone()
     }
 
     /// Placement preference key for the residual-based rules: strictly
@@ -587,11 +607,13 @@ impl Scheduler {
             // (c) Ask the policy for victims.
             let plan = {
                 let eff = self.effective_free_all();
+                let est = &self.estimator;
                 let ctx = PolicyCtx {
                     cluster: &self.cluster,
                     jobs,
                     effective_free: &eff,
                     oracle_remaining: &|id: JobId| jobs[id].remaining,
+                    predicted_remaining: &|id: JobId| est.predicted_remaining(&jobs[id]),
                 };
                 self.policy.plan(&jobs[head].spec, &ctx, &mut self.rng)
             };

@@ -2,13 +2,16 @@
 //! pluggable preemption policies (§3 of the paper), and the control-plane
 //! protocol.
 //!
-//! Five layers: [`admission`] decides *which queued job to try next*
+//! Six layers: [`admission`] decides *which queued job to try next*
 //! (behind the object-safe [`QueueDiscipline`](admission::QueueDiscipline)
 //! trait — FIFO, weighted-fair, quota-gated), [`policy`] decides *whom to
 //! evict* (behind the [`PreemptionPolicy`](policy::PreemptionPolicy)
-//! trait), [`clock`] knows *when anything happens next* (min-heaps, no
-//! job-table rescans), the [`core`] ties them to the cluster's incremental
-//! capacity index, and [`control`] is the public face: a typed
+//! trait), [`predict`] estimates *how long jobs will run* (behind the
+//! [`RuntimeEstimator`](predict::RuntimeEstimator) trait, feeding the
+//! prediction-aware policies), [`clock`] knows *when anything happens
+//! next* (min-heaps, no job-table rescans), the [`core`] ties them to the
+//! cluster's incremental capacity index, and [`control`] is the public
+//! face: a typed
 //! [`SchedulerCommand`](control::SchedulerCommand) /
 //! [`SchedulerEvent`](control::SchedulerEvent) protocol consumed by the
 //! [`ClusterController`](control::ClusterController) facade that both the
@@ -19,6 +22,7 @@ pub mod clock;
 pub mod control;
 pub mod core;
 pub mod policy;
+pub mod predict;
 
 pub use admission::{DisciplineKind, QueueDiscipline, TenantDirectory};
 pub use clock::EventClock;
@@ -28,3 +32,4 @@ pub use control::{
 };
 pub use core::{SchedConfig, SchedStats, Scheduler, TickStats};
 pub use policy::{PolicyKind, PreemptionPlan, PreemptionPolicy};
+pub use predict::{EstimatorKind, RuntimeEstimator, SharedEstimator};

@@ -164,8 +164,17 @@ mod tests {
         free: &'a [ResourceVec],
         oracle: &'a dyn Fn(JobId) -> u64,
     ) -> PolicyCtx<'a> {
-        PolicyCtx { cluster, jobs, effective_free: free, oracle_remaining: oracle }
+        PolicyCtx {
+            cluster,
+            jobs,
+            effective_free: free,
+            oracle_remaining: oracle,
+            predicted_remaining: &PRED,
+        }
     }
+
+    /// Zero-prediction stub — FitGpp never reads predictions.
+    const PRED: fn(JobId) -> f64 = |_| 0.0;
 
     fn frees(cluster: &Cluster) -> Vec<ResourceVec> {
         cluster.nodes.iter().map(|n| n.free).collect()

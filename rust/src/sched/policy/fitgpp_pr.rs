@@ -1,0 +1,278 @@
+//! FitGpp-PR — FitGpp with predicted-resume-cost victim ranking.
+//!
+//! Plain FitGpp (Eq. 3) ranks victims on declared attributes only: demand
+//! size and grace-period length. That deliberately ignores how much the
+//! victim itself loses by being preempted — a BE job one minute from
+//! completion pays a far higher relative price than one that just started.
+//! FitGpp-PR keeps everything FitGpp gets right (Eq. 2 single-victim
+//! feasibility, the preemption cap, the argmin tie-break, the random
+//! fallback) and swaps the grace-period term for a *predicted resume
+//! cost*:
+//!
+//! ```text
+//! R_j = (GP_j + 1) / (pred_remaining_j + 1)
+//! Score(j) = Size(D_j)/max_J Size + s · R_j/max_J R
+//! ```
+//!
+//! Small `R_j` — the preferred victims — means a short grace period
+//! (quick to vacate, the TE job waits less) *and* a long predicted
+//! remaining time (the eviction wastes a small fraction of the victim's
+//! work, and it would have occupied the node for long anyway). The `+1`
+//! offsets keep the ratio finite for zero grace periods and completed-any
+//! -minute-now predictions, and keep `R_j` strictly positive so the
+//! normalizer `max_J R` never degenerates and the term is always active.
+//!
+//! With the oracle estimator this is FitGpp upgraded with perfect
+//! remaining-time knowledge — the upper bound the error-sensitivity sweep
+//! erodes by cranking the `Noisy` estimator's sigma.
+
+use super::{fitgpp, rand_policy, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use crate::job::JobSpec;
+use crate::stats::rng::Pcg64;
+
+/// Trait wrapper for [`plan`]: FitGpp-PR with its two knobs.
+pub struct FitGppPr {
+    /// Weight of the resume-cost term (the analogue of FitGpp's `s`).
+    pub s: f64,
+    /// Per-job preemption cap `P` (`None` = unlimited).
+    pub p_max: Option<u32>,
+}
+
+impl PreemptionPolicy for FitGppPr {
+    fn plan(
+        &self,
+        te: &JobSpec,
+        ctx: &PolicyCtx<'_>,
+        rng: &mut Pcg64,
+    ) -> Option<PreemptionPlan> {
+        plan(te, ctx, self.s, self.p_max, rng)
+    }
+}
+
+/// The predicted resume cost `R_j = (GP_j + 1) / (pred_remaining_j + 1)`.
+pub fn resume_cost(gp: f64, pred_remaining: f64) -> f64 {
+    (gp + 1.0) / (pred_remaining + 1.0)
+}
+
+/// FitGpp's Eq. 4 with the resume-cost score: pick
+/// `argmin Size/max_Size + s·R/max_R` subject to Eq. 2 and the preemption
+/// cap; fall back to a random plan when the candidate set is empty.
+pub fn plan(
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    s: f64,
+    p_max: Option<u32>,
+    rng: &mut Pcg64,
+) -> Option<PreemptionPlan> {
+    let running = ctx.running_be();
+    if running.is_empty() {
+        return None;
+    }
+
+    // Normalizers over 𝒥 (all running BE jobs), exactly as FitGpp measures
+    // them — Size against the hosting node's capacity, R over the pool.
+    // R is strictly positive, so max_r never degenerates.
+    let mut max_size = 0.0f64;
+    let mut max_r = 0.0f64;
+    let terms: Vec<(f64, f64)> = running
+        .iter()
+        .map(|id| {
+            let j = &ctx.jobs[*id];
+            let node = ctx.cluster.node(j.node.expect("running job has a node"));
+            let sz = j.spec.demand.size(&node.capacity);
+            let r = resume_cost(j.spec.grace_period as f64, (ctx.predicted_remaining)(*id));
+            max_size = max_size.max(sz);
+            max_r = max_r.max(r);
+            (sz, r)
+        })
+        .collect();
+
+    let mut best: Option<(f64, usize)> = None; // (score, index into `running`)
+    for (i, id) in running.iter().enumerate() {
+        let j = &ctx.jobs[*id];
+        if let Some(p) = p_max {
+            if j.preemptions >= p {
+                continue; // FitGpp's starvation guard, unchanged
+            }
+        }
+        let node = j.node.expect("running job has a node");
+        // Eq. 2, unchanged: the victim plus the node's unallocated
+        // resources can host the TE job on their own.
+        let avail = j.spec.demand + ctx.effective_free[node.0 as usize];
+        if !te.demand.fits_in(&avail) {
+            continue;
+        }
+        let (sz, r) = terms[i];
+        let size_term = if max_size > 0.0 { sz / max_size } else { 0.0 };
+        let sc = size_term + s * r / max_r;
+        // Deterministic tie-break on job id, as in FitGpp.
+        let better = match best {
+            None => true,
+            Some((b, bi)) => sc < b || (sc == b && id < &running[bi]),
+        };
+        if better {
+            best = Some((sc, i));
+        }
+    }
+
+    if let Some((_, i)) = best {
+        let id = running[i];
+        let node = ctx.jobs[id].node.unwrap();
+        return Some(PreemptionPlan { node, victims: vec![id], fallback: false });
+    }
+
+    // Same escape hatch as FitGpp: no qualifying candidate ⇒ random plan,
+    // flagged, cap still honoured.
+    rand_policy::plan(te, ctx, rng, p_max).map(|mut p| {
+        p.fallback = true;
+        p
+    })
+}
+
+/// With `s = 0` the resume-cost term vanishes and FitGpp-PR must agree
+/// with FitGpp on every input (both reduce to pure Size argmin). Exposed
+/// for tests.
+pub fn agrees_with_fitgpp_at_s_zero(
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    p_max: Option<u32>,
+    seed: u64,
+) -> bool {
+    let a = plan(te, ctx, 0.0, p_max, &mut Pcg64::new(seed));
+    let b = fitgpp::plan(te, ctx, 0.0, p_max, &mut Pcg64::new(seed));
+    a == b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterSpec, NodeId};
+    use crate::job::{Job, JobClass, JobId, JobSpec};
+    use crate::job_table::JobTable;
+    use crate::resources::ResourceVec;
+
+    /// `placements[i] = (node, demand, gp, remaining)` creates a running BE
+    /// job i on that node.
+    fn setup(
+        nodes: usize,
+        placements: &[(u32, ResourceVec, u64, u64)],
+    ) -> (Cluster, JobTable, Vec<u64>) {
+        let spec = ClusterSpec::tiny(nodes);
+        let mut cluster = Cluster::new(&spec);
+        let mut jobs = Vec::new();
+        let mut remaining = Vec::new();
+        for (i, (node, demand, gp, rem)) in placements.iter().enumerate() {
+            let spec = JobSpec::new(i as u32, JobClass::Be, *demand, 0, (*rem).max(1), *gp);
+            let mut job = Job::new(spec);
+            job.start(NodeId(*node), 0);
+            cluster.bind(JobId(i as u32), *demand, NodeId(*node));
+            jobs.push(job);
+            remaining.push(*rem);
+        }
+        (cluster, JobTable::from_jobs(jobs), remaining)
+    }
+
+    fn frees(cluster: &Cluster) -> Vec<ResourceVec> {
+        cluster.nodes.iter().map(|n| n.free).collect()
+    }
+
+    fn te(demand: ResourceVec) -> JobSpec {
+        JobSpec::new(999, JobClass::Te, demand, 0, 5, 0)
+    }
+
+    const ORACLE: fn(JobId) -> u64 = |_| 0;
+
+    #[test]
+    fn prefers_long_remaining_victim_over_short() {
+        // Two same-size, same-GP victims; job 0 is nearly done (remaining
+        // 2), job 1 has 200 minutes left. Plain FitGpp cannot tell them
+        // apart; FitGpp-PR must spare the nearly-done job.
+        let d = ResourceVec::new(8.0, 64.0, 2.0);
+        let (cluster, jobs, rem) = setup(2, &[(0, d, 5, 2), (1, d, 5, 200)]);
+        let free = frees(&cluster);
+        let pred = move |id: JobId| rem[id.0 as usize] as f64;
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred };
+        let p = plan(&te(d), &ctx, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        assert_eq!(p.victims, vec![JobId(1)], "long-remaining job is the cheap resume");
+        assert_eq!(p.node, NodeId(1));
+    }
+
+    #[test]
+    fn short_grace_period_still_preferred() {
+        // Same size, same remaining; GP 0 vs GP 20 — the quick-to-vacate
+        // victim wins, as in FitGpp.
+        let d = ResourceVec::new(8.0, 64.0, 2.0);
+        let (cluster, jobs, rem) = setup(2, &[(0, d, 20, 50), (1, d, 0, 50)]);
+        let free = frees(&cluster);
+        let pred = move |id: JobId| rem[id.0 as usize] as f64;
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred };
+        let p = plan(&te(d), &ctx, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        assert_eq!(p.victims, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn s_zero_reduces_to_fitgpp() {
+        // With s = 0 both policies are pure Size argmin — byte-equal plans.
+        let (cluster, jobs, rem) = setup(
+            2,
+            &[
+                (0, ResourceVec::new(8.0, 64.0, 2.0), 10, 3),
+                (1, ResourceVec::new(4.0, 32.0, 1.0), 0, 400),
+            ],
+        );
+        let free = frees(&cluster);
+        let pred = move |id: JobId| rem[id.0 as usize] as f64;
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred };
+        assert!(agrees_with_fitgpp_at_s_zero(
+            &te(ResourceVec::new(2.0, 16.0, 1.0)),
+            &ctx,
+            Some(1),
+            7
+        ));
+    }
+
+    #[test]
+    fn eq2_and_cap_carry_over() {
+        // Job 0 satisfies Eq. 2 but is capped out; job 1 satisfies Eq. 2
+        // and must be chosen despite a worse resume cost.
+        let d = ResourceVec::new(4.0, 32.0, 1.0);
+        let (cluster, mut jobs, rem) = setup(2, &[(0, d, 0, 500), (1, d, 5, 2)]);
+        jobs[JobId(0)].preemptions = 1;
+        let free = frees(&cluster);
+        let pred = move |id: JobId| rem[id.0 as usize] as f64;
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred };
+        let capped = plan(&te(d), &ctx, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        assert_eq!(capped.victims, vec![JobId(1)]);
+        // P = ∞ re-admits job 0, whose resume cost is far lower.
+        let uncapped = plan(&te(d), &ctx, 4.0, None, &mut Pcg64::new(1)).unwrap();
+        assert_eq!(uncapped.victims, vec![JobId(0)]);
+    }
+
+    #[test]
+    fn fallback_fires_when_no_single_victim_suffices() {
+        let d = ResourceVec::new(14.0, 120.0, 4.0);
+        let (cluster, jobs, _) = setup(1, &[(0, d, 0, 10), (0, d, 0, 10)]);
+        let free = frees(&cluster);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 10.0 };
+        let p = plan(&te(ResourceVec::new(20.0, 128.0, 6.0)), &ctx, 4.0, Some(1), &mut Pcg64::new(7)).unwrap();
+        assert!(p.fallback);
+        assert_eq!(p.victims.len(), 2);
+    }
+
+    #[test]
+    fn no_running_be_jobs_yields_none() {
+        let (cluster, jobs, _) = setup(1, &[]);
+        let free = frees(&cluster);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 0.0)), &ctx, 4.0, Some(1), &mut Pcg64::new(1)).is_none());
+    }
+
+    #[test]
+    fn resume_cost_formula() {
+        assert!((resume_cost(0.0, 0.0) - 1.0).abs() < 1e-12);
+        assert!((resume_cost(9.0, 4.0) - 2.0).abs() < 1e-12);
+        // Longer remaining ⇒ cheaper resume; longer GP ⇒ dearer.
+        assert!(resume_cost(5.0, 100.0) < resume_cost(5.0, 10.0));
+        assert!(resume_cost(20.0, 10.0) > resume_cost(5.0, 10.0));
+    }
+}

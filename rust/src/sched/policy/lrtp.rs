@@ -81,7 +81,7 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 100), (1, d, 500)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
         // Demand exceeds the free space on either node: one victim needed,
         // and it must be the remaining-500 job on node 1.
         let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
@@ -100,7 +100,7 @@ mod tests {
         );
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
         // TE needs a whole node: evict rem-400 (node 0) — no node fits and
         // aggregate (half a node) is short; evict rem-300 (node 1) — still
         // no single-node fit, but the *aggregate* freed space now covers
@@ -118,7 +118,7 @@ mod tests {
             setup(1, &[(0, d, 10), (0, d, 40), (0, d, 30), (0, d, 20)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
         let p = plan(&te(ResourceVec::new(2.0, 16.0, 6.0)), &ctx).unwrap();
         // free GPUs = 0; need 6 ⇒ evict longest three: rem 40, 30, 20.
         assert_eq!(p.victims, vec![JobId(1), JobId(2), JobId(3)]);
@@ -130,7 +130,7 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 10), (1, d, 20)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
         assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
     }
 
@@ -140,7 +140,7 @@ mod tests {
         let (cluster, jobs, rem) = setup(1, &[(0, d, 10)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
         let p = plan(&te(ResourceVec::new(1.0, 1.0, 1.0)), &ctx).unwrap();
         assert!(p.victims.is_empty());
     }

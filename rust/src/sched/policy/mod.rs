@@ -26,9 +26,15 @@
 //!   minimizes sunk work per victim, ignores fit and grace periods).
 //! * [`rand`](rand_policy) — uniformly random victims.
 //! * `Fifo` / `FastLane` — no preemption (baseline / bypass-only ablation).
+//! * [`psrtf`] — SRTF eviction driven by the *predicted* remaining time
+//!   from the configured [`RuntimeEstimator`](crate::sched::predict) instead
+//!   of the oracle.
+//! * [`fitgpp_pr`] — FitGpp with predicted-resume-cost victim ranking.
 
 pub mod fitgpp;
+pub mod fitgpp_pr;
 pub mod lrtp;
+pub mod psrtf;
 pub mod rand_policy;
 pub mod srtf;
 pub mod youngest;
@@ -61,6 +67,20 @@ pub enum PolicyKind {
     Srtf,
     /// Preempt the most recently submitted running BE job (ablation).
     Youngest,
+    /// SRTF eviction ordered by *predicted* remaining time (the configured
+    /// estimator instead of the oracle). Under the oracle estimator this is
+    /// byte-identical to [`PolicyKind::Srtf`].
+    PSrtf,
+    /// FitGpp with predicted-resume-cost victim ranking: Eq. 3's
+    /// grace-period term is replaced by `(GP_j + 1) / (pred_remaining_j + 1)`
+    /// so victims that are both quick to vacate *and* predicted to be far
+    /// from completion are preferred.
+    FitGppPr {
+        /// Weight of the resume-cost term (the analogue of FitGpp's `s`).
+        s: f64,
+        /// Per-job preemption cap `P` (`None` = unlimited).
+        p_max: Option<u32>,
+    },
 }
 
 impl PolicyKind {
@@ -88,17 +108,45 @@ impl PolicyKind {
             PolicyKind::Rand => "RAND".into(),
             PolicyKind::Srtf => "SRTF".into(),
             PolicyKind::Youngest => "Youngest".into(),
+            PolicyKind::PSrtf => "P-SRTF".into(),
+            PolicyKind::FitGppPr { s, p_max } => match p_max {
+                Some(p) => format!("FitGpp-PR(s={s},P={p})"),
+                None => format!("FitGpp-PR(s={s},P=inf)"),
+            },
         }
     }
 
     /// Parse from a CLI string: `fifo`, `fastlane`, `fitgpp`, `fitgpp:s=4`,
     /// `fitgpp:s=4,p=1`, `fitgpp:s=8,p=inf`, `lrtp`, `rand`, `srtf`,
-    /// `youngest`.
+    /// `youngest`, `psrtf`, `fitgpp_pr` / `fitgpp-pr` (same `s=`/`p=`
+    /// parameters as `fitgpp`).
     pub fn parse(s: &str) -> Option<PolicyKind> {
         let lower = s.to_ascii_lowercase();
         let (head, rest) = match lower.split_once(':') {
             Some((h, r)) => (h, Some(r)),
             None => (lower.as_str(), None),
+        };
+        // `fitgpp` and `fitgpp_pr` share the s=/p= parameter grammar.
+        let parse_fitgpp_params = |rest: Option<&str>| -> Option<(f64, Option<u32>)> {
+            let mut s_param = 4.0;
+            let mut p_max = Some(1);
+            if let Some(rest) = rest {
+                for kv in rest.split(',') {
+                    let (k, v) = kv.split_once('=')?;
+                    match k {
+                        "s" => s_param = v.parse().ok()?,
+                        "p" => {
+                            p_max = if v == "inf" {
+                                None
+                            } else {
+                                Some(v.parse().ok()?)
+                            }
+                        }
+                        _ => return None,
+                    }
+                }
+            }
+            Some((s_param, p_max))
         };
         match head {
             "fifo" => Some(PolicyKind::Fifo),
@@ -107,26 +155,14 @@ impl PolicyKind {
             "rand" => Some(PolicyKind::Rand),
             "srtf" => Some(PolicyKind::Srtf),
             "youngest" => Some(PolicyKind::Youngest),
+            "psrtf" => Some(PolicyKind::PSrtf),
             "fitgpp" => {
-                let mut s_param = 4.0;
-                let mut p_max = Some(1);
-                if let Some(rest) = rest {
-                    for kv in rest.split(',') {
-                        let (k, v) = kv.split_once('=')?;
-                        match k {
-                            "s" => s_param = v.parse().ok()?,
-                            "p" => {
-                                p_max = if v == "inf" {
-                                    None
-                                } else {
-                                    Some(v.parse().ok()?)
-                                }
-                            }
-                            _ => return None,
-                        }
-                    }
-                }
-                Some(PolicyKind::FitGpp { s: s_param, p_max })
+                let (s, p_max) = parse_fitgpp_params(rest)?;
+                Some(PolicyKind::FitGpp { s, p_max })
+            }
+            "fitgpp_pr" | "fitgpp-pr" => {
+                let (s, p_max) = parse_fitgpp_params(rest)?;
+                Some(PolicyKind::FitGppPr { s, p_max })
             }
             _ => None,
         }
@@ -159,6 +195,12 @@ pub struct PolicyCtx<'a> {
     /// The remaining-execution-time oracle (only LRTP/SRTF may consult it;
     /// the paper grants Big-C perfect predictions, §4.1).
     pub oracle_remaining: &'a dyn Fn(JobId) -> u64,
+    /// The *predicted* remaining execution time from the configured
+    /// [`RuntimeEstimator`](crate::sched::predict::RuntimeEstimator) —
+    /// what the prediction-aware policies ([`psrtf`], [`fitgpp_pr`]) rank
+    /// victims on. Under the oracle estimator this equals
+    /// `oracle_remaining` exactly.
+    pub predicted_remaining: &'a dyn Fn(JobId) -> f64,
 }
 
 impl<'a> PolicyCtx<'a> {
@@ -257,6 +299,10 @@ pub fn build_policy(kind: &PolicyKind) -> Box<dyn PreemptionPolicy> {
         PolicyKind::Rand => Box::new(rand_policy::Rand),
         PolicyKind::Srtf => Box::new(srtf::Srtf),
         PolicyKind::Youngest => Box::new(youngest::Youngest),
+        PolicyKind::PSrtf => Box::new(psrtf::PSrtf),
+        PolicyKind::FitGppPr { s, p_max } => {
+            Box::new(fitgpp_pr::FitGppPr { s: *s, p_max: *p_max })
+        }
     }
 }
 
@@ -350,8 +396,18 @@ mod tests {
             PolicyKind::parse("fitgpp:s=2,p=3"),
             Some(PolicyKind::FitGpp { s: 2.0, p_max: Some(3) })
         );
+        assert_eq!(PolicyKind::parse("psrtf"), Some(PolicyKind::PSrtf));
+        assert_eq!(
+            PolicyKind::parse("fitgpp_pr"),
+            Some(PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) })
+        );
+        assert_eq!(
+            PolicyKind::parse("fitgpp-pr:s=8,p=inf"),
+            Some(PolicyKind::FitGppPr { s: 8.0, p_max: None })
+        );
         assert_eq!(PolicyKind::parse("bogus"), None);
         assert_eq!(PolicyKind::parse("fitgpp:q=1"), None);
+        assert_eq!(PolicyKind::parse("fitgpp_pr:q=1"), None);
     }
 
     #[test]
@@ -366,6 +422,10 @@ mod tests {
         assert!(PolicyKind::Youngest.preempts());
         assert!(PolicyKind::Youngest.te_bypass());
         assert!(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }.preempts());
+        assert!(PolicyKind::PSrtf.preempts());
+        assert!(PolicyKind::PSrtf.te_bypass());
+        assert!(PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) }.preempts());
+        assert!(PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) }.te_bypass());
     }
 
     #[test]
@@ -374,6 +434,15 @@ mod tests {
         assert_eq!(PolicyKind::FitGpp { s: 4.0, p_max: None }.name(), "FitGpp(s=4,P=inf)");
         assert_eq!(PolicyKind::Srtf.name(), "SRTF");
         assert_eq!(PolicyKind::Youngest.name(), "Youngest");
+        assert_eq!(PolicyKind::PSrtf.name(), "P-SRTF");
+        assert_eq!(
+            PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) }.name(),
+            "FitGpp-PR(s=4,P=1)"
+        );
+        assert_eq!(
+            PolicyKind::FitGppPr { s: 4.0, p_max: None }.name(),
+            "FitGpp-PR(s=4,P=inf)"
+        );
     }
 
     #[test]
@@ -389,6 +458,7 @@ mod tests {
             jobs: &jobs,
             effective_free: &free,
             oracle_remaining: &oracle,
+            predicted_remaining: &|_: JobId| 0.0,
         };
         let te = JobSpec::new(0, crate::job::JobClass::Te, ResourceVec::new(1.0, 1.0, 0.0), 0, 5, 0);
         let mut rng = Pcg64::new(1);
@@ -400,6 +470,8 @@ mod tests {
             PolicyKind::Rand,
             PolicyKind::Srtf,
             PolicyKind::Youngest,
+            PolicyKind::PSrtf,
+            PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) },
         ] {
             let p = build_policy(&kind);
             // An empty cluster view must never yield victims.

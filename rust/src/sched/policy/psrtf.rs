@@ -1,0 +1,131 @@
+//! P-SRTF — predicted-Shortest-Remaining-Time-First eviction.
+//!
+//! The same greedy global loop as [`srtf`](super::srtf), but victims are
+//! ordered by the *predicted* remaining execution time from the configured
+//! [`RuntimeEstimator`](crate::sched::predict::RuntimeEstimator)
+//! (`PolicyCtx::predicted_remaining`) instead of the perfect oracle. This
+//! is the policy the prediction-assisted scheduling literature actually
+//! deploys — real systems don't have oracles — and the error-sensitivity
+//! sweep measures how fast its advantage decays as predictions degrade.
+//!
+//! Under the oracle estimator, predicted remaining equals true remaining
+//! exactly, so P-SRTF is byte-identical to SRTF (pinned by
+//! `tests/prediction.rs`); the same holds for a cold-start `ClassEwma`,
+//! whose declared-runtime fallback coincides with the simulator's ground
+//! truth.
+//!
+//! Ties (equal predictions) break toward the lower job id, mirroring SRTF,
+//! so determinism is preserved even when an estimator collapses many jobs
+//! onto one predicted value (e.g. a per-class EWMA).
+
+use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use crate::job::JobSpec;
+use crate::stats::rng::Pcg64;
+
+/// Trait wrapper for [`plan`].
+pub struct PSrtf;
+
+impl PreemptionPolicy for PSrtf {
+    fn plan(
+        &self,
+        te: &JobSpec,
+        ctx: &PolicyCtx<'_>,
+        _rng: &mut Pcg64,
+    ) -> Option<PreemptionPlan> {
+        plan(te, ctx)
+    }
+}
+
+/// Plan P-SRTF eviction: all running BE jobs sorted by predicted remaining
+/// time ascending (ties toward the lower id), fed to the greedy global
+/// loop.
+pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
+    let mut pool = ctx.running_be();
+    pool.sort_by(|a, b| {
+        (ctx.predicted_remaining)(*a)
+            .total_cmp(&(ctx.predicted_remaining)(*b))
+            .then(a.0.cmp(&b.0))
+    });
+    let mut it = pool.into_iter();
+    greedy_global_plan(te, ctx, || it.next())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterSpec, NodeId};
+    use crate::job::{Job, JobClass, JobId, JobSpec};
+    use crate::resources::ResourceVec;
+    use crate::sched::policy::PolicyCtx;
+
+    fn setup(
+        nodes: usize,
+        placements: &[(u32, ResourceVec, u64)], // (node, demand, remaining)
+    ) -> (Cluster, crate::job_table::JobTable, Vec<u64>) {
+        let spec = ClusterSpec::tiny(nodes);
+        let mut cluster = Cluster::new(&spec);
+        let mut jobs = Vec::new();
+        let mut remaining = Vec::new();
+        for (i, (node, demand, rem)) in placements.iter().enumerate() {
+            let spec = JobSpec::new(i as u32, JobClass::Be, *demand, 0, (*rem).max(1), 0);
+            let mut job = Job::new(spec);
+            job.start(NodeId(*node), 0);
+            cluster.bind(JobId(i as u32), *demand, NodeId(*node));
+            jobs.push(job);
+            remaining.push(*rem);
+        }
+        (cluster, crate::job_table::JobTable::from_jobs(jobs), remaining)
+    }
+
+    fn te(demand: ResourceVec) -> JobSpec {
+        JobSpec::new(999, JobClass::Te, demand, 0, 5, 0)
+    }
+
+    #[test]
+    fn picks_shortest_predicted_remaining_globally() {
+        let d = ResourceVec::new(8.0, 64.0, 2.0);
+        let (cluster, jobs, rem) = setup(2, &[(0, d, 100), (1, d, 5)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let pred = move |id: JobId| rem[id.0 as usize] as f64;
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &pred };
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        assert_eq!(plan.victims, vec![JobId(1)], "predicted-5 job is evicted first");
+        assert_eq!(plan.node, NodeId(1));
+    }
+
+    #[test]
+    fn predictions_override_the_oracle() {
+        // True remaining says evict job 1; the estimator says job 0. The
+        // policy must follow the estimator — that's the whole point (and
+        // the sensitivity sweep's mechanism).
+        let d = ResourceVec::new(8.0, 64.0, 2.0);
+        let (cluster, jobs, rem) = setup(2, &[(0, d, 100), (1, d, 5)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let oracle = move |id: JobId| rem[id.0 as usize];
+        let pred = |id: JobId| if id.0 == 0 { 1.0 } else { 1000.0 };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &pred };
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        assert_eq!(plan.victims, vec![JobId(0)]);
+        assert_eq!(plan.node, NodeId(0));
+    }
+
+    #[test]
+    fn ties_break_to_lower_id() {
+        let d = ResourceVec::new(16.0, 128.0, 4.0);
+        let (cluster, jobs, _) = setup(1, &[(0, d, 10), (0, d, 10)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        // A class-level estimator collapsing both jobs onto one prediction.
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &|_: JobId| 10.0 };
+        let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        assert_eq!(p.victims, vec![JobId(0), JobId(1)]);
+    }
+
+    #[test]
+    fn infeasible_everywhere_returns_none() {
+        let d = ResourceVec::new(4.0, 32.0, 2.0);
+        let (cluster, jobs, _) = setup(1, &[(0, d, 10)]);
+        let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &|_: JobId| 10.0 };
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
+    }
+}

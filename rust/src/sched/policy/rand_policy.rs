@@ -87,7 +87,7 @@ mod tests {
         let d = ResourceVec::new(8.0, 64.0, 2.0);
         let (cluster, jobs) = setup(2, &[(0, d), (0, d), (1, d)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         for seed in 0..32 {
             let mut rng = Pcg64::new(seed);
             let want = ResourceVec::new(4.0, 32.0, 8.0);
@@ -115,7 +115,7 @@ mod tests {
         let d = ResourceVec::new(4.0, 32.0, 1.0);
         let (cluster, jobs) = setup(1, &[(0, d), (0, d), (0, d), (0, d)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         for seed in 0..16 {
             let mut rng = Pcg64::new(seed);
             let p = plan(&te(ResourceVec::new(24.0, 200.0, 4.0)), &ctx, &mut rng, None).unwrap();
@@ -132,7 +132,7 @@ mod tests {
         let d = ResourceVec::new(4.0, 32.0, 1.0);
         let (cluster, jobs) = setup(4, &[(0, d), (1, d), (2, d), (3, d)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         let want = ResourceVec::new(30.0, 230.0, 8.0);
         let mut seen = std::collections::HashSet::new();
         for seed in 0..64 {
@@ -154,7 +154,7 @@ mod tests {
         jobs[JobId(0)].preemptions = 1;
         jobs[JobId(1)].preemptions = 1;
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         let mut rng = Pcg64::new(1);
         assert!(plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut rng, Some(1)).is_none());
         // Without the cap a plan exists.
@@ -165,7 +165,7 @@ mod tests {
     fn none_when_no_be_running() {
         let (cluster, jobs) = setup(1, &[]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         let mut rng = Pcg64::new(1);
         assert!(plan(&te(ResourceVec::new(64.0, 512.0, 16.0)), &ctx, &mut rng, None).is_none());
     }

@@ -79,7 +79,7 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 100), (1, d, 5)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
         let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
         assert_eq!(plan.victims, vec![JobId(1)], "remaining-5 job is evicted first");
         assert_eq!(plan.node, NodeId(1));
@@ -91,7 +91,7 @@ mod tests {
         let (cluster, jobs, rem) = setup(1, &[(0, d, 10), (0, d, 10)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
         let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
         assert_eq!(p.victims, vec![JobId(0), JobId(1)]);
     }
@@ -102,7 +102,7 @@ mod tests {
         let (cluster, jobs, rem) = setup(1, &[(0, d, 10)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
         assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
     }
 }

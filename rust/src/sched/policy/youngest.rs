@@ -83,7 +83,7 @@ mod tests {
         let d = ResourceVec::new(8.0, 64.0, 2.0);
         let (cluster, jobs) = setup(2, &[(0, d, 0), (1, d, 40)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
         assert_eq!(p.victims, vec![JobId(1)], "submitted-at-40 job is youngest");
         assert_eq!(p.node, NodeId(1));
@@ -94,7 +94,7 @@ mod tests {
         let d = ResourceVec::new(16.0, 128.0, 4.0);
         let (cluster, jobs) = setup(1, &[(0, d, 7), (0, d, 7)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         // Needs one half-node victim: the higher id (later submission
         // within the minute) is the youngest.
         let p = plan(&te(d), &ctx).unwrap();
@@ -106,7 +106,7 @@ mod tests {
         let d = ResourceVec::new(16.0, 128.0, 4.0);
         let (cluster, jobs) = setup(2, &[(0, d, 1), (0, d, 2), (1, d, 3), (1, d, 4)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         // Whole-node demand: evict submit-4 (node 1) — no fit, aggregate
         // short; evict submit-3 (node 1) — node 1 now fits entirely.
         let p = plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx).unwrap();
@@ -119,7 +119,7 @@ mod tests {
         let d = ResourceVec::new(4.0, 32.0, 2.0);
         let (cluster, jobs) = setup(1, &[(0, d, 0)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE };
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
         assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
     }
 }

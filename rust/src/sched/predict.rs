@@ -1,0 +1,533 @@
+//! Runtime estimators: predicted total/remaining execution time for the
+//! prediction-aware policies.
+//!
+//! FitGpp deliberately schedules on *declared* attributes only; the
+//! prediction-assisted literature (e.g. DL2, prediction-assisted online
+//! scheduling) shows that even noisy runtime predictions beat
+//! attribute-only victim ranking. This module supplies the estimate:
+//!
+//! * [`EstimatorKind`] is plain data — the config/CLI/sweep surface — and
+//!   [`build_estimator`] turns it into behaviour, mirroring the
+//!   [`PolicyKind`](crate::sched::policy::PolicyKind)/`build_policy`
+//!   layering.
+//! * [`RuntimeEstimator`] is the object-safe behaviour trait with three
+//!   implementations: [`Oracle`] (perfect predictions — the upper bound),
+//!   [`ClassEwma`] (per-tenant/per-class online EWMA over completed-job
+//!   runtimes, backed by a mergeable [`QuantileSketch`] per bucket), and
+//!   [`Noisy`] (oracle × a seeded multiplicative log-normal error — the
+//!   sensitivity axis).
+//! * [`SharedEstimator`] is the cloneable handle that closes the loop: one
+//!   clone subscribes to the scheduler's event stream (folding every
+//!   [`SchedulerEvent::Finished`] record in), the other backs the
+//!   [`PolicyCtx::predicted_remaining`](crate::sched::policy::PolicyCtx)
+//!   closure the policies read.
+//!
+//! ## Engine invariance
+//!
+//! Estimator state changes only on `Finished` events, which the controller
+//! emits *after* the scheduling round they belong to — so a completion at
+//! minute `T` influences predictions from minute `T+1` on, identically
+//! under the per-minute and event-horizon engines (the event streams
+//! themselves are pinned byte-identical across engines). A prediction for
+//! a given job at a given minute is therefore a pure function of
+//! `(workload prefix, config, seed)`, and the `Noisy(sigma=0) == Oracle`
+//! acceptance pin holds across both engines for every policy.
+
+use crate::job::{Job, JobClass, JobSpec};
+use crate::sched::control::{EventSubscriber, SchedulerEvent};
+use crate::sim::JobRecord;
+use crate::stats::rng::Pcg64;
+use crate::stats::sketch::QuantileSketch;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Which runtime estimator feeds the prediction-aware policies. Plain data
+/// (configs, CLI flags, sweep axes); turned into behaviour by
+/// [`build_estimator`] exactly once per run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EstimatorKind {
+    /// Perfect predictions: the declared execution time, which in the
+    /// simulator *is* the true total — the upper bound for what
+    /// prediction-aware policies can gain.
+    Oracle,
+    /// Per-(tenant, class) online EWMA over completed-job runtimes.
+    /// `alpha` in `(0, 1]` weights the newest completion; cold buckets
+    /// (zero completions) fall back to the declared runtime.
+    ClassEwma {
+        /// EWMA smoothing factor for new completions.
+        alpha: f64,
+    },
+    /// Oracle × a multiplicative log-normal error `exp(sigma · z)` with
+    /// `z ~ N(0, 1)` drawn deterministically per job id (seeded). With
+    /// `sigma == 0` the multiplier is exactly 1, byte-identical to
+    /// [`EstimatorKind::Oracle`].
+    Noisy {
+        /// Log-space standard deviation of the multiplicative error.
+        sigma: f64,
+    },
+}
+
+impl Default for EstimatorKind {
+    /// [`EstimatorKind::Oracle`] — byte-identical to the pre-prediction
+    /// scheduler for every policy that ignores predictions.
+    fn default() -> Self {
+        EstimatorKind::Oracle
+    }
+}
+
+impl EstimatorKind {
+    /// Human-readable name (tables, CSV rows, CLI echo).
+    pub fn name(&self) -> String {
+        match self {
+            EstimatorKind::Oracle => "oracle".into(),
+            EstimatorKind::ClassEwma { alpha } => format!("ewma(a={alpha})"),
+            EstimatorKind::Noisy { sigma } => format!("noisy(s={sigma})"),
+        }
+    }
+
+    /// Parse from a CLI string: `oracle`, `ewma`, `ewma:alpha=0.5`,
+    /// `noisy`, `noisy:sigma=0.5`. Defaults: `alpha = 0.2`,
+    /// `sigma = 0.5`. Rejects `alpha` outside `(0, 1]` and negative or
+    /// non-finite `sigma`.
+    pub fn parse(s: &str) -> Option<EstimatorKind> {
+        let lower = s.to_ascii_lowercase();
+        let (head, rest) = match lower.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (lower.as_str(), None),
+        };
+        match head {
+            "oracle" => {
+                if rest.is_some() {
+                    return None;
+                }
+                Some(EstimatorKind::Oracle)
+            }
+            "ewma" => {
+                let mut alpha = 0.2;
+                if let Some(rest) = rest {
+                    for kv in rest.split(',') {
+                        let (k, v) = kv.split_once('=')?;
+                        match k {
+                            "alpha" | "a" => alpha = v.parse().ok()?,
+                            _ => return None,
+                        }
+                    }
+                }
+                if !(alpha > 0.0 && alpha <= 1.0) {
+                    return None;
+                }
+                Some(EstimatorKind::ClassEwma { alpha })
+            }
+            "noisy" => {
+                let mut sigma = 0.5;
+                if let Some(rest) = rest {
+                    for kv in rest.split(',') {
+                        let (k, v) = kv.split_once('=')?;
+                        match k {
+                            "sigma" | "s" => sigma = v.parse().ok()?,
+                            _ => return None,
+                        }
+                    }
+                }
+                if !(sigma.is_finite() && sigma >= 0.0) {
+                    return None;
+                }
+                Some(EstimatorKind::Noisy { sigma })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// An online estimator of total job runtime. Object-safe: the scheduler
+/// holds one behind a [`SharedEstimator`] handle built by
+/// [`build_estimator`] at construction.
+///
+/// # Contract
+///
+/// * **Determinism.** `predict_total` must be a pure function of the spec
+///   and the sequence of records observed so far (plus the construction
+///   seed) — never wall clock, thread identity, or global entropy — so
+///   both simulator drive modes stay byte-identical.
+/// * **Finite predictions.** Every prediction must be a finite,
+///   non-negative `f64`; policies sort on these values.
+/// * **Observation source.** `observe` receives exactly the `Finished`
+///   records of the run, in completion order (the controller's normalized
+///   event order).
+pub trait RuntimeEstimator: Send {
+    /// Predict the job's *total* execution time in minutes.
+    fn predict_total(&self, spec: &JobSpec) -> f64;
+
+    /// Fold one completed job's record into the estimator state.
+    fn observe(&mut self, rec: &JobRecord);
+
+    /// How many records have been observed (CI smoke checks assert this is
+    /// nonzero on a streamed run).
+    fn updates(&self) -> u64;
+
+    /// Human-readable name (matches [`EstimatorKind::name`]).
+    fn name(&self) -> String;
+}
+
+/// Perfect predictions: the declared execution time (the simulator's
+/// ground truth). Observations are counted but otherwise ignored.
+#[derive(Debug, Default)]
+pub struct Oracle {
+    updates: u64,
+}
+
+impl RuntimeEstimator for Oracle {
+    fn predict_total(&self, spec: &JobSpec) -> f64 {
+        spec.exec_time as f64
+    }
+
+    fn observe(&mut self, _rec: &JobRecord) {
+        self.updates += 1;
+    }
+
+    fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    fn name(&self) -> String {
+        EstimatorKind::Oracle.name()
+    }
+}
+
+/// One (tenant, class) bucket of [`ClassEwma`] state.
+#[derive(Debug, Clone)]
+struct EwmaBucket {
+    /// EWMA of completed runtimes in this bucket.
+    ewma: f64,
+    /// Completions folded in so far.
+    n: u64,
+    /// Mergeable distribution of the bucket's completed runtimes
+    /// (diagnostics; quantiles of what the EWMA is tracking).
+    sketch: QuantileSketch,
+}
+
+/// Per-tenant/per-class online EWMA over completed-job runtimes, with a
+/// mergeable [`QuantileSketch`] per bucket recording the runtime
+/// distribution the point estimate summarizes. A bucket with zero
+/// completions falls back to the declared runtime (the cold-start pin:
+/// with no observations, `predicted-SRTF` degrades to SRTF byte-for-byte
+/// because declared equals true runtime in the simulator).
+#[derive(Debug)]
+pub struct ClassEwma {
+    /// EWMA smoothing factor in `(0, 1]`.
+    alpha: f64,
+    /// State per `(tenant id, class)` bucket. `BTreeMap` for deterministic
+    /// iteration in diagnostics.
+    buckets: BTreeMap<(u32, JobClassKey), EwmaBucket>,
+    updates: u64,
+}
+
+/// `JobClass` as an orderable map key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum JobClassKey {
+    /// Trial-and-error.
+    Te,
+    /// Best-effort.
+    Be,
+}
+
+fn class_key(c: JobClass) -> JobClassKey {
+    match c {
+        JobClass::Te => JobClassKey::Te,
+        JobClass::Be => JobClassKey::Be,
+    }
+}
+
+impl ClassEwma {
+    /// A cold estimator with smoothing factor `alpha`.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of range: {alpha}");
+        ClassEwma { alpha, buckets: BTreeMap::new(), updates: 0 }
+    }
+
+    /// The current per-bucket mean for `(tenant, class)`, if the bucket has
+    /// seen any completions (tests; diagnostics).
+    pub fn bucket_mean(&self, tenant: u32, class: JobClass) -> Option<f64> {
+        self.buckets
+            .get(&(tenant, class_key(class)))
+            .filter(|b| b.n > 0)
+            .map(|b| b.ewma)
+    }
+}
+
+impl RuntimeEstimator for ClassEwma {
+    fn predict_total(&self, spec: &JobSpec) -> f64 {
+        match self.buckets.get(&(spec.tenant.0, class_key(spec.class))) {
+            Some(b) if b.n > 0 => b.ewma,
+            _ => spec.exec_time as f64, // cold start: declared runtime
+        }
+    }
+
+    fn observe(&mut self, rec: &JobRecord) {
+        self.updates += 1;
+        let x = rec.exec_time as f64;
+        let b = self
+            .buckets
+            .entry((rec.tenant.0, class_key(rec.class)))
+            .or_insert_with(|| EwmaBucket { ewma: 0.0, n: 0, sketch: QuantileSketch::new() });
+        b.ewma = if b.n == 0 { x } else { self.alpha * x + (1.0 - self.alpha) * b.ewma };
+        b.n += 1;
+        b.sketch.insert(x);
+    }
+
+    fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    fn name(&self) -> String {
+        EstimatorKind::ClassEwma { alpha: self.alpha }.name()
+    }
+}
+
+/// Oracle × a seeded multiplicative log-normal error: the prediction for
+/// job `j` is `exec_time_j · exp(sigma · z_j)` with `z_j ~ N(0, 1)` drawn
+/// deterministically from `(seed, j.id)` — no shared RNG state, so the
+/// error a job sees is independent of when (and under which engine) the
+/// policy asks.
+#[derive(Debug)]
+pub struct Noisy {
+    sigma: f64,
+    seed: u64,
+    updates: u64,
+}
+
+impl Noisy {
+    /// A noisy oracle with log-space error `sigma`, seeded.
+    pub fn new(sigma: f64, seed: u64) -> Self {
+        assert!(sigma.is_finite() && sigma >= 0.0, "sigma out of range: {sigma}");
+        Noisy { sigma, seed, updates: 0 }
+    }
+
+    /// The per-job error multiplier `exp(sigma · z_id)`.
+    fn multiplier(&self, id: u32) -> f64 {
+        if self.sigma == 0.0 {
+            // Exactly 1.0, so sigma = 0 is byte-identical to Oracle.
+            return 1.0;
+        }
+        let mut rng = Pcg64::new(self.seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        // Box-Muller, matching stats::dist::Normal.
+        let u1 = 1.0 - rng.next_f64();
+        let u2 = rng.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        (self.sigma * z).exp()
+    }
+}
+
+impl RuntimeEstimator for Noisy {
+    fn predict_total(&self, spec: &JobSpec) -> f64 {
+        spec.exec_time as f64 * self.multiplier(spec.id.0)
+    }
+
+    fn observe(&mut self, _rec: &JobRecord) {
+        self.updates += 1;
+    }
+
+    fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    fn name(&self) -> String {
+        EstimatorKind::Noisy { sigma: self.sigma }.name()
+    }
+}
+
+/// Turn a plain-data [`EstimatorKind`] into behaviour. Called once per run
+/// (scheduler construction). `seed` drives only the [`Noisy`] error draws.
+pub fn build_estimator(kind: &EstimatorKind, seed: u64) -> Box<dyn RuntimeEstimator> {
+    match kind {
+        EstimatorKind::Oracle => Box::new(Oracle::default()),
+        EstimatorKind::ClassEwma { alpha } => Box::new(ClassEwma::new(*alpha)),
+        EstimatorKind::Noisy { sigma } => Box::new(Noisy::new(*sigma, seed)),
+    }
+}
+
+/// Cloneable handle around a boxed [`RuntimeEstimator`]: one clone is
+/// subscribed to the controller's event stream (folding `Finished` records
+/// in), another backs the policies' `predicted_remaining` closure. The
+/// mutex is uncontended — simulation runs are single-threaded; sweeps give
+/// every cell its own scheduler (and therefore its own estimator).
+#[derive(Clone)]
+pub struct SharedEstimator(Arc<Mutex<Box<dyn RuntimeEstimator>>>);
+
+impl SharedEstimator {
+    /// Build the estimator for `kind` and wrap it.
+    pub fn new(kind: &EstimatorKind, seed: u64) -> Self {
+        SharedEstimator(Arc::new(Mutex::new(build_estimator(kind, seed))))
+    }
+
+    /// Predicted *total* execution time for `spec`.
+    pub fn predict_total(&self, spec: &JobSpec) -> f64 {
+        self.0.lock().unwrap().predict_total(spec)
+    }
+
+    /// Predicted *remaining* execution time for a live job: the predicted
+    /// total minus the progress already made, clamped at zero. Under
+    /// [`Oracle`] this equals `job.remaining` exactly.
+    pub fn predicted_remaining(&self, job: &Job) -> f64 {
+        let elapsed = (job.spec.exec_time - job.remaining) as f64;
+        (self.predict_total(&job.spec) - elapsed).max(0.0)
+    }
+
+    /// Fold one completed job's record in (also reachable by subscribing a
+    /// clone to the event stream).
+    pub fn observe(&self, rec: &JobRecord) {
+        self.0.lock().unwrap().observe(rec);
+    }
+
+    /// How many `Finished` records have been folded in.
+    pub fn updates(&self) -> u64 {
+        self.0.lock().unwrap().updates()
+    }
+
+    /// The wrapped estimator's name.
+    pub fn name(&self) -> String {
+        self.0.lock().unwrap().name()
+    }
+}
+
+impl EventSubscriber for SharedEstimator {
+    fn on_event(&mut self, ev: &SchedulerEvent) {
+        if let SchedulerEvent::Finished { record, .. } = ev {
+            self.observe(record);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobId, TenantId};
+    use crate::resources::ResourceVec;
+
+    fn spec(id: u32, class: JobClass, exec: u64, tenant: u32) -> JobSpec {
+        JobSpec::new(id, class, ResourceVec::new(4.0, 32.0, 1.0), 0, exec, 0)
+            .with_tenant(TenantId(tenant))
+    }
+
+    fn record(id: u32, class: JobClass, exec: u64, tenant: u32) -> JobRecord {
+        let mut j = Job::new(spec(id, class, exec, tenant));
+        j.start(crate::cluster::NodeId(0), 0);
+        j.complete(exec);
+        JobRecord::from_job(&j)
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(EstimatorKind::parse("oracle"), Some(EstimatorKind::Oracle));
+        assert_eq!(EstimatorKind::parse("ORACLE"), Some(EstimatorKind::Oracle));
+        assert_eq!(
+            EstimatorKind::parse("ewma"),
+            Some(EstimatorKind::ClassEwma { alpha: 0.2 })
+        );
+        assert_eq!(
+            EstimatorKind::parse("ewma:alpha=0.5"),
+            Some(EstimatorKind::ClassEwma { alpha: 0.5 })
+        );
+        assert_eq!(
+            EstimatorKind::parse("noisy:sigma=0.25"),
+            Some(EstimatorKind::Noisy { sigma: 0.25 })
+        );
+        assert_eq!(
+            EstimatorKind::parse("noisy:s=0"),
+            Some(EstimatorKind::Noisy { sigma: 0.0 })
+        );
+        assert_eq!(EstimatorKind::parse("ewma:alpha=0"), None);
+        assert_eq!(EstimatorKind::parse("ewma:alpha=1.5"), None);
+        assert_eq!(EstimatorKind::parse("noisy:sigma=-1"), None);
+        assert_eq!(EstimatorKind::parse("bogus"), None);
+        assert_eq!(EstimatorKind::parse("ewma:q=1"), None);
+    }
+
+    #[test]
+    fn names_render() {
+        assert_eq!(EstimatorKind::Oracle.name(), "oracle");
+        assert_eq!(EstimatorKind::ClassEwma { alpha: 0.2 }.name(), "ewma(a=0.2)");
+        assert_eq!(EstimatorKind::Noisy { sigma: 0.5 }.name(), "noisy(s=0.5)");
+    }
+
+    #[test]
+    fn oracle_predicts_declared_total_and_exact_remaining() {
+        let est = SharedEstimator::new(&EstimatorKind::Oracle, 7);
+        let s = spec(0, JobClass::Be, 40, 0);
+        assert_eq!(est.predict_total(&s), 40.0);
+        let mut j = Job::new(s);
+        j.start(crate::cluster::NodeId(0), 0);
+        j.remaining = 13;
+        assert_eq!(est.predicted_remaining(&j), 13.0);
+    }
+
+    #[test]
+    fn ewma_cold_start_falls_back_to_declared() {
+        let est = ClassEwma::new(0.3);
+        assert_eq!(est.predict_total(&spec(0, JobClass::Be, 25, 0)), 25.0);
+        assert_eq!(est.bucket_mean(0, JobClass::Be), None);
+    }
+
+    #[test]
+    fn ewma_tracks_per_bucket_means() {
+        let mut est = ClassEwma::new(0.5);
+        est.observe(&record(0, JobClass::Be, 10, 0));
+        est.observe(&record(1, JobClass::Be, 20, 0));
+        // EWMA after [10, 20] with alpha 0.5: 0.5*20 + 0.5*10 = 15.
+        assert_eq!(est.predict_total(&spec(9, JobClass::Be, 999, 0)), 15.0);
+        // Other buckets stay cold.
+        assert_eq!(est.predict_total(&spec(9, JobClass::Te, 7, 0)), 7.0);
+        assert_eq!(est.predict_total(&spec(9, JobClass::Be, 7, 1)), 7.0);
+        assert_eq!(est.updates(), 2);
+    }
+
+    #[test]
+    fn ewma_converges_to_stationary_mean() {
+        let mut est = ClassEwma::new(0.1);
+        for i in 0..500 {
+            est.observe(&record(i, JobClass::Be, 30, 0));
+        }
+        let p = est.predict_total(&spec(1000, JobClass::Be, 1, 0));
+        assert!((p - 30.0).abs() < 1e-9, "stationary input pins the EWMA: {p}");
+    }
+
+    #[test]
+    fn noisy_sigma_zero_is_bitwise_oracle() {
+        let noisy = SharedEstimator::new(&EstimatorKind::Noisy { sigma: 0.0 }, 42);
+        let oracle = SharedEstimator::new(&EstimatorKind::Oracle, 42);
+        for id in 0..200u32 {
+            let s = spec(id, JobClass::Be, 1 + (id as u64 * 7) % 300, id % 4);
+            assert_eq!(
+                noisy.predict_total(&s).to_bits(),
+                oracle.predict_total(&s).to_bits(),
+                "job {id}"
+            );
+        }
+    }
+
+    #[test]
+    fn noisy_is_deterministic_per_seed_and_spread_per_job() {
+        let a = Noisy::new(0.5, 7);
+        let b = Noisy::new(0.5, 7);
+        let c = Noisy::new(0.5, 8);
+        let s0 = spec(0, JobClass::Be, 100, 0);
+        let s1 = spec(1, JobClass::Be, 100, 0);
+        assert_eq!(a.predict_total(&s0).to_bits(), b.predict_total(&s0).to_bits());
+        assert_ne!(a.predict_total(&s0).to_bits(), c.predict_total(&s0).to_bits());
+        assert_ne!(a.predict_total(&s0).to_bits(), a.predict_total(&s1).to_bits());
+        assert!(a.predict_total(&s0) > 0.0 && a.predict_total(&s0).is_finite());
+    }
+
+    #[test]
+    fn shared_estimator_folds_finished_events() {
+        let mut est = SharedEstimator::new(&EstimatorKind::ClassEwma { alpha: 0.5 }, 7);
+        let sub_view = est.clone();
+        let rec = record(0, JobClass::Be, 12, 0);
+        est.on_event(&SchedulerEvent::Finished { at: 12, job: JobId(0), record: rec });
+        assert_eq!(sub_view.updates(), 1, "clones share state");
+        // Non-Finished events are ignored.
+        est.on_event(&SchedulerEvent::Preempted { at: 1, job: JobId(0) });
+        assert_eq!(sub_view.updates(), 1);
+        assert_eq!(sub_view.predict_total(&spec(9, JobClass::Be, 999, 0)), 12.0);
+    }
+}

@@ -55,6 +55,7 @@ use crate::resources::ResourceVec;
 use crate::sched::admission::DisciplineKind;
 use crate::sched::control::{ClusterController, EventSubscriber};
 use crate::sched::policy::PolicyKind;
+use crate::sched::predict::EstimatorKind;
 use crate::sched::{SchedConfig, SchedStats};
 use crate::sim::scenario::{ScenarioDriver, ScenarioScript};
 use crate::util::json::Json;
@@ -95,6 +96,11 @@ pub struct SimConfig {
     pub progress_during_grace: bool,
     /// Seed for the policy RNG (RAND victims, FitGpp fallback).
     pub seed: u64,
+    /// Runtime estimator feeding the prediction-aware policies
+    /// ([`EstimatorKind::Oracle`] by default — byte-identical to the
+    /// pre-prediction simulator for every policy that ignores
+    /// predictions).
+    pub estimator: EstimatorKind,
     /// Time-advance engine (event-horizon by default; per-minute is the
     /// equivalence oracle).
     pub engine: SimEngine,
@@ -137,6 +143,7 @@ impl SimConfig {
             placement: Placement::BestFit,
             progress_during_grace: false,
             seed: 0x5EED,
+            estimator: EstimatorKind::Oracle,
             engine: SimEngine::default(),
             drain: true,
             tail_ticks: 0,
@@ -234,6 +241,10 @@ pub struct SimResult {
     /// Whether full records were kept (selects exact vs sketch-backed
     /// reports).
     pub record_jobs: bool,
+    /// `Finished` records folded into the runtime estimator over the run
+    /// (the CI prediction-smoke greps this; equals completions whenever an
+    /// estimator is attached, which is always).
+    pub prediction_updates: u64,
 }
 
 impl SimResult {
@@ -381,6 +392,7 @@ impl SimResult {
             ("unfinished", Json::num(self.unfinished as f64)),
             ("jobs_seen", Json::num(self.metrics.jobs_seen as f64)),
             ("peak_live", Json::num(self.peak_live as f64)),
+            ("prediction_updates", Json::num(self.prediction_updates as f64)),
             ("tenants", self.metrics.tenants_json()),
             (
                 "cancelled",
@@ -472,6 +484,7 @@ impl Simulator {
         sched_cfg.placement = self.cfg.placement;
         sched_cfg.progress_during_grace = self.cfg.progress_during_grace;
         sched_cfg.seed = self.cfg.seed;
+        sched_cfg.estimator = self.cfg.estimator;
         let mut ctl = ClusterController::new(&self.cfg.cluster, sched_cfg);
         ctl.sched.paranoid = self.cfg.paranoid;
         ctl
@@ -688,6 +701,7 @@ impl Simulator {
             unfinished,
             peak_live: jobs.peak_live(),
             record_jobs: self.cfg.record_jobs,
+            prediction_updates: sched.estimator().updates(),
         }
     }
 }
@@ -790,6 +804,8 @@ mod tests {
             PolicyKind::Srtf,
             PolicyKind::Youngest,
             PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+            PolicyKind::PSrtf,
+            PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) },
         ] {
             let run = |engine: SimEngine| {
                 let mut cfg = SimConfig::new(ClusterSpec::tiny(2), policy);

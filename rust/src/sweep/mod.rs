@@ -39,6 +39,7 @@ use crate::metrics::{
 };
 use crate::sched::admission::DisciplineKind;
 use crate::sched::policy::PolicyKind;
+use crate::sched::predict::EstimatorKind;
 use crate::workload::source::TenantAssigner;
 use crate::sim::{SimConfig, SimEngine, Simulator};
 use crate::util::json::Json;
@@ -65,10 +66,14 @@ pub struct CellSpec {
     pub gp_scale: f64,
     /// Workload seed; also used as the simulation's policy-RNG seed.
     pub seed: u64,
+    /// Runtime estimator feeding the prediction-aware policies (the
+    /// error-sensitivity axis; [`EstimatorKind::Oracle`] on every other
+    /// sweep).
+    pub estimator: EstimatorKind,
 }
 
 /// The grid description. Cells are the cross product
-/// `seeds × te_ratios × gp_scales × policies`.
+/// `seeds × te_ratios × gp_scales × estimators × policies`.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
     /// Cluster every cell simulates.
@@ -98,6 +103,11 @@ pub struct SweepSpec {
     pub tenants: u32,
     /// Occupied-Size quota applied to every tenant in every cell.
     pub default_quota: Option<f64>,
+    /// Estimator axis (default `[Oracle]` — a single-element axis leaves
+    /// every pre-prediction grid unchanged). Workload generation is
+    /// estimator-independent, so the axis multiplies cells but not
+    /// generated workloads.
+    pub estimators: Vec<EstimatorKind>,
     /// Worker threads; `0` = `FITGPP_THREADS` env var, else all cores.
     pub threads: usize,
 }
@@ -118,6 +128,7 @@ impl SweepSpec {
             discipline: DisciplineKind::Fifo,
             tenants: 1,
             default_quota: None,
+            estimators: vec![EstimatorKind::Oracle],
             threads: 0,
         }
     }
@@ -215,6 +226,13 @@ impl SweepSpec {
         self
     }
 
+    /// Set the estimator axis (the error-sensitivity sweep).
+    pub fn with_estimators(mut self, estimators: Vec<EstimatorKind>) -> Self {
+        assert!(!estimators.is_empty());
+        self.estimators = estimators;
+        self
+    }
+
     /// Pin the worker-thread count (`1` = serial reference order).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
@@ -241,21 +259,24 @@ impl SweepSpec {
     }
 
     /// Enumerate the grid in deterministic order: seeds (outer) ×
-    /// te_ratios × gp_scales × policies (inner). Cells sharing a workload
-    /// coordinate are contiguous.
+    /// te_ratios × gp_scales × estimators × policies (inner). Cells
+    /// sharing a workload coordinate are contiguous.
     pub fn cells(&self) -> Vec<CellSpec> {
         let mut out = Vec::new();
         for &seed in &self.seeds {
             for &te_ratio in &self.te_ratios {
                 for &gp_scale in &self.gp_scales {
-                    for &policy in &self.policies {
-                        out.push(CellSpec {
-                            index: out.len(),
-                            policy,
-                            te_ratio,
-                            gp_scale,
-                            seed,
-                        });
+                    for &estimator in &self.estimators {
+                        for &policy in &self.policies {
+                            out.push(CellSpec {
+                                index: out.len(),
+                                policy,
+                                te_ratio,
+                                gp_scale,
+                                seed,
+                                estimator,
+                            });
+                        }
                     }
                 }
             }
@@ -330,6 +351,7 @@ impl SweepSpec {
         cfg.progress_during_grace = self.progress_during_grace;
         cfg.discipline = self.discipline;
         cfg.default_quota = self.default_quota;
+        cfg.estimator = cell.estimator;
         run_sim_cell(cell, cfg, workload)
     }
 }
@@ -367,7 +389,8 @@ pub fn paper_policies() -> Vec<PolicyKind> {
 }
 
 /// Every implemented policy: the §4.1 four plus the bypass-only FastLane
-/// ablation and the SRTF / preempt-youngest ablations that ride on the
+/// ablation, the SRTF / preempt-youngest ablations, and the two
+/// prediction-aware policies that ride on the
 /// [`PreemptionPolicy`](crate::sched::policy::PreemptionPolicy) trait.
 pub fn extended_policies() -> Vec<PolicyKind> {
     vec![
@@ -378,6 +401,22 @@ pub fn extended_policies() -> Vec<PolicyKind> {
         PolicyKind::Srtf,
         PolicyKind::Youngest,
         PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        PolicyKind::PSrtf,
+        PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) },
+    ]
+}
+
+/// The estimator axis of the error-sensitivity sweep: exact oracle, the
+/// cold-starting per-class EWMA, a zero-noise control (pinned byte-identical
+/// to the oracle), and three nonzero noise levels.
+pub fn error_sensitivity_estimators() -> Vec<EstimatorKind> {
+    vec![
+        EstimatorKind::Oracle,
+        EstimatorKind::ClassEwma { alpha: 0.2 },
+        EstimatorKind::Noisy { sigma: 0.0 },
+        EstimatorKind::Noisy { sigma: 0.25 },
+        EstimatorKind::Noisy { sigma: 0.5 },
+        EstimatorKind::Noisy { sigma: 1.0 },
     ]
 }
 
@@ -433,6 +472,39 @@ impl SweepResult {
             }
         }
         out
+    }
+
+    /// Distinct estimators, in grid order.
+    pub fn estimators(&self) -> Vec<EstimatorKind> {
+        let mut out: Vec<EstimatorKind> = Vec::new();
+        for c in &self.cells {
+            if !out.contains(&c.cell.estimator) {
+                out.push(c.cell.estimator);
+            }
+        }
+        out
+    }
+
+    /// The prediction-error sensitivity grid: one row per
+    /// (estimator, policy) pair with TE p95 and BE median pooled across
+    /// seeds — how much each policy's latency promise degrades as runtime
+    /// predictions go from exact to badly wrong.
+    pub fn estimator_grid(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["estimator", "policy", "te_p95", "be_p50"]);
+        for est in self.estimators() {
+            for pol in self.policies() {
+                let keep = |c: &CellSpec| c.estimator == est && c.policy == pol;
+                let te = self.pooled_percentiles_where(keep, JobClass::Te);
+                let be = self.pooled_percentiles_where(keep, JobClass::Be);
+                t.row(vec![
+                    est.name(),
+                    pol.name(),
+                    format!("{:.3}", te.p95),
+                    format!("{:.3}", be.p50),
+                ]);
+            }
+        }
+        t
     }
 
     /// Merge the metrics sinks of every cell matching `keep` — the
@@ -513,7 +585,7 @@ impl SweepResult {
             &[
                 "policy", "te_ratio", "gp_scale", "seed", "te_p50", "te_p95", "te_p99",
                 "be_p50", "be_p95", "be_p99", "preempted_frac", "signals", "makespan",
-                "unfinished", "peak_live", "wall_ms",
+                "unfinished", "peak_live", "estimator", "wall_ms",
             ],
         );
         for c in &self.cells {
@@ -533,6 +605,7 @@ impl SweepResult {
                 c.makespan.to_string(),
                 c.unfinished.to_string(),
                 c.peak_live.to_string(),
+                c.cell.estimator.name(),
                 format!("{:.3}", c.wall.as_secs_f64() * 1e3),
             ]);
         }
@@ -565,6 +638,7 @@ impl SweepResult {
                     ("makespan", Json::num(c.makespan as f64)),
                     ("unfinished", Json::num(c.unfinished as f64)),
                     ("peak_live", Json::num(c.peak_live as f64)),
+                    ("estimator", Json::str(&c.cell.estimator.name())),
                     ("wall_ms", Json::num(c.wall.as_secs_f64() * 1e3)),
                 ])
             })
@@ -602,7 +676,14 @@ pub fn compare_on(
         let mut cfg = template.clone();
         cfg.policy = policy;
         run_sim_cell(
-            CellSpec { index, policy, te_ratio, gp_scale: 1.0, seed: template.seed },
+            CellSpec {
+                index,
+                policy,
+                te_ratio,
+                gp_scale: 1.0,
+                seed: template.seed,
+                estimator: template.estimator,
+            },
             cfg,
             workload,
         )
@@ -791,5 +872,48 @@ mod tests {
         assert_eq!(cells[0].cell.policy, PolicyKind::Fifo);
         assert!(cells.iter().all(|c| c.unfinished == 0));
         assert!(cells.iter().all(|c| c.cell.seed == 1));
+    }
+
+    #[test]
+    fn estimator_axis_multiplies_cells_but_not_workloads() {
+        let spec = SweepSpec::new(ClusterSpec::tiny(2), vec![PolicyKind::PSrtf])
+            .with_num_jobs(96)
+            .with_seeds(vec![5, 6])
+            .with_estimators(vec![
+                EstimatorKind::Oracle,
+                EstimatorKind::Noisy { sigma: 0.0 },
+                EstimatorKind::Noisy { sigma: 0.5 },
+            ]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 3, "seeds × estimators × 1 policy");
+        let res = spec.with_threads(2).run();
+        assert_eq!(res.workloads_generated, 2, "estimator axis reuses workloads");
+        assert_eq!(res.estimators().len(), 3);
+
+        // Zero-noise control: every cell under Noisy(sigma=0) matches its
+        // Oracle sibling exactly (CSV rows differ only in the estimator
+        // and wall columns, which sit last).
+        let row = |est: EstimatorKind, seed: u64| {
+            let c = res
+                .cells
+                .iter()
+                .find(|c| c.cell.estimator == est && c.cell.seed == seed)
+                .unwrap();
+            (c.slowdown, c.makespan, c.preemption_signals, c.peak_live)
+        };
+        for &seed in &[5, 6] {
+            assert_eq!(
+                row(EstimatorKind::Oracle, seed),
+                row(EstimatorKind::Noisy { sigma: 0.0 }, seed),
+                "Noisy(0) must be indistinguishable from Oracle"
+            );
+        }
+
+        // The sensitivity grid has one row per (estimator, policy) pair
+        // and the CSV carries the estimator column.
+        let grid = res.estimator_grid("sensitivity");
+        assert_eq!(grid.to_csv().lines().count(), 1 + 3);
+        assert!(res.to_csv().lines().next().unwrap().contains("estimator"));
+        assert!(res.to_csv().contains("noisy(s=0.5)"));
     }
 }

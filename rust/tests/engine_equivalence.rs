@@ -29,8 +29,9 @@ use fitgpp::testkit::{check, gen, PropConfig};
 use fitgpp::workload::synthetic::SyntheticWorkload;
 use fitgpp::workload::Workload;
 
-/// All seven policy kinds (the §4.1 four, the FastLane ablation, and the
-/// two trait-demonstration ablations), FitGpp in two parameterizations.
+/// All policy kinds (the §4.1 four, the FastLane ablation, the
+/// trait-demonstration ablations, and the prediction-aware pair), FitGpp
+/// in two parameterizations.
 fn all_policies() -> Vec<PolicyKind> {
     vec![
         PolicyKind::Fifo,
@@ -41,6 +42,8 @@ fn all_policies() -> Vec<PolicyKind> {
         PolicyKind::Youngest,
         PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
         PolicyKind::FitGpp { s: 2.0, p_max: None },
+        PolicyKind::PSrtf,
+        PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) },
     ]
 }
 
@@ -370,11 +373,13 @@ fn prop_trait_policies_match_pre_refactor_oracle() {
         let remaining: Vec<u64> = jobs.iter().map(|j| j.remaining).collect();
         let jobs = JobTable::from_jobs(jobs);
         let oracle = |id: JobId| remaining[id.0 as usize];
+        let predicted = |id: JobId| remaining[id.0 as usize] as f64;
         let ctx = PolicyCtx {
             cluster: &cluster,
             jobs: &jobs,
             effective_free: &free,
             oracle_remaining: &oracle,
+            predicted_remaining: &predicted,
         };
         let te = JobSpec::new(
             999,
@@ -406,6 +411,14 @@ fn prop_trait_policies_match_pre_refactor_oracle() {
             rng_a.next_u64() == rng_b.next_u64(),
             "RAND consumed different amounts of randomness"
         );
+
+        // P-SRTF: with predictions exactly equal to the oracle (as built
+        // above), the prediction-aware ordering must reproduce SRTF's
+        // plan bit-for-bit.
+        let mut rng_a = Pcg64::new(seed);
+        let got = build_policy(&PolicyKind::PSrtf).plan(&te, &ctx, &mut rng_a);
+        let want = fitgpp::sched::policy::srtf::plan(&te, &ctx);
+        prop_assert!(got == want, "P-SRTF with oracle predictions diverged from SRTF");
 
         // FitGpp: the trait object delegates to the (unchanged) Eq. 1-4
         // implementation; pin the delegation including the RNG fallback.

@@ -35,6 +35,8 @@ fn all_policies() -> Vec<PolicyKind> {
         PolicyKind::Srtf,
         PolicyKind::Youngest,
         PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        PolicyKind::PSrtf,
+        PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) },
     ]
 }
 
