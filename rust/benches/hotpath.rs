@@ -1,11 +1,17 @@
 //! Scheduler hot-path micro-benchmarks (the §Perf L3 targets) plus design
 //! ablations called out in DESIGN.md:
 //!
+//! * **per-op microbenches with allocation counts** — steady quiescent
+//!   tick, admission round on a blocked queue, a full
+//!   place→complete→retire event cycle, and a clock push/pop cycle, each
+//!   reported as ns/op *and* allocs/op via a counting global allocator
+//!   (this bench binary only). The allocation-free hot-path guarantee is
+//!   machine-checked: `BENCH_hotpath.json` carries
+//!   `steady_state_allocs_per_op`, which `scripts/perf_gate.sh` pins to 0.
 //! * end-to-end simulation throughput (jobs/s) per policy
 //! * FitGpp victim-scan latency at various running-job counts
 //! * placement-search latency (first/best/worst fit ablation)
-//! * percentile computation
-//! * synthetic-workload generation
+//! * percentile computation and synthetic-workload generation
 
 #[path = "common/mod.rs"]
 mod common;
@@ -13,22 +19,87 @@ mod common;
 use fitgpp::benchkit::{black_box, BenchReport};
 use fitgpp::cluster::{Cluster, ClusterSpec, Placement};
 use fitgpp::job::{Job, JobClass, JobId, JobSpec};
+use fitgpp::job_table::JobTable;
 use fitgpp::resources::ResourceVec;
 use fitgpp::sched::policy::{fitgpp as fitgpp_policy, PolicyCtx, PolicyKind};
+use fitgpp::sched::{EventClock, SchedConfig, Scheduler, TickStats};
 use fitgpp::sim::{SimConfig, Simulator};
 use fitgpp::stats::rng::Pcg64;
 use fitgpp::stats::summary::percentiles;
+use fitgpp::util::json::Json;
 use fitgpp::workload::synthetic::SyntheticWorkload;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+// --- counting allocator (this bench binary only) ------------------------
+//
+// Counts every alloc/realloc so per-op measurements can report allocs/op
+// exactly. Deallocations are free to happen (dropping a retired job must
+// not count as "the hot path allocated").
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// One per-op measurement: wall time and heap allocations, both divided
+/// by the iteration count. Warmup runs first (scratch buffers, heaps, and
+/// hash maps reach their steady capacity there) and is excluded.
+#[derive(Clone, Copy)]
+struct OpStats {
+    ns_per_op: f64,
+    allocs_per_op: f64,
+}
+
+fn measure_op<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> OpStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - a0;
+    OpStats {
+        ns_per_op: dt.as_secs_f64() * 1e9 / iters as f64,
+        allocs_per_op: allocs as f64 / iters as f64,
+    }
+}
+
+fn rv(c: f64, r: f64, g: f64) -> ResourceVec {
+    ResourceVec::new(c, r, g)
+}
 
 /// Build a cluster with `n_jobs` running BE jobs spread across 84 nodes.
-fn packed_cluster(n_jobs: usize) -> (Cluster, fitgpp::job_table::JobTable) {
+fn packed_cluster(n_jobs: usize) -> (Cluster, JobTable) {
     let spec = ClusterSpec::pfn();
     let mut cluster = Cluster::new(&spec);
     let mut jobs = Vec::new();
     let mut rng = Pcg64::new(42);
     let mut placed = 0;
     while placed < n_jobs {
-        let demand = ResourceVec::new(
+        let demand = rv(
             1.0 + rng.below(8) as f64,
             8.0 + rng.below(64) as f64,
             rng.below(3) as f64,
@@ -43,11 +114,136 @@ fn packed_cluster(n_jobs: usize) -> (Cluster, fitgpp::job_table::JobTable) {
         jobs.push(j);
         placed += 1;
     }
-    (cluster, fitgpp::job_table::JobTable::from_jobs(jobs))
+    (cluster, JobTable::from_jobs(jobs))
+}
+
+/// A scheduler with `running` long BE jobs placed at minute 0 and, when
+/// `blocked > 0`, that many additional queued jobs too large to ever fit.
+/// Returns the scheduler, table, reused tick stats, and the next minute.
+fn steady_scheduler(
+    policy: PolicyKind,
+    running: u32,
+    blocked: u32,
+) -> (Scheduler, JobTable, TickStats, u64) {
+    let spec = ClusterSpec::pfn();
+    let mut sched = Scheduler::new(&spec, SchedConfig::new(policy));
+    let mut jobs = JobTable::new();
+    let mut arrivals = Vec::new();
+    for i in 0..running {
+        jobs.insert(Job::new(JobSpec::new(
+            i,
+            JobClass::Be,
+            rv(2.0, 16.0, 0.0),
+            0,
+            100_000_000,
+            0,
+        )));
+        arrivals.push(JobId(i));
+    }
+    for i in running..running + blocked {
+        // Demands over any single node's capacity: queued forever.
+        jobs.insert(Job::new(JobSpec::new(
+            i,
+            JobClass::Be,
+            rv(1000.0, 1000.0, 1000.0),
+            0,
+            10,
+            0,
+        )));
+        arrivals.push(JobId(i));
+    }
+    let mut out = TickStats::default();
+    sched.tick_into(0, &mut jobs, &arrivals, &mut out);
+    (sched, jobs, out, 1)
 }
 
 fn main() {
     let mut r = BenchReport::new();
+    let mut ops: Vec<(&'static str, OpStats)> = Vec::new();
+
+    // --- per-op microbenches (ns/op + allocs/op) ----------------------
+
+    // Steady quiescent tick: running jobs, nothing due, empty queues.
+    // The whole round is a heap peek plus empty admission scans.
+    {
+        let (mut sched, mut jobs, mut out, mut now) = steady_scheduler(PolicyKind::Fifo, 64, 0);
+        let m = measure_op(1_000, 100_000, || {
+            sched.tick_into(now, &mut jobs, &[], &mut out);
+            now += 1;
+        });
+        ops.push(("steady_quiescent_tick", m));
+    }
+
+    // Admission round with a blocked 256-deep BE queue: every tick walks
+    // the admission path against a queue nothing can unblock.
+    {
+        let (mut sched, mut jobs, mut out, mut now) = steady_scheduler(PolicyKind::Fifo, 64, 256);
+        let m = measure_op(1_000, 50_000, || {
+            sched.tick_into(now, &mut jobs, &[], &mut out);
+            now += 1;
+        });
+        ops.push(("admission_round_blocked_256", m));
+    }
+
+    // Placement + event application: each op inserts a 1-minute job,
+    // places it (arrival tick), completes it via the clock (next tick),
+    // and retires it from the table — the full lifecycle the streamed
+    // replay pays per job.
+    {
+        let (mut sched, mut jobs, mut out, mut now) = steady_scheduler(PolicyKind::Fifo, 8, 0);
+        let warmup = 1_000u32;
+        let iters = 100_000u32;
+        // Pre-size the id → slot map so its one-time growth does not
+        // pollute the measured window.
+        let top = 8 + warmup + iters + 1;
+        jobs.insert(Job::new(JobSpec::new(top, JobClass::Be, rv(1.0, 1.0, 0.0), 0, 1, 0)));
+        jobs.remove(JobId(top));
+        let mut next_id = 8u32;
+        let m = measure_op(warmup as usize, iters as usize, || {
+            let id = next_id;
+            next_id += 1;
+            jobs.insert(Job::new(JobSpec::new(
+                id,
+                JobClass::Be,
+                rv(1.0, 8.0, 0.0),
+                now,
+                1,
+                0,
+            )));
+            sched.tick_into(now, &mut jobs, &[JobId(id)], &mut out);
+            sched.tick_into(now + 1, &mut jobs, &[], &mut out);
+            jobs.remove(JobId(id));
+            now += 2;
+        });
+        ops.push(("place_complete_retire_cycle", m));
+    }
+
+    // Clock push/pop cycle: one completion entry pushed and drained per
+    // op through the same heap the scheduler uses.
+    {
+        let mut clock = EventClock::new();
+        let mut jobs = JobTable::new();
+        jobs.insert(Job::new(JobSpec::new(0, JobClass::Be, rv(1.0, 1.0, 0.0), 0, 10, 0)));
+        let epoch = jobs.epoch_of(JobId(0)).unwrap();
+        let mut due: Vec<u32> = Vec::new();
+        let mut now = 0u64;
+        let m = measure_op(1_000, 200_000, || {
+            clock.push_completion(now, JobId(0), epoch);
+            clock.take_due_into(now, &jobs, &mut due);
+            black_box(due.len());
+            now += 1;
+        });
+        ops.push(("clock_push_pop_cycle", m));
+    }
+
+    println!("per-op microbenches:");
+    for (name, m) in &ops {
+        println!("  {name}: {:.1} ns/op, {:.4} allocs/op", m.ns_per_op, m.allocs_per_op);
+    }
+
+    // Every one of the ops above is a steady-state hot-path operation:
+    // the gate pins their alloc rate to zero collectively.
+    let steady_allocs = ops.iter().map(|(_, m)| m.allocs_per_op).fold(0.0, f64::max);
 
     // --- end-to-end simulation throughput -----------------------------
     let jobs = 4096;
@@ -64,8 +260,8 @@ fn main() {
     for n in [256usize, 512, 1024] {
         let (cluster, jobs) = packed_cluster(n);
         let free: Vec<ResourceVec> = cluster.nodes.iter().map(|nd| nd.free).collect();
-        let te = JobSpec::new(999_999, JobClass::Te, ResourceVec::new(16.0, 128.0, 4.0), 0, 5, 0);
-        let oracle = |id: JobId| jobs[id].remaining;
+        let te = JobSpec::new(999_999, JobClass::Te, rv(16.0, 128.0, 4.0), 0, 5, 0);
+        let oracle = |id: JobId| jobs[id].remaining_at(0);
         let mut rng = Pcg64::new(7);
         r.bench(&format!("fitgpp scan @{n} running"), 10, 50, || {
             let ctx = PolicyCtx {
@@ -81,7 +277,7 @@ fn main() {
 
     // --- placement search ablation --------------------------------------
     let (cluster, _jobs) = packed_cluster(512);
-    let demand = ResourceVec::new(4.0, 32.0, 1.0);
+    let demand = rv(4.0, 32.0, 1.0);
     for (name, p) in [
         ("first-fit", Placement::FirstFit),
         ("best-fit", Placement::BestFit),
@@ -128,6 +324,26 @@ fn main() {
                 .len(),
         )
     });
+
+    // --- machine-readable artifact ------------------------------------
+    let op_objs: Vec<(&str, Json)> = ops
+        .iter()
+        .map(|(name, m)| {
+            (
+                *name,
+                Json::obj(vec![
+                    ("ns_per_op", Json::num(m.ns_per_op)),
+                    ("allocs_per_op", Json::num(m.allocs_per_op)),
+                ]),
+            )
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        ("ops", Json::obj(op_objs)),
+        ("steady_state_allocs_per_op", Json::num(steady_allocs)),
+    ]);
+    common::save_results_json("hotpath", &json);
 
     common::save_results("hotpath", &r.table("hotpath micro-benchmarks").to_text());
 }

@@ -8,7 +8,12 @@
 //! mergeable metrics sink — so the run's resident job state is bounded by
 //! the live set (asserted here via the high-water counter, not RSS).
 //!
-//! Scale knobs: `FITGPP_SCALE_JOBS` (default 1_000_000), `FITGPP_SEED`.
+//! Scale knobs: `FITGPP_SCALE_JOBS` (default 1_000_000), `FITGPP_SEED`,
+//! and `FITGPP_CELLS` (default 1 — the plain single-scheduler replay the
+//! perf gate compares; `K > 1` shards the cluster into `K` independent
+//! cells via [`fitgpp::sim::cells`], each streaming its own trace slice
+//! on its own core; cell throughputs are not comparable across different
+//! `K`, so the cell count is recorded in the JSON).
 
 #[path = "common/mod.rs"]
 mod common;
@@ -16,7 +21,9 @@ mod common;
 use fitgpp::benchkit::env_usize;
 use fitgpp::cluster::ClusterSpec;
 use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sim::cells::{merge_results, split_cluster};
 use fitgpp::sim::{SimConfig, Simulator};
+use fitgpp::sweep::parallel_map;
 use fitgpp::util::json::Json;
 use fitgpp::workload::trace::InstitutionSource;
 use std::time::Instant;
@@ -24,16 +31,45 @@ use std::time::Instant;
 fn main() {
     let jobs = env_usize("FITGPP_SCALE_JOBS", 1_000_000);
     let seed = env_usize("FITGPP_SEED", 9) as u64;
+    let cells = env_usize("FITGPP_CELLS", 1).max(1);
     let policy = PolicyKind::FitGpp { s: 4.0, p_max: Some(1) };
-    println!("scale: streaming {jobs} institution-trace jobs under {}", policy.name());
+    println!(
+        "scale: streaming {jobs} institution-trace jobs under {} ({cells} cell{})",
+        policy.name(),
+        if cells == 1 { "" } else { "s" }
+    );
 
     let mut cfg = SimConfig::new(ClusterSpec::pfn(), policy);
     cfg.seed = seed;
     cfg.record_jobs = false; // the point: no O(total-jobs) record vector
-    let mut source = InstitutionSource::new(seed, jobs);
 
     let t0 = Instant::now();
-    let res = Simulator::new(cfg).run_source(&mut source);
+    let res = if cells == 1 {
+        let mut source = InstitutionSource::new(seed, jobs);
+        Simulator::new(cfg).run_source(&mut source)
+    } else {
+        // Sharded replay: K node slices, each streaming its own share of
+        // the trace (seeds decorrelated per cell) on its own worker.
+        let slices = split_cluster(&cfg.cluster, cells);
+        let k = slices.len();
+        let base = jobs / k;
+        let rem = jobs % k;
+        let cell_cfgs: Vec<(SimConfig, usize, u64)> = slices
+            .into_iter()
+            .enumerate()
+            .map(|(i, cluster)| {
+                let mut c = cfg.clone();
+                c.cluster = cluster;
+                c.seed = seed.wrapping_add(i as u64);
+                (c, base + usize::from(i < rem), seed.wrapping_add(i as u64))
+            })
+            .collect();
+        let parts = parallel_map(&cell_cfgs, k, |_, (c, n, s)| {
+            let mut source = InstitutionSource::new(*s, *n);
+            Simulator::new(c.clone()).run_source(&mut source)
+        });
+        merge_results(parts)
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     assert_eq!(res.metrics.jobs_seen, jobs as u64, "every job must be observed");
@@ -69,6 +105,7 @@ fn main() {
         &Json::obj(vec![
             ("jobs", Json::num(jobs as f64)),
             ("seed", Json::num(seed as f64)),
+            ("cells", Json::num(cells as f64)),
             ("policy", Json::str(&policy.name())),
             ("wall_sec", Json::num(wall)),
             ("jobs_per_sec", Json::num(jobs_per_sec)),

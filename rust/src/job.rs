@@ -6,6 +6,20 @@
 //! period* (GP). The scheduler may suspend BE jobs; a suspended job is
 //! re-queued at the *top* of the FIFO queue and later resumed with its
 //! completed work intact. TE jobs are never preempted.
+//!
+//! ## Lazy (virtual-time) accounting
+//!
+//! The time-indexed counters (`remaining`, `grace_left`, `waiting`) are
+//! **not** burned down minute by minute. Each job records the minute its
+//! counters were last settled (`synced_at`); [`Job::sync`] applies the
+//! whole elapsed span in one arithmetic step, and every lifecycle
+//! transition syncs first. Between transitions the stored values are
+//! intentionally stale — readers that need the live value at minute `now`
+//! use [`Job::remaining_at`] / [`Job::grace_left_at`] /
+//! [`Job::waiting_at`]. This is what makes the scheduler's steady-state
+//! rounds O(events) instead of O(active + queued) per minute, and makes a
+//! quiescent fast-forward ([`Scheduler::burn_many`](crate::sched::Scheduler::burn_many))
+//! O(1): nothing needs touching until the next transition settles it.
 
 use crate::resources::ResourceVec;
 use crate::Minutes;
@@ -145,7 +159,8 @@ pub enum JobState {
     Running,
     /// Signalled for preemption; still occupying resources for the grace
     /// period while it checkpoints. Makes **no** progress on its own work
-    /// (suspension processing is pure overhead — conservative reading of §2).
+    /// (suspension processing is pure overhead — conservative reading of §2)
+    /// unless the §2 ablation (`progress_during_grace`) is on.
     Draining,
     /// Finished.
     Done,
@@ -155,23 +170,29 @@ pub enum JobState {
 
 /// A job's full runtime record. The simulator owns one `Job` per `JobSpec`;
 /// scheduling policies see `&Job` views.
+///
+/// The time-indexed counters are lazily accounted — see the module docs.
+/// `remaining`, `grace_left`, and `waiting` are exact *as of* `synced_at`;
+/// use the `*_at(now)` accessors for live reads between transitions.
 #[derive(Debug, Clone)]
 pub struct Job {
     /// The immutable submission-time spec.
     pub spec: JobSpec,
     /// Current lifecycle state.
     pub state: JobState,
-    /// Remaining execution time (minutes). `spec.exec_time` at submission;
-    /// preserved across suspend/resume (no rewind).
+    /// Remaining execution time (minutes) as of `synced_at`.
+    /// `spec.exec_time` at submission; preserved across suspend/resume
+    /// (no rewind).
     pub remaining: Minutes,
-    /// Remaining grace period while `Draining`.
+    /// Remaining grace period while `Draining`, as of `synced_at`.
     pub grace_left: Minutes,
     /// Node currently hosting the job (`Running` or `Draining`).
     pub node: Option<crate::cluster::NodeId>,
     /// How many times this job has been preempted (the paper's
     /// `PreemptionCount_j`, capped by the policy parameter `P`).
     pub preemptions: u32,
-    /// Cumulative minutes spent waiting in the queue (drives Eq. 5).
+    /// Cumulative minutes spent waiting in the queue as of `synced_at`
+    /// (drives Eq. 5).
     pub waiting: Minutes,
     /// Tick at which the job most recently vacated a node due to preemption
     /// (start of a re-scheduling interval, Table 2).
@@ -188,16 +209,20 @@ pub struct Job {
     /// Node-failure evictions suffered (control plane; *not* counted as
     /// preemptions — the `P` starvation cap only reads `preemptions`).
     pub evictions: u32,
-    /// Lifecycle-transition counter: bumped on every start / preemption
-    /// signal / vacate / complete. The [`EventClock`](crate::sched::clock)
-    /// stamps scheduled events with the epoch they were predicted under, so
-    /// a later transition invalidates them lazily (no heap surgery).
-    pub epoch: u64,
+    /// The minute up to which `remaining` / `grace_left` / `waiting` are
+    /// settled. Starts at `spec.submit` (a staged-but-unarrived job accrues
+    /// nothing); every [`Job::sync`] moves it forward.
+    pub synced_at: Minutes,
+    /// Whether this drain makes progress on the job's own work (the §2
+    /// `progress_during_grace` ablation, captured at signal time so
+    /// [`Job::sync`] needs no config access).
+    pub drain_progress: bool,
 }
 
 impl Job {
     pub fn new(spec: JobSpec) -> Self {
         let remaining = spec.exec_time;
+        let synced_at = spec.submit;
         Job {
             spec,
             state: JobState::Pending,
@@ -212,7 +237,8 @@ impl Job {
             finished_at: None,
             cancelled_at: None,
             evictions: 0,
-            epoch: 0,
+            synced_at,
+            drain_progress: false,
         }
     }
 
@@ -233,11 +259,81 @@ impl Job {
         self.spec.tenant
     }
 
+    /// Settle the lazily-accounted counters up to `now`: one arithmetic
+    /// step applies the whole `now - synced_at` span to whichever counter
+    /// the current state accrues (queue wait while `Pending`, progress
+    /// while `Running`, grace burn-down — plus progress when
+    /// `drain_progress` — while `Draining`). Idempotent within a minute;
+    /// every lifecycle transition calls it first.
+    pub fn sync(&mut self, now: Minutes) {
+        let elapsed = now.saturating_sub(self.synced_at);
+        if elapsed == 0 {
+            return;
+        }
+        match self.state {
+            JobState::Pending => self.waiting += elapsed,
+            JobState::Running => {
+                debug_assert!(
+                    elapsed <= self.remaining,
+                    "{} ran past its completion minute ({elapsed} > {})",
+                    self.id(),
+                    self.remaining
+                );
+                self.remaining = self.remaining.saturating_sub(elapsed);
+            }
+            JobState::Draining => {
+                debug_assert!(
+                    elapsed <= self.grace_left,
+                    "{} drained past its grace expiry ({elapsed} > {})",
+                    self.id(),
+                    self.grace_left
+                );
+                self.grace_left = self.grace_left.saturating_sub(elapsed);
+                if self.drain_progress {
+                    // Saturating: progress stops at zero while the grace
+                    // period keeps burning (the job completes at the next
+                    // event application).
+                    self.remaining = self.remaining.saturating_sub(elapsed);
+                }
+            }
+            JobState::Done | JobState::Cancelled => {}
+        }
+        self.synced_at = now;
+    }
+
+    /// `remaining` as it stands at minute `now`, without mutating the job.
+    pub fn remaining_at(&self, now: Minutes) -> Minutes {
+        let elapsed = now.saturating_sub(self.synced_at);
+        match self.state {
+            JobState::Running => self.remaining.saturating_sub(elapsed),
+            JobState::Draining if self.drain_progress => self.remaining.saturating_sub(elapsed),
+            _ => self.remaining,
+        }
+    }
+
+    /// `grace_left` as it stands at minute `now`, without mutating the job.
+    pub fn grace_left_at(&self, now: Minutes) -> Minutes {
+        match self.state {
+            JobState::Draining => self
+                .grace_left
+                .saturating_sub(now.saturating_sub(self.synced_at)),
+            _ => self.grace_left,
+        }
+    }
+
+    /// `waiting` as it stands at minute `now`, without mutating the job.
+    pub fn waiting_at(&self, now: Minutes) -> Minutes {
+        match self.state {
+            JobState::Pending => self.waiting + now.saturating_sub(self.synced_at),
+            _ => self.waiting,
+        }
+    }
+
     /// Transition Pending → Running on `node` at time `now`.
     pub fn start(&mut self, node: crate::cluster::NodeId, now: Minutes) {
+        self.sync(now);
         debug_assert_eq!(self.state, JobState::Pending, "{} start from {:?}", self.id(), self.state);
         self.state = JobState::Running;
-        self.epoch += 1;
         self.node = Some(node);
         if self.first_start.is_none() {
             self.first_start = Some(now);
@@ -247,23 +343,26 @@ impl Job {
         }
     }
 
-    /// Transition Running → Draining: the preemption signal. The job keeps
-    /// its resources for `grace_period` minutes (possibly 0 ⇒ it vacates on
-    /// the same tick's GP-expiry pass).
-    pub fn signal_preemption(&mut self) {
+    /// Transition Running → Draining: the preemption signal at minute
+    /// `now`. The job keeps its resources for `grace_period` minutes
+    /// (possibly 0 ⇒ it vacates on the same tick's GP-expiry pass);
+    /// `drain_progress` records whether this drain advances the job's own
+    /// work (the scheduler's `progress_during_grace` setting).
+    pub fn signal_preemption(&mut self, now: Minutes, drain_progress: bool) {
+        self.sync(now);
         debug_assert_eq!(self.state, JobState::Running, "{} preempt from {:?}", self.id(), self.state);
         debug_assert!(self.is_be(), "TE jobs are never preempted");
         self.state = JobState::Draining;
-        self.epoch += 1;
         self.grace_left = self.spec.grace_period;
+        self.drain_progress = drain_progress;
     }
 
     /// Transition Draining → Pending: the grace period elapsed and the job
     /// vacated its node. Returns to the *top* of the queue (caller's job).
     pub fn vacate(&mut self, now: Minutes) {
+        self.sync(now);
         debug_assert_eq!(self.state, JobState::Draining);
         self.state = JobState::Pending;
-        self.epoch += 1;
         self.node = None;
         self.grace_left = 0;
         self.preemptions += 1;
@@ -272,9 +371,9 @@ impl Job {
 
     /// Transition Running/Draining → Done.
     pub fn complete(&mut self, now: Minutes) {
+        self.sync(now);
         debug_assert!(matches!(self.state, JobState::Running | JobState::Draining));
         self.state = JobState::Done;
-        self.epoch += 1;
         self.node = None;
         self.finished_at = Some(now);
     }
@@ -282,8 +381,10 @@ impl Job {
     /// Control-plane cancellation: Pending/Running/Draining → Cancelled.
     /// The job never completes (`finished_at` stays `None`, so cancelled
     /// jobs fall out of every slowdown percentile) and is retired
-    /// immediately by the caller.
+    /// immediately by the caller. Syncs first, so the accrued-wait
+    /// slowdown lower bound in the final record is exact.
     pub fn cancel(&mut self, now: Minutes) {
+        self.sync(now);
         debug_assert!(
             matches!(
                 self.state,
@@ -294,7 +395,6 @@ impl Job {
             self.state
         );
         self.state = JobState::Cancelled;
-        self.epoch += 1;
         self.node = None;
         self.grace_left = 0;
         self.cancelled_at = Some(now);
@@ -308,10 +408,10 @@ impl Job {
     /// vacate this is *not* a policy preemption: `preemptions` (the paper's
     /// `PreemptionCount_j`, which the `P` cap reads) stays untouched and
     /// the interruption is tallied in `evictions` instead.
-    pub fn fail_over(&mut self, _now: Minutes) {
+    pub fn fail_over(&mut self, now: Minutes) {
+        self.sync(now);
         debug_assert!(matches!(self.state, JobState::Running | JobState::Draining));
         self.state = JobState::Pending;
-        self.epoch += 1;
         self.node = None;
         self.grace_left = 0;
         self.evictions += 1;
@@ -325,7 +425,10 @@ impl Job {
     /// job this is exactly `1 + queue-wait / exec`. For a job still
     /// unfinished when the simulation is cut off, the accrued queue wait is
     /// used as a lower bound (the default simulations drain the backlog, so
-    /// this only applies to custom horizons).
+    /// this only applies to custom horizons). Readers of the unfinished
+    /// branch must settle the job first ([`Job::sync`] or
+    /// [`JobTable::settle_all`](crate::job_table::JobTable::settle_all));
+    /// the simulator's cut-off path does.
     pub fn slowdown(&self) -> f64 {
         match self.finished_at {
             Some(fin) => (fin - self.spec.submit) as f64 / self.spec.exec_time as f64,
@@ -350,6 +453,7 @@ mod tests {
         assert_eq!(j.remaining, 30);
         assert_eq!(j.preemptions, 0);
         assert_eq!(j.slowdown(), 1.0);
+        assert_eq!(j.synced_at, 0, "settled from the submit minute");
     }
 
     #[test]
@@ -364,8 +468,8 @@ mod tests {
         j.start(NodeId(0), 5);
         assert_eq!(j.first_start, Some(5));
         assert_eq!(j.state, JobState::Running);
-        j.signal_preemption();
-        j.vacate(10);
+        j.signal_preemption(5, false);
+        j.vacate(8);
         j.start(NodeId(1), 12);
         assert_eq!(j.first_start, Some(5), "first_start must not move");
     }
@@ -374,15 +478,60 @@ mod tests {
     fn preemption_cycle_updates_count_and_interval() {
         let mut j = Job::new(spec(JobClass::Be));
         j.start(NodeId(0), 0);
-        j.signal_preemption();
+        j.signal_preemption(0, false);
         assert_eq!(j.state, JobState::Draining);
         assert_eq!(j.grace_left, 3);
-        j.vacate(4);
+        j.vacate(3);
         assert_eq!(j.state, JobState::Pending);
         assert_eq!(j.preemptions, 1);
         assert!(j.node.is_none());
         j.start(NodeId(2), 9);
-        assert_eq!(j.resched_intervals, vec![5]);
+        assert_eq!(j.resched_intervals, vec![6]);
+    }
+
+    #[test]
+    fn sync_settles_lazily_accrued_time() {
+        let mut j = Job::new(spec(JobClass::Be)); // submit 0, exec 30, GP 3
+        assert_eq!(j.waiting_at(7), 7);
+        assert_eq!(j.waiting, 0, "reads do not mutate");
+        j.start(NodeId(0), 7);
+        assert_eq!(j.waiting, 7, "start settles the queue wait");
+        assert_eq!(j.remaining_at(12), 25);
+        assert_eq!(j.remaining, 30, "stored value is stale until a sync");
+        j.signal_preemption(12, true);
+        assert_eq!(j.remaining, 25, "signal settles the running span");
+        assert_eq!(j.grace_left_at(14), 1);
+        assert_eq!(j.remaining_at(14), 23, "progress during grace");
+        j.vacate(15);
+        assert_eq!(j.remaining, 22);
+        assert_eq!(j.grace_left, 0);
+        assert_eq!(j.waiting_at(20), 7 + 5, "pending again accrues wait");
+    }
+
+    #[test]
+    fn sync_is_idempotent_within_a_minute() {
+        let mut j = Job::new(spec(JobClass::Be));
+        j.start(NodeId(0), 4);
+        j.sync(10);
+        j.sync(10);
+        assert_eq!(j.remaining, 24);
+        assert_eq!(j.waiting, 4);
+        // A sync at an earlier minute is a no-op, not a rewind.
+        j.sync(8);
+        assert_eq!(j.remaining, 24);
+        assert_eq!(j.synced_at, 10);
+    }
+
+    #[test]
+    fn draining_without_progress_keeps_remaining() {
+        let mut j = Job::new(spec(JobClass::Be));
+        j.start(NodeId(0), 0);
+        j.signal_preemption(10, false);
+        assert_eq!(j.remaining, 20);
+        j.sync(13);
+        assert_eq!(j.grace_left, 0);
+        assert_eq!(j.remaining, 20, "no progress during grace by default");
+        assert_eq!(j.remaining_at(13), 20);
     }
 
     #[test]
@@ -398,6 +547,7 @@ mod tests {
         j.start(NodeId(0), 15);
         j.complete(45); // flow = 45, exec = 30 ⇒ slowdown = 1.5 = 1 + 15/30
         assert!((j.slowdown() - 1.5).abs() < 1e-12);
+        assert_eq!(j.remaining, 0, "complete settled the whole running span");
     }
 
     #[test]
@@ -410,7 +560,7 @@ mod tests {
 
         let mut b = Job::new(spec(JobClass::Be));
         b.start(NodeId(0), 0);
-        b.signal_preemption();
+        b.signal_preemption(0, true);
         b.complete(3); // finished while draining
         assert_eq!(b.state, JobState::Done);
     }
@@ -423,20 +573,20 @@ mod tests {
         assert_eq!(a.state, JobState::Cancelled);
         assert_eq!(a.cancelled_at, Some(4));
         assert_eq!(a.finished_at, None, "cancelled jobs never finish");
+        assert_eq!(a.waiting, 4, "cancel settles the accrued wait");
 
         // Running.
         let mut b = Job::new(spec(JobClass::Be));
         b.start(NodeId(0), 0);
-        let epoch = b.epoch;
         b.cancel(7);
         assert_eq!(b.state, JobState::Cancelled);
         assert!(b.node.is_none());
-        assert_eq!(b.epoch, epoch + 1, "cancel invalidates clock predictions");
+        assert_eq!(b.remaining, 23, "cancel settles the running span");
 
         // Draining.
         let mut c = Job::new(spec(JobClass::Be));
         c.start(NodeId(0), 0);
-        c.signal_preemption();
+        c.signal_preemption(0, false);
         c.cancel(2);
         assert_eq!(c.state, JobState::Cancelled);
         assert_eq!(c.grace_left, 0);
@@ -451,10 +601,12 @@ mod tests {
         assert_eq!(j.preemptions, 0, "node failure is not a policy preemption");
         assert_eq!(j.evictions, 1);
         assert!(j.node.is_none());
+        assert_eq!(j.remaining, 25, "completed work preserved (no rewind)");
         // The job restarts like any pending job; no resched interval is
         // recorded (Table 2 measures preemption intervals only).
         j.start(NodeId(1), 9);
         assert!(j.resched_intervals.is_empty());
+        assert_eq!(j.waiting, 4, "re-queued wait settled at restart");
     }
 
     #[test]
@@ -463,6 +615,6 @@ mod tests {
     fn te_jobs_cannot_be_preempted() {
         let mut j = Job::new(spec(JobClass::Te));
         j.start(NodeId(0), 0);
-        j.signal_preemption();
+        j.signal_preemption(0, false);
     }
 }

@@ -1,4 +1,5 @@
-//! The resident job table: a slab with a free list, keyed by [`JobId`].
+//! The resident job table: a slab with a free list, keyed by [`JobId`],
+//! with hot scheduling fields split into struct-of-arrays columns.
 //!
 //! The streaming simulator (see [`sim`](crate::sim)) keeps only *live* jobs
 //! resident: a job is inserted when its arrival is pulled from the
@@ -15,12 +16,27 @@
 //! workload source); at 4 bytes per job ever seen it is negligible next to
 //! the ~200-byte `Job` records the slab avoids keeping.
 //!
+//! ## Struct-of-arrays columns
+//!
+//! The fields the scheduler's hot loops touch for *every* queued or active
+//! job each round — the clock-staleness epoch, the admission-layer tenant,
+//! and the demand vector — live in parallel slot-indexed arrays
+//! (`epochs` / `tenants` / `demands`) rather than inside the ~200-byte
+//! `Job` records, so admission scans and event-staleness probes walk
+//! cache-line-friendly columns instead of chasing full structs. The
+//! columns are bounded by the slab (peak-live slots, not ids ever seen)
+//! and are reset on slot reuse. The lifecycle epoch moved here outright:
+//! [`Job`] no longer carries one, and transitions are stamped via
+//! [`JobTable::bump_epoch`] by the scheduler that owns the clock.
+//!
 //! Lookups of retired or not-yet-inserted ids return `None` from
 //! [`JobTable::get`] / [`JobTable::epoch_of`] — the
 //! [`EventClock`](crate::sched::clock::EventClock) relies on this to treat
 //! events predicted for retired jobs as stale.
 
-use crate::job::{Job, JobId};
+use crate::job::{Job, JobId, TenantId};
+use crate::resources::ResourceVec;
+use crate::Minutes;
 
 const ABSENT: u32 = u32::MAX;
 /// Sentinel for "was resident, has been retired" — distinct from `ABSENT`
@@ -28,7 +44,9 @@ const ABSENT: u32 = u32::MAX;
 /// finished job from a reference to one that has not arrived yet.
 const RETIRED: u32 = u32::MAX - 1;
 
-/// Slab of live jobs with O(1) insert/lookup/retire by [`JobId`].
+/// Slab of live jobs with O(1) insert/lookup/retire by [`JobId`], plus
+/// slot-indexed struct-of-arrays columns for the hot scheduling fields
+/// (see the module docs).
 #[derive(Debug, Default)]
 pub struct JobTable {
     /// Slab slots; `None` = free (on the free list).
@@ -37,6 +55,16 @@ pub struct JobTable {
     free: Vec<u32>,
     /// Job id → slot index (`ABSENT` when not resident).
     slot_of: Vec<u32>,
+    /// Per-slot lifecycle epoch (bumped by [`JobTable::bump_epoch`] on
+    /// every transition; stamps [`EventClock`](crate::sched::clock::EventClock)
+    /// entries). Reset to 0 when a freed slot is reused.
+    epochs: Vec<u64>,
+    /// Per-slot tenant (immutable copy of `spec.tenant`; the admission
+    /// layer's fair-share scans read this column, not the `Job`).
+    tenants: Vec<TenantId>,
+    /// Per-slot demand vector (immutable copy of `spec.demand`; placement
+    /// and quota probes read this column).
+    demands: Vec<ResourceVec>,
     /// Jobs currently resident.
     live: usize,
     /// High-water mark of `live` — the counter the scale bench asserts on.
@@ -67,10 +95,21 @@ impl JobTable {
             self.slot_of.resize(id + 1, ABSENT);
         }
         debug_assert_eq!(self.slot_of[id], ABSENT, "{} inserted twice", job.id());
+        let tenant = job.spec.tenant;
+        let demand = job.spec.demand;
         let slot = match self.free.pop() {
-            Some(s) => s as usize,
+            Some(s) => {
+                let s = s as usize;
+                self.epochs[s] = 0;
+                self.tenants[s] = tenant;
+                self.demands[s] = demand;
+                s
+            }
             None => {
                 self.slots.push(None);
+                self.epochs.push(0);
+                self.tenants.push(tenant);
+                self.demands.push(demand);
                 self.slots.len() - 1
             }
         };
@@ -82,9 +121,10 @@ impl JobTable {
     }
 
     /// Retire a job: remove it and free its slot for reuse. Panics if the
-    /// id is not resident.
+    /// id is not resident (debug builds distinguish a double-retire).
     pub fn remove(&mut self, id: JobId) -> Job {
         let slot = self.slot_of[id.0 as usize];
+        debug_assert!(slot != RETIRED, "{id} retired twice");
         assert!(slot < RETIRED, "{id} not resident");
         self.slot_of[id.0 as usize] = RETIRED;
         self.free.push(slot);
@@ -111,9 +151,51 @@ impl JobTable {
     }
 
     /// Epoch of a resident job; `None` marks the id's clock entries stale
-    /// (retired jobs have no future events).
+    /// (retired jobs have no future events). A column probe — the `Job`
+    /// record itself is never touched.
     pub fn epoch_of(&self, id: JobId) -> Option<u64> {
-        self.get(id).map(|j| j.epoch)
+        let slot = *self.slot_of.get(id.0 as usize)?;
+        if slot >= RETIRED {
+            return None;
+        }
+        Some(self.epochs[slot as usize])
+    }
+
+    /// Bump a resident job's lifecycle epoch (invalidating every clock
+    /// entry stamped with the old one) and return the new value — the
+    /// stamp for any entry pushed for the job's *new* state. Panics if the
+    /// id is not resident.
+    pub fn bump_epoch(&mut self, id: JobId) -> u64 {
+        let slot = self.slot_of[id.0 as usize];
+        assert!(slot < RETIRED, "{id} not resident");
+        let e = &mut self.epochs[slot as usize];
+        *e += 1;
+        *e
+    }
+
+    /// Tenant of a resident job (column read). Panics if not resident,
+    /// like indexing — queued ids are resident by invariant.
+    pub fn tenant_of(&self, id: JobId) -> TenantId {
+        let slot = self.slot_of[id.0 as usize];
+        assert!(slot < RETIRED, "{id} not resident");
+        self.tenants[slot as usize]
+    }
+
+    /// Demand vector of a resident job (column read). Panics if not
+    /// resident.
+    pub fn demand_of(&self, id: JobId) -> &ResourceVec {
+        let slot = self.slot_of[id.0 as usize];
+        assert!(slot < RETIRED, "{id} not resident");
+        &self.demands[slot as usize]
+    }
+
+    /// Settle every resident job's lazily-accounted counters up to `now`
+    /// (see [`Job::sync`]) — end-of-run accounting before records or
+    /// accrued-wait slowdowns are read.
+    pub fn settle_all(&mut self, now: Minutes) {
+        for s in self.slots.iter_mut().flatten() {
+            s.sync(now);
+        }
     }
 
     /// Is `id` currently resident?
@@ -226,15 +308,70 @@ mod tests {
     }
 
     #[test]
+    fn free_list_reuse_over_100k_churn_cycles() {
+        // A windowed churn: 100k insert/retire cycles with at most 65 jobs
+        // live at once. The slab and every SoA column must stay bounded by
+        // the high-water mark — any free-list leak shows up as growth.
+        const WINDOW: u32 = 64;
+        let mut t = JobTable::new();
+        for i in 0..100_000u32 {
+            t.insert(job(i));
+            if i >= WINDOW {
+                t.remove(JobId(i - WINDOW));
+            }
+        }
+        assert_eq!(t.inserted(), 100_000);
+        assert_eq!(t.live(), WINDOW as usize + 1);
+        assert_eq!(t.peak_live(), WINDOW as usize + 1);
+        assert_eq!(t.slots.len(), t.peak_live(), "slab never grows past peak_live");
+        assert_eq!(
+            t.free.len() + t.live(),
+            t.slots.len(),
+            "every non-live slot is on the free list exactly once"
+        );
+        assert_eq!(t.epochs.len(), t.slots.len(), "columns track the slab");
+        assert_eq!(t.tenants.len(), t.slots.len());
+        assert_eq!(t.demands.len(), t.slots.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_retire_is_caught() {
+        let mut t = JobTable::from_jobs(vec![job(0)]);
+        t.remove(JobId(0));
+        t.remove(JobId(0));
+    }
+
+    #[test]
     fn retired_ids_report_no_epoch() {
         let mut t = JobTable::new();
         t.insert(job(7));
         assert_eq!(t.epoch_of(JobId(7)), Some(0));
-        t[JobId(7)].epoch += 3;
-        assert_eq!(t.epoch_of(JobId(7)), Some(3));
+        assert_eq!(t.bump_epoch(JobId(7)), 1);
+        assert_eq!(t.bump_epoch(JobId(7)), 2);
+        assert_eq!(t.epoch_of(JobId(7)), Some(2));
         t.remove(JobId(7));
         assert_eq!(t.epoch_of(JobId(7)), None);
         assert_eq!(t.epoch_of(JobId(999)), None, "never-seen id");
+    }
+
+    #[test]
+    fn slot_reuse_resets_the_epoch_column() {
+        let mut t = JobTable::new();
+        t.insert(job(0));
+        t.bump_epoch(JobId(0));
+        t.bump_epoch(JobId(0));
+        t.remove(JobId(0));
+        t.insert(job(1)); // reuses slot 0
+        assert_eq!(t.epoch_of(JobId(1)), Some(0), "fresh epoch on reuse");
+    }
+
+    #[test]
+    fn soa_columns_mirror_the_spec() {
+        let mut t = JobTable::new();
+        t.insert(job(3));
+        assert_eq!(t.tenant_of(JobId(3)), t[JobId(3)].spec.tenant);
+        assert_eq!(*t.demand_of(JobId(3)), t[JobId(3)].spec.demand);
     }
 
     #[test]
@@ -260,6 +397,14 @@ mod tests {
         let ids: Vec<u32> = t.iter().map(|j| j.id().0).collect();
         assert_eq!(ids.len(), 2);
         assert!(ids.contains(&0) && ids.contains(&2));
+    }
+
+    #[test]
+    fn settle_all_syncs_every_resident_job() {
+        let mut t = JobTable::from_jobs(vec![job(0), job(1)]);
+        t.settle_all(6);
+        assert_eq!(t[JobId(0)].waiting, 6, "pending jobs accrued their wait");
+        assert_eq!(t[JobId(1)].waiting, 6);
     }
 
     #[test]

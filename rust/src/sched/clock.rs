@@ -16,17 +16,18 @@
 //! while `j` keeps running every minute until `t`. Instead of deleting
 //! entries from the middle of a heap when a prediction dies (a preempted
 //! job no longer completes on schedule), every entry is stamped with the
-//! job's [`epoch`](crate::job::Job::epoch) — a counter bumped on every
-//! lifecycle transition. An entry whose stamp no longer matches the job's
-//! current epoch is *stale* and is discarded the first time it reaches the
-//! top of its heap. A job that has been *retired* from the
-//! [`JobTable`] (completed and folded into a metrics sink by the streaming
-//! simulator) has no epoch at all — [`JobTable::epoch_of`] returns `None`
-//! — and any leftover entries for it are likewise stale. Live entries are
-//! exact: the scheduler pushes them only at transitions, and a job's
-//! counters (remaining time, grace left) burn down one minute per tick
-//! from that point, so the stamped minute is precisely when the counter
-//! reaches zero.
+//! job's epoch — a counter kept in the job table's struct-of-arrays epoch
+//! column and bumped via [`JobTable::bump_epoch`] on every lifecycle
+//! transition. An entry whose stamp no longer matches the job's current
+//! epoch is *stale* and is discarded the first time it reaches the top of
+//! its heap. A job that has been *retired* from the [`JobTable`]
+//! (completed and folded into a metrics sink by the streaming simulator)
+//! has no epoch at all — [`JobTable::epoch_of`] returns `None` — and any
+//! leftover entries for it are likewise stale. Live entries are exact: the
+//! scheduler pushes them only at transitions, and a job's lazily-accounted
+//! counters (remaining time, grace left — see [`Job::sync`](crate::job::Job::sync))
+//! reach zero exactly at the stamped minute, so the stamp is precisely
+//! when the event fires.
 //!
 //! Arrivals need no epochs — submission times are immutable workload data.
 //! Under the streaming simulator only arrivals inside the bounded
@@ -183,6 +184,33 @@ impl EventClock {
         drain_due(&mut self.completions, now, jobs) | drain_due(&mut self.grace_expiries, now, jobs)
     }
 
+    /// Consume every internal event due at `now` into `due`: the sorted,
+    /// deduplicated ids of jobs with a *live* completion or grace expiry
+    /// due this minute (stale leftovers are discarded along the way).
+    /// `due` is a caller-owned scratch buffer — cleared here and refilled
+    /// in place, so steady-state rounds reuse its capacity instead of
+    /// allocating. The heaps likewise only shrink, never reallocate.
+    pub fn take_due_into(&mut self, now: Minutes, jobs: &JobTable, due: &mut Vec<u32>) {
+        due.clear();
+        for heap in [&mut self.completions, &mut self.grace_expiries] {
+            while let Some(Reverse((at, id, epoch))) = heap.peek().copied() {
+                if at > now {
+                    break;
+                }
+                heap.pop();
+                if is_live(jobs, id, epoch) {
+                    debug_assert_eq!(at, now, "live event for {id} missed its minute");
+                    due.push(id);
+                }
+            }
+        }
+        // A job can have both a completion and a grace expiry due on the
+        // same minute (progress-during-grace): dedup so the applier visits
+        // it once.
+        due.sort_unstable();
+        due.dedup();
+    }
+
     /// Absolute minute of the next live internal event (completion or
     /// grace expiry), or `None` when nothing occupies resources. Stale
     /// heads are discarded on the way.
@@ -244,10 +272,10 @@ mod tests {
     fn stale_entries_are_discarded() {
         let mut c = EventClock::new();
         let mut jobs = table(1);
-        c.push_completion(10, JobId(0), jobs[JobId(0)].epoch);
+        c.push_completion(10, JobId(0), jobs.epoch_of(JobId(0)).unwrap());
         assert_eq!(c.next_internal_at(&jobs), Some(10));
         // A lifecycle transition invalidates the prediction.
-        jobs[JobId(0)].epoch += 1;
+        jobs.bump_epoch(JobId(0));
         assert_eq!(c.next_internal_at(&jobs), None);
         assert!(c.is_empty(), "stale head was discarded by the peek");
     }
@@ -256,7 +284,7 @@ mod tests {
     fn retired_jobs_entries_are_stale() {
         let mut c = EventClock::new();
         let mut jobs = table(1);
-        c.push_completion(10, JobId(0), jobs[JobId(0)].epoch);
+        c.push_completion(10, JobId(0), jobs.epoch_of(JobId(0)).unwrap());
         jobs.remove(JobId(0)); // streaming simulator retired it
         assert_eq!(c.next_internal_at(&jobs), None);
         assert!(c.is_empty());
@@ -266,12 +294,34 @@ mod tests {
     fn take_due_reports_live_events_only() {
         let mut c = EventClock::new();
         let mut jobs = table(2);
-        c.push_completion(4, JobId(0), jobs[JobId(0)].epoch);
-        c.push_grace_expiry(4, JobId(1), jobs[JobId(1)].epoch);
-        jobs[JobId(1)].epoch += 1; // grace prediction dies
+        c.push_completion(4, JobId(0), jobs.epoch_of(JobId(0)).unwrap());
+        c.push_grace_expiry(4, JobId(1), jobs.epoch_of(JobId(1)).unwrap());
+        jobs.bump_epoch(JobId(1)); // grace prediction dies
         assert!(!c.take_due(3, &jobs), "nothing due before minute 4");
         assert!(c.take_due(4, &jobs), "live completion at 4");
         assert!(!c.take_due(4, &jobs), "events are consumed");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn take_due_into_collects_sorted_deduped_live_ids() {
+        let mut c = EventClock::new();
+        let mut jobs = table(3);
+        let e0 = jobs.epoch_of(JobId(0)).unwrap();
+        let e1 = jobs.epoch_of(JobId(1)).unwrap();
+        let e2 = jobs.epoch_of(JobId(2)).unwrap();
+        c.push_completion(4, JobId(2), e2);
+        c.push_completion(4, JobId(0), e0);
+        c.push_grace_expiry(4, JobId(0), e0); // duplicate id across heaps
+        c.push_grace_expiry(4, JobId(1), e1);
+        jobs.bump_epoch(JobId(1)); // this expiry is stale
+        let mut due = Vec::new();
+        c.take_due_into(3, &jobs, &mut due);
+        assert!(due.is_empty(), "nothing due before minute 4");
+        c.take_due_into(4, &jobs, &mut due);
+        assert_eq!(due, vec![0, 2], "sorted, deduped, stale dropped");
+        c.take_due_into(4, &jobs, &mut due);
+        assert!(due.is_empty(), "events are consumed");
         assert!(c.is_empty());
     }
 
@@ -294,8 +344,8 @@ mod tests {
     fn next_internal_is_min_across_heaps() {
         let mut c = EventClock::new();
         let jobs = table(2);
-        c.push_completion(9, JobId(0), jobs[JobId(0)].epoch);
-        c.push_grace_expiry(6, JobId(1), jobs[JobId(1)].epoch);
+        c.push_completion(9, JobId(0), jobs.epoch_of(JobId(0)).unwrap());
+        c.push_grace_expiry(6, JobId(1), jobs.epoch_of(JobId(1)).unwrap());
         assert_eq!(c.next_internal_at(&jobs), Some(6));
     }
 }

@@ -841,7 +841,7 @@ impl ClusterController {
 
     /// Bulk-burn a quiescent span (the event-horizon engine's fast path).
     pub fn burn_many(&mut self, dt: Minutes) {
-        self.sched.burn_many(dt, &mut self.jobs);
+        self.sched.burn_many(dt);
     }
 
     /// Tear down into the pieces result assembly needs.

@@ -18,9 +18,16 @@
 //!    "allocated to the TE job" rather than grabbed by other admissions.
 //!    Then one round of the shared/BE queue's [`QueueDiscipline`] (strict
 //!    head-gated FIFO by default; no preemption on behalf of this queue).
-//! 5. **Burn** — running jobs progress one minute; draining jobs burn
-//!    grace time (no progress: suspension processing is overhead); queued
-//!    jobs accrue waiting time.
+//!
+//! There is no per-minute "burn" step: progress, grace burn-down, and
+//! queue waiting are accounted *lazily* (see [`Job::sync`]) — each
+//! lifecycle transition settles the whole span since the job's last
+//! transition in one arithmetic step, so a tick costs O(due events +
+//! admission work), not O(active + queued). The tick's steady-state
+//! allocations are likewise zero: candidate lists, the due-event set,
+//! effective-free snapshots, and skip sets live in round-scratch buffers
+//! on the scheduler and are reused every round (`BENCH_hotpath.json`
+//! pins allocs/op = 0 for the steady-state cases).
 //!
 //! Zero-GP victims vacate synchronously inside the admission step, so a TE
 //! job whose victim permits rewinding starts in the same minute.
@@ -172,6 +179,19 @@ pub struct TickStats {
     pub skipped: Vec<(JobId, TenantId)>,
 }
 
+impl TickStats {
+    /// Reset every list for reuse as a round-scratch buffer: capacity is
+    /// retained, so a caller that drives [`Scheduler::tick_into`] with one
+    /// long-lived `TickStats` keeps steady-state ticks allocation-free.
+    pub fn clear(&mut self) {
+        self.completed.clear();
+        self.vacated.clear();
+        self.started.clear();
+        self.preempted.clear();
+        self.skipped.clear();
+    }
+}
+
 /// The scheduler. Owns cluster + queues; the job table lives outside (the
 /// simulator or live executor owns it) and is passed to `tick`.
 pub struct Scheduler {
@@ -205,6 +225,16 @@ pub struct Scheduler {
     /// Job ids reported skipped by the previous admission round (the
     /// dedup set behind [`TickStats::skipped`]).
     prev_skipped: Vec<u32>,
+    /// Round scratch: due event ids from [`EventClock::take_due_into`].
+    due_scratch: Vec<u32>,
+    /// Round scratch: snapshot of the TE lane for the admission walk.
+    scratch_te: Vec<JobId>,
+    /// Round scratch: per-node effective free space for [`PolicyCtx`].
+    scratch_eff: Vec<ResourceVec>,
+    /// Round scratch: this round's quota skips.
+    scratch_skipped: Vec<(JobId, TenantId)>,
+    /// Round scratch: deduped skips inside [`Scheduler::note_skips`].
+    scratch_dedup: Vec<(JobId, TenantId)>,
     /// Behaviour built from `cfg.policy` at construction (one build per
     /// run, per the [`PreemptionPolicy`] contract).
     policy: Box<dyn PreemptionPolicy>,
@@ -238,15 +268,14 @@ impl Scheduler {
             usage: TenantUsage::default(),
             quota_ref: spec.total_capacity(),
             prev_skipped: Vec::new(),
+            due_scratch: Vec::new(),
+            scratch_te: Vec::new(),
+            scratch_eff: Vec::new(),
+            scratch_skipped: Vec::new(),
+            scratch_dedup: Vec::new(),
             stats: SchedStats::default(),
             paranoid: false,
         }
-    }
-
-    /// Per-node effective free space (free minus holds, clamped at zero) —
-    /// the policy view of the cluster.
-    fn effective_free_all(&self) -> Vec<ResourceVec> {
-        self.cluster.nodes.iter().map(Node::effective_free).collect()
     }
 
     /// A clone of the runtime-estimator handle (shared state): the
@@ -404,21 +433,21 @@ impl Scheduler {
     /// the calibration's f64 accumulation bit-identical.
     pub fn outstanding_demand(&self, jobs: &JobTable) -> ResourceVec {
         let mut d = ResourceVec::ZERO;
-        self.be_queue.for_each(&mut |id| d += jobs[id].spec.demand);
+        self.be_queue.for_each(&mut |id| d += *jobs.demand_of(id));
         for id in self.te_queue.iter() {
-            d += jobs[id].spec.demand;
+            d += *jobs.demand_of(id);
         }
         for id in &self.active {
-            d += jobs[*id].spec.demand;
+            d += *jobs.demand_of(*id);
         }
         d
     }
 
     /// Eq. 1 `Size` of one job's demand against the quota reference
-    /// capacity (the cluster total at construction).
+    /// capacity (the cluster total at construction). Column reads — the
+    /// `Job` record stays untouched on this path.
     fn quota_size(&self, jobs: &JobTable, id: JobId) -> (TenantId, f64) {
-        let job = &jobs[id];
-        (job.spec.tenant, job.spec.demand.size(&self.quota_ref))
+        (jobs.tenant_of(id), jobs.demand_of(id).size(&self.quota_ref))
     }
 
     /// Record that `id` started occupying resources.
@@ -461,23 +490,50 @@ impl Scheduler {
     }
 
     /// One simulated minute. `arrivals` must be sorted by submission order.
+    /// Convenience wrapper over [`Scheduler::tick_into`] that allocates a
+    /// fresh [`TickStats`]; hot drivers hold one and reuse it.
     pub fn tick(&mut self, now: Minutes, jobs: &mut JobTable, arrivals: &[JobId]) -> TickStats {
         let mut out = TickStats::default();
+        self.tick_into(now, jobs, arrivals, &mut out);
+        out
+    }
+
+    /// One simulated minute, writing the outcome into a caller-owned
+    /// `out` (cleared here; see [`TickStats::clear`]). With a reused
+    /// `out`, steady-state ticks perform zero heap allocations.
+    pub fn tick_into(
+        &mut self,
+        now: Minutes,
+        jobs: &mut JobTable,
+        arrivals: &[JobId],
+        out: &mut TickStats,
+    ) {
+        out.clear();
         self.stats.ticks += 1;
 
         // -- 1+2: completions and grace expirations ----------------------
-        // The clock knows whether anything is due this minute; event-free
-        // minutes skip the whole active-set scan. When a scan does run it
-        // walks `active` in insertion order, exactly like the pre-clock
-        // core, so multi-event ticks process in the identical order.
-        if self.clock.take_due(now, jobs) {
+        // The clock hands over exactly the jobs with a live event due this
+        // minute; event-free minutes skip the whole active-set scan. When
+        // a scan does run it walks `active` in insertion order, exactly
+        // like the pre-clock core, so multi-event ticks process in the
+        // identical order (the due set only *guards* the walk — live
+        // events are exact, so a guarded walk transitions the same jobs
+        // the old exhaustive scan did, with the same swap_remove order).
+        self.clock.take_due_into(now, jobs, &mut self.due_scratch);
+        if !self.due_scratch.is_empty() {
             let mut i = 0;
             while i < self.active.len() {
                 let id = self.active[i];
+                if self.due_scratch.binary_search(&id.0).is_err() {
+                    i += 1;
+                    continue;
+                }
                 let job = &mut jobs[id];
+                job.sync(now);
                 match job.state {
                     JobState::Running if job.remaining == 0 => {
                         job.complete(now);
+                        jobs.bump_epoch(id);
                         self.unbind_checked(id, jobs);
                         self.release_usage(jobs, id);
                         self.active.swap_remove(i);
@@ -486,6 +542,7 @@ impl Scheduler {
                     }
                     JobState::Draining if job.remaining == 0 && self.cfg.progress_during_grace => {
                         job.complete(now);
+                        jobs.bump_epoch(id);
                         self.unbind_checked(id, jobs);
                         self.release_usage(jobs, id);
                         self.active.swap_remove(i);
@@ -495,6 +552,7 @@ impl Scheduler {
                     JobState::Draining if job.grace_left == 0 => {
                         let tenant = job.spec.tenant;
                         job.vacate(now);
+                        jobs.bump_epoch(id);
                         self.unbind_checked(id, jobs);
                         self.release_usage(jobs, id);
                         self.active.swap_remove(i);
@@ -510,10 +568,10 @@ impl Scheduler {
             for id in &self.active {
                 let job = &jobs[*id];
                 let due = match job.state {
-                    JobState::Running => job.remaining == 0,
+                    JobState::Running => job.remaining_at(now) == 0,
                     JobState::Draining => {
-                        job.grace_left == 0
-                            || (self.cfg.progress_during_grace && job.remaining == 0)
+                        job.grace_left_at(now) == 0
+                            || (self.cfg.progress_during_grace && job.remaining_at(now) == 0)
                     }
                     _ => false,
                 };
@@ -529,35 +587,17 @@ impl Scheduler {
 
         // -- 4: admission --------------------------------------------------
         if self.cfg.policy.te_bypass() {
-            self.admit_te_lane(now, jobs, &mut out);
+            self.admit_te_lane(now, jobs, out);
         }
-        self.admit_be_queue(now, jobs, &mut out);
+        self.admit_be_queue(now, jobs, out);
 
         if self.paranoid {
             self.cluster.check_invariants().expect("cluster invariants");
             self.check_hold_invariants();
         }
 
-        // -- 5: burn -------------------------------------------------------
-        for id in &self.active {
-            let job = &mut jobs[*id];
-            match job.state {
-                JobState::Running => job.remaining -= 1,
-                JobState::Draining => {
-                    job.grace_left -= 1;
-                    if self.cfg.progress_during_grace && job.remaining > 0 {
-                        job.remaining -= 1;
-                    }
-                }
-                _ => unreachable!("active job in state {:?}", job.state),
-            }
-        }
-        self.be_queue.for_each(&mut |id| jobs[id].waiting += 1);
-        for id in self.te_queue.iter() {
-            jobs[id].waiting += 1;
-        }
-
-        out
+        // No step 5: progress, grace burn-down, and queue waiting are
+        // settled lazily at each job's next transition (see [`Job::sync`]).
     }
 
     /// TE fast lane admission. Per-arrival, not head-gated: the paper
@@ -566,9 +606,13 @@ impl Scheduler {
     /// still waiting out a longer grace period. Order is still FIFO among
     /// TE jobs for placement attempts.
     fn admit_te_lane(&mut self, now: Minutes, jobs: &mut JobTable, out: &mut TickStats) {
-        let waiting: Vec<JobId> = self.te_queue.iter().collect();
-        for head in waiting {
-            let demand = jobs[head].spec.demand;
+        // Snapshot the lane into a reused scratch buffer (admission
+        // mutates the queue as it places).
+        let mut waiting = std::mem::take(&mut self.scratch_te);
+        waiting.clear();
+        waiting.extend(self.te_queue.iter());
+        for &head in &waiting {
+            let demand = *jobs.demand_of(head);
             // (a) Fits somewhere (own reservation credited)?
             if let Some(node) = self.find_node_effective(&demand, Some(head)) {
                 if !self.has_reservation(head) {
@@ -606,16 +650,20 @@ impl Scheduler {
             }
             // (c) Ask the policy for victims.
             let plan = {
-                let eff = self.effective_free_all();
+                let mut eff = std::mem::take(&mut self.scratch_eff);
+                eff.clear();
+                eff.extend(self.cluster.nodes.iter().map(Node::effective_free));
                 let est = &self.estimator;
                 let ctx = PolicyCtx {
                     cluster: &self.cluster,
                     jobs,
                     effective_free: &eff,
-                    oracle_remaining: &|id: JobId| jobs[id].remaining,
-                    predicted_remaining: &|id: JobId| est.predicted_remaining(&jobs[id]),
+                    oracle_remaining: &|id: JobId| jobs[id].remaining_at(now),
+                    predicted_remaining: &|id: JobId| est.predicted_remaining(&jobs[id], now),
                 };
-                self.policy.plan(&jobs[head].spec, &ctx, &mut self.rng)
+                let plan = self.policy.plan(&jobs[head].spec, &ctx, &mut self.rng);
+                self.scratch_eff = eff;
+                plan
             };
             let Some(plan) = plan else {
                 continue; // nothing to preempt (or non-preemptive policy)
@@ -629,11 +677,12 @@ impl Scheduler {
             for v in &plan.victims {
                 let job = &mut jobs[*v];
                 let tenant = job.spec.tenant;
-                job.signal_preemption();
+                job.signal_preemption(now, self.cfg.progress_during_grace);
                 self.stats.preemption_signals += 1;
                 out.preempted.push(*v);
                 if job.grace_left == 0 {
                     job.vacate(now);
+                    jobs.bump_epoch(*v);
                     self.unbind_checked(*v, jobs);
                     self.release_usage(jobs, *v);
                     if let Some(i) = self.active.iter().position(|a| a == v) {
@@ -642,11 +691,14 @@ impl Scheduler {
                     self.be_queue.reinsert_front(*v, tenant);
                     out.vacated.push(*v);
                 } else {
+                    let grace_left = job.grace_left;
+                    let remaining = job.remaining;
+                    let epoch = jobs.bump_epoch(*v);
                     self.clock
-                        .push_grace_expiry(now.saturating_add(job.grace_left), *v, job.epoch);
+                        .push_grace_expiry(now.saturating_add(grace_left), *v, epoch);
                     if self.cfg.progress_during_grace {
                         self.clock
-                            .push_completion(now.saturating_add(job.remaining), *v, job.epoch);
+                            .push_completion(now.saturating_add(remaining), *v, epoch);
                     }
                     victims.push(*v);
                 }
@@ -663,6 +715,7 @@ impl Scheduler {
                 self.place(head, node, now, jobs, out);
             }
         }
+        self.scratch_te = waiting;
     }
 
     /// Shared/BE queue admission: one round of the configured
@@ -677,7 +730,8 @@ impl Scheduler {
     /// queue.
     fn admit_be_queue(&mut self, now: Minutes, jobs: &mut JobTable, out: &mut TickStats) {
         self.be_queue.begin_round();
-        let mut skipped: Vec<(JobId, TenantId)> = Vec::new();
+        let mut skipped = std::mem::take(&mut self.scratch_skipped);
+        skipped.clear();
         loop {
             let Some(head) = self
                 .be_queue
@@ -685,14 +739,14 @@ impl Scheduler {
             else {
                 break;
             };
-            let tenant = jobs[head].spec.tenant;
+            let tenant = jobs.tenant_of(head);
             let outcome = if jobs[head].last_vacated == Some(now) {
                 AdmitOutcome::VacatedNow
             } else if self.over_quota(tenant) {
                 skipped.push((head, tenant));
                 AdmitOutcome::OverQuota
             } else {
-                let demand = jobs[head].spec.demand;
+                let demand = *jobs.demand_of(head);
                 match self.find_node_effective(&demand, Some(head)) {
                     Some(node) => {
                         self.place(head, node, now, jobs, out);
@@ -704,7 +758,8 @@ impl Scheduler {
             self.be_queue
                 .report(head, tenant, outcome, &AdmissionCtx { tenants: &self.tenants });
         }
-        self.note_skips(skipped, out);
+        self.note_skips(&skipped, out);
+        self.scratch_skipped = skipped;
     }
 
     /// Fold one round's quota skips into the dedup set, surfacing only
@@ -712,7 +767,7 @@ impl Scheduler {
     /// skipped round after round is reported once — which also keeps the
     /// skip stream identical under both simulator drive modes (a quiescent
     /// span's elided rounds would have re-skipped the identical set).
-    fn note_skips(&mut self, skipped: Vec<(JobId, TenantId)>, out: &mut TickStats) {
+    fn note_skips(&mut self, skipped: &[(JobId, TenantId)], out: &mut TickStats) {
         if skipped.is_empty() {
             if !self.prev_skipped.is_empty() {
                 self.prev_skipped.clear();
@@ -722,10 +777,11 @@ impl Scheduler {
         // One round can report the same head several times (a quota-gate
         // scan restarts from the front after every placement): dedupe
         // before diffing against the previous round.
-        let mut deduped: Vec<(JobId, TenantId)> = Vec::with_capacity(skipped.len());
+        let mut deduped = std::mem::take(&mut self.scratch_dedup);
+        deduped.clear();
         for (id, tenant) in skipped {
-            if !deduped.iter().any(|(j, _)| *j == id) {
-                deduped.push((id, tenant));
+            if !deduped.iter().any(|(j, _)| j == id) {
+                deduped.push((*id, *tenant));
             }
         }
         for (id, tenant) in &deduped {
@@ -736,6 +792,7 @@ impl Scheduler {
         }
         self.prev_skipped.clear();
         self.prev_skipped.extend(deduped.iter().map(|(id, _)| id.0));
+        self.scratch_dedup = deduped;
     }
 
     fn place(&mut self, id: JobId, node: NodeId, now: Minutes, jobs: &mut JobTable, out: &mut TickStats) {
@@ -753,9 +810,11 @@ impl Scheduler {
         self.release_reservation(id);
         let job = &mut jobs[id];
         job.start(node, now);
-        self.clock
-            .push_completion(now.saturating_add(job.remaining), id, job.epoch);
-        self.cluster.bind(id, job.spec.demand, node);
+        let remaining = job.remaining;
+        let demand = job.spec.demand;
+        let epoch = jobs.bump_epoch(id);
+        self.clock.push_completion(now.saturating_add(remaining), id, epoch);
+        self.cluster.bind(id, demand, node);
         self.active.push(id);
         self.occupy_usage(jobs, id);
         self.stats.placements += 1;
@@ -828,61 +887,23 @@ impl Scheduler {
         self.clock.next_internal_at(jobs)
     }
 
-    /// Advance `dt` quiescent simulated minutes in one step: running jobs
-    /// progress, draining jobs burn grace time (and progress, under
-    /// progress-during-grace), queued jobs accrue waiting time — exactly
-    /// what `dt` calls to [`Scheduler::tick`] would have done given that no
-    /// completion, grace expiry, arrival, or admission can occur inside the
-    /// span. The event-horizon engine establishes that precondition via
-    /// [`Scheduler::quiescent`] and [`Scheduler::next_internal_at`]; debug
-    /// builds re-assert it here.
-    pub fn burn_many(&mut self, dt: Minutes, jobs: &mut JobTable) {
+    /// Advance `dt` quiescent simulated minutes in one step — exactly what
+    /// `dt` calls to [`Scheduler::tick`] would have done given that no
+    /// completion, grace expiry, arrival, or admission can occur inside
+    /// the span. Under lazy accounting (see [`Job::sync`]) that is O(1):
+    /// running, draining, and queued jobs all settle the elapsed span at
+    /// their next transition, so only the time counters advance here. The
+    /// event-horizon engine establishes the quiescence precondition via
+    /// [`Scheduler::quiescent`] and [`Scheduler::next_internal_at`]; the
+    /// engine-equivalence suite pins the byte-identity of the two drive
+    /// modes.
+    pub fn burn_many(&mut self, dt: Minutes) {
         if dt == 0 {
             return;
         }
         self.stats.ticks += dt;
         self.stats.fast_forwards += 1;
         self.stats.fast_forwarded_ticks += dt;
-        for id in &self.active {
-            let job = &mut jobs[*id];
-            match job.state {
-                JobState::Running => {
-                    debug_assert!(
-                        job.remaining >= dt,
-                        "{} would complete mid-span (remaining {} < dt {})",
-                        job.id(),
-                        job.remaining,
-                        dt
-                    );
-                    job.remaining -= dt;
-                }
-                JobState::Draining => {
-                    debug_assert!(
-                        job.grace_left >= dt,
-                        "{} would vacate mid-span (grace {} < dt {})",
-                        job.id(),
-                        job.grace_left,
-                        dt
-                    );
-                    job.grace_left -= dt;
-                    if self.cfg.progress_during_grace && job.remaining > 0 {
-                        debug_assert!(
-                            job.remaining >= dt,
-                            "{} would finish mid-drain (remaining {} < dt {})",
-                            job.id(),
-                            job.remaining,
-                            dt
-                        );
-                        job.remaining -= dt;
-                    }
-                }
-                _ => unreachable!("active job in state {:?}", job.state),
-            }
-        }
-        self.be_queue.for_each(&mut |id| jobs[id].waiting += dt);
-        for id in self.te_queue.iter() {
-            jobs[id].waiting += dt;
-        }
     }
 
     // ------------------------------------------------------------------
@@ -1002,6 +1023,7 @@ impl Scheduler {
                 job.fail_over(now);
                 (job.is_te(), job.spec.tenant)
             };
+            jobs.bump_epoch(*id);
             if self.cfg.policy.te_bypass() && is_te {
                 self.te_queue.reinsert_front(*id);
             } else {
@@ -1310,7 +1332,7 @@ mod tests {
         assert!(sa.quiescent(&a), "blocked BE head is quiescent");
         // Job 0 started at t=0 with 50 minutes ⇒ completion event at t=50.
         assert_eq!(sa.next_internal_at(&a), Some(50));
-        sa.burn_many(5, &mut a);
+        sa.burn_many(5);
 
         let mut b = mk();
         let mut sb = drive(&mut b);

@@ -17,6 +17,15 @@
 //! [`ClusterController`](control::ClusterController) facade that both the
 //! simulator and the live executor drive.
 
+// Perf-sensitive tree: silent copies and churny buffer idioms are bugs
+// here, not style nits (the hot path is pinned allocation-free by the
+// perf gate).
+#![deny(
+    clippy::redundant_clone,
+    clippy::large_enum_variant,
+    clippy::vec_init_then_push
+)]
+
 pub mod admission;
 pub mod clock;
 pub mod control;

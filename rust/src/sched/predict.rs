@@ -365,11 +365,14 @@ impl SharedEstimator {
         self.0.lock().unwrap().predict_total(spec)
     }
 
-    /// Predicted *remaining* execution time for a live job: the predicted
-    /// total minus the progress already made, clamped at zero. Under
-    /// [`Oracle`] this equals `job.remaining` exactly.
-    pub fn predicted_remaining(&self, job: &Job) -> f64 {
-        let elapsed = (job.spec.exec_time - job.remaining) as f64;
+    /// Predicted *remaining* execution time for a live job as of minute
+    /// `now`: the predicted total minus the progress already made, clamped
+    /// at zero. Progress is read through [`Job::remaining_at`] — the
+    /// stored counter is lazily accounted and may be stale between
+    /// transitions. Under [`Oracle`] this equals the job's true remaining
+    /// time exactly.
+    pub fn predicted_remaining(&self, job: &Job, now: crate::Minutes) -> f64 {
+        let elapsed = (job.spec.exec_time - job.remaining_at(now)) as f64;
         (self.predict_total(&job.spec) - elapsed).max(0.0)
     }
 
@@ -457,8 +460,10 @@ mod tests {
         assert_eq!(est.predict_total(&s), 40.0);
         let mut j = Job::new(s);
         j.start(crate::cluster::NodeId(0), 0);
-        j.remaining = 13;
-        assert_eq!(est.predicted_remaining(&j), 13.0);
+        // 27 of the 40 declared minutes have elapsed by minute 27; the
+        // lazily-accounted remaining is read through `remaining_at`.
+        assert_eq!(est.predicted_remaining(&j, 27), 13.0);
+        assert_eq!(est.predicted_remaining(&j, 0), 40.0);
     }
 
     #[test]

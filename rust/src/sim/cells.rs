@@ -1,0 +1,343 @@
+//! Sharded simulation cells: partition one big cluster into independent
+//! slices and replay each slice on its own core.
+//!
+//! A single [`Simulator`] run is inherently serial — every simulated
+//! minute mutates one scheduler. For *scale* replays (the 1M-job scale
+//! bench) the bottleneck is that serial hot path, so this module trades
+//! global scheduling fidelity for wall-clock speed the same way large
+//! real clusters do: statically partition the nodes into `K` contiguous
+//! **cells**, route each job to a cell by `id % K`, and run every cell as
+//! a completely independent simulation. Cells never exchange jobs, so
+//! there is no cross-cell contention and the cells parallelize perfectly
+//! over [`parallel_map`]'s work-stealing workers (an idle worker steals
+//! the next unclaimed cell, so a slow cell never gates the rest).
+//!
+//! The partition is **deterministic**: the node slices, the job routing,
+//! and every per-cell seed depend only on `(spec, K)`, so a sharded run
+//! is reproducible and — the pin this module's tests enforce —
+//! byte-identical whether its cells execute serially or on a thread pool.
+//! With `K = 1` the sharded driver degenerates to the plain, untouched
+//! [`Simulator::run`] path (same single cell, same seed, same result).
+//!
+//! Sharding is an *approximation knob*, not an equivalence-preserving
+//! refactor: a `K`-cell run answers "how fast can we chew through this
+//! trace", not "what would the one-cluster scheduler have done". Results
+//! therefore merge conservatively — records concatenate (and re-sort into
+//! job-id order), counters sum, makespan is the max over cells — and the
+//! scale bench reports cells explicitly so numbers are never silently
+//! cross-compared between different `K`.
+
+use crate::cluster::ClusterSpec;
+use crate::metrics::StreamingMetrics;
+use crate::sched::SchedStats;
+use crate::sim::{SimConfig, SimResult, Simulator};
+use crate::sweep::parallel_map;
+use crate::workload::Workload;
+
+/// Split `spec`'s nodes into `k` contiguous, non-overlapping slices whose
+/// concatenation is the original node list. Sizes differ by at most one
+/// (the first `nodes % k` cells get the extra node); `k` is clamped to
+/// `[1, nodes]` so no cell is ever empty.
+pub fn split_cluster(spec: &ClusterSpec, k: usize) -> Vec<ClusterSpec> {
+    let n = spec.nodes.len();
+    let k = k.clamp(1, n.max(1));
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for cell in 0..k {
+        let len = base + usize::from(cell < extra);
+        out.push(ClusterSpec {
+            nodes: spec.nodes[start..start + len].to_vec(),
+        });
+        start += len;
+    }
+    debug_assert_eq!(start, n, "slices must cover every node exactly once");
+    out
+}
+
+/// Route `workload`'s jobs into `k` per-cell workloads by `id % k` —
+/// deterministic, order-preserving within a cell, and independent of the
+/// thread count. Job ids are kept verbatim (the job table handles sparse
+/// ids), so merged records sort back into the global submission order.
+pub fn split_workload(workload: &Workload, k: usize) -> Vec<Workload> {
+    let k = k.max(1);
+    let mut out: Vec<Workload> = (0..k).map(|_| Workload { jobs: Vec::new() }).collect();
+    for spec in &workload.jobs {
+        out[(spec.id.0 as usize) % k].jobs.push(spec.clone());
+    }
+    out
+}
+
+/// Field-wise sum of two cells' scheduler counters.
+fn add_stats(acc: &mut SchedStats, s: &SchedStats) {
+    acc.preemption_signals += s.preemption_signals;
+    acc.fallback_plans += s.fallback_plans;
+    acc.plans += s.plans;
+    acc.placements += s.placements;
+    acc.completions += s.completions;
+    acc.te_no_preemption += s.te_no_preemption;
+    acc.ticks += s.ticks;
+    acc.replans += s.replans;
+    acc.fast_forwards += s.fast_forwards;
+    acc.fast_forwarded_ticks += s.fast_forwarded_ticks;
+    acc.internal_errors += s.internal_errors;
+    acc.admission_skips += s.admission_skips;
+}
+
+/// Merge per-cell results into one [`SimResult`]: records concatenate and
+/// re-sort into job-id order, metrics sinks merge (they are mergeable by
+/// design — the sweep pools them the same way), counters and `unfinished`
+/// sum, and `makespan` is the slowest cell's. `peak_live` sums the
+/// per-cell high-water marks — an upper bound on the simultaneous global
+/// resident set. Panics on an empty part list.
+pub fn merge_results(parts: Vec<SimResult>) -> SimResult {
+    assert!(!parts.is_empty(), "merge_results needs at least one cell");
+    let policy = parts[0].policy;
+    let record_jobs = parts[0].record_jobs;
+    let mut records = Vec::new();
+    let mut metrics = StreamingMetrics::new();
+    let mut sched_stats = SchedStats::default();
+    let mut makespan = 0;
+    let mut unfinished = 0usize;
+    let mut peak_live = 0usize;
+    let mut prediction_updates = 0u64;
+    for part in parts {
+        records.extend(part.records);
+        metrics.merge(&part.metrics);
+        add_stats(&mut sched_stats, &part.sched_stats);
+        makespan = makespan.max(part.makespan);
+        unfinished += part.unfinished;
+        peak_live += part.peak_live;
+        prediction_updates += part.prediction_updates;
+    }
+    records.sort_by_key(|r| r.id);
+    SimResult {
+        policy,
+        records,
+        metrics,
+        sched_stats,
+        makespan,
+        unfinished,
+        peak_live,
+        record_jobs,
+        prediction_updates,
+    }
+}
+
+/// Driver for a sharded run: a base [`SimConfig`] template applied to
+/// every cell, a cell count, and a worker-thread knob.
+pub struct ShardedSim {
+    cfg: SimConfig,
+    cells: usize,
+    threads: usize,
+}
+
+impl ShardedSim {
+    /// Shard `cfg`'s cluster into `cells` slices (clamped to the node
+    /// count; `0` is treated as `1`). Worker threads default to one per
+    /// cell, capped by `FITGPP_THREADS` / available parallelism — see
+    /// [`ShardedSim::with_threads`].
+    pub fn new(cfg: SimConfig, cells: usize) -> Self {
+        assert!(
+            cfg.scenario.is_none(),
+            "scenario scripts address global job/node ids and are not supported in sharded runs"
+        );
+        let cells = cells.clamp(1, cfg.cluster.nodes.len().max(1));
+        ShardedSim { cfg, cells, threads: 0 }
+    }
+
+    /// Pin the worker-thread count (`1` = serial reference order, the
+    /// byte-equivalence oracle; `0` = resolve from `FITGPP_THREADS`, else
+    /// all cores).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The effective cell count after clamping.
+    pub fn cells(&self) -> usize {
+        self.cells
+    }
+
+    /// Per-cell simulator configs: the base template with the cell's node
+    /// slice and a decorrelated policy-RNG seed (`seed + cell`; cell 0
+    /// keeps the base seed, so a 1-cell shard is the plain run).
+    pub fn cell_configs(&self) -> Vec<SimConfig> {
+        split_cluster(&self.cfg.cluster, self.cells)
+            .into_iter()
+            .enumerate()
+            .map(|(i, cluster)| {
+                let mut cfg = self.cfg.clone();
+                cfg.cluster = cluster;
+                cfg.seed = cfg.seed.wrapping_add(i as u64);
+                cfg
+            })
+            .collect()
+    }
+
+    /// Run `workload` across the cells and merge the results. With one
+    /// cell this is exactly [`Simulator::run`] on the unmodified config —
+    /// the default path stays untouched. With `K > 1`, cells run on
+    /// [`parallel_map`]'s work-stealing workers; the merged result is
+    /// independent of the thread count.
+    pub fn run(&self, workload: &Workload) -> SimResult {
+        if self.cells == 1 {
+            return Simulator::new(self.cfg.clone()).run(workload);
+        }
+        let shards = split_workload(workload, self.cells);
+        let jobs: Vec<(SimConfig, Workload)> = self
+            .cell_configs()
+            .into_iter()
+            .zip(shards)
+            .collect();
+        let threads = if self.threads > 0 {
+            self.threads
+        } else {
+            resolve_threads(self.cells)
+        };
+        let parts = parallel_map(&jobs, threads, |_, (cfg, wl)| {
+            Simulator::new(cfg.clone()).run(wl)
+        });
+        merge_results(parts)
+    }
+}
+
+/// One worker per cell, capped by `FITGPP_THREADS` (when set and nonzero)
+/// or the machine's available parallelism.
+fn resolve_threads(cells: usize) -> usize {
+    let cap = std::env::var("FITGPP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    cells.min(cap).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobClass, JobSpec};
+    use crate::resources::ResourceVec;
+    use crate::sched::policy::PolicyKind;
+
+    fn rv(c: f64, r: f64, g: f64) -> ResourceVec {
+        ResourceVec::new(c, r, g)
+    }
+
+    fn workload(n: u32) -> Workload {
+        Workload::new(
+            (0..n)
+                .map(|i| {
+                    JobSpec::new(
+                        i,
+                        if i % 3 == 0 { JobClass::Te } else { JobClass::Be },
+                        rv(4.0 + (i % 3) as f64 * 8.0, 32.0, (i % 2) as f64 + 1.0),
+                        (i as u64) / 2,
+                        4 + (i as u64 % 13),
+                        (i as u64) % 4,
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn cluster_slices_partition_the_nodes() {
+        let spec = ClusterSpec::tiny(7);
+        let slices = split_cluster(&spec, 3);
+        assert_eq!(slices.len(), 3);
+        assert_eq!(
+            slices.iter().map(|s| s.nodes.len()).collect::<Vec<_>>(),
+            vec![3, 2, 2],
+            "sizes differ by at most one"
+        );
+        let rebuilt: Vec<ResourceVec> =
+            slices.iter().flat_map(|s| s.nodes.iter().copied()).collect();
+        assert_eq!(rebuilt, spec.nodes, "concatenation is the original");
+        // Clamping: more cells than nodes degenerates to one node each.
+        assert_eq!(split_cluster(&spec, 100).len(), 7);
+        assert_eq!(split_cluster(&spec, 0).len(), 1);
+    }
+
+    #[test]
+    fn job_routing_is_by_id_mod_k() {
+        let wl = workload(20);
+        let shards = split_workload(&wl, 4);
+        assert_eq!(shards.iter().map(|s| s.jobs.len()).sum::<usize>(), 20);
+        for (cell, shard) in shards.iter().enumerate() {
+            for spec in &shard.jobs {
+                assert_eq!(spec.id.0 as usize % 4, cell);
+            }
+            // Submission order is preserved inside each cell.
+            assert!(shard.jobs.windows(2).all(|w| w[0].submit <= w[1].submit));
+        }
+    }
+
+    #[test]
+    fn one_cell_is_the_plain_simulator() {
+        let wl = workload(30);
+        let cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+        let plain = Simulator::new(cfg.clone()).run(&wl);
+        let sharded = ShardedSim::new(cfg, 1).run(&wl);
+        assert_eq!(plain.records, sharded.records);
+        assert_eq!(plain.metrics, sharded.metrics);
+        assert_eq!(plain.makespan, sharded.makespan);
+        assert_eq!(plain.peak_live, sharded.peak_live);
+    }
+
+    #[test]
+    fn parallel_cells_match_serial_cells_exactly() {
+        // The acceptance pin: a K-cell run is byte-identical whether its
+        // cells execute serially or on the work-stealing pool.
+        let wl = workload(60);
+        let mk = |threads: usize| {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(4), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+            cfg.paranoid = true;
+            ShardedSim::new(cfg, 4).with_threads(threads).run(&wl)
+        };
+        let serial = mk(1);
+        let parallel = mk(4);
+        assert_eq!(serial.records, parallel.records);
+        assert_eq!(serial.metrics, parallel.metrics);
+        assert_eq!(serial.makespan, parallel.makespan);
+        assert_eq!(serial.unfinished, parallel.unfinished);
+        assert_eq!(serial.peak_live, parallel.peak_live);
+        assert_eq!(serial.sched_stats.ticks, parallel.sched_stats.ticks);
+        assert_eq!(serial.sched_stats.completions, parallel.sched_stats.completions);
+        assert_eq!(
+            serial.sched_stats.preemption_signals,
+            parallel.sched_stats.preemption_signals
+        );
+    }
+
+    #[test]
+    fn merged_result_accounts_for_every_job() {
+        let wl = workload(60);
+        let cfg = SimConfig::new(ClusterSpec::tiny(4), PolicyKind::Fifo);
+        let sharded = ShardedSim::new(cfg, 3).with_threads(2).run(&wl);
+        assert_eq!(sharded.records.len(), 60, "every job keeps a record");
+        assert_eq!(sharded.metrics.jobs_seen, 60);
+        assert_eq!(sharded.unfinished, 0, "cells drain independently");
+        assert_eq!(sharded.sched_stats.completions, 60);
+        // Records come back in global id order despite the mod-K split.
+        assert!(sharded.records.windows(2).all(|w| w[0].id < w[1].id));
+    }
+
+    #[test]
+    fn cell_configs_slice_nodes_and_decorrelate_seeds() {
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(5), PolicyKind::Rand);
+        cfg.seed = 100;
+        let sharded = ShardedSim::new(cfg, 2);
+        let cfgs = sharded.cell_configs();
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].cluster.nodes.len(), 3);
+        assert_eq!(cfgs[1].cluster.nodes.len(), 2);
+        assert_eq!(cfgs[0].seed, 100, "cell 0 keeps the base seed");
+        assert_eq!(cfgs[1].seed, 101);
+    }
+}

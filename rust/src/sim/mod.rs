@@ -44,6 +44,16 @@
 //! results, whichever engine runs — which is what makes every number in
 //! EXPERIMENTS.md reproducible.
 
+// Perf-sensitive tree: silent copies and churny buffer idioms are bugs
+// here, not style nits (the hot path is pinned allocation-free by the
+// perf gate).
+#![deny(
+    clippy::redundant_clone,
+    clippy::large_enum_variant,
+    clippy::vec_init_then_push
+)]
+
+pub mod cells;
 pub mod scenario;
 
 use crate::cluster::{ClusterSpec, Placement};
@@ -672,7 +682,11 @@ impl Simulator {
         mut records: Vec<JobRecord>,
         now: Minutes,
     ) -> SimResult {
-        let (sched, jobs, mut metrics) = ctl.into_parts();
+        let (sched, mut jobs, mut metrics) = ctl.into_parts();
+        // Counters are lazily accounted (see `Job::sync`): settle every
+        // still-resident job up to the cut-off minute so accrued-wait
+        // slowdowns and records read exact values.
+        jobs.settle_all(now);
         let mut unfinished = 0usize;
         for job in jobs.iter() {
             debug_assert!(job.state != JobState::Done, "Done jobs retire eagerly");

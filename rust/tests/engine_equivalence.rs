@@ -437,3 +437,45 @@ fn prop_trait_policies_match_pre_refactor_oracle() {
         Ok(())
     });
 }
+
+/// Satellite audit (perf PR): every `SchedStats` counter that describes
+/// *scheduling work* — signals, plans, placements, completions, skips,
+/// replans, simulated minutes — must be drive-mode invariant. Counters
+/// that were ever bumped per-minute in one engine and per-burn in the
+/// other would double-count under exactly one of them; this pin turns any
+/// such drift into a test failure. `fast_forwards` /
+/// `fast_forwarded_ticks` are *engine descriptors* (how the minutes were
+/// covered, not what happened in them) and are excluded by design: the
+/// per-minute oracle is instead pinned to never bulk-burn at all.
+#[test]
+fn sched_stats_counters_are_drive_mode_invariant() {
+    let cluster = ClusterSpec::tiny(3);
+    for seed in [13u64, 101] {
+        let wl = SyntheticWorkload::paper_section_4_2(seed)
+            .with_cluster(cluster.clone())
+            .with_num_jobs(300)
+            .generate();
+        for policy in all_policies() {
+            let eh = run(SimEngine::EventHorizon, &wl, &cluster, policy, seed, false);
+            let pm = run(SimEngine::PerMinute, &wl, &cluster, policy, seed, false);
+            let what = format!("seed {seed}, {policy:?}");
+            let (a, b) = (&eh.sched_stats, &pm.sched_stats);
+            assert_eq!(a.preemption_signals, b.preemption_signals, "{what}: signals");
+            assert_eq!(a.fallback_plans, b.fallback_plans, "{what}: fallback_plans");
+            assert_eq!(a.plans, b.plans, "{what}: plans");
+            assert_eq!(a.placements, b.placements, "{what}: placements");
+            assert_eq!(a.completions, b.completions, "{what}: completions");
+            assert_eq!(a.te_no_preemption, b.te_no_preemption, "{what}: te_no_preemption");
+            assert_eq!(a.ticks, b.ticks, "{what}: simulated minutes");
+            assert_eq!(a.replans, b.replans, "{what}: replans");
+            assert_eq!(a.internal_errors, 0, "{what}: internal errors");
+            assert_eq!(b.internal_errors, 0, "{what}: internal errors");
+            assert_eq!(a.admission_skips, b.admission_skips, "{what}: admission_skips");
+            // Completions must also agree with ground truth: every job in
+            // the workload finished (these runs drain).
+            assert_eq!(a.completions, wl.jobs.len() as u64, "{what}: all jobs completed");
+            assert_eq!(b.fast_forwards, 0, "{what}: oracle never bulk-burns");
+            assert_eq!(b.fast_forwarded_ticks, 0, "{what}: oracle never bulk-burns");
+        }
+    }
+}

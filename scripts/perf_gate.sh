@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# Perf-regression gate (CI `perf-gate` job).
+#
+# Compares the just-measured BENCH_scale.json against the committed
+# BENCH_baseline.json and fails on a >15% jobs/sec regression, then pins
+# the allocation-free hot-path guarantee via BENCH_hotpath.json
+# (`steady_state_allocs_per_op` must be exactly 0).
+#
+# Blessing a new baseline (after an intentional perf change, measured on
+# the CI runner class):
+#
+#     cp BENCH_scale.json BENCH_baseline.json
+#     git add BENCH_baseline.json && git commit
+#
+# The committed baseline may be a conservative *floor* rather than a real
+# measurement (marked "is_floor": true) — e.g. when seeded on a machine
+# class different from CI. The gate works the same either way; blessing
+# with a real CI measurement tightens it.
+#
+# Usage: scripts/perf_gate.sh [baseline.json] [scale.json] [hotpath.json]
+set -euo pipefail
+
+BASELINE=${1:-BENCH_baseline.json}
+SCALE=${2:-BENCH_scale.json}
+HOTPATH=${3:-BENCH_hotpath.json}
+TOLERANCE=0.85 # fail below baseline × this
+
+for f in "$BASELINE" "$SCALE" "$HOTPATH"; do
+  if [ ! -f "$f" ]; then
+    echo "perf-gate: missing $f" >&2
+    exit 1
+  fi
+done
+
+measured=$(jq -er '.jobs_per_sec' "$SCALE")
+cells=$(jq -r '.cells // 1' "$SCALE")
+floor=$(jq -er '.jobs_per_sec' "$BASELINE")
+is_floor=$(jq -r '.is_floor // false' "$BASELINE")
+pre_pr=$(jq -r '.pre_pr_jobs_per_sec // empty' "$BASELINE")
+
+if [ "$cells" != "1" ]; then
+  echo "perf-gate: $SCALE was produced with FITGPP_CELLS=$cells;" \
+    "the gate compares single-cell throughput only" >&2
+  exit 1
+fi
+
+echo "perf-gate: measured ${measured} jobs/sec vs baseline ${floor} (floor marker: ${is_floor})"
+
+if ! jq -en --argjson m "$measured" --argjson f "$floor" --argjson t "$TOLERANCE" \
+  '$m >= $f * $t' >/dev/null; then
+  echo "perf-gate: FAIL — ${measured} jobs/sec is below ${TOLERANCE} × baseline ${floor}" >&2
+  echo "perf-gate: if this regression is intentional, bless a new baseline:" >&2
+  echo "perf-gate:     cp $SCALE $BASELINE && git add $BASELINE" >&2
+  exit 1
+fi
+
+if [ -n "$pre_pr" ]; then
+  speedup=$(jq -n --argjson m "$measured" --argjson p "$pre_pr" '$m / $p')
+  echo "perf-gate: speedup vs pre-raw-speed-campaign baseline (${pre_pr} jobs/sec): ${speedup}x"
+fi
+
+allocs=$(jq -er '.steady_state_allocs_per_op' "$HOTPATH")
+if ! jq -en --argjson a "$allocs" '$a == 0' >/dev/null; then
+  echo "perf-gate: FAIL — steady-state hot path allocates (${allocs} allocs/op, expected 0)" >&2
+  echo "perf-gate: see the per-op breakdown in $HOTPATH (.ops)" >&2
+  exit 1
+fi
+echo "perf-gate: steady-state hot path is allocation-free (0 allocs/op)"
+echo "perf-gate: OK"
