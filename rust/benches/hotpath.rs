@@ -21,8 +21,8 @@ use fitgpp::cluster::{Cluster, ClusterSpec, Placement};
 use fitgpp::job::{Job, JobClass, JobId, JobSpec};
 use fitgpp::job_table::JobTable;
 use fitgpp::resources::ResourceVec;
-use fitgpp::sched::policy::{fitgpp as fitgpp_policy, PolicyCtx, PolicyKind};
-use fitgpp::sched::{EventClock, SchedConfig, Scheduler, TickStats};
+use fitgpp::sched::policy::{fitgpp as fitgpp_policy, PlanScratch, PolicyCtx, PolicyKind};
+use fitgpp::sched::{EventClock, SchedConfig, Scheduler, TickStats, VictimIndex};
 use fitgpp::sim::{SimConfig, Simulator};
 use fitgpp::stats::rng::Pcg64;
 use fitgpp::stats::summary::percentiles;
@@ -236,6 +236,54 @@ fn main() {
         ops.push(("clock_push_pop_cycle", m));
     }
 
+    // Full plan path against a saturated cluster: every op runs one TE
+    // admission that walks the whole FitGpp victim scan (all N candidates
+    // p-capped, so Eq. 4 finds nothing) and the RAND fallback (whose
+    // p-filtered pool is empty — `pick_index(0)` returns None without a
+    // draw, so the op is deterministic and repeatable). This is the
+    // O(candidates) planning cost the victim index bounds; the gate pins
+    // its alloc rate to zero.
+    for n in [256u32, 4096] {
+        // 16 jobs of (2 cpu, 16 GB) pack one tiny node exactly: the TE
+        // job below fits a node's *capacity* but never its free space.
+        let spec = ClusterSpec::tiny((n / 16) as usize);
+        let mut sched = Scheduler::new(
+            &spec,
+            SchedConfig::new(PolicyKind::FitGpp { s: 4.0, p_max: Some(1) }),
+        );
+        let mut jobs = JobTable::new();
+        let mut arrivals = Vec::new();
+        for i in 0..n {
+            jobs.insert(Job::new(JobSpec::new(
+                i,
+                JobClass::Be,
+                rv(2.0, 16.0, 0.0),
+                0,
+                100_000_000,
+                0,
+            )));
+            arrivals.push(JobId(i));
+        }
+        let mut out = TickStats::default();
+        sched.tick_into(0, &mut jobs, &arrivals, &mut out);
+        assert_eq!(out.started.len(), n as usize, "bench state must saturate the cluster");
+        for i in 0..n {
+            jobs[JobId(i)].preemptions = 1; // at the cap: scanned, never chosen
+        }
+        jobs.insert(Job::new(JobSpec::new(n, JobClass::Te, rv(4.0, 32.0, 1.0), 1, 5, 0)));
+        sched.tick_into(1, &mut jobs, &[JobId(n)], &mut out);
+        let mut now = 2u64;
+        let iters = if n >= 4096 { 2_000 } else { 20_000 };
+        let m = measure_op(200, iters, || {
+            sched.tick_into(now, &mut jobs, &[], &mut out);
+            now += 1;
+        });
+        ops.push((
+            if n == 256 { "plan_blocked_te_256" } else { "plan_blocked_te_4096" },
+            m,
+        ));
+    }
+
     println!("per-op microbenches:");
     for (name, m) in &ops {
         println!("  {name}: {:.1} ns/op, {:.4} allocs/op", m.ns_per_op, m.allocs_per_op);
@@ -262,6 +310,8 @@ fn main() {
         let free: Vec<ResourceVec> = cluster.nodes.iter().map(|nd| nd.free).collect();
         let te = JobSpec::new(999_999, JobClass::Te, rv(16.0, 128.0, 4.0), 0, 5, 0);
         let oracle = |id: JobId| jobs[id].remaining_at(0);
+        let vidx = VictimIndex::build(&cluster, &jobs);
+        let mut scratch = PlanScratch::default();
         let mut rng = Pcg64::new(7);
         r.bench(&format!("fitgpp scan @{n} running"), 10, 50, || {
             let ctx = PolicyCtx {
@@ -270,8 +320,9 @@ fn main() {
                 effective_free: &free,
                 oracle_remaining: &oracle,
                 predicted_remaining: &|_: JobId| 0.0,
+                victims: &vidx,
             };
-            black_box(fitgpp_policy::plan(&te, &ctx, 4.0, Some(1), &mut rng))
+            black_box(fitgpp_policy::plan(&te, &ctx, &mut scratch, 4.0, Some(1), &mut rng))
         });
     }
 

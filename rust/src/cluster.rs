@@ -261,6 +261,10 @@ struct FreeIndex {
     by_size: BTreeSet<(u64, u32)>,
     by_axis: [BTreeSet<(u64, u32)>; 3],
     keys: Vec<[u64; 4]>, // [size, cpu, ram, gpu] bits per node
+    /// Σ effective free across all nodes, maintained alongside the per-node
+    /// keys (an O(1) read for the planner's pre-plan reject bound). Derived
+    /// from the remembered key bits so insert/remove stay exactly paired.
+    eff_total: ResourceVec,
 }
 
 impl FreeIndex {
@@ -290,6 +294,7 @@ impl FreeIndex {
             set.insert((k[axis + 1], id));
         }
         self.keys[id as usize] = k;
+        self.eff_total += Self::keys_to_eff(&k);
     }
 
     fn remove(&mut self, id: NodeId) {
@@ -298,6 +303,17 @@ impl FreeIndex {
         for (axis, set) in self.by_axis.iter_mut().enumerate() {
             set.remove(&(k[axis + 1], id.0));
         }
+        self.eff_total -= Self::keys_to_eff(&k);
+    }
+
+    /// The effective-free vector a node's remembered keys encode
+    /// (effective free is clamped at zero before keying, so this is exact).
+    fn keys_to_eff(k: &[u64; 4]) -> ResourceVec {
+        ResourceVec::new(
+            f64::from_bits(k[1]),
+            f64::from_bits(k[2]),
+            f64::from_bits(k[3]),
+        )
     }
 
     fn update(&mut self, node: &Node) {
@@ -329,6 +345,10 @@ pub struct Cluster {
     /// Componentwise maximum node capacity — normalizer giving a lower
     /// bound on `Size(demand, any node capacity)` for the range prune.
     max_capacity: ResourceVec,
+    /// Σ node capacity, cached at construction and refreshed on resize —
+    /// the planner reads it once per victim loop, so the per-call fold was
+    /// pure waste.
+    total_capacity: ResourceVec,
 }
 
 impl Cluster {
@@ -342,7 +362,8 @@ impl Cluster {
             .collect();
         let index = FreeIndex::new(&nodes);
         let max_capacity = spec.nodes.iter().fold(ResourceVec::ZERO, |acc, c| acc.max(c));
-        Cluster { nodes, location: HashMap::new(), index, max_capacity }
+        let total_capacity = spec.nodes.iter().fold(ResourceVec::ZERO, |acc, c| acc + *c);
+        Cluster { nodes, location: HashMap::new(), index, max_capacity, total_capacity }
     }
 
     /// Shared view of one node.
@@ -368,9 +389,18 @@ impl Cluster {
         self.nodes.iter().fold(ResourceVec::ZERO, |acc, n| acc + n.free)
     }
 
-    /// Total capacity across nodes.
+    /// Total capacity across nodes (cached; refreshed on resize).
     pub fn total_capacity(&self) -> ResourceVec {
-        self.nodes.iter().fold(ResourceVec::ZERO, |acc, n| acc + n.capacity)
+        self.total_capacity
+    }
+
+    /// Total *effective* free across nodes, maintained incrementally by the
+    /// capacity index — O(1), unlike summing [`Node::effective_free`] per
+    /// call. Non-`Up` nodes contribute zero. Feeds the preemption planner's
+    /// pre-plan reject: a demand exceeding `total_effective_free +
+    /// preemptible demand` cannot be planned even by evicting everything.
+    pub fn total_effective_free(&self) -> ResourceVec {
+        self.index.eff_total
     }
 
     /// Componentwise maximum node capacity (cached at construction; node
@@ -518,6 +548,10 @@ impl Cluster {
             .nodes
             .iter()
             .fold(ResourceVec::ZERO, |acc, n| acc.max(&n.capacity));
+        self.total_capacity = self
+            .nodes
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, n| acc + n.capacity);
         self.index.update(&self.nodes[node.0 as usize]);
         Ok(())
     }
@@ -577,6 +611,27 @@ impl Cluster {
             if !self.node(*node).allocations.iter().any(|(id, _)| id == job) {
                 return Err(format!("{job} in index but not on {node}"));
             }
+        }
+        let eff_sum = self
+            .nodes
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, n| acc + n.effective_free());
+        let eff_diff = eff_sum - self.index.eff_total;
+        if eff_diff.cpu.abs() > 1e-6 || eff_diff.ram_gb.abs() > 1e-6 || eff_diff.gpu.abs() > 1e-6 {
+            return Err(format!(
+                "effective-free aggregate drifted: index says {}, nodes sum to {}",
+                self.index.eff_total, eff_sum
+            ));
+        }
+        let cap_sum = self
+            .nodes
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, n| acc + n.capacity);
+        if cap_sum != self.total_capacity {
+            return Err(format!(
+                "total-capacity cache stale: cached {}, nodes sum to {}",
+                self.total_capacity, cap_sum
+            ));
         }
         Ok(())
     }

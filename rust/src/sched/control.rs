@@ -715,7 +715,7 @@ impl ClusterController {
                     self.reject(now, format!("node_up: {node} is already up"));
                     return;
                 }
-                self.sched.restore_node(node);
+                self.sched.restore_node(node, &self.jobs);
                 self.emit(&SchedulerEvent::NodeRestored { at: now, node });
             }
             SchedulerCommand::Drain { node } => {
@@ -735,7 +735,7 @@ impl ClusterController {
                     self.reject(now, format!("resize: {node} does not exist"));
                     return;
                 }
-                match self.sched.cluster.resize(node, capacity) {
+                match self.sched.resize_node(node, capacity, &self.jobs) {
                     Ok(()) => self.emit(&SchedulerEvent::NodeResized { at: now, node, capacity }),
                     Err(e) => self.reject(now, format!("resize: {e}")),
                 }

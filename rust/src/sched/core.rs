@@ -63,8 +63,9 @@ use crate::sched::admission::{
     TenantDirectory, TenantUsage,
 };
 use crate::sched::clock::EventClock;
-use crate::sched::policy::{build_policy, PolicyCtx, PolicyKind, PreemptionPolicy};
+use crate::sched::policy::{build_policy, PlanScratch, PolicyCtx, PolicyKind, PreemptionPolicy};
 use crate::sched::predict::{EstimatorKind, SharedEstimator};
+use crate::sched::victim_index::VictimIndex;
 use crate::stats::rng::Pcg64;
 use crate::Minutes;
 
@@ -235,6 +236,16 @@ pub struct Scheduler {
     scratch_skipped: Vec<(JobId, TenantId)>,
     /// Round scratch: deduped skips inside [`Scheduler::note_skips`].
     scratch_dedup: Vec<(JobId, TenantId)>,
+    /// Incrementally-maintained preemption-candidate index: per-node
+    /// running-BE lists plus the ordered score sets every policy ranks by,
+    /// updated only at lifecycle transitions (see
+    /// [`crate::sched::victim_index`]). Policies read it through
+    /// [`PolicyCtx::victims`]; planning never rescans the job table.
+    victim_index: VictimIndex,
+    /// Reusable plan-path scratch (greedy projections, victim pools, sort
+    /// keys), handed to the policy on every plan so steady-state planning
+    /// allocates nothing.
+    plan_scratch: PlanScratch,
     /// Behaviour built from `cfg.policy` at construction (one build per
     /// run, per the [`PreemptionPolicy`] contract).
     policy: Box<dyn PreemptionPolicy>,
@@ -273,6 +284,8 @@ impl Scheduler {
             scratch_eff: Vec::new(),
             scratch_skipped: Vec::new(),
             scratch_dedup: Vec::new(),
+            victim_index: VictimIndex::new(spec.nodes.len()),
+            plan_scratch: PlanScratch::default(),
             stats: SchedStats::default(),
             paranoid: false,
         }
@@ -534,6 +547,7 @@ impl Scheduler {
                     JobState::Running if job.remaining == 0 => {
                         job.complete(now);
                         jobs.bump_epoch(id);
+                        self.victim_index.remove(id);
                         self.unbind_checked(id, jobs);
                         self.release_usage(jobs, id);
                         self.active.swap_remove(i);
@@ -543,6 +557,7 @@ impl Scheduler {
                     JobState::Draining if job.remaining == 0 && self.cfg.progress_during_grace => {
                         job.complete(now);
                         jobs.bump_epoch(id);
+                        self.victim_index.remove(id);
                         self.unbind_checked(id, jobs);
                         self.release_usage(jobs, id);
                         self.active.swap_remove(i);
@@ -594,6 +609,9 @@ impl Scheduler {
         if self.paranoid {
             self.cluster.check_invariants().expect("cluster invariants");
             self.check_hold_invariants();
+            self.victim_index
+                .check_against(&self.cluster, jobs)
+                .expect("victim index matches a from-scratch rebuild");
         }
 
         // No step 5: progress, grace burn-down, and queue waiting are
@@ -660,8 +678,11 @@ impl Scheduler {
                     effective_free: &eff,
                     oracle_remaining: &|id: JobId| jobs[id].remaining_at(now),
                     predicted_remaining: &|id: JobId| est.predicted_remaining(&jobs[id], now),
+                    victims: &self.victim_index,
                 };
-                let plan = self.policy.plan(&jobs[head].spec, &ctx, &mut self.rng);
+                let plan =
+                    self.policy
+                        .plan(&jobs[head].spec, &ctx, &mut self.plan_scratch, &mut self.rng);
                 self.scratch_eff = eff;
                 plan
             };
@@ -672,9 +693,13 @@ impl Scheduler {
             if plan.fallback {
                 self.stats.fallback_plans += 1;
             }
-            // Signal victims; zero-GP victims vacate synchronously.
+            // Signal victims; zero-GP victims vacate synchronously. A
+            // signalled victim leaves the preemptible pool either way
+            // (Draining jobs are not re-preemptible), so it exits the
+            // index here, not at its eventual vacate/complete.
             let mut victims = Vec::new();
             for v in &plan.victims {
+                self.victim_index.remove(*v);
                 let job = &mut jobs[*v];
                 let tenant = job.spec.tenant;
                 job.signal_preemption(now, self.cfg.progress_during_grace);
@@ -815,6 +840,10 @@ impl Scheduler {
         let epoch = jobs.bump_epoch(id);
         self.clock.push_completion(now.saturating_add(remaining), id, epoch);
         self.cluster.bind(id, demand, node);
+        if jobs[id].is_be() {
+            let capacity = self.cluster.node(node).capacity;
+            self.victim_index.insert(&jobs[id], &capacity);
+        }
         self.active.push(id);
         self.occupy_usage(jobs, id);
         self.stats.placements += 1;
@@ -938,6 +967,7 @@ impl Scheduler {
         }
         if let Some(i) = self.active.iter().position(|a| *a == id) {
             self.active.swap_remove(i);
+            self.victim_index.remove(id);
             self.unbind_checked(id, jobs);
             self.release_usage(jobs, id);
             return true;
@@ -991,6 +1021,12 @@ impl Scheduler {
                     return Ok(false);
                 }
                 jobs[id].spec.class = class;
+                // A BE↔TE flip changes preemption eligibility: rebuild the
+                // hosting node's index slice (insertion order = allocation
+                // order, same as a from-scratch build).
+                if let Some(node) = jobs[id].node {
+                    self.victim_index.rebuild_node(node, &self.cluster, jobs);
+                }
                 Ok(true)
             }
             _ => Err(REJECT),
@@ -1006,6 +1042,7 @@ impl Scheduler {
     /// allocation order.
     pub fn fail_node(&mut self, node: NodeId, now: Minutes, jobs: &mut JobTable) -> Vec<JobId> {
         self.drop_reservations_on(node);
+        self.victim_index.remove_node(node);
         let lost = self.cluster.evict_all(node);
         for id in &lost {
             match self.active.iter().position(|a| a == id) {
@@ -1039,14 +1076,39 @@ impl Scheduler {
     /// jobs re-plan elsewhere.
     pub fn drain_node(&mut self, node: NodeId) {
         self.drop_reservations_on(node);
+        // Hosted jobs keep running but stop being preemption candidates
+        // (the index holds Up-node jobs only, like the scan it replaced).
+        self.victim_index.remove_node(node);
         self.cluster.set_availability(node, NodeAvailability::Draining);
     }
 
     /// Bring a node (back) into service: `Down → Up` after a repair —
     /// the node returns empty at full capacity — or `Draining → Up` to
-    /// abort a maintenance drain with its tenants intact.
-    pub fn restore_node(&mut self, node: NodeId) {
+    /// abort a maintenance drain with its tenants intact (they re-enter
+    /// the preemptible pool, hence the index rebuild).
+    pub fn restore_node(&mut self, node: NodeId, jobs: &JobTable) {
         self.cluster.set_availability(node, NodeAvailability::Up);
+        self.victim_index.rebuild_node(node, &self.cluster, jobs);
+    }
+
+    /// Resize a node's capacity (the `Resize` command). Size keys are
+    /// normalized by the hosting node's capacity, so every hosted victim's
+    /// ranking changes with it: the node's index slice is rebuilt after the
+    /// cluster applies the resize.
+    pub fn resize_node(
+        &mut self,
+        node: NodeId,
+        capacity: ResourceVec,
+        jobs: &JobTable,
+    ) -> Result<(), crate::cluster::ClusterError> {
+        self.cluster.resize(node, capacity)?;
+        self.victim_index.rebuild_node(node, &self.cluster, jobs);
+        Ok(())
+    }
+
+    /// The live victim index (tests, benches, diagnostics).
+    pub fn victim_index(&self) -> &VictimIndex {
+        &self.victim_index
     }
 
     /// Drop every reservation pinned to `node`, returning the TE jobs that
@@ -1409,7 +1471,7 @@ mod tests {
         // the evicted job back ahead of the queue.
         sched.tick(1, &mut jobs, &[]);
         assert_eq!(jobs[JobId(0)].state, JobState::Pending, "no capacity while down");
-        sched.restore_node(crate::cluster::NodeId(0));
+        sched.restore_node(crate::cluster::NodeId(0), &jobs);
         sched.tick(2, &mut jobs, &[]);
         assert_eq!(jobs[JobId(0)].state, JobState::Running);
         assert_eq!(jobs[JobId(2)].state, JobState::Pending, "priority preserved");

@@ -9,8 +9,10 @@
 //! trait), [`predict`] estimates *how long jobs will run* (behind the
 //! [`RuntimeEstimator`](predict::RuntimeEstimator) trait, feeding the
 //! prediction-aware policies), [`clock`] knows *when anything happens
-//! next* (min-heaps, no job-table rescans), the [`core`] ties them to the
-//! cluster's incremental capacity index, and [`control`] is the public
+//! next* (min-heaps, no job-table rescans), [`victim_index`] keeps the
+//! preemptible pool pre-sorted so planning never rescans the cluster, the
+//! [`core`] ties them to the cluster's incremental capacity index, and
+//! [`control`] is the public
 //! face: a typed
 //! [`SchedulerCommand`](control::SchedulerCommand) /
 //! [`SchedulerEvent`](control::SchedulerEvent) protocol consumed by the
@@ -32,6 +34,7 @@ pub mod control;
 pub mod core;
 pub mod policy;
 pub mod predict;
+pub mod victim_index;
 
 pub use admission::{DisciplineKind, QueueDiscipline, TenantDirectory};
 pub use clock::EventClock;
@@ -42,3 +45,4 @@ pub use control::{
 pub use core::{SchedConfig, SchedStats, Scheduler, TickStats};
 pub use policy::{PolicyKind, PreemptionPlan, PreemptionPolicy};
 pub use predict::{EstimatorKind, RuntimeEstimator, SharedEstimator};
+pub use victim_index::VictimIndex;

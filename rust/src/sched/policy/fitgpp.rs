@@ -16,8 +16,8 @@
 //! random BE job" — we reuse the RAND policy's node-sticky plan for that
 //! (and count how often it fires; in the paper's experiments it never did).
 
-use super::{rand_policy, PolicyCtx, PreemptionPlan, PreemptionPolicy};
-use crate::job::JobSpec;
+use super::{rand_policy, PlanScratch, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use crate::job::{JobId, JobSpec};
 use crate::stats::rng::Pcg64;
 
 /// Trait wrapper for [`plan`]: the paper's FitGpp with its two knobs.
@@ -33,9 +33,10 @@ impl PreemptionPolicy for FitGpp {
         &self,
         te: &JobSpec,
         ctx: &PolicyCtx<'_>,
+        scratch: &mut PlanScratch,
         rng: &mut Pcg64,
     ) -> Option<PreemptionPlan> {
-        plan(te, ctx, self.s, self.p_max, rng)
+        plan(te, ctx, scratch, self.s, self.p_max, rng)
     }
 }
 
@@ -62,36 +63,28 @@ pub fn score(
 pub fn plan(
     te: &JobSpec,
     ctx: &PolicyCtx<'_>,
+    scratch: &mut PlanScratch,
     s: f64,
     p_max: Option<u32>,
     rng: &mut Pcg64,
 ) -> Option<PreemptionPlan> {
-    let running = ctx.running_be();
-    if running.is_empty() {
+    if ctx.victims.is_empty() {
         return None;
     }
 
-    // Normalizers over 𝒥 (all running BE jobs). Size is measured against
-    // the *hosting node's* capacity, which keeps Eq. 1 meaningful on
-    // heterogeneous clusters (identical to the paper on its homogeneous
-    // testbed).
-    let mut max_size = 0.0f64;
-    let mut max_gp = 0.0f64;
-    let sizes: Vec<f64> = running
-        .iter()
-        .map(|id| {
-            let j = &ctx.jobs[*id];
-            let node = ctx.cluster.node(j.node.expect("running job has a node"));
-            let sz = j.spec.demand.size(&node.capacity);
-            max_size = max_size.max(sz);
-            max_gp = max_gp.max(j.spec.grace_period as f64);
-            sz
-        })
-        .collect();
+    // Normalizers over 𝒥 (all running BE jobs), read off the victim
+    // index's ordered-set tails instead of a per-plan O(J) fold —
+    // bit-identical: sizes are ≥ 0 so the bit-ordered maximum *is* the
+    // f64 maximum, and `u64 → f64` is monotone for the GP keys. Size is
+    // measured against the *hosting node's* capacity, which keeps Eq. 1
+    // meaningful on heterogeneous clusters (identical to the paper on its
+    // homogeneous testbed).
+    let max_size = ctx.victims.max_size();
+    let max_gp = ctx.victims.max_gp();
 
-    let mut best: Option<(f64, usize)> = None; // (score, index into `running`)
-    for (i, id) in running.iter().enumerate() {
-        let j = &ctx.jobs[*id];
+    let mut best: Option<(f64, JobId)> = None;
+    for id in ctx.victims.pool() {
+        let j = &ctx.jobs[id];
         if let Some(p) = p_max {
             if j.preemptions >= p {
                 continue; // starvation guard (strategy 4)
@@ -104,19 +97,21 @@ pub fn plan(
         if !te.demand.fits_in(&avail) {
             continue;
         }
-        let sc = score(sizes[i], j.spec.grace_period as f64, max_size, max_gp, s);
+        // The same expression the index keyed, recomputed only for the
+        // candidates that survive Eq. 2 — identical bits either way.
+        let sz = j.spec.demand.size(&ctx.cluster.node(node).capacity);
+        let sc = score(sz, j.spec.grace_period as f64, max_size, max_gp, s);
         // Deterministic tie-break on job id.
         let better = match best {
             None => true,
-            Some((b, bi)) => sc < b || (sc == b && id < &running[bi]),
+            Some((b, bid)) => sc < b || (sc == b && id < bid),
         };
         if better {
-            best = Some((sc, i));
+            best = Some((sc, id));
         }
     }
 
-    if let Some((_, i)) = best {
-        let id = running[i];
+    if let Some((_, id)) = best {
         let node = ctx.jobs[id].node.unwrap();
         return Some(PreemptionPlan { node, victims: vec![id], fallback: false });
     }
@@ -125,7 +120,7 @@ pub fn plan(
     // FitGpp preempts a random BE job." Multi-victim random continuation so
     // the plan still frees enough room; the P cap is still honoured so the
     // no-starvation guarantee (strategy 4) holds unconditionally.
-    rand_policy::plan(te, ctx, rng, p_max).map(|mut p| {
+    rand_policy::plan(te, ctx, scratch, rng, p_max).map(|mut p| {
         p.fallback = true;
         p
     })
@@ -163,6 +158,7 @@ mod tests {
         jobs: &'a JobTable,
         free: &'a [ResourceVec],
         oracle: &'a dyn Fn(JobId) -> u64,
+        vidx: &'a crate::sched::victim_index::VictimIndex,
     ) -> PolicyCtx<'a> {
         PolicyCtx {
             cluster,
@@ -170,6 +166,7 @@ mod tests {
             effective_free: free,
             oracle_remaining: oracle,
             predicted_remaining: &PRED,
+            victims: vidx,
         }
     }
 
@@ -198,8 +195,9 @@ mod tests {
             ],
         );
         let free = frees(&cluster);
-        let c = ctx(&cluster, &jobs, &free, &ORACLE);
-        let plan = plan(&te(ResourceVec::new(2.0, 16.0, 1.0)), &c, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE, &vidx);
+        let plan = plan(&te(ResourceVec::new(2.0, 16.0, 1.0)), &c, &mut PlanScratch::default(), 4.0, Some(1),&mut Pcg64::new(1)).unwrap();
         assert_eq!(plan.victims, vec![JobId(1)]);
         assert_eq!(plan.node, NodeId(1));
     }
@@ -211,8 +209,9 @@ mod tests {
         let d = ResourceVec::new(8.0, 64.0, 2.0);
         let (cluster, jobs) = setup(2, &[(0, d, 20), (1, d, 0)]);
         let free = frees(&cluster);
-        let c = ctx(&cluster, &jobs, &free, &ORACLE);
-        let plan = plan(&te(d), &c, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE, &vidx);
+        let plan = plan(&te(d), &c, &mut PlanScratch::default(), 4.0, Some(1),&mut Pcg64::new(1)).unwrap();
         assert_eq!(plan.victims, vec![JobId(1)]);
     }
 
@@ -228,8 +227,9 @@ mod tests {
             ],
         );
         let free = frees(&cluster);
-        let c = ctx(&cluster, &jobs, &free, &ORACLE);
-        let plan = plan(&te(ResourceVec::new(2.0, 16.0, 1.0)), &c, 0.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE, &vidx);
+        let plan = plan(&te(ResourceVec::new(2.0, 16.0, 1.0)), &c, &mut PlanScratch::default(), 0.0, Some(1),&mut Pcg64::new(1)).unwrap();
         assert_eq!(plan.victims, vec![JobId(1)]);
     }
 
@@ -241,8 +241,9 @@ mod tests {
         let d = ResourceVec::new(14.0, 120.0, 4.0);
         let (cluster, jobs) = setup(1, &[(0, d, 0), (0, d, 0)]);
         let free = frees(&cluster); // free = [4, 16, 0]
-        let c = ctx(&cluster, &jobs, &free, &ORACLE);
-        let plan = plan(&te(ResourceVec::new(20.0, 128.0, 6.0)), &c, 4.0, Some(1), &mut Pcg64::new(7)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE, &vidx);
+        let plan = plan(&te(ResourceVec::new(20.0, 128.0, 6.0)), &c, &mut PlanScratch::default(), 4.0, Some(1),&mut Pcg64::new(7)).unwrap();
         assert_eq!(plan.victims.len(), 2, "fallback must evict both");
     }
 
@@ -252,12 +253,13 @@ mod tests {
         let (cluster, mut jobs) = setup(2, &[(0, d, 0), (1, d, 5)]);
         jobs[JobId(0)].preemptions = 1; // job 0 already preempted once
         let free = frees(&cluster);
-        let c = ctx(&cluster, &jobs, &free, &ORACLE);
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE, &vidx);
         // P = 1: job 0 is off-limits despite its better (lower-GP) score.
-        let capped = plan(&te(d), &c, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        let capped = plan(&te(d), &c, &mut PlanScratch::default(), 4.0, Some(1),&mut Pcg64::new(1)).unwrap();
         assert_eq!(capped.victims, vec![JobId(1)]);
         // P = ∞ re-admits job 0.
-        let uncapped = plan(&te(d), &c, 4.0, None, &mut Pcg64::new(1)).unwrap();
+        let uncapped = plan(&te(d), &c, &mut PlanScratch::default(), 4.0, None,&mut Pcg64::new(1)).unwrap();
         assert_eq!(uncapped.victims, vec![JobId(0)]);
     }
 
@@ -265,8 +267,9 @@ mod tests {
     fn no_running_be_jobs_yields_none() {
         let (cluster, jobs) = setup(1, &[]);
         let free = frees(&cluster);
-        let c = ctx(&cluster, &jobs, &free, &ORACLE);
-        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 0.0)), &c, 4.0, Some(1), &mut Pcg64::new(1)).is_none());
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE, &vidx);
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 0.0)), &c, &mut PlanScratch::default(), 4.0, Some(1),&mut Pcg64::new(1)).is_none());
     }
 
     #[test]
@@ -283,8 +286,9 @@ mod tests {
         // Eq. 2 — it must qualify (single victim, no fallback).
         let (cluster, jobs) = setup(1, &[(0, ResourceVec::new(4.0, 32.0, 1.0), 0)]);
         let free = frees(&cluster); // 28 CPUs etc. free
-        let c = ctx(&cluster, &jobs, &free, &ORACLE);
-        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &c, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let c = ctx(&cluster, &jobs, &free, &ORACLE, &vidx);
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &c, &mut PlanScratch::default(), 4.0, Some(1),&mut Pcg64::new(1)).unwrap();
         assert_eq!(plan.victims, vec![JobId(0)]);
     }
 }

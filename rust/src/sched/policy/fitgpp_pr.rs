@@ -26,8 +26,8 @@
 //! remaining-time knowledge — the upper bound the error-sensitivity sweep
 //! erodes by cranking the `Noisy` estimator's sigma.
 
-use super::{fitgpp, rand_policy, PolicyCtx, PreemptionPlan, PreemptionPolicy};
-use crate::job::JobSpec;
+use super::{fitgpp, rand_policy, PlanScratch, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use crate::job::{JobId, JobSpec};
 use crate::stats::rng::Pcg64;
 
 /// Trait wrapper for [`plan`]: FitGpp-PR with its two knobs.
@@ -43,9 +43,10 @@ impl PreemptionPolicy for FitGppPr {
         &self,
         te: &JobSpec,
         ctx: &PolicyCtx<'_>,
+        scratch: &mut PlanScratch,
         rng: &mut Pcg64,
     ) -> Option<PreemptionPlan> {
-        plan(te, ctx, self.s, self.p_max, rng)
+        plan(te, ctx, scratch, self.s, self.p_max, rng)
     }
 }
 
@@ -60,36 +61,37 @@ pub fn resume_cost(gp: f64, pred_remaining: f64) -> f64 {
 pub fn plan(
     te: &JobSpec,
     ctx: &PolicyCtx<'_>,
+    scratch: &mut PlanScratch,
     s: f64,
     p_max: Option<u32>,
     rng: &mut Pcg64,
 ) -> Option<PreemptionPlan> {
-    let running = ctx.running_be();
-    if running.is_empty() {
+    if ctx.victims.is_empty() {
         return None;
     }
 
     // Normalizers over 𝒥 (all running BE jobs), exactly as FitGpp measures
-    // them — Size against the hosting node's capacity, R over the pool.
-    // R is strictly positive, so max_r never degenerates.
-    let mut max_size = 0.0f64;
+    // them — Size against the hosting node's capacity (read off the victim
+    // index's ordered-set tail, bit-identical to the old fold), R over the
+    // pool. R depends on live estimator output, so it is computed per plan
+    // into scratch — in pool order, one estimator call per job, the same
+    // call sequence the pre-index pass made. R is strictly positive, so
+    // max_r never degenerates.
+    let max_size = ctx.victims.max_size();
     let mut max_r = 0.0f64;
-    let terms: Vec<(f64, f64)> = running
-        .iter()
-        .map(|id| {
-            let j = &ctx.jobs[*id];
-            let node = ctx.cluster.node(j.node.expect("running job has a node"));
-            let sz = j.spec.demand.size(&node.capacity);
-            let r = resume_cost(j.spec.grace_period as f64, (ctx.predicted_remaining)(*id));
-            max_size = max_size.max(sz);
-            max_r = max_r.max(r);
-            (sz, r)
-        })
-        .collect();
+    scratch.terms.clear();
+    scratch.terms.extend(ctx.victims.pool().map(|id| {
+        let j = &ctx.jobs[id];
+        let node = ctx.cluster.node(j.node.expect("running job has a node"));
+        let sz = j.spec.demand.size(&node.capacity);
+        let r = resume_cost(j.spec.grace_period as f64, (ctx.predicted_remaining)(id));
+        max_r = max_r.max(r);
+        (sz, r)
+    }));
 
-    let mut best: Option<(f64, usize)> = None; // (score, index into `running`)
-    for (i, id) in running.iter().enumerate() {
-        let j = &ctx.jobs[*id];
+    let mut best: Option<(f64, JobId)> = None;
+    for (i, id) in ctx.victims.pool().enumerate() {
+        let j = &ctx.jobs[id];
         if let Some(p) = p_max {
             if j.preemptions >= p {
                 continue; // FitGpp's starvation guard, unchanged
@@ -102,28 +104,27 @@ pub fn plan(
         if !te.demand.fits_in(&avail) {
             continue;
         }
-        let (sz, r) = terms[i];
+        let (sz, r) = scratch.terms[i];
         let size_term = if max_size > 0.0 { sz / max_size } else { 0.0 };
         let sc = size_term + s * r / max_r;
         // Deterministic tie-break on job id, as in FitGpp.
         let better = match best {
             None => true,
-            Some((b, bi)) => sc < b || (sc == b && id < &running[bi]),
+            Some((b, bid)) => sc < b || (sc == b && id < bid),
         };
         if better {
-            best = Some((sc, i));
+            best = Some((sc, id));
         }
     }
 
-    if let Some((_, i)) = best {
-        let id = running[i];
+    if let Some((_, id)) = best {
         let node = ctx.jobs[id].node.unwrap();
         return Some(PreemptionPlan { node, victims: vec![id], fallback: false });
     }
 
     // Same escape hatch as FitGpp: no qualifying candidate ⇒ random plan,
     // flagged, cap still honoured.
-    rand_policy::plan(te, ctx, rng, p_max).map(|mut p| {
+    rand_policy::plan(te, ctx, scratch, rng, p_max).map(|mut p| {
         p.fallback = true;
         p
     })
@@ -135,11 +136,12 @@ pub fn plan(
 pub fn agrees_with_fitgpp_at_s_zero(
     te: &JobSpec,
     ctx: &PolicyCtx<'_>,
+    scratch: &mut PlanScratch,
     p_max: Option<u32>,
     seed: u64,
 ) -> bool {
-    let a = plan(te, ctx, 0.0, p_max, &mut Pcg64::new(seed));
-    let b = fitgpp::plan(te, ctx, 0.0, p_max, &mut Pcg64::new(seed));
+    let a = plan(te, ctx, scratch, 0.0, p_max, &mut Pcg64::new(seed));
+    let b = fitgpp::plan(te, ctx, scratch, 0.0, p_max, &mut Pcg64::new(seed));
     a == b
 }
 
@@ -191,8 +193,9 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 5, 2), (1, d, 5, 200)]);
         let free = frees(&cluster);
         let pred = move |id: JobId| rem[id.0 as usize] as f64;
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred };
-        let p = plan(&te(d), &ctx, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred, victims: &vidx };
+        let p = plan(&te(d), &ctx, &mut PlanScratch::default(), 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
         assert_eq!(p.victims, vec![JobId(1)], "long-remaining job is the cheap resume");
         assert_eq!(p.node, NodeId(1));
     }
@@ -205,8 +208,9 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 20, 50), (1, d, 0, 50)]);
         let free = frees(&cluster);
         let pred = move |id: JobId| rem[id.0 as usize] as f64;
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred };
-        let p = plan(&te(d), &ctx, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred, victims: &vidx };
+        let p = plan(&te(d), &ctx, &mut PlanScratch::default(), 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
         assert_eq!(p.victims, vec![JobId(1)]);
     }
 
@@ -222,10 +226,12 @@ mod tests {
         );
         let free = frees(&cluster);
         let pred = move |id: JobId| rem[id.0 as usize] as f64;
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred, victims: &vidx };
         assert!(agrees_with_fitgpp_at_s_zero(
             &te(ResourceVec::new(2.0, 16.0, 1.0)),
             &ctx,
+            &mut PlanScratch::default(),
             Some(1),
             7
         ));
@@ -240,11 +246,12 @@ mod tests {
         jobs[JobId(0)].preemptions = 1;
         let free = frees(&cluster);
         let pred = move |id: JobId| rem[id.0 as usize] as f64;
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred };
-        let capped = plan(&te(d), &ctx, 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &pred, victims: &vidx };
+        let capped = plan(&te(d), &ctx, &mut PlanScratch::default(), 4.0, Some(1), &mut Pcg64::new(1)).unwrap();
         assert_eq!(capped.victims, vec![JobId(1)]);
         // P = ∞ re-admits job 0, whose resume cost is far lower.
-        let uncapped = plan(&te(d), &ctx, 4.0, None, &mut Pcg64::new(1)).unwrap();
+        let uncapped = plan(&te(d), &ctx, &mut PlanScratch::default(), 4.0, None, &mut Pcg64::new(1)).unwrap();
         assert_eq!(uncapped.victims, vec![JobId(0)]);
     }
 
@@ -253,8 +260,9 @@ mod tests {
         let d = ResourceVec::new(14.0, 120.0, 4.0);
         let (cluster, jobs, _) = setup(1, &[(0, d, 0, 10), (0, d, 0, 10)]);
         let free = frees(&cluster);
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 10.0 };
-        let p = plan(&te(ResourceVec::new(20.0, 128.0, 6.0)), &ctx, 4.0, Some(1), &mut Pcg64::new(7)).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 10.0, victims: &vidx };
+        let p = plan(&te(ResourceVec::new(20.0, 128.0, 6.0)), &ctx, &mut PlanScratch::default(), 4.0, Some(1), &mut Pcg64::new(7)).unwrap();
         assert!(p.fallback);
         assert_eq!(p.victims.len(), 2);
     }
@@ -263,8 +271,9 @@ mod tests {
     fn no_running_be_jobs_yields_none() {
         let (cluster, jobs, _) = setup(1, &[]);
         let free = frees(&cluster);
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
-        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 0.0)), &ctx, 4.0, Some(1), &mut Pcg64::new(1)).is_none());
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 0.0)), &ctx, &mut PlanScratch::default(), 4.0, Some(1), &mut Pcg64::new(1)).is_none());
     }
 
     #[test]

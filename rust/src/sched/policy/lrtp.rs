@@ -17,7 +17,7 @@
 //! shared eviction loop lives in
 //! [`greedy_global_plan`](super::greedy_global_plan).
 
-use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use super::{greedy_global_plan, PlanScratch, PolicyCtx, PreemptionPlan, PreemptionPolicy};
 use crate::job::JobSpec;
 use crate::stats::rng::Pcg64;
 
@@ -29,19 +29,25 @@ impl PreemptionPolicy for Lrtp {
         &self,
         te: &JobSpec,
         ctx: &PolicyCtx<'_>,
+        scratch: &mut PlanScratch,
         _rng: &mut Pcg64,
     ) -> Option<PreemptionPlan> {
-        plan(te, ctx)
+        plan(te, ctx, scratch)
     }
 }
 
-/// Plan LRTP eviction: all running BE jobs sorted by remaining time
-/// descending (perfect oracle), fed to the greedy global loop.
-pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
-    let mut pool = ctx.running_be();
-    pool.sort_by_key(|id| (std::cmp::Reverse((ctx.oracle_remaining)(*id)), id.0));
-    let mut it = pool.into_iter();
-    greedy_global_plan(te, ctx, || it.next())
+/// Plan LRTP eviction: the victim index's remaining-time-descending walk
+/// (equal to sorting the pool by the perfect oracle — the index's integer
+/// completion keys order identically to live remaining times, ties
+/// included), fed to the greedy global loop. No scan, no sort, no
+/// allocation: O(victims examined).
+pub fn plan(
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    scratch: &mut PlanScratch,
+) -> Option<PreemptionPlan> {
+    let mut it = ctx.victims.by_remaining_desc();
+    greedy_global_plan(te, ctx, &mut scratch.greedy, true, || it.next())
 }
 
 #[cfg(test)]
@@ -81,10 +87,11 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 100), (1, d, 500)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         // Demand exceeds the free space on either node: one victim needed,
         // and it must be the remaining-500 job on node 1.
-        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(plan.victims, vec![JobId(1)]);
         assert_eq!(plan.node, NodeId(1));
     }
@@ -100,14 +107,15 @@ mod tests {
         );
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         // TE needs a whole node: evict rem-400 (node 0) — no node fits and
         // aggregate (half a node) is short; evict rem-300 (node 1) — still
         // no single-node fit, but the *aggregate* freed space now covers
         // the demand, so the node-blind baseline stops here (the scheduler
         // will re-plan if the drains under-deliver). Job 0's eviction is
         // collateral damage — the cascade FitGpp's Eq. 2 avoids.
-        let p = plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx).unwrap();
+        let p = plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(p.victims, vec![JobId(0), JobId(2)]);
     }
 
@@ -118,8 +126,9 @@ mod tests {
             setup(1, &[(0, d, 10), (0, d, 40), (0, d, 30), (0, d, 20)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
-        let p = plan(&te(ResourceVec::new(2.0, 16.0, 6.0)), &ctx).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        let p = plan(&te(ResourceVec::new(2.0, 16.0, 6.0)), &ctx, &mut PlanScratch::default()).unwrap();
         // free GPUs = 0; need 6 ⇒ evict longest three: rem 40, 30, 20.
         assert_eq!(p.victims, vec![JobId(1), JobId(2), JobId(3)]);
     }
@@ -130,8 +139,9 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 10), (1, d, 20)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
-        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx, &mut PlanScratch::default()).is_none());
     }
 
     #[test]
@@ -140,8 +150,9 @@ mod tests {
         let (cluster, jobs, rem) = setup(1, &[(0, d, 10)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
-        let p = plan(&te(ResourceVec::new(1.0, 1.0, 1.0)), &ctx).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        let p = plan(&te(ResourceVec::new(1.0, 1.0, 1.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert!(p.victims.is_empty());
     }
 }

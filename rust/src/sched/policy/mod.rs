@@ -43,6 +43,7 @@ use crate::cluster::{Cluster, NodeId};
 use crate::job::{JobId, JobSpec, JobState};
 use crate::job_table::JobTable;
 use crate::resources::ResourceVec;
+use crate::sched::victim_index::VictimIndex;
 use crate::stats::rng::Pcg64;
 
 /// Which scheduling strategy to run. `PolicyKind` is plain data (configs,
@@ -201,6 +202,13 @@ pub struct PolicyCtx<'a> {
     /// victims on. Under the oracle estimator this equals
     /// `oracle_remaining` exactly.
     pub predicted_remaining: &'a dyn Fn(JobId) -> f64,
+    /// The scheduler's incrementally-maintained [`VictimIndex`]: the
+    /// preemptible pool (running BE jobs on `Up` nodes) pre-sorted by every
+    /// key the policies rank on, plus the demand aggregates behind the
+    /// O(1) pre-plan reject. Policies pull victims from here instead of
+    /// rescanning the cluster; [`PolicyCtx::running_be`] remains as the
+    /// from-scratch oracle the index is checked against.
+    pub victims: &'a VictimIndex,
 }
 
 impl<'a> PolicyCtx<'a> {
@@ -232,21 +240,52 @@ impl<'a> PolicyCtx<'a> {
     }
 
     /// Nodes on which evicting *every* running BE job would fit `demand` —
-    /// the feasible set for multi-victim policies.
-    pub fn feasible_nodes(&self, demand: &ResourceVec) -> Vec<NodeId> {
-        self.cluster
-            .nodes
-            .iter()
-            .filter(|n| {
-                let mut avail = self.effective_free[n.id.0 as usize];
-                for id in self.running_be_on(n.id) {
-                    avail += self.jobs[id].spec.demand;
-                }
-                demand.fits_in(&avail)
-            })
-            .map(|n| n.id)
-            .collect()
+    /// the feasible set for multi-victim policies. Writes into
+    /// caller-owned scratch ([`PlanScratch::nodes`]) and reads the
+    /// index's per-node demand aggregate instead of rescanning
+    /// allocations: O(nodes), allocation-free once the buffer is warm.
+    pub fn feasible_nodes_into(&self, demand: &ResourceVec, out: &mut Vec<NodeId>) {
+        out.clear();
+        for n in &self.cluster.nodes {
+            let avail =
+                self.effective_free[n.id.0 as usize] + *self.victims.node_demand(n.id);
+            if demand.fits_in(&avail) {
+                out.push(n.id);
+            }
+        }
     }
+}
+
+/// Scheduler-owned reusable buffers for the plan path. Passed *explicitly*
+/// to [`PreemptionPolicy::plan`] so the trait's no-hidden-state contract
+/// survives: a policy still cannot carry decision state across calls —
+/// scratch contents are cleared before use and carry capacity, never data.
+/// One instance lives on the scheduler; after warmup every plan runs
+/// allocation-free (the perf gate pins this).
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    /// The greedy eviction loop's projected-free and victim buffers.
+    pub greedy: GreedyScratch,
+    /// Victim-id pool for policies that materialize a filtered list
+    /// (RAND's p-cap filter, FitGpp's candidate recheck).
+    pub pool: Vec<JobId>,
+    /// `(float key, id)` buffer for per-plan computed orderings (P-SRTF's
+    /// predicted remaining times — predictions are floats from the live
+    /// estimator, so they are computed per plan, never index-maintained).
+    pub keyed: Vec<(f64, u32)>,
+    /// `(size, score-term)` per-pool-job buffer (FitGpp-PR's pass 1).
+    pub terms: Vec<(f64, f64)>,
+    /// Feasible-node buffer for [`PolicyCtx::feasible_nodes_into`].
+    pub nodes: Vec<NodeId>,
+}
+
+/// The buffers behind [`greedy_global_plan`], split out so a policy can
+/// mutably borrow them alongside [`PlanScratch::pool`] (the victim-source
+/// closure and the greedy loop are live at once).
+#[derive(Debug, Default)]
+pub struct GreedyScratch {
+    projected: Vec<ResourceVec>,
+    victims: Vec<JobId>,
 }
 
 /// A pluggable preemption strategy. Object-safe: the scheduler holds one
@@ -262,7 +301,9 @@ impl<'a> PolicyCtx<'a> {
 /// * **No hidden state.** Implementations must not carry mutable state
 ///   across calls or across runs: a policy value constructed from the same
 ///   [`PolicyKind`] must behave identically whether it plans once or a
-///   million times. Anything the decision needs must come from `ctx`.
+///   million times. Anything the decision needs must come from `ctx`; the
+///   `scratch` buffers are capacity-only reuse (cleared before every use)
+///   and must never smuggle data between calls.
 /// * **Victim validity.** Every returned victim must be a *running BE* job
 ///   (TE jobs are never preempted; draining jobs are already signalled),
 ///   and victims must be distinct.
@@ -275,6 +316,7 @@ pub trait PreemptionPolicy: Send {
         &self,
         te: &JobSpec,
         ctx: &PolicyCtx<'_>,
+        scratch: &mut PlanScratch,
         rng: &mut Pcg64,
     ) -> Option<PreemptionPlan>;
 }
@@ -283,7 +325,13 @@ pub trait PreemptionPolicy: Send {
 struct NoPreemption;
 
 impl PreemptionPolicy for NoPreemption {
-    fn plan(&self, _: &JobSpec, _: &PolicyCtx<'_>, _: &mut Pcg64) -> Option<PreemptionPlan> {
+    fn plan(
+        &self,
+        _: &JobSpec,
+        _: &PolicyCtx<'_>,
+        _: &mut PlanScratch,
+        _: &mut Pcg64,
+    ) -> Option<PreemptionPlan> {
         None
     }
 }
@@ -318,9 +366,37 @@ pub fn build_policy(kind: &PolicyKind) -> Box<dyn PreemptionPolicy> {
 /// re-planning always makes progress (the Draining victims leave the
 /// candidate pool). Reservations land on the node with the most projected
 /// headroom.
+///
+/// Allocation discipline: the steady-state (no-plan-found) path is
+/// allocation-free — projected frees and accumulated victims live in the
+/// caller's [`GreedyScratch`]. A *successful* plan clones the victim list
+/// out of scratch, but a success is a transition (victims get signalled),
+/// not steady state, so the perf gate's blocked-TE cycles never see it.
+/// Slack added per axis to the pre-plan reject bound so f64 drift in the
+/// maintained aggregates (and summation-order differences vs the greedy
+/// loop's own arithmetic) can never reject a demand the loop would have
+/// planned.
+const PLAN_BOUND_SLACK: f64 = 1e-6;
+
+/// O(1) pre-plan reject: true when `te` cannot be placed even after
+/// evicting *every* preemptible job — its demand exceeds the cluster-wide
+/// effective free plus the index's preemptible-demand aggregate (both
+/// incrementally maintained). When this returns true the greedy loop below
+/// is guaranteed to exhaust its pool and return `None`, so RNG-free
+/// callers skip it entirely. Callers whose victim source draws from the
+/// run's RNG (RAND, FitGpp's fallback) must **not** use it: skipping the
+/// loop would skip draws and fork the deterministic RNG stream.
+pub(crate) fn plan_bound_rejects(te: &JobSpec, ctx: &PolicyCtx<'_>) -> bool {
+    let slack = ResourceVec::new(PLAN_BOUND_SLACK, PLAN_BOUND_SLACK, PLAN_BOUND_SLACK);
+    let bound = ctx.cluster.total_effective_free() + *ctx.victims.pool_demand() + slack;
+    !te.demand.fits_in(&bound)
+}
+
 pub(crate) fn greedy_global_plan(
     te: &JobSpec,
     ctx: &PolicyCtx<'_>,
+    greedy: &mut GreedyScratch,
+    use_bound: bool,
     mut next_victim: impl FnMut() -> Option<JobId>,
 ) -> Option<PreemptionPlan> {
     // A demand no node could ever satisfy is not plannable (the paper's
@@ -328,9 +404,15 @@ pub(crate) fn greedy_global_plan(
     if !te.demand.fits_in(&ctx.cluster.max_capacity()) {
         return None;
     }
+    if use_bound && plan_bound_rejects(te, ctx) {
+        return None;
+    }
 
-    // Projected free per node as victims accumulate.
-    let mut projected: Vec<ResourceVec> = ctx.effective_free.to_vec();
+    // Projected free per node as victims accumulate, in caller-owned
+    // scratch (capacity reused across plans — no steady-state allocation).
+    greedy.projected.clear();
+    greedy.projected.extend_from_slice(ctx.effective_free);
+    greedy.victims.clear();
     let fit_node = |proj: &[ResourceVec]| {
         proj.iter()
             .enumerate()
@@ -339,34 +421,45 @@ pub(crate) fn greedy_global_plan(
     };
 
     let total_cap = ctx.cluster.total_capacity();
-    let mut victims = Vec::new();
+    // The projected cluster-wide aggregate, maintained incrementally: one
+    // O(nodes) fold up front, then O(1) per victim (was an O(nodes)
+    // re-fold per victim).
+    let mut aggregate = ctx
+        .effective_free
+        .iter()
+        .fold(ResourceVec::ZERO, |acc, f| acc + *f);
     loop {
-        if let Some(node) = fit_node(&projected) {
-            return Some(PreemptionPlan { node, victims, fallback: false });
+        if let Some(node) = fit_node(&greedy.projected) {
+            return Some(PreemptionPlan {
+                node,
+                victims: greedy.victims.clone(),
+                fallback: false,
+            });
         }
-        if !victims.is_empty() {
-            let aggregate = projected
+        if !greedy.victims.is_empty() && te.demand.fits_in(&aggregate) {
+            let node = greedy
+                .projected
                 .iter()
-                .fold(ResourceVec::ZERO, |acc, f| acc + *f);
-            if te.demand.fits_in(&aggregate) {
-                let node = projected
-                    .iter()
-                    .enumerate()
-                    .max_by(|(_, a), (_, b)| {
-                        a.size(&total_cap).partial_cmp(&b.size(&total_cap)).unwrap()
-                    })
-                    .map(|(i, _)| NodeId(i as u32))
-                    .unwrap();
-                return Some(PreemptionPlan { node, victims, fallback: false });
-            }
+                .enumerate()
+                .max_by(|(_, a), (_, b)| {
+                    a.size(&total_cap).partial_cmp(&b.size(&total_cap)).unwrap()
+                })
+                .map(|(i, _)| NodeId(i as u32))
+                .unwrap();
+            return Some(PreemptionPlan {
+                node,
+                victims: greedy.victims.clone(),
+                fallback: false,
+            });
         }
         let Some(id) = next_victim() else {
             return None; // pool exhausted — no fit possible
         };
         let j = &ctx.jobs[id];
         let node = j.node.expect("running");
-        projected[node.0 as usize] += j.spec.demand;
-        victims.push(id);
+        greedy.projected[node.0 as usize] += j.spec.demand;
+        aggregate += j.spec.demand;
+        greedy.victims.push(id);
     }
 }
 
@@ -453,15 +546,18 @@ mod tests {
         let jobs = JobTable::new();
         let free = vec![ResourceVec::pfn_node()];
         let oracle = |_: JobId| 0u64;
+        let vidx = VictimIndex::build(&cluster, &jobs);
         let ctx = PolicyCtx {
             cluster: &cluster,
             jobs: &jobs,
             effective_free: &free,
             oracle_remaining: &oracle,
             predicted_remaining: &|_: JobId| 0.0,
+            victims: &vidx,
         };
         let te = JobSpec::new(0, crate::job::JobClass::Te, ResourceVec::new(1.0, 1.0, 0.0), 0, 5, 0);
         let mut rng = Pcg64::new(1);
+        let mut scratch = PlanScratch::default();
         for kind in [
             PolicyKind::Fifo,
             PolicyKind::FastLane,
@@ -475,7 +571,7 @@ mod tests {
         ] {
             let p = build_policy(&kind);
             // An empty cluster view must never yield victims.
-            let plan = p.plan(&te, &ctx, &mut rng);
+            let plan = p.plan(&te, &ctx, &mut scratch, &mut rng);
             let victims_empty = match &plan {
                 None => true,
                 Some(pl) => pl.victims.is_empty(),

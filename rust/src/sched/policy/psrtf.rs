@@ -18,8 +18,11 @@
 //! so determinism is preserved even when an estimator collapses many jobs
 //! onto one predicted value (e.g. a per-class EWMA).
 
-use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
-use crate::job::JobSpec;
+use super::{
+    greedy_global_plan, plan_bound_rejects, PlanScratch, PolicyCtx, PreemptionPlan,
+    PreemptionPolicy,
+};
+use crate::job::{JobId, JobSpec};
 use crate::stats::rng::Pcg64;
 
 /// Trait wrapper for [`plan`].
@@ -30,24 +33,42 @@ impl PreemptionPolicy for PSrtf {
         &self,
         te: &JobSpec,
         ctx: &PolicyCtx<'_>,
+        scratch: &mut PlanScratch,
         _rng: &mut Pcg64,
     ) -> Option<PreemptionPlan> {
-        plan(te, ctx)
+        plan(te, ctx, scratch)
     }
 }
 
-/// Plan P-SRTF eviction: all running BE jobs sorted by predicted remaining
-/// time ascending (ties toward the lower id), fed to the greedy global
-/// loop.
-pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
-    let mut pool = ctx.running_be();
-    pool.sort_by(|a, b| {
-        (ctx.predicted_remaining)(*a)
-            .total_cmp(&(ctx.predicted_remaining)(*b))
-            .then(a.0.cmp(&b.0))
-    });
-    let mut it = pool.into_iter();
-    greedy_global_plan(te, ctx, || it.next())
+/// Plan P-SRTF eviction: the victim index's pool with predicted remaining
+/// times computed *per plan* into scratch (predictions are live estimator
+/// floats, so unlike the integer completion keys they are not
+/// index-maintained), sorted ascending (ties toward the lower id) and fed
+/// to the greedy global loop. The O(1) pre-plan reject runs before the
+/// prediction pass — a hopeless demand skips the estimator entirely
+/// (estimators are pure per call, so the changed call count is
+/// byte-invisible).
+pub fn plan(
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    scratch: &mut PlanScratch,
+) -> Option<PreemptionPlan> {
+    if plan_bound_rejects(te, ctx) {
+        return None;
+    }
+    let PlanScratch { greedy, keyed, .. } = scratch;
+    keyed.clear();
+    keyed.extend(
+        ctx.victims
+            .pool()
+            .map(|id| ((ctx.predicted_remaining)(id), id.0)),
+    );
+    // Unstable sort is safe: the id tiebreak makes the comparator a total
+    // order, so the result is the same permutation the old stable
+    // sort-by-prediction produced.
+    keyed.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut it = keyed.iter().map(|&(_, id)| JobId(id));
+    greedy_global_plan(te, ctx, greedy, false, || it.next())
 }
 
 #[cfg(test)]
@@ -87,8 +108,9 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 100), (1, d, 5)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let pred = move |id: JobId| rem[id.0 as usize] as f64;
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &pred };
-        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &pred, victims: &vidx };
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(plan.victims, vec![JobId(1)], "predicted-5 job is evicted first");
         assert_eq!(plan.node, NodeId(1));
     }
@@ -103,8 +125,9 @@ mod tests {
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
         let pred = |id: JobId| if id.0 == 0 { 1.0 } else { 1000.0 };
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &pred };
-        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &pred, victims: &vidx };
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(plan.victims, vec![JobId(0)]);
         assert_eq!(plan.node, NodeId(0));
     }
@@ -115,8 +138,9 @@ mod tests {
         let (cluster, jobs, _) = setup(1, &[(0, d, 10), (0, d, 10)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         // A class-level estimator collapsing both jobs onto one prediction.
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &|_: JobId| 10.0 };
-        let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &|_: JobId| 10.0, victims: &vidx };
+        let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(p.victims, vec![JobId(0), JobId(1)]);
     }
 
@@ -125,7 +149,8 @@ mod tests {
         let d = ResourceVec::new(4.0, 32.0, 2.0);
         let (cluster, jobs, _) = setup(1, &[(0, d, 10)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &|_: JobId| 10.0 };
-        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &|_: JobId| 0, predicted_remaining: &|_: JobId| 10.0, victims: &vidx };
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx, &mut PlanScratch::default()).is_none());
     }
 }

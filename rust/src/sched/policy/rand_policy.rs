@@ -18,7 +18,7 @@
 //! the paper's no-starvation guarantee (§3.2, strategy 4) would be void.
 //! Stand-alone RAND passes `None` (the paper's RAND has no cap).
 
-use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use super::{greedy_global_plan, PlanScratch, PolicyCtx, PreemptionPlan, PreemptionPolicy};
 use crate::job::JobSpec;
 use crate::stats::rng::Pcg64;
 
@@ -30,25 +30,39 @@ impl PreemptionPolicy for Rand {
         &self,
         te: &JobSpec,
         ctx: &PolicyCtx<'_>,
+        scratch: &mut PlanScratch,
         rng: &mut Pcg64,
     ) -> Option<PreemptionPlan> {
-        plan(te, ctx, rng, None)
+        plan(te, ctx, scratch, rng, None)
     }
 }
 
 /// Plan random eviction: uniformly random running BE victims (optionally
 /// filtered by the `p_max` cap), fed to the greedy global loop.
+///
+/// The pool is built into scratch straight from the victim index,
+/// filtering p-capped jobs *while* building instead of build-then-retain —
+/// one pass, no allocation. Note: no O(1) pre-plan reject here — the pool
+/// draw consumes RNG state per victim, and an early `None` that skips
+/// those draws would fork the run's deterministic RNG stream.
 pub fn plan(
     te: &JobSpec,
     ctx: &PolicyCtx<'_>,
+    scratch: &mut PlanScratch,
     rng: &mut Pcg64,
     p_max: Option<u32>,
 ) -> Option<PreemptionPlan> {
-    let mut pool = ctx.running_be();
-    if let Some(p) = p_max {
-        pool.retain(|id| ctx.jobs[*id].preemptions < p);
+    let PlanScratch { greedy, pool, .. } = scratch;
+    pool.clear();
+    match p_max {
+        Some(p) => pool.extend(
+            ctx.victims
+                .pool()
+                .filter(|id| ctx.jobs[*id].preemptions < p),
+        ),
+        None => pool.extend(ctx.victims.pool()),
     }
-    greedy_global_plan(te, ctx, || {
+    greedy_global_plan(te, ctx, greedy, false, || {
         let i = rng.pick_index(pool.len())?;
         Some(pool.swap_remove(i))
     })
@@ -87,11 +101,12 @@ mod tests {
         let d = ResourceVec::new(8.0, 64.0, 2.0);
         let (cluster, jobs) = setup(2, &[(0, d), (0, d), (1, d)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         for seed in 0..32 {
             let mut rng = Pcg64::new(seed);
             let want = ResourceVec::new(4.0, 32.0, 8.0);
-            let p = plan(&te(want), &ctx, &mut rng, None).unwrap();
+            let p = plan(&te(want), &ctx, &mut PlanScratch::default(), &mut rng,None).unwrap();
             // Either the plan's node fits after its victims drain, or the
             // plan stopped at aggregate fit (node-blind baseline).
             let mut node_proj = free[p.node.0 as usize];
@@ -115,10 +130,11 @@ mod tests {
         let d = ResourceVec::new(4.0, 32.0, 1.0);
         let (cluster, jobs) = setup(1, &[(0, d), (0, d), (0, d), (0, d)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         for seed in 0..16 {
             let mut rng = Pcg64::new(seed);
-            let p = plan(&te(ResourceVec::new(24.0, 200.0, 4.0)), &ctx, &mut rng, None).unwrap();
+            let p = plan(&te(ResourceVec::new(24.0, 200.0, 4.0)), &ctx, &mut PlanScratch::default(), &mut rng,None).unwrap();
             let mut ids: Vec<u32> = p.victims.iter().map(|v| v.0).collect();
             let before = ids.len();
             ids.sort();
@@ -132,12 +148,13 @@ mod tests {
         let d = ResourceVec::new(4.0, 32.0, 1.0);
         let (cluster, jobs) = setup(4, &[(0, d), (1, d), (2, d), (3, d)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         let want = ResourceVec::new(30.0, 230.0, 8.0);
         let mut seen = std::collections::HashSet::new();
         for seed in 0..64 {
             let mut rng = Pcg64::new(seed);
-            if let Some(p) = plan(&te(want), &ctx, &mut rng, None) {
+            if let Some(p) = plan(&te(want), &ctx, &mut PlanScratch::default(), &mut rng,None) {
                 if let Some(v) = p.victims.first() {
                     seen.insert(v.0);
                 }
@@ -154,19 +171,21 @@ mod tests {
         jobs[JobId(0)].preemptions = 1;
         jobs[JobId(1)].preemptions = 1;
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         let mut rng = Pcg64::new(1);
-        assert!(plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut rng, Some(1)).is_none());
+        assert!(plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut PlanScratch::default(), &mut rng,Some(1)).is_none());
         // Without the cap a plan exists.
-        assert!(plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut rng, None).is_some());
+        assert!(plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut PlanScratch::default(), &mut rng,None).is_some());
     }
 
     #[test]
     fn none_when_no_be_running() {
         let (cluster, jobs) = setup(1, &[]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         let mut rng = Pcg64::new(1);
-        assert!(plan(&te(ResourceVec::new(64.0, 512.0, 16.0)), &ctx, &mut rng, None).is_none());
+        assert!(plan(&te(ResourceVec::new(64.0, 512.0, 16.0)), &ctx, &mut PlanScratch::default(), &mut rng,None).is_none());
     }
 }

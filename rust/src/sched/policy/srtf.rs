@@ -15,7 +15,7 @@
 //! lower job id) until some node's projected free space — or, failing
 //! that, the aggregate freed space — fits the TE job.
 
-use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use super::{greedy_global_plan, PlanScratch, PolicyCtx, PreemptionPlan, PreemptionPolicy};
 use crate::job::JobSpec;
 use crate::stats::rng::Pcg64;
 
@@ -27,19 +27,25 @@ impl PreemptionPolicy for Srtf {
         &self,
         te: &JobSpec,
         ctx: &PolicyCtx<'_>,
+        scratch: &mut PlanScratch,
         _rng: &mut Pcg64,
     ) -> Option<PreemptionPlan> {
-        plan(te, ctx)
+        plan(te, ctx, scratch)
     }
 }
 
-/// Plan SRTF eviction: all running BE jobs sorted by remaining time
-/// ascending (perfect oracle), fed to the greedy global loop.
-pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
-    let mut pool = ctx.running_be();
-    pool.sort_by_key(|id| ((ctx.oracle_remaining)(*id), id.0));
-    let mut it = pool.into_iter();
-    greedy_global_plan(te, ctx, || it.next())
+/// Plan SRTF eviction: the victim index's remaining-time-ascending walk
+/// (equal to sorting the pool by the perfect oracle — the index's integer
+/// completion keys order identically to live remaining times, ties
+/// included), fed to the greedy global loop. No scan, no sort, no
+/// allocation: O(victims examined).
+pub fn plan(
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    scratch: &mut PlanScratch,
+) -> Option<PreemptionPlan> {
+    let mut it = ctx.victims.by_remaining_asc();
+    greedy_global_plan(te, ctx, &mut scratch.greedy, true, || it.next())
 }
 
 #[cfg(test)]
@@ -79,8 +85,9 @@ mod tests {
         let (cluster, jobs, rem) = setup(2, &[(0, d, 100), (1, d, 5)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
-        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        let plan = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(plan.victims, vec![JobId(1)], "remaining-5 job is evicted first");
         assert_eq!(plan.node, NodeId(1));
     }
@@ -91,8 +98,9 @@ mod tests {
         let (cluster, jobs, rem) = setup(1, &[(0, d, 10), (0, d, 10)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
-        let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(p.victims, vec![JobId(0), JobId(1)]);
     }
 
@@ -102,7 +110,8 @@ mod tests {
         let (cluster, jobs, rem) = setup(1, &[(0, d, 10)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
         let oracle = move |id: JobId| rem[id.0 as usize];
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0 };
-        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &oracle, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx, &mut PlanScratch::default()).is_none());
     }
 }

@@ -15,10 +15,9 @@
 //! through the shared greedy global loop
 //! ([`greedy_global_plan`](super::greedy_global_plan)).
 
-use super::{greedy_global_plan, PolicyCtx, PreemptionPlan, PreemptionPolicy};
+use super::{greedy_global_plan, PlanScratch, PolicyCtx, PreemptionPlan, PreemptionPolicy};
 use crate::job::JobSpec;
 use crate::stats::rng::Pcg64;
-use std::cmp::Reverse;
 
 /// Trait wrapper for [`plan`].
 pub struct Youngest;
@@ -28,23 +27,24 @@ impl PreemptionPolicy for Youngest {
         &self,
         te: &JobSpec,
         ctx: &PolicyCtx<'_>,
+        scratch: &mut PlanScratch,
         _rng: &mut Pcg64,
     ) -> Option<PreemptionPlan> {
-        plan(te, ctx)
+        plan(te, ctx, scratch)
     }
 }
 
-/// Plan preempt-youngest eviction: all running BE jobs sorted by
-/// submission time descending (ties to the higher id), fed to the greedy
-/// global loop.
-pub fn plan(te: &JobSpec, ctx: &PolicyCtx<'_>) -> Option<PreemptionPlan> {
-    let mut pool = ctx.running_be();
-    pool.sort_by_key(|id| {
-        let j = &ctx.jobs[*id];
-        (Reverse(j.spec.submit), Reverse(id.0))
-    });
-    let mut it = pool.into_iter();
-    greedy_global_plan(te, ctx, || it.next())
+/// Plan preempt-youngest eviction: the victim index's youngest-first walk
+/// — submission time descending, ties to the higher id (the plain reverse
+/// of the maintained `(submit, id)` ordering) — fed to the greedy global
+/// loop. No scan, no sort, no allocation: O(victims examined).
+pub fn plan(
+    te: &JobSpec,
+    ctx: &PolicyCtx<'_>,
+    scratch: &mut PlanScratch,
+) -> Option<PreemptionPlan> {
+    let mut it = ctx.victims.by_age_youngest_first();
+    greedy_global_plan(te, ctx, &mut scratch.greedy, true, || it.next())
 }
 
 #[cfg(test)]
@@ -83,8 +83,9 @@ mod tests {
         let d = ResourceVec::new(8.0, 64.0, 2.0);
         let (cluster, jobs) = setup(2, &[(0, d, 0), (1, d, 40)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
-        let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx).unwrap();
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        let p = plan(&te(ResourceVec::new(30.0, 200.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(p.victims, vec![JobId(1)], "submitted-at-40 job is youngest");
         assert_eq!(p.node, NodeId(1));
     }
@@ -94,10 +95,11 @@ mod tests {
         let d = ResourceVec::new(16.0, 128.0, 4.0);
         let (cluster, jobs) = setup(1, &[(0, d, 7), (0, d, 7)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         // Needs one half-node victim: the higher id (later submission
         // within the minute) is the youngest.
-        let p = plan(&te(d), &ctx).unwrap();
+        let p = plan(&te(d), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(p.victims, vec![JobId(1)]);
     }
 
@@ -106,10 +108,11 @@ mod tests {
         let d = ResourceVec::new(16.0, 128.0, 4.0);
         let (cluster, jobs) = setup(2, &[(0, d, 1), (0, d, 2), (1, d, 3), (1, d, 4)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
         // Whole-node demand: evict submit-4 (node 1) — no fit, aggregate
         // short; evict submit-3 (node 1) — node 1 now fits entirely.
-        let p = plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx).unwrap();
+        let p = plan(&te(ResourceVec::new(32.0, 256.0, 8.0)), &ctx, &mut PlanScratch::default()).unwrap();
         assert_eq!(p.victims, vec![JobId(3), JobId(2)]);
         assert_eq!(p.node, NodeId(1));
     }
@@ -119,7 +122,8 @@ mod tests {
         let d = ResourceVec::new(4.0, 32.0, 2.0);
         let (cluster, jobs) = setup(1, &[(0, d, 0)]);
         let free: Vec<_> = cluster.nodes.iter().map(|n| n.free).collect();
-        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0 };
-        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx).is_none());
+        let vidx = crate::sched::victim_index::VictimIndex::build(&cluster, &jobs);
+        let ctx = PolicyCtx { cluster: &cluster, jobs: &jobs, effective_free: &free, oracle_remaining: &ORACLE, predicted_remaining: &|_: JobId| 0.0, victims: &vidx };
+        assert!(plan(&te(ResourceVec::new(1.0, 1.0, 10.0)), &ctx, &mut PlanScratch::default()).is_none());
     }
 }

@@ -32,6 +32,17 @@
 //! a given job at a given minute is therefore a pure function of
 //! `(workload prefix, config, seed)`, and the `Noisy(sigma=0) == Oracle`
 //! acceptance pin holds across both engines for every policy.
+//!
+//! ## Interaction with the victim index
+//!
+//! Estimator updates never touch the scheduler's
+//! [`VictimIndex`](crate::sched::VictimIndex): the index orders victims by
+//! *declared* keys only (oracle remaining time, grace period, age, size),
+//! and the prediction-ordered policies (`PSrtf`, `FitGppPr`) re-rank the
+//! index's candidate pool with fresh predictions inside each plan call,
+//! into scheduler-owned scratch. A `Finished` event folding into an EWMA
+//! bucket therefore requires no index maintenance — predictions are read
+//! at plan time, not cached at placement time.
 
 use crate::job::{Job, JobClass, JobSpec};
 use crate::sched::control::{EventSubscriber, SchedulerEvent};

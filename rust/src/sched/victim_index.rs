@@ -1,0 +1,552 @@
+//! The incrementally-maintained victim index: the preemption planner's
+//! allocation-free view of the running-BE pool.
+//!
+//! Before this index, every `plan` call rebuilt its world from scratch:
+//! [`PolicyCtx::running_be`](super::policy::PolicyCtx::running_be) scanned
+//! every node and allocated fresh `Vec`s, the ordered policies (`lrtp`,
+//! `srtf`, `youngest`) re-sorted the pool per blocked TE, and FitGpp
+//! re-folded its Eq. 3 normalizers. On a saturated cluster with a deep TE
+//! queue that is O(TE_queue × running_BE × nodes) per minute — with
+//! allocations throughout. The index turns each of those scans into an
+//! ordered walk over pre-maintained state, updated only at *transitions*
+//! (place / preempt / resume / finish / cancel / drain / node-down).
+//!
+//! ## Why remaining-time order is transition-stable
+//!
+//! A Running job's live remaining time at minute `now` is
+//! `remaining_at(now) = (synced_at + remaining) − now` (see
+//! [`Job::remaining_at`]): lazy accounting means `remaining` is a snapshot
+//! at `synced_at`, and Running jobs burn one minute per minute. The sum
+//! `completion = synced_at + remaining` is therefore *invariant under
+//! [`Job::sync`]* and constant between transitions — it is the job's
+//! projected completion minute. Ordering by the integer key
+//! `(completion, id)` equals ordering by `(remaining_at(now), id)` at
+//! every common `now`, because subtracting the same `now` from all keys
+//! preserves order. So the index can keep one sorted structure and never
+//! touch it as the clock advances; only placements/evictions/finishes
+//! mutate it.
+//!
+//! ## Why there is no predicted-remaining index
+//!
+//! Predictions (`psrtf`, `fitgpp_pr`) are *floats* produced by the
+//! configured estimator, and estimator updates would invalidate any
+//! maintained ordering anyway. Worse, a maintained float key is only
+//! weakly consistent with the per-call computation the pre-index code
+//! performed. The prediction-aware policies instead compute predictions
+//! once per pool job per plan into scheduler-owned scratch — the
+//! estimators are pure per call, so call-count changes are byte-safe —
+//! and only the *iteration order* (this index's pool order) is shared.
+//!
+//! ## Membership rule
+//!
+//! Exactly the jobs `running_be_on` would return: **Running** (not
+//! Draining) **BE** jobs on **schedulable (`Up`) nodes**, in allocation
+//! order per node. Drain/fail remove a node's entries wholesale; restore,
+//! resize, and reclassify rebuild the affected node from the cluster's
+//! allocation list (sizes are normalized by node capacity, so a resize
+//! changes every size key on the node).
+//!
+//! ## Allocation discipline
+//!
+//! The ordered sets are sorted `Vec<(u64, u32)>`s, not `BTreeSet`s: a
+//! BTree node split allocates, which would show up inside the pinned
+//! allocation-free bench cycles. A sorted `Vec` with `binary_search`
+//! insert/remove is allocation-free once its capacity is warm (steady
+//! state inserts exactly as often as it removes) and iterates in exactly
+//! the order the policies need. The `entries` map is consulted by point
+//! lookup only — never iterated — so `HashMap`'s nondeterministic order
+//! is harmless.
+
+use std::collections::HashMap;
+
+use crate::cluster::{Cluster, NodeId};
+use crate::job::{Job, JobId, JobState};
+use crate::job_table::JobTable;
+use crate::resources::ResourceVec;
+
+/// Everything needed to take a job *out* of the index exactly, without
+/// consulting the (possibly already-mutated) job table.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    node: NodeId,
+    demand: ResourceVec,
+    /// `synced_at + remaining` at insert time — the projected completion
+    /// minute (transition-stable; see module docs).
+    completion: u64,
+    submit: u64,
+    gp: u64,
+    size_bits: u64,
+}
+
+/// Total-order bits for a non-negative f64 size key (same trick as the
+/// cluster's capacity index): for `x ≥ 0`, `x.to_bits()` is monotone.
+fn size_key_bits(x: f64) -> u64 {
+    x.max(0.0).to_bits()
+}
+
+fn sorted_insert(v: &mut Vec<(u64, u32)>, key: (u64, u32)) {
+    match v.binary_search(&key) {
+        Ok(i) | Err(i) => v.insert(i, key),
+    }
+}
+
+fn sorted_remove(v: &mut Vec<(u64, u32)>, key: (u64, u32)) {
+    if let Ok(i) = v.binary_search(&key) {
+        v.remove(i);
+    } else {
+        debug_assert!(false, "victim index: ordered set missing {key:?}");
+    }
+}
+
+fn close(a: &ResourceVec, b: &ResourceVec) -> bool {
+    const TOL: f64 = 1e-6;
+    (a.cpu - b.cpu).abs() <= TOL
+        && (a.ram_gb - b.ram_gb).abs() <= TOL
+        && (a.gpu - b.gpu).abs() <= TOL
+}
+
+/// Incrementally-maintained view of the preemptible pool: per-node
+/// running-BE lists (allocation order), ordered score indexes for the
+/// remaining-time-, age-, GP-, and size-ordered policies, and the demand
+/// aggregates behind the O(1) pre-plan reject. Owned by the scheduler,
+/// threaded read-only through [`PolicyCtx`](super::policy::PolicyCtx).
+#[derive(Debug, Clone)]
+pub struct VictimIndex {
+    /// Running-BE jobs per node, in allocation order (matches
+    /// `running_be_on` exactly).
+    lists: Vec<Vec<JobId>>,
+    /// Σ demand of indexed jobs per node.
+    node_demand: Vec<ResourceVec>,
+    /// Σ demand over the whole pool — the preemptible-capacity aggregate.
+    pool_demand: ResourceVec,
+    /// `(completion, id)` ascending — SRTF order forward, LRTP order via
+    /// [`by_remaining_desc`](Self::by_remaining_desc).
+    by_completion: Vec<(u64, u32)>,
+    /// `(submit, id)` ascending — Youngest order is the plain reverse.
+    by_submit: Vec<(u64, u32)>,
+    /// `(grace_period, id)` ascending — FitGpp's `max GP` normalizer is
+    /// the last key.
+    by_gp: Vec<(u64, u32)>,
+    /// `(size bits, id)` ascending, size normalized by the job's *own*
+    /// node capacity (Eq. 1) — FitGpp's `max size` normalizer is the last
+    /// key.
+    by_size: Vec<(u64, u32)>,
+    /// Point-lookup map for exact removal (never iterated).
+    entries: HashMap<u32, Entry>,
+}
+
+impl VictimIndex {
+    /// An empty index over `n_nodes` nodes (the node count is fixed for a
+    /// cluster's lifetime; drain/fail/restore flip availability, never the
+    /// roster).
+    pub fn new(n_nodes: usize) -> Self {
+        VictimIndex {
+            lists: vec![Vec::new(); n_nodes],
+            node_demand: vec![ResourceVec::ZERO; n_nodes],
+            pool_demand: ResourceVec::ZERO,
+            by_completion: Vec::new(),
+            by_submit: Vec::new(),
+            by_gp: Vec::new(),
+            by_size: Vec::new(),
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Build from scratch by scanning the cluster — the oracle the
+    /// incremental maintenance is checked against, and the constructor
+    /// tests use to stand up a `PolicyCtx`.
+    pub fn build(cluster: &Cluster, jobs: &JobTable) -> Self {
+        let mut idx = Self::new(cluster.nodes.len());
+        for n in &cluster.nodes {
+            if !n.is_schedulable() {
+                continue;
+            }
+            for id in n.jobs() {
+                let j = &jobs[id];
+                if j.is_be() && j.state == JobState::Running {
+                    idx.insert(j, &n.capacity);
+                }
+            }
+        }
+        idx
+    }
+
+    /// Index a freshly-placed (or re-scanned) running BE job.
+    /// `node_capacity` is the capacity of the job's node (Eq. 1 normalizes
+    /// size per-node). Call *after* `Job::start` so `synced_at` is
+    /// current.
+    pub fn insert(&mut self, job: &Job, node_capacity: &ResourceVec) {
+        debug_assert!(job.is_be() && job.state == JobState::Running);
+        let id = job.id();
+        let node = job.node.expect("indexed job must be bound to a node");
+        let entry = Entry {
+            node,
+            demand: job.spec.demand,
+            completion: job.synced_at.saturating_add(job.remaining),
+            submit: job.spec.submit,
+            gp: job.spec.grace_period,
+            size_bits: size_key_bits(job.spec.demand.size(node_capacity)),
+        };
+        let prev = self.entries.insert(id.0, entry);
+        debug_assert!(prev.is_none(), "victim index: double insert of {id:?}");
+        self.lists[node.0 as usize].push(id);
+        self.node_demand[node.0 as usize] += entry.demand;
+        self.pool_demand += entry.demand;
+        sorted_insert(&mut self.by_completion, (entry.completion, id.0));
+        sorted_insert(&mut self.by_submit, (entry.submit, id.0));
+        sorted_insert(&mut self.by_gp, (entry.gp, id.0));
+        sorted_insert(&mut self.by_size, (entry.size_bits, id.0));
+    }
+
+    /// Drop a job from the index. Idempotent: transitions that *may*
+    /// concern an indexed job (cancel of an active job, completion) call
+    /// this unconditionally; if the job was never indexed (TE, draining,
+    /// on a non-Up node) it is a no-op.
+    pub fn remove(&mut self, id: JobId) {
+        let Some(e) = self.entries.remove(&id.0) else {
+            return;
+        };
+        let list = &mut self.lists[e.node.0 as usize];
+        let pos = list
+            .iter()
+            .position(|j| *j == id)
+            .expect("victim index: entry without list slot");
+        list.remove(pos); // order-preserving, like the cluster's release
+        self.node_demand[e.node.0 as usize] -= e.demand;
+        self.pool_demand -= e.demand;
+        // Snap the accumulators when a scope empties: bounds f64 drift
+        // over long churn (mirrors the cluster's free-space snapping).
+        if list.is_empty() {
+            self.node_demand[e.node.0 as usize] = ResourceVec::ZERO;
+        }
+        if self.entries.is_empty() {
+            self.pool_demand = ResourceVec::ZERO;
+        }
+        sorted_remove(&mut self.by_completion, (e.completion, id.0));
+        sorted_remove(&mut self.by_submit, (e.submit, id.0));
+        sorted_remove(&mut self.by_gp, (e.gp, id.0));
+        sorted_remove(&mut self.by_size, (e.size_bits, id.0));
+    }
+
+    /// Drop every entry on `node` (drain / node-down: the node stops being
+    /// schedulable, so its tenants leave the preemptible pool even though
+    /// they may keep running until evicted).
+    pub fn remove_node(&mut self, node: NodeId) {
+        while let Some(&id) = self.lists[node.0 as usize].last() {
+            self.remove(id);
+        }
+    }
+
+    /// Re-derive `node`'s entries from the cluster's allocation list
+    /// (restore / resize / reclassify: membership or size keys changed in
+    /// ways cheaper to re-scan than to patch). No-op contribution for
+    /// non-`Up` nodes.
+    pub fn rebuild_node(&mut self, node: NodeId, cluster: &Cluster, jobs: &JobTable) {
+        self.remove_node(node);
+        let n = cluster.node(node);
+        if !n.is_schedulable() {
+            return;
+        }
+        for id in n.jobs() {
+            let j = &jobs[id];
+            if j.is_be() && j.state == JobState::Running {
+                self.insert(j, &n.capacity);
+            }
+        }
+    }
+
+    /// Number of indexed (preemptible) jobs.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the preemptible pool empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The whole pool in node order × per-node allocation order — exactly
+    /// the order `PolicyCtx::running_be()` produced.
+    pub fn pool(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.lists.iter().flatten().copied()
+    }
+
+    /// Running-BE jobs on one node, allocation order (the per-node slice
+    /// behind `running_be_on`).
+    pub fn on_node(&self, node: NodeId) -> &[JobId] {
+        &self.lists[node.0 as usize]
+    }
+
+    /// Pool in `(remaining_at(now), id)` ascending order — SRTF's victim
+    /// order, valid at every `now` between transitions (see module docs).
+    pub fn by_remaining_asc(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.by_completion.iter().map(|&(_, id)| JobId(id))
+    }
+
+    /// Pool in `(remaining desc, id asc)` order — LRTP's victim order.
+    /// Equal-completion runs are emitted back-to-front as *groups*, each
+    /// group forward: that is completion descending with ids ascending
+    /// inside a tie, matching the pre-index
+    /// `sort_by_key(|id| (Reverse(remaining), id.0))` exactly.
+    pub fn by_remaining_desc(&self) -> GroupedRev<'_> {
+        GroupedRev::new(&self.by_completion)
+    }
+
+    /// Pool in `(submit desc, id desc)` order — Youngest's victim order.
+    /// The plain reverse of the ascending `(submit, id)` set is exactly
+    /// the pre-index `(Reverse(submit), Reverse(id.0))` sort.
+    pub fn by_age_youngest_first(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.by_submit.iter().rev().map(|&(_, id)| JobId(id))
+    }
+
+    /// FitGpp's Eq. 3 size normalizer: the largest normalized demand in
+    /// the pool (0.0 when empty, dropping the term like the pre-index
+    /// fold). Exact: sizes are ≥ 0, so the bit-ordered max *is* the f64
+    /// max with identical bits.
+    pub fn max_size(&self) -> f64 {
+        self.by_size
+            .last()
+            .map_or(0.0, |&(bits, _)| f64::from_bits(bits))
+    }
+
+    /// FitGpp's Eq. 3 GP normalizer: the longest grace period in the pool
+    /// as f64 (0.0 when empty). `u64 → f64` is monotone, so the last
+    /// integer key converts to exactly the value the pre-index
+    /// `max_gp.max(gp as f64)` fold produced.
+    pub fn max_gp(&self) -> f64 {
+        self.by_gp.last().map_or(0.0, |&(gp, _)| gp as f64)
+    }
+
+    /// Σ demand over the pool — evicting *everything* frees exactly this
+    /// (modulo f64 rounding; callers add slack). The O(1) pre-plan reject
+    /// bound is `total_effective_free + pool_demand + slack`.
+    pub fn pool_demand(&self) -> &ResourceVec {
+        &self.pool_demand
+    }
+
+    /// Σ demand of indexed jobs on one node — what
+    /// `feasible_nodes` adds to a node's effective free space.
+    pub fn node_demand(&self, node: NodeId) -> &ResourceVec {
+        &self.node_demand[node.0 as usize]
+    }
+
+    /// Paranoid cross-check: the incremental state must match a
+    /// from-scratch [`build`](Self::build) — lists and ordered sets
+    /// *byte-equal*, aggregates within f64 drift tolerance. Wired into the
+    /// scheduler's paranoid mode so every core test and property run
+    /// exercises it each tick.
+    pub fn check_against(&self, cluster: &Cluster, jobs: &JobTable) -> Result<(), String> {
+        let fresh = Self::build(cluster, jobs);
+        if self.lists != fresh.lists {
+            return Err(format!(
+                "victim index lists diverged: have {:?}, expected {:?}",
+                self.lists, fresh.lists
+            ));
+        }
+        if self.by_completion != fresh.by_completion {
+            return Err("victim index by_completion diverged".into());
+        }
+        if self.by_submit != fresh.by_submit {
+            return Err("victim index by_submit diverged".into());
+        }
+        if self.by_gp != fresh.by_gp {
+            return Err("victim index by_gp diverged".into());
+        }
+        if self.by_size != fresh.by_size {
+            return Err("victim index by_size diverged".into());
+        }
+        if !close(&self.pool_demand, &fresh.pool_demand) {
+            return Err(format!(
+                "victim index pool_demand drifted: have {}, expected {}",
+                self.pool_demand, fresh.pool_demand
+            ));
+        }
+        for (i, (a, b)) in self.node_demand.iter().zip(&fresh.node_demand).enumerate() {
+            if !close(a, b) {
+                return Err(format!(
+                    "victim index node_demand[{i}] drifted: have {a}, expected {b}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Iterator for [`VictimIndex::by_remaining_desc`]: walks an ascending
+/// `(key, id)` slice as equal-key *groups* from the back, each group
+/// front-to-back — key descending, ids ascending within a tie.
+pub struct GroupedRev<'a> {
+    keys: &'a [(u64, u32)],
+    run_start: usize,
+    pos: usize,
+    run_end: usize,
+}
+
+impl<'a> GroupedRev<'a> {
+    fn new(keys: &'a [(u64, u32)]) -> Self {
+        // Start "past the end": the first `next()` locates the last run.
+        let n = keys.len();
+        GroupedRev { keys, run_start: n, pos: n, run_end: n }
+    }
+}
+
+impl Iterator for GroupedRev<'_> {
+    type Item = JobId;
+
+    fn next(&mut self) -> Option<JobId> {
+        if self.pos == self.run_end {
+            if self.run_start == 0 {
+                return None;
+            }
+            self.run_end = self.run_start;
+            let key = self.keys[self.run_end - 1].0;
+            let mut s = self.run_end - 1;
+            while s > 0 && self.keys[s - 1].0 == key {
+                s -= 1;
+            }
+            self.run_start = s;
+            self.pos = s;
+        }
+        let (_, id) = self.keys[self.pos];
+        self.pos += 1;
+        Some(JobId(id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::job::{JobClass, JobSpec};
+
+    fn rv(c: f64, r: f64, g: f64) -> ResourceVec {
+        ResourceVec::new(c, r, g)
+    }
+
+    /// Cluster of `n` tiny nodes with `placements[i] = (node, demand,
+    /// submit, exec, gp)`, every job started at minute 0.
+    fn setup(
+        n: usize,
+        placements: &[(u32, ResourceVec, u64, u64, u64)],
+    ) -> (Cluster, JobTable) {
+        let mut cluster = Cluster::new(&ClusterSpec::tiny(n));
+        let mut jobs = JobTable::new();
+        for (i, (node, demand, submit, exec, gp)) in placements.iter().enumerate() {
+            let spec = JobSpec::new(i as u32, JobClass::Be, *demand, *submit, *exec, *gp);
+            let id = spec.id;
+            let mut job = crate::job::Job::new(spec);
+            job.start(NodeId(*node), 0);
+            jobs.insert(job);
+            cluster.bind(id, *demand, NodeId(*node));
+        }
+        (cluster, jobs)
+    }
+
+    #[test]
+    fn build_matches_incremental_and_orders_hold() {
+        let (cluster, jobs) = setup(
+            2,
+            &[
+                (0, rv(2.0, 16.0, 0.0), 5, 30, 10),
+                (0, rv(1.0, 8.0, 0.0), 1, 30, 20),
+                (1, rv(4.0, 32.0, 1.0), 5, 7, 5),
+            ],
+        );
+        let idx = VictimIndex::build(&cluster, &jobs);
+        assert_eq!(idx.len(), 3);
+        idx.check_against(&cluster, &jobs).unwrap();
+
+        // Pool = node order × allocation order.
+        let pool: Vec<JobId> = idx.pool().collect();
+        assert_eq!(pool, vec![JobId(0), JobId(1), JobId(2)]);
+
+        // SRTF: remaining asc (all started at 0 ⇒ completion == exec).
+        let asc: Vec<JobId> = idx.by_remaining_asc().collect();
+        assert_eq!(asc, vec![JobId(2), JobId(0), JobId(1)]);
+
+        // Equal exec ⇒ ids ascending within the tie in both directions.
+        // LRTP: remaining desc, ids asc within ties.
+        let desc: Vec<JobId> = idx.by_remaining_desc().collect();
+        assert_eq!(desc, vec![JobId(0), JobId(1), JobId(2)]);
+
+        // Youngest: submit desc, id desc within ties.
+        let young: Vec<JobId> = idx.by_age_youngest_first().collect();
+        assert_eq!(young, vec![JobId(2), JobId(0), JobId(1)]);
+
+        // Normalizers: max GP = 20; max size = job 2's (4/32 cpu … on the
+        // tiny node: dominant axis decides).
+        assert_eq!(idx.max_gp(), 20.0);
+        let cap = cluster.node(NodeId(1)).capacity;
+        assert_eq!(idx.max_size(), rv(4.0, 32.0, 1.0).size(&cap));
+    }
+
+    #[test]
+    fn remove_is_idempotent_and_exact() {
+        let (cluster, jobs) = setup(
+            1,
+            &[
+                (0, rv(1.0, 8.0, 0.0), 0, 10, 5),
+                (0, rv(2.0, 16.0, 0.0), 1, 20, 5),
+            ],
+        );
+        let mut idx = VictimIndex::build(&cluster, &jobs);
+        idx.remove(JobId(0));
+        idx.remove(JobId(0)); // no-op
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.pool().collect::<Vec<_>>(), vec![JobId(1)]);
+        assert_eq!(*idx.pool_demand(), rv(2.0, 16.0, 0.0));
+        idx.remove(JobId(1));
+        assert!(idx.is_empty());
+        assert!(idx.pool_demand().is_zero());
+        assert_eq!(idx.max_size(), 0.0);
+        assert_eq!(idx.max_gp(), 0.0);
+    }
+
+    #[test]
+    fn remove_node_and_rebuild_roundtrip() {
+        let (mut cluster, jobs) = setup(
+            2,
+            &[
+                (0, rv(1.0, 8.0, 0.0), 0, 10, 5),
+                (1, rv(2.0, 16.0, 0.0), 0, 20, 5),
+            ],
+        );
+        let mut idx = VictimIndex::build(&cluster, &jobs);
+        cluster.set_availability(NodeId(0), crate::cluster::NodeAvailability::Draining);
+        idx.remove_node(NodeId(0));
+        idx.check_against(&cluster, &jobs).unwrap();
+        assert_eq!(idx.pool().collect::<Vec<_>>(), vec![JobId(1)]);
+
+        cluster.set_availability(NodeId(0), crate::cluster::NodeAvailability::Up);
+        idx.rebuild_node(NodeId(0), &cluster, &jobs);
+        idx.check_against(&cluster, &jobs).unwrap();
+        assert_eq!(idx.len(), 2);
+    }
+
+    #[test]
+    fn grouped_rev_handles_all_tie_shapes() {
+        // keys: [1,1,2,3,3,3] → groups from the back: [3,3,3],[2],[1,1].
+        let keys = vec![(1, 10), (1, 11), (2, 12), (3, 13), (3, 14), (3, 15)];
+        let out: Vec<u32> = GroupedRev::new(&keys).map(|id| id.0).collect();
+        assert_eq!(out, vec![13, 14, 15, 12, 10, 11]);
+        assert_eq!(GroupedRev::new(&[]).count(), 0);
+        let single = vec![(7, 42)];
+        assert_eq!(GroupedRev::new(&single).map(|id| id.0).collect::<Vec<_>>(), vec![42]);
+    }
+
+    #[test]
+    fn down_nodes_are_not_indexed() {
+        let (mut cluster, jobs) = setup(
+            2,
+            &[
+                (0, rv(1.0, 8.0, 0.0), 0, 10, 5),
+                (1, rv(2.0, 16.0, 0.0), 0, 20, 5),
+            ],
+        );
+        cluster.set_availability(NodeId(1), crate::cluster::NodeAvailability::Down);
+        // Note: a real fail_node evicts allocations first; membership here
+        // only depends on schedulability.
+        let idx = VictimIndex::build(&cluster, &jobs);
+        assert_eq!(idx.pool().collect::<Vec<_>>(), vec![JobId(0)]);
+    }
+}

@@ -22,7 +22,8 @@ use fitgpp::job::{Job, JobClass, JobId, JobSpec};
 use fitgpp::job_table::JobTable;
 use fitgpp::prop_assert;
 use fitgpp::resources::ResourceVec;
-use fitgpp::sched::policy::{build_policy, PolicyCtx, PolicyKind, PreemptionPlan};
+use fitgpp::sched::policy::{build_policy, PlanScratch, PolicyCtx, PolicyKind, PreemptionPlan};
+use fitgpp::sched::victim_index::VictimIndex;
 use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
 use fitgpp::stats::rng::Pcg64;
 use fitgpp::testkit::{check, gen, PropConfig};
@@ -357,7 +358,13 @@ fn random_cluster_state(rng: &mut Pcg64) -> (Cluster, Vec<Job>) {
             1 + rng.below(200),
             rng.below(15),
         ));
-        job.start(node, job.spec.submit);
+        // A common start minute (≥ every submit, which is < 50): the
+        // scheduler only ever compares remaining times of co-running jobs
+        // at a shared `now`, and the victim index exploits exactly that
+        // (its completion keys order `remaining_at(now)` for any common
+        // now). Per-job start minutes would compare stored remainings at
+        // *different* sync points — a state no scheduler run produces.
+        job.start(node, 50);
         job.preemptions = rng.below(3) as u32;
         cluster.bind(JobId(id), demand, node);
         jobs.push(job);
@@ -374,12 +381,14 @@ fn prop_trait_policies_match_pre_refactor_oracle() {
         let jobs = JobTable::from_jobs(jobs);
         let oracle = |id: JobId| remaining[id.0 as usize];
         let predicted = |id: JobId| remaining[id.0 as usize] as f64;
+        let vidx = VictimIndex::build(&cluster, &jobs);
         let ctx = PolicyCtx {
             cluster: &cluster,
             jobs: &jobs,
             effective_free: &free,
             oracle_remaining: &oracle,
             predicted_remaining: &predicted,
+            victims: &vidx,
         };
         let te = JobSpec::new(
             999,
@@ -397,14 +406,14 @@ fn prop_trait_policies_match_pre_refactor_oracle() {
 
         // LRTP: deterministic — trait plan must equal the verbatim oracle.
         let mut rng_a = Pcg64::new(seed);
-        let got = build_policy(&PolicyKind::Lrtp).plan(&te, &ctx, &mut rng_a);
+        let got = build_policy(&PolicyKind::Lrtp).plan(&te, &ctx, &mut PlanScratch::default(), &mut rng_a);
         let want = pre_refactor_oracle::lrtp(&te, &ctx);
         prop_assert!(got == want, "LRTP diverged: {got:?} vs {want:?}");
 
         // RAND: both sides consume an identically-seeded RNG.
         let mut rng_a = Pcg64::new(seed);
         let mut rng_b = Pcg64::new(seed);
-        let got = build_policy(&PolicyKind::Rand).plan(&te, &ctx, &mut rng_a);
+        let got = build_policy(&PolicyKind::Rand).plan(&te, &ctx, &mut PlanScratch::default(), &mut rng_a);
         let want = pre_refactor_oracle::rand(&te, &ctx, &mut rng_b, None);
         prop_assert!(got == want, "RAND diverged: {got:?} vs {want:?}");
         prop_assert!(
@@ -416,8 +425,8 @@ fn prop_trait_policies_match_pre_refactor_oracle() {
         // above), the prediction-aware ordering must reproduce SRTF's
         // plan bit-for-bit.
         let mut rng_a = Pcg64::new(seed);
-        let got = build_policy(&PolicyKind::PSrtf).plan(&te, &ctx, &mut rng_a);
-        let want = fitgpp::sched::policy::srtf::plan(&te, &ctx);
+        let got = build_policy(&PolicyKind::PSrtf).plan(&te, &ctx, &mut PlanScratch::default(), &mut rng_a);
+        let want = fitgpp::sched::policy::srtf::plan(&te, &ctx, &mut PlanScratch::default());
         prop_assert!(got == want, "P-SRTF with oracle predictions diverged from SRTF");
 
         // FitGpp: the trait object delegates to the (unchanged) Eq. 1-4
@@ -425,9 +434,20 @@ fn prop_trait_policies_match_pre_refactor_oracle() {
         for p_max in [Some(1), None] {
             let mut rng_a = Pcg64::new(seed);
             let mut rng_b = Pcg64::new(seed);
-            let got =
-                build_policy(&PolicyKind::FitGpp { s: 4.0, p_max }).plan(&te, &ctx, &mut rng_a);
-            let want = fitgpp::sched::policy::fitgpp::plan(&te, &ctx, 4.0, p_max, &mut rng_b);
+            let got = build_policy(&PolicyKind::FitGpp { s: 4.0, p_max }).plan(
+                &te,
+                &ctx,
+                &mut PlanScratch::default(),
+                &mut rng_a,
+            );
+            let want = fitgpp::sched::policy::fitgpp::plan(
+                &te,
+                &ctx,
+                &mut PlanScratch::default(),
+                4.0,
+                p_max,
+                &mut rng_b,
+            );
             prop_assert!(got == want, "FitGpp({p_max:?}) diverged");
             prop_assert!(
                 rng_a.next_u64() == rng_b.next_u64(),

@@ -1,0 +1,189 @@
+//! Victim-index consistency under transition chaos.
+//!
+//! The incrementally-maintained [`VictimIndex`] claims byte-equality with
+//! a from-scratch rebuild after *any* interleaving of the transitions that
+//! mutate it: place, preempt (signal + synchronous zero-GP vacate),
+//! resume, finish, cancel, reclassify, drain, node-down/up, and resize.
+//! Two attack angles:
+//!
+//! 1. **Paranoid simulation chaos** — randomized workloads under
+//!    preemptive policies with randomized control-plane scripts, run with
+//!    `paranoid = true` so *every tick* asserts
+//!    [`VictimIndex::check_against`] (lists, all four ordered score sets
+//!    byte-equal; aggregates within fp tolerance) — across both drive
+//!    engines and several arrival-lookahead windows, with records compared
+//!    pairwise so the index also stays observably invisible.
+//! 2. **Direct control-plane chaos** — a [`ClusterController`] driven
+//!    command-by-command, with an explicit `check_against` after every
+//!    single command *and* step, catching corruption that a later tick's
+//!    paranoid check might mask.
+
+use fitgpp::cluster::{ClusterSpec, NodeId};
+use fitgpp::job::{JobClass, JobId};
+use fitgpp::prop_assert;
+use fitgpp::resources::ResourceVec;
+use fitgpp::sched::control::{ClusterController, SchedulerCommand};
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::sched::SchedConfig;
+use fitgpp::sim::scenario::ScenarioScript;
+use fitgpp::sim::{SimConfig, SimEngine, Simulator};
+use fitgpp::stats::rng::Pcg64;
+use fitgpp::testkit::{check, gen, PropConfig};
+
+fn preemptive_policies(rng: &mut Pcg64) -> PolicyKind {
+    match rng.below(8) {
+        0 => PolicyKind::Lrtp,
+        1 => PolicyKind::Rand,
+        2 => PolicyKind::Srtf,
+        3 => PolicyKind::Youngest,
+        4 => PolicyKind::PSrtf,
+        5 => PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        6 => PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) },
+        _ => PolicyKind::FitGpp { s: 2.0, p_max: None },
+    }
+}
+
+/// A random chaos script: node failures, drains, restores, upward
+/// resizes, cancellations, and reclassifications sprinkled through the
+/// first 300 minutes, with every node brought back up (and restored to a
+/// roomy capacity) at minute 400 so the backlog can drain.
+fn chaos_script(rng: &mut Pcg64, nodes: usize, n_jobs: usize) -> ScenarioScript {
+    let mut script = ScenarioScript::new();
+    for _ in 0..2 + rng.below(5) {
+        let node = NodeId(rng.below(nodes as u64) as u32);
+        let at = 1 + rng.below(300);
+        let cmd = match rng.below(6) {
+            0 => SchedulerCommand::NodeDown { node },
+            1 => SchedulerCommand::Drain { node },
+            2 => SchedulerCommand::NodeUp { node },
+            3 => SchedulerCommand::Resize {
+                node,
+                // Upward-only: shrinking could strand a job that no longer
+                // fits anywhere, and rejection paths are exercised anyway.
+                capacity: ResourceVec::new(
+                    32.0 + rng.below(32) as f64,
+                    256.0 + rng.below(256) as f64,
+                    8.0 + rng.below(8) as f64,
+                ),
+            },
+            4 => SchedulerCommand::Cancel {
+                job: JobId(rng.below(n_jobs as u64) as u32),
+            },
+            _ => SchedulerCommand::Reclassify {
+                job: JobId(rng.below(n_jobs as u64) as u32),
+                class: if rng.chance(0.5) { JobClass::Te } else { JobClass::Be },
+            },
+        };
+        script = script.at(at, cmd);
+    }
+    for node in 0..nodes {
+        script = script.at(400, SchedulerCommand::NodeUp { node: NodeId(node as u32) });
+    }
+    script
+}
+
+#[test]
+fn prop_victim_index_matches_rebuild_under_simulation_chaos() {
+    // Angle 1: paranoid ticks assert `check_against` after every minute,
+    // under both engines and several lookahead windows; record equality
+    // across all combinations pins that the index never *changed* a
+    // decision either.
+    let cases = PropConfig { cases: 12, ..Default::default() };
+    check("victim-index-chaos", cases, |rng| {
+        let nodes = 2 + rng.below(3) as usize;
+        let n = 20 + rng.below(50) as usize;
+        let wl = gen::workload(rng, n, 30 + rng.below(80));
+        let script = chaos_script(rng, nodes, n);
+        let policy = preemptive_policies(rng);
+        let seed = rng.next_u64();
+        let mk = |engine: SimEngine, lookahead: u64| {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes), policy);
+            cfg.paranoid = true; // check_against every tick
+            cfg.seed = seed;
+            cfg.engine = engine;
+            cfg.arrival_lookahead = lookahead;
+            cfg.max_ticks = 20_000;
+            cfg.scenario = Some(script.clone());
+            Simulator::new(cfg).run(&wl)
+        };
+        let base = mk(SimEngine::EventHorizon, 0);
+        prop_assert!(
+            base.sched_stats.internal_errors == 0,
+            "{policy:?}: internal errors under chaos"
+        );
+        for engine in [SimEngine::EventHorizon, SimEngine::PerMinute] {
+            for lookahead in [0u64, 7, 10_000] {
+                if engine == SimEngine::EventHorizon && lookahead == 0 {
+                    continue; // that's `base`
+                }
+                let other = mk(engine, lookahead);
+                prop_assert!(
+                    other.records == base.records,
+                    "{policy:?}: records diverge ({engine:?}, lookahead {lookahead})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_victim_index_matches_rebuild_after_every_command() {
+    // Angle 2: drive the controller directly and cross-check the index
+    // against a from-scratch rebuild after *each* command and step — no
+    // tick in between to repair or mask a stale entry.
+    check("victim-index-commands", PropConfig::default(), |rng| {
+        let nodes = 2 + rng.below(3) as usize;
+        let n = 15 + rng.below(30) as usize;
+        let wl = gen::workload(rng, n, 40);
+        let policy = preemptive_policies(rng);
+        let mut ctl = ClusterController::new(
+            &ClusterSpec::tiny(nodes),
+            SchedConfig::new(policy),
+        );
+        for job in &wl.jobs {
+            ctl.stage_arrival(job.clone());
+        }
+        let verify = |ctl: &ClusterController, what: &str| -> Result<(), String> {
+            ctl.sched
+                .victim_index()
+                .check_against(&ctl.sched.cluster, &ctl.jobs)
+                .map_err(|e| format!("{policy:?}: index diverged after {what}: {e}"))
+        };
+        for now in 0..300u64 {
+            if rng.chance(0.25) {
+                let node = NodeId(rng.below(nodes as u64) as u32);
+                let cmd = match rng.below(6) {
+                    0 => SchedulerCommand::NodeDown { node },
+                    1 => SchedulerCommand::Drain { node },
+                    2 => SchedulerCommand::NodeUp { node },
+                    3 => SchedulerCommand::Resize {
+                        node,
+                        capacity: ResourceVec::new(
+                            32.0 + rng.below(32) as f64,
+                            256.0 + rng.below(256) as f64,
+                            8.0 + rng.below(8) as f64,
+                        ),
+                    },
+                    4 => SchedulerCommand::Cancel {
+                        job: JobId(rng.below(n as u64) as u32),
+                    },
+                    _ => SchedulerCommand::Reclassify {
+                        job: JobId(rng.below(n as u64) as u32),
+                        class: if rng.chance(0.5) { JobClass::Te } else { JobClass::Be },
+                    },
+                };
+                let what = format!("{cmd:?} at {now}");
+                ctl.command(now, cmd);
+                if let Err(e) = verify(&ctl, &what) {
+                    return Err(e);
+                }
+            }
+            ctl.step(now);
+            if let Err(e) = verify(&ctl, &format!("step {now}")) {
+                return Err(e);
+            }
+        }
+        Ok(())
+    });
+}

@@ -17,13 +17,21 @@
 # class different from CI. The gate works the same either way; blessing
 # with a real CI measurement tightens it.
 #
-# Usage: scripts/perf_gate.sh [baseline.json] [scale.json] [hotpath.json]
+# The plan-path microbenches (`plan_blocked_te_*`) are additionally gated
+# against BENCH_hotpath_baseline.json ns/op ceilings; bless those with
+#
+#     cp BENCH_hotpath.json BENCH_hotpath_baseline.json
+#     git add BENCH_hotpath_baseline.json && git commit
+#
+# Usage: scripts/perf_gate.sh [baseline.json] [scale.json] [hotpath.json] [hotpath-baseline.json]
 set -euo pipefail
 
 BASELINE=${1:-BENCH_baseline.json}
 SCALE=${2:-BENCH_scale.json}
 HOTPATH=${3:-BENCH_hotpath.json}
+HOTPATH_BASELINE=${4:-BENCH_hotpath_baseline.json}
 TOLERANCE=0.85 # fail below baseline × this
+OP_TOLERANCE=1.25 # per-op ns ceiling: baseline × this
 
 for f in "$BASELINE" "$SCALE" "$HOTPATH"; do
   if [ ! -f "$f" ]; then
@@ -66,4 +74,31 @@ if ! jq -en --argjson a "$allocs" '$a == 0' >/dev/null; then
   exit 1
 fi
 echo "perf-gate: steady-state hot path is allocation-free (0 allocs/op)"
+
+# Plan-path gates: the preemption-planning ops must stay allocation-free
+# (the victim index + plan scratch guarantee) and within the blessed ns/op
+# ceiling. The committed ceiling may be a conservative floor, like the
+# throughput baseline.
+for op in plan_blocked_te_256 plan_blocked_te_4096; do
+  op_allocs=$(jq -er ".ops[\"$op\"].allocs_per_op" "$HOTPATH")
+  if ! jq -en --argjson a "$op_allocs" '$a == 0' >/dev/null; then
+    echo "perf-gate: FAIL — $op allocates (${op_allocs} allocs/op, expected 0)" >&2
+    exit 1
+  fi
+  if [ -f "$HOTPATH_BASELINE" ]; then
+    op_ns=$(jq -er ".ops[\"$op\"].ns_per_op" "$HOTPATH")
+    op_floor=$(jq -r ".ops[\"$op\"].ns_per_op // empty" "$HOTPATH_BASELINE")
+    if [ -n "$op_floor" ]; then
+      if ! jq -en --argjson m "$op_ns" --argjson f "$op_floor" --argjson t "$OP_TOLERANCE" \
+        '$m <= $f * $t' >/dev/null; then
+        echo "perf-gate: FAIL — $op at ${op_ns} ns/op exceeds ${OP_TOLERANCE} × baseline ${op_floor}" >&2
+        echo "perf-gate: if intentional: cp $HOTPATH $HOTPATH_BASELINE && git add $HOTPATH_BASELINE" >&2
+        exit 1
+      fi
+      echo "perf-gate: $op ${op_ns} ns/op (ceiling ${op_floor} × ${OP_TOLERANCE}), 0 allocs/op"
+    fi
+  else
+    echo "perf-gate: $op 0 allocs/op (no $HOTPATH_BASELINE — ns/op ceiling skipped)"
+  fi
+done
 echo "perf-gate: OK"
