@@ -1,0 +1,199 @@
+//! Wire-service throughput: commands/sec over a unix socket and event
+//! fan-out delivery rate to concurrent subscribers.
+//!
+//! One in-process `serve` session on a temp UDS; two measurements:
+//!
+//! * **commands/sec** — one client pipelines `FITGPP_SERVE_CMDS` submit
+//!   requests and reads every ack back; the rate is acked commands over
+//!   the wall time of the whole round trip.
+//! * **event fan-out events/sec** — four subscribed connections while a
+//!   driver submits `FITGPP_SERVE_JOBS` one-minute jobs; each subscriber
+//!   reads until it has seen every job finish, and the rate is total
+//!   event lines delivered (all subscribers summed) over the wall time.
+//!
+//! Results land in `BENCH_serve.json` (`commands_per_sec`,
+//! `events_per_sec`), floor-gated by `scripts/perf_gate.sh` against
+//! `BENCH_serve_baseline.json`. The queue bound is set far above the
+//! line volume, so a single drop (a `lagged` notice) fails the bench —
+//! throughput numbers must describe complete delivery.
+
+#[path = "common/mod.rs"]
+mod common;
+
+#[cfg(unix)]
+fn main() {
+    bench::run();
+}
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("serve bench requires unix-domain sockets; skipped");
+}
+
+#[cfg(unix)]
+mod bench {
+    use super::common;
+    use fitgpp::benchkit::env_usize;
+    use fitgpp::cluster::ClusterSpec;
+    use fitgpp::sched::policy::PolicyKind;
+    use fitgpp::serve::server::{self, ServeConfig};
+    use fitgpp::sim::SimConfig;
+    use fitgpp::util::json::Json;
+    use fitgpp::workload::source::WorkloadSource;
+    use fitgpp::workload::Workload;
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    use std::path::PathBuf;
+    use std::sync::mpsc;
+    use std::thread;
+    use std::time::{Duration, Instant};
+
+    const FANOUT_SUBSCRIBERS: usize = 4;
+    const FANOUT_ID_BASE: u64 = 10_000_000;
+
+    fn connect(sock: &PathBuf) -> (BufReader<UnixStream>, UnixStream) {
+        let mut tries = 0;
+        let stream = loop {
+            match UnixStream::connect(sock) {
+                Ok(s) => break s,
+                Err(_) if tries < 500 => {
+                    tries += 1;
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => panic!("serve bench: socket never came up: {e}"),
+            }
+        };
+        let reader = BufReader::new(stream.try_clone().expect("clone uds"));
+        (reader, stream)
+    }
+
+    /// Read one line and panic if it is a `lagged` notice — a drop means
+    /// the measurement no longer describes complete delivery.
+    fn read_line(reader: &mut BufReader<UnixStream>, line: &mut String) -> Json {
+        line.clear();
+        assert!(reader.read_line(line).expect("read") > 0, "server closed early");
+        let v = Json::parse(line).expect("json line");
+        assert_ne!(v.get("type").as_str(), Some("lagged"), "bench dropped events: {line}");
+        v
+    }
+
+    pub fn run() {
+        let sock = std::env::temp_dir()
+            .join(format!("fitgpp-serve-bench-{}.sock", std::process::id()));
+        let mut cfg = ServeConfig::new(SimConfig::new(ClusterSpec::tiny(4), PolicyKind::Fifo));
+        cfg.uds = Some(sock.clone());
+        // Far above the total line volume: any overflow is a bench bug.
+        cfg.queue_cap = 1 << 17;
+        let server = thread::spawn(move || {
+            let workload = Workload::new(Vec::new());
+            let mut source = WorkloadSource::new(&workload);
+            server::run(cfg, &mut source).expect("serve")
+        });
+
+        // --- commands/sec: pipelined submits, every ack read back -------
+        let n_cmds = env_usize("FITGPP_SERVE_CMDS", 4000);
+        let (mut reader, mut writer) = connect(&sock);
+        let mut line = String::new();
+        assert_eq!(read_line(&mut reader, &mut line).get("type").as_str(), Some("hello"));
+        let t0 = Instant::now();
+        for i in 0..n_cmds {
+            writeln!(
+                writer,
+                r#"{{"cmd":"submit","id":{i},"class":"BE","cpu":1,"ram_gb":1,"gpu":0,"exec_time":1,"seq":{i}}}"#
+            )
+            .expect("write submit");
+        }
+        let mut acked = 0usize;
+        while acked < n_cmds {
+            if read_line(&mut reader, &mut line).get("type").as_str() == Some("ack") {
+                acked += 1;
+            }
+        }
+        let commands_per_sec = n_cmds as f64 / t0.elapsed().as_secs_f64();
+        println!("commands/sec over uds: {commands_per_sec:.0} ({n_cmds} pipelined submits)");
+        drop(writer);
+        drop(reader);
+
+        // --- event fan-out: subscribers must see every job finish -------
+        let n_jobs = env_usize("FITGPP_SERVE_JOBS", 4000);
+        let (ready_tx, ready_rx) = mpsc::channel::<()>();
+        let subs: Vec<_> = (0..FANOUT_SUBSCRIBERS)
+            .map(|_| {
+                let sock = sock.clone();
+                let ready = ready_tx.clone();
+                thread::spawn(move || {
+                    let (mut reader, mut writer) = connect(&sock);
+                    let mut line = String::new();
+                    assert_eq!(
+                        read_line(&mut reader, &mut line).get("type").as_str(),
+                        Some("hello")
+                    );
+                    writeln!(writer, r#"{{"cmd":"subscribe","seq":1}}"#).expect("subscribe");
+                    loop {
+                        if read_line(&mut reader, &mut line).get("type").as_str() == Some("ack") {
+                            break;
+                        }
+                    }
+                    ready.send(()).expect("ready");
+                    let mut lines = 0u64;
+                    let mut finished = 0usize;
+                    while finished < n_jobs {
+                        let v = read_line(&mut reader, &mut line);
+                        lines += 1;
+                        if v.get("type").as_str() == Some("finished")
+                            && v.get("job").as_u64().is_some_and(|j| j >= FANOUT_ID_BASE)
+                        {
+                            finished += 1;
+                        }
+                    }
+                    lines
+                })
+            })
+            .collect();
+        for _ in 0..FANOUT_SUBSCRIBERS {
+            ready_rx.recv().expect("subscriber up");
+        }
+        let (mut reader, mut writer) = connect(&sock);
+        assert_eq!(read_line(&mut reader, &mut line).get("type").as_str(), Some("hello"));
+        let t0 = Instant::now();
+        for i in 0..n_jobs {
+            writeln!(
+                writer,
+                r#"{{"cmd":"submit","id":{},"class":"BE","cpu":1,"ram_gb":1,"gpu":0,"exec_time":1,"seq":{i}}}"#,
+                FANOUT_ID_BASE + i as u64
+            )
+            .expect("write submit");
+        }
+        let mut acked = 0usize;
+        while acked < n_jobs {
+            if read_line(&mut reader, &mut line).get("type").as_str() == Some("ack") {
+                acked += 1;
+            }
+        }
+        let mut delivered = 0u64;
+        for s in subs {
+            delivered += s.join().expect("subscriber");
+        }
+        let events_per_sec = delivered as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "event fan-out: {events_per_sec:.0} events/sec delivered \
+             ({delivered} lines to {FANOUT_SUBSCRIBERS} subscribers, {n_jobs} jobs)"
+        );
+
+        writeln!(writer, r#"{{"cmd":"shutdown"}}"#).expect("shutdown");
+        let outcome = server.join().expect("server thread");
+        assert_eq!(
+            outcome.stats.events_dropped, 0,
+            "bench must measure complete delivery"
+        );
+        assert_eq!(outcome.result.metrics.completed as usize, n_cmds + n_jobs);
+
+        let json = Json::obj(vec![
+            ("bench", Json::str("serve")),
+            ("commands_per_sec", Json::num(commands_per_sec)),
+            ("events_per_sec", Json::num(events_per_sec)),
+            ("subscribers", Json::num(FANOUT_SUBSCRIBERS as f64)),
+        ]);
+        common::save_results_json("serve", &json);
+    }
+}

@@ -34,6 +34,8 @@
 
 use crate::job::JobId;
 use crate::resources::ResourceVec;
+use crate::util::bin::{BinReader, BinWriter};
+use anyhow::bail;
 use std::collections::{BTreeSet, HashMap};
 use std::fmt;
 
@@ -554,6 +556,72 @@ impl Cluster {
             .fold(ResourceVec::ZERO, |acc, n| acc + n.capacity);
         self.index.update(&self.nodes[node.0 as usize]);
         Ok(())
+    }
+
+    /// Serialize the per-node live state for a snapshot: capacity, free
+    /// (bit-exact — [`Node::release`] snaps FP residue, so recomputing free
+    /// on restore could diverge), availability, reservation holds, and the
+    /// allocation lists in order. The derived structures — the job→node
+    /// `location` map, the free-capacity index, and the cached capacity
+    /// aggregates — are *not* written; [`Cluster::restore_bin`] rebuilds
+    /// them, and [`Cluster::check_invariants`] cross-checks the rebuild.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.seq(self.nodes.len());
+        for n in &self.nodes {
+            n.capacity.snapshot_bin(w);
+            n.free.snapshot_bin(w);
+            w.u8(match n.availability {
+                NodeAvailability::Up => 0,
+                NodeAvailability::Draining => 1,
+                NodeAvailability::Down => 2,
+            });
+            n.hold.snapshot_bin(w);
+            w.seq(n.allocations.len());
+            for (job, demand) in &n.allocations {
+                w.u32(job.0);
+                demand.snapshot_bin(w);
+            }
+        }
+    }
+
+    /// Rebuild a cluster written by [`Cluster::snapshot_bin`], rederiving
+    /// the location map, the free-capacity index, and the cached capacity
+    /// aggregates from the node state.
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        let n_nodes = r.seq()?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        let mut location = HashMap::new();
+        for i in 0..n_nodes {
+            let id = NodeId(i as u32);
+            let capacity = ResourceVec::restore_bin(r)?;
+            let free = ResourceVec::restore_bin(r)?;
+            let availability = match r.u8()? {
+                0 => NodeAvailability::Up,
+                1 => NodeAvailability::Draining,
+                2 => NodeAvailability::Down,
+                other => bail!("snapshot corrupt: node availability tag {other}"),
+            };
+            let hold = ResourceVec::restore_bin(r)?;
+            let n_allocs = r.seq()?;
+            let mut allocations = Vec::with_capacity(n_allocs);
+            for _ in 0..n_allocs {
+                let job = JobId(r.u32()?);
+                let demand = ResourceVec::restore_bin(r)?;
+                if location.insert(job, id).is_some() {
+                    bail!("snapshot corrupt: {job} allocated on two nodes");
+                }
+                allocations.push((job, demand));
+            }
+            nodes.push(Node { id, capacity, free, availability, hold, allocations });
+        }
+        let index = FreeIndex::new(&nodes);
+        let max_capacity = nodes.iter().fold(ResourceVec::ZERO, |acc, n| acc.max(&n.capacity));
+        let total_capacity = nodes.iter().fold(ResourceVec::ZERO, |acc, n| acc + n.capacity);
+        let cluster = Cluster { nodes, location, index, max_capacity, total_capacity };
+        if let Err(e) = cluster.check_invariants() {
+            bail!("snapshot corrupt: restored cluster fails invariants: {e}");
+        }
+        Ok(cluster)
     }
 
     /// Invariant check used by tests and the simulator's debug mode:

@@ -22,7 +22,9 @@
 //! O(1): nothing needs touching until the next transition settles it.
 
 use crate::resources::ResourceVec;
+use crate::util::bin::{BinReader, BinWriter};
 use crate::Minutes;
+use anyhow::bail;
 use std::fmt;
 
 /// Opaque job identifier (dense, assigned by the workload generator in
@@ -79,6 +81,25 @@ impl JobClass {
     }
 }
 
+impl JobClass {
+    /// Stable one-byte snapshot tag.
+    pub(crate) fn tag(self) -> u8 {
+        match self {
+            JobClass::Te => 0,
+            JobClass::Be => 1,
+        }
+    }
+
+    /// Inverse of [`JobClass::tag`]; any other byte is corruption.
+    pub(crate) fn from_tag(t: u8) -> anyhow::Result<Self> {
+        match t {
+            0 => Ok(JobClass::Te),
+            1 => Ok(JobClass::Be),
+            other => bail!("snapshot corrupt: job class tag {other}"),
+        }
+    }
+}
+
 impl fmt::Display for JobClass {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.as_str())
@@ -127,6 +148,30 @@ impl JobSpec {
     pub fn with_tenant(mut self, tenant: TenantId) -> Self {
         self.tenant = tenant;
         self
+    }
+
+    /// Serialize for a snapshot.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.u32(self.id.0);
+        w.u8(self.class.tag());
+        self.demand.snapshot_bin(w);
+        w.u64(self.submit);
+        w.u64(self.exec_time);
+        w.u64(self.grace_period);
+        w.u32(self.tenant.0);
+    }
+
+    /// Rebuild a spec written by [`JobSpec::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        Ok(JobSpec {
+            id: JobId(r.u32()?),
+            class: JobClass::from_tag(r.u8()?)?,
+            demand: ResourceVec::restore_bin(r)?,
+            submit: r.u64()?,
+            exec_time: r.u64()?,
+            grace_period: r.u64()?,
+            tenant: TenantId(r.u32()?),
+        })
     }
 }
 
@@ -434,6 +479,83 @@ impl Job {
             Some(fin) => (fin - self.spec.submit) as f64 / self.spec.exec_time as f64,
             None => 1.0 + self.waiting as f64 / self.spec.exec_time as f64,
         }
+    }
+
+    /// Serialize the full runtime record (spec + lifecycle counters) for a
+    /// snapshot. The lazily-accounted counters travel exactly as stored —
+    /// deliberately stale relative to `synced_at`, like the live struct.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        self.spec.snapshot_bin(w);
+        w.u8(match self.state {
+            JobState::Pending => 0,
+            JobState::Running => 1,
+            JobState::Draining => 2,
+            JobState::Done => 3,
+            JobState::Cancelled => 4,
+        });
+        w.u64(self.remaining);
+        w.u64(self.grace_left);
+        match self.node {
+            Some(n) => {
+                w.bool(true);
+                w.u32(n.0);
+            }
+            None => w.bool(false),
+        }
+        w.u32(self.preemptions);
+        w.u64(self.waiting);
+        w.opt_u64(self.last_vacated);
+        w.seq(self.resched_intervals.len());
+        for &iv in &self.resched_intervals {
+            w.u64(iv);
+        }
+        w.opt_u64(self.first_start);
+        w.opt_u64(self.finished_at);
+        w.opt_u64(self.cancelled_at);
+        w.u32(self.evictions);
+        w.u64(self.synced_at);
+        w.bool(self.drain_progress);
+    }
+
+    /// Rebuild a job written by [`Job::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        let spec = JobSpec::restore_bin(r)?;
+        let state = match r.u8()? {
+            0 => JobState::Pending,
+            1 => JobState::Running,
+            2 => JobState::Draining,
+            3 => JobState::Done,
+            4 => JobState::Cancelled,
+            other => bail!("snapshot corrupt: job state tag {other}"),
+        };
+        let remaining = r.u64()?;
+        let grace_left = r.u64()?;
+        let node = if r.bool()? { Some(crate::cluster::NodeId(r.u32()?)) } else { None };
+        let preemptions = r.u32()?;
+        let waiting = r.u64()?;
+        let last_vacated = r.opt_u64()?;
+        let n = r.seq()?;
+        let mut resched_intervals = Vec::with_capacity(n);
+        for _ in 0..n {
+            resched_intervals.push(r.u64()?);
+        }
+        Ok(Job {
+            spec,
+            state,
+            remaining,
+            grace_left,
+            node,
+            preemptions,
+            waiting,
+            last_vacated,
+            resched_intervals,
+            first_start: r.opt_u64()?,
+            finished_at: r.opt_u64()?,
+            cancelled_at: r.opt_u64()?,
+            evictions: r.u32()?,
+            synced_at: r.u64()?,
+            drain_progress: r.bool()?,
+        })
     }
 }
 

@@ -36,7 +36,9 @@
 
 use crate::job::{Job, JobId, TenantId};
 use crate::resources::ResourceVec;
+use crate::util::bin::{BinReader, BinWriter};
 use crate::Minutes;
+use anyhow::bail;
 
 const ABSENT: u32 = u32::MAX;
 /// Sentinel for "was resident, has been retired" — distinct from `ABSENT`
@@ -238,6 +240,107 @@ impl JobTable {
     /// insert/retire sequence, *not* id order).
     pub fn iter(&self) -> impl Iterator<Item = &Job> {
         self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    /// Serialize the slab exactly — slot contents (including which slots
+    /// are free), the free-list LIFO order, the `slot_of` map with its
+    /// `ABSENT`/`RETIRED` sentinels, the SoA columns, and the counters.
+    /// Slot indices are part of the behavioural state: iteration order and
+    /// slot-reuse order both feed scheduling determinism, so a restored
+    /// table must reproduce them bit-for-bit.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.seq(self.slots.len());
+        for slot in &self.slots {
+            match slot {
+                Some(job) => {
+                    w.bool(true);
+                    job.snapshot_bin(w);
+                }
+                None => w.bool(false),
+            }
+        }
+        w.seq(self.free.len());
+        for &f in &self.free {
+            w.u32(f);
+        }
+        w.seq(self.slot_of.len());
+        for &s in &self.slot_of {
+            w.u32(s);
+        }
+        w.seq(self.epochs.len());
+        for &e in &self.epochs {
+            w.u64(e);
+        }
+        w.seq(self.tenants.len());
+        for t in &self.tenants {
+            w.u32(t.0);
+        }
+        w.seq(self.demands.len());
+        for d in &self.demands {
+            d.snapshot_bin(w);
+        }
+        w.usize(self.live);
+        w.usize(self.peak_live);
+        w.u64(self.inserted);
+    }
+
+    /// Rebuild a table written by [`JobTable::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        let n_slots = r.seq()?;
+        let mut slots = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            if r.bool()? {
+                slots.push(Some(Job::restore_bin(r)?));
+            } else {
+                slots.push(None);
+            }
+        }
+        let n = r.seq()?;
+        let mut free = Vec::with_capacity(n);
+        for _ in 0..n {
+            free.push(r.u32()?);
+        }
+        let n = r.seq()?;
+        let mut slot_of = Vec::with_capacity(n);
+        for _ in 0..n {
+            slot_of.push(r.u32()?);
+        }
+        let n = r.seq()?;
+        let mut epochs = Vec::with_capacity(n);
+        for _ in 0..n {
+            epochs.push(r.u64()?);
+        }
+        let n = r.seq()?;
+        let mut tenants = Vec::with_capacity(n);
+        for _ in 0..n {
+            tenants.push(TenantId(r.u32()?));
+        }
+        let n = r.seq()?;
+        let mut demands = Vec::with_capacity(n);
+        for _ in 0..n {
+            demands.push(ResourceVec::restore_bin(r)?);
+        }
+        let live = r.usize()?;
+        let peak_live = r.usize()?;
+        let inserted = r.u64()?;
+        if epochs.len() != n_slots || tenants.len() != n_slots || demands.len() != n_slots {
+            bail!("snapshot corrupt: job-table columns do not match the slab");
+        }
+        let resident = slots.iter().filter(|s| s.is_some()).count();
+        if resident != live || free.len() + live != n_slots {
+            bail!("snapshot corrupt: job-table free list / live count mismatch");
+        }
+        Ok(JobTable {
+            slots,
+            free,
+            slot_of,
+            epochs,
+            tenants,
+            demands,
+            live,
+            peak_live,
+            inserted,
+        })
     }
 }
 

@@ -58,6 +58,7 @@ pub mod queue;
 pub mod resources;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod sweep;
@@ -80,8 +81,9 @@ pub mod prelude {
     };
     pub use crate::sched::policy::PolicyKind;
     pub use crate::sched::predict::{EstimatorKind, RuntimeEstimator, SharedEstimator};
+    pub use crate::serve::{AttackConfig, AttackReport, ServeConfig, ServeOutcome, ServeStats};
     pub use crate::sim::scenario::ScenarioScript;
-    pub use crate::sim::{SimConfig, SimEngine, SimResult, Simulator};
+    pub use crate::sim::{SimConfig, SimEngine, SimResult, SimSession, Simulator};
     pub use crate::stats::rng::Pcg64;
     pub use crate::stats::sketch::QuantileSketch;
     pub use crate::sweep::{SweepResult, SweepSpec};

@@ -150,6 +150,20 @@ impl LiveReport {
         Some((head, tail))
     }
 
+    /// The run's scheduler events in the exact JSONL line format the
+    /// wire service ([`crate::serve`]) streams to subscribers and
+    /// `--events-out` writes to disk — one line per event. A live run, a
+    /// batch simulation, and a `serve` session of the same workload can
+    /// therefore be diffed line by line.
+    pub fn events_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.sched_events {
+            out.push_str(&crate::sched::control::event_jsonl_line(ev));
+            out.push('\n');
+        }
+        out
+    }
+
     pub fn to_json(&self) -> Json {
         let mut per_job: Vec<Json> = Vec::new();
         for r in &self.records {

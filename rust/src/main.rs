@@ -16,6 +16,9 @@
 //! fitgpp simulate --policy psrtf --estimator ewma:alpha=0.2   # prediction-aware SRTF
 //! fitgpp sweep --policies srtf,psrtf,fitgpp_pr:s=4,p=1 --estimators sensitivity
 //! fitgpp live     --policy fitgpp:s=4,p=1 --jobs 12 --nodes 2
+//! fitgpp serve    --uds /tmp/fitgpp.sock --tick-ms 5 --snapshot-dir snaps --snapshot-every 100
+//! fitgpp serve    --uds /tmp/fitgpp.sock --restore snaps   # continue from the latest snapshot
+//! fitgpp attack   --uds /tmp/fitgpp.sock --clients 256 --jobs 20000
 //! fitgpp config   --dump                           # print default config JSON
 //! ```
 
@@ -28,6 +31,7 @@ use fitgpp::sched::admission::DisciplineKind;
 use fitgpp::sched::control::{EventSubscriber, JsonlErrorFlag, JsonlEventLog};
 use fitgpp::sched::policy::PolicyKind;
 use fitgpp::sched::predict::EstimatorKind;
+use fitgpp::serve::{AttackConfig, ServeConfig};
 use fitgpp::sim::scenario::ScenarioScript;
 use fitgpp::sim::{SimConfig, SimEngine, SimResult, Simulator};
 use fitgpp::sweep::{compare_on, SweepSpec};
@@ -39,7 +43,7 @@ use fitgpp::workload::{
     Workload,
 };
 use std::io::BufWriter;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 fn main() {
@@ -63,6 +67,8 @@ fn run() -> Result<()> {
         "generate" => generate(argv),
         "replay" => replay(argv),
         "live" => live(argv),
+        "serve" => serve(argv),
+        "attack" => attack(argv),
         "config" => config_cmd(argv),
         "help" | "--help" | "-h" => {
             print_help();
@@ -85,6 +91,8 @@ fn print_help() {
          \x20 generate   write a synthetic workload as a CSV trace\n\
          \x20 replay     replay a CSV trace under a policy (--stream for O(live-set) memory)\n\
          \x20 live       drive real PJRT training jobs under the scheduler\n\
+         \x20 serve      expose the control plane as a JSONL wire service (TCP / unix socket)\n\
+         \x20 attack     replay a workload against a live serve instance as closed-loop clients\n\
          \x20 config     print the default experiment config JSON\n\n\
          Run `fitgpp <subcommand> --help` for options."
     );
@@ -706,6 +714,208 @@ fn live(argv: Vec<String>) -> Result<()> {
     }
     if let Some(p) = args.get("json-out") {
         std::fs::write(p, report.to_json().to_pretty())?;
+    }
+    Ok(())
+}
+
+/// Build the simulation config a `serve` instance runs (and must rebuild
+/// identically when restoring a snapshot — the snapshot pins a
+/// fingerprint of it, so pass the same flags to the restoring process).
+fn serve_sim_config(args: &fitgpp::util::cli::Args) -> Result<SimConfig> {
+    let policy = parse_policy(args.get_or("policy", "fitgpp:s=4,p=1"))?;
+    let mut cfg = SimConfig::new(
+        ClusterSpec::homogeneous(
+            args.get_usize("nodes", 84),
+            fitgpp::resources::ResourceVec::pfn_node(),
+        ),
+        policy,
+    );
+    cfg.seed = args.get_u64("seed", 7);
+    cfg.engine = match args.get_or("engine", "event-horizon") {
+        "event-horizon" => SimEngine::EventHorizon,
+        "per-minute" => SimEngine::PerMinute,
+        other => bail!("unknown --engine {other:?}"),
+    };
+    cfg.scenario = load_scenario(args)?;
+    apply_discipline(&mut cfg, args)?;
+    apply_estimator(&mut cfg, args)?;
+    Ok(cfg)
+}
+
+/// The workload a `serve`/`attack` run replays: `--trace <csv>` when
+/// given, otherwise `--jobs` §4.2 synthetic jobs (0 = empty — a serve
+/// instance fed purely over the wire).
+fn serve_workload(args: &fitgpp::util::cli::Args, default_jobs: usize) -> Result<Workload> {
+    if let Some(path) = args.get("trace") {
+        return Trace::read_csv(Path::new(path));
+    }
+    let jobs = args.get_usize("jobs", default_jobs);
+    if jobs == 0 {
+        return Ok(Workload::new(Vec::new()));
+    }
+    Ok(SyntheticWorkload::paper_section_4_2(args.get_u64("seed", 7))
+        .with_cluster(ClusterSpec::homogeneous(
+            args.get_usize("nodes", 84),
+            fitgpp::resources::ResourceVec::pfn_node(),
+        ))
+        .with_num_jobs(jobs)
+        .with_te_fraction(args.get_f64("te-fraction", 0.3))
+        .with_target_load(args.get_f64("load", 2.0))
+        .with_gp_scale(args.get_f64("gp-scale", 1.0))
+        .generate())
+}
+
+fn serve(argv: Vec<String>) -> Result<()> {
+    let cli = estimator_cli(tenant_cli(
+        common_cli("fitgpp serve", "expose the control plane as a JSONL wire service")
+            .opt("tcp", None, "TCP listen address, e.g. 127.0.0.1:7700")
+            .opt("uds", None, "unix-domain socket path to listen on")
+            .opt("tick-ms", Some("0"), "wall milliseconds per simulated minute (0 = free-run)")
+            .opt("queue-cap", Some("1024"), "per-connection outbound queue bound, in lines (slow consumers get 'lagged' notices)")
+            .opt("snapshot-dir", None, "write auto/final snapshots into this directory")
+            .opt("snapshot-every", Some("0"), "auto-snapshot period in virtual minutes (0 = off)")
+            .opt("restore", None, "restore from this snapshot file — or the latest *.snap in this directory")
+            .opt("scenario", None, "JSON scenario file replayed against the served run")
+            .flag("exit-when-done", "exit when the workload drains instead of parking for wire traffic"),
+    ));
+    let args = parse_or_exit(&cli, argv);
+    let sim = serve_sim_config(&args)?;
+    let mut wl = serve_workload(&args, 0)?;
+    wl.assign_tenants(&tenant_assigner(&args)?);
+    let mut cfg = ServeConfig::new(sim);
+    cfg.tcp = args.get("tcp").map(String::from);
+    cfg.uds = args.get("uds").map(PathBuf::from);
+    if cfg.tcp.is_none() && cfg.uds.is_none() {
+        bail!("serve needs --tcp and/or --uds to listen on");
+    }
+    cfg.tick_ms = args.get_u64("tick-ms", 0);
+    cfg.queue_cap = args.get_usize("queue-cap", 1024);
+    cfg.snapshot_dir = args.get("snapshot-dir").map(PathBuf::from);
+    cfg.snapshot_every = args.get_u64("snapshot-every", 0);
+    cfg.exit_when_done = args.has("exit-when-done");
+    if let Some(raw) = args.get("restore") {
+        let p = PathBuf::from(raw);
+        let p = if p.is_dir() {
+            fitgpp::serve::snapshot::latest_in(&p)?
+                .with_context(|| format!("no *.snap snapshot found in {raw}"))?
+        } else {
+            p
+        };
+        cfg.restore_from = Some(p);
+    }
+    if !wl.is_empty() {
+        eprintln!(
+            "serving {} preloaded jobs ({:.1}% TE), span {} min",
+            wl.len(),
+            wl.te_fraction() * 100.0,
+            wl.submit_span()
+        );
+    }
+    let t0 = Instant::now();
+    let outcome = fitgpp::serve::server::run(cfg, &mut WorkloadSource::new(&wl))?;
+    println!("{}", outcome.result.summary_table());
+    report_tenants(&outcome.result);
+    report_cancellations(&outcome.result);
+    println!("{}", fitgpp::serve::conservation_line(&outcome.result));
+    let s = &outcome.stats;
+    println!(
+        "serve: {} connections, {} requests, {} events sent, {} dropped (lagged), {} snapshots, {:.1}s wall{}",
+        s.connections,
+        s.requests,
+        s.events_sent,
+        s.events_dropped,
+        s.snapshots,
+        t0.elapsed().as_secs_f64(),
+        if outcome.stopped { " (stopped by signal/shutdown)" } else { "" }
+    );
+    if let Some(p) = args.get("json-out") {
+        std::fs::write(p, outcome.result.to_json().to_pretty())?;
+        eprintln!("wrote {p}");
+    }
+    Ok(())
+}
+
+fn attack(argv: Vec<String>) -> Result<()> {
+    let cli = common_cli(
+        "fitgpp attack",
+        "replay a workload against a live serve instance as concurrent closed-loop wire clients",
+    )
+    .opt("tcp", None, "TCP address of the server")
+    .opt("uds", None, "unix-domain socket path of the server")
+    .opt("clients", Some("64"), "concurrent closed-loop client connections")
+    .opt("think-ms", Some("0"), "wall-clock think time between a finish and the next submit")
+    .opt("speed", Some("0"), "wall ms per virtual submit minute (0 = as fast as the loop allows)")
+    .opt("id-base", Some("0"), "offset added to every replayed job id")
+    .opt("timeout-ms", Some("60000"), "per-wait timeout before a client gives up on an ack/finish")
+    .opt("max-jobs", Some("0"), "cap the replayed job count (0 = the whole workload)")
+    .opt("trace", None, "replay this CSV trace instead of the synthetic workload")
+    .flag("closed-loop", "drain a closed-loop trial-and-error generator instead (--users/--trials)")
+    .opt("users", Some("64"), "closed-loop: concurrent users")
+    .opt("trials", Some("32"), "closed-loop: trials per user")
+    .flag("open-loop", "fire submits without waiting for each job's finished event");
+    let args = parse_or_exit(&cli, argv);
+    let limit = match args.get_usize("max-jobs", 0) {
+        0 => usize::MAX,
+        n => n,
+    };
+    let specs = if args.has("closed-loop") {
+        let users = args.get_usize("users", 64);
+        let trials = args.get_usize("trials", 32);
+        if users == 0 || trials == 0 {
+            bail!("--users and --trials must be positive");
+        }
+        let params = ClosedLoopParams::demo(users, trials as u32);
+        let mut src = ClosedLoopSource::new(params, args.get_u64("seed", 7));
+        fitgpp::serve::attack::drain_source(&mut src, limit)
+    } else {
+        let wl = serve_workload(&args, 256)?;
+        let mut src = WorkloadSource::new(&wl);
+        fitgpp::serve::attack::drain_source(&mut src, limit)
+    };
+    if specs.is_empty() {
+        bail!("nothing to replay: the workload drained to zero jobs");
+    }
+    let mut cfg = AttackConfig::new();
+    cfg.tcp = args.get("tcp").map(String::from);
+    cfg.uds = args.get("uds").map(PathBuf::from);
+    if cfg.tcp.is_none() && cfg.uds.is_none() {
+        bail!("attack needs --tcp or --uds to aim at");
+    }
+    cfg.clients = args.get_usize("clients", 64);
+    cfg.think_ms = args.get_u64("think-ms", 0);
+    cfg.speed_ms_per_minute = args.get_u64("speed", 0);
+    let id_base = args.get_u64("id-base", 0);
+    if id_base > u32::MAX as u64 {
+        bail!("--id-base must fit in 32 bits");
+    }
+    cfg.id_base = id_base as u32;
+    cfg.await_finish = !args.has("open-loop");
+    cfg.timeout_ms = args.get_u64("timeout-ms", 60_000);
+    eprintln!(
+        "attacking with {} clients x {} jobs ({})",
+        cfg.clients,
+        specs.len(),
+        if cfg.await_finish { "closed loop" } else { "open loop" }
+    );
+    let report = fitgpp::serve::attack::run(&cfg, specs)?;
+    println!("{}", report.to_json_line());
+    println!(
+        "attack: {} submitted, {} acked, {} finished, {} lagged notices, {} timeouts, {} errors, {} disconnects in {:.1}s",
+        report.submitted,
+        report.acked,
+        report.finished_seen,
+        report.lagged_notices,
+        report.timeouts,
+        report.errors,
+        report.disconnects,
+        report.wall_ms as f64 / 1000.0
+    );
+    if let Some(p) = args.get("json-out") {
+        std::fs::write(p, report.to_json_line())?;
+        eprintln!("wrote {p}");
+    }
+    if report.disconnects > 0 {
+        bail!("{} attack clients lost their connection", report.disconnects);
     }
     Ok(())
 }

@@ -16,6 +16,7 @@ use crate::job::JobClass;
 use crate::sim::{JobRecord, SimResult};
 use crate::stats::sketch::QuantileSketch;
 use crate::stats::summary::{percentile_sorted, percentiles, sort_ascending};
+use crate::util::bin::{BinReader, BinWriter};
 use crate::util::json::Json;
 use crate::util::table::{sig3, Table};
 use std::collections::BTreeMap;
@@ -263,6 +264,32 @@ impl TenantMetrics {
         self.completed.total() + self.unfinished
     }
 
+    /// Serialize this tenant slice for a snapshot.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        self.slowdown.te.snapshot_bin(w);
+        self.slowdown.be.snapshot_bin(w);
+        w.u64(self.completed.te);
+        w.u64(self.completed.be);
+        w.u64(self.cancelled.te);
+        w.u64(self.cancelled.be);
+        w.u64(self.preempted);
+        w.u64(self.unfinished);
+    }
+
+    /// Rebuild a slice written by [`TenantMetrics::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        Ok(TenantMetrics {
+            slowdown: ClassKeyed {
+                te: QuantileSketch::restore_bin(r)?,
+                be: QuantileSketch::restore_bin(r)?,
+            },
+            completed: ClassKeyed { te: r.u64()?, be: r.u64()? },
+            cancelled: ClassKeyed { te: r.u64()?, be: r.u64()? },
+            preempted: r.u64()?,
+            unfinished: r.u64()?,
+        })
+    }
+
     /// Machine-readable dump (one entry of the JSON `tenants` object).
     pub fn to_json(&self) -> Json {
         let r = self.slowdown_report();
@@ -417,6 +444,59 @@ impl StreamingMetrics {
             ),
             ("tenants", self.tenants_json()),
         ])
+    }
+
+    /// Serialize the full sink for a snapshot (sketches travel bit-exact,
+    /// so a restored run's reports match the uninterrupted run's exactly).
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        self.slowdown.te.snapshot_bin(w);
+        self.slowdown.be.snapshot_bin(w);
+        self.intervals.snapshot_bin(w);
+        w.u64(self.jobs_seen);
+        w.u64(self.completed);
+        w.u64(self.unfinished);
+        for h in &self.preempt_hist {
+            w.u64(*h);
+        }
+        w.u64(self.preempted);
+        w.u64(self.cancelled.te);
+        w.u64(self.cancelled.be);
+        w.seq(self.tenants.len());
+        for (t, m) in &self.tenants {
+            w.u32(*t);
+            m.snapshot_bin(w);
+        }
+    }
+
+    /// Rebuild a sink written by [`StreamingMetrics::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        let slowdown = ClassKeyed {
+            te: QuantileSketch::restore_bin(r)?,
+            be: QuantileSketch::restore_bin(r)?,
+        };
+        let intervals = QuantileSketch::restore_bin(r)?;
+        let jobs_seen = r.u64()?;
+        let completed = r.u64()?;
+        let unfinished = r.u64()?;
+        let preempt_hist = [r.u64()?, r.u64()?, r.u64()?];
+        let preempted = r.u64()?;
+        let cancelled = ClassKeyed { te: r.u64()?, be: r.u64()? };
+        let mut tenants = BTreeMap::new();
+        for _ in 0..r.seq()? {
+            let t = r.u32()?;
+            tenants.insert(t, TenantMetrics::restore_bin(r)?);
+        }
+        Ok(StreamingMetrics {
+            slowdown,
+            intervals,
+            jobs_seen,
+            completed,
+            unfinished,
+            preempt_hist,
+            preempted,
+            cancelled,
+            tenants,
+        })
     }
 
     /// The per-tenant map as a JSON object keyed by tenant id.
@@ -600,6 +680,49 @@ mod tests {
         let j = sink.to_json().to_pretty();
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("tenants").get("1").get("completed").as_u64(), Some(2));
+    }
+
+    #[test]
+    fn streaming_metrics_snapshot_round_trips() {
+        use crate::job::{JobId, TenantId};
+        use crate::resources::ResourceVec;
+        let rec = |id: u32, class: JobClass, tenant: u32, finished: bool| JobRecord {
+            id: JobId(id),
+            class,
+            demand: ResourceVec::new(1.0, 1.0, 0.0),
+            submit: 0,
+            exec_time: 10,
+            grace_period: 0,
+            first_start: Some(0),
+            finished_at: if finished { Some(10) } else { None },
+            preemptions: (id % 4),
+            evictions: 0,
+            resched_intervals: vec![3, 7],
+            slowdown: 1.0 + id as f64 * 0.13,
+            cancelled: false,
+            tenant: TenantId(tenant),
+        };
+        let mut sink = StreamingMetrics::new();
+        for i in 0..25u32 {
+            sink.observe(&rec(i, if i % 3 == 0 { JobClass::Te } else { JobClass::Be }, i % 3, i % 5 != 0));
+        }
+        let mut cancelled = rec(99, JobClass::Te, 1, false);
+        cancelled.cancelled = true;
+        sink.observe_cancelled(&cancelled);
+
+        let mut w = BinWriter::new();
+        sink.snapshot_bin(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        let back = StreamingMetrics::restore_bin(&mut r).unwrap();
+        r.expect_end().unwrap();
+        // PartialEq covers every field including the sketches.
+        assert_eq!(back, sink);
+        assert_eq!(
+            back.slowdown_report().be.p95.to_bits(),
+            sink.slowdown_report().be.p95.to_bits(),
+            "sketch percentiles are bit-exact"
+        );
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! directly — it is per-arrival, so there is no head to discipline.
 
 use crate::job::JobId;
+use crate::util::bin::{BinReader, BinWriter};
 use std::collections::VecDeque;
 
 /// FIFO queue over job ids. Thin wrapper so the re-insertion semantics are
@@ -75,6 +76,25 @@ impl JobQueue {
     /// discipline's backfill scan walks the queue by index.
     pub fn get(&self, i: usize) -> Option<JobId> {
         self.q.get(i).copied()
+    }
+
+    /// Serialize the queue in order (head first) for a snapshot.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.seq(self.q.len());
+        for id in &self.q {
+            w.u32(id.0);
+        }
+    }
+
+    /// Rebuild a queue written by [`JobQueue::snapshot_bin`], preserving
+    /// order exactly (including jobs that were re-inserted at the head).
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        let n = r.seq()?;
+        let mut q = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            q.push_back(JobId(r.u32()?));
+        }
+        Ok(JobQueue { q })
     }
 
     /// Remove a specific job (TE-lane admission is per-arrival: a TE job

@@ -108,6 +108,20 @@ impl ResourceVec {
         ResourceVec::new(self.cpu * k, self.ram_gb * k, self.gpu * k)
     }
 
+    /// Serialize as three raw-bit `f64`s for a snapshot. `Node::release`
+    /// snaps `free` back to capacity within a tolerance, so free vectors
+    /// must travel bit-exact rather than be recomputed on restore.
+    pub fn snapshot_bin(&self, w: &mut crate::util::bin::BinWriter) {
+        w.f64(self.cpu);
+        w.f64(self.ram_gb);
+        w.f64(self.gpu);
+    }
+
+    /// Rebuild a vector written by [`ResourceVec::snapshot_bin`].
+    pub fn restore_bin(r: &mut crate::util::bin::BinReader) -> anyhow::Result<Self> {
+        Ok(ResourceVec::new(r.f64()?, r.f64()?, r.f64()?))
+    }
+
     /// The ratio `self / capacity` on the most-loaded axis — used for the
     /// cluster-load calibration in the workload generator (§4.2 keeps the
     /// FIFO load at 2.0).

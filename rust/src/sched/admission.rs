@@ -66,6 +66,7 @@
 
 use crate::job::{JobId, TenantId};
 use crate::queue::JobQueue;
+use crate::util::bin::{BinReader, BinWriter};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::fmt;
@@ -185,6 +186,42 @@ impl TenantDirectory {
     pub fn set_quota(&mut self, tenant: TenantId, size: f64) {
         self.quotas.insert(tenant.0, size.max(0.0));
     }
+
+    /// Serialize weights, quotas, and the default quota for a snapshot.
+    /// Quota `f64`s travel bit-exact: a restored run must make the same
+    /// quota comparisons the uninterrupted run would.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.seq(self.weights.len());
+        for (t, wt) in &self.weights {
+            w.u32(*t);
+            w.u32(*wt);
+        }
+        w.seq(self.quotas.len());
+        for (t, q) in &self.quotas {
+            w.u32(*t);
+            w.f64(*q);
+        }
+        w.bool(self.default_quota.is_some());
+        if let Some(q) = self.default_quota {
+            w.f64(q);
+        }
+    }
+
+    /// Rebuild a directory written by [`TenantDirectory::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> Result<Self> {
+        let mut weights = BTreeMap::new();
+        for _ in 0..r.seq()? {
+            let t = r.u32()?;
+            weights.insert(t, r.u32()?);
+        }
+        let mut quotas = BTreeMap::new();
+        for _ in 0..r.seq()? {
+            let t = r.u32()?;
+            quotas.insert(t, r.f64()?);
+        }
+        let default_quota = if r.bool()? { Some(r.f64()?) } else { None };
+        Ok(TenantDirectory { weights, quotas, default_quota })
+    }
 }
 
 /// Per-tenant occupied Size (Eq. 1 `Size` of all Running + Draining
@@ -229,6 +266,30 @@ impl TenantUsage {
     /// Number of jobs currently occupying resources for the tenant.
     pub fn occupied_jobs(&self, tenant: TenantId) -> u32 {
         self.occupied.get(&tenant.0).map(|(_, n)| *n).unwrap_or(0)
+    }
+
+    /// Serialize the occupied-Size ledger for a snapshot. The accumulated
+    /// sizes travel bit-exact — recomputing them from the job table would
+    /// lose the add/sub round-off history quota decisions depend on.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.seq(self.occupied.len());
+        for (t, (size, n)) in &self.occupied {
+            w.u32(*t);
+            w.f64(*size);
+            w.u32(*n);
+        }
+    }
+
+    /// Rebuild a ledger written by [`TenantUsage::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> Result<Self> {
+        let mut occupied = BTreeMap::new();
+        for _ in 0..r.seq()? {
+            let t = r.u32()?;
+            let size = r.f64()?;
+            let n = r.u32()?;
+            occupied.insert(t, (size, n));
+        }
+        Ok(TenantUsage { occupied })
     }
 }
 
@@ -298,6 +359,17 @@ pub trait QueueDiscipline: fmt::Debug + Send {
     /// Report the outcome of the attempt on `id`. Persistent state may
     /// move only on [`AdmitOutcome::Placed`].
     fn report(&mut self, id: JobId, tenant: TenantId, outcome: AdmitOutcome, ctx: &AdmissionCtx);
+
+    /// Serialize *persistent* discipline state for a snapshot. Round-local
+    /// state is excluded: snapshots are taken at round boundaries, where
+    /// `begin_round` resets it anyway (the frozen-state contract).
+    fn snapshot_bin(&self, w: &mut BinWriter);
+
+    /// Restore state written by
+    /// [`snapshot_bin`](QueueDiscipline::snapshot_bin) into a discipline
+    /// freshly built from the same [`DisciplineKind`]. Round-local state is
+    /// reset.
+    fn restore_bin(&mut self, r: &mut BinReader) -> Result<()>;
 }
 
 // ---------------------------------------------------------------------
@@ -372,6 +444,20 @@ impl QueueDiscipline for Fifo {
         if outcome != AdmitOutcome::Placed {
             self.round_over = true;
         }
+    }
+
+    fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.u8(0);
+        self.q.snapshot_bin(w);
+    }
+
+    fn restore_bin(&mut self, r: &mut BinReader) -> Result<()> {
+        if r.u8()? != 0 {
+            bail!("snapshot corrupt: expected a fifo discipline");
+        }
+        self.q = JobQueue::restore_bin(r)?;
+        self.round_over = false;
+        Ok(())
     }
 }
 
@@ -537,6 +623,55 @@ impl QueueDiscipline for WeightedFair {
             }
         }
     }
+
+    fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.u8(1);
+        // Empty sub-queues are serialized too: known tenants shape the
+        // cyclic rotation order, so they are behavioural state.
+        w.seq(self.queues.len());
+        for (t, q) in &self.queues {
+            w.u32(*t);
+            q.snapshot_bin(w);
+        }
+        w.seq(self.tenant_of.len());
+        for (j, t) in &self.tenant_of {
+            w.u32(*j);
+            w.u32(*t);
+        }
+        w.u32(self.turn);
+        w.u32(self.served);
+        w.usize(self.len);
+    }
+
+    fn restore_bin(&mut self, r: &mut BinReader) -> Result<()> {
+        if r.u8()? != 1 {
+            bail!("snapshot corrupt: expected a weighted-fair discipline");
+        }
+        let mut queues = BTreeMap::new();
+        for _ in 0..r.seq()? {
+            let t = r.u32()?;
+            queues.insert(t, JobQueue::restore_bin(r)?);
+        }
+        let mut tenant_of = BTreeMap::new();
+        for _ in 0..r.seq()? {
+            let j = r.u32()?;
+            tenant_of.insert(j, r.u32()?);
+        }
+        let turn = r.u32()?;
+        let served = r.u32()?;
+        let len = r.usize()?;
+        if tenant_of.len() != len || queues.values().map(|q| q.len()).sum::<usize>() != len {
+            bail!("snapshot corrupt: weighted-fair queue bookkeeping mismatch");
+        }
+        self.queues = queues;
+        self.tenant_of = tenant_of;
+        self.turn = turn;
+        self.served = served;
+        self.len = len;
+        self.round_blocked.clear();
+        self.offered = None;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -652,6 +787,24 @@ impl QueueDiscipline for QuotaGate {
                 }
             }
         }
+    }
+
+    fn snapshot_bin(&self, w: &mut BinWriter) {
+        // `backfill` is config, rebuilt from the same `DisciplineKind` on
+        // restore; only the queue is state.
+        w.u8(2);
+        self.q.snapshot_bin(w);
+    }
+
+    fn restore_bin(&mut self, r: &mut BinReader) -> Result<()> {
+        if r.u8()? != 2 {
+            bail!("snapshot corrupt: expected a quota-gate discipline");
+        }
+        self.q = JobQueue::restore_bin(r)?;
+        self.pos = 0;
+        self.misses = 0;
+        self.round_over = false;
+        Ok(())
     }
 }
 
@@ -874,6 +1027,78 @@ mod tests {
         let placed = round(&mut d, &dir, &|id| TenantId(id.0), |_| AdmitOutcome::OverQuota);
         assert!(placed.is_empty());
         assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn discipline_snapshot_round_trip_preserves_candidate_order() {
+        for kind in [
+            DisciplineKind::Fifo,
+            DisciplineKind::WeightedFair,
+            DisciplineKind::QuotaGate { backfill: 4 },
+        ] {
+            let mut dir = TenantDirectory::default();
+            dir.set_weight(TenantId(0), 2);
+            let mut d = build_discipline(&kind);
+            for i in 0..4u32 {
+                d.submit(JobId(i), TenantId(i % 2));
+            }
+            d.reinsert_front(JobId(9), TenantId(1));
+            // Move persistent state (the weighted-fair turn) with one
+            // placed round before snapshotting.
+            let _ = round(&mut *d, &dir, &|id| TenantId(id.0 % 2), |id| {
+                if id == JobId(9) { AdmitOutcome::Placed } else { AdmitOutcome::NoFit }
+            });
+            let mut w = crate::util::bin::BinWriter::new();
+            d.snapshot_bin(&mut w);
+            let bytes = w.into_bytes();
+            let mut restored = build_discipline(&kind);
+            let mut r = crate::util::bin::BinReader::new(&bytes);
+            restored.restore_bin(&mut r).unwrap();
+            r.expect_end().unwrap();
+            assert_eq!(restored.len(), d.len(), "{kind:?}");
+            let seq = |d: &mut dyn QueueDiscipline| {
+                let mut seen = Vec::new();
+                round(d, &dir, &|id| TenantId(id.0 % 2), |id| {
+                    seen.push(id);
+                    AdmitOutcome::NoFit
+                });
+                seen
+            };
+            assert_eq!(seq(&mut *restored), seq(&mut *d), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn tenant_state_snapshot_round_trips() {
+        let mut dir = TenantDirectory::new(Some(1.5));
+        dir.set_weight(TenantId(2), 4);
+        dir.set_quota(TenantId(7), 0.25);
+        let mut w = crate::util::bin::BinWriter::new();
+        dir.snapshot_bin(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::util::bin::BinReader::new(&bytes);
+        let back = TenantDirectory::restore_bin(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(back.weight(TenantId(2)), 4);
+        assert_eq!(back.quota(TenantId(7)), Some(0.25));
+        assert_eq!(back.quota(TenantId(0)), Some(1.5), "default quota travels");
+
+        let mut usage = TenantUsage::default();
+        usage.add(TenantId(1), 0.1);
+        usage.add(TenantId(1), 0.2);
+        usage.add(TenantId(3), 0.7);
+        let mut w = crate::util::bin::BinWriter::new();
+        usage.snapshot_bin(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::util::bin::BinReader::new(&bytes);
+        let back = TenantUsage::restore_bin(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(
+            back.occupied_size(TenantId(1)).to_bits(),
+            usage.occupied_size(TenantId(1)).to_bits(),
+            "accumulated sizes are bit-exact"
+        );
+        assert_eq!(back.occupied_jobs(TenantId(3)), 1);
     }
 
     #[test]

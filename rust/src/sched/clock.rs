@@ -36,6 +36,7 @@
 
 use crate::job::JobId;
 use crate::job_table::JobTable;
+use crate::util::bin::{BinReader, BinWriter};
 use crate::Minutes;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -236,6 +237,71 @@ impl EventClock {
     /// True when no entries are held at all.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Serialize every heap for a snapshot. Entries are written in sorted
+    /// order (heap-internal layout is arbitrary, but entry tuples have a
+    /// total order, so the *multiset* fully determines future pop order) —
+    /// this makes the snapshot bytes themselves deterministic. Stale
+    /// (epoch-invalidated) entries are written verbatim: discarding them
+    /// here would need a `JobTable` and would change nothing observable,
+    /// since they are lazily dropped on either side of the snapshot.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        let mut entries: Vec<Entry> = self.completions.iter().map(|Reverse(e)| *e).collect();
+        entries.sort_unstable();
+        w.seq(entries.len());
+        for (at, id, epoch) in &entries {
+            w.u64(*at);
+            w.u32(*id);
+            w.u64(*epoch);
+        }
+        let mut entries: Vec<Entry> = self.grace_expiries.iter().map(|Reverse(e)| *e).collect();
+        entries.sort_unstable();
+        w.seq(entries.len());
+        for (at, id, epoch) in &entries {
+            w.u64(*at);
+            w.u32(*id);
+            w.u64(*epoch);
+        }
+        let mut arrivals: Vec<(Minutes, u32)> = self.arrivals.iter().map(|Reverse(e)| *e).collect();
+        arrivals.sort_unstable();
+        w.seq(arrivals.len());
+        for (at, id) in &arrivals {
+            w.u64(*at);
+            w.u32(*id);
+        }
+        let mut controls: Vec<Minutes> = self.controls.iter().map(|Reverse(m)| *m).collect();
+        controls.sort_unstable();
+        w.seq(controls.len());
+        for at in &controls {
+            w.u64(*at);
+        }
+    }
+
+    /// Rebuild a clock written by [`EventClock::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        let mut clock = EventClock::new();
+        let n = r.seq()?;
+        for _ in 0..n {
+            let entry = (r.u64()?, r.u32()?, r.u64()?);
+            clock.completions.push(Reverse(entry));
+        }
+        let n = r.seq()?;
+        for _ in 0..n {
+            let entry = (r.u64()?, r.u32()?, r.u64()?);
+            clock.grace_expiries.push(Reverse(entry));
+        }
+        let n = r.seq()?;
+        for _ in 0..n {
+            let entry = (r.u64()?, r.u32()?);
+            clock.arrivals.push(Reverse(entry));
+        }
+        let n = r.seq()?;
+        for _ in 0..n {
+            let at = r.u64()?;
+            clock.controls.push(Reverse(at));
+        }
+        Ok(clock)
     }
 }
 

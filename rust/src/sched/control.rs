@@ -54,8 +54,10 @@ use crate::metrics::StreamingMetrics;
 use crate::resources::ResourceVec;
 use crate::sched::{SchedConfig, Scheduler, TickStats};
 use crate::sim::JobRecord;
+use crate::util::bin::{BinReader, BinWriter};
 use crate::util::json::Json;
 use crate::Minutes;
+use std::fmt;
 use std::io::Write;
 use std::sync::{Arc, Mutex};
 
@@ -415,6 +417,15 @@ impl SchedulerEvent {
     }
 }
 
+/// The canonical one-line JSONL form of an event: the deterministic
+/// sorted-key JSON object, no trailing newline. Shared by
+/// [`JsonlEventLog`] and the wire protocol's event fan-out
+/// ([`crate::serve`]), so a byte comparison between a logged run and a
+/// served run's event stream is meaningful.
+pub fn event_jsonl_line(ev: &SchedulerEvent) -> String {
+    ev.to_json().to_string()
+}
+
 /// A consumer of the scheduler's event stream. Subscribers observe; they
 /// never mutate scheduler state, and they must be deterministic given the
 /// event sequence (the sequence itself is deterministic per
@@ -454,22 +465,66 @@ pub struct JsonlEventLog<W: Write> {
     error: JsonlErrorFlag,
 }
 
+/// Which event-log operation failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventLogOp {
+    /// Writing one event line.
+    Write,
+    /// Flushing buffered lines (at drop).
+    Flush,
+}
+
+impl fmt::Display for EventLogOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EventLogOp::Write => "write",
+            EventLogOp::Flush => "flush",
+        })
+    }
+}
+
+/// A typed event-log failure: which operation failed, how many complete
+/// lines made it out first, and the underlying I/O message. The same type
+/// reports wire-serializer write failures in [`crate::serve`], so a
+/// truncated log and a dropped connection surface identically.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EventLogError {
+    /// The failed operation.
+    pub op: EventLogOp,
+    /// Complete lines written before the failure.
+    pub lines: u64,
+    /// The underlying I/O error message.
+    pub message: String,
+}
+
+impl fmt::Display for EventLogError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "event log {} failed after {} lines: {}",
+            self.op, self.lines, self.message
+        )
+    }
+}
+
+impl std::error::Error for EventLogError {}
+
 /// Cloneable observer of a [`JsonlEventLog`]'s first write/flush error,
 /// readable after the log itself has been boxed into a controller and
 /// dropped.
 #[derive(Clone, Default)]
-pub struct JsonlErrorFlag(Arc<Mutex<Option<String>>>);
+pub struct JsonlErrorFlag(Arc<Mutex<Option<EventLogError>>>);
 
 impl JsonlErrorFlag {
     /// The first recorded error, if any.
-    pub fn get(&self) -> Option<String> {
+    pub fn get(&self) -> Option<EventLogError> {
         self.0.lock().unwrap().clone()
     }
 
-    fn set(&self, msg: String) {
+    fn set(&self, err: EventLogError) {
         let mut slot = self.0.lock().unwrap();
         if slot.is_none() {
-            *slot = Some(msg);
+            *slot = Some(err);
         }
     }
 }
@@ -487,7 +542,7 @@ impl<W: Write> JsonlEventLog<W> {
 
     /// The first write error, if any (logging stops at the first failure;
     /// the run itself continues).
-    pub fn error(&self) -> Option<String> {
+    pub fn error(&self) -> Option<EventLogError> {
         self.error.get()
     }
 
@@ -502,9 +557,13 @@ impl<W: Write> EventSubscriber for JsonlEventLog<W> {
         if self.error.get().is_some() {
             return;
         }
-        match writeln!(self.w, "{}", ev.to_json()) {
+        match writeln!(self.w, "{}", event_jsonl_line(ev)) {
             Ok(()) => self.lines += 1,
-            Err(e) => self.error.set(e.to_string()),
+            Err(e) => self.error.set(EventLogError {
+                op: EventLogOp::Write,
+                lines: self.lines,
+                message: e.to_string(),
+            }),
         }
     }
 }
@@ -514,7 +573,11 @@ impl<W: Write> Drop for JsonlEventLog<W> {
         // Surface buffered-writer flush failures (a BufWriter's own Drop
         // would swallow them).
         if let Err(e) = self.w.flush() {
-            self.error.set(format!("flush: {e}"));
+            self.error.set(EventLogError {
+                op: EventLogOp::Flush,
+                lines: self.lines,
+                message: e.to_string(),
+            });
         }
     }
 }
@@ -847,6 +910,34 @@ impl ClusterController {
     /// Tear down into the pieces result assembly needs.
     pub fn into_parts(self) -> (Scheduler, JobTable, StreamingMetrics) {
         (self.sched, self.jobs, self.metrics)
+    }
+
+    /// Serialize the controller's full state — job table, scheduler,
+    /// metrics sink — for a snapshot. Must be taken at a round boundary
+    /// (between `step` calls): cancellations applied since the previous
+    /// round are handed back by `step`, so the pending buffer is empty
+    /// there by construction.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        debug_assert!(
+            self.cancelled_buf.is_empty(),
+            "controller snapshot must be taken at a round boundary"
+        );
+        self.jobs.snapshot_bin(w);
+        self.sched.snapshot_bin(w);
+        self.metrics.snapshot_bin(w);
+    }
+
+    /// Restore state written by [`ClusterController::snapshot_bin`] into a
+    /// controller freshly built from the same spec and config. Attached
+    /// subscribers are kept as-is (the caller re-attaches its own); the
+    /// estimator subscription installed by [`ClusterController::new`]
+    /// observes the restored estimator state through its shared handle.
+    pub fn restore_bin(&mut self, r: &mut BinReader) -> anyhow::Result<()> {
+        self.jobs = JobTable::restore_bin(r)?;
+        self.sched.restore_bin(r, &self.jobs)?;
+        self.metrics = StreamingMetrics::restore_bin(r)?;
+        self.cancelled_buf.clear();
+        Ok(())
     }
 
     fn availability(&self, node: NodeId) -> Option<NodeAvailability> {

@@ -1111,6 +1111,130 @@ impl Scheduler {
         &self.victim_index
     }
 
+    /// Serialize the scheduler's run state for a snapshot. Taken at a
+    /// round boundary (between ticks), so round-scratch buffers and the
+    /// disciplines' round-local cursors are excluded by construction.
+    /// Derived structures — the victim index, the cluster's free-capacity
+    /// index — are rebuilt on restore, not written. Config (`cfg`, the
+    /// policy, estimator parameters) is also excluded: restore targets a
+    /// scheduler freshly built from the identical config.
+    pub fn snapshot_bin(&self, w: &mut crate::util::bin::BinWriter) {
+        self.cluster.snapshot_bin(w);
+        self.be_queue.snapshot_bin(w);
+        self.te_queue.snapshot_bin(w);
+        w.seq(self.reservations.len());
+        for r in &self.reservations {
+            w.u32(r.te.0);
+            w.u32(r.node.0);
+            r.hold.snapshot_bin(w);
+            w.seq(r.victims.len());
+            for v in &r.victims {
+                w.u32(v.0);
+            }
+        }
+        self.clock.snapshot_bin(w);
+        self.tenants.snapshot_bin(w);
+        // `active` order is behavioural: the due-event walk and swap_remove
+        // pattern depend on it.
+        w.seq(self.active.len());
+        for id in &self.active {
+            w.u32(id.0);
+        }
+        self.usage.snapshot_bin(w);
+        self.quota_ref.snapshot_bin(w);
+        w.seq(self.prev_skipped.len());
+        for id in &self.prev_skipped {
+            w.u32(*id);
+        }
+        let (state, inc) = self.rng.state_parts();
+        w.u64(state);
+        w.u64(inc);
+        self.estimator.snapshot_bin(w);
+        let s = &self.stats;
+        for c in [
+            s.preemption_signals,
+            s.fallback_plans,
+            s.plans,
+            s.placements,
+            s.completions,
+            s.te_no_preemption,
+            s.ticks,
+            s.replans,
+            s.fast_forwards,
+            s.fast_forwarded_ticks,
+            s.internal_errors,
+            s.admission_skips,
+        ] {
+            w.u64(c);
+        }
+    }
+
+    /// Restore state written by [`Scheduler::snapshot_bin`] into a
+    /// scheduler freshly built from the same cluster spec and config.
+    /// `jobs` must already hold the restored job table — the victim index
+    /// is rebuilt from it (and cross-checked against the incremental
+    /// invariants when [`Scheduler::paranoid`] is set).
+    pub fn restore_bin(
+        &mut self,
+        r: &mut crate::util::bin::BinReader,
+        jobs: &JobTable,
+    ) -> anyhow::Result<()> {
+        self.cluster = Cluster::restore_bin(r)?;
+        self.be_queue.restore_bin(r)?;
+        self.te_queue = JobQueue::restore_bin(r)?;
+        self.reservations.clear();
+        for _ in 0..r.seq()? {
+            let te = JobId(r.u32()?);
+            let node = NodeId(r.u32()?);
+            let hold = ResourceVec::restore_bin(r)?;
+            let mut victims = Vec::new();
+            for _ in 0..r.seq()? {
+                victims.push(JobId(r.u32()?));
+            }
+            self.reservations.push(Reservation { te, node, hold, victims });
+        }
+        self.clock = EventClock::restore_bin(r)?;
+        self.tenants = TenantDirectory::restore_bin(r)?;
+        self.active.clear();
+        for _ in 0..r.seq()? {
+            self.active.push(JobId(r.u32()?));
+        }
+        self.usage = TenantUsage::restore_bin(r)?;
+        self.quota_ref = ResourceVec::restore_bin(r)?;
+        self.prev_skipped.clear();
+        for _ in 0..r.seq()? {
+            self.prev_skipped.push(r.u32()?);
+        }
+        let state = r.u64()?;
+        let inc = r.u64()?;
+        self.rng = Pcg64::from_parts(state, inc);
+        self.estimator.restore_bin(r)?;
+        self.stats = SchedStats {
+            preemption_signals: r.u64()?,
+            fallback_plans: r.u64()?,
+            plans: r.u64()?,
+            placements: r.u64()?,
+            completions: r.u64()?,
+            te_no_preemption: r.u64()?,
+            ticks: r.u64()?,
+            replans: r.u64()?,
+            fast_forwards: r.u64()?,
+            fast_forwarded_ticks: r.u64()?,
+            internal_errors: r.u64()?,
+            admission_skips: r.u64()?,
+        };
+        // Derived state: rebuild the victim index from the restored
+        // cluster + job table (PR 8's paranoid cross-check validates the
+        // incremental invariants against exactly this rebuild).
+        self.victim_index = VictimIndex::build(&self.cluster, jobs);
+        if self.paranoid {
+            self.victim_index
+                .check_against(&self.cluster, jobs)
+                .map_err(|e| anyhow::anyhow!("snapshot corrupt: victim index rebuild: {e}"))?;
+        }
+        Ok(())
+    }
+
     /// Drop every reservation pinned to `node`, returning the TE jobs that
     /// owned them.
     fn drop_reservations_on(&mut self, node: NodeId) -> Vec<JobId> {

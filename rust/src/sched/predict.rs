@@ -49,6 +49,8 @@ use crate::sched::control::{EventSubscriber, SchedulerEvent};
 use crate::sim::JobRecord;
 use crate::stats::rng::Pcg64;
 use crate::stats::sketch::QuantileSketch;
+use crate::util::bin::{BinReader, BinWriter};
+use anyhow::bail;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
@@ -178,6 +180,17 @@ pub trait RuntimeEstimator: Send {
 
     /// Human-readable name (matches [`EstimatorKind::name`]).
     fn name(&self) -> String;
+
+    /// Serialize *learned* estimator state for a snapshot. Construction
+    /// parameters (`alpha`, `sigma`, the noise seed) are config, rebuilt
+    /// from the run config on restore; only observation-derived state and
+    /// counters are written.
+    fn snapshot_bin(&self, w: &mut BinWriter);
+
+    /// Restore state written by
+    /// [`snapshot_bin`](RuntimeEstimator::snapshot_bin) into an estimator
+    /// freshly built from the same [`EstimatorKind`].
+    fn restore_bin(&mut self, r: &mut BinReader) -> anyhow::Result<()>;
 }
 
 /// Perfect predictions: the declared execution time (the simulator's
@@ -202,6 +215,19 @@ impl RuntimeEstimator for Oracle {
 
     fn name(&self) -> String {
         EstimatorKind::Oracle.name()
+    }
+
+    fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.u8(0);
+        w.u64(self.updates);
+    }
+
+    fn restore_bin(&mut self, r: &mut BinReader) -> anyhow::Result<()> {
+        if r.u8()? != 0 {
+            bail!("snapshot corrupt: expected an oracle estimator");
+        }
+        self.updates = r.u64()?;
+        Ok(())
     }
 }
 
@@ -293,6 +319,44 @@ impl RuntimeEstimator for ClassEwma {
     fn name(&self) -> String {
         EstimatorKind::ClassEwma { alpha: self.alpha }.name()
     }
+
+    fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.u8(1);
+        w.seq(self.buckets.len());
+        for ((tenant, class), b) in &self.buckets {
+            w.u32(*tenant);
+            w.u8(match class {
+                JobClassKey::Te => 0,
+                JobClassKey::Be => 1,
+            });
+            w.f64(b.ewma);
+            w.u64(b.n);
+            b.sketch.snapshot_bin(w);
+        }
+        w.u64(self.updates);
+    }
+
+    fn restore_bin(&mut self, r: &mut BinReader) -> anyhow::Result<()> {
+        if r.u8()? != 1 {
+            bail!("snapshot corrupt: expected an ewma estimator");
+        }
+        let mut buckets = BTreeMap::new();
+        for _ in 0..r.seq()? {
+            let tenant = r.u32()?;
+            let class = match r.u8()? {
+                0 => JobClassKey::Te,
+                1 => JobClassKey::Be,
+                other => bail!("snapshot corrupt: job class tag {other}"),
+            };
+            let ewma = r.f64()?;
+            let n = r.u64()?;
+            let sketch = QuantileSketch::restore_bin(r)?;
+            buckets.insert((tenant, class), EwmaBucket { ewma, n, sketch });
+        }
+        self.buckets = buckets;
+        self.updates = r.u64()?;
+        Ok(())
+    }
 }
 
 /// Oracle × a seeded multiplicative log-normal error: the prediction for
@@ -344,6 +408,21 @@ impl RuntimeEstimator for Noisy {
 
     fn name(&self) -> String {
         EstimatorKind::Noisy { sigma: self.sigma }.name()
+    }
+
+    fn snapshot_bin(&self, w: &mut BinWriter) {
+        // The per-job error draw is a pure function of (seed, job id) —
+        // both config — so only the counter is state.
+        w.u8(2);
+        w.u64(self.updates);
+    }
+
+    fn restore_bin(&mut self, r: &mut BinReader) -> anyhow::Result<()> {
+        if r.u8()? != 2 {
+            bail!("snapshot corrupt: expected a noisy estimator");
+        }
+        self.updates = r.u64()?;
+        Ok(())
     }
 }
 
@@ -401,6 +480,19 @@ impl SharedEstimator {
     /// The wrapped estimator's name.
     pub fn name(&self) -> String {
         self.0.lock().unwrap().name()
+    }
+
+    /// Serialize the wrapped estimator's state for a snapshot.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        self.0.lock().unwrap().snapshot_bin(w);
+    }
+
+    /// Restore state written by [`SharedEstimator::snapshot_bin`]. Every
+    /// clone of this handle (the controller's event subscription, the
+    /// policies' prediction closure) sees the restored state — the `Arc`
+    /// is shared, not replaced.
+    pub fn restore_bin(&self, r: &mut BinReader) -> anyhow::Result<()> {
+        self.0.lock().unwrap().restore_bin(r)
     }
 }
 
@@ -532,6 +624,38 @@ mod tests {
         assert_ne!(a.predict_total(&s0).to_bits(), c.predict_total(&s0).to_bits());
         assert_ne!(a.predict_total(&s0).to_bits(), a.predict_total(&s1).to_bits());
         assert!(a.predict_total(&s0) > 0.0 && a.predict_total(&s0).is_finite());
+    }
+
+    #[test]
+    fn estimator_snapshot_round_trip_is_bit_exact() {
+        let kind = EstimatorKind::ClassEwma { alpha: 0.3 };
+        let est = SharedEstimator::new(&kind, 7);
+        for i in 0..40u32 {
+            est.observe(&record(i, if i % 3 == 0 { JobClass::Te } else { JobClass::Be },
+                1 + (i as u64 * 13) % 90, i % 4));
+        }
+        let mut w = BinWriter::new();
+        est.snapshot_bin(&mut w);
+        let bytes = w.into_bytes();
+        let restored = SharedEstimator::new(&kind, 7);
+        let mut r = BinReader::new(&bytes);
+        restored.restore_bin(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(restored.updates(), est.updates());
+        for id in 100..140u32 {
+            let s = spec(id, if id % 2 == 0 { JobClass::Te } else { JobClass::Be }, 55, id % 4);
+            assert_eq!(
+                restored.predict_total(&s).to_bits(),
+                est.predict_total(&s).to_bits(),
+                "job {id}"
+            );
+        }
+        // The continued streams agree too: fold one more record into both.
+        let extra = record(500, JobClass::Be, 33, 1);
+        est.observe(&extra);
+        restored.observe(&extra);
+        let s = spec(999, JobClass::Be, 70, 1);
+        assert_eq!(restored.predict_total(&s).to_bits(), est.predict_total(&s).to_bits());
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! The traffic frontend: replay an [`ArrivalSource`] against a live
+//! service as many concurrent closed-loop wire clients.
+//!
+//! `attack` is the load half of the `serve`/`attack` CLI pair. It drains
+//! a source into a concrete trace up front (feeding synthetic completion
+//! ticks to closed-loop generators so they keep producing), partitions
+//! the trace round-robin across `clients` connections, and then each
+//! client plays its slice as a closed loop over the wire:
+//!
+//! 1. wait until the spec's submit minute, scaled by
+//!    [`AttackConfig::speed_ms_per_minute`] of wall clock per virtual
+//!    minute (0 = as fast as the loop allows);
+//! 2. send the submit and wait for its ack;
+//! 3. with [`AttackConfig::await_finish`], keep reading until the
+//!    server's event stream reports that job finished — or the per-wait
+//!    timeout fires, which keeps a dropped event (the client was
+//!    `lagged`) from deadlocking the run;
+//! 4. think for [`AttackConfig::think_ms`], then loop.
+//!
+//! Every anomaly is counted, not thrown: disconnects, error lines,
+//! lagged notices, and finish-wait timeouts all land in the
+//! [`AttackReport`], so a load run always reports what actually happened
+//! on the wire.
+
+use crate::job::{JobClass, JobSpec};
+use crate::serve::wire;
+use crate::util::json::Json;
+use crate::workload::source::ArrivalSource;
+use anyhow::Context;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// How to aim the traffic generator.
+#[derive(Debug, Clone)]
+pub struct AttackConfig {
+    /// TCP address of the server, if attacking over TCP.
+    pub tcp: Option<String>,
+    /// Unix-domain socket path of the server, if attacking over UDS.
+    pub uds: Option<PathBuf>,
+    /// Concurrent closed-loop client connections.
+    pub clients: usize,
+    /// Wall-clock pause between a finish and the client's next submit.
+    pub think_ms: u64,
+    /// Wall-clock milliseconds per virtual submit minute; 0 fires each
+    /// submit as soon as the closed loop allows.
+    pub speed_ms_per_minute: u64,
+    /// Added to every replayed job id, so an attack can layer on top of
+    /// ids the server has already seen.
+    pub id_base: u32,
+    /// Wait for each job's `finished` event before the next submit.
+    pub await_finish: bool,
+    /// Per-wait read timeout; a closed loop whose finish event was
+    /// dropped by backpressure moves on instead of hanging.
+    pub timeout_ms: u64,
+}
+
+impl AttackConfig {
+    /// Attack defaults: 8 clients, no think time, free-run pacing,
+    /// closed-loop with a 60 s finish timeout.
+    pub fn new() -> Self {
+        AttackConfig {
+            tcp: None,
+            uds: None,
+            clients: 8,
+            think_ms: 0,
+            speed_ms_per_minute: 0,
+            id_base: 0,
+            await_finish: true,
+            timeout_ms: 60_000,
+        }
+    }
+}
+
+impl Default for AttackConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// What a finished attack saw on the wire, summed over all clients.
+#[derive(Debug, Clone, Default)]
+pub struct AttackReport {
+    /// Client connections that came up.
+    pub clients: usize,
+    /// Submit requests written.
+    pub submitted: u64,
+    /// Submit acks read back.
+    pub acked: u64,
+    /// `finished` events observed for this attack's own job ids.
+    pub finished_seen: u64,
+    /// `lagged` notices received (events the server dropped for us).
+    pub lagged_notices: u64,
+    /// `error` lines received.
+    pub errors: u64,
+    /// Finish-waits that hit the timeout instead of the event.
+    pub timeouts: u64,
+    /// Clients that lost their connection mid-run.
+    pub disconnects: u64,
+    /// Wall-clock duration of the whole attack.
+    pub wall_ms: u64,
+}
+
+impl AttackReport {
+    /// One machine-readable JSON line, for scripts and CI logs.
+    pub fn to_json_line(&self) -> String {
+        format!(
+            concat!(
+                r#"{{"clients":{},"submitted":{},"acked":{},"finished_seen":{},"#,
+                r#""lagged_notices":{},"errors":{},"timeouts":{},"disconnects":{},"wall_ms":{}}}"#
+            ),
+            self.clients,
+            self.submitted,
+            self.acked,
+            self.finished_seen,
+            self.lagged_notices,
+            self.errors,
+            self.timeouts,
+            self.disconnects,
+            self.wall_ms
+        )
+    }
+
+    fn absorb(&mut self, other: &AttackReport) {
+        self.submitted += other.submitted;
+        self.acked += other.acked;
+        self.finished_seen += other.finished_seen;
+        self.lagged_notices += other.lagged_notices;
+        self.errors += other.errors;
+        self.timeouts += other.timeouts;
+        self.disconnects += other.disconnects;
+    }
+}
+
+/// Materialize a source into a replayable trace, up to `limit` jobs.
+/// Closed-loop sources stall until they hear completions; each stall is
+/// answered by synthetically finishing the oldest not-yet-finished
+/// drained job, which linearizes the loop into a trace the wire clients
+/// can then close for real against the live server.
+pub fn drain_source(source: &mut dyn ArrivalSource, limit: usize) -> Vec<JobSpec> {
+    let mut specs: Vec<JobSpec> = Vec::new();
+    let mut fed = 0usize;
+    while specs.len() < limit {
+        match source.next_job() {
+            Some(spec) => specs.push(spec),
+            None => {
+                if source.done() || fed >= specs.len() {
+                    break;
+                }
+                let s = &specs[fed];
+                fed += 1;
+                let at = s.submit.saturating_add(s.exec_time);
+                source.on_job_finished(s.id, at);
+            }
+        }
+    }
+    specs
+}
+
+/// A connected stream we can split into buffered reader + writer halves,
+/// with a read timeout for the finish-wait fallback.
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(std::os::unix::net::UnixStream),
+}
+
+impl Conn {
+    fn open(cfg: &AttackConfig) -> anyhow::Result<Conn> {
+        if let Some(addr) = &cfg.tcp {
+            let s = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+            s.set_nodelay(true).ok();
+            s.set_read_timeout(Some(Duration::from_millis(cfg.timeout_ms.max(1))))?;
+            return Ok(Conn::Tcp(s));
+        }
+        #[cfg(unix)]
+        if let Some(path) = &cfg.uds {
+            let s = std::os::unix::net::UnixStream::connect(path)
+                .with_context(|| format!("connecting to {}", path.display()))?;
+            s.set_read_timeout(Some(Duration::from_millis(cfg.timeout_ms.max(1))))?;
+            return Ok(Conn::Uds(s));
+        }
+        anyhow::bail!("attack needs --tcp or --uds to aim at")
+    }
+
+    fn split(self) -> anyhow::Result<(BufReader<Box<dyn Read + Send>>, Box<dyn Write + Send>)> {
+        match self {
+            Conn::Tcp(s) => {
+                let r = s.try_clone()?;
+                Ok((BufReader::new(Box::new(r)), Box::new(s)))
+            }
+            #[cfg(unix)]
+            Conn::Uds(s) => {
+                let r = s.try_clone()?;
+                Ok((BufReader::new(Box::new(r)), Box::new(s)))
+            }
+        }
+    }
+}
+
+/// The submit line for one replayed spec, with its id shifted by
+/// `id_base` and its submit minute left to the server's "now" clamp.
+fn submit_line(spec: &JobSpec, id_base: u32, seq: u64) -> String {
+    let class = match spec.class {
+        JobClass::Te => "TE",
+        JobClass::Be => "BE",
+    };
+    format!(
+        concat!(
+            r#"{{"cmd":"submit","id":{},"class":"{}","cpu":{},"ram_gb":{},"gpu":{},"#,
+            r#""exec_time":{},"grace_period":{},"tenant":{},"seq":{}}}"#
+        ),
+        spec.id.0.wrapping_add(id_base),
+        class,
+        spec.demand.cpu,
+        spec.demand.ram_gb,
+        spec.demand.gpu,
+        spec.exec_time,
+        spec.grace_period,
+        spec.tenant.0,
+        seq
+    )
+}
+
+/// One client's closed loop over its slice of the trace.
+fn client_loop(cfg: &AttackConfig, slice: &[JobSpec], report: &mut AttackReport) {
+    let conn = match Conn::open(cfg) {
+        Ok(c) => c,
+        Err(_) => {
+            report.disconnects += 1;
+            return;
+        }
+    };
+    let Ok((mut reader, mut writer)) = conn.split() else {
+        report.disconnects += 1;
+        return;
+    };
+    let mut line = String::new();
+    if reader.read_line(&mut line).unwrap_or(0) == 0 {
+        report.disconnects += 1;
+        return;
+    }
+    if writeln!(writer, r#"{{"cmd":"subscribe","seq":0}}"#).is_err() {
+        report.disconnects += 1;
+        return;
+    }
+    let start = Instant::now();
+    let mut seq: u64 = 0;
+    for spec in slice {
+        if cfg.speed_ms_per_minute > 0 {
+            let due = Duration::from_millis(cfg.speed_ms_per_minute.saturating_mul(spec.submit));
+            let elapsed = start.elapsed();
+            if due > elapsed {
+                thread::sleep(due - elapsed);
+            }
+        }
+        seq += 1;
+        if writeln!(writer, "{}", submit_line(spec, cfg.id_base, seq)).is_err() {
+            report.disconnects += 1;
+            return;
+        }
+        report.submitted += 1;
+        let my_id = u64::from(spec.id.0.wrapping_add(cfg.id_base));
+        let mut acked = false;
+        let mut finished = !cfg.await_finish;
+        let wait_start = Instant::now();
+        while !(acked && finished) {
+            if wait_start.elapsed() >= Duration::from_millis(cfg.timeout_ms) {
+                report.timeouts += 1;
+                break;
+            }
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => {
+                    report.disconnects += 1;
+                    return;
+                }
+                Ok(_) => {}
+                // A read timeout surfaces as WouldBlock or TimedOut
+                // depending on the platform; both mean "keep waiting
+                // until the outer deadline says stop".
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(_) => {
+                    report.disconnects += 1;
+                    return;
+                }
+            }
+            let Ok(v) = Json::parse(&line) else { continue };
+            match v.get("type").as_str() {
+                Some("ack") if v.get("seq").as_u64() == Some(seq) => {
+                    acked = true;
+                    report.acked += 1;
+                }
+                Some("finished") if v.get("job").as_u64() == Some(my_id) => {
+                    finished = true;
+                    report.finished_seen += 1;
+                }
+                Some("lagged") => report.lagged_notices += 1,
+                Some("error") => report.errors += 1,
+                _ => {}
+            }
+        }
+        if cfg.think_ms > 0 {
+            thread::sleep(Duration::from_millis(cfg.think_ms));
+        }
+    }
+}
+
+/// Run the whole attack: partition `specs` round-robin across
+/// [`AttackConfig::clients`] threads, play every slice as a closed loop,
+/// and sum what came back.
+pub fn run(cfg: &AttackConfig, specs: Vec<JobSpec>) -> anyhow::Result<AttackReport> {
+    anyhow::ensure!(cfg.clients > 0, "attack needs at least one client");
+    let started = Instant::now();
+    let n = cfg.clients.min(specs.len()).max(1);
+    let mut slices: Vec<Vec<JobSpec>> = (0..n).map(|_| Vec::new()).collect();
+    for (i, spec) in specs.into_iter().enumerate() {
+        slices[i % n].push(spec);
+    }
+    let handles: Vec<_> = slices
+        .into_iter()
+        .map(|slice| {
+            let cfg = cfg.clone();
+            thread::spawn(move || {
+                let mut report = AttackReport::default();
+                client_loop(&cfg, &slice, &mut report);
+                report
+            })
+        })
+        .collect();
+    let mut total = AttackReport { clients: n, ..AttackReport::default() };
+    for h in handles {
+        match h.join() {
+            Ok(r) => total.absorb(&r),
+            Err(_) => total.disconnects += 1,
+        }
+    }
+    total.wall_ms = started.elapsed().as_millis() as u64;
+    Ok(total)
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::resources::ResourceVec;
+    use crate::sched::policy::PolicyKind;
+    use crate::serve::server::{self, ServeConfig};
+    use crate::sim::SimConfig;
+    use crate::workload::source::WorkloadSource;
+    use crate::workload::Workload;
+
+    #[test]
+    fn drain_linearizes_a_plain_workload() {
+        let specs: Vec<JobSpec> = (0..10)
+            .map(|i| {
+                JobSpec::new(i, JobClass::Be, ResourceVec::new(1.0, 1.0, 0.0), i as u64, 5, 0)
+            })
+            .collect();
+        let workload = Workload::new(specs);
+        let mut src = WorkloadSource::new(&workload);
+        let drained = drain_source(&mut src, 1000);
+        assert_eq!(drained.len(), 10);
+        let capped = {
+            let mut src = WorkloadSource::new(&workload);
+            drain_source(&mut src, 4)
+        };
+        assert_eq!(capped.len(), 4);
+    }
+
+    #[test]
+    fn closed_loop_attack_against_a_live_server() {
+        let sock =
+            std::env::temp_dir().join(format!("fitgpp-attack-test-{}.sock", std::process::id()));
+        let mut scfg = ServeConfig::new(SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Fifo));
+        scfg.sim.paranoid = true;
+        scfg.uds = Some(sock.clone());
+        let server_sock = sock.clone();
+        let server = std::thread::spawn(move || {
+            let workload = Workload::new(vec![]);
+            let mut source = WorkloadSource::new(&workload);
+            let mut cfg = scfg;
+            cfg.uds = Some(server_sock);
+            server::run(cfg, &mut source).unwrap()
+        });
+        let mut tries = 0;
+        loop {
+            match std::os::unix::net::UnixStream::connect(&sock) {
+                Ok(_) => break,
+                Err(_) if tries < 200 => {
+                    tries += 1;
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => panic!("server socket never came up: {e}"),
+            }
+        }
+        let specs: Vec<JobSpec> = (0..12)
+            .map(|i| {
+                JobSpec::new(i, JobClass::Be, ResourceVec::new(2.0, 4.0, 0.0), 0, 2, 0)
+            })
+            .collect();
+        let mut acfg = AttackConfig::new();
+        acfg.uds = Some(sock.clone());
+        acfg.clients = 4;
+        acfg.timeout_ms = 30_000;
+        let report = run(&acfg, specs).unwrap();
+        assert_eq!(report.submitted, 12);
+        assert_eq!(report.acked, 12);
+        assert_eq!(report.finished_seen, 12);
+        assert_eq!(report.disconnects, 0);
+        // Tell the server we're done.
+        let mut s = std::os::unix::net::UnixStream::connect(&sock).unwrap();
+        writeln!(s, r#"{{"cmd":"shutdown"}}"#).unwrap();
+        let outcome = server.join().unwrap();
+        assert_eq!(outcome.result.metrics.completed, 12);
+        assert!(outcome.stats.connections >= 5);
+    }
+}

@@ -1,0 +1,34 @@
+//! Live service mode: the simulator's control plane exposed on a wire,
+//! with deterministic snapshot/restore underneath it.
+//!
+//! Everything the batch simulator can do through
+//! [`SchedulerCommand`](crate::sched::control::SchedulerCommand) /
+//! [`SchedulerEvent`](crate::sched::control::SchedulerEvent) is served
+//! here as JSONL over TCP and Unix-domain sockets, around one
+//! [`SimSession`](crate::sim::SimSession) that owns all scheduler state:
+//!
+//! * [`wire`] — the request/response line protocol and its parser;
+//! * [`server`] — listeners, per-connection threads, the session loop,
+//!   bounded fan-out with explicit `lagged` backpressure, pacing of
+//!   virtual minutes against the wall clock, auto-snapshots, and
+//!   SIGTERM-triggered final snapshots;
+//! * [`snapshot`] — the versioned, checksummed snapshot envelope and
+//!   file lifecycle (atomic save, load, latest-in-directory);
+//! * [`attack`] — the closed-loop traffic frontend that replays any
+//!   [`ArrivalSource`](crate::workload::source::ArrivalSource) against a
+//!   live server from many concurrent wire clients.
+//!
+//! The determinism contract: snapshot at minute *T*, kill the process,
+//! restore, continue — and the event stream and final records are
+//! byte-identical to the uninterrupted run, across both engines and all
+//! policies. `rust/tests/serve_snapshot.rs` pins exactly that under
+//! chaos scenarios.
+
+pub mod attack;
+pub mod server;
+pub mod snapshot;
+pub mod wire;
+
+pub use attack::{AttackConfig, AttackReport};
+pub use server::{conservation_line, ServeConfig, ServeOutcome, ServeStats};
+pub use snapshot::SnapshotFormatError;

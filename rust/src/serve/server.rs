@@ -1,0 +1,710 @@
+//! The live service loop: listeners, per-connection threads, and the
+//! single session thread that owns all scheduler state.
+//!
+//! ## Threading model
+//!
+//! The scheduler, job table, and session are **not** shared: the thread
+//! that calls [`run`] owns them outright, and every mutation happens
+//! there, between scheduling rounds. Connections talk to it through one
+//! mpsc channel of [`SessionMsg`]s:
+//!
+//! * each listener runs an accept thread;
+//! * each connection runs a **reader** thread (parses JSONL request
+//!   lines into messages) and a **writer** thread (drains a bounded
+//!   queue of outbound lines onto the socket);
+//! * the session thread drains messages between rounds, applies
+//!   commands at the current virtual minute, and fans events out.
+//!
+//! ## Backpressure
+//!
+//! Every connection's outbound queue is a `sync_channel` bounded at
+//! [`ServeConfig::queue_cap`] lines. The session thread never blocks on
+//! a slow consumer: a full queue drops the line, and the connection is
+//! owed a `{"type":"lagged","dropped":N}` notice that is delivered as
+//! soon as its queue has room again — before any newer event. Memory per
+//! client is therefore strictly bounded; correctness is not, which is
+//! why the notice is explicit and typed.
+//!
+//! ## Virtual time
+//!
+//! [`ServeConfig::tick_ms`] sets the wall-clock budget per simulated
+//! minute (`0` = free-run). Rounds that fast-forward `n` minutes get an
+//! `n`-minute budget, so the virtual/wall ratio holds across quiescent
+//! spans; the budget is spent *waiting on the request channel*, so
+//! commands arriving mid-budget are applied before the next round.
+//!
+//! ## Snapshots and shutdown
+//!
+//! With a snapshot directory configured, the session auto-snapshots
+//! every [`ServeConfig::snapshot_every`] virtual minutes, always at a
+//! round boundary. SIGTERM/SIGINT (or a `{"cmd":"shutdown"}` request)
+//! stop the loop and write one final snapshot. A `kill -9` obviously
+//! writes nothing — recovery then starts from the latest auto-snapshot
+//! ([`super::snapshot::latest_in`]), which is exactly the failover drill
+//! in EXPERIMENTS.md and the serve-smoke CI job.
+
+use crate::sched::control::{EventSubscriber, SchedulerCommand, SchedulerEvent};
+use crate::serve::snapshot;
+use crate::serve::wire::{self, WireRequest};
+use crate::sim::{SimResult, SimSession};
+use crate::workload::source::ArrivalSource;
+use crate::Minutes;
+use anyhow::Context;
+use std::cell::RefCell;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// How the service runs one session.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// The simulation to serve (must equal the snapshotted configuration
+    /// when restoring).
+    pub sim: crate::sim::SimConfig,
+    /// TCP listen address (`host:port`), if any.
+    pub tcp: Option<String>,
+    /// Unix-domain socket path, if any (removed and re-bound on start).
+    pub uds: Option<PathBuf>,
+    /// Wall-clock milliseconds per virtual minute; `0` free-runs.
+    pub tick_ms: u64,
+    /// Per-connection outbound queue bound, in lines.
+    pub queue_cap: usize,
+    /// Where snapshots are written; `None` disables them.
+    pub snapshot_dir: Option<PathBuf>,
+    /// Auto-snapshot period in virtual minutes; `0` disables (final and
+    /// requested snapshots still work).
+    pub snapshot_every: Minutes,
+    /// Restore from this snapshot file instead of starting at minute 0.
+    pub restore_from: Option<PathBuf>,
+    /// Exit as soon as the session drains instead of parking to wait for
+    /// more wire traffic.
+    pub exit_when_done: bool,
+}
+
+impl ServeConfig {
+    /// Service defaults: no listeners, free-running, 1024-line client
+    /// queues, no snapshots.
+    pub fn new(sim: crate::sim::SimConfig) -> Self {
+        ServeConfig {
+            sim,
+            tcp: None,
+            uds: None,
+            tick_ms: 0,
+            queue_cap: 1024,
+            snapshot_dir: None,
+            snapshot_every: 0,
+            restore_from: None,
+            exit_when_done: false,
+        }
+    }
+}
+
+/// Counters the service kept while running.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Connections accepted over the lifetime of the service.
+    pub connections: u64,
+    /// Request lines handled (including malformed ones).
+    pub requests: u64,
+    /// Event lines enqueued to subscribers.
+    pub events_sent: u64,
+    /// Event lines dropped by backpressure (each drop is reported to its
+    /// connection via a `lagged` notice).
+    pub events_dropped: u64,
+    /// Snapshots written (auto + requested + final).
+    pub snapshots: u64,
+}
+
+/// Everything [`run`] hands back.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// The finished run, assembled exactly as a batch simulation would.
+    pub result: SimResult,
+    /// Service-layer counters.
+    pub stats: ServeStats,
+    /// True when SIGTERM/SIGINT (or a shutdown request) stopped the
+    /// loop before the session drained.
+    pub stopped: bool,
+}
+
+/// One line everyone greps for: does the final accounting balance?
+/// `jobs_seen` counts every non-cancelled job the metrics sink observed,
+/// so a lost job (or a double-retired one) breaks the equality.
+pub fn conservation_line(res: &SimResult) -> String {
+    let m = &res.metrics;
+    let cancelled = m.cancelled.te + m.cancelled.be;
+    let intact = m.jobs_seen == m.completed + m.unfinished;
+    format!(
+        "conservation {}: jobs_seen={} completed={} unfinished={} cancelled={}",
+        if intact { "intact" } else { "VIOLATED" },
+        m.jobs_seen,
+        m.completed,
+        m.unfinished,
+        cancelled
+    )
+}
+
+/// Set by the signal handler; polled by the session loop.
+static STOP: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn note_stop(_sig: i32) {
+    STOP.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM and SIGINT to the stop flag so the session loop can
+/// write its final snapshot instead of dying mid-state.
+fn install_stop_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, note_stop);
+        signal(SIGTERM, note_stop);
+    }
+}
+
+static NEXT_CONN: AtomicU64 = AtomicU64::new(1);
+
+enum SessionMsg {
+    Connected { conn: u64, tx: SyncSender<Arc<str>> },
+    Request { conn: u64, line: String },
+    Disconnected { conn: u64 },
+}
+
+/// One connection's outbound half, owned by the session thread.
+struct ClientOut {
+    conn: u64,
+    tx: SyncSender<Arc<str>>,
+    subscribed: bool,
+    /// Events dropped since this client's queue last had room; a
+    /// `lagged` notice for them is owed before any newer line.
+    owed: u64,
+}
+
+/// The session thread's registry of live connections. Shared with the
+/// event subscriber via `Rc<RefCell<…>>` — single-threaded by
+/// construction, never locked.
+struct FanOut {
+    clients: Vec<ClientOut>,
+    events_sent: u64,
+    events_dropped: u64,
+}
+
+/// Try to hand `line` to one client without ever blocking: deliver any
+/// owed `lagged` notice first, then the line; a full queue increments
+/// the owed count instead of buffering.
+fn offer(c: &mut ClientOut, line: Arc<str>, sent: &mut u64, dropped: &mut u64) {
+    if c.owed > 0 {
+        let notice: Arc<str> = Arc::from(wire::lagged_line(c.owed));
+        match c.tx.try_send(notice) {
+            Ok(()) => c.owed = 0,
+            Err(TrySendError::Full(_)) => {
+                c.owed += 1;
+                *dropped += 1;
+                return;
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+    match c.tx.try_send(line) {
+        Ok(()) => *sent += 1,
+        Err(TrySendError::Full(_)) => {
+            c.owed += 1;
+            *dropped += 1;
+        }
+        Err(TrySendError::Disconnected(_)) => {}
+    }
+}
+
+impl FanOut {
+    fn new() -> Self {
+        FanOut { clients: Vec::new(), events_sent: 0, events_dropped: 0 }
+    }
+
+    fn event(&mut self, ev: &SchedulerEvent) {
+        let FanOut { clients, events_sent, events_dropped } = self;
+        if !clients.iter().any(|c| c.subscribed) {
+            return;
+        }
+        let line: Arc<str> = Arc::from(crate::sched::control::event_jsonl_line(ev));
+        for c in clients.iter_mut().filter(|c| c.subscribed) {
+            offer(c, line.clone(), events_sent, events_dropped);
+        }
+    }
+
+    fn respond(&mut self, conn: u64, line: String) {
+        let FanOut { clients, events_sent, events_dropped } = self;
+        if let Some(c) = clients.iter_mut().find(|c| c.conn == conn) {
+            offer(c, Arc::from(line), events_sent, events_dropped);
+        }
+    }
+
+    /// Deliver owed `lagged` notices to any client whose queue has
+    /// drained. Without this, a client that lagged during a burst and
+    /// then went quiet alongside the cluster would never learn it
+    /// dropped anything — the notice must not wait for the next event.
+    fn flush_owed(&mut self) {
+        for c in self.clients.iter_mut() {
+            if c.owed > 0 {
+                let notice: Arc<str> = Arc::from(wire::lagged_line(c.owed));
+                if c.tx.try_send(notice).is_ok() {
+                    c.owed = 0;
+                }
+            }
+        }
+    }
+}
+
+/// Adapter: scheduler events → fan-out, as an [`EventSubscriber`].
+struct FanOutSub(Rc<RefCell<FanOut>>);
+
+impl EventSubscriber for FanOutSub {
+    fn on_event(&mut self, ev: &SchedulerEvent) {
+        self.0.borrow_mut().event(ev);
+    }
+}
+
+/// Spawn the reader and writer threads for one accepted connection.
+fn spawn_conn<R, W>(reader: R, writer: W, tx: Sender<SessionMsg>, queue_cap: usize)
+where
+    R: Read + Send + 'static,
+    W: Write + Send + 'static,
+{
+    let conn = NEXT_CONN.fetch_add(1, Ordering::Relaxed);
+    let (out_tx, out_rx) = mpsc::sync_channel::<Arc<str>>(queue_cap.max(1));
+    thread::spawn(move || {
+        let mut w = BufWriter::new(writer);
+        while let Ok(line) = out_rx.recv() {
+            let io = w
+                .write_all(line.as_bytes())
+                .and_then(|()| w.write_all(b"\n"))
+                .and_then(|()| w.flush());
+            if io.is_err() {
+                return; // reader side reports the disconnect
+            }
+        }
+    });
+    if tx.send(SessionMsg::Connected { conn, tx: out_tx }).is_err() {
+        return;
+    }
+    thread::spawn(move || {
+        for line in BufReader::new(reader).lines() {
+            match line {
+                Ok(l) => {
+                    if l.trim().is_empty() {
+                        continue;
+                    }
+                    if tx.send(SessionMsg::Request { conn, line: l }).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        let _ = tx.send(SessionMsg::Disconnected { conn });
+    });
+}
+
+/// Bind and serve a TCP listener; returns the bound address (useful when
+/// the config asked for port 0).
+fn start_tcp(addr: &str, tx: Sender<SessionMsg>, queue_cap: usize) -> anyhow::Result<String> {
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding tcp listener on {addr}"))?;
+    let local = listener.local_addr()?.to_string();
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let _ = stream.set_nodelay(true);
+            let Ok(reader) = stream.try_clone() else { continue };
+            spawn_conn(reader, stream, tx.clone(), queue_cap);
+        }
+    });
+    Ok(local)
+}
+
+/// Bind and serve a Unix-domain socket listener, replacing any stale
+/// socket file at the path.
+#[cfg(unix)]
+fn start_uds(path: &PathBuf, tx: Sender<SessionMsg>, queue_cap: usize) -> anyhow::Result<()> {
+    if path.exists() {
+        std::fs::remove_file(path)
+            .with_context(|| format!("removing stale socket {}", path.display()))?;
+    }
+    let listener = std::os::unix::net::UnixListener::bind(path)
+        .with_context(|| format!("binding unix socket {}", path.display()))?;
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let Ok(reader) = stream.try_clone() else { continue };
+            spawn_conn(reader, stream, tx.clone(), queue_cap);
+        }
+    });
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn start_uds(path: &PathBuf, _tx: Sender<SessionMsg>, _cap: usize) -> anyhow::Result<()> {
+    anyhow::bail!("unix-domain sockets are not available on this platform: {}", path.display())
+}
+
+/// Mutable service state the message handler threads through.
+struct ServerCtx {
+    cfg: ServeConfig,
+    fan: Rc<RefCell<FanOut>>,
+    requests: u64,
+    connections: u64,
+    snapshots: u64,
+    shutdown_requested: bool,
+}
+
+impl ServerCtx {
+    /// Write a snapshot named for its label, minute, and a monotone
+    /// sequence number (several snapshots can land on one minute).
+    fn save_snapshot(&mut self, session: &SimSession, label: &str) -> anyhow::Result<PathBuf> {
+        let dir = self
+            .cfg
+            .snapshot_dir
+            .as_ref()
+            .context("no --snapshot-dir configured")?;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
+        let path = dir.join(format!(
+            "{label}-{:012}-{:06}.snap",
+            session.now(),
+            self.snapshots
+        ));
+        snapshot::save(&path, &snapshot::encode(session))?;
+        self.snapshots += 1;
+        Ok(path)
+    }
+
+    fn handle(&mut self, session: &mut SimSession, msg: SessionMsg) {
+        match msg {
+            SessionMsg::Connected { conn, tx } => {
+                self.connections += 1;
+                self.fan.borrow_mut().clients.push(ClientOut {
+                    conn,
+                    tx,
+                    subscribed: false,
+                    owed: 0,
+                });
+                self.fan
+                    .borrow_mut()
+                    .respond(conn, wire::hello_line(session.now()));
+            }
+            SessionMsg::Disconnected { conn } => {
+                self.fan.borrow_mut().clients.retain(|c| c.conn != conn);
+            }
+            SessionMsg::Request { conn, line } => {
+                self.requests += 1;
+                match wire::parse_request(&line) {
+                    Err(e) => self
+                        .fan
+                        .borrow_mut()
+                        .respond(conn, wire::error_line(None, &format!("{e:#}"))),
+                    Ok(WireRequest::Command { mut cmd, seq }) => {
+                        if let SchedulerCommand::Submit(spec) = &mut cmd {
+                            // "As soon as possible": live clients cannot
+                            // know the virtual minute; a submit in the
+                            // past lands on the current one.
+                            if spec.submit < session.now() {
+                                spec.submit = session.now();
+                            }
+                        }
+                        if session.is_done() {
+                            session.reopen();
+                        }
+                        session.command(cmd);
+                        self.fan
+                            .borrow_mut()
+                            .respond(conn, wire::ack_line(seq, session.now()));
+                    }
+                    Ok(WireRequest::Subscribe { seq }) => {
+                        let mut fan = self.fan.borrow_mut();
+                        if let Some(c) = fan.clients.iter_mut().find(|c| c.conn == conn) {
+                            c.subscribed = true;
+                        }
+                        fan.respond(conn, wire::ack_line(seq, session.now()));
+                    }
+                    Ok(WireRequest::Snapshot { seq }) => {
+                        let line = match self.save_snapshot(session, "snap") {
+                            Ok(path) => wire::snapshot_line(
+                                seq,
+                                session.now(),
+                                &path.display().to_string(),
+                            ),
+                            Err(e) => wire::error_line(seq, &format!("{e:#}")),
+                        };
+                        self.fan.borrow_mut().respond(conn, line);
+                    }
+                    Ok(WireRequest::Ping { seq }) => self
+                        .fan
+                        .borrow_mut()
+                        .respond(conn, wire::pong_line(seq, session.now())),
+                    Ok(WireRequest::Shutdown { seq }) => {
+                        self.shutdown_requested = true;
+                        self.fan
+                            .borrow_mut()
+                            .respond(conn, wire::ack_line(seq, session.now()));
+                    }
+                }
+            }
+        }
+    }
+
+    fn stopping(&self) -> bool {
+        self.shutdown_requested || STOP.load(Ordering::SeqCst)
+    }
+}
+
+/// Serve one session until it drains (with `exit_when_done`), is told to
+/// stop, or — without `exit_when_done` — forever, parking whenever the
+/// cluster is idle. The calling thread owns every piece of scheduler
+/// state; listeners and connections run on their own threads and talk to
+/// it through messages.
+pub fn run(cfg: ServeConfig, source: &mut dyn ArrivalSource) -> anyhow::Result<ServeOutcome> {
+    install_stop_handlers();
+    STOP.store(false, Ordering::SeqCst);
+    let (tx, rx): (Sender<SessionMsg>, Receiver<SessionMsg>) = mpsc::channel();
+    let fan = Rc::new(RefCell::new(FanOut::new()));
+    if let Some(addr) = &cfg.tcp {
+        let bound = start_tcp(addr, tx.clone(), cfg.queue_cap)?;
+        eprintln!("serving tcp on {bound}");
+    }
+    if let Some(path) = &cfg.uds {
+        start_uds(path, tx.clone(), cfg.queue_cap)?;
+        eprintln!("serving unix socket at {}", path.display());
+    }
+    let subscribers: Vec<Box<dyn EventSubscriber>> = vec![Box::new(FanOutSub(fan.clone()))];
+    let mut session = match &cfg.restore_from {
+        Some(path) => {
+            let bytes = snapshot::load(path)?;
+            let s = snapshot::decode(&bytes, cfg.sim.clone(), subscribers, source)
+                .with_context(|| format!("restoring snapshot {}", path.display()))?;
+            eprintln!("restored snapshot {} at minute {}", path.display(), s.now());
+            s
+        }
+        None => SimSession::new(cfg.sim.clone(), subscribers),
+    };
+    let every = cfg.snapshot_every;
+    let mut next_auto = if every > 0 && cfg.snapshot_dir.is_some() {
+        (session.now() / every + 1).saturating_mul(every)
+    } else {
+        Minutes::MAX
+    };
+    let mut ctx = ServerCtx {
+        cfg,
+        fan,
+        requests: 0,
+        connections: 0,
+        snapshots: 0,
+        shutdown_requested: false,
+    };
+
+    loop {
+        while let Ok(msg) = rx.try_recv() {
+            ctx.handle(&mut session, msg);
+        }
+        ctx.fan.borrow_mut().flush_owed();
+        if ctx.stopping() {
+            break;
+        }
+        if session.is_done() {
+            if ctx.cfg.exit_when_done {
+                break;
+            }
+            // Parked: virtual time freezes while the cluster is idle and
+            // no work is pending; wake on traffic or the stop flag.
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(msg) => ctx.handle(&mut session, msg),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            continue;
+        }
+        if session.now() >= next_auto {
+            let path = ctx.save_snapshot(&session, "auto")?;
+            eprintln!("auto-snapshot at minute {}: {}", session.now(), path.display());
+            while next_auto <= session.now() {
+                next_auto = next_auto.saturating_add(every);
+            }
+        }
+        let round_start = Instant::now();
+        let before = session.now();
+        session.round(source);
+        if ctx.cfg.tick_ms > 0 {
+            // Spend the wall budget for the minutes just simulated
+            // waiting on the request channel, so commands arriving
+            // mid-budget apply before the next round.
+            let dt = session.now().saturating_sub(before).max(1);
+            let deadline =
+                round_start + Duration::from_millis(ctx.cfg.tick_ms.saturating_mul(dt));
+            loop {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() || ctx.stopping() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(msg) => ctx.handle(&mut session, msg),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+    }
+
+    let stopped = ctx.stopping();
+    if stopped && ctx.cfg.snapshot_dir.is_some() {
+        let path = ctx.save_snapshot(&session, "final")?;
+        eprintln!("final snapshot at minute {}: {}", session.now(), path.display());
+    }
+    if let Some(path) = &ctx.cfg.uds {
+        std::fs::remove_file(path).ok();
+    }
+    let result = session.finish(source);
+    let fan = ctx.fan.borrow();
+    Ok(ServeOutcome {
+        result,
+        stats: ServeStats {
+            connections: ctx.connections,
+            requests: ctx.requests,
+            events_sent: fan.events_sent,
+            events_dropped: fan.events_dropped,
+            snapshots: ctx.snapshots,
+        },
+        stopped,
+    })
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::sched::policy::PolicyKind;
+    use crate::sim::SimConfig;
+    use crate::util::json::Json;
+    use crate::workload::source::WorkloadSource;
+    use crate::workload::Workload;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn serves_submissions_events_and_shutdown_over_uds() {
+        let sock = std::env::temp_dir().join(format!("fitgpp-serve-test-{}.sock", std::process::id()));
+        let mut cfg = ServeConfig::new(SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo));
+        cfg.sim.paranoid = true;
+        cfg.uds = Some(sock.clone());
+        cfg.queue_cap = 64;
+        let server = thread::spawn(move || {
+            let workload = Workload::new(vec![]);
+            let mut source = WorkloadSource::new(&workload);
+            run(cfg, &mut source).unwrap()
+        });
+        // Wait for the socket to appear.
+        let mut tries = 0;
+        let stream = loop {
+            match UnixStream::connect(&sock) {
+                Ok(s) => break s,
+                Err(_) if tries < 200 => {
+                    tries += 1;
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => panic!("server socket never came up: {e}"),
+            }
+        };
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(&line).unwrap().get("type").as_str(), Some("hello"));
+        writeln!(writer, r#"{{"cmd":"subscribe","seq":1}}"#).unwrap();
+        for id in 0..3u32 {
+            writeln!(
+                writer,
+                r#"{{"cmd":"submit","id":{id},"class":"BE","cpu":4,"ram_gb":16,"gpu":0,"exec_time":3,"seq":{}}}"#,
+                10 + id
+            )
+            .unwrap();
+        }
+        writeln!(writer, r#"{{"cmd":"ping","seq":99}}"#).unwrap();
+        let mut finished = 0;
+        let mut saw_pong = false;
+        while finished < 3 {
+            line.clear();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "server closed early");
+            let v = Json::parse(&line).unwrap();
+            match v.get("type").as_str() {
+                Some("finished") => finished += 1,
+                Some("pong") => saw_pong = true,
+                Some("error") => panic!("unexpected error: {line}"),
+                _ => {}
+            }
+        }
+        assert!(saw_pong, "ping must be answered");
+        writeln!(writer, r#"{{"cmd":"shutdown"}}"#).unwrap();
+        let outcome = server.join().unwrap();
+        assert!(outcome.stopped);
+        assert_eq!(outcome.stats.connections, 1);
+        assert_eq!(outcome.result.records.len(), 3);
+        assert_eq!(outcome.result.metrics.completed, 3);
+        assert!(outcome.stats.events_sent > 0);
+        assert_eq!(conservation_line(&outcome.result).split(':').next(), Some("conservation intact"));
+    }
+
+    #[test]
+    fn slow_subscribers_get_lagged_notices_not_unbounded_buffers() {
+        let sock = std::env::temp_dir().join(format!("fitgpp-lag-test-{}.sock", std::process::id()));
+        let mut cfg = ServeConfig::new(SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Fifo));
+        cfg.uds = Some(sock.clone());
+        cfg.queue_cap = 2; // tiny queue: overflow is the point
+        let server = thread::spawn(move || {
+            let workload = Workload::new(vec![]);
+            let mut source = WorkloadSource::new(&workload);
+            run(cfg, &mut source).unwrap()
+        });
+        let mut tries = 0;
+        let stream = loop {
+            match UnixStream::connect(&sock) {
+                Ok(s) => break s,
+                Err(_) if tries < 200 => {
+                    tries += 1;
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => panic!("server socket never came up: {e}"),
+            }
+        };
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writeln!(writer, r#"{{"cmd":"subscribe"}}"#).unwrap();
+        // Submit a burst without reading anything: the 2-line queue must
+        // overflow and the overflow must be reported, not buffered.
+        for id in 0..40u32 {
+            writeln!(
+                writer,
+                r#"{{"cmd":"submit","id":{id},"class":"BE","cpu":1,"ram_gb":1,"gpu":0,"exec_time":2}}"#
+            )
+            .unwrap();
+        }
+        // Give the session time to run the burst while we stay slow.
+        thread::sleep(Duration::from_millis(400));
+        let mut saw_lagged = false;
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap() > 0 {
+            if Json::parse(&line).unwrap().get("type").as_str() == Some("lagged") {
+                saw_lagged = true;
+                writeln!(writer, r#"{{"cmd":"shutdown"}}"#).unwrap();
+            }
+            line.clear();
+        }
+        let outcome = server.join().unwrap();
+        assert!(saw_lagged, "overflow must surface as a lagged notice");
+        assert!(outcome.stats.events_dropped > 0);
+        assert_eq!(outcome.result.metrics.completed, 40);
+    }
+}

@@ -1,0 +1,313 @@
+//! The JSONL wire protocol: requests in, responses and events out.
+//!
+//! Every message is one JSON object per line. Requests carry a `"cmd"`
+//! key; command shapes match the scenario-script format
+//! ([`ScenarioScript::parse`](crate::sim::scenario::ScenarioScript::parse))
+//! with two differences: there is no `"at"` (wire commands apply at the
+//! session's current minute) and `"submit"` *is* allowed (live arrivals
+//! come over the wire; a submit minute in the past is clamped to the
+//! current minute server-side). Any request may carry an integer
+//! `"seq"`, echoed back in an `{"type":"ack","seq":…}` response once the
+//! command has been applied — closed-loop clients use it to pipeline.
+//!
+//! Outbound lines are typed by their `"type"` key:
+//!
+//! * scheduler events — exactly the [`JsonlEventLog`] line format
+//!   ([`event_jsonl_line`]), sent to connections that issued
+//!   `{"cmd":"subscribe"}`;
+//! * `{"type":"lagged","dropped":N}` — the backpressure notice: this
+//!   connection's bounded event queue overflowed and `N` events were
+//!   dropped rather than buffered without bound (see
+//!   [`crate::serve::server`]);
+//! * `{"type":"ack"|"error"|"pong"|"hello"|"snapshot",…}` — request
+//!   responses.
+//!
+//! [`JsonlEventLog`]: crate::sched::control::JsonlEventLog
+//! [`event_jsonl_line`]: crate::sched::control::event_jsonl_line
+
+use crate::cluster::NodeId;
+use crate::job::{JobClass, JobId, JobSpec, TenantId};
+use crate::resources::ResourceVec;
+use crate::sched::control::SchedulerCommand;
+use crate::util::json::Json;
+use crate::Minutes;
+use anyhow::{bail, Context, Result};
+
+/// A parsed request line.
+#[derive(Debug)]
+pub enum WireRequest {
+    /// Apply a scheduler command at the current minute.
+    Command {
+        /// The command to apply.
+        cmd: SchedulerCommand,
+        /// Echoed back in the ack, when present.
+        seq: Option<u64>,
+    },
+    /// Start streaming scheduler events to this connection.
+    Subscribe {
+        /// Echoed back in the ack, when present.
+        seq: Option<u64>,
+    },
+    /// Save a snapshot now (the session is always at a round boundary
+    /// when requests are handled).
+    Snapshot {
+        /// Echoed back in the response, when present.
+        seq: Option<u64>,
+    },
+    /// Liveness probe; answered with the current virtual minute.
+    Ping {
+        /// Echoed back in the pong, when present.
+        seq: Option<u64>,
+    },
+    /// Stop the server gracefully — same path as SIGTERM: a final
+    /// snapshot (when a snapshot directory is configured), then exit.
+    Shutdown {
+        /// Echoed back in the ack, when present.
+        seq: Option<u64>,
+    },
+}
+
+/// Parse one request line. Errors are protocol errors to report back to
+/// the client; they never tear down the session.
+pub fn parse_request(line: &str) -> Result<WireRequest> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("request json: {e}"))?;
+    let kind = v.get("cmd").as_str().context("missing 'cmd'")?.to_string();
+    let seq = v.get("seq").as_u64();
+    let id32 = |key: &str| -> Result<u32> {
+        let x = v
+            .get(key)
+            .as_u64()
+            .with_context(|| format!("{kind}: missing integer '{key}'"))?;
+        u32::try_from(x).map_err(|_| anyhow::anyhow!("{kind}: '{key}' {x} exceeds u32 range"))
+    };
+    let node = || -> Result<NodeId> { Ok(NodeId(id32("node")?)) };
+    let class = || -> Result<JobClass> {
+        match v.get("class").as_str() {
+            Some("TE") | Some("te") => Ok(JobClass::Te),
+            Some("BE") | Some("be") => Ok(JobClass::Be),
+            _ => bail!("{kind}: 'class' must be \"TE\" or \"BE\""),
+        }
+    };
+    let cmd = match kind.as_str() {
+        "subscribe" => return Ok(WireRequest::Subscribe { seq }),
+        "snapshot" => return Ok(WireRequest::Snapshot { seq }),
+        "ping" => return Ok(WireRequest::Ping { seq }),
+        "shutdown" => return Ok(WireRequest::Shutdown { seq }),
+        "submit" => {
+            let axis = |key: &str| -> Result<f64> {
+                let x = v
+                    .get(key)
+                    .as_f64()
+                    .with_context(|| format!("submit: missing number '{key}'"))?;
+                if !x.is_finite() || x < 0.0 {
+                    bail!("submit: '{key}' must be finite and non-negative");
+                }
+                Ok(x)
+            };
+            let exec_time: Minutes = v
+                .get("exec_time")
+                .as_u64()
+                .context("submit: missing integer 'exec_time'")?;
+            // Absent "submit" means "as soon as possible": 0 is always in
+            // the past once the session has started, and the server clamps
+            // past minutes up to the current one.
+            let submit: Minutes = v.get("submit").as_u64().unwrap_or(0);
+            let grace: Minutes = v.get("grace_period").as_u64().unwrap_or(0);
+            let mut spec = JobSpec::new(
+                id32("id")?,
+                class()?,
+                ResourceVec::new(axis("cpu")?, axis("ram_gb")?, axis("gpu")?),
+                submit,
+                exec_time,
+                grace,
+            );
+            if !matches!(v.get("tenant"), Json::Null) {
+                spec = spec.with_tenant(TenantId(id32("tenant")?));
+            }
+            SchedulerCommand::Submit(spec)
+        }
+        "cancel" => SchedulerCommand::Cancel { job: JobId(id32("job")?) },
+        "reclassify" => SchedulerCommand::Reclassify {
+            job: JobId(id32("job")?),
+            class: class()?,
+        },
+        "node_down" => SchedulerCommand::NodeDown { node: node()? },
+        "node_up" => SchedulerCommand::NodeUp { node: node()? },
+        "drain" => SchedulerCommand::Drain { node: node()? },
+        "resize" => {
+            let axis = |key: &str| -> Result<f64> {
+                v.get(key)
+                    .as_f64()
+                    .with_context(|| format!("resize: missing number '{key}'"))
+            };
+            SchedulerCommand::Resize {
+                node: node()?,
+                capacity: ResourceVec::new(axis("cpu")?, axis("ram_gb")?, axis("gpu")?),
+            }
+        }
+        "set_quota" => {
+            let size = v
+                .get("size")
+                .as_f64()
+                .context("set_quota: missing number 'size'")?;
+            SchedulerCommand::SetQuota { tenant: TenantId(id32("tenant")?), size }
+        }
+        "set_weight" => {
+            let weight = id32("weight")?;
+            SchedulerCommand::SetWeight { tenant: TenantId(id32("tenant")?), weight }
+        }
+        other => bail!("unknown command {other:?}"),
+    };
+    Ok(WireRequest::Command { cmd, seq })
+}
+
+/// Append `seq` when the request carried one.
+fn with_seq(mut fields: Vec<(&str, Json)>, seq: Option<u64>) -> Json {
+    if let Some(s) = seq {
+        fields.push(("seq", Json::num(s as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// `{"type":"hello",…}` — sent once per connection; announces the
+/// protocol version and the session's current virtual minute.
+pub fn hello_line(now: Minutes) -> String {
+    Json::obj(vec![
+        ("type", Json::str("hello")),
+        ("protocol", Json::num(1.0)),
+        ("now", Json::num(now as f64)),
+    ])
+    .to_string()
+}
+
+/// `{"type":"ack",…}` — the command was applied (acceptance or rejection
+/// is reported separately, as a scheduler event).
+pub fn ack_line(seq: Option<u64>, now: Minutes) -> String {
+    with_seq(
+        vec![("type", Json::str("ack")), ("now", Json::num(now as f64))],
+        seq,
+    )
+    .to_string()
+}
+
+/// `{"type":"error",…}` — the request could not be parsed or served.
+pub fn error_line(seq: Option<u64>, message: &str) -> String {
+    with_seq(
+        vec![("type", Json::str("error")), ("error", Json::str(message))],
+        seq,
+    )
+    .to_string()
+}
+
+/// `{"type":"pong",…}` — answer to a ping.
+pub fn pong_line(seq: Option<u64>, now: Minutes) -> String {
+    with_seq(
+        vec![("type", Json::str("pong")), ("now", Json::num(now as f64))],
+        seq,
+    )
+    .to_string()
+}
+
+/// `{"type":"snapshot",…}` — a snapshot was saved at `minute`.
+pub fn snapshot_line(seq: Option<u64>, minute: Minutes, path: &str) -> String {
+    with_seq(
+        vec![
+            ("type", Json::str("snapshot")),
+            ("minute", Json::num(minute as f64)),
+            ("path", Json::str(path)),
+        ],
+        seq,
+    )
+    .to_string()
+}
+
+/// `{"type":"lagged","dropped":N}` — the backpressure notice: `N` events
+/// were dropped for this connection since its last successfully queued
+/// line.
+pub fn lagged_line(dropped: u64) -> String {
+    Json::obj(vec![
+        ("type", Json::str("lagged")),
+        ("dropped", Json::num(dropped as f64)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_command_shape() {
+        let ok = |line: &str| parse_request(line).unwrap();
+        match ok(r#"{"cmd":"submit","id":7,"class":"TE","cpu":4,"ram_gb":32,"gpu":1,"exec_time":90,"grace_period":2,"tenant":3,"seq":11}"#)
+        {
+            WireRequest::Command { cmd: SchedulerCommand::Submit(spec), seq: Some(11) } => {
+                assert_eq!(spec.id, JobId(7));
+                assert_eq!(spec.class, JobClass::Te);
+                assert_eq!(spec.exec_time, 90);
+                assert_eq!(spec.tenant, TenantId(3));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            ok(r#"{"cmd":"cancel","job":4}"#),
+            WireRequest::Command { cmd: SchedulerCommand::Cancel { job: JobId(4) }, seq: None }
+        ));
+        assert!(matches!(
+            ok(r#"{"cmd":"node_down","node":1}"#),
+            WireRequest::Command { cmd: SchedulerCommand::NodeDown { .. }, .. }
+        ));
+        assert!(matches!(
+            ok(r#"{"cmd":"resize","node":0,"cpu":64,"ram_gb":512,"gpu":16}"#),
+            WireRequest::Command { cmd: SchedulerCommand::Resize { .. }, .. }
+        ));
+        assert!(matches!(
+            ok(r#"{"cmd":"set_quota","tenant":2,"size":128.5}"#),
+            WireRequest::Command { cmd: SchedulerCommand::SetQuota { .. }, .. }
+        ));
+        assert!(matches!(
+            ok(r#"{"cmd":"set_weight","tenant":2,"weight":4}"#),
+            WireRequest::Command { cmd: SchedulerCommand::SetWeight { .. }, .. }
+        ));
+        assert!(matches!(
+            ok(r#"{"cmd":"reclassify","job":3,"class":"BE"}"#),
+            WireRequest::Command { cmd: SchedulerCommand::Reclassify { .. }, .. }
+        ));
+        assert!(matches!(ok(r#"{"cmd":"subscribe"}"#), WireRequest::Subscribe { seq: None }));
+        assert!(matches!(ok(r#"{"cmd":"snapshot","seq":5}"#), WireRequest::Snapshot { seq: Some(5) }));
+        assert!(matches!(ok(r#"{"cmd":"ping"}"#), WireRequest::Ping { .. }));
+        assert!(matches!(ok(r#"{"cmd":"shutdown"}"#), WireRequest::Shutdown { .. }));
+    }
+
+    #[test]
+    fn bad_requests_are_errors_not_panics() {
+        for line in [
+            "",
+            "not json",
+            "{}",
+            r#"{"cmd":"launch_missiles"}"#,
+            r#"{"cmd":"submit","id":7}"#,
+            r#"{"cmd":"submit","id":99999999999,"class":"TE","cpu":1,"ram_gb":1,"gpu":0,"exec_time":5}"#,
+            r#"{"cmd":"cancel"}"#,
+            r#"{"cmd":"submit","id":1,"class":"XX","cpu":1,"ram_gb":1,"gpu":0,"exec_time":5}"#,
+            r#"{"cmd":"submit","id":1,"class":"TE","cpu":-1,"ram_gb":1,"gpu":0,"exec_time":5}"#,
+        ] {
+            assert!(parse_request(line).is_err(), "{line:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn response_lines_are_single_line_json() {
+        for line in [
+            hello_line(3),
+            ack_line(Some(7), 12),
+            error_line(None, "nope"),
+            pong_line(Some(1), 0),
+            snapshot_line(None, 44, "/tmp/x.snap"),
+            lagged_line(250),
+        ] {
+            assert!(!line.contains('\n'));
+            Json::parse(&line).unwrap();
+        }
+    }
+}

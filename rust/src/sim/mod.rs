@@ -5,7 +5,7 @@
 //!
 //! ## Streaming core over the control-plane protocol
 //!
-//! One core loop (`Simulator::run_core`) drives a
+//! One core loop ([`SimSession::round`]) drives a
 //! [`ClusterController`] — the same command/event facade the live
 //! executor uses — pulling arrivals *lazily* from the source through a
 //! bounded lookahead window into the scheduler's
@@ -63,12 +63,14 @@ use crate::metrics::{
 };
 use crate::resources::ResourceVec;
 use crate::sched::admission::DisciplineKind;
-use crate::sched::control::{ClusterController, EventSubscriber};
+use crate::sched::control::{ClusterController, EventSubscriber, SchedulerCommand};
 use crate::sched::policy::PolicyKind;
 use crate::sched::predict::EstimatorKind;
 use crate::sched::{SchedConfig, SchedStats};
 use crate::sim::scenario::{ScenarioDriver, ScenarioScript};
+use crate::util::bin::{BinReader, BinWriter};
 use crate::util::json::Json;
+use anyhow::bail;
 use crate::util::table::Table;
 use crate::workload::source::{ArrivalSource, WorkloadSource};
 use crate::workload::Workload;
@@ -225,6 +227,62 @@ impl JobRecord {
             cancelled: j.state == JobState::Cancelled,
             tenant: j.spec.tenant,
         }
+    }
+
+    /// Serialize the record for a session snapshot.
+    pub(crate) fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.u32(self.id.0);
+        w.u8(self.class.tag());
+        self.demand.snapshot_bin(w);
+        w.u64(self.submit);
+        w.u64(self.exec_time);
+        w.u64(self.grace_period);
+        w.opt_u64(self.first_start);
+        w.opt_u64(self.finished_at);
+        w.u32(self.preemptions);
+        w.u32(self.evictions);
+        w.seq(self.resched_intervals.len());
+        for m in &self.resched_intervals {
+            w.u64(*m);
+        }
+        w.f64(self.slowdown);
+        w.bool(self.cancelled);
+        w.u32(self.tenant.0);
+    }
+
+    /// Inverse of [`JobRecord::snapshot_bin`].
+    pub(crate) fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        let id = JobId(r.u32()?);
+        let class = JobClass::from_tag(r.u8()?)?;
+        let demand = ResourceVec::restore_bin(r)?;
+        let submit = r.u64()?;
+        let exec_time = r.u64()?;
+        let grace_period = r.u64()?;
+        let first_start = r.opt_u64()?;
+        let finished_at = r.opt_u64()?;
+        let preemptions = r.u32()?;
+        let evictions = r.u32()?;
+        let n = r.seq()?;
+        let mut resched_intervals = Vec::with_capacity(n);
+        for _ in 0..n {
+            resched_intervals.push(r.u64()?);
+        }
+        Ok(JobRecord {
+            id,
+            class,
+            demand,
+            submit,
+            exec_time,
+            grace_period,
+            first_start,
+            finished_at,
+            preemptions,
+            evictions,
+            resched_intervals,
+            slowdown: r.f64()?,
+            cancelled: r.bool()?,
+            tenant: TenantId(r.u32()?),
+        })
     }
 }
 
@@ -478,29 +536,111 @@ impl Simulator {
         source: &mut dyn ArrivalSource,
         subscribers: Vec<Box<dyn EventSubscriber>>,
     ) -> SimResult {
-        self.run_core(
-            source,
-            self.cfg.engine == SimEngine::EventHorizon,
-            subscribers,
-        )
+        let mut session = SimSession::new(self.cfg.clone(), subscribers);
+        session.run_to_completion(source);
+        session.finish(source)
+    }
+}
+
+/// One in-flight simulation, reified: the streaming core loop's complete
+/// state, steppable one scheduling round at a time. [`Simulator::run_with`]
+/// drives a session straight to completion; the wire service
+/// ([`crate::serve`]) instead steps sessions under wall-clock pacing,
+/// applies commands arriving over connections between rounds, snapshots
+/// them at round boundaries, and restores them after a kill. A snapshot
+/// captures everything the loop needs, so restore + continue is
+/// byte-identical to never having stopped (pinned by
+/// `rust/tests/serve_snapshot.rs`).
+pub struct SimSession {
+    cfg: SimConfig,
+    ctl: ClusterController,
+    scenario: Option<ScenarioDriver>,
+    /// Records of retired jobs so far (kept in the snapshot: the final
+    /// report needs pre-snapshot retirees to match an uninterrupted run).
+    records: Vec<JobRecord>,
+    /// Latest submission pulled so far; equals the workload's final
+    /// submission once the source is exhausted.
+    last_submit: Minutes,
+    /// The minute the next round will simulate.
+    now: Minutes,
+    /// Arrivals pulled from the source so far — replayed against a fresh
+    /// source on restore (the source itself stays outside the snapshot).
+    pulled: u64,
+    fast_forward: bool,
+    done: bool,
+}
+
+impl SimSession {
+    /// Build a session at minute 0: controller, primed scenario driver,
+    /// attached subscribers.
+    pub fn new(cfg: SimConfig, subscribers: Vec<Box<dyn EventSubscriber>>) -> Self {
+        let mut sched_cfg = SchedConfig::new(cfg.policy);
+        sched_cfg.discipline = cfg.discipline;
+        sched_cfg.default_quota = cfg.default_quota;
+        sched_cfg.placement = cfg.placement;
+        sched_cfg.progress_during_grace = cfg.progress_during_grace;
+        sched_cfg.seed = cfg.seed;
+        sched_cfg.estimator = cfg.estimator;
+        let mut ctl = ClusterController::new(&cfg.cluster, sched_cfg);
+        ctl.sched.paranoid = cfg.paranoid;
+        for sub in subscribers {
+            ctl.subscribe(sub);
+        }
+        let scenario = cfg.scenario.as_ref().map(|s| ScenarioDriver::new(s.clone()));
+        if let Some(driver) = &scenario {
+            // Every timed command minute becomes a clock control entry so
+            // the fast-forward target can never cross one.
+            driver.prime(&mut ctl.sched.clock);
+        }
+        let fast_forward = cfg.engine == SimEngine::EventHorizon;
+        SimSession {
+            cfg,
+            ctl,
+            scenario,
+            records: Vec::new(),
+            last_submit: 0,
+            now: 0,
+            pulled: 0,
+            fast_forward,
+            done: false,
+        }
     }
 
-    /// Build the controller (scheduler + resident job table + metrics
-    /// sink) for a run.
-    fn setup(&self) -> ClusterController {
-        let mut sched_cfg = SchedConfig::new(self.cfg.policy);
-        sched_cfg.discipline = self.cfg.discipline;
-        sched_cfg.default_quota = self.cfg.default_quota;
-        sched_cfg.placement = self.cfg.placement;
-        sched_cfg.progress_during_grace = self.cfg.progress_during_grace;
-        sched_cfg.seed = self.cfg.seed;
-        sched_cfg.estimator = self.cfg.estimator;
-        let mut ctl = ClusterController::new(&self.cfg.cluster, sched_cfg);
-        ctl.sched.paranoid = self.cfg.paranoid;
-        ctl
+    /// The minute the next round will simulate.
+    pub fn now(&self) -> Minutes {
+        self.now
     }
 
-    /// The shared streaming core loop. Every iteration:
+    /// True once a stop condition fired; further rounds are no-ops.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Clear the done latch. The wire service parks a drained session
+    /// instead of tearing it down; a late-arriving command (say, a fresh
+    /// submission into the now-idle cluster) reopens it and rounds
+    /// resume. If nothing actually changed, the next round simply
+    /// re-latches.
+    pub fn reopen(&mut self) {
+        self.done = false;
+    }
+
+    /// Jobs retired (completed or cancelled) so far.
+    pub fn records_retired(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Apply a control-plane command at the current minute, exactly as a
+    /// scenario script would between rounds. Used by the wire service for
+    /// commands arriving over connections.
+    pub fn command(&mut self, cmd: SchedulerCommand) {
+        self.ctl.command(self.now, cmd);
+    }
+
+    /// One iteration of the shared streaming core loop (one scheduling
+    /// round; under fast-forward possibly followed by a bulk burn to the
+    /// next event horizon). Returns `false` once the run is over. Every
+    /// iteration:
     ///
     /// 1. **Pull** — arrivals whose submit minute is within
     ///    `now + arrival_lookahead` move from the source into the job
@@ -534,27 +674,10 @@ impl Simulator {
     /// O(live jobs) once instead of per minute, and the results are
     /// byte-identical to the per-minute drive mode (see
     /// `rust/tests/engine_equivalence.rs`).
-    fn run_core(
-        &self,
-        source: &mut dyn ArrivalSource,
-        fast_forward: bool,
-        subscribers: Vec<Box<dyn EventSubscriber>>,
-    ) -> SimResult {
-        let mut ctl = self.setup();
-        for sub in subscribers {
-            ctl.subscribe(sub);
+    pub fn round(&mut self, source: &mut dyn ArrivalSource) -> bool {
+        if self.done {
+            return false;
         }
-        let mut scenario = self
-            .cfg
-            .scenario
-            .as_ref()
-            .map(|s| ScenarioDriver::new(s.clone()));
-        if let Some(driver) = &scenario {
-            // Every timed command minute becomes a clock control entry so
-            // the fast-forward target below can never cross one.
-            driver.prime(&mut ctl.sched.clock);
-        }
-        let mut records: Vec<JobRecord> = Vec::new();
         // Feedback-driven (closed-loop) sources may schedule a new arrival
         // earlier than one already visible: pulling ahead would break the
         // monotone-submit contract, so their lookahead is pinned to zero.
@@ -563,109 +686,121 @@ impl Simulator {
         } else {
             self.cfg.arrival_lookahead
         };
-        // Latest submission pulled so far; equals the workload's final
-        // submission once the source is exhausted.
-        let mut last_submit: Minutes = 0;
-        let mut now: Minutes = 0;
+        let now = self.now;
 
-        loop {
-            // ---- 1: pull arrivals inside the lookahead window ----------
-            while let Some(at) = source.peek_submit() {
-                if at > now.saturating_add(lookahead) {
-                    break;
-                }
-                let spec = source.next_job().expect("peeked arrival must be yieldable");
-                debug_assert!(spec.submit == at && at >= now, "source out of order");
-                debug_assert!(spec.submit >= last_submit, "submits must be monotone");
-                last_submit = last_submit.max(spec.submit);
-                ctl.stage_arrival(spec);
-            }
-
-            // ---- 2: control plane — commands due this minute -----------
-            if let Some(driver) = &mut scenario {
-                ctl.sched.clock.pop_controls_due(now);
-                let (cmds, wake) = driver.due(now, &ctl.sched, &ctl.jobs);
-                for cmd in cmds {
-                    ctl.command(now, cmd);
-                }
-                for at in wake {
-                    ctl.sched.clock.push_control(at);
-                }
-            }
-
-            // ---- 3: one scheduling round (arrivals pop inside) ---------
-            let out = ctl.step(now);
-            if let Some(driver) = &mut scenario {
-                for at in driver.watch_arrivals(now, &out.arrivals, &ctl.jobs) {
-                    ctl.sched.clock.push_control(at);
-                }
-            }
-
-            // ---- 4: retire into records, notify the source -------------
-            // Cancellations first (they were applied before the round);
-            // closed-loop users treat a kill like a completion and
-            // schedule their next trial.
-            for rec in out.cancelled {
-                source.on_job_finished(rec.id, now);
-                if self.cfg.record_jobs {
-                    records.push(rec);
-                }
-            }
-            for rec in out.finished {
-                source.on_job_finished(rec.id, now);
-                if self.cfg.record_jobs {
-                    records.push(rec);
-                }
-            }
-            now += 1;
-
-            // ---- 5: stop conditions ------------------------------------
-            let no_more_arrivals = source.done() && !ctl.sched.clock.arrivals_pending();
-            if no_more_arrivals && now > last_submit {
-                if self.cfg.drain {
-                    if ctl.idle() {
-                        break;
-                    }
-                } else if now > last_submit + self.cfg.tail_ticks {
-                    break;
-                }
-            }
-            if now >= self.cfg.max_ticks {
+        // ---- 1: pull arrivals inside the lookahead window ----------
+        while let Some(at) = source.peek_submit() {
+            if at > now.saturating_add(lookahead) {
                 break;
             }
+            let spec = source.next_job().expect("peeked arrival must be yieldable");
+            debug_assert!(spec.submit == at && at >= now, "source out of order");
+            debug_assert!(spec.submit >= self.last_submit, "submits must be monotone");
+            self.pulled += 1;
+            self.last_submit = self.last_submit.max(spec.submit);
+            self.ctl.stage_arrival(spec);
+        }
 
-            // ---- fast-forward to the next event horizon ----------------
-            if fast_forward && out.tick.vacated.is_empty() && ctl.quiescent() {
-                // Latest tick the per-minute mode could still execute
-                // before one of its break conditions fires.
-                let mut target = self.cfg.max_ticks.saturating_sub(1);
-                if !self.cfg.drain && no_more_arrivals {
-                    target = target.min(last_submit + self.cfg.tail_ticks);
-                }
-                if let Some(at) = ctl.next_internal_at() {
-                    target = target.min(at);
-                }
-                if let Some(at) = ctl.sched.clock.next_arrival_at() {
-                    target = target.min(at);
-                }
-                if let Some(at) = ctl.sched.clock.next_control_at() {
-                    // Pending command injections (or deferred-cancel
-                    // retries) pin the horizon exactly like arrivals.
-                    target = target.min(at);
-                }
-                if let Some(at) = source.peek_submit() {
-                    // Next unpulled arrival: stop there so the pull loop
-                    // picks it up on its submission minute.
-                    target = target.min(at);
-                }
-                if target > now {
-                    ctl.burn_many(target - now);
-                    now = target;
-                }
+        // ---- 2: control plane — commands due this minute -----------
+        if let Some(driver) = &mut self.scenario {
+            self.ctl.sched.clock.pop_controls_due(now);
+            let (cmds, wake) = driver.due(now, &self.ctl.sched, &self.ctl.jobs);
+            for cmd in cmds {
+                self.ctl.command(now, cmd);
+            }
+            for at in wake {
+                self.ctl.sched.clock.push_control(at);
             }
         }
 
-        self.finish(ctl, source, records, now)
+        // ---- 3: one scheduling round (arrivals pop inside) ---------
+        let out = self.ctl.step(now);
+        if let Some(driver) = &mut self.scenario {
+            for at in driver.watch_arrivals(now, &out.arrivals, &self.ctl.jobs) {
+                self.ctl.sched.clock.push_control(at);
+            }
+        }
+
+        // ---- 4: retire into records, notify the source -------------
+        // Cancellations first (they were applied before the round);
+        // closed-loop users treat a kill like a completion and
+        // schedule their next trial.
+        for rec in out.cancelled {
+            source.on_job_finished(rec.id, now);
+            if self.cfg.record_jobs {
+                self.records.push(rec);
+            }
+        }
+        for rec in out.finished {
+            source.on_job_finished(rec.id, now);
+            if self.cfg.record_jobs {
+                self.records.push(rec);
+            }
+        }
+        self.now = now + 1;
+        let now = self.now;
+
+        // ---- 5: stop conditions ------------------------------------
+        let no_more_arrivals = source.done() && !self.ctl.sched.clock.arrivals_pending();
+        if no_more_arrivals && now > self.last_submit {
+            if self.cfg.drain {
+                if self.ctl.idle() {
+                    self.done = true;
+                    return false;
+                }
+            } else if now > self.last_submit + self.cfg.tail_ticks {
+                self.done = true;
+                return false;
+            }
+        }
+        if now >= self.cfg.max_ticks {
+            self.done = true;
+            return false;
+        }
+
+        // ---- fast-forward to the next event horizon ----------------
+        if self.fast_forward && out.tick.vacated.is_empty() && self.ctl.quiescent() {
+            // Latest tick the per-minute mode could still execute
+            // before one of its break conditions fires.
+            let mut target = self.cfg.max_ticks.saturating_sub(1);
+            if !self.cfg.drain && no_more_arrivals {
+                target = target.min(self.last_submit + self.cfg.tail_ticks);
+            }
+            if let Some(at) = self.ctl.next_internal_at() {
+                target = target.min(at);
+            }
+            if let Some(at) = self.ctl.sched.clock.next_arrival_at() {
+                target = target.min(at);
+            }
+            if let Some(at) = self.ctl.sched.clock.next_control_at() {
+                // Pending command injections (or deferred-cancel
+                // retries) pin the horizon exactly like arrivals.
+                target = target.min(at);
+            }
+            if let Some(at) = source.peek_submit() {
+                // Next unpulled arrival: stop there so the pull loop
+                // picks it up on its submission minute.
+                target = target.min(at);
+            }
+            if target > now {
+                self.ctl.burn_many(target - now);
+                self.now = target;
+            }
+        }
+        true
+    }
+
+    /// Drive rounds until a stop condition fires.
+    pub fn run_to_completion(&mut self, source: &mut dyn ArrivalSource) {
+        while self.round(source) {}
+    }
+
+    /// Drive rounds until the session reaches (or, under fast-forward,
+    /// overshoots) `minute`, or the run ends — whichever comes first.
+    /// Leaves the session at a round boundary, the only place a snapshot
+    /// may be taken.
+    pub fn run_until(&mut self, source: &mut dyn ArrivalSource, minute: Minutes) {
+        while self.now < minute && self.round(source) {}
     }
 
     /// Assemble the result: fold unfinished resident jobs (and any jobs
@@ -674,14 +809,16 @@ impl Simulator {
     /// streamed one must too) into the sink, then sort records into job-id
     /// order for byte-compatibility with the materialized path. Cancelled
     /// jobs were retired (and recorded) at cancellation time and are *not*
-    /// unfinished.
-    fn finish(
-        &self,
-        ctl: ClusterController,
-        source: &mut dyn ArrivalSource,
-        mut records: Vec<JobRecord>,
-        now: Minutes,
-    ) -> SimResult {
+    /// unfinished. Attached subscribers are dropped here (flushing any
+    /// buffered output).
+    pub fn finish(self, source: &mut dyn ArrivalSource) -> SimResult {
+        let SimSession {
+            cfg,
+            ctl,
+            mut records,
+            now,
+            ..
+        } = self;
         let (sched, mut jobs, mut metrics) = ctl.into_parts();
         // Counters are lazily accounted (see `Job::sync`): settle every
         // still-resident job up to the cut-off minute so accrued-wait
@@ -693,7 +830,7 @@ impl Simulator {
             unfinished += 1;
             let rec = JobRecord::from_job(job);
             metrics.observe(&rec);
-            if self.cfg.record_jobs {
+            if cfg.record_jobs {
                 records.push(rec);
             }
         }
@@ -701,22 +838,106 @@ impl Simulator {
             unfinished += 1;
             let rec = JobRecord::from_job(&Job::new(spec));
             metrics.observe(&rec);
-            if self.cfg.record_jobs {
+            if cfg.record_jobs {
                 records.push(rec);
             }
         }
         records.sort_by_key(|r| r.id);
         SimResult {
-            policy: self.cfg.policy,
+            policy: cfg.policy,
             records,
             metrics,
             sched_stats: sched.stats.clone(),
             makespan: now,
             unfinished,
             peak_live: jobs.peak_live(),
-            record_jobs: self.cfg.record_jobs,
+            record_jobs: cfg.record_jobs,
             prediction_updates: sched.estimator().updates(),
         }
+    }
+
+    /// The configuration identity burned into every snapshot: two runs
+    /// with equal fingerprints make identical decisions, so restoring
+    /// under a different config is rejected instead of silently
+    /// diverging.
+    fn fingerprint(cfg: &SimConfig) -> String {
+        format!("{cfg:?}")
+    }
+
+    /// Serialize the session's complete state. Must be called at a round
+    /// boundary (where [`SimSession::round`] returned); the payload is
+    /// raw — the serve layer wraps it in a versioned, checksummed
+    /// envelope ([`crate::serve::snapshot`]).
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.str(&Self::fingerprint(&self.cfg));
+        w.u64(self.now);
+        w.u64(self.last_submit);
+        w.u64(self.pulled);
+        w.bool(self.done);
+        w.seq(self.records.len());
+        for rec in &self.records {
+            rec.snapshot_bin(w);
+        }
+        self.ctl.snapshot_bin(w);
+        w.bool(self.scenario.is_some());
+        if let Some(driver) = &self.scenario {
+            driver.snapshot_bin(w);
+        }
+    }
+
+    /// Rebuild a session from a snapshot payload, a configuration equal
+    /// to the one snapshotted, fresh subscribers, and a fresh instance of
+    /// the same arrival source. The source is fast-forwarded past every
+    /// arrival the snapshot already consumed (those jobs live on in the
+    /// job table and records); feedback-driven sources carry state the
+    /// snapshot cannot capture and are rejected. Continuing the restored
+    /// session is byte-identical to never having stopped.
+    pub fn restore_bin(
+        cfg: SimConfig,
+        r: &mut BinReader,
+        subscribers: Vec<Box<dyn EventSubscriber>>,
+        source: &mut dyn ArrivalSource,
+    ) -> anyhow::Result<SimSession> {
+        if source.feedback_driven() {
+            bail!(
+                "cannot restore a run driven by a feedback-coupled (closed-loop) source: \
+                 the source's own state is not part of the snapshot"
+            );
+        }
+        let fingerprint = Self::fingerprint(&cfg);
+        let mut s = SimSession::new(cfg, subscribers);
+        let saved = r.str()?;
+        if saved != fingerprint {
+            bail!(
+                "snapshot was taken under a different configuration:\n  snapshot: {saved}\n  current:  {fingerprint}"
+            );
+        }
+        s.now = r.u64()?;
+        s.last_submit = r.u64()?;
+        s.pulled = r.u64()?;
+        s.done = r.bool()?;
+        let n = r.seq()?;
+        s.records = Vec::with_capacity(n);
+        for _ in 0..n {
+            s.records.push(JobRecord::restore_bin(r)?);
+        }
+        s.ctl.restore_bin(r)?;
+        if r.bool()? != s.scenario.is_some() {
+            bail!("snapshot corrupt: scenario presence does not match the configuration");
+        }
+        if let Some(driver) = &mut s.scenario {
+            driver.restore_bin(r)?;
+        }
+        for i in 0..s.pulled {
+            if source.next_job().is_none() {
+                bail!(
+                    "source ran dry after {i} of {} already-consumed arrivals — \
+                     this is not the source the snapshot was taken against",
+                    s.pulled
+                );
+            }
+        }
+        Ok(s)
     }
 }
 
@@ -1039,6 +1260,91 @@ mod tests {
         assert_eq!(res.metrics.jobs_seen, 1);
         assert_eq!(res.slowdowns(JobClass::Be).len(), 1);
         assert_eq!(res.preempted_fraction(), 0.0);
+    }
+
+    #[test]
+    fn session_snapshot_restore_is_byte_identical() {
+        use crate::sched::control::SchedulerCommand;
+        let specs: Vec<JobSpec> = (0..40)
+            .map(|i| {
+                JobSpec::new(i, if i % 4 == 0 { JobClass::Te } else { JobClass::Be },
+                    rv(4.0 + (i % 3) as f64 * 8.0, 32.0, (i % 2) as f64 + 1.0),
+                    (i as u64) * 2, 5 + (i as u64 % 13), (i as u64) % 4)
+            })
+            .collect();
+        let mk_cfg = || {
+            let mut cfg = SimConfig::new(
+                ClusterSpec::tiny(2),
+                PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+            );
+            cfg.paranoid = true;
+            cfg.seed = 7;
+            cfg.scenario = Some(
+                crate::sim::scenario::ScenarioScript::new()
+                    .with_te_patience(4)
+                    .at(10, SchedulerCommand::NodeDown { node: crate::cluster::NodeId(0) })
+                    .at(30, SchedulerCommand::NodeUp { node: crate::cluster::NodeId(0) })
+                    .at(15, SchedulerCommand::Cancel { job: JobId(7) }),
+            );
+            cfg
+        };
+        let baseline = {
+            let workload = wl(specs.clone());
+            let mut src = WorkloadSource::new(&workload);
+            let mut sess = SimSession::new(mk_cfg(), Vec::new());
+            sess.run_to_completion(&mut src);
+            sess.finish(&mut src)
+        };
+        for cut in [0u64, 5, 12, 33] {
+            let workload = wl(specs.clone());
+            let mut src = WorkloadSource::new(&workload);
+            let mut sess = SimSession::new(mk_cfg(), Vec::new());
+            sess.run_until(&mut src, cut);
+            let mut w = BinWriter::new();
+            sess.snapshot_bin(&mut w);
+            drop(sess); // the "kill"
+            let bytes = w.into_bytes();
+
+            let workload = wl(specs.clone());
+            let mut src = WorkloadSource::new(&workload);
+            let mut r = BinReader::new(&bytes);
+            let mut back =
+                SimSession::restore_bin(mk_cfg(), &mut r, Vec::new(), &mut src).unwrap();
+            r.expect_end().unwrap();
+            back.run_to_completion(&mut src);
+            let res = back.finish(&mut src);
+            assert_eq!(res.records, baseline.records, "cut {cut}");
+            assert_eq!(res.metrics, baseline.metrics, "cut {cut}");
+            assert_eq!(res.makespan, baseline.makespan, "cut {cut}");
+            assert_eq!(res.unfinished, baseline.unfinished, "cut {cut}");
+            assert_eq!(res.peak_live, baseline.peak_live, "cut {cut}");
+            assert_eq!(
+                format!("{:?}", res.sched_stats),
+                format!("{:?}", baseline.sched_stats),
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn restore_rejects_a_different_configuration() {
+        let specs = vec![JobSpec::new(0, JobClass::Be, rv(1.0, 1.0, 0.0), 0, 50, 0)];
+        let workload = wl(specs);
+        let mut src = WorkloadSource::new(&workload);
+        let cfg = SimConfig::new(ClusterSpec::tiny(1), PolicyKind::Fifo);
+        let mut sess = SimSession::new(cfg.clone(), Vec::new());
+        sess.run_until(&mut src, 3);
+        let mut w = BinWriter::new();
+        sess.snapshot_bin(&mut w);
+        let bytes = w.into_bytes();
+        let mut other = cfg;
+        other.seed = 1234;
+        let mut src2 = WorkloadSource::new(&workload);
+        let mut r = BinReader::new(&bytes);
+        let err = SimSession::restore_bin(other, &mut r, Vec::new(), &mut src2)
+            .err()
+            .expect("config mismatch must be rejected");
+        assert!(err.to_string().contains("different configuration"), "{err}");
     }
 
     #[test]

@@ -63,6 +63,7 @@ use crate::resources::ResourceVec;
 use crate::sched::clock::EventClock;
 use crate::sched::control::SchedulerCommand;
 use crate::sched::Scheduler;
+use crate::util::bin::{BinReader, BinWriter};
 use crate::util::json::Json;
 use crate::Minutes;
 use anyhow::{bail, Context, Result};
@@ -348,6 +349,52 @@ impl ScenarioDriver {
             }
         }
         wake
+    }
+
+    /// Serialize the driver's run state for a snapshot. The timed command
+    /// list is config (rebuilt from the same script on restore); only the
+    /// cursor, the pending patience watches, and the held-over
+    /// cancellations are state.
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.usize(self.cursor);
+        // Sorted for deterministic bytes; the heap's total order means the
+        // multiset determines pop order.
+        let mut watches: Vec<(Minutes, u32)> =
+            self.deadlines.iter().map(|Reverse(e)| *e).collect();
+        watches.sort_unstable();
+        w.seq(watches.len());
+        for (at, id) in watches {
+            w.u64(at);
+            w.u32(id);
+        }
+        w.seq(self.holdover.len());
+        for id in &self.holdover {
+            w.u32(id.0);
+        }
+    }
+
+    /// Restore state written by [`ScenarioDriver::snapshot_bin`] into a
+    /// driver freshly built from the same script.
+    pub fn restore_bin(&mut self, r: &mut BinReader) -> Result<()> {
+        let cursor = r.usize()?;
+        if cursor > self.timed.len() {
+            bail!(
+                "snapshot corrupt: scenario cursor {cursor} exceeds {} timed commands",
+                self.timed.len()
+            );
+        }
+        self.cursor = cursor;
+        self.deadlines.clear();
+        for _ in 0..r.seq()? {
+            let at = r.u64()?;
+            let id = r.u32()?;
+            self.deadlines.push(Reverse((at, id)));
+        }
+        self.holdover.clear();
+        for _ in 0..r.seq()? {
+            self.holdover.push(JobId(r.u32()?));
+        }
+        Ok(())
     }
 
     /// Apply, drop, or defer one cancellation:

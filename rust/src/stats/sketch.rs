@@ -24,6 +24,7 @@
 //! Slowdown rates (≥ 1) and re-scheduling intervals (≥ 0 minutes) both fit
 //! the tracked range with room to spare.
 
+use crate::util::bin::{BinReader, BinWriter};
 use crate::util::json::Json;
 
 /// Geometric bin growth factor (0.5% bins ⇒ ≤ ~0.25% quantile error).
@@ -201,6 +202,38 @@ impl QuantileSketch {
     /// Percentile convenience (`p` in `[0, 100]`).
     pub fn percentile(&self, p: f64) -> f64 {
         self.quantile(p / 100.0)
+    }
+
+    /// Serialize for a deterministic snapshot. `sum`/`min`/`max` travel as
+    /// raw bits, so the restored sketch is bit-identical (including the
+    /// `±∞` empty-sketch sentinels).
+    pub fn snapshot_bin(&self, w: &mut BinWriter) {
+        w.seq(self.bins.len());
+        for &b in &self.bins {
+            w.u64(b);
+        }
+        w.u64(self.zero_or_less);
+        w.u64(self.count);
+        w.f64(self.sum);
+        w.f64(self.min);
+        w.f64(self.max);
+    }
+
+    /// Rebuild a sketch written by [`QuantileSketch::snapshot_bin`].
+    pub fn restore_bin(r: &mut BinReader) -> anyhow::Result<Self> {
+        let n = r.seq()?;
+        let mut bins = Vec::with_capacity(n);
+        for _ in 0..n {
+            bins.push(r.u64()?);
+        }
+        Ok(QuantileSketch {
+            bins,
+            zero_or_less: r.u64()?,
+            count: r.u64()?,
+            sum: r.f64()?,
+            min: r.f64()?,
+            max: r.f64()?,
+        })
     }
 
     /// Machine-readable dump (count, mean, min/max, p50/p95/p99).
@@ -395,6 +428,31 @@ mod tests {
         assert_eq!(s.count(), 3);
         assert_eq!(s.quantile(0.0), 0.0, "min is exact");
         assert_eq!(s.quantile(1.0), 1e15, "max is exact");
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_bit_exact() {
+        let mut rng = Pcg64::new(29);
+        let mut s = QuantileSketch::new();
+        for _ in 0..5_000 {
+            s.insert(rng.next_f64() * 1e4);
+        }
+        s.insert(0.0);
+        let mut w = crate::util::bin::BinWriter::new();
+        s.snapshot_bin(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::util::bin::BinReader::new(&bytes);
+        let t = QuantileSketch::restore_bin(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(t, s);
+        assert_eq!(t.sum.to_bits(), s.sum.to_bits());
+
+        // The empty sketch's ±∞ sentinels survive too.
+        let mut w = crate::util::bin::BinWriter::new();
+        QuantileSketch::new().snapshot_bin(&mut w);
+        let bytes = w.into_bytes();
+        let e = QuantileSketch::restore_bin(&mut crate::util::bin::BinReader::new(&bytes)).unwrap();
+        assert_eq!(e, QuantileSketch::new());
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Minimal little-endian binary codec for deterministic snapshots.
+//!
+//! The serve-mode snapshot format (see [`serve::snapshot`](crate::serve::snapshot))
+//! serializes the full scheduler state through these two types. Design
+//! rules, shared with `runtime/checkpoint.rs`:
+//!
+//! * everything is little-endian and length-prefixed — no alignment, no
+//!   padding, no platform dependence;
+//! * floats travel as raw IEEE-754 bits ([`f64::to_bits`]), so a
+//!   round-trip is bit-exact (including infinities and negative zero —
+//!   the quantile sketch's `min`/`max` sentinels depend on this);
+//! * the reader is fully bounds-checked and returns typed errors on
+//!   truncation or corruption — it never panics and never allocates
+//!   unbounded memory from a hostile length prefix.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian byte sink.
+#[derive(Debug, Default)]
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    /// An empty writer.
+    pub fn new() -> Self {
+        BinWriter::default()
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the writer, yielding the serialized bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Write one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Write a bool as one byte (`0`/`1`).
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// Write a `u32`, little-endian.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a `u64`, little-endian.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a `usize` as a `u64` (platform-independent width).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Write an `f64` as its raw IEEE-754 bits (bit-exact round-trip).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Write an optional `u64` as a presence byte plus the value.
+    pub fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.u64(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    /// Write a string as a `u64` byte length plus UTF-8 bytes.
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Write a sequence length prefix (`u64`); follow with the elements.
+    pub fn seq(&mut self, n: usize) {
+        self.usize(n);
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice. Every accessor
+/// returns a typed error on truncation instead of panicking.
+#[derive(Debug)]
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    /// Read from `buf`, starting at offset 0.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BinReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Fail unless every byte has been consumed (trailing garbage is
+    /// corruption, not slack).
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("snapshot payload has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "snapshot payload truncated: need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a bool; any byte other than `0`/`1` is corruption.
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("snapshot payload corrupt: bool byte {other}"),
+        }
+    }
+
+    /// Read a `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Read a `usize` written by [`BinWriter::usize`].
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("snapshot length {v} exceeds usize"))
+    }
+
+    /// Read an `f64` from its raw bits.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read an optional `u64` written by [`BinWriter::opt_u64`].
+    pub fn opt_u64(&mut self) -> Result<Option<u64>> {
+        if self.bool()? {
+            Ok(Some(self.u64()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.usize()?;
+        if n > self.remaining() {
+            bail!("snapshot string length {n} exceeds the {} remaining bytes", self.remaining());
+        }
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("snapshot string is not valid UTF-8"))
+    }
+
+    /// Read a sequence length prefix, guarded so a corrupt prefix cannot
+    /// trigger an absurd allocation (each element costs at least one
+    /// byte, so the count can never exceed the remaining payload).
+    pub fn seq(&mut self) -> Result<usize> {
+        let n = self.usize()?;
+        if n > self.remaining() {
+            bail!("snapshot sequence length {n} exceeds the {} remaining bytes", self.remaining());
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_primitive() {
+        let mut w = BinWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.bool(false);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.usize(42);
+        w.f64(-0.0);
+        w.f64(f64::INFINITY);
+        w.f64(f64::NEG_INFINITY);
+        w.f64(1.5e-300);
+        w.opt_u64(None);
+        w.opt_u64(Some(9));
+        w.str("héllo");
+        w.seq(2);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.usize().unwrap(), 42);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f64().unwrap(), f64::INFINITY);
+        assert_eq!(r.f64().unwrap(), f64::NEG_INFINITY);
+        assert_eq!(r.f64().unwrap(), 1.5e-300);
+        assert_eq!(r.opt_u64().unwrap(), None);
+        assert_eq!(r.opt_u64().unwrap(), Some(9));
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.seq().unwrap(), 2);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = BinWriter::new();
+        w.u64(123);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = BinReader::new(&bytes[..cut]);
+            assert!(r.u64().is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn hostile_lengths_are_rejected() {
+        let mut w = BinWriter::new();
+        w.usize(usize::MAX / 2); // absurd sequence length
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert!(r.seq().is_err());
+        let mut r = BinReader::new(&bytes);
+        assert!(r.str().is_err());
+    }
+
+    #[test]
+    fn bad_bool_is_corruption() {
+        let mut r = BinReader::new(&[2]);
+        assert!(r.bool().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_detected() {
+        let mut w = BinWriter::new();
+        w.u8(1);
+        w.u8(2);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        r.u8().unwrap();
+        assert!(r.expect_end().is_err());
+        r.u8().unwrap();
+        r.expect_end().unwrap();
+    }
+}

@@ -1,6 +1,7 @@
 //! Small utilities the offline image forces us to own: JSON, CLI flag
-//! parsing, and fixed-width table rendering.
+//! parsing, fixed-width table rendering, and the snapshot binary codec.
 
+pub mod bin;
 pub mod cli;
 pub mod json;
 pub mod table;

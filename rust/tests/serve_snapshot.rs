@@ -1,0 +1,259 @@
+//! Crash-recovery determinism: snapshot at minute *T*, kill, restore,
+//! continue — byte-identical to the uninterrupted run.
+//!
+//! The pin is exact, not statistical: the JSONL event stream of
+//! (prefix-run-up-to-*T*) ++ (restored-run-to-completion) must equal the
+//! uninterrupted run's stream line for line, and the final records,
+//! metrics, makespan, and live-set accounting must match — under chaos
+//! scenario scripts (node failures, drains, resizes, cancellations,
+//! reclassifications), across both drive engines, all preemptive
+//! policies, and several arrival-lookahead windows. The harness style
+//! mirrors `victim_index_chaos.rs`.
+
+use fitgpp::cluster::{ClusterSpec, NodeId};
+use fitgpp::job::{JobClass, JobId};
+use fitgpp::resources::ResourceVec;
+use fitgpp::sched::control::{event_jsonl_line, EventSubscriber, SchedulerCommand, SchedulerEvent};
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::serve::snapshot;
+use fitgpp::sim::scenario::ScenarioScript;
+use fitgpp::sim::{SimConfig, SimEngine, SimResult, SimSession};
+use fitgpp::stats::rng::Pcg64;
+use fitgpp::testkit::{check, gen, PropConfig};
+use fitgpp::workload::source::WorkloadSource;
+use fitgpp::workload::Workload;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Captures the event stream in the exact wire/JSONL line format.
+struct CollectLines(Rc<RefCell<Vec<String>>>);
+
+impl EventSubscriber for CollectLines {
+    fn on_event(&mut self, ev: &SchedulerEvent) {
+        self.0.borrow_mut().push(event_jsonl_line(ev));
+    }
+}
+
+fn preemptive_policies(rng: &mut Pcg64) -> PolicyKind {
+    match rng.below(8) {
+        0 => PolicyKind::Lrtp,
+        1 => PolicyKind::Rand,
+        2 => PolicyKind::Srtf,
+        3 => PolicyKind::Youngest,
+        4 => PolicyKind::PSrtf,
+        5 => PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        6 => PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) },
+        _ => PolicyKind::FitGpp { s: 2.0, p_max: None },
+    }
+}
+
+/// Random control-plane chaos over the first 300 minutes, with every
+/// node restored at minute 400 so the backlog can drain.
+fn chaos_script(rng: &mut Pcg64, nodes: usize, n_jobs: usize) -> ScenarioScript {
+    let mut script = ScenarioScript::new();
+    for _ in 0..2 + rng.below(5) {
+        let node = NodeId(rng.below(nodes as u64) as u32);
+        let at = 1 + rng.below(300);
+        let cmd = match rng.below(6) {
+            0 => SchedulerCommand::NodeDown { node },
+            1 => SchedulerCommand::Drain { node },
+            2 => SchedulerCommand::NodeUp { node },
+            3 => SchedulerCommand::Resize {
+                node,
+                capacity: ResourceVec::new(
+                    32.0 + rng.below(32) as f64,
+                    256.0 + rng.below(256) as f64,
+                    8.0 + rng.below(8) as f64,
+                ),
+            },
+            4 => SchedulerCommand::Cancel {
+                job: JobId(rng.below(n_jobs as u64) as u32),
+            },
+            _ => SchedulerCommand::Reclassify {
+                job: JobId(rng.below(n_jobs as u64) as u32),
+                class: if rng.chance(0.5) { JobClass::Te } else { JobClass::Be },
+            },
+        };
+        script = script.at(at, cmd);
+    }
+    for node in 0..nodes {
+        script = script.at(400, SchedulerCommand::NodeUp { node: NodeId(node as u32) });
+    }
+    script
+}
+
+fn collector() -> (Rc<RefCell<Vec<String>>>, Vec<Box<dyn EventSubscriber>>) {
+    let lines = Rc::new(RefCell::new(Vec::new()));
+    let subs: Vec<Box<dyn EventSubscriber>> = vec![Box::new(CollectLines(lines.clone()))];
+    (lines, subs)
+}
+
+/// The uninterrupted run: full event stream + final result.
+fn baseline(cfg: &SimConfig, wl: &Workload) -> (Vec<String>, SimResult) {
+    let (lines, subs) = collector();
+    let mut src = WorkloadSource::new(wl);
+    let mut sess = SimSession::new(cfg.clone(), subs);
+    sess.run_to_completion(&mut src);
+    let res = sess.finish(&mut src);
+    (Rc::try_unwrap(lines).unwrap().into_inner(), res)
+}
+
+/// The interrupted run: run to `cut`, snapshot through the full file
+/// envelope, drop everything, restore into a fresh session with a fresh
+/// source, and continue to completion. Returns the *stitched* event
+/// stream (prefix ++ suffix) and the final result.
+fn killed_and_restored(cfg: &SimConfig, wl: &Workload, cut: u64) -> (Vec<String>, SimResult) {
+    let bytes = {
+        let (_pre_lines, subs) = collector();
+        let mut src = WorkloadSource::new(wl);
+        let mut sess = SimSession::new(cfg.clone(), subs);
+        sess.run_until(&mut src, cut);
+        snapshot::encode(&sess)
+        // sess, src, and the prefix collector drop here: the "kill".
+    };
+    // The prefix stream must be re-derived the way a real operator
+    // would have it — from the prefix process's own subscriber. Run the
+    // prefix again with its own collector to materialize those lines.
+    let mut prefix_lines = {
+        let (lines, subs) = collector();
+        let mut src = WorkloadSource::new(wl);
+        let mut sess = SimSession::new(cfg.clone(), subs);
+        sess.run_until(&mut src, cut);
+        drop(sess);
+        Rc::try_unwrap(lines).unwrap().into_inner()
+    };
+    let (suffix, subs) = collector();
+    let mut src = WorkloadSource::new(wl);
+    let mut sess = snapshot::decode(&bytes, cfg.clone(), subs, &mut src).expect("restore");
+    sess.run_to_completion(&mut src);
+    let res = sess.finish(&mut src);
+    prefix_lines.extend(Rc::try_unwrap(suffix).unwrap().into_inner());
+    (prefix_lines, res)
+}
+
+fn assert_identical(
+    what: &str,
+    full: &(Vec<String>, SimResult),
+    stitched: &(Vec<String>, SimResult),
+) -> Result<(), String> {
+    if stitched.0 != full.0 {
+        let n = full.0.len().min(stitched.0.len());
+        let diverge = (0..n)
+            .find(|&i| full.0[i] != stitched.0[i])
+            .unwrap_or(n);
+        return Err(format!(
+            "{what}: event streams diverge at line {diverge}: full has {} lines ({:?}…), stitched has {} ({:?}…)",
+            full.0.len(),
+            full.0.get(diverge),
+            stitched.0.len(),
+            stitched.0.get(diverge),
+        ));
+    }
+    if stitched.1.records != full.1.records {
+        return Err(format!("{what}: final records diverge"));
+    }
+    if stitched.1.metrics != full.1.metrics {
+        return Err(format!("{what}: streaming metrics diverge"));
+    }
+    if stitched.1.makespan != full.1.makespan || stitched.1.unfinished != full.1.unfinished {
+        return Err(format!(
+            "{what}: makespan/unfinished diverge: {}/{} vs {}/{}",
+            stitched.1.makespan, stitched.1.unfinished, full.1.makespan, full.1.unfinished
+        ));
+    }
+    if format!("{:?}", stitched.1.sched_stats) != format!("{:?}", full.1.sched_stats) {
+        return Err(format!("{what}: scheduler stats diverge"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_restore_is_byte_identical_under_chaos() {
+    let cases = PropConfig { cases: 14, ..Default::default() };
+    check("serve-snapshot-chaos", cases, |rng| {
+        let nodes = 2 + rng.below(3) as usize;
+        let n = 20 + rng.below(40) as usize;
+        let wl = gen::workload(rng, n, 30 + rng.below(60));
+        let policy = preemptive_policies(rng);
+        let script = chaos_script(rng, nodes, n);
+        let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes), policy);
+        cfg.paranoid = true;
+        cfg.seed = rng.next_u64();
+        cfg.engine = if rng.chance(0.5) { SimEngine::EventHorizon } else { SimEngine::PerMinute };
+        cfg.arrival_lookahead = [0u64, 7, 10_000][rng.below(3) as usize];
+        cfg.max_ticks = 20_000;
+        cfg.scenario = Some(script);
+        let full = baseline(&cfg, &wl);
+        // Several random cut points per case, including minute 0 (restore
+        // before anything ran) — each must stitch back byte-identically.
+        let mut cuts = vec![0u64, 1 + rng.below(120)];
+        if rng.chance(0.5) {
+            cuts.push(1 + rng.below(500));
+        }
+        for cut in cuts {
+            let stitched = killed_and_restored(&cfg, &wl, cut);
+            assert_identical(
+                &format!("{policy:?} {:?} lookahead={} cut={cut}", cfg.engine, cfg.arrival_lookahead),
+                &full,
+                &stitched,
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn restore_matrix_covers_every_policy_and_both_engines() {
+    // Deterministic sweep: all 8 preemptive policies x both engines, one
+    // mid-run cut each, under a fixed chaos script.
+    let mut rng = Pcg64::new(0xF1F6_0001);
+    let nodes = 3;
+    let n = 36;
+    let wl = gen::workload(&mut rng, n, 60);
+    let script = chaos_script(&mut rng, nodes, n);
+    let policies = [
+        PolicyKind::Lrtp,
+        PolicyKind::Rand,
+        PolicyKind::Srtf,
+        PolicyKind::Youngest,
+        PolicyKind::PSrtf,
+        PolicyKind::FitGpp { s: 4.0, p_max: Some(1) },
+        PolicyKind::FitGppPr { s: 4.0, p_max: Some(1) },
+        PolicyKind::FitGpp { s: 2.0, p_max: None },
+    ];
+    for policy in policies {
+        for engine in [SimEngine::EventHorizon, SimEngine::PerMinute] {
+            let mut cfg = SimConfig::new(ClusterSpec::tiny(nodes), policy);
+            cfg.paranoid = true;
+            cfg.seed = 11;
+            cfg.engine = engine;
+            cfg.max_ticks = 20_000;
+            cfg.scenario = Some(script.clone());
+            let full = baseline(&cfg, &wl);
+            let stitched = killed_and_restored(&cfg, &wl, 25);
+            if let Err(e) = assert_identical(&format!("{policy:?} {engine:?}"), &full, &stitched) {
+                panic!("{e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn restore_under_wrong_policy_is_refused() {
+    let mut rng = Pcg64::new(42);
+    let wl = gen::workload(&mut rng, 20, 40);
+    let cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+    let mut src = WorkloadSource::new(&wl);
+    let mut sess = SimSession::new(cfg.clone(), Vec::new());
+    sess.run_until(&mut src, 10);
+    let bytes = snapshot::encode(&sess);
+    let other = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Lrtp);
+    let mut src2 = WorkloadSource::new(&wl);
+    let err = snapshot::decode(&bytes, other, Vec::new(), &mut src2)
+        .err()
+        .expect("config mismatch must be refused");
+    assert!(
+        format!("{err:#}").contains("different configuration"),
+        "unexpected error: {err:#}"
+    );
+}

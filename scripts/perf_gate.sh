@@ -101,4 +101,23 @@ for op in plan_blocked_te_256 plan_blocked_te_4096; do
     echo "perf-gate: $op 0 allocs/op (no $HOTPATH_BASELINE — ns/op ceiling skipped)"
   fi
 done
+# Serve wire-throughput gates (optional: only when the serve bench ran).
+# Bless with: cp BENCH_serve.json BENCH_serve_baseline.json
+SERVE=${SERVE:-BENCH_serve.json}
+SERVE_BASELINE=${SERVE_BASELINE:-BENCH_serve_baseline.json}
+if [ -f "$SERVE" ] && [ -f "$SERVE_BASELINE" ]; then
+  for key in commands_per_sec events_per_sec; do
+    serve_m=$(jq -er ".$key" "$SERVE")
+    serve_f=$(jq -er ".$key" "$SERVE_BASELINE")
+    if ! jq -en --argjson m "$serve_m" --argjson f "$serve_f" --argjson t "$TOLERANCE" \
+      '$m >= $f * $t' >/dev/null; then
+      echo "perf-gate: FAIL — serve $key ${serve_m} is below ${TOLERANCE} × baseline ${serve_f}" >&2
+      echo "perf-gate: if intentional: cp $SERVE $SERVE_BASELINE && git add $SERVE_BASELINE" >&2
+      exit 1
+    fi
+    echo "perf-gate: serve $key ${serve_m} (floor ${serve_f})"
+  done
+elif [ -f "$SERVE_BASELINE" ]; then
+  echo "perf-gate: $SERVE not present — serve wire-throughput gate skipped"
+fi
 echo "perf-gate: OK"
