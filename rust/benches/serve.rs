@@ -1,24 +1,67 @@
-//! Wire-service throughput: commands/sec over a unix socket and event
-//! fan-out delivery rate to concurrent subscribers.
+//! Wire-service throughput and latency: commands/sec over a unix
+//! socket, event fan-out delivery rate, ack latency percentiles, the
+//! encode hot path's allocation count, and a fan-out batch-size sweep.
 //!
-//! One in-process `serve` session on a temp UDS; two measurements:
+//! One in-process `serve` session on a temp UDS; measurements:
 //!
+//! * **encode ns/op + allocs/op** — the direct JSONL encoders
+//!   (`JsonLineEncoder`, `ResponseEncoder`) hammered in-process before
+//!   any server thread starts; after warmup the encode path must not
+//!   allocate at all (`steady_state_allocs_per_op`, pinned to 0 by
+//!   `scripts/perf_gate.sh`).
 //! * **commands/sec** — one client pipelines `FITGPP_SERVE_CMDS` submit
 //!   requests and reads every ack back; the rate is acked commands over
 //!   the wall time of the whole round trip.
+//! * **ack p50/p99 µs** — a closed-loop client submits
+//!   `FITGPP_SERVE_LAT` jobs one at a time, timing each submit→ack round
+//!   trip into a quantile sketch (`ack_p50_us`, `ack_p99_us`).
 //! * **event fan-out events/sec** — four subscribed connections while a
 //!   driver submits `FITGPP_SERVE_JOBS` one-minute jobs; each subscriber
 //!   reads until it has seen every job finish, and the rate is total
 //!   event lines delivered (all subscribers summed) over the wall time.
+//!   Auto-snapshots run throughout, so the reported
+//!   `snapshot_stall_ms` shows what snapshotting costs the session
+//!   thread with the disk writes pushed to the background thread.
+//! * **batch sweep** — the fan-out measurement repeated on dedicated
+//!   servers at `--batch-max` 1/32/256 (`fanout_batch_sweep`), pinning
+//!   the coalescing win and the `batch_max = 1` per-line baseline.
 //!
-//! Results land in `BENCH_serve.json` (`commands_per_sec`,
-//! `events_per_sec`), floor-gated by `scripts/perf_gate.sh` against
-//! `BENCH_serve_baseline.json`. The queue bound is set far above the
-//! line volume, so a single drop (a `lagged` notice) fails the bench —
-//! throughput numbers must describe complete delivery.
+//! Results land in `BENCH_serve.json`, gated by `scripts/perf_gate.sh`
+//! against `BENCH_serve_baseline.json` (throughput floors, latency and
+//! stall ceilings). The queue bound is set far above the line volume, so
+//! a single drop (a `lagged` notice) fails the bench — throughput
+//! numbers must describe complete delivery.
 
 #[path = "common/mod.rs"]
 mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// Counting allocator (this bench binary only): counts every
+// alloc/realloc so the encode hot path's allocs/op is exact.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 #[cfg(unix)]
 fn main() {
@@ -32,24 +75,32 @@ fn main() {
 
 #[cfg(unix)]
 mod bench {
-    use super::common;
-    use fitgpp::benchkit::env_usize;
-    use fitgpp::cluster::ClusterSpec;
+    use super::{common, ALLOCS};
+    use fitgpp::benchkit::{black_box, env_usize};
+    use fitgpp::cluster::{ClusterSpec, NodeId};
+    use fitgpp::job::{JobClass, JobId, TenantId};
+    use fitgpp::sched::control::{JsonLineEncoder, SchedulerEvent};
     use fitgpp::sched::policy::PolicyKind;
     use fitgpp::serve::server::{self, ServeConfig};
-    use fitgpp::sim::SimConfig;
+    use fitgpp::serve::wire::ResponseEncoder;
+    use fitgpp::sim::{JobRecord, SimConfig};
+    use fitgpp::stats::sketch::QuantileSketch;
     use fitgpp::util::json::Json;
     use fitgpp::workload::source::WorkloadSource;
     use fitgpp::workload::Workload;
     use std::io::{BufRead, BufReader, Write};
     use std::os::unix::net::UnixStream;
     use std::path::PathBuf;
+    use std::sync::atomic::Ordering;
     use std::sync::mpsc;
     use std::thread;
     use std::time::{Duration, Instant};
 
     const FANOUT_SUBSCRIBERS: usize = 4;
     const FANOUT_ID_BASE: u64 = 10_000_000;
+    // Below FANOUT_ID_BASE so any latency-phase job still draining when
+    // the fan-out subscribers attach is excluded by their id filter.
+    const LAT_ID_BASE: u64 = 5_000_000;
 
     fn connect(sock: &PathBuf) -> (BufReader<UnixStream>, UnixStream) {
         let mut tries = 0;
@@ -77,13 +128,172 @@ mod bench {
         v
     }
 
+    /// Representative events for the encode micro-measurement, including
+    /// the widest line (`finished` with its full record).
+    fn encode_sample_events() -> Vec<SchedulerEvent> {
+        let record = JobRecord {
+            id: JobId(421),
+            class: JobClass::Be,
+            demand: fitgpp::resources::ResourceVec::new(4.0, 16.0, 1.0),
+            submit: 37,
+            exec_time: 240,
+            grace_period: 10,
+            first_start: Some(40),
+            finished_at: Some(301),
+            preemptions: 2,
+            evictions: 0,
+            resched_intervals: vec![12],
+            slowdown: 1.0987,
+            cancelled: false,
+            tenant: TenantId(3),
+        };
+        vec![
+            SchedulerEvent::Submitted { at: 37, job: JobId(421), class: JobClass::Be },
+            SchedulerEvent::Started { at: 40, job: JobId(421), node: NodeId(7) },
+            SchedulerEvent::Preempted { at: 90, job: JobId(421) },
+            SchedulerEvent::Resumed { at: 120, job: JobId(421), node: NodeId(3) },
+            SchedulerEvent::Finished { at: 301, job: JobId(421), record },
+        ]
+    }
+
+    /// The encode hot path in isolation, before any server thread exists
+    /// (so the allocation counter sees this loop and nothing else).
+    /// Returns `(encode_ns_per_op, steady_state_allocs_per_op)`; one op
+    /// is one event line plus one ack response line.
+    fn measure_encode() -> (f64, f64) {
+        let events = encode_sample_events();
+        let mut enc = JsonLineEncoder::new();
+        let mut resp = ResponseEncoder::new();
+        let mut i = 0usize;
+        let mut sink = 0usize;
+        let mut op = |i: usize| {
+            let ev = &events[i % events.len()];
+            black_box(enc.event(ev).len()) + black_box(resp.ack(Some(i as u64), i as u64).len())
+        };
+        for _ in 0..1_000 {
+            sink = sink.wrapping_add(op(i));
+            i += 1;
+        }
+        let iters = 200_000usize;
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            sink = sink.wrapping_add(op(i));
+            i += 1;
+        }
+        let elapsed = t0.elapsed();
+        let allocs = ALLOCS.load(Ordering::Relaxed) - a0;
+        black_box(sink);
+        (
+            elapsed.as_nanos() as f64 / iters as f64,
+            allocs as f64 / iters as f64,
+        )
+    }
+
+    /// Fan-out delivery rate against a dedicated server at the given
+    /// `batch_max`: subscribers read until every job finishes, the
+    /// driver pipelines the submits. Returns delivered lines/sec.
+    fn fanout_rate(batch_max: usize, n_jobs: usize) -> f64 {
+        let sock = std::env::temp_dir().join(format!(
+            "fitgpp-serve-sweep-{}-{batch_max}.sock",
+            std::process::id()
+        ));
+        let mut cfg = ServeConfig::new(SimConfig::new(ClusterSpec::tiny(4), PolicyKind::Fifo));
+        cfg.uds = Some(sock.clone());
+        cfg.queue_cap = 1 << 17;
+        cfg.batch_max = batch_max;
+        let server = thread::spawn(move || {
+            let workload = Workload::new(Vec::new());
+            let mut source = WorkloadSource::new(&workload);
+            server::run(cfg, &mut source).expect("serve")
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<()>();
+        let subs: Vec<_> = (0..FANOUT_SUBSCRIBERS)
+            .map(|_| {
+                let sock = sock.clone();
+                let ready = ready_tx.clone();
+                thread::spawn(move || {
+                    let (mut reader, mut writer) = connect(&sock);
+                    let mut line = String::new();
+                    assert_eq!(
+                        read_line(&mut reader, &mut line).get("type").as_str(),
+                        Some("hello")
+                    );
+                    writeln!(writer, r#"{{"cmd":"subscribe","seq":1}}"#).expect("subscribe");
+                    loop {
+                        if read_line(&mut reader, &mut line).get("type").as_str() == Some("ack") {
+                            break;
+                        }
+                    }
+                    ready.send(()).expect("ready");
+                    let mut lines = 0u64;
+                    let mut finished = 0usize;
+                    while finished < n_jobs {
+                        let v = read_line(&mut reader, &mut line);
+                        lines += 1;
+                        if v.get("type").as_str() == Some("finished") {
+                            finished += 1;
+                        }
+                    }
+                    lines
+                })
+            })
+            .collect();
+        for _ in 0..FANOUT_SUBSCRIBERS {
+            ready_rx.recv().expect("subscriber up");
+        }
+        let (mut reader, mut writer) = connect(&sock);
+        let mut line = String::new();
+        assert_eq!(read_line(&mut reader, &mut line).get("type").as_str(), Some("hello"));
+        let t0 = Instant::now();
+        for i in 0..n_jobs {
+            writeln!(
+                writer,
+                r#"{{"cmd":"submit","id":{},"class":"BE","cpu":1,"ram_gb":1,"gpu":0,"exec_time":1,"seq":{i}}}"#,
+                FANOUT_ID_BASE + i as u64
+            )
+            .expect("write submit");
+        }
+        let mut acked = 0usize;
+        while acked < n_jobs {
+            if read_line(&mut reader, &mut line).get("type").as_str() == Some("ack") {
+                acked += 1;
+            }
+        }
+        let mut delivered = 0u64;
+        for s in subs {
+            delivered += s.join().expect("subscriber");
+        }
+        let rate = delivered as f64 / t0.elapsed().as_secs_f64();
+        writeln!(writer, r#"{{"cmd":"shutdown"}}"#).expect("shutdown");
+        let outcome = server.join().expect("server thread");
+        assert_eq!(outcome.stats.events_dropped, 0, "sweep must measure complete delivery");
+        rate
+    }
+
     pub fn run() {
+        // --- encode hot path, measured before any other thread runs ----
+        let (encode_ns_per_op, steady_state_allocs_per_op) = measure_encode();
+        println!(
+            "direct encode: {encode_ns_per_op:.0} ns/op, \
+             {steady_state_allocs_per_op:.3} allocs/op (event + ack line)"
+        );
+
         let sock = std::env::temp_dir()
             .join(format!("fitgpp-serve-bench-{}.sock", std::process::id()));
+        let snap_dir = std::env::temp_dir()
+            .join(format!("fitgpp-serve-bench-snaps-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&snap_dir);
         let mut cfg = ServeConfig::new(SimConfig::new(ClusterSpec::tiny(4), PolicyKind::Fifo));
         cfg.uds = Some(sock.clone());
         // Far above the total line volume: any overflow is a bench bug.
         cfg.queue_cap = 1 << 17;
+        // Auto-snapshot throughout so snapshot_stall_ms measures a
+        // realistic cadence with the disk writes in the background. The
+        // whole bench spans ~100 virtual minutes on tiny(4), so every 10
+        // minutes yields roughly ten snapshots.
+        cfg.snapshot_dir = Some(snap_dir.clone());
+        cfg.snapshot_every = 10;
         let server = thread::spawn(move || {
             let workload = Workload::new(Vec::new());
             let mut source = WorkloadSource::new(&workload);
@@ -114,6 +324,35 @@ mod bench {
         drop(writer);
         drop(reader);
 
+        // --- ack latency: one closed-loop submit→ack at a time ----------
+        let n_lat = env_usize("FITGPP_SERVE_LAT", 2000);
+        let (mut reader, mut writer) = connect(&sock);
+        assert_eq!(read_line(&mut reader, &mut line).get("type").as_str(), Some("hello"));
+        let mut sketch = QuantileSketch::new();
+        for i in 0..n_lat {
+            let t = Instant::now();
+            writeln!(
+                writer,
+                r#"{{"cmd":"submit","id":{},"class":"BE","cpu":1,"ram_gb":1,"gpu":0,"exec_time":1,"seq":{i}}}"#,
+                LAT_ID_BASE + i as u64
+            )
+            .expect("write submit");
+            loop {
+                let v = read_line(&mut reader, &mut line);
+                if v.get("type").as_str() == Some("ack")
+                    && v.get("seq").as_u64() == Some(i as u64)
+                {
+                    break;
+                }
+            }
+            sketch.insert(t.elapsed().as_secs_f64() * 1e6);
+        }
+        let ack_p50_us = sketch.quantile(0.5);
+        let ack_p99_us = sketch.quantile(0.99);
+        println!("ack latency: p50 {ack_p50_us:.0} µs, p99 {ack_p99_us:.0} µs ({n_lat} round trips)");
+        drop(writer);
+        drop(reader);
+
         // --- event fan-out: subscribers must see every job finish -------
         let n_jobs = env_usize("FITGPP_SERVE_JOBS", 4000);
         let (ready_tx, ready_rx) = mpsc::channel::<()>();
@@ -141,7 +380,7 @@ mod bench {
                         let v = read_line(&mut reader, &mut line);
                         lines += 1;
                         if v.get("type").as_str() == Some("finished")
-                            && v.get("job").as_u64().is_some_and(|j| j >= FANOUT_ID_BASE)
+                            && v.get("job").as_u64().map_or(false, |j| j >= FANOUT_ID_BASE)
                         {
                             finished += 1;
                         }
@@ -186,13 +425,47 @@ mod bench {
             outcome.stats.events_dropped, 0,
             "bench must measure complete delivery"
         );
-        assert_eq!(outcome.result.metrics.completed as usize, n_cmds + n_jobs);
+        assert_eq!(
+            outcome.result.metrics.completed as usize,
+            n_cmds + n_lat + n_jobs
+        );
+        assert!(outcome.stats.snapshots > 0, "auto-snapshots never fired");
+        let snapshot_stall_ms = outcome.stats.snapshot_stall_ms;
+        println!(
+            "snapshot stall: {snapshot_stall_ms:.1} ms on the session thread \
+             across {} background snapshots",
+            outcome.stats.snapshots
+        );
+        let _ = std::fs::remove_dir_all(&snap_dir);
+
+        // --- fan-out batch sweep: per-line baseline vs coalescing -------
+        let sweep_jobs = env_usize("FITGPP_SERVE_SWEEP_JOBS", 1500);
+        let sweep: Vec<(usize, f64)> = [1usize, 32, 256]
+            .iter()
+            .map(|&b| (b, fanout_rate(b, sweep_jobs)))
+            .collect();
+        for (b, rate) in &sweep {
+            println!("fan-out batch sweep: batch_max {b:>3} -> {rate:.0} events/sec");
+        }
 
         let json = Json::obj(vec![
             ("bench", Json::str("serve")),
             ("commands_per_sec", Json::num(commands_per_sec)),
             ("events_per_sec", Json::num(events_per_sec)),
             ("subscribers", Json::num(FANOUT_SUBSCRIBERS as f64)),
+            ("ack_p50_us", Json::num(ack_p50_us)),
+            ("ack_p99_us", Json::num(ack_p99_us)),
+            ("snapshot_stall_ms", Json::num(snapshot_stall_ms)),
+            ("encode_ns_per_op", Json::num(encode_ns_per_op)),
+            ("steady_state_allocs_per_op", Json::num(steady_state_allocs_per_op)),
+            (
+                "fanout_batch_sweep",
+                Json::obj(vec![
+                    ("batch_1", Json::num(sweep[0].1)),
+                    ("batch_32", Json::num(sweep[1].1)),
+                    ("batch_256", Json::num(sweep[2].1)),
+                ]),
+            ),
         ]);
         common::save_results_json("serve", &json);
     }

@@ -772,6 +772,7 @@ fn serve(argv: Vec<String>) -> Result<()> {
             .opt("uds", None, "unix-domain socket path to listen on")
             .opt("tick-ms", Some("0"), "wall milliseconds per simulated minute (0 = free-run)")
             .opt("queue-cap", Some("1024"), "per-connection outbound queue bound, in lines (slow consumers get 'lagged' notices)")
+            .opt("batch-max", Some("256"), "most event/response lines coalesced into one fan-out write (1 = per-line)")
             .opt("snapshot-dir", None, "write auto/final snapshots into this directory")
             .opt("snapshot-every", Some("0"), "auto-snapshot period in virtual minutes (0 = off)")
             .opt("restore", None, "restore from this snapshot file — or the latest *.snap in this directory")
@@ -790,6 +791,7 @@ fn serve(argv: Vec<String>) -> Result<()> {
     }
     cfg.tick_ms = args.get_u64("tick-ms", 0);
     cfg.queue_cap = args.get_usize("queue-cap", 1024);
+    cfg.batch_max = args.get_usize("batch-max", 256).max(1);
     cfg.snapshot_dir = args.get("snapshot-dir").map(PathBuf::from);
     cfg.snapshot_every = args.get_u64("snapshot-every", 0);
     cfg.exit_when_done = args.has("exit-when-done");
@@ -819,12 +821,13 @@ fn serve(argv: Vec<String>) -> Result<()> {
     println!("{}", fitgpp::serve::conservation_line(&outcome.result));
     let s = &outcome.stats;
     println!(
-        "serve: {} connections, {} requests, {} events sent, {} dropped (lagged), {} snapshots, {:.1}s wall{}",
+        "serve: {} connections, {} requests, {} events sent, {} dropped (lagged), {} snapshots ({:.1} ms stall), {:.1}s wall{}",
         s.connections,
         s.requests,
         s.events_sent,
         s.events_dropped,
         s.snapshots,
+        s.snapshot_stall_ms,
         t0.elapsed().as_secs_f64(),
         if outcome.stopped { " (stopped by signal/shutdown)" } else { "" }
     );

@@ -426,6 +426,155 @@ pub fn event_jsonl_line(ev: &SchedulerEvent) -> String {
     ev.to_json().to_string()
 }
 
+/// Direct single-pass JSONL encoder: serializes each event straight into
+/// a reusable scratch buffer, skipping the [`Json`] value tree (and its
+/// `BTreeMap` + per-node `String` allocations) entirely. Steady state is
+/// allocation-free — the scratch grows to the longest line seen and is
+/// reused thereafter (`rust/benches/serve.rs` pins 0 allocs/op).
+///
+/// The output is byte-identical to [`event_jsonl_line`] for every
+/// variant: keys are emitted in the sorted order the `BTreeMap` would
+/// produce, and numbers/strings go through the exact same
+/// [`crate::util::json`] formatting routines. `rust/tests/control_events.rs`
+/// sweeps every constructor against the value-tree form, and the golden
+/// scenario log pins the serve fan-out + [`JsonlEventLog`] output.
+#[derive(Default)]
+pub struct JsonLineEncoder {
+    buf: String,
+}
+
+impl JsonLineEncoder {
+    /// A fresh encoder with a line-sized scratch buffer.
+    pub fn new() -> Self {
+        JsonLineEncoder { buf: String::with_capacity(256) }
+    }
+
+    /// Encode one event; the returned line (no trailing newline) is valid
+    /// until the next call.
+    pub fn event(&mut self, ev: &SchedulerEvent) -> &str {
+        use crate::util::json::{write_escaped as esc, write_num as num};
+        self.buf.clear();
+        let b = &mut self.buf;
+        b.push_str("{\"at\":");
+        num(b, ev.at() as f64);
+        match ev {
+            SchedulerEvent::Submitted { job, class, .. } => {
+                b.push_str(",\"class\":");
+                esc(b, class.as_str());
+                b.push_str(",\"job\":");
+                num(b, job.0 as f64);
+                b.push_str(",\"type\":\"submitted\"}");
+            }
+            SchedulerEvent::Started { job, node, .. }
+            | SchedulerEvent::Resumed { job, node, .. } => {
+                b.push_str(",\"job\":");
+                num(b, job.0 as f64);
+                b.push_str(",\"node\":");
+                num(b, node.0 as f64);
+                b.push_str(",\"type\":");
+                esc(b, ev.kind());
+                b.push('}');
+            }
+            SchedulerEvent::Preempted { job, .. } | SchedulerEvent::Vacated { job, .. } => {
+                b.push_str(",\"job\":");
+                num(b, job.0 as f64);
+                b.push_str(",\"type\":");
+                esc(b, ev.kind());
+                b.push('}');
+            }
+            SchedulerEvent::Finished { job, record, .. }
+            | SchedulerEvent::Cancelled { job, record, .. } => {
+                b.push_str(",\"class\":");
+                esc(b, record.class.as_str());
+                b.push_str(",\"evictions\":");
+                num(b, record.evictions as f64);
+                if let Some(fin) = record.finished_at {
+                    b.push_str(",\"finished_at\":");
+                    num(b, fin as f64);
+                }
+                b.push_str(",\"job\":");
+                num(b, job.0 as f64);
+                b.push_str(",\"preemptions\":");
+                num(b, record.preemptions as f64);
+                if record.finished_at.is_some() {
+                    b.push_str(",\"slowdown\":");
+                    num(b, record.slowdown);
+                }
+                b.push_str(",\"tenant\":");
+                num(b, record.tenant.0 as f64);
+                b.push_str(",\"type\":");
+                esc(b, ev.kind());
+                b.push('}');
+            }
+            SchedulerEvent::Reclassified { job, class, .. } => {
+                b.push_str(",\"class\":");
+                esc(b, class.as_str());
+                b.push_str(",\"job\":");
+                num(b, job.0 as f64);
+                b.push_str(",\"type\":\"reclassified\"}");
+            }
+            SchedulerEvent::NodeLost { node, lost, .. } => {
+                b.push_str(",\"lost\":[");
+                for (i, j) in lost.iter().enumerate() {
+                    if i > 0 {
+                        b.push(',');
+                    }
+                    num(b, j.0 as f64);
+                }
+                b.push_str("],\"node\":");
+                num(b, node.0 as f64);
+                b.push_str(",\"type\":\"node_lost\"}");
+            }
+            SchedulerEvent::NodeRestored { node, .. }
+            | SchedulerEvent::NodeDraining { node, .. } => {
+                b.push_str(",\"node\":");
+                num(b, node.0 as f64);
+                b.push_str(",\"type\":");
+                esc(b, ev.kind());
+                b.push('}');
+            }
+            SchedulerEvent::NodeResized { node, capacity, .. } => {
+                b.push_str(",\"cpu\":");
+                num(b, capacity.cpu);
+                b.push_str(",\"gpu\":");
+                num(b, capacity.gpu);
+                b.push_str(",\"node\":");
+                num(b, node.0 as f64);
+                b.push_str(",\"ram_gb\":");
+                num(b, capacity.ram_gb);
+                b.push_str(",\"type\":\"node_resized\"}");
+            }
+            SchedulerEvent::QuotaChanged { tenant, size, .. } => {
+                b.push_str(",\"size\":");
+                num(b, *size);
+                b.push_str(",\"tenant\":");
+                num(b, tenant.0 as f64);
+                b.push_str(",\"type\":\"quota_changed\"}");
+            }
+            SchedulerEvent::WeightChanged { tenant, weight, .. } => {
+                b.push_str(",\"tenant\":");
+                num(b, tenant.0 as f64);
+                b.push_str(",\"type\":\"weight_changed\",\"weight\":");
+                num(b, *weight as f64);
+                b.push('}');
+            }
+            SchedulerEvent::AdmissionSkipped { job, tenant, .. } => {
+                b.push_str(",\"job\":");
+                num(b, job.0 as f64);
+                b.push_str(",\"tenant\":");
+                num(b, tenant.0 as f64);
+                b.push_str(",\"type\":\"admission_skipped\"}");
+            }
+            SchedulerEvent::CommandRejected { reason, .. } => {
+                b.push_str(",\"reason\":");
+                esc(b, reason);
+                b.push_str(",\"type\":\"command_rejected\"}");
+            }
+        }
+        &self.buf
+    }
+}
+
 /// A consumer of the scheduler's event stream. Subscribers observe; they
 /// never mutate scheduler state, and they must be deterministic given the
 /// event sequence (the sequence itself is deterministic per
@@ -461,6 +610,7 @@ impl EventSubscriber for StreamingMetrics {
 /// records any flush error in the same flag.
 pub struct JsonlEventLog<W: Write> {
     w: W,
+    enc: JsonLineEncoder,
     lines: u64,
     error: JsonlErrorFlag,
 }
@@ -532,7 +682,12 @@ impl JsonlErrorFlag {
 impl<W: Write> JsonlEventLog<W> {
     /// Log into `w` (a file, a [`SharedBuf`], any writer).
     pub fn new(w: W) -> Self {
-        JsonlEventLog { w, lines: 0, error: JsonlErrorFlag::default() }
+        JsonlEventLog {
+            w,
+            enc: JsonLineEncoder::new(),
+            lines: 0,
+            error: JsonlErrorFlag::default(),
+        }
     }
 
     /// Lines written so far.
@@ -557,7 +712,14 @@ impl<W: Write> EventSubscriber for JsonlEventLog<W> {
         if self.error.get().is_some() {
             return;
         }
-        match writeln!(self.w, "{}", event_jsonl_line(ev)) {
+        // Direct encode into the reused scratch — same bytes as
+        // `event_jsonl_line`, none of its per-event value tree.
+        let line = self.enc.event(ev);
+        let io = self
+            .w
+            .write_all(line.as_bytes())
+            .and_then(|()| self.w.write_all(b"\n"));
+        match io {
             Ok(()) => self.lines += 1,
             Err(e) => self.error.set(EventLogError {
                 op: EventLogOp::Write,

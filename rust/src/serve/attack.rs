@@ -200,17 +200,23 @@ impl Conn {
     }
 }
 
-/// The submit line for one replayed spec, with its id shifted by
-/// `id_base` and its submit minute left to the server's "now" clamp.
-fn submit_line(spec: &JobSpec, id_base: u32, seq: u64) -> String {
+/// Append the submit line (newline included) for one replayed spec to
+/// `buf`, with its id shifted by `id_base` and its submit minute left to
+/// the server's "now" clamp. Takes a caller-owned buffer so client loops
+/// reuse one allocation across the whole trace.
+fn write_submit_line(buf: &mut String, spec: &JobSpec, id_base: u32, seq: u64) {
+    use std::fmt::Write as _;
     let class = match spec.class {
         JobClass::Te => "TE",
         JobClass::Be => "BE",
     };
-    format!(
+    buf.clear();
+    let _ = write!(
+        buf,
         concat!(
             r#"{{"cmd":"submit","id":{},"class":"{}","cpu":{},"ram_gb":{},"gpu":{},"#,
-            r#""exec_time":{},"grace_period":{},"tenant":{},"seq":{}}}"#
+            r#""exec_time":{},"grace_period":{},"tenant":{},"seq":{}}}"#,
+            "\n"
         ),
         spec.id.0.wrapping_add(id_base),
         class,
@@ -221,7 +227,7 @@ fn submit_line(spec: &JobSpec, id_base: u32, seq: u64) -> String {
         spec.grace_period,
         spec.tenant.0,
         seq
-    )
+    );
 }
 
 /// One client's closed loop over its slice of the trace.
@@ -248,6 +254,7 @@ fn client_loop(cfg: &AttackConfig, slice: &[JobSpec], report: &mut AttackReport)
     }
     let start = Instant::now();
     let mut seq: u64 = 0;
+    let mut req = String::with_capacity(160);
     for spec in slice {
         if cfg.speed_ms_per_minute > 0 {
             let due = Duration::from_millis(cfg.speed_ms_per_minute.saturating_mul(spec.submit));
@@ -257,7 +264,8 @@ fn client_loop(cfg: &AttackConfig, slice: &[JobSpec], report: &mut AttackReport)
             }
         }
         seq += 1;
-        if writeln!(writer, "{}", submit_line(spec, cfg.id_base, seq)).is_err() {
+        write_submit_line(&mut req, spec, cfg.id_base, seq);
+        if writer.write_all(req.as_bytes()).is_err() {
             report.disconnects += 1;
             return;
         }

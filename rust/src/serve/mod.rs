@@ -7,13 +7,15 @@
 //! here as JSONL over TCP and Unix-domain sockets, around one
 //! [`SimSession`](crate::sim::SimSession) that owns all scheduler state:
 //!
-//! * [`wire`] — the request/response line protocol and its parser;
+//! * [`wire`] — the request/response line protocol, its parser, and the
+//!   reusable-buffer direct response encoder;
 //! * [`server`] — listeners, per-connection threads, the session loop,
-//!   bounded fan-out with explicit `lagged` backpressure, pacing of
-//!   virtual minutes against the wall clock, auto-snapshots, and
-//!   SIGTERM-triggered final snapshots;
-//! * [`snapshot`] — the versioned, checksummed snapshot envelope and
-//!   file lifecycle (atomic save, load, latest-in-directory);
+//!   batched zero-alloc fan-out with explicit `lagged` backpressure,
+//!   pacing of virtual minutes against the wall clock, background
+//!   auto-snapshots, and SIGTERM-triggered final snapshots;
+//! * [`snapshot`] — the versioned, checksummed snapshot envelope, its
+//!   file lifecycle (atomic save, load, latest-in-directory), and the
+//!   background writer that keeps disk I/O off the session thread;
 //! * [`attack`] — the closed-loop traffic frontend that replays any
 //!   [`ArrivalSource`](crate::workload::source::ArrivalSource) against a
 //!   live server from many concurrent wire clients.

@@ -11,19 +11,35 @@
 //! * each listener runs an accept thread;
 //! * each connection runs a **reader** thread (parses JSONL request
 //!   lines into messages) and a **writer** thread (drains a bounded
-//!   queue of outbound lines onto the socket);
-//! * the session thread drains messages between rounds, applies
-//!   commands at the current virtual minute, and fans events out.
+//!   queue of outbound messages onto the socket);
+//! * the session thread drains **all** pending messages between rounds,
+//!   applies commands at the current virtual minute, and fans events
+//!   out.
+//!
+//! ## The wire hot path
+//!
+//! Outbound lines are encoded **once**, directly into a reusable scratch
+//! buffer (`JsonLineEncoder` for events, `ResponseEncoder` for
+//! responses — no per-event JSON value tree), shared to all subscribers
+//! as one `Arc<str>`. Lines staged during one session-loop iteration are
+//! coalesced into per-client **batches**: one channel send per batch (at
+//! most [`ServeConfig::batch_max`] lines each) instead of one per line,
+//! and the writer thread drains everything queued, writes it through one
+//! `BufWriter`, and flushes **once** per drain instead of once per line.
+//! `cargo bench --bench serve` measures the result (commands/sec,
+//! events/sec, ack p50/p99) and pins the encode path allocation-free.
 //!
 //! ## Backpressure
 //!
-//! Every connection's outbound queue is a `sync_channel` bounded at
-//! [`ServeConfig::queue_cap`] lines. The session thread never blocks on
-//! a slow consumer: a full queue drops the line, and the connection is
-//! owed a `{"type":"lagged","dropped":N}` notice that is delivered as
-//! soon as its queue has room again — before any newer event. Memory per
-//! client is therefore strictly bounded; correctness is not, which is
-//! why the notice is explicit and typed.
+//! Every connection's outbound queue is bounded at
+//! [`ServeConfig::queue_cap`] *lines* (tracked exactly, across batches,
+//! via a shared in-flight counter the writer thread decrements). The
+//! session thread never blocks on a slow consumer: lines beyond the
+//! budget are dropped, and the connection is owed a
+//! `{"type":"lagged","dropped":N}` notice that is delivered as soon as
+//! its queue has room again — before any newer line. Memory per client
+//! is therefore strictly bounded; correctness is not, which is why the
+//! notice is explicit and typed.
 //!
 //! ## Virtual time
 //!
@@ -31,21 +47,33 @@
 //! minute (`0` = free-run). Rounds that fast-forward `n` minutes get an
 //! `n`-minute budget, so the virtual/wall ratio holds across quiescent
 //! spans; the budget is spent *waiting on the request channel*, so
-//! commands arriving mid-budget are applied before the next round.
+//! commands arriving mid-budget are applied before the next round. When
+//! the session drains and no work is pending, the loop **blocks** on the
+//! channel (no polling): an idle server burns ~0 CPU, and a stop signal
+//! wakes it through a self-pipe waker thread.
 //!
 //! ## Snapshots and shutdown
 //!
 //! With a snapshot directory configured, the session auto-snapshots
 //! every [`ServeConfig::snapshot_every`] virtual minutes, always at a
-//! round boundary. SIGTERM/SIGINT (or a `{"cmd":"shutdown"}` request)
-//! stop the loop and write one final snapshot. A `kill -9` obviously
-//! writes nothing — recovery then starts from the latest auto-snapshot
-//! ([`super::snapshot::latest_in`]), which is exactly the failover drill
-//! in EXPERIMENTS.md and the serve-smoke CI job.
+//! round boundary. The session thread only does the fast in-memory
+//! encode; the blocking tmp+rename disk write happens on a background
+//! [`snapshot::SnapshotWriter`] thread, and the time the session thread
+//! *did* spend on snapshot work is reported as
+//! [`ServeStats::snapshot_stall_ms`]. SIGTERM/SIGINT (or a
+//! `{"cmd":"shutdown"}` request) stop the loop and write one final
+//! snapshot; [`run`] returns only after every queued snapshot is durable
+//! on disk. A `kill -9` obviously writes nothing — a write interrupted
+//! mid-flight leaves at worst a `*.snap.tmp` orphan that the restore
+//! path ignores, and recovery starts from the latest complete
+//! auto-snapshot ([`super::snapshot::latest_in`]), which is exactly the
+//! failover drill in EXPERIMENTS.md and the serve-smoke CI job.
 
-use crate::sched::control::{EventSubscriber, SchedulerCommand, SchedulerEvent};
-use crate::serve::snapshot;
-use crate::serve::wire::{self, WireRequest};
+use crate::sched::control::{
+    EventSubscriber, JsonLineEncoder, SchedulerCommand, SchedulerEvent,
+};
+use crate::serve::snapshot::{self, SnapshotWriter};
+use crate::serve::wire::{self, ResponseEncoder, WireRequest};
 use crate::sim::{SimResult, SimSession};
 use crate::workload::source::ArrivalSource;
 use crate::Minutes;
@@ -54,9 +82,9 @@ use std::cell::RefCell;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, Once};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -74,6 +102,10 @@ pub struct ServeConfig {
     pub tick_ms: u64,
     /// Per-connection outbound queue bound, in lines.
     pub queue_cap: usize,
+    /// Most lines coalesced into one outbound channel message / socket
+    /// write burst. `1` degenerates to the per-line path (useful for the
+    /// bench sweep); larger values amortize wakeups and flushes.
+    pub batch_max: usize,
     /// Where snapshots are written; `None` disables them.
     pub snapshot_dir: Option<PathBuf>,
     /// Auto-snapshot period in virtual minutes; `0` disables (final and
@@ -88,7 +120,7 @@ pub struct ServeConfig {
 
 impl ServeConfig {
     /// Service defaults: no listeners, free-running, 1024-line client
-    /// queues, no snapshots.
+    /// queues, 256-line fan-out batches, no snapshots.
     pub fn new(sim: crate::sim::SimConfig) -> Self {
         ServeConfig {
             sim,
@@ -96,6 +128,7 @@ impl ServeConfig {
             uds: None,
             tick_ms: 0,
             queue_cap: 1024,
+            batch_max: 256,
             snapshot_dir: None,
             snapshot_every: 0,
             restore_from: None,
@@ -118,6 +151,10 @@ pub struct ServeStats {
     pub events_dropped: u64,
     /// Snapshots written (auto + requested + final).
     pub snapshots: u64,
+    /// Total wall milliseconds the session thread spent on snapshot work
+    /// (in-memory encode + handoff; disk writes happen on the background
+    /// writer thread and do not stall the wire).
+    pub snapshot_stall_ms: f64,
 }
 
 /// Everything [`run`] hands back.
@@ -149,11 +186,42 @@ pub fn conservation_line(res: &SimResult) -> String {
     )
 }
 
-/// Set by the signal handler; polled by the session loop.
+/// Set by the signal handler; checked by the session loop.
 static STOP: AtomicBool = AtomicBool::new(false);
+
+/// Write end of the self-pipe the signal handler pokes so a session
+/// parked in a blocking `recv` wakes immediately (`-1` = not installed).
+static STOP_WAKE_FD: AtomicI32 = AtomicI32::new(-1);
+
+/// The session channel the waker thread forwards stop wake-ups into.
+/// Re-pointed by each [`run`]; the waker thread itself is spawned once
+/// per process. (Stop signals are process-wide — `STOP` already stops
+/// every live session — so one waker suffices.)
+static WAKER_TX: Mutex<Option<Sender<SessionMsg>>> = Mutex::new(None);
+static WAKER_INIT: Once = Once::new();
+
+#[cfg(unix)]
+fn poke_stop_pipe() {
+    extern "C" {
+        fn write(fd: i32, buf: *const u8, n: usize) -> isize;
+    }
+    let fd = STOP_WAKE_FD.load(Ordering::SeqCst);
+    if fd >= 0 {
+        let byte = [1u8];
+        unsafe {
+            let _ = write(fd, byte.as_ptr(), 1);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn poke_stop_pipe() {}
 
 extern "C" fn note_stop(_sig: i32) {
     STOP.store(true, Ordering::SeqCst);
+    // `write(2)` is async-signal-safe; everything else (the channel
+    // send) happens on the waker thread.
+    poke_stop_pipe();
 }
 
 /// Route SIGTERM and SIGINT to the stop flag so the session loop can
@@ -170,92 +238,328 @@ fn install_stop_handlers() {
     }
 }
 
+/// Point the stop waker at this session's channel and, once per process,
+/// build the self-pipe and spawn the thread that turns a signal-handler
+/// pipe write into a [`SessionMsg::Wake`]. This is what lets the parked
+/// session block on `recv` outright instead of polling the stop flag.
+#[cfg(unix)]
+fn install_stop_waker(tx: Sender<SessionMsg>) {
+    *WAKER_TX.lock().unwrap() = Some(tx);
+    WAKER_INIT.call_once(|| {
+        extern "C" {
+            fn pipe(fds: *mut i32) -> i32;
+        }
+        let mut fds = [0i32; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+            return; // no waker: stop still lands at the next message
+        }
+        let rfd = fds[0];
+        STOP_WAKE_FD.store(fds[1], Ordering::SeqCst);
+        thread::spawn(move || {
+            extern "C" {
+                fn read(fd: i32, buf: *mut u8, n: usize) -> isize;
+            }
+            let mut byte = [0u8; 1];
+            loop {
+                let n = unsafe { read(rfd, byte.as_mut_ptr(), 1) };
+                if n <= 0 {
+                    return;
+                }
+                if let Some(tx) = WAKER_TX.lock().unwrap().as_ref() {
+                    let _ = tx.send(SessionMsg::Wake);
+                }
+            }
+        });
+    });
+}
+
+#[cfg(not(unix))]
+fn install_stop_waker(_tx: Sender<SessionMsg>) {}
+
+/// Block until the next message while the session is drained and idle.
+/// On unix the stop waker guarantees a signal still wakes us; elsewhere
+/// fall back to polling the stop flag.
+#[cfg(unix)]
+fn park_recv(rx: &Receiver<SessionMsg>) -> Option<SessionMsg> {
+    rx.recv().ok()
+}
+
+#[cfg(not(unix))]
+fn park_recv(rx: &Receiver<SessionMsg>) -> Option<SessionMsg> {
+    loop {
+        if STOP.load(Ordering::SeqCst) {
+            return None;
+        }
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(msg) => return Some(msg),
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return None,
+        }
+    }
+}
+
 static NEXT_CONN: AtomicU64 = AtomicU64::new(1);
 
+/// One outbound channel message: a single line or a coalesced batch of
+/// lines (each at most [`ServeConfig::batch_max`] long).
+enum OutMsg {
+    Line(Arc<str>),
+    Batch(Arc<[Arc<str>]>),
+}
+
+impl OutMsg {
+    fn lines(&self) -> u64 {
+        match self {
+            OutMsg::Line(_) => 1,
+            OutMsg::Batch(b) => b.len() as u64,
+        }
+    }
+}
+
 enum SessionMsg {
-    Connected { conn: u64, tx: SyncSender<Arc<str>> },
-    Request { conn: u64, line: String },
-    Disconnected { conn: u64 },
+    Connected {
+        conn: u64,
+        tx: SyncSender<OutMsg>,
+        /// Lines queued but not yet written to the socket; shared with
+        /// the writer thread so the session can enforce
+        /// [`ServeConfig::queue_cap`] in *lines* across batches.
+        inflight: Arc<AtomicU64>,
+    },
+    Request {
+        conn: u64,
+        line: String,
+    },
+    Disconnected {
+        conn: u64,
+    },
+    /// A stop signal landed; wakes a parked session so it notices.
+    Wake,
 }
 
 /// One connection's outbound half, owned by the session thread.
 struct ClientOut {
     conn: u64,
-    tx: SyncSender<Arc<str>>,
+    tx: SyncSender<OutMsg>,
+    inflight: Arc<AtomicU64>,
     subscribed: bool,
     /// Events dropped since this client's queue last had room; a
     /// `lagged` notice for them is owed before any newer line.
     owed: u64,
+    /// Lines staged during the current session-loop iteration, sent as
+    /// coalesced batches at the next flush.
+    pending: Vec<Arc<str>>,
 }
 
 /// The session thread's registry of live connections. Shared with the
 /// event subscriber via `Rc<RefCell<…>>` — single-threaded by
-/// construction, never locked.
+/// construction, never locked. Owns the reusable direct encoders, so
+/// steady-state event/response serialization allocates nothing beyond
+/// the one shared `Arc<str>` per line.
 struct FanOut {
     clients: Vec<ClientOut>,
+    enc: JsonLineEncoder,
+    resp: ResponseEncoder,
+    queue_cap: usize,
+    batch_max: usize,
     events_sent: u64,
     events_dropped: u64,
 }
 
-/// Try to hand `line` to one client without ever blocking: deliver any
-/// owed `lagged` notice first, then the line; a full queue increments
-/// the owed count instead of buffering.
-fn offer(c: &mut ClientOut, line: Arc<str>, sent: &mut u64, dropped: &mut u64) {
+/// Flush one client's staged lines without ever blocking: deliver any
+/// owed `lagged` notice first, then the staged lines in batches, each
+/// within the remaining line budget (`queue_cap` minus lines already
+/// queued). Lines beyond the budget are dropped and owed.
+fn flush_client(
+    c: &mut ClientOut,
+    resp: &mut ResponseEncoder,
+    queue_cap: usize,
+    batch_max: usize,
+    sent: &mut u64,
+    dropped: &mut u64,
+) {
+    if c.pending.is_empty() && c.owed == 0 {
+        return;
+    }
+    let queued = c.inflight.load(Ordering::Acquire) as usize;
+    let mut budget = queue_cap.saturating_sub(queued);
     if c.owed > 0 {
-        let notice: Arc<str> = Arc::from(wire::lagged_line(c.owed));
-        match c.tx.try_send(notice) {
-            Ok(()) => c.owed = 0,
-            Err(TrySendError::Full(_)) => {
-                c.owed += 1;
-                *dropped += 1;
+        if budget == 0 {
+            // Still no room: everything staged this iteration drops too,
+            // folded into the notice the client is owed. Nothing newer
+            // than the gap is ever delivered before the notice.
+            let n = c.pending.len() as u64;
+            c.owed += n;
+            *dropped += n;
+            c.pending.clear();
+            return;
+        }
+        let notice: Arc<str> = Arc::from(resp.lagged(c.owed));
+        c.inflight.fetch_add(1, Ordering::AcqRel);
+        match c.tx.try_send(OutMsg::Line(notice)) {
+            Ok(()) => {
+                c.owed = 0;
+                budget -= 1;
+            }
+            Err(_) => {
+                c.inflight.fetch_sub(1, Ordering::AcqRel);
+                c.pending.clear();
                 return;
             }
-            Err(TrySendError::Disconnected(_)) => return,
         }
     }
-    match c.tx.try_send(line) {
-        Ok(()) => *sent += 1,
-        Err(TrySendError::Full(_)) => {
-            c.owed += 1;
-            *dropped += 1;
+    let mut idx = 0;
+    while idx < c.pending.len() {
+        if budget == 0 {
+            let rest = (c.pending.len() - idx) as u64;
+            c.owed += rest;
+            *dropped += rest;
+            break;
         }
-        Err(TrySendError::Disconnected(_)) => {}
+        let chunk = batch_max.max(1).min(budget).min(c.pending.len() - idx);
+        let end = idx + chunk;
+        let msg = if chunk == 1 {
+            OutMsg::Line(c.pending[idx].clone())
+        } else {
+            OutMsg::Batch(c.pending[idx..end].iter().cloned().collect())
+        };
+        c.inflight.fetch_add(chunk as u64, Ordering::AcqRel);
+        match c.tx.try_send(msg) {
+            Ok(()) => {
+                *sent += chunk as u64;
+                budget -= chunk;
+                idx = end;
+            }
+            Err(TrySendError::Full(_)) => {
+                // Unreachable under the line accounting (messages ≤
+                // lines ≤ cap), but never block or lose count if it
+                // happens anyway.
+                c.inflight.fetch_sub(chunk as u64, Ordering::AcqRel);
+                let rest = (c.pending.len() - idx) as u64;
+                c.owed += rest;
+                *dropped += rest;
+                break;
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                c.inflight.fetch_sub(chunk as u64, Ordering::AcqRel);
+                break;
+            }
+        }
     }
+    c.pending.clear();
 }
 
 impl FanOut {
-    fn new() -> Self {
-        FanOut { clients: Vec::new(), events_sent: 0, events_dropped: 0 }
+    fn new(queue_cap: usize, batch_max: usize) -> Self {
+        FanOut {
+            clients: Vec::new(),
+            enc: JsonLineEncoder::new(),
+            resp: ResponseEncoder::new(),
+            queue_cap,
+            batch_max,
+            events_sent: 0,
+            events_dropped: 0,
+        }
     }
 
+    /// Encode an event once (directly, no value tree) and stage the
+    /// shared line for every subscriber.
     fn event(&mut self, ev: &SchedulerEvent) {
-        let FanOut { clients, events_sent, events_dropped } = self;
+        let FanOut { clients, enc, .. } = self;
         if !clients.iter().any(|c| c.subscribed) {
             return;
         }
-        let line: Arc<str> = Arc::from(crate::sched::control::event_jsonl_line(ev));
+        let line: Arc<str> = Arc::from(enc.event(ev));
         for c in clients.iter_mut().filter(|c| c.subscribed) {
-            offer(c, line.clone(), events_sent, events_dropped);
+            c.pending.push(line.clone());
         }
     }
 
-    fn respond(&mut self, conn: u64, line: String) {
-        let FanOut { clients, events_sent, events_dropped } = self;
-        if let Some(c) = clients.iter_mut().find(|c| c.conn == conn) {
-            offer(c, Arc::from(line), events_sent, events_dropped);
+    /// Stage one response line for a single connection.
+    fn push_line(&mut self, conn: u64, line: Arc<str>) {
+        if let Some(c) = self.clients.iter_mut().find(|c| c.conn == conn) {
+            c.pending.push(line);
         }
     }
 
-    /// Deliver owed `lagged` notices to any client whose queue has
-    /// drained. Without this, a client that lagged during a burst and
-    /// then went quiet alongside the cluster would never learn it
+    fn hello(&mut self, conn: u64, now: Minutes) {
+        let line: Arc<str> = Arc::from(self.resp.hello(now));
+        self.push_line(conn, line);
+    }
+
+    fn ack(&mut self, conn: u64, seq: Option<u64>, now: Minutes) {
+        let line: Arc<str> = Arc::from(self.resp.ack(seq, now));
+        self.push_line(conn, line);
+    }
+
+    fn error(&mut self, conn: u64, seq: Option<u64>, message: &str) {
+        let line: Arc<str> = Arc::from(self.resp.error(seq, message));
+        self.push_line(conn, line);
+    }
+
+    fn pong(&mut self, conn: u64, seq: Option<u64>, now: Minutes) {
+        let line: Arc<str> = Arc::from(self.resp.pong(seq, now));
+        self.push_line(conn, line);
+    }
+
+    fn snapshot_done(&mut self, conn: u64, seq: Option<u64>, minute: Minutes, path: &str) {
+        let line: Arc<str> = Arc::from(self.resp.snapshot(seq, minute, path));
+        self.push_line(conn, line);
+    }
+
+    /// Send everything staged since the last flush as per-client batches
+    /// (one channel message per [`ServeConfig::batch_max`] lines), and
+    /// deliver owed `lagged` notices to any client whose queue has
+    /// drained. Without the latter, a client that lagged during a burst
+    /// and then went quiet alongside the cluster would never learn it
     /// dropped anything — the notice must not wait for the next event.
-    fn flush_owed(&mut self) {
-        for c in self.clients.iter_mut() {
-            if c.owed > 0 {
-                let notice: Arc<str> = Arc::from(wire::lagged_line(c.owed));
-                if c.tx.try_send(notice).is_ok() {
-                    c.owed = 0;
+    fn flush(&mut self) {
+        let FanOut {
+            clients,
+            resp,
+            queue_cap,
+            batch_max,
+            events_sent,
+            events_dropped,
+            ..
+        } = self;
+        for c in clients.iter_mut() {
+            flush_client(c, resp, *queue_cap, *batch_max, events_sent, events_dropped);
+        }
+    }
+
+    /// Last-chance delivery of owed `lagged` notices at shutdown.
+    /// Without this, a client that was still draining its queue when the
+    /// server stopped would never learn about its final gap and its drop
+    /// accounting would not balance. The line budget is irrelevant here
+    /// (the stream is over; nothing can follow the notice), so this
+    /// retries briefly past it — but never hangs shutdown on a consumer
+    /// that has stopped reading.
+    fn flush_owed_final(&mut self) {
+        let FanOut { clients, resp, .. } = self;
+        for c in clients.iter_mut() {
+            if c.owed == 0 {
+                continue;
+            }
+            let mut notice: Arc<str> = Arc::from(resp.lagged(c.owed));
+            for _ in 0..25 {
+                c.inflight.fetch_add(1, Ordering::AcqRel);
+                match c.tx.try_send(OutMsg::Line(notice)) {
+                    Ok(()) => {
+                        c.owed = 0;
+                        break;
+                    }
+                    Err(TrySendError::Full(msg)) => {
+                        c.inflight.fetch_sub(1, Ordering::AcqRel);
+                        notice = match msg {
+                            OutMsg::Line(line) => line,
+                            OutMsg::Batch(_) => unreachable!("sent a line"),
+                        };
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        c.inflight.fetch_sub(1, Ordering::AcqRel);
+                        break;
+                    }
                 }
             }
         }
@@ -271,6 +575,22 @@ impl EventSubscriber for FanOutSub {
     }
 }
 
+fn write_msg<W: Write>(w: &mut W, msg: &OutMsg) -> std::io::Result<()> {
+    match msg {
+        OutMsg::Line(line) => {
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")
+        }
+        OutMsg::Batch(lines) => {
+            for line in lines.iter() {
+                w.write_all(line.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+            Ok(())
+        }
+    }
+}
+
 /// Spawn the reader and writer threads for one accepted connection.
 fn spawn_conn<R, W>(reader: R, writer: W, tx: Sender<SessionMsg>, queue_cap: usize)
 where
@@ -278,20 +598,41 @@ where
     W: Write + Send + 'static,
 {
     let conn = NEXT_CONN.fetch_add(1, Ordering::Relaxed);
-    let (out_tx, out_rx) = mpsc::sync_channel::<Arc<str>>(queue_cap.max(1));
+    // Message count can never exceed line count, so `queue_cap` slots
+    // are enough for the line-budgeted sender never to see `Full`.
+    let (out_tx, out_rx) = mpsc::sync_channel::<OutMsg>(queue_cap.max(1));
+    let inflight = Arc::new(AtomicU64::new(0));
+    let inflight_w = inflight.clone();
     thread::spawn(move || {
         let mut w = BufWriter::new(writer);
-        while let Ok(line) = out_rx.recv() {
-            let io = w
-                .write_all(line.as_bytes())
-                .and_then(|()| w.write_all(b"\n"))
-                .and_then(|()| w.flush());
-            if io.is_err() {
-                return; // reader side reports the disconnect
+        // Block for the first message, then drain everything already
+        // queued and flush once per drain — not once per line.
+        'conn: while let Ok(first) = out_rx.recv() {
+            let mut next = Some(first);
+            loop {
+                let msg = match next.take() {
+                    Some(m) => m,
+                    None => match out_rx.try_recv() {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    },
+                };
+                let n = msg.lines();
+                let io = write_msg(&mut w, &msg);
+                inflight_w.fetch_sub(n, Ordering::AcqRel);
+                if io.is_err() {
+                    break 'conn; // reader side reports the disconnect
+                }
+            }
+            if w.flush().is_err() {
+                break;
             }
         }
     });
-    if tx.send(SessionMsg::Connected { conn, tx: out_tx }).is_err() {
+    if tx
+        .send(SessionMsg::Connected { conn, tx: out_tx, inflight })
+        .is_err()
+    {
         return;
     }
     thread::spawn(move || {
@@ -358,16 +699,22 @@ fn start_uds(path: &PathBuf, _tx: Sender<SessionMsg>, _cap: usize) -> anyhow::Re
 struct ServerCtx {
     cfg: ServeConfig,
     fan: Rc<RefCell<FanOut>>,
+    /// Lazily spawned background disk writer for auto/final snapshots.
+    snap_writer: Option<SnapshotWriter>,
     requests: u64,
     connections: u64,
     snapshots: u64,
+    /// Session-thread milliseconds spent on snapshot work (encode +
+    /// handoff for async writes; the full save for requested ones).
+    snapshot_stall_ms: f64,
     shutdown_requested: bool,
 }
 
 impl ServerCtx {
-    /// Write a snapshot named for its label, minute, and a monotone
-    /// sequence number (several snapshots can land on one minute).
-    fn save_snapshot(&mut self, session: &SimSession, label: &str) -> anyhow::Result<PathBuf> {
+    /// The path a snapshot will be written to, named for its label,
+    /// minute, and a monotone sequence number (several snapshots can
+    /// land on one minute). Creates the directory and bumps the counter.
+    fn snapshot_target(&mut self, session: &SimSession, label: &str) -> anyhow::Result<PathBuf> {
         let dir = self
             .cfg
             .snapshot_dir
@@ -380,24 +727,53 @@ impl ServerCtx {
             session.now(),
             self.snapshots
         ));
-        snapshot::save(&path, &snapshot::encode(session))?;
         self.snapshots += 1;
+        Ok(path)
+    }
+
+    /// Write a snapshot synchronously (client-requested snapshots: the
+    /// response names a file that must already be durable).
+    fn save_snapshot_sync(&mut self, session: &SimSession, label: &str) -> anyhow::Result<PathBuf> {
+        let t0 = Instant::now();
+        let path = self.snapshot_target(session, label)?;
+        let result = snapshot::save(&path, &snapshot::encode(session));
+        self.snapshot_stall_ms += t0.elapsed().as_secs_f64() * 1e3;
+        result?;
+        Ok(path)
+    }
+
+    /// Encode a snapshot in memory and hand it to the background writer
+    /// (auto/final snapshots: the session thread never waits on disk).
+    fn save_snapshot_async(&mut self, session: &SimSession, label: &str) -> anyhow::Result<PathBuf> {
+        let t0 = Instant::now();
+        let path = self.snapshot_target(session, label)?;
+        let bytes = snapshot::encode(session);
+        let queued = self
+            .snap_writer
+            .get_or_insert_with(SnapshotWriter::spawn)
+            .enqueue(path.clone(), bytes);
+        self.snapshot_stall_ms += t0.elapsed().as_secs_f64() * 1e3;
+        // A dead writer thread means a disk write already failed; its
+        // error surfaces when the writer is finished at shutdown.
+        anyhow::ensure!(queued, "snapshot writer thread is gone (earlier write failed?)");
         Ok(path)
     }
 
     fn handle(&mut self, session: &mut SimSession, msg: SessionMsg) {
         match msg {
-            SessionMsg::Connected { conn, tx } => {
+            SessionMsg::Wake => {}
+            SessionMsg::Connected { conn, tx, inflight } => {
                 self.connections += 1;
-                self.fan.borrow_mut().clients.push(ClientOut {
+                let mut fan = self.fan.borrow_mut();
+                fan.clients.push(ClientOut {
                     conn,
                     tx,
+                    inflight,
                     subscribed: false,
                     owed: 0,
+                    pending: Vec::new(),
                 });
-                self.fan
-                    .borrow_mut()
-                    .respond(conn, wire::hello_line(session.now()));
+                fan.hello(conn, session.now());
             }
             SessionMsg::Disconnected { conn } => {
                 self.fan.borrow_mut().clients.retain(|c| c.conn != conn);
@@ -405,10 +781,7 @@ impl ServerCtx {
             SessionMsg::Request { conn, line } => {
                 self.requests += 1;
                 match wire::parse_request(&line) {
-                    Err(e) => self
-                        .fan
-                        .borrow_mut()
-                        .respond(conn, wire::error_line(None, &format!("{e:#}"))),
+                    Err(e) => self.fan.borrow_mut().error(conn, None, &format!("{e:#}")),
                     Ok(WireRequest::Command { mut cmd, seq }) => {
                         if let SchedulerCommand::Submit(spec) = &mut cmd {
                             // "As soon as possible": live clients cannot
@@ -422,37 +795,32 @@ impl ServerCtx {
                             session.reopen();
                         }
                         session.command(cmd);
-                        self.fan
-                            .borrow_mut()
-                            .respond(conn, wire::ack_line(seq, session.now()));
+                        self.fan.borrow_mut().ack(conn, seq, session.now());
                     }
                     Ok(WireRequest::Subscribe { seq }) => {
                         let mut fan = self.fan.borrow_mut();
                         if let Some(c) = fan.clients.iter_mut().find(|c| c.conn == conn) {
                             c.subscribed = true;
                         }
-                        fan.respond(conn, wire::ack_line(seq, session.now()));
+                        fan.ack(conn, seq, session.now());
                     }
                     Ok(WireRequest::Snapshot { seq }) => {
-                        let line = match self.save_snapshot(session, "snap") {
-                            Ok(path) => wire::snapshot_line(
+                        match self.save_snapshot_sync(session, "snap") {
+                            Ok(path) => self.fan.borrow_mut().snapshot_done(
+                                conn,
                                 seq,
                                 session.now(),
                                 &path.display().to_string(),
                             ),
-                            Err(e) => wire::error_line(seq, &format!("{e:#}")),
-                        };
-                        self.fan.borrow_mut().respond(conn, line);
+                            Err(e) => self.fan.borrow_mut().error(conn, seq, &format!("{e:#}")),
+                        }
                     }
-                    Ok(WireRequest::Ping { seq }) => self
-                        .fan
-                        .borrow_mut()
-                        .respond(conn, wire::pong_line(seq, session.now())),
+                    Ok(WireRequest::Ping { seq }) => {
+                        self.fan.borrow_mut().pong(conn, seq, session.now())
+                    }
                     Ok(WireRequest::Shutdown { seq }) => {
                         self.shutdown_requested = true;
-                        self.fan
-                            .borrow_mut()
-                            .respond(conn, wire::ack_line(seq, session.now()));
+                        self.fan.borrow_mut().ack(conn, seq, session.now());
                     }
                 }
             }
@@ -473,7 +841,8 @@ pub fn run(cfg: ServeConfig, source: &mut dyn ArrivalSource) -> anyhow::Result<S
     install_stop_handlers();
     STOP.store(false, Ordering::SeqCst);
     let (tx, rx): (Sender<SessionMsg>, Receiver<SessionMsg>) = mpsc::channel();
-    let fan = Rc::new(RefCell::new(FanOut::new()));
+    install_stop_waker(tx.clone());
+    let fan = Rc::new(RefCell::new(FanOut::new(cfg.queue_cap, cfg.batch_max)));
     if let Some(addr) = &cfg.tcp {
         let bound = start_tcp(addr, tx.clone(), cfg.queue_cap)?;
         eprintln!("serving tcp on {bound}");
@@ -502,17 +871,23 @@ pub fn run(cfg: ServeConfig, source: &mut dyn ArrivalSource) -> anyhow::Result<S
     let mut ctx = ServerCtx {
         cfg,
         fan,
+        snap_writer: None,
         requests: 0,
         connections: 0,
         snapshots: 0,
+        snapshot_stall_ms: 0.0,
         shutdown_requested: false,
     };
 
+    let mut loop_err: Option<anyhow::Error> = None;
     loop {
+        // Drain and apply *everything* queued — commands, connects,
+        // disconnects — then flush the staged responses/events as
+        // per-client batches.
         while let Ok(msg) = rx.try_recv() {
             ctx.handle(&mut session, msg);
         }
-        ctx.fan.borrow_mut().flush_owed();
+        ctx.fan.borrow_mut().flush();
         if ctx.stopping() {
             break;
         }
@@ -521,17 +896,24 @@ pub fn run(cfg: ServeConfig, source: &mut dyn ArrivalSource) -> anyhow::Result<S
                 break;
             }
             // Parked: virtual time freezes while the cluster is idle and
-            // no work is pending; wake on traffic or the stop flag.
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(msg) => ctx.handle(&mut session, msg),
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            // no work is pending. Block outright — no polling — until
+            // traffic arrives or the stop waker pokes the channel.
+            match park_recv(&rx) {
+                Some(msg) => ctx.handle(&mut session, msg),
+                None => break,
             }
             continue;
         }
         if session.now() >= next_auto {
-            let path = ctx.save_snapshot(&session, "auto")?;
-            eprintln!("auto-snapshot at minute {}: {}", session.now(), path.display());
+            match ctx.save_snapshot_async(&session, "auto") {
+                Ok(path) => {
+                    eprintln!("auto-snapshot at minute {}: {}", session.now(), path.display());
+                }
+                Err(e) => {
+                    loop_err = Some(e);
+                    break;
+                }
+            }
             while next_auto <= session.now() {
                 next_auto = next_auto.saturating_add(every);
             }
@@ -539,10 +921,12 @@ pub fn run(cfg: ServeConfig, source: &mut dyn ArrivalSource) -> anyhow::Result<S
         let round_start = Instant::now();
         let before = session.now();
         session.round(source);
+        ctx.fan.borrow_mut().flush();
         if ctx.cfg.tick_ms > 0 {
             // Spend the wall budget for the minutes just simulated
             // waiting on the request channel, so commands arriving
-            // mid-budget apply before the next round.
+            // mid-budget are applied — and their acks flushed — before
+            // the next round.
             let dt = session.now().saturating_sub(before).max(1);
             let deadline =
                 round_start + Duration::from_millis(ctx.cfg.tick_ms.saturating_mul(dt));
@@ -552,7 +936,13 @@ pub fn run(cfg: ServeConfig, source: &mut dyn ArrivalSource) -> anyhow::Result<S
                     break;
                 }
                 match rx.recv_timeout(left) {
-                    Ok(msg) => ctx.handle(&mut session, msg),
+                    Ok(msg) => {
+                        ctx.handle(&mut session, msg);
+                        while let Ok(more) = rx.try_recv() {
+                            ctx.handle(&mut session, more);
+                        }
+                        ctx.fan.borrow_mut().flush();
+                    }
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
                 }
@@ -561,9 +951,28 @@ pub fn run(cfg: ServeConfig, source: &mut dyn ArrivalSource) -> anyhow::Result<S
     }
 
     let stopped = ctx.stopping();
-    if stopped && ctx.cfg.snapshot_dir.is_some() {
-        let path = ctx.save_snapshot(&session, "final")?;
-        eprintln!("final snapshot at minute {}: {}", session.now(), path.display());
+    if stopped && ctx.cfg.snapshot_dir.is_some() && loop_err.is_none() {
+        match ctx.save_snapshot_async(&session, "final") {
+            Ok(path) => {
+                eprintln!("final snapshot at minute {}: {}", session.now(), path.display());
+            }
+            Err(e) => loop_err = Some(e),
+        }
+    }
+    {
+        let mut fan = ctx.fan.borrow_mut();
+        fan.flush();
+        fan.flush_owed_final();
+    }
+    // Wait for every queued snapshot to be durable; a disk-write error
+    // from the background thread outranks the generic enqueue failure.
+    if let Some(writer) = ctx.snap_writer.take() {
+        if let Err(e) = writer.finish() {
+            return Err(e);
+        }
+    }
+    if let Some(e) = loop_err {
+        return Err(e);
     }
     if let Some(path) = &ctx.cfg.uds {
         std::fs::remove_file(path).ok();
@@ -578,6 +987,7 @@ pub fn run(cfg: ServeConfig, source: &mut dyn ArrivalSource) -> anyhow::Result<S
             events_sent: fan.events_sent,
             events_dropped: fan.events_dropped,
             snapshots: ctx.snapshots,
+            snapshot_stall_ms: ctx.snapshot_stall_ms,
         },
         stopped,
     })

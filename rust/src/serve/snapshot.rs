@@ -170,6 +170,61 @@ pub fn load(path: &Path) -> anyhow::Result<Vec<u8>> {
     std::fs::read(path).with_context(|| format!("reading snapshot {}", path.display()))
 }
 
+/// Background snapshot writer: the session thread does the fast
+/// in-memory [`encode`] and hands `(path, bytes)` over a channel; this
+/// thread does the blocking disk work ([`save`]'s tmp + rename), so
+/// auto-snapshots never stall the wire. Crash safety is unchanged: a
+/// `kill -9` mid-write leaves at worst a `*.snap.tmp` orphan, which
+/// [`latest_in`] never selects — the newest *renamed* snapshot is always
+/// a complete, checksummed image.
+///
+/// Writes happen in enqueue order; [`finish`](SnapshotWriter::finish)
+/// drains the queue and surfaces the first write error, so a graceful
+/// shutdown only returns once every queued snapshot (the final one
+/// included) is durable on disk.
+pub struct SnapshotWriter {
+    tx: Option<std::sync::mpsc::Sender<(PathBuf, Vec<u8>)>>,
+    handle: Option<std::thread::JoinHandle<anyhow::Result<u64>>>,
+}
+
+impl SnapshotWriter {
+    /// Start the writer thread.
+    pub fn spawn() -> Self {
+        let (tx, rx) = std::sync::mpsc::channel::<(PathBuf, Vec<u8>)>();
+        let handle = std::thread::spawn(move || -> anyhow::Result<u64> {
+            let mut written = 0u64;
+            for (path, bytes) in rx {
+                save(&path, &bytes)?;
+                written += 1;
+            }
+            Ok(written)
+        });
+        SnapshotWriter { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Queue one snapshot image for writing. Returns `false` when the
+    /// writer thread has died — its error surfaces from
+    /// [`finish`](SnapshotWriter::finish).
+    pub fn enqueue(&self, path: PathBuf, bytes: Vec<u8>) -> bool {
+        match &self.tx {
+            Some(tx) => tx.send((path, bytes)).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Close the queue, wait for every pending write, and return how many
+    /// snapshots were written — or the first write error.
+    pub fn finish(mut self) -> anyhow::Result<u64> {
+        self.tx.take();
+        match self.handle.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| anyhow::anyhow!("snapshot writer thread panicked"))?,
+            None => Ok(0),
+        }
+    }
+}
+
 /// The most recent `*.snap` file in `dir` — by modification time, then
 /// name — or `None` when the directory holds no snapshots. The restore
 /// path after a hard kill points here.

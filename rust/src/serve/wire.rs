@@ -232,6 +232,96 @@ pub fn lagged_line(dropped: u64) -> String {
     .to_string()
 }
 
+/// Direct single-pass encoder for the response lines above: serializes
+/// each response straight into a reusable scratch buffer, skipping the
+/// [`Json`] value tree. Byte-identical to the `*_line` builders (keys in
+/// the sorted order the value tree's `BTreeMap` would produce, numbers
+/// and strings through the same [`crate::util::json`] formatting) and
+/// allocation-free in steady state — the serve hot path's counterpart to
+/// [`crate::sched::control::JsonLineEncoder`].
+#[derive(Default)]
+pub struct ResponseEncoder {
+    buf: String,
+}
+
+impl ResponseEncoder {
+    /// A fresh encoder with a line-sized scratch buffer.
+    pub fn new() -> Self {
+        ResponseEncoder { buf: String::with_capacity(128) }
+    }
+
+    fn seq_then_type(&mut self, seq: Option<u64>, kind: &str) -> &str {
+        use crate::util::json::write_num as num;
+        let b = &mut self.buf;
+        if let Some(s) = seq {
+            b.push_str(",\"seq\":");
+            num(b, s as f64);
+        }
+        b.push_str(",\"type\":\"");
+        b.push_str(kind);
+        b.push_str("\"}");
+        &self.buf
+    }
+
+    /// `{"now":…,"protocol":1,"type":"hello"}`.
+    pub fn hello(&mut self, now: Minutes) -> &str {
+        use crate::util::json::write_num as num;
+        self.buf.clear();
+        self.buf.push_str("{\"now\":");
+        num(&mut self.buf, now as f64);
+        self.buf.push_str(",\"protocol\":1,\"type\":\"hello\"}");
+        &self.buf
+    }
+
+    /// `{"now":…[,"seq":…],"type":"ack"}`.
+    pub fn ack(&mut self, seq: Option<u64>, now: Minutes) -> &str {
+        use crate::util::json::write_num as num;
+        self.buf.clear();
+        self.buf.push_str("{\"now\":");
+        num(&mut self.buf, now as f64);
+        self.seq_then_type(seq, "ack")
+    }
+
+    /// `{"error":…[,"seq":…],"type":"error"}`.
+    pub fn error(&mut self, seq: Option<u64>, message: &str) -> &str {
+        use crate::util::json::write_escaped as esc;
+        self.buf.clear();
+        self.buf.push_str("{\"error\":");
+        esc(&mut self.buf, message);
+        self.seq_then_type(seq, "error")
+    }
+
+    /// `{"now":…[,"seq":…],"type":"pong"}`.
+    pub fn pong(&mut self, seq: Option<u64>, now: Minutes) -> &str {
+        use crate::util::json::write_num as num;
+        self.buf.clear();
+        self.buf.push_str("{\"now\":");
+        num(&mut self.buf, now as f64);
+        self.seq_then_type(seq, "pong")
+    }
+
+    /// `{"minute":…,"path":…[,"seq":…],"type":"snapshot"}`.
+    pub fn snapshot(&mut self, seq: Option<u64>, minute: Minutes, path: &str) -> &str {
+        use crate::util::json::{write_escaped as esc, write_num as num};
+        self.buf.clear();
+        self.buf.push_str("{\"minute\":");
+        num(&mut self.buf, minute as f64);
+        self.buf.push_str(",\"path\":");
+        esc(&mut self.buf, path);
+        self.seq_then_type(seq, "snapshot")
+    }
+
+    /// `{"dropped":…,"type":"lagged"}`.
+    pub fn lagged(&mut self, dropped: u64) -> &str {
+        use crate::util::json::write_num as num;
+        self.buf.clear();
+        self.buf.push_str("{\"dropped\":");
+        num(&mut self.buf, dropped as f64);
+        self.buf.push_str(",\"type\":\"lagged\"}");
+        &self.buf
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,6 +383,29 @@ mod tests {
             r#"{"cmd":"submit","id":1,"class":"TE","cpu":-1,"ram_gb":1,"gpu":0,"exec_time":5}"#,
         ] {
             assert!(parse_request(line).is_err(), "{line:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn direct_response_encoder_matches_value_tree_builders() {
+        let mut enc = ResponseEncoder::new();
+        for now in [0u64, 7, 123_456_789] {
+            for seq in [None, Some(0u64), Some(42), Some(u64::from(u32::MAX) + 1)] {
+                assert_eq!(enc.ack(seq, now), ack_line(seq, now));
+                assert_eq!(enc.pong(seq, now), pong_line(seq, now));
+                assert_eq!(
+                    enc.snapshot(seq, now, "/tmp/a b/auto-000000000042-000007.snap"),
+                    snapshot_line(seq, now, "/tmp/a b/auto-000000000042-000007.snap")
+                );
+            }
+            assert_eq!(enc.hello(now), hello_line(now));
+        }
+        for msg in ["", "plain", "with \"quotes\" and \\slash", "ctrl\u{1}\n\t", "üñíçødé"] {
+            assert_eq!(enc.error(None, msg), error_line(None, msg));
+            assert_eq!(enc.error(Some(9), msg), error_line(Some(9), msg));
+        }
+        for dropped in [1u64, 250, 1 << 40] {
+            assert_eq!(enc.lagged(dropped), lagged_line(dropped));
         }
     }
 

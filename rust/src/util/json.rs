@@ -209,18 +209,27 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_num(out: &mut String, x: f64) {
+/// Append one JSON number. Crate-visible so the direct line encoders
+/// ([`crate::sched::control::JsonLineEncoder`], the wire response
+/// encoder) share the exact formatting code with the value tree — byte
+/// identity between the two paths holds by construction. Allocation-free:
+/// both branches format straight into `out` via `fmt::Write`.
+pub(crate) fn write_num(out: &mut String, x: f64) {
+    use fmt::Write as _;
     if x.is_nan() || x.is_infinite() {
         // JSON has no NaN/Inf; null is the least-bad round-trip.
         out.push_str("null");
     } else if x.fract() == 0.0 && x.abs() < 1e15 {
-        out.push_str(&format!("{}", x as i64));
+        let _ = write!(out, "{}", x as i64);
     } else {
-        out.push_str(&format!("{x}"));
+        let _ = write!(out, "{x}");
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Append one JSON string (quotes included, escapes applied). Shared with
+/// the direct line encoders like [`write_num`]; allocation-free.
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
+    use fmt::Write as _;
     out.push('"');
     for c in s.chars() {
         match c {
@@ -229,7 +238,9 @@ fn write_escaped(out: &mut String, s: &str) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
             c => out.push(c),
         }
     }

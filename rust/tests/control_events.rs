@@ -423,3 +423,104 @@ fn golden_jsonl_event_log_pins_the_scenario() {
         path.display()
     );
 }
+
+/// Every constructible event, aimed at the encoder edge cases: optional
+/// `finished_at`/`slowdown` fields, NaN slowdown on unfinished records,
+/// fractional and integer-valued floats, empty and multi-element
+/// eviction lists, and reason strings that need escaping.
+fn encoder_sweep_events() -> Vec<SchedulerEvent> {
+    use fitgpp::job::TenantId;
+    use fitgpp::sim::JobRecord;
+    let record = |finished_at: Option<u64>, slowdown: f64, cancelled: bool| JobRecord {
+        id: JobId(7),
+        class: JobClass::Te,
+        demand: rv(4.0, 16.5, 1.0),
+        submit: 3,
+        exec_time: 120,
+        grace_period: 10,
+        first_start: Some(5),
+        finished_at,
+        preemptions: 2,
+        evictions: 1,
+        resched_intervals: vec![4, 9],
+        slowdown,
+        cancelled,
+        tenant: TenantId(3),
+    };
+    vec![
+        SchedulerEvent::Submitted { at: 0, job: JobId(1), class: JobClass::Be },
+        SchedulerEvent::Submitted { at: u64::MAX / 2, job: JobId(u32::MAX), class: JobClass::Te },
+        SchedulerEvent::Started { at: 1, job: JobId(2), node: NodeId(0) },
+        SchedulerEvent::Resumed { at: 2, job: JobId(3), node: NodeId(41) },
+        SchedulerEvent::Preempted { at: 3, job: JobId(4) },
+        SchedulerEvent::Vacated { at: 4, job: JobId(5) },
+        SchedulerEvent::Finished { at: 130, job: JobId(7), record: record(Some(130), 1.25, false) },
+        SchedulerEvent::Finished { at: 130, job: JobId(7), record: record(Some(130), 1.0, false) },
+        // Unfinished-at-cutoff shape: no finished_at/slowdown keys at all.
+        SchedulerEvent::Finished { at: 200, job: JobId(7), record: record(None, f64::NAN, false) },
+        SchedulerEvent::Cancelled { at: 50, job: JobId(7), record: record(None, 0.0, true) },
+        SchedulerEvent::Reclassified { at: 6, job: JobId(8), class: JobClass::Be },
+        SchedulerEvent::NodeLost { at: 7, node: NodeId(2), lost: vec![] },
+        SchedulerEvent::NodeLost {
+            at: 8,
+            node: NodeId(3),
+            lost: vec![JobId(1), JobId(9), JobId(100)],
+        },
+        SchedulerEvent::NodeRestored { at: 9, node: NodeId(2) },
+        SchedulerEvent::NodeDraining { at: 10, node: NodeId(4) },
+        SchedulerEvent::NodeResized {
+            at: 11,
+            node: NodeId(5),
+            capacity: rv(96.0, 1536.5, 8.0),
+        },
+        SchedulerEvent::QuotaChanged { at: 12, tenant: fitgpp::job::TenantId(1), size: 2.75 },
+        SchedulerEvent::QuotaChanged {
+            at: 13,
+            tenant: fitgpp::job::TenantId(2),
+            size: f64::INFINITY,
+        },
+        SchedulerEvent::WeightChanged { at: 14, tenant: fitgpp::job::TenantId(1), weight: 3 },
+        SchedulerEvent::AdmissionSkipped { at: 15, job: JobId(11), tenant: fitgpp::job::TenantId(2) },
+        SchedulerEvent::CommandRejected { at: 16, reason: String::new() },
+        SchedulerEvent::CommandRejected {
+            at: 17,
+            reason: "bad \"spec\": tab\there, newline\nthere, ctrl \u{1}, unicode üñï".into(),
+        },
+    ]
+}
+
+#[test]
+fn direct_encoder_matches_value_tree_for_every_event_variant() {
+    use fitgpp::sched::control::{event_jsonl_line, JsonLineEncoder};
+    let events = encoder_sweep_events();
+    // The sweep must actually cover every variant kind.
+    let kinds: HashSet<&str> = events.iter().map(|e| e.kind()).collect();
+    for kind in [
+        "submitted",
+        "started",
+        "resumed",
+        "preempted",
+        "vacated",
+        "finished",
+        "cancelled",
+        "reclassified",
+        "node_lost",
+        "node_restored",
+        "node_draining",
+        "node_resized",
+        "quota_changed",
+        "weight_changed",
+        "admission_skipped",
+        "command_rejected",
+    ] {
+        assert!(kinds.contains(kind), "sweep is missing a {kind:?} event");
+    }
+    let mut enc = JsonLineEncoder::new();
+    for ev in &events {
+        assert_eq!(
+            enc.event(ev),
+            event_jsonl_line(ev),
+            "direct encoding diverged from the value tree for {ev:?}"
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! Backpressure fidelity under batched fan-out: a slow subscriber is
+//! told exactly what it missed, and never at the expense of fast ones.
+//!
+//! Three subscribers watch the same run; one of them sleeps through the
+//! whole burst. The properties pinned here:
+//!
+//! 1. **Fast subscribers are unaffected** — both fast streams carry the
+//!    complete event sequence, byte-identical to each other, with zero
+//!    `lagged` notices.
+//! 2. **Drop accounting conserves lines** — for the slow subscriber,
+//!    `delivered event lines + Σ lagged.dropped` equals the full event
+//!    count, so every dropped line is reported exactly once.
+//! 3. **Notices precede newer lines** — the slow stream is an in-order
+//!    subsequence of the fast stream, so nothing newer than a gap is
+//!    ever delivered before the `lagged` notice covering that gap (a
+//!    gap in the subsequence without a notice would break property 2).
+//!
+//! Every client socket carries a read timeout, so a lost line or a lost
+//! notice fails the test loudly instead of hanging it.
+
+#![cfg(unix)]
+
+use fitgpp::cluster::ClusterSpec;
+use fitgpp::sched::policy::PolicyKind;
+use fitgpp::serve::server::{run, ServeConfig};
+use fitgpp::sim::SimConfig;
+use fitgpp::util::json::Json;
+use fitgpp::workload::source::WorkloadSource;
+use fitgpp::workload::Workload;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+/// Enough jobs that the slow subscriber's socket buffer fills during the
+/// burst (its server-side writer blocks, its queue hits the cap, lines
+/// drop) while the fast subscribers never feel it.
+const JOBS: u32 = 4000;
+
+fn connect(sock: &std::path::Path) -> UnixStream {
+    let mut tries = 0;
+    loop {
+        match UnixStream::connect(sock) {
+            Ok(s) => {
+                s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                return s;
+            }
+            Err(_) if tries < 500 => {
+                tries += 1;
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => panic!("server socket never came up: {e}"),
+        }
+    }
+}
+
+/// Subscribe and consume the handshake (hello + subscribe ack) so the
+/// driver can start the burst knowing every subscriber is attached.
+fn subscribe(sock: &std::path::Path) -> (BufReader<UnixStream>, UnixStream) {
+    let stream = connect(sock);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(&line).unwrap().get("type").as_str(), Some("hello"));
+    writeln!(writer, r#"{{"cmd":"subscribe","seq":1}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(&line).unwrap().get("type").as_str(), Some("ack"));
+    (reader, writer)
+}
+
+/// Read one subscriber's stream until `finished` events for all of
+/// [`JOBS`] have been seen, panicking on any `lagged` notice — the fast
+/// subscriber's contract is the complete stream, nothing dropped.
+fn read_complete_stream(reader: &mut BufReader<UnixStream>) -> Vec<String> {
+    let mut events = Vec::new();
+    let mut finished = 0u32;
+    let mut line = String::new();
+    while finished < JOBS {
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed early");
+        let v = Json::parse(&line).unwrap();
+        match v.get("type").as_str() {
+            Some("lagged") => panic!("fast subscriber lagged: {line}"),
+            Some("hello") | Some("ack") | Some("error") | Some("pong") | Some("snapshot") => {}
+            Some(t) => {
+                if t == "finished" {
+                    finished += 1;
+                }
+                events.push(line.trim_end().to_string());
+            }
+            None => panic!("line without a type: {line}"),
+        }
+        line.clear();
+    }
+    events
+}
+
+/// True when `needle` appears in `haystack` in order (not necessarily
+/// contiguously).
+fn is_subsequence(needle: &[String], haystack: &[String]) -> bool {
+    let mut it = haystack.iter();
+    needle.iter().all(|n| it.any(|h| h == n))
+}
+
+#[test]
+fn slow_subscriber_gets_exact_drop_accounting_fast_ones_lose_nothing() {
+    let sock = std::env::temp_dir().join(format!("fitgpp-bp-test-{}.sock", std::process::id()));
+    let mut cfg = ServeConfig::new(SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Fifo));
+    cfg.uds = Some(sock.clone());
+    // Small enough that a sleeping consumer overflows once its socket
+    // buffer fills, large enough that a reading one never queues it.
+    cfg.queue_cap = 64;
+    let server = thread::spawn(move || {
+        let workload = Workload::new(vec![]);
+        let mut source = WorkloadSource::new(&workload);
+        run(cfg, &mut source).unwrap()
+    });
+
+    let ready = Arc::new(Barrier::new(4));
+    let burst_done = Arc::new(AtomicBool::new(false));
+    // Carries the full event count from the controller to the slow
+    // subscriber, which reads until its own accounting balances.
+    let (target_tx, target_rx) = mpsc::channel::<u64>();
+
+    // Fast subscriber #1 doubles as the controller: once it has seen the
+    // whole run it tells the slow subscriber what "complete" means and
+    // stops the server (which force-delivers any still-owed notice).
+    let fast1 = {
+        let sock = sock.clone();
+        let ready = ready.clone();
+        let burst_done = burst_done.clone();
+        thread::spawn(move || {
+            let (mut reader, mut writer) = subscribe(&sock);
+            ready.wait();
+            let events = read_complete_stream(&mut reader);
+            burst_done.store(true, Ordering::SeqCst);
+            target_tx.send(events.len() as u64).unwrap();
+            writeln!(writer, r#"{{"cmd":"shutdown"}}"#).unwrap();
+            events
+        })
+    };
+
+    // Fast subscriber #2 just reads everything as it comes.
+    let fast2 = {
+        let sock = sock.clone();
+        let ready = ready.clone();
+        thread::spawn(move || {
+            let (mut reader, _writer) = subscribe(&sock);
+            ready.wait();
+            read_complete_stream(&mut reader)
+        })
+    };
+
+    // The slow subscriber sleeps through the burst, then drains until
+    // every line is accounted for: delivered, or covered by a notice.
+    let slow = {
+        let sock = sock.clone();
+        let ready = ready.clone();
+        let burst_done = burst_done.clone();
+        thread::spawn(move || {
+            let (mut reader, _writer) = subscribe(&sock);
+            ready.wait();
+            while !burst_done.load(Ordering::SeqCst) {
+                thread::sleep(Duration::from_millis(25));
+            }
+            let target = target_rx.recv().unwrap();
+            let mut events = Vec::new();
+            let mut lagged: Vec<u64> = Vec::new();
+            let mut line = String::new();
+            while (events.len() as u64) + lagged.iter().sum::<u64>() < target {
+                assert!(
+                    reader.read_line(&mut line).unwrap() > 0,
+                    "stream ended before the accounting balanced"
+                );
+                let v = Json::parse(&line).unwrap();
+                match v.get("type").as_str() {
+                    Some("lagged") => {
+                        let dropped = v.get("dropped").as_u64().expect("lagged without a count");
+                        assert!(dropped > 0, "lagged notice claiming zero drops: {line}");
+                        lagged.push(dropped);
+                    }
+                    Some("hello") | Some("ack") | Some("error") | Some("pong")
+                    | Some("snapshot") => {}
+                    Some(_) => events.push(line.trim_end().to_string()),
+                    None => panic!("line without a type: {line}"),
+                }
+                line.clear();
+            }
+            (events, lagged, target)
+        })
+    };
+
+    // The driver submits the burst, paced by acks so no single session
+    // iteration stages more lines than a reading subscriber's queue cap.
+    let driver = {
+        let sock = sock.clone();
+        let ready = ready.clone();
+        thread::spawn(move || {
+            let stream = connect(&sock);
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap(); // hello
+            ready.wait();
+            for id in 0..JOBS {
+                writeln!(
+                    writer,
+                    r#"{{"cmd":"submit","id":{id},"class":"BE","cpu":1,"ram_gb":1,"gpu":0,"exec_time":1,"seq":{}}}"#,
+                    u64::from(id) + 1
+                )
+                .unwrap();
+                loop {
+                    line.clear();
+                    assert!(reader.read_line(&mut line).unwrap() > 0, "server closed early");
+                    if Json::parse(&line).unwrap().get("type").as_str() == Some("ack") {
+                        break;
+                    }
+                }
+            }
+        })
+    };
+
+    driver.join().unwrap();
+    let fast1_events = fast1.join().unwrap();
+    let fast2_events = fast2.join().unwrap();
+    let (slow_events, slow_lagged, target) = slow.join().unwrap();
+    let outcome = server.join().unwrap();
+
+    // Fast subscribers saw the identical, complete stream.
+    assert_eq!(fast1_events, fast2_events, "fast subscribers diverged");
+    assert_eq!(
+        fast1_events.iter().filter(|l| l.contains("\"type\":\"finished\"")).count(),
+        JOBS as usize
+    );
+
+    // The slow subscriber lagged, was told so, and the accounting is
+    // exact: every line is either delivered or counted in a notice.
+    assert!(!slow_lagged.is_empty(), "slow subscriber never got a lagged notice");
+    let dropped: u64 = slow_lagged.iter().sum();
+    assert_eq!(
+        slow_events.len() as u64 + dropped,
+        target,
+        "delivered + dropped must equal the full event count"
+    );
+    assert!(
+        is_subsequence(&slow_events, &fast1_events),
+        "slow stream is not an in-order subsequence of the fast stream"
+    );
+
+    // And the server-side counter agrees someone dropped lines.
+    assert!(outcome.stats.events_dropped >= dropped);
+    assert_eq!(outcome.result.metrics.completed, u64::from(JOBS));
+}

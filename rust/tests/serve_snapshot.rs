@@ -257,3 +257,65 @@ fn restore_under_wrong_policy_is_refused() {
         "unexpected error: {err:#}"
     );
 }
+
+#[test]
+fn background_writer_persists_decodable_snapshots() {
+    let dir = std::env::temp_dir().join(format!("fitgpp-snapwriter-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Pcg64::new(9);
+    let wl = gen::workload(&mut rng, 20, 40);
+    let cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::FitGpp { s: 4.0, p_max: Some(1) });
+    let mut src = WorkloadSource::new(&wl);
+    let mut sess = SimSession::new(cfg.clone(), Vec::new());
+
+    let writer = snapshot::SnapshotWriter::spawn();
+    sess.run_until(&mut src, 5);
+    assert!(writer.enqueue(dir.join("auto-000000000005-000000.snap"), snapshot::encode(&sess)));
+    sess.run_until(&mut src, 12);
+    let cut = sess.now();
+    assert!(writer.enqueue(dir.join("auto-000000000012-000001.snap"), snapshot::encode(&sess)));
+    // finish() joins the writer thread: both files are durable after it.
+    assert_eq!(writer.finish().unwrap(), 2);
+
+    let latest = snapshot::latest_in(&dir).unwrap().expect("two snapshots on disk");
+    assert!(latest.ends_with("auto-000000000012-000001.snap"), "picked {}", latest.display());
+    let bytes = snapshot::load(&latest).unwrap();
+    let mut src2 = WorkloadSource::new(&wl);
+    let restored = snapshot::decode(&bytes, cfg, Vec::new(), &mut src2).unwrap();
+    assert_eq!(restored.now(), cut);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_tmp_files_are_invisible_to_restore_and_to_later_saves() {
+    let dir = std::env::temp_dir().join(format!("fitgpp-snaptmp-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Pcg64::new(10);
+    let wl = gen::workload(&mut rng, 10, 20);
+    let cfg = SimConfig::new(ClusterSpec::tiny(2), PolicyKind::Lrtp);
+    let mut src = WorkloadSource::new(&wl);
+    let mut sess = SimSession::new(cfg.clone(), Vec::new());
+    sess.run_until(&mut src, 8);
+    let good = dir.join("auto-000000000008-000000.snap");
+    snapshot::save(&good, &snapshot::encode(&sess)).unwrap();
+
+    // A kill -9 mid-write leaves a half-written `*.snap.tmp`. It must
+    // never be selected for restore, no matter how fresh it is…
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    std::fs::write(dir.join("auto-000000000099-000001.snap.tmp"), b"torn garbage").unwrap();
+    let latest = snapshot::latest_in(&dir).unwrap().expect("a snapshot on disk");
+    assert_eq!(latest, good, "restore must ignore *.snap.tmp orphans");
+
+    // …and a later save to the same name must simply overwrite the
+    // leftover tmp file on its way through.
+    std::fs::write(dir.join("retry.snap.tmp"), b"stale tmp from a dead process").unwrap();
+    let retry = dir.join("retry.snap");
+    snapshot::save(&retry, &snapshot::encode(&sess)).unwrap();
+    let bytes = snapshot::load(&retry).unwrap();
+    let mut src2 = WorkloadSource::new(&wl);
+    let restored = snapshot::decode(&bytes, cfg, Vec::new(), &mut src2).unwrap();
+    assert_eq!(restored.now(), sess.now());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -117,6 +117,32 @@ if [ -f "$SERVE" ] && [ -f "$SERVE_BASELINE" ]; then
     fi
     echo "perf-gate: serve $key ${serve_m} (floor ${serve_f})"
   done
+  # Latency / stall ceilings (baseline × OP_TOLERANCE). Skipped per-key
+  # when either file predates the field, so old baselines keep working.
+  for key in ack_p50_us ack_p99_us snapshot_stall_ms; do
+    serve_m=$(jq -r ".$key // empty" "$SERVE")
+    serve_c=$(jq -r ".$key // empty" "$SERVE_BASELINE")
+    if [ -z "$serve_m" ] || [ -z "$serve_c" ]; then
+      echo "perf-gate: serve $key absent — ceiling skipped"
+      continue
+    fi
+    if ! jq -en --argjson m "$serve_m" --argjson c "$serve_c" --argjson t "$OP_TOLERANCE" \
+      '$m <= $c * $t' >/dev/null; then
+      echo "perf-gate: FAIL — serve $key ${serve_m} exceeds ${OP_TOLERANCE} × baseline ${serve_c}" >&2
+      echo "perf-gate: if intentional: cp $SERVE $SERVE_BASELINE && git add $SERVE_BASELINE" >&2
+      exit 1
+    fi
+    echo "perf-gate: serve $key ${serve_m} (ceiling ${serve_c} × ${OP_TOLERANCE})"
+  done
+  # The wire encode path must be allocation-free, like the sim hot path.
+  serve_allocs=$(jq -r '.steady_state_allocs_per_op // empty' "$SERVE")
+  if [ -n "$serve_allocs" ]; then
+    if ! jq -en --argjson a "$serve_allocs" '$a == 0' >/dev/null; then
+      echo "perf-gate: FAIL — serve encode path allocates (${serve_allocs} allocs/op, expected 0)" >&2
+      exit 1
+    fi
+    echo "perf-gate: serve encode path is allocation-free (0 allocs/op)"
+  fi
 elif [ -f "$SERVE_BASELINE" ]; then
   echo "perf-gate: $SERVE not present — serve wire-throughput gate skipped"
 fi
